@@ -1,0 +1,103 @@
+//! End-to-end validation driver (DESIGN.md §6): the full paper pipeline on
+//! a real (sim-scale) workload, proving all three layers compose.
+//!
+//!   1. Train the AceReason-sim teacher through its multi-stage pipeline
+//!      (cold-start SFT on partially-correct data → RL with verifiable
+//!      rewards), all through AOT step artifacts on the PJRT runtime.
+//!   2. PTQ-quantize (Rust NVFP4 codec) and measure the accuracy drop.
+//!   3. Run QAD for a few hundred steps, logging the loss/KL curve.
+//!   4. Evaluate BF16 / PTQ / QAD / QAT with the paper's sampling protocol
+//!      and print the recovery table.
+//!
+//! Results are recorded in EXPERIMENTS.md. Flags: --scale F --steps N
+//! --n N --k K (see qadx CLI).
+//!
+//! Run: `cargo run --release --example qad_e2e -- [--scale 0.5]`
+
+use std::path::PathBuf;
+
+use qadx::coordinator::{
+    self, pipeline, ptq_report, Method, PipelineScale, RecoveryCfg,
+};
+use qadx::data::Suite;
+use qadx::eval::EvalCfg;
+use qadx::exper::report::TableReport;
+use qadx::runtime::{Engine, ModelRuntime};
+use qadx::util::args::Args;
+use qadx::util::{CsvWriter, Timer};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let total = Timer::start("qad_e2e");
+    let engine = Engine::new(&PathBuf::from(args.get_or("artifacts", "artifacts")))?;
+    let runs = PathBuf::from(args.get_or("runs", "runs"));
+    let scale = PipelineScale(args.f64_or("scale", 1.0));
+    let model = "ace-sim";
+
+    // --- 1. teacher pipeline (SFT -> RL) ----------------------------------
+    println!("== stage 1: teacher post-training pipeline ({model}, scale {}) ==", scale.0);
+    let teacher = coordinator::get_or_train_teacher(&engine, model, &runs, scale)?;
+    let rt = ModelRuntime::new(&engine, model)?;
+
+    // --- 2. PTQ -------------------------------------------------------------
+    println!("\n== stage 2: NVFP4 PTQ export ==");
+    let report = ptq_report(&rt, &teacher);
+    for (name, err, _) in report.layers.iter().filter(|(_, e, _)| *e > 0.0) {
+        println!("  {name:<12} rel_err {err:.4}");
+    }
+    println!(
+        "  weights: {} -> {} bytes ({:.2}x compression)",
+        report.total_bytes_f32,
+        report.total_bytes_nvfp4,
+        report.compression_ratio()
+    );
+
+    // --- 3. QAD with loss-curve logging -------------------------------------
+    println!("\n== stage 3: QAD recovery ==");
+    let steps = args.usize_or("steps", (300.0 * scale.0).max(60.0) as usize);
+    let mut cfg = RecoveryCfg::new(
+        vec![qadx::data::SourceSpec::sft_quality(
+            pipeline::train_suites(model),
+            0.7,
+        )],
+        args.f64_or("lr", 3e-4),
+        steps,
+    );
+    cfg.train.log_every = (steps / 20).max(5);
+    let qad = coordinator::run_method(&engine, &rt, Method::Qad, &teacher, &cfg)?;
+    let mut csv = CsvWriter::create(&runs.join("e2e_loss_curve.csv"), &["step", "kl_loss"])?;
+    for (s, l) in &qad.curve {
+        println!("  step {s:>5}  KL loss {l:.5}");
+        csv.row_f64("qad", &[*s as f64, *l])?;
+    }
+    let qat = coordinator::run_method(&engine, &rt, Method::Qat, &teacher, &cfg)?;
+
+    // --- 4. evaluation -------------------------------------------------------
+    println!("\n== stage 4: sampling-based evaluation ==");
+    let mut ecfg = EvalCfg::default();
+    ecfg.n_problems = args.usize_or("n", 32);
+    ecfg.k_runs = args.usize_or("k", 3);
+    let suites = [Suite::Math500, Suite::Aime, Suite::Lcb, Suite::SciCode];
+    let mut table = TableReport::new(
+        "qad_e2e",
+        "end-to-end recovery (ace-sim)",
+        &["Method", "math500", "aime", "livecodebench", "scicode"],
+    );
+    for (m, params) in [
+        (Method::Bf16, &teacher),
+        (Method::Ptq, &teacher),
+        (Method::Qad, &qad.params),
+        (Method::Qat, &qat.params),
+    ] {
+        let accs = coordinator::eval_method(&engine, &rt, m, params, &suites, &ecfg)?;
+        let mut row = vec![m.name().to_string()];
+        for s in &suites {
+            row.push(format!("{:.1}", accs[s.name()]));
+        }
+        table.row(row);
+    }
+    table.print();
+    table.save(&runs.join("report"))?;
+    println!("{}", total.report());
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Quickstart: the three layers in one page.
+//!
+//! 1. Quantize a tensor with the Rust NVFP4 codec and inspect the error.
+//! 2. Load an AOT artifact (built by `make artifacts`) into the PJRT
+//!    runtime and run the quantized forward pass.
+//! 3. Run one QAD training step against a BF16 teacher and watch the KL
+//!    metric come back from the device.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use qadx::coordinator::init_params;
+use qadx::data::{shape_for, BatchFactory, SourceSpec, TEXT_SUITES};
+use qadx::quant::{self, Nvfp4Tensor};
+use qadx::runtime::{scalar, DeviceState, Engine, ModelRuntime};
+use qadx::util::rng::Rng;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. The NVFP4 codec (no runtime needed) ---------------------------
+    let mut rng = Rng::new(7);
+    let x: Vec<f32> = (0..64 * 64).map(|_| rng.normal() as f32).collect();
+    let q = Nvfp4Tensor::quantize(&x, 64, 64, None);
+    let deq = q.dequantize();
+    println!(
+        "NVFP4: {} f32 -> {} bytes ({:.2} bits/elem), rel err {:.3}",
+        x.len(),
+        q.storage_bytes(),
+        q.bits_per_element(),
+        quant::rel_error(&x, &deq),
+    );
+
+    // --- 2. The PJRT runtime ----------------------------------------------
+    let engine = Engine::new(Path::new("artifacts"))?;
+    let rt = ModelRuntime::new(&engine, "ace-sim")?;
+    println!(
+        "loaded {} ({} params, {} artifacts)",
+        rt.model.name,
+        rt.model.param_count,
+        rt.model.artifacts.len()
+    );
+    let params = init_params(&rt.model, 0);
+    let p_buf = rt.upload_params(&params)?;
+
+    let mut factory = BatchFactory::new(
+        shape_for(&rt.model),
+        vec![SourceSpec::sft(TEXT_SUITES)],
+        1,
+    );
+    let batch = factory.next_batch(None)?;
+    let tokens = rt.upload_tokens(&batch)?;
+    let fwd = rt.exe("fwd_nvfp4")?;
+    let logits = engine.run_b(&fwd, &[&p_buf, &tokens])?;
+    let host = engine.download_f32(&logits, rt.model.batch * rt.model.seq_len * rt.model.vocab)?;
+    println!("quantized fwd: {} logits, first = {:.4}", host.len(), host[0]);
+
+    // --- 3. One QAD step ----------------------------------------------------
+    let mut state = DeviceState::from_params(&rt, &params)?;
+    let qad = rt.exe("qad_nvfp4")?;
+    let mask = rt.upload_mask(&batch)?;
+    let lr = engine.upload_scalar(1e-4)?;
+    for i in 0..5 {
+        let out = engine.run_b(&qad, &[&state.buf, &p_buf, &tokens, &mask, &lr])?;
+        state.advance(out);
+        let sc = state.scalars()?;
+        println!(
+            "qad step {}: KL(teacher||student) = {:.5}",
+            i + 1,
+            sc[scalar::KL]
+        );
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,352 @@
+"""AOT compile path: lower every (model × step) graph to HLO *text* and
+write the artifact manifest the Rust coordinator loads.
+
+HLO text — NOT `lowered.compiler_ir("hlo")`/.serialize() — is the
+interchange format: jax ≥ 0.5 serializes HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the `xla` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+All step functions return a single array (never a tuple), so we lower with
+``return_tuple=False`` and the Rust side gets a plain array output buffer it
+can feed straight back into the next `execute_b` call (device-resident
+training state).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [--models ace-sim,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, steps
+from .configs import BF16, ModelCfg, quant_cfg_for
+
+MANIFEST_VERSION = 4
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _arg(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+class ArtifactBuilder:
+    def __init__(self, out_dir: str, verbose: bool = True):
+        self.out_dir = out_dir
+        self.verbose = verbose
+        # Partial rebuilds (--models X) must not clobber other models'
+        # manifest entries: merge with the existing manifest if compatible.
+        existing = {}
+        path = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    old = json.load(f)
+                if old.get("version") == MANIFEST_VERSION:
+                    existing = old.get("models", {})
+            except (OSError, json.JSONDecodeError):
+                pass
+        self.manifest = {
+            "version": MANIFEST_VERSION,
+            "vocab": configs.VOCAB,
+            "special": {"pad": configs.PAD, "bos": configs.BOS, "eos": configs.EOS, "sep": configs.SEP},
+            "n_scalars": steps.N_SCALARS,
+            "scalar_names": ["step", "loss", "kl", "ce", "grad_norm", "lr", "aux0", "aux1"],
+            "models": existing,
+        }
+
+    def model_entry(self, cfg: ModelCfg):
+        # Rebuild the entry the first time a model is touched in this run
+        # (a merged-in entry from a previous manifest may describe a stale
+        # config); only untouched models keep their old entries.
+        if not hasattr(self, "_touched"):
+            self._touched = set()
+        if cfg.name not in self._touched:
+            self._touched.add(cfg.name)
+            self.manifest["models"].pop(cfg.name, None)
+        entry = self.manifest["models"].get(cfg.name)
+        if entry is None:
+            qc = quant_cfg_for(cfg.name)
+            entry = {
+                "d_model": cfg.d_model,
+                "n_heads": cfg.n_heads,
+                "d_ff": cfg.d_ff,
+                "blocks": list(cfg.blocks),
+                "n_experts": cfg.n_experts,
+                "vocab": cfg.vocab,
+                "seq_len": cfg.seq_len,
+                "batch": cfg.batch,
+                "vision": cfg.vision,
+                "vision_grid": cfg.vision_grid,
+                "vision_patch": cfg.vision_patch,
+                "param_count": model.param_count(cfg),
+                "state_len": steps.state_len(cfg),
+                "quant": {
+                    "weights": qc.weights,
+                    "acts": qc.acts,
+                    "impl": qc.impl,
+                    "skip_attention": qc.skip_attention,
+                    "skip_first": qc.skip_first,
+                    "skip_last": qc.skip_last,
+                },
+                "params": [
+                    {"name": n, "shape": list(s), "offset": o, "size": z}
+                    for n, s, o, z in model.param_layout(cfg)
+                ],
+                "artifacts": {},
+            }
+            self.manifest["models"][cfg.name] = entry
+        return entry
+
+    def lower(self, cfg: ModelCfg, key: str, fn, example_args, arg_descr):
+        entry = self.model_entry(cfg)
+        rel = f"{cfg.name}/{key}.hlo.txt"
+        path = os.path.join(self.out_dir, rel)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        out_aval = lowered.out_info
+        entry["artifacts"][key] = {
+            "file": rel,
+            "args": arg_descr,
+            "out_shape": list(np.shape(out_aval)) if hasattr(out_aval, "shape") else None,
+        }
+        if self.verbose:
+            print(f"  [{cfg.name}] {key}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s")
+
+    def save_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"wrote {path}")
+
+
+def _io_shapes(cfg: ModelCfg):
+    B, S = cfg.batch, cfg.seq_len
+    n = steps.state_len(cfg)
+    p = model.param_count(cfg)
+    state = _sds((n,), jnp.float32)
+    params = _sds((p,), jnp.float32)
+    tokens = _sds((B, S), jnp.int32)
+    mask = _sds((B, S), jnp.float32)
+    lr = _sds((), jnp.float32)
+    adv = _sds((B,), jnp.float32)
+    pix = (
+        _sds((B, cfg.vision_grid**2, cfg.vision_patch), jnp.float32) if cfg.vision else None
+    )
+    return state, params, tokens, mask, lr, adv, pix
+
+
+def _pix_args(cfg, pix):
+    if cfg.vision:
+        return [pix], [_arg("pixels", pix.shape, "f32")]
+    return [], []
+
+
+def build_model_artifacts(b: ArtifactBuilder, name: str, full: bool = True):
+    base = configs.ZOO[name]  # BF16 config
+    qcfg = base.with_quant(quant_cfg_for(name))
+    impl = "pallas" if name in configs.PALLAS_MODELS else "jnp"
+    state, params, tokens, mask, lr, adv, pix = _io_shapes(base)
+    pargs, pdesc = _pix_args(base, pix)
+
+    st_d = [_arg("state", state.shape, "f32")]
+    pa_d = [_arg("params", params.shape, "f32")]
+    tp_d = [_arg("teacher_params", params.shape, "f32")]
+    tk_d = [_arg("tokens", tokens.shape, "i32")]
+    mk_d = [_arg("mask", mask.shape, "f32")]
+    lr_d = [_arg("lr", (), "f32")]
+    adv_d = [_arg("advantage", adv.shape, "f32")]
+
+    # --- forward passes -------------------------------------------------
+    fwd_b = steps.make_fwd(base)
+    fwd_q = steps.make_fwd(qcfg)
+    b.lower(base, "fwd_bf16", lambda p, t, *px: fwd_b(p, t, *px), [params, tokens, *pargs], pa_d + tk_d + pdesc)
+    b.lower(base, "fwd_nvfp4", lambda p, t, *px: fwd_q(p, t, *px), [params, tokens, *pargs], pa_d + tk_d + pdesc)
+
+    # Device-side scalar-block slice: the CPU PJRT plugin has no
+    # CopyRawToHost, so the Rust loop reads per-step metrics through this
+    # 8-float artifact instead of downloading the whole state.
+    n_scal = steps.N_SCALARS
+    b.lower(
+        base, "scalars", lambda s: s[-n_scal:], [state], st_d,
+    )
+    # fwd over the params inside a *state* vector — used for device-resident
+    # rollout generation during the RL stage (no host round-trip of params).
+    pcount = model.param_count(base)
+    b.lower(
+        base, "fwd_bf16_state",
+        lambda s, t, *px: fwd_b(s[:pcount], t, *px),
+        [state, tokens, *pargs], st_d + tk_d + pdesc,
+    )
+
+    # --- teacher-precision training (stage 1 SFT) ------------------------
+    sft = steps.make_sft_step(base)
+    b.lower(
+        base, "sft_bf16", lambda s, t, m, l, *px: sft(s, t, m, l, *px),
+        [state, tokens, mask, lr, *pargs], st_d + tk_d + mk_d + lr_d + pdesc,
+    )
+
+    # --- QAT / QAD / eval -------------------------------------------------
+    qat = steps.make_sft_step(qcfg)
+    b.lower(
+        base, "qat_nvfp4", lambda s, t, m, l, *px: qat(s, t, m, l, *px),
+        [state, tokens, mask, lr, *pargs], st_d + tk_d + mk_d + lr_d + pdesc,
+    )
+    qad = steps.make_qad_step(qcfg, base, impl)
+    b.lower(
+        base, "qad_nvfp4", lambda s, tp, t, m, l, *px: qad(s, tp, t, m, l, *px),
+        [state, params, tokens, mask, lr, *pargs], st_d + tp_d + tk_d + mk_d + lr_d + pdesc,
+    )
+    ev_q = steps.make_eval_metrics(qcfg, base, impl)
+    b.lower(
+        base, "eval_nvfp4", lambda p, tp, t, m, *px: ev_q(p, tp, t, m, *px),
+        [params, params, tokens, mask, *pargs], pa_d + tp_d + tk_d + mk_d + pdesc,
+    )
+    ev_b = steps.make_eval_metrics(base, base, impl)
+    b.lower(
+        base, "eval_bf16", lambda p, tp, t, m, *px: ev_b(p, tp, t, m, *px),
+        [params, params, tokens, mask, *pargs], pa_d + tp_d + tk_d + mk_d + pdesc,
+    )
+
+    if not full:
+        return
+
+    # --- RL stage (RL-heavy models) ---------------------------------------
+    if name in ("ace-sim", "nano3-sim"):
+        rl = steps.make_rl_step(base)
+        b.lower(
+            base, "rl_bf16", lambda s, t, m, a, l, *px: rl(s, t, m, a, l, *px),
+            [state, tokens, mask, adv, lr, *pargs], st_d + tk_d + mk_d + adv_d + lr_d + pdesc,
+        )
+
+    # --- MSE distillation baseline (Table 8: ace + nano) ------------------
+    if name in ("ace-sim", "nano-sim"):
+        mse = steps.make_mse_step(qcfg, base)
+        b.lower(
+            base, "mse_nvfp4", lambda s, tp, t, m, l, *px: mse(s, tp, t, m, l, *px),
+            [state, params, tokens, mask, lr, *pargs], st_d + tp_d + tk_d + mk_d + lr_d + pdesc,
+        )
+
+    # --- native-quantized-training proxy + format baselines (ace only) ----
+    if name == "ace-sim":
+        nqt = steps.make_sft_step(qcfg, quantize_grads=True)
+        b.lower(
+            base, "nqt_nvfp4", lambda s, t, m, l, *px: nqt(s, t, m, l, *px),
+            [state, tokens, mask, lr, *pargs], st_d + tk_d + mk_d + lr_d + pdesc,
+        )
+        for fmt in ("mxfp4", "int4"):
+            fcfg = base.with_quant(quant_cfg_for(name, fmt))
+            fwd_f = steps.make_fwd(fcfg)
+            b.lower(
+                base, f"fwd_{fmt}", lambda p, t, *px: fwd_f(p, t, *px),
+                [params, tokens, *pargs], pa_d + tk_d + pdesc,
+            )
+
+    # --- cross-size teacher (Table 9: nano student, super teacher) --------
+    if name == "nano-sim":
+        sup = configs.ZOO["super-sim"]
+        sup_params = _sds((model.param_count(sup),), jnp.float32)
+        qad_x = steps.make_qad_step(qcfg, sup, impl)
+        b.lower(
+            base, "qad_nvfp4_xsuper",
+            lambda s, tp, t, m, l, *px: qad_x(s, tp, t, m, l, *px),
+            [state, sup_params, tokens, mask, lr, *pargs],
+            st_d + [_arg("teacher_params", sup_params.shape, "f32")] + tk_d + mk_d + lr_d + pdesc,
+        )
+
+
+def write_golden(out_dir: str):
+    """Golden vectors for the Rust quant substrate: the JAX oracle's NVFP4
+    quantization of fixed tensors, compared bit-exactly by
+    rust/tests/golden_cross_validation.rs."""
+    import numpy as np
+
+    from .kernels import ref
+
+    rng = np.random.default_rng(0x601de)
+    golden = {}
+    # E4M3 round-trip across the full range incl. ties/subnormals.
+    xs = np.concatenate(
+        [
+            rng.normal(size=256) * 100,
+            rng.uniform(-500, 500, size=128),
+            [0.0, 448.0, -448.0, 1e9, -1e9, 2.0**-9, 2.0**-10, 0.75 * 2**-6],
+        ]
+    ).astype(np.float32)
+    golden["e4m3_in"] = [float(v) for v in xs]
+    golden["e4m3_out"] = [float(v) for v in np.asarray(ref.e4m3_round(jnp.asarray(xs)))]
+    # E2M1 grid behaviour.
+    ys = np.concatenate(
+        [rng.normal(size=128) * 3, [0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0, -2.5, 8.0]]
+    ).astype(np.float32)
+    golden["e2m1_in"] = [float(v) for v in ys]
+    golden["e2m1_out"] = [float(v) for v in np.asarray(ref.e2m1_round(jnp.asarray(ys)))]
+    # Full NVFP4 fake-quant of a (8, 64) tensor with outliers.
+    t = (rng.normal(size=(8, 64)) * 2.0).astype(np.float32)
+    t[1, 3] = 77.0
+    t[5, 16:32] = 0.0
+    deq, codes, scales = ref.nvfp4_quantize_ref(jnp.asarray(t))
+    golden["nvfp4_in"] = [float(v) for v in t.reshape(-1)]
+    golden["nvfp4_deq"] = [float(v) for v in np.asarray(deq).reshape(-1)]
+    golden["nvfp4_codes"] = [float(v) for v in np.asarray(codes).reshape(-1)]
+    golden["nvfp4_scales"] = [float(v) for v in np.asarray(scales).reshape(-1)]
+    golden["nvfp4_tensor_scale"] = float(ref.nvfp4_tensor_scale(jnp.asarray(t)))
+    golden["nvfp4_rows"] = 8
+    golden["nvfp4_cols"] = 64
+    # MXFP4 + INT4 baselines on the same tensor.
+    golden["mxfp4_deq"] = [
+        float(v) for v in np.asarray(ref.mxfp4_fake_quant_ref(jnp.asarray(t))).reshape(-1)
+    ]
+    golden["int4_deq"] = [
+        float(v) for v in np.asarray(ref.int4_fake_quant_ref(jnp.asarray(t))).reshape(-1)
+    ]
+    path = os.path.join(out_dir, "golden.json")
+    with open(path, "w") as f:
+        json.dump(golden, f)
+    print(f"wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=None, help="comma-separated subset of the zoo")
+    args = ap.parse_args()
+
+    names = args.models.split(",") if args.models else list(configs.ZOO)
+    os.makedirs(args.out_dir, exist_ok=True)
+    b = ArtifactBuilder(args.out_dir)
+    t0 = time.time()
+    for name in names:
+        full = not name.startswith("size-")
+        print(f"lowering {name} (full={full}) ...")
+        build_model_artifacts(b, name, full=full)
+    b.save_manifest()
+    write_golden(args.out_dir)
+    print(f"total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

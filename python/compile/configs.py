@@ -1,0 +1,145 @@
+"""Model/step configurations for the sim model zoo (DESIGN.md §2).
+
+Each entry mirrors one of the paper's evaluation models, scaled to run on
+the CPU PJRT backend. Sizes are chosen so (a) the tasks in `rust/src/data`
+are learnable in a few thousand SFT steps, (b) NVFP4 PTQ produces a clearly
+measurable accuracy drop (small models — the paper's regime of interest),
+and (c) the AOT train-step artifacts execute in milliseconds.
+
+The vocabulary is shared with the Rust tokenizer (rust/src/data/tokenizer.rs)
+— keep VOCAB in sync; the manifest records it and Rust asserts equality.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+# Token space: must match rust/src/data/tokenizer.rs exactly.
+# 0..9 digits, then operators/letters/specials. 64 ids, multiple of 16.
+VOCAB = 64
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+
+SEQ_LEN = 40  # training/eval sequence length (tokens)
+BATCH = 16  # per-step batch baked into the train-step artifacts
+
+
+@dataclass(frozen=True)
+class QuantCfg:
+    """Which tensors are fake-quantized, with what format.
+
+    weights/acts: "none" | "nvfp4" | "mxfp4" | "int4"
+    impl: "pallas" | "jnp"  (numerically identical; pallas = L1 kernel path)
+    skip_attention: keep attention-block GEMMs in high precision
+        (paper §3.4: Nemotron Nano keeps attention layers at BF16).
+    skip_first / skip_last: number of leading/trailing blocks kept in
+        high precision (paper §3.4: first and last two layers at BF16).
+    """
+
+    weights: str = "nvfp4"
+    acts: str = "nvfp4"
+    impl: str = "jnp"
+    skip_attention: bool = False
+    skip_first: int = 0
+    skip_last: int = 0
+
+
+BF16 = QuantCfg(weights="none", acts="none")
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    """A decoder LM. `blocks` is a tuple of "attn" | "ssm" | "moe" kinds."""
+
+    name: str
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 256
+    blocks: tuple = ("attn", "attn", "attn", "attn")
+    vocab: int = VOCAB
+    seq_len: int = SEQ_LEN
+    batch: int = BATCH
+    n_experts: int = 4  # for "moe" blocks (top-2 routing)
+    moe_top_k: int = 2
+    vision: bool = False  # prepend a grid-image patch embedder (VLM sim)
+    vision_grid: int = 4  # grid of vision_grid × vision_grid patch tokens
+    vision_patch: int = 16  # raw floats per patch
+    quant: QuantCfg = field(default_factory=lambda: BF16)
+
+    def with_quant(self, q: QuantCfg) -> "ModelCfg":
+        return replace(self, quant=q)
+
+
+def _t(name, d, heads, ff, n_blocks, **kw):
+    return ModelCfg(
+        name=name, d_model=d, n_heads=heads, d_ff=ff, blocks=("attn",) * n_blocks, **kw
+    )
+
+
+# --- The sim zoo (paper model → sim counterpart) -----------------------------
+
+# Llama Nemotron Super V1 49B → plain transformer, the "large" sim.
+# (Sizes tuned for the single-core CPU-PJRT testbed — see DESIGN.md §5.)
+SUPER_SIM = _t("super-sim", d=144, heads=4, ff=288, n_blocks=4)
+
+# AceReason Nemotron 1.1 7B (Qwen2.5 base, RL-heavy) → plain transformer.
+ACE_SIM = _t("ace-sim", d=96, heads=4, ff=192, n_blocks=3)
+
+# Nemotron Nano 9B V2: hybrid Mamba-Transformer (4 attn + 52 mamba) →
+# hybrid with mostly ssm blocks and 2 attention blocks.
+NANO_SIM = ModelCfg(
+    name="nano-sim",
+    d_model=96,
+    n_heads=4,
+    d_ff=192,
+    blocks=("ssm", "attn", "ssm", "ssm", "attn", "ssm"),
+)
+
+# Nemotron 3 Nano 30B-A3B: MoE hybrid Mamba-Transformer →
+# ssm + moe blocks with a single attention block.
+NANO3_SIM = ModelCfg(
+    name="nano3-sim",
+    d_model=96,
+    n_heads=4,
+    d_ff=144,
+    blocks=("ssm", "moe", "attn", "moe"),
+    n_experts=4,
+)
+
+# Nemotron Nano 12B v2 VL → VLM sim with the grid-image front-end.
+VL_SIM = ModelCfg(
+    name="vl-sim",
+    d_model=96,
+    n_heads=4,
+    d_ff=192,
+    blocks=("attn", "attn", "attn"),
+    vision=True,
+)
+
+# Width sweep for Table 12 (PTQ robustness vs model size).
+SIZE_SWEEP = (
+    _t("size-xs", d=32, heads=2, ff=64, n_blocks=2, batch=16),
+    _t("size-s", d=64, heads=4, ff=128, n_blocks=2, batch=16),
+    _t("size-m", d=96, heads=4, ff=192, n_blocks=3, batch=16),
+    _t("size-l", d=160, heads=4, ff=320, n_blocks=4, batch=16),
+)
+
+ZOO = {m.name: m for m in (SUPER_SIM, ACE_SIM, NANO_SIM, NANO3_SIM, VL_SIM, *SIZE_SWEEP)}
+
+# Per-model quantization configs (paper §3.4 "Quantization Configuration").
+QUANT_OVERRIDES = {
+    # Nano keeps attention + first/last blocks high-precision.
+    "nano-sim": QuantCfg(skip_attention=True, skip_first=1, skip_last=1),
+    # Nano-3 keeps its attention (and neighbours) high-precision; here the
+    # single attn block + adjacent ssm.
+    "nano3-sim": QuantCfg(skip_attention=True),
+}
+
+# The flagship config exercises the Pallas kernel path end-to-end; the sweep
+# configs use the verified-identical jnp path to keep artifact build time sane.
+PALLAS_MODELS = {"ace-sim"}
+
+
+def quant_cfg_for(name: str, fmt: str = "nvfp4") -> QuantCfg:
+    base = QUANT_OVERRIDES.get(name, QuantCfg())
+    impl = "pallas" if name in PALLAS_MODELS else "jnp"
+    return replace(base, weights=fmt, acts=fmt, impl=impl)

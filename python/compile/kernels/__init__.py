@@ -1,0 +1,14 @@
+"""L1 Pallas kernels + pure-jnp reference oracles.
+
+Kernels (interpret=True — lowered to plain HLO so the CPU PJRT client runs
+them; real TPU lowering would emit Mosaic custom-calls):
+
+  * nvfp4.fake_quant      — NVFP4/MXFP4/INT4 fake-quant with an STE VJP
+  * kl.kl_per_token       — fused KL(teacher || student) with analytic VJP
+  * matmul.nvfp4_matmul   — fused quantize-quantize-GEMM (inference hot path)
+
+ref.py holds the jnp oracles every kernel is tested against.
+"""
+
+from . import kl, matmul, nvfp4, ref  # noqa: F401
+from .nvfp4 import QuantSpec, fake_quant  # noqa: F401

@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: fused per-token KL(teacher || student) over the vocab.
+
+The QAD loss (paper Eq. 1). One kernel instance loads a tile of teacher and
+student logit rows into VMEM, computes both log-softmaxes, and reduces the
+KL sum over the vocab axis — one HBM pass over each logits tensor instead of
+the five separate reductions the unfused formulation costs.
+
+A custom VJP supplies the analytic gradient ``softmax(s) - softmax(t)``
+(scaled by the incoming per-token cotangent), so the backward pass never
+differentiates through the kernel. The teacher side is non-differentiable by
+construction (teacher params are frozen in QAD).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+ROW_TILE = 64
+
+
+def _kl_kernel(t_ref, s_ref, o_ref):
+    t = t_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    tm = jnp.max(t, axis=-1, keepdims=True)
+    sm = jnp.max(s, axis=-1, keepdims=True)
+    tz = t - tm
+    sz = s - sm
+    lt = tz - jnp.log(jnp.sum(jnp.exp(tz), axis=-1, keepdims=True))
+    ls = sz - jnp.log(jnp.sum(jnp.exp(sz), axis=-1, keepdims=True))
+    o_ref[...] = jnp.sum(jnp.exp(lt) * (lt - ls), axis=-1, keepdims=True)
+
+
+def _kl_pallas_2d(t2: jnp.ndarray, s2: jnp.ndarray) -> jnp.ndarray:
+    rows, vocab = t2.shape
+    tile = min(ROW_TILE, rows)
+    grid = (rows // tile,)
+    out = pl.pallas_call(
+        _kl_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, vocab), lambda i: (i, 0)),
+            pl.BlockSpec((tile, vocab), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        interpret=True,
+    )(t2, s2)
+    return out[:, 0]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def kl_per_token(t_logits: jnp.ndarray, s_logits: jnp.ndarray, impl: str = "pallas"):
+    """KL(teacher || student) per token; leading axes preserved."""
+    return _kl_fwd_impl(t_logits, s_logits, impl)
+
+
+def _kl_fwd_impl(t_logits, s_logits, impl):
+    if impl == "jnp":
+        return ref.kl_per_token_ref(t_logits, s_logits)
+    shape = t_logits.shape
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    t2 = t_logits.reshape(rows, shape[-1])
+    s2 = s_logits.reshape(rows, shape[-1])
+    tile = min(ROW_TILE, rows)
+    pad = (-rows) % tile
+    if pad:
+        z = jnp.zeros((pad, shape[-1]), t2.dtype)
+        t2 = jnp.concatenate([t2, z], axis=0)
+        s2 = jnp.concatenate([s2, z], axis=0)
+    out = _kl_pallas_2d(t2, s2)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape[:-1])
+
+
+def _kl_fwd(t_logits, s_logits, impl):
+    return _kl_fwd_impl(t_logits, s_logits, impl), (t_logits, s_logits)
+
+
+def _kl_bwd(impl, res, g):
+    t_logits, s_logits = res
+    grad_s = ref.kl_grad_wrt_student_ref(t_logits, s_logits) * g[..., None]
+    # Teacher logits are frozen in QAD; zero cotangent keeps jax happy if a
+    # caller ever differentiates through the teacher path.
+    return (jnp.zeros_like(t_logits), grad_s)
+
+
+kl_per_token.defvjp(_kl_fwd, _kl_bwd)

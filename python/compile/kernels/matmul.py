@@ -1,0 +1,110 @@
+"""L1 Pallas kernel: fused NVFP4 GEMM — the inference hot path.
+
+Stand-in for the Blackwell NVFP4 tensor-core GEMM: each grid step pulls an
+(M-tile × K-tile) slab of activations and a (K-tile × N-tile) slab of weights
+into VMEM, fake-quantizes both along the contraction axis (block-16 E2M1
+values, E4M3 block scales, FP32 tensor scales), and accumulates the product
+into the resident output tile fed to the MXU via ``jnp.dot``.
+
+TPU adaptation of the GPU datapath (DESIGN.md §Hardware-Adaptation):
+  * 16-element quantization blocks stay contiguous along the lane axis;
+  * tiles default to 128×128 — the MXU systolic-array shape;
+  * scales are applied as rank-broadcast multiplies before the dot, not
+    inside the MAC loop (TPUs have no FP4 MAC; accuracy is identical);
+  * the K axis is the innermost grid dimension, so the (i, j) output block
+    stays resident in VMEM across the whole contraction (accumulate into
+    o_ref — no HBM round-trip per K step).
+
+Correctness: pytest asserts this kernel == ref.nvfp4_matmul_ref and the
+composed `fake_quant(x) @ fake_quant(w)` used in the L2 model graphs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128  # 8 quantization blocks per K-tile
+
+
+def _quant_tile_lastaxis(x, ts):
+    """Fake-quantize a 2-D tile along its last axis (blocks of 16)."""
+    rows, cols = x.shape
+    xb = x.reshape(rows, cols // 16, 16)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    sb = jnp.clip(amax / ref.E2M1_MAX / ts, -ref.E4M3_MAX, ref.E4M3_MAX)
+    sb = sb.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+    denom = sb * ts
+    y = jnp.where(denom > 0, xb / denom, 0.0)
+    # Arithmetic E2M1 rounding — no array constants inside Pallas bodies.
+    codes = ref.e2m1_round_arith(y)
+    return (codes * denom).reshape(rows, cols)
+
+
+def _mm_kernel(x_ref, wt_ref, tsx_ref, tsw_ref, o_ref):
+    """Grid = (M/TM, N/TN, K/TK); K innermost — o_ref accumulates across K."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xq = _quant_tile_lastaxis(x_ref[...], tsx_ref[0, 0])
+    # Weights arrive pre-transposed (N, K) so quantization blocks lie along
+    # the contraction axis for both operands, as in the tensor-core GEMM.
+    wq = _quant_tile_lastaxis(wt_ref[...], tsw_ref[0, 0])
+    o_ref[...] += jnp.dot(xq, wq.T, preferred_element_type=jnp.float32)
+
+
+def nvfp4_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    tm: int = TILE_M,
+    tn: int = TILE_N,
+    tk: int = TILE_K,
+) -> jnp.ndarray:
+    """Fused NVFP4 GEMM: x (M,K) @ w (K,N), both quantized along K.
+
+    Tile sizes clamp to the problem size; dims must divide evenly by the
+    clamped tiles (model dims here are multiples of 16/64/128 by config).
+    """
+    m, kdim = x.shape
+    kdim2, n = w.shape
+    assert kdim == kdim2, (x.shape, w.shape)
+    tm = min(tm, m)
+    tn = min(tn, n)
+    tk = min(tk, kdim)
+    assert m % tm == 0 and n % tn == 0 and kdim % tk == 0, (m, n, kdim, tm, tn, tk)
+    assert tk % 16 == 0
+    tsx = ref.nvfp4_tensor_scale(x).reshape(1, 1)
+    tsw = ref.nvfp4_tensor_scale(w).reshape(1, 1)
+    wt = w.T  # (N, K): contraction along the last axis for quantization
+    grid = (m // tm, n // tn, kdim // tk)
+    return pl.pallas_call(
+        _mm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tn, tk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        interpret=True,
+    )(x.astype(jnp.float32), wt.astype(jnp.float32), tsx, tsw)
+
+
+def vmem_bytes(tm: int = TILE_M, tn: int = TILE_N, tk: int = TILE_K) -> int:
+    """Estimated VMEM residency per grid step (f32 tiles + quant temps).
+
+    Used by the §Perf analysis in DESIGN.md: x-tile + w-tile + out-tile plus
+    one blocked copy of each operand for the quantization temporaries.
+    """
+    f32 = 4
+    return f32 * (2 * tm * tk + 2 * tn * tk + tm * tn)

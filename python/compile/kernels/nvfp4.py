@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: NVFP4 fake-quantization (block-16, E4M3 scales, FP32
+tensor scale) with a straight-through-estimator custom VJP.
+
+This is the quantization hot-spot of the paper: every GEMM operand in the
+student model passes through `fake_quant` on the forward pass. The kernel is
+written for TPU VMEM tiling (rows × full 16-element blocks live in one tile;
+the per-block scale is computed in-register from the tile) and lowered with
+``interpret=True`` so the emitted HLO runs on the CPU PJRT plugin — see
+DESIGN.md §Hardware-Adaptation.
+
+The straight-through estimator (``x + stop_grad(q(x) - x)`` expressed as a
+custom VJP) is what makes QAD/QAT training possible: gradients flow through
+the quantizer as identity while the forward pass sees the NVFP4 grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Largest row-tile processed by one kernel instance. Sized so a
+# (ROW_TILE, cols) f32 tile plus its scale tensor stays ≲2 MiB of VMEM for
+# the model widths used here (cols ≤ 4096).
+ROW_TILE = 128
+
+
+def _quant_kernel(x_ref, ts_ref, o_ref):
+    """One grid step: fake-quantize a (rows, cols) tile, blocks of 16 on cols.
+
+    ts_ref is the (1,1) per-tensor FP32 scale (second-level scaling),
+    computed once outside the kernel — it is a global reduction and cannot
+    live inside a tiled grid.
+    """
+    x = x_ref[...]
+    rows, cols = x.shape
+    ts = ts_ref[0, 0]
+    xb = x.reshape(rows, cols // 16, 16)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    # First-level scale, stored in E4M3 as on Blackwell.
+    raw = amax / ref.E2M1_MAX / ts
+    sb = jnp.clip(raw, -ref.E4M3_MAX, ref.E4M3_MAX)
+    sb = sb.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+    denom = sb * ts
+    y = jnp.where(denom > 0, xb / denom, 0.0)
+    # E2M1 round-half-even in arithmetic form — Pallas kernels cannot
+    # capture array constants, so no lookup table here.
+    codes = ref.e2m1_round_arith(y)
+    o_ref[...] = (codes * denom).reshape(rows, cols)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _fake_quant_pallas_2d(x2: jnp.ndarray, ts: jnp.ndarray) -> jnp.ndarray:
+    rows, cols = x2.shape
+    tile = min(ROW_TILE, rows)
+    # Grid only over full tiles; pallas requires rows % tile == 0 — callers
+    # pad via `fake_quant` below.
+    grid = (rows // tile,)
+    return pl.pallas_call(
+        _quant_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x2, ts)
+
+
+def nvfp4_fake_quant_pallas(x: jnp.ndarray) -> jnp.ndarray:
+    """Pallas-kernel NVFP4 fake-quant of an arbitrary-rank tensor.
+
+    The last axis must be a multiple of 16. Rows (the product of leading
+    axes) are padded up to the tile size; padding is sliced away afterwards
+    and never contributes to block scales (blocks are row-local).
+    """
+    shape = x.shape
+    assert shape[-1] % 16 == 0, f"last dim {shape[-1]} not a multiple of 16"
+    x2 = x.reshape(-1, shape[-1]).astype(jnp.float32)
+    rows = x2.shape[0]
+    ts = ref.nvfp4_tensor_scale(x).reshape(1, 1)
+    tile = min(ROW_TILE, rows)
+    pad = (-rows) % tile
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, shape[-1]), jnp.float32)], axis=0)
+    out = _fake_quant_pallas_2d(x2, ts)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)
+
+
+# --- STE wrapper -------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x: jnp.ndarray, spec: "QuantSpec") -> jnp.ndarray:
+    """Fake-quantize per `spec` with a straight-through gradient."""
+    return _fq_fwd_impl(x, spec)
+
+
+def _fq_fwd_impl(x, spec):
+    fmt = spec.fmt
+    if fmt == "none":
+        return x
+    if fmt == "nvfp4":
+        if spec.impl == "pallas":
+            return nvfp4_fake_quant_pallas(x)
+        return ref.nvfp4_fake_quant_ref(x)
+    if fmt == "mxfp4":
+        return ref.mxfp4_fake_quant_ref(x)
+    if fmt == "int4":
+        return ref.int4_fake_quant_ref(x)
+    raise ValueError(f"unknown quant fmt {fmt!r}")
+
+
+def _fq_fwd(x, spec):
+    return _fq_fwd_impl(x, spec), None
+
+
+def _fq_bwd(spec, _res, g):
+    # Straight-through estimator: quantizer gradient is identity.
+    return (g,)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+class QuantSpec:
+    """Quantization format selector for one tensor class (static pytree leaf).
+
+    fmt: "none" | "nvfp4" | "mxfp4" | "int4"
+    impl: "pallas" (L1 kernel) | "jnp" (reference path — numerically
+          identical, verified by pytest; used for the large sweep configs
+          where interpret-mode grid loops dominate build time).
+    """
+
+    def __init__(self, fmt: str = "nvfp4", impl: str = "jnp"):
+        self.fmt = fmt
+        self.impl = impl
+
+    def __hash__(self):
+        return hash((self.fmt, self.impl))
+
+    def __eq__(self, other):
+        return isinstance(other, QuantSpec) and (self.fmt, self.impl) == (
+            other.fmt,
+            other.impl,
+        )
+
+    def __repr__(self):
+        return f"QuantSpec({self.fmt!r}, impl={self.impl!r})"
+
+
+NONE = QuantSpec("none")

@@ -1,0 +1,181 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the ground truth for correctness: every Pallas kernel in this
+package is pytest-compared against the functions here (see
+python/tests/), and the Rust `quant` substrate cross-validates its
+bit-exact NVFP4 codec against `nvfp4_quantize_ref` through golden files.
+
+NVFP4 (paper §2.1):
+  * values on the E2M1 grid  {0, ±0.5, ±1, ±1.5, ±2, ±3, ±4, ±6}
+  * block size 16 along the last axis
+  * per-block scale stored as FP8 E4M3 (non-power-of-two scaling)
+  * second-level per-tensor FP32 scale for dynamic range
+
+MXFP4 baseline: block 32, power-of-two (E8M0) scales, no tensor scale.
+INT4 baseline: symmetric per-channel scale, grid {-7..7}.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# --- E2M1 -------------------------------------------------------------------
+
+# Positive representable magnitudes of FP4 E2M1.
+E2M1_GRID = jnp.asarray([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], jnp.float32)
+# Midpoints between consecutive grid values; ties resolve to the value with
+# an even mantissa bit, which for this grid is the even *index*.
+E2M1_BOUNDS = jnp.asarray([0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0], jnp.float32)
+E2M1_MAX = 6.0
+
+E4M3_MAX = 448.0
+
+
+def e2m1_round(x: jnp.ndarray) -> jnp.ndarray:
+    """Round to the nearest E2M1 value, round-half-to-even, clamp to ±6."""
+    a = jnp.clip(jnp.abs(x), 0.0, E2M1_MAX).astype(jnp.float32)
+    b = E2M1_BOUNDS.reshape((1,) * a.ndim + (-1,))
+    ax = a[..., None]
+    idx_down = jnp.sum(ax > b, axis=-1)  # ties round toward grid[idx]
+    idx_up = jnp.sum(ax >= b, axis=-1)  # ties round toward grid[idx+1]
+    is_tie = idx_up != idx_down
+    # On a tie pick the even grid index (even mantissa).
+    idx = jnp.where(is_tie & (idx_down % 2 == 1), idx_up, idx_down)
+    mag = E2M1_GRID[idx]
+    return jnp.sign(x).astype(jnp.float32) * mag
+
+
+def e2m1_round_arith(x: jnp.ndarray) -> jnp.ndarray:
+    """E2M1 round-half-even written with scalar thresholds only.
+
+    Identical to `e2m1_round` (pytest-verified) but uses no array constants,
+    so it can be traced inside a Pallas kernel body (Pallas forbids captured
+    array consts). Boundary cases resolve to the even-mantissa neighbour:
+    0.25→0, 0.75→1, 1.25→1, 1.75→2, 2.5→2, 3.5→4, 5→4.
+    """
+    a = jnp.abs(x).astype(jnp.float32)
+    mag = jnp.where(
+        a <= 0.25,
+        0.0,
+        jnp.where(
+            a < 0.75,
+            0.5,
+            jnp.where(
+                a <= 1.25,
+                1.0,
+                jnp.where(
+                    a < 1.75,
+                    1.5,
+                    jnp.where(a <= 2.5, 2.0, jnp.where(a < 3.5, 3.0, jnp.where(a <= 5.0, 4.0, 6.0))),
+                ),
+            ),
+        ),
+    )
+    return jnp.sign(x).astype(jnp.float32) * mag
+
+
+def e4m3_round(x: jnp.ndarray) -> jnp.ndarray:
+    """Round to FP8 E4M3 (finite, fn variant) and decode back to f32."""
+    x = jnp.clip(x, -E4M3_MAX, E4M3_MAX)
+    return x.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+# --- NVFP4 ------------------------------------------------------------------
+
+
+def nvfp4_tensor_scale(x: jnp.ndarray) -> jnp.ndarray:
+    """Second-level FP32 scale: map the tensor amax onto E2M1_MAX*E4M3_MAX."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    s = amax / (E2M1_MAX * E4M3_MAX)
+    return jnp.where(amax > 0, s, 1.0)
+
+
+def nvfp4_quantize_ref(x: jnp.ndarray, tensor_scale: jnp.ndarray | None = None):
+    """Fake-quantize `x` to NVFP4 along the last axis (block=16).
+
+    Returns (dequantized f32 tensor, e2m1 codes, decoded block scales).
+    The dequantized tensor is exactly what NVFP4 hardware would compute:
+    code * e4m3(block_scale) * tensor_scale.
+    """
+    orig_shape = x.shape
+    assert orig_shape[-1] % 16 == 0, f"last dim {orig_shape[-1]} not /16"
+    xb = x.reshape(orig_shape[:-1] + (orig_shape[-1] // 16, 16)).astype(jnp.float32)
+    if tensor_scale is None:
+        tensor_scale = nvfp4_tensor_scale(x)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    raw = amax / E2M1_MAX / tensor_scale
+    sb = e4m3_round(raw)
+    denom = sb * tensor_scale
+    codes = e2m1_round(jnp.where(denom > 0, xb / denom, 0.0))
+    deq = (codes * denom).reshape(orig_shape)
+    return deq, codes.reshape(orig_shape), sb[..., 0]
+
+
+def nvfp4_fake_quant_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return nvfp4_quantize_ref(x)[0]
+
+
+# --- MXFP4 baseline ----------------------------------------------------------
+
+
+def mxfp4_fake_quant_ref(x: jnp.ndarray, block: int = 32) -> jnp.ndarray:
+    """MXFP4: E2M1 values, block=32, power-of-two (E8M0) shared scale."""
+    orig_shape = x.shape
+    assert orig_shape[-1] % block == 0
+    xb = x.reshape(orig_shape[:-1] + (orig_shape[-1] // block, block)).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    # Shared exponent: floor(log2(amax)) - floor(log2(6)) == floor(log2(amax)) - 2.
+    e = jnp.floor(jnp.log2(jnp.where(amax > 0, amax, 1.0))) - 2.0
+    s = jnp.exp2(e)
+    codes = e2m1_round(jnp.where(amax > 0, xb / s, 0.0))
+    return (codes * s).reshape(orig_shape)
+
+
+# --- INT4 baseline -----------------------------------------------------------
+
+
+def int4_fake_quant_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric INT4 with per-channel (last-axis) scale, grid -7..7."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.where(amax > 0, amax / 7.0, 1.0)
+    q = jnp.clip(jnp.round(x / s), -7, 7)
+    return q * s
+
+
+# --- KL / distillation losses -------------------------------------------------
+
+
+def log_softmax_ref(z: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(z, axis=-1, keepdims=True)
+    y = z - m
+    return y - jnp.log(jnp.sum(jnp.exp(y), axis=-1, keepdims=True))
+
+
+def kl_per_token_ref(t_logits: jnp.ndarray, s_logits: jnp.ndarray) -> jnp.ndarray:
+    """Forward KL(teacher || student) per token, summed over the vocab axis."""
+    lt = log_softmax_ref(t_logits.astype(jnp.float32))
+    ls = log_softmax_ref(s_logits.astype(jnp.float32))
+    pt = jnp.exp(lt)
+    return jnp.sum(pt * (lt - ls), axis=-1)
+
+
+def kl_grad_wrt_student_ref(t_logits: jnp.ndarray, s_logits: jnp.ndarray) -> jnp.ndarray:
+    """d KL(t||s) / d s_logits = softmax(s) - softmax(t) (per token)."""
+    pt = jnp.exp(log_softmax_ref(t_logits.astype(jnp.float32)))
+    ps = jnp.exp(log_softmax_ref(s_logits.astype(jnp.float32)))
+    return ps - pt
+
+
+# --- NVFP4 GEMM ---------------------------------------------------------------
+
+
+def nvfp4_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Quantize both operands along the contraction axis, then matmul.
+
+    x: (M, K) quantized along K (its last axis); w: (K, N) quantized along K
+    (its first axis — transposed so blocks lie along the contraction, as the
+    NVFP4 tensor-core GEMM does).
+    """
+    xq = nvfp4_fake_quant_ref(x)
+    wq = nvfp4_fake_quant_ref(w.T).T
+    return jnp.dot(xq, wq, preferred_element_type=jnp.float32)

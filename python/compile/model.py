@@ -1,0 +1,275 @@
+"""L2: the sim model zoo — decoder LMs with NVFP4 fake-quantized GEMMs.
+
+Architecture kinds (configs.ModelCfg.blocks):
+  * "attn" — pre-LN causal multi-head attention + MLP (transformer block)
+  * "ssm"  — gated diagonal linear recurrence (Mamba-2 proxy) via
+             lax.associative_scan
+  * "moe"  — top-2-of-E expert MLP with a softmax router (dense compute,
+             mask-combine — shapes stay static for AOT)
+
+plus an optional grid-image patch embedder for the VLM sim.
+
+Every GEMM routes through `qgemm`, which applies the configured fake-quant
+(L1 kernel via kernels.fake_quant, straight-through gradient) to the weight
+and/or activation operands — including the paper's *selective quantization*
+(skip attention blocks / first & last blocks, §3.4).
+
+Parameters live in a flat f32 vector with a deterministic layout
+(`param_layout`) shared with the Rust coordinator through the artifact
+manifest; `steps.py` packs params+Adam state+metrics into the single state
+vector the Rust hot loop chains on-device.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .configs import ModelCfg, QuantCfg
+from .kernels import QuantSpec, fake_quant
+
+
+# --------------------------------------------------------------- param layout
+
+
+def param_defs(cfg: ModelCfg):
+    """Deterministic (name, shape) list — the contract with the Rust side."""
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    total_seq = cfg.seq_len + (cfg.vision_grid**2 if cfg.vision else 0)
+    defs = [("embed", (v, d)), ("pos_emb", (total_seq, d))]
+    if cfg.vision:
+        defs.append(("vis_proj", (cfg.vision_patch, d)))
+        defs.append(("vis_bias", (d,)))
+    for i, kind in enumerate(cfg.blocks):
+        p = f"b{i}."
+        if kind == "attn":
+            defs += [
+                (p + "ln1", (d,)),
+                (p + "wq", (d, d)),
+                (p + "wk", (d, d)),
+                (p + "wv", (d, d)),
+                (p + "wo", (d, d)),
+                (p + "ln2", (d,)),
+                (p + "w1", (d, ff)),
+                (p + "w2", (ff, d)),
+            ]
+        elif kind == "ssm":
+            defs += [
+                (p + "ln", (d,)),
+                (p + "win", (d, 3 * d)),  # value, gate, decay-logit
+                (p + "a_bias", (d,)),
+                (p + "wout", (d, d)),
+            ]
+        elif kind == "moe":
+            defs += [
+                (p + "ln", (d,)),
+                (p + "router", (d, cfg.n_experts)),
+                (p + "w1", (cfg.n_experts, d, ff)),
+                (p + "w2", (cfg.n_experts, ff, d)),
+            ]
+        else:
+            raise ValueError(f"unknown block kind {kind!r}")
+    defs += [("ln_f", (d,)), ("head", (d, v))]
+    return defs
+
+
+def param_count(cfg: ModelCfg) -> int:
+    return sum(int(np.prod(s)) for _, s in param_defs(cfg))
+
+
+def param_layout(cfg: ModelCfg):
+    """[(name, shape, offset, size)] into the flat parameter vector."""
+    out, off = [], 0
+    for name, shape in param_defs(cfg):
+        size = int(np.prod(shape))
+        out.append((name, shape, off, size))
+        off += size
+    return out
+
+
+def unflatten(cfg: ModelCfg, vec: jnp.ndarray) -> dict:
+    return {
+        name: lax.slice_in_dim(vec, off, off + size).reshape(shape)
+        for name, shape, off, size in param_layout(cfg)
+    }
+
+
+def init_params(cfg: ModelCfg, seed: int = 0) -> jnp.ndarray:
+    """Flat f32 init vector: scaled-normal fan-in init, ones for norm scales."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for name, shape in param_defs(cfg):
+        n = int(np.prod(shape))
+        leaf = name.split(".")[-1]
+        if leaf.startswith("ln"):
+            parts.append(np.ones(n, np.float32))
+        elif leaf in ("a_bias", "vis_bias"):
+            parts.append(np.zeros(n, np.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 1.0 / math.sqrt(fan_in)
+            parts.append((rng.normal(size=n) * std).astype(np.float32))
+    return jnp.concatenate([jnp.asarray(p) for p in parts])
+
+
+# ------------------------------------------------------------------ building
+
+
+def _specs(qc: QuantCfg):
+    return QuantSpec(qc.weights, qc.impl), QuantSpec(qc.acts, qc.impl)
+
+
+def qgemm(x, w, qc: QuantCfg, quantized: bool):
+    """The quantized GEMM: fake-quantize activation rows and weight columns
+    along the contraction axis (blocks of 16 on K), then matmul — the
+    composition form of the fused L1 kernel (pytest-verified identical)."""
+    if not quantized or (qc.weights == "none" and qc.acts == "none"):
+        return x @ w
+    wspec, aspec = _specs(qc)
+    if qc.weights != "none":
+        # w is (K, N) — quantize along K: transpose so blocks lie on K.
+        w = fake_quant(w.T, wspec).T
+    if qc.acts != "none":
+        x = fake_quant(x, aspec)
+    return x @ w
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    return x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * scale
+
+
+def _attn_block(x, p, prefix, cfg: ModelCfg, quantized: bool):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    qc = cfg.quant
+    y = rmsnorm(x, p[prefix + "ln1"])
+    B, S, _ = y.shape
+    y2 = y.reshape(B * S, d)
+    q = qgemm(y2, p[prefix + "wq"], qc, quantized).reshape(B, S, h, hd)
+    k = qgemm(y2, p[prefix + "wk"], qc, quantized).reshape(B, S, h, hd)
+    v = qgemm(y2, p[prefix + "wv"], qc, quantized).reshape(B, S, h, hd)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B * S, d)
+    x = x + qgemm(o, p[prefix + "wo"], qc, quantized).reshape(B, S, d)
+    # MLP half
+    y = rmsnorm(x, p[prefix + "ln2"]).reshape(B * S, d)
+    hdn = jax.nn.gelu(qgemm(y, p[prefix + "w1"], qc, quantized))
+    x = x + qgemm(hdn, p[prefix + "w2"], qc, quantized).reshape(B, S, d)
+    return x
+
+
+def _ssm_block(x, p, prefix, cfg: ModelCfg, quantized: bool):
+    """Gated diagonal linear recurrence: h_t = a_t ⊙ h_{t-1} + (1-a_t) ⊙ v_t.
+
+    A Mamba-2/SSD proxy: per-token input-dependent decay (selective state),
+    elementwise state, silu gate on the output path. The scan is associative:
+    (a1,b1)∘(a2,b2) = (a1·a2, a2·b1 + b2), evaluated with
+    lax.associative_scan over time (log-depth — the HLO stays shallow).
+    """
+    d = cfg.d_model
+    qc = cfg.quant
+    B, S, _ = x.shape
+    y = rmsnorm(x, p[prefix + "ln"]).reshape(B * S, d)
+    z = qgemm(y, p[prefix + "win"], qc, quantized).reshape(B, S, 3 * d)
+    v, g, al = z[..., :d], z[..., d : 2 * d], z[..., 2 * d :]
+    a = jax.nn.sigmoid(al + p[prefix + "a_bias"])
+    b = (1.0 - a) * v
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    o = (h * jax.nn.silu(g)).reshape(B * S, d)
+    return x + qgemm(o, p[prefix + "wout"], qc, quantized).reshape(B, S, d)
+
+
+def _moe_block(x, p, prefix, cfg: ModelCfg, quantized: bool):
+    """Top-2-of-E expert MLP, dense compute + renormalized mask combine."""
+    E, k = cfg.n_experts, cfg.moe_top_k
+    d = cfg.d_model
+    qc = cfg.quant
+    B, S, _ = x.shape
+    y = rmsnorm(x, p[prefix + "ln"]).reshape(B * S, d)
+    # Router stays high-precision (routers are never quantized in practice).
+    logits = y @ p[prefix + "router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    # Top-2 threshold without lax.top_k or sort-gather: the `topk` HLO op
+    # and batched-gather attributes postdate the XLA 0.5.1 text parser the
+    # runtime binds. Two max passes (mask out one argmax occurrence) give
+    # the 2nd-largest value; `probs >= thresh` then keeps the top-2.
+    assert k == 2, "sim MoE supports top-2 routing"
+    m1_idx = jnp.argmax(probs, axis=-1)
+    onehot = jax.nn.one_hot(m1_idx, probs.shape[-1], dtype=probs.dtype)
+    masked = jnp.where(onehot > 0, -jnp.inf, probs)
+    thresh = jnp.max(masked, axis=-1, keepdims=True)
+    gate = jnp.where(probs >= thresh, probs, 0.0)
+    gate = gate / (jnp.sum(gate, axis=-1, keepdims=True) + 1e-9)
+    out = jnp.zeros_like(y)
+    for e in range(E):
+        hdn = jax.nn.gelu(qgemm(y, p[prefix + "w1"][e], qc, quantized))
+        oe = qgemm(hdn, p[prefix + "w2"][e], qc, quantized)
+        out = out + gate[:, e : e + 1] * oe
+    return x + out.reshape(B, S, d)
+
+
+def _block_quantized(cfg: ModelCfg, i: int, kind: str) -> bool:
+    """Selective quantization (paper §3.4)."""
+    qc = cfg.quant
+    if qc.weights == "none" and qc.acts == "none":
+        return False
+    if kind == "attn" and qc.skip_attention:
+        return False
+    if i < qc.skip_first:
+        return False
+    if i >= len(cfg.blocks) - qc.skip_last:
+        return False
+    return True
+
+
+def forward(cfg: ModelCfg, params_vec: jnp.ndarray, tokens: jnp.ndarray, pixels=None):
+    """Logits over the *text* positions: (B, S, vocab).
+
+    tokens: i32 (B, S). pixels (VLM only): f32 (B, G*G, patch) — embedded and
+    prepended; causal attention runs over the joint sequence, and the image
+    positions are dropped from the returned logits.
+    """
+    p = unflatten(cfg, params_vec)
+    qc = cfg.quant
+    B, S = tokens.shape
+    x = p["embed"][tokens]  # embedding lookup is not a GEMM — never quantized
+    n_img = 0
+    if cfg.vision:
+        assert pixels is not None, "VLM forward requires pixels"
+        n_img = cfg.vision_grid**2
+        quant_vis = not (qc.weights == "none" and qc.acts == "none")
+        img = qgemm(
+            pixels.reshape(B * n_img, cfg.vision_patch), p["vis_proj"], qc, quant_vis
+        ).reshape(B, n_img, cfg.d_model) + p["vis_bias"]
+        x = jnp.concatenate([img, x], axis=1)
+    x = x + p["pos_emb"][None, : x.shape[1]]
+    for i, kind in enumerate(cfg.blocks):
+        quantized = _block_quantized(cfg, i, kind)
+        if kind == "attn":
+            x = _attn_block(x, p, f"b{i}.", cfg, quantized)
+        elif kind == "ssm":
+            x = _ssm_block(x, p, f"b{i}.", cfg, quantized)
+        else:
+            x = _moe_block(x, p, f"b{i}.", cfg, quantized)
+    x = rmsnorm(x, p["ln_f"])
+    if n_img:
+        x = x[:, n_img:]
+    Bx, Sx, d = x.shape
+    # The LM head is a GEMM — quantized unless the last block is skipped
+    # (the paper's "last two layers at BF16" covers the head).
+    head_q = _block_quantized(cfg, len(cfg.blocks) - 1, "head")
+    logits = qgemm(x.reshape(Bx * Sx, d), p["head"], cfg.quant, head_q)
+    return logits.reshape(Bx, Sx, cfg.vocab)

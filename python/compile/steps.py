@@ -1,0 +1,262 @@
+"""L2: training / evaluation step graphs lowered to AOT artifacts.
+
+Every training step is a **state-vector function**
+
+    step : (state f32[N], ...batch..., lr f32[]) -> state' f32[N]
+    state = [ params (P) | adam_m (P) | adam_v (P) | scalar block (8) ]
+
+with a single (non-tuple) array output, so the Rust hot loop can chain the
+output buffer of step *t* straight into step *t+1* via `execute_b` — the
+training state never leaves the device. Per-step metrics (loss, KL, CE,
+grad-norm, step counter) are written into the trailing scalar block; the
+Rust side reads just those 8 floats back per step with an offset
+`copy_raw_to_host_sync` instead of downloading megabytes of parameters.
+
+Step variants (paper §3):
+  sft   — cross-entropy on labels, teacher-precision model (stage-1 training)
+  rl    — REINFORCE: -advantage · log p(sequence) (stage-2 RL post-training)
+  qat   — cross-entropy on labels, *quantized* forward (the paper's QAT)
+  qad   — KL(teacher ‖ quantized student) via the L1 fused kernel (Eq. 1)
+  mse   — MSE on logits distillation baseline (Table 8)
+  nqt   — "native quantized training" proxy: QAT + NVFP4-quantized gradient
+          GEMM outputs (Figure 2 ablation; see DESIGN.md substitutions)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .configs import PAD, ModelCfg
+from .kernels import QuantSpec
+from .kernels.kl import kl_per_token
+from .kernels.nvfp4 import fake_quant
+from .model import forward, param_count
+
+N_SCALARS = 8
+# scalar block slots
+S_STEP, S_LOSS, S_KL, S_CE, S_GNORM, S_LR, S_AUX0, S_AUX1 = range(N_SCALARS)
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def state_len(cfg: ModelCfg) -> int:
+    return 3 * param_count(cfg) + N_SCALARS
+
+
+def init_state(cfg: ModelCfg, params_vec) -> jnp.ndarray:
+    p = param_count(cfg)
+    z = jnp.zeros(2 * p + N_SCALARS, jnp.float32)
+    return jnp.concatenate([params_vec, z])
+
+
+def split_state(cfg: ModelCfg, state):
+    p = param_count(cfg)
+    return state[:p], state[p : 2 * p], state[2 * p : 3 * p], state[3 * p :]
+
+
+# ----------------------------------------------------------------- losses
+
+
+def _shift(tokens, mask):
+    """(inputs, labels, label_mask): next-token prediction over S-1 positions."""
+    return tokens[:, :-1], tokens[:, 1:], mask[:, 1:]
+
+
+def ce_loss(cfg: ModelCfg, params, tokens, mask, pixels=None):
+    inp, lab, m = _shift(tokens, mask)
+    logits = forward(cfg, params, inp, pixels)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    denom = jnp.sum(m) + 1e-6
+    return -jnp.sum(ll * m) / denom
+
+
+def kl_distill_loss(cfg: ModelCfg, tcfg: ModelCfg, params, t_params, tokens, mask, pixels=None, impl="jnp"):
+    """QAD loss (Eq. 1): mean per-token KL(teacher ‖ student) over the mask."""
+    inp, _, m = _shift(tokens, mask)
+    s_logits = forward(cfg, params, inp, pixels)
+    t_logits = lax.stop_gradient(forward(tcfg, t_params, inp, pixels))
+    kl = kl_per_token(t_logits, s_logits, impl)
+    denom = jnp.sum(m) + 1e-6
+    return jnp.sum(kl * m) / denom
+
+
+def mse_distill_loss(cfg: ModelCfg, tcfg: ModelCfg, params, t_params, tokens, mask, pixels=None):
+    inp, _, m = _shift(tokens, mask)
+    s_logits = forward(cfg, params, inp, pixels)
+    t_logits = lax.stop_gradient(forward(tcfg, t_params, inp, pixels))
+    se = jnp.mean((s_logits - t_logits) ** 2, axis=-1)
+    denom = jnp.sum(m) + 1e-6
+    return jnp.sum(se * m) / denom
+
+
+def reinforce_loss(cfg: ModelCfg, params, tokens, mask, adv, pixels=None):
+    """-E[adv · log p(response)]; adv is per-sequence (B,), already centred."""
+    inp, lab, m = _shift(tokens, mask)
+    logits = forward(cfg, params, inp, pixels)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    seq_ll = jnp.sum(ll * m, axis=-1) / (jnp.sum(m, axis=-1) + 1e-6)
+    return -jnp.mean(adv * seq_ll)
+
+
+# ----------------------------------------------------------------- optimizer
+
+
+def adam_update(cfg: ModelCfg, state, grads, lr, extra_metrics):
+    params, m, v, sc = split_state(cfg, state)
+    step = sc[S_STEP] + 1.0
+    m = ADAM_B1 * m + (1 - ADAM_B1) * grads
+    v = ADAM_B2 * v + (1 - ADAM_B2) * grads * grads
+    mhat = m / (1 - ADAM_B1**step)
+    vhat = v / (1 - ADAM_B2**step)
+    params = params - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    gnorm = jnp.sqrt(jnp.sum(grads * grads))
+    sc = sc.at[S_STEP].set(step)
+    sc = sc.at[S_GNORM].set(gnorm)
+    sc = sc.at[S_LR].set(lr)
+    for slot, val in extra_metrics.items():
+        sc = sc.at[slot].set(val)
+    return jnp.concatenate([params, m, v, sc])
+
+
+def _quantize_grads(grads, p_count_vec_shape):
+    """Figure-2 'native quantized training' proxy: pass the gradient vector
+    through NVFP4 fake-quant (pad to a block multiple, quantize, unpad) —
+    standing in for low-precision Wgrad/Dgrad GEMM outputs."""
+    n = grads.shape[0]
+    padn = (-n) % 16
+    g = jnp.concatenate([grads, jnp.zeros(padn, jnp.float32)]) if padn else grads
+    gq = fake_quant(g.reshape(1, -1), QuantSpec("nvfp4", "jnp")).reshape(-1)
+    return gq[:n] if padn else gq
+
+
+# ----------------------------------------------------------------- step fns
+
+
+def make_sft_step(cfg: ModelCfg, quantize_grads: bool = False):
+    """CE training step; with cfg.quant set this *is* the QAT step."""
+
+    def step(state, tokens, mask, lr, pixels=None):
+        params = split_state(cfg, state)[0]
+
+        def loss_fn(p):
+            return ce_loss(cfg, p, tokens, mask, pixels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if quantize_grads:
+            grads = _quantize_grads(grads, None)
+        return adam_update(cfg, state, grads, lr, {S_LOSS: loss, S_CE: loss})
+
+    return step
+
+
+def make_rl_step(cfg: ModelCfg):
+    def step(state, tokens, mask, adv, lr, pixels=None):
+        params = split_state(cfg, state)[0]
+
+        def loss_fn(p):
+            return reinforce_loss(cfg, p, tokens, mask, adv, pixels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return adam_update(cfg, state, grads, lr, {S_LOSS: loss})
+
+    return step
+
+
+def make_qad_step(cfg: ModelCfg, tcfg: ModelCfg, impl="jnp"):
+    def step(state, t_params, tokens, mask, lr, pixels=None):
+        params = split_state(cfg, state)[0]
+
+        def loss_fn(p):
+            return kl_distill_loss(cfg, tcfg, p, t_params, tokens, mask, pixels, impl)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return adam_update(cfg, state, grads, lr, {S_LOSS: loss, S_KL: loss})
+
+    return step
+
+
+def make_mse_step(cfg: ModelCfg, tcfg: ModelCfg):
+    def step(state, t_params, tokens, mask, lr, pixels=None):
+        params = split_state(cfg, state)[0]
+
+        def loss_fn(p):
+            return mse_distill_loss(cfg, tcfg, p, t_params, tokens, mask, pixels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return adam_update(cfg, state, grads, lr, {S_LOSS: loss})
+
+    return step
+
+
+def make_fwd(cfg: ModelCfg):
+    def fwd(params, tokens, pixels=None):
+        return forward(cfg, params, tokens, pixels)
+
+    return fwd
+
+
+def make_eval_metrics(cfg: ModelCfg, tcfg: ModelCfg, impl="jnp"):
+    """-> f32[8]: [kl_mean, ce_mean, masked_tokens, kl_sum, ce_sum, 0, 0, 0].
+
+    Table 1's two columns (KL vs teacher, CE vs labels) in one pass; sums are
+    returned so the Rust side can aggregate exactly across batches.
+    """
+
+    def ev(params, t_params, tokens, mask, pixels=None):
+        inp, lab, m = _shift(tokens, mask)
+        s_logits = forward(cfg, params, inp, pixels)
+        t_logits = forward(tcfg, t_params, inp, pixels)
+        kl = kl_per_token(t_logits, s_logits, impl)
+        logp = jax.nn.log_softmax(s_logits, axis=-1)
+        ll = jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        n = jnp.sum(m)
+        kl_sum = jnp.sum(kl * m)
+        ce_sum = -jnp.sum(ll * m)
+        denom = n + 1e-6
+        return jnp.stack(
+            [kl_sum / denom, ce_sum / denom, n, kl_sum, ce_sum, 0.0, 0.0, 0.0]
+        )
+
+    return ev
+
+
+# ------------------------------------------------------------- batch shapes
+
+
+def batch_shapes(cfg: ModelCfg):
+    """Example (tokens, mask[, pixels]) ShapeDtypeStructs for lowering."""
+    B, S = cfg.batch, cfg.seq_len
+    tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    mask = jax.ShapeDtypeStruct((B, S), jnp.float32)
+    out = [tokens, mask]
+    if cfg.vision:
+        out.append(
+            jax.ShapeDtypeStruct((B, cfg.vision_grid**2, cfg.vision_patch), jnp.float32)
+        )
+    return out
+
+
+def validate_numerics(cfg: ModelCfg, seed: int = 0):
+    """Quick self-check used by pytest: one step of each kind runs and the
+    metrics land in the scalar block."""
+    from .model import init_params
+
+    rng = np.random.default_rng(seed)
+    params = init_params(cfg, seed)
+    state = init_state(cfg, params)
+    B, S = cfg.batch, cfg.seq_len
+    tokens = jnp.asarray(rng.integers(4, cfg.vocab, size=(B, S)), jnp.int32)
+    mask = jnp.ones((B, S), jnp.float32).at[:, : S // 2].set(0.0)
+    pixels = (
+        jnp.asarray(rng.normal(size=(B, cfg.vision_grid**2, cfg.vision_patch)), jnp.float32)
+        if cfg.vision
+        else None
+    )
+    lr = jnp.float32(1e-3)
+    s1 = make_sft_step(cfg)(state, tokens, mask, lr, pixels)
+    return s1

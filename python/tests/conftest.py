@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Tests run from the repo root or from python/; make `compile` importable.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,111 @@
+"""Compile-path tests: HLO lowering, manifest integrity, golden vectors."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs, model, steps
+
+
+class TestHloText:
+    def test_single_output_no_tuple_root(self):
+        cfg = configs.ZOO["size-xs"]
+        fwd = steps.make_fwd(cfg)
+        p = jax.ShapeDtypeStruct((model.param_count(cfg),), jnp.float32)
+        t = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+        text = aot.to_hlo_text(jax.jit(fwd).lower(p, t))
+        assert "ENTRY" in text
+        roots = [l for l in text.splitlines() if "ROOT" in l]
+        assert roots and all("tuple(" not in l for l in roots)
+
+    def test_no_unparseable_ops(self):
+        """Ops that postdate XLA 0.5.1's HLO text parser must not appear
+        (regression: lax.top_k emitted `topk ... largest=true`)."""
+        cfg = configs.ZOO["nano3-sim"]  # exercises MoE routing
+        sft = steps.make_sft_step(cfg)
+        n = steps.state_len(cfg)
+        s = jax.ShapeDtypeStruct((n,), jnp.float32)
+        t = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+        m = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.float32)
+        lr = jax.ShapeDtypeStruct((), jnp.float32)
+        text = aot.to_hlo_text(jax.jit(sft).lower(s, t, m, lr))
+        for bad in (" topk(", "ragged", "composite-call"):
+            assert bad not in text, f"{bad!r} not parseable by xla_extension 0.5.1"
+
+    def test_state_vector_shape_contract(self):
+        for name in ("ace-sim", "nano-sim", "vl-sim"):
+            cfg = configs.ZOO[name]
+            assert steps.state_len(cfg) == 3 * model.param_count(cfg) + steps.N_SCALARS
+
+
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_version_and_models(self, manifest):
+        assert manifest["version"] == aot.MANIFEST_VERSION
+        for name in configs.ZOO:
+            assert name in manifest["models"], name
+
+    def test_param_layout_matches_code(self, manifest):
+        for name, cfg in configs.ZOO.items():
+            entry = manifest["models"][name]
+            assert entry["param_count"] == model.param_count(cfg), name
+            layout = model.param_layout(cfg)
+            assert len(entry["params"]) == len(layout)
+            for p_json, (n, shape, off, size) in zip(entry["params"], layout):
+                assert p_json["name"] == n
+                assert tuple(p_json["shape"]) == tuple(shape)
+                assert p_json["offset"] == off and p_json["size"] == size
+
+    def test_artifact_files_exist(self, manifest):
+        root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        count = 0
+        for name, entry in manifest["models"].items():
+            for key, art in entry["artifacts"].items():
+                path = os.path.join(root, art["file"])
+                assert os.path.exists(path), f"{name}/{key}"
+                count += 1
+        assert count >= 40  # the zoo ships a substantial artifact set
+
+    def test_core_artifacts_present(self, manifest):
+        need = {"fwd_bf16", "fwd_nvfp4", "sft_bf16", "qat_nvfp4", "qad_nvfp4", "scalars",
+                "fwd_bf16_state", "eval_nvfp4", "eval_bf16"}
+        for name, entry in manifest["models"].items():
+            missing = need - set(entry["artifacts"])
+            assert not missing, f"{name} missing {missing}"
+
+    def test_rl_models_have_rl_step(self, manifest):
+        for name in ("ace-sim", "nano3-sim"):
+            assert "rl_bf16" in manifest["models"][name]["artifacts"]
+
+    def test_vocab_matches_tokenizer_contract(self, manifest):
+        assert manifest["vocab"] == configs.VOCAB == 64
+        sp = manifest["special"]
+        assert (sp["pad"], sp["bos"], sp["eos"], sp["sep"]) == (0, 1, 2, 3)
+
+
+class TestGolden:
+    def test_golden_written_and_consistent(self, tmp_path):
+        aot.write_golden(str(tmp_path))
+        with open(tmp_path / "golden.json") as f:
+            g = json.load(f)
+        assert len(g["e4m3_in"]) == len(g["e4m3_out"])
+        n = g["nvfp4_rows"] * g["nvfp4_cols"]
+        assert len(g["nvfp4_deq"]) == n
+        # dequantized values must be codes * scales exactly
+        codes = np.asarray(g["nvfp4_codes"]).reshape(g["nvfp4_rows"], -1)
+        scales = np.asarray(g["nvfp4_scales"]).reshape(g["nvfp4_rows"], -1)
+        ts = g["nvfp4_tensor_scale"]
+        deq = np.asarray(g["nvfp4_deq"]).reshape(codes.shape)
+        rebuilt = codes * np.repeat(scales, 16, axis=1) * ts
+        np.testing.assert_allclose(deq, rebuilt.astype(np.float32), rtol=1e-6)

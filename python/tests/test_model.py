@@ -1,0 +1,325 @@
+"""L2 correctness: model zoo shapes, quantization placement, and training
+step semantics (the graphs that become the AOT artifacts)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, steps
+from compile.configs import BF16, QuantCfg, quant_cfg_for
+
+RNG = np.random.default_rng(7)
+
+
+def make_batch(cfg, seed=0):
+    r = np.random.default_rng(seed)
+    tokens = jnp.asarray(r.integers(4, cfg.vocab, size=(cfg.batch, cfg.seq_len)), jnp.int32)
+    mask = jnp.ones((cfg.batch, cfg.seq_len), jnp.float32)
+    pixels = (
+        jnp.asarray(
+            r.normal(size=(cfg.batch, cfg.vision_grid**2, cfg.vision_patch)).astype(np.float32)
+        )
+        if cfg.vision
+        else None
+    )
+    return tokens, mask, pixels
+
+
+# -------------------------------------------------------------------- layout
+
+
+class TestParamLayout:
+    @pytest.mark.parametrize("name", list(configs.ZOO))
+    def test_layout_contiguous(self, name):
+        cfg = configs.ZOO[name]
+        layout = model.param_layout(cfg)
+        off = 0
+        for n, shape, o, size in layout:
+            assert o == off
+            assert size == int(np.prod(shape))
+            off += size
+        assert off == model.param_count(cfg)
+
+    def test_unflatten_round_trip(self):
+        cfg = configs.ACE_SIM
+        vec = model.init_params(cfg, 3)
+        p = model.unflatten(cfg, vec)
+        rebuilt = jnp.concatenate([p[n].reshape(-1) for n, _ in model.param_defs(cfg)])
+        np.testing.assert_array_equal(np.asarray(vec), np.asarray(rebuilt))
+
+    def test_init_deterministic(self):
+        cfg = configs.ACE_SIM
+        a = model.init_params(cfg, 11)
+        b = model.init_params(cfg, 11)
+        c = model.init_params(cfg, 12)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert float(jnp.max(jnp.abs(a - c))) > 0
+
+    def test_norm_scales_init_to_one(self):
+        cfg = configs.NANO_SIM
+        p = model.unflatten(cfg, model.init_params(cfg))
+        assert jnp.all(p["ln_f"] == 1.0)
+        assert jnp.all(p["b0.ln"] == 1.0)
+
+
+# -------------------------------------------------------------------- forward
+
+
+class TestForward:
+    @pytest.mark.parametrize("name", ["ace-sim", "nano-sim", "nano3-sim", "super-sim"])
+    def test_logit_shape(self, name):
+        cfg = configs.ZOO[name]
+        vec = model.init_params(cfg)
+        tokens, _, _ = make_batch(cfg)
+        logits = model.forward(cfg, vec, tokens)
+        assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_vlm_needs_pixels(self):
+        cfg = configs.VL_SIM
+        vec = model.init_params(cfg)
+        tokens, _, pixels = make_batch(cfg)
+        logits = model.forward(cfg, vec, tokens, pixels)
+        assert logits.shape == (cfg.batch, cfg.seq_len, cfg.vocab)
+        with pytest.raises(AssertionError):
+            model.forward(cfg, vec, tokens, None)
+
+    def test_vlm_pixels_matter(self):
+        cfg = configs.VL_SIM
+        vec = model.init_params(cfg)
+        tokens, _, pixels = make_batch(cfg)
+        a = model.forward(cfg, vec, tokens, pixels)
+        b = model.forward(cfg, vec, tokens, pixels + 1.0)
+        assert float(jnp.max(jnp.abs(a - b))) > 1e-4
+
+    def test_causality(self):
+        """Changing a future token must not affect past logits."""
+        cfg = configs.ACE_SIM
+        vec = model.init_params(cfg)
+        tokens, _, _ = make_batch(cfg)
+        t2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % cfg.vocab)
+        a = model.forward(cfg, vec, tokens)
+        b = model.forward(cfg, vec, t2)
+        np.testing.assert_allclose(
+            np.asarray(a[:, :-1]), np.asarray(b[:, :-1]), rtol=1e-5, atol=1e-5
+        )
+
+    def test_ssm_causality(self):
+        cfg = configs.NANO_SIM
+        vec = model.init_params(cfg)
+        tokens, _, _ = make_batch(cfg)
+        t2 = tokens.at[:, 40:].set(5)
+        a = model.forward(cfg, vec, tokens)
+        b = model.forward(cfg, vec, t2)
+        np.testing.assert_allclose(
+            np.asarray(a[:, :39]), np.asarray(b[:, :39]), rtol=1e-4, atol=1e-4
+        )
+
+    def test_quantized_forward_differs_but_close(self):
+        cfg = configs.ACE_SIM
+        qcfg = cfg.with_quant(quant_cfg_for("ace-sim"))
+        vec = model.init_params(cfg)
+        tokens, _, _ = make_batch(cfg)
+        a = model.forward(cfg, vec, tokens)
+        q = model.forward(qcfg, vec, tokens)
+        diff = float(jnp.max(jnp.abs(a - q)))
+        assert diff > 1e-4  # quantization must actually change the output
+        # ... but the distributions stay in the same regime.
+        kl = jnp.mean(
+            jnp.sum(
+                jax.nn.softmax(a) * (jax.nn.log_softmax(a) - jax.nn.log_softmax(q)), axis=-1
+            )
+        )
+        assert float(kl) < 1.0
+
+    def test_selective_quant_skip_all_equals_bf16(self):
+        """skip_first covering every block (+attn skip) must reproduce BF16
+        exactly except the head... so also skip_last covers the head."""
+        cfg = configs.ACE_SIM
+        n = len(cfg.blocks)
+        qc = QuantCfg(skip_attention=True, skip_first=n, skip_last=n)
+        qcfg = cfg.with_quant(qc)
+        vec = model.init_params(cfg)
+        tokens, _, _ = make_batch(cfg)
+        a = model.forward(cfg, vec, tokens)
+        b = model.forward(qcfg, vec, tokens)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_nano_selective_quant_closer_than_full(self):
+        """nano's skip config (attention + first/last at BF16) must have
+        smaller logit error than fully-quantized."""
+        cfg = configs.NANO_SIM
+        vec = model.init_params(cfg)
+        tokens, _, _ = make_batch(cfg)
+        bf = model.forward(cfg, vec, tokens)
+        sel = model.forward(cfg.with_quant(quant_cfg_for("nano-sim")), vec, tokens)
+        full = model.forward(cfg.with_quant(QuantCfg()), vec, tokens)
+        err_sel = float(jnp.linalg.norm(sel - bf))
+        err_full = float(jnp.linalg.norm(full - bf))
+        assert err_sel < err_full
+
+
+# ---------------------------------------------------------------- train steps
+
+
+class TestSteps:
+    def test_state_layout(self):
+        cfg = configs.ACE_SIM
+        vec = model.init_params(cfg)
+        st = steps.init_state(cfg, vec)
+        assert st.shape == (steps.state_len(cfg),)
+        p, m, v, sc = steps.split_state(cfg, st)
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(vec))
+        assert jnp.all(m == 0) and jnp.all(v == 0) and jnp.all(sc == 0)
+
+    def test_sft_decreases_loss(self):
+        cfg = configs.ZOO["size-xs"]
+        vec = model.init_params(cfg)
+        st = steps.init_state(cfg, vec)
+        tokens, mask, _ = make_batch(cfg)
+        step = jax.jit(steps.make_sft_step(cfg))
+        lr = jnp.float32(3e-3)
+        first = None
+        for i in range(30):
+            st = step(st, tokens, mask, lr)
+            if first is None:
+                first = float(st[-steps.N_SCALARS + steps.S_LOSS])
+        last = float(st[-steps.N_SCALARS + steps.S_LOSS])
+        assert last < first * 0.7, (first, last)
+        assert float(st[-steps.N_SCALARS + steps.S_STEP]) == 30.0
+
+    def test_qad_reduces_kl(self):
+        cfg = configs.ZOO["size-xs"]
+        qcfg = cfg.with_quant(QuantCfg())
+        teacher = model.init_params(cfg, 5)
+        st = steps.init_state(cfg, teacher)  # student init = PTQ weights
+        tokens, mask, _ = make_batch(cfg)
+        step = jax.jit(steps.make_qad_step(qcfg, cfg, "jnp"))
+        lr = jnp.float32(1e-3)
+        kls = []
+        for _ in range(25):
+            st = step(st, teacher, tokens, mask, lr)
+            kls.append(float(st[-steps.N_SCALARS + steps.S_KL]))
+        assert kls[-1] < kls[0], kls
+        assert kls[-1] >= 0
+
+    def test_qad_keeps_teacher_fixed(self):
+        cfg = configs.ZOO["size-xs"]
+        qcfg = cfg.with_quant(QuantCfg())
+        teacher = model.init_params(cfg, 5)
+        st = steps.init_state(cfg, teacher)
+        tokens, mask, _ = make_batch(cfg)
+        step = jax.jit(steps.make_qad_step(qcfg, cfg, "jnp"))
+        st = step(st, teacher, tokens, mask, jnp.float32(1e-3))
+        # teacher vector is an input, never mutated — trivially true, but the
+        # student params must have moved.
+        p = steps.split_state(cfg, st)[0]
+        assert float(jnp.max(jnp.abs(p - teacher))) > 0
+
+    def test_rl_step_moves_toward_advantaged_sequences(self):
+        cfg = configs.ZOO["size-xs"]
+        vec = model.init_params(cfg)
+        st = steps.init_state(cfg, vec)
+        tokens, mask, _ = make_batch(cfg)
+        adv = jnp.asarray(np.resize([1.0, -1.0], cfg.batch), jnp.float32)
+        step = jax.jit(steps.make_rl_step(cfg))
+        lr = jnp.float32(1e-3)
+
+        def seq_ll(params):
+            logits = model.forward(cfg, params, tokens[:, :-1])
+            logp = jax.nn.log_softmax(logits)
+            ll = jnp.take_along_axis(logp, tokens[:, 1:][..., None], axis=-1)[..., 0]
+            return jnp.sum(ll * mask[:, 1:], axis=-1)
+
+        before = seq_ll(vec)
+        for _ in range(10):
+            st = step(st, tokens, mask, adv, lr)
+        after = seq_ll(steps.split_state(cfg, st)[0])
+        gain = np.asarray(after - before)
+        # Positive-advantage sequences gain log-likelihood relative to
+        # negative-advantage ones.
+        assert gain[adv > 0].mean() > gain[adv < 0].mean()
+
+    def test_mse_step_runs(self):
+        cfg = configs.ZOO["size-xs"]
+        qcfg = cfg.with_quant(QuantCfg())
+        teacher = model.init_params(cfg, 5)
+        st = steps.init_state(cfg, teacher)
+        tokens, mask, _ = make_batch(cfg)
+        step = jax.jit(steps.make_mse_step(qcfg, cfg))
+        st = step(st, teacher, tokens, mask, jnp.float32(1e-3))
+        assert np.isfinite(float(st[-steps.N_SCALARS + steps.S_LOSS]))
+
+    def test_nqt_grad_quantization_changes_update(self):
+        cfg = configs.ZOO["size-xs"]
+        qcfg = cfg.with_quant(QuantCfg())
+        vec = model.init_params(cfg)
+        tokens, mask, _ = make_batch(cfg)
+        lr = jnp.float32(1e-3)
+        a = steps.make_sft_step(qcfg)(steps.init_state(cfg, vec), tokens, mask, lr)
+        b = steps.make_sft_step(qcfg, quantize_grads=True)(
+            steps.init_state(cfg, vec), tokens, mask, lr
+        )
+        pa = steps.split_state(cfg, a)[0]
+        pb = steps.split_state(cfg, b)[0]
+        assert float(jnp.max(jnp.abs(pa - pb))) > 0
+
+    def test_eval_metrics_zero_kl_for_identical(self):
+        cfg = configs.ZOO["size-xs"]
+        vec = model.init_params(cfg)
+        tokens, mask, _ = make_batch(cfg)
+        ev = jax.jit(steps.make_eval_metrics(cfg, cfg, "jnp"))
+        out = ev(vec, vec, tokens, mask)
+        assert out.shape == (8,)
+        assert abs(float(out[0])) < 1e-5  # KL(teacher||teacher) == 0
+        assert float(out[1]) > 0  # CE vs random labels is positive
+        assert float(out[2]) == float(jnp.sum(mask[:, 1:]))
+
+    def test_eval_metrics_quantized_kl_positive(self):
+        cfg = configs.ZOO["size-xs"]
+        qcfg = cfg.with_quant(QuantCfg())
+        vec = model.init_params(cfg)
+        tokens, mask, _ = make_batch(cfg)
+        ev = jax.jit(steps.make_eval_metrics(qcfg, cfg, "jnp"))
+        out = ev(vec, vec, tokens, mask)
+        assert float(out[0]) > 1e-5  # PTQ shifts the distribution
+
+    def test_mask_respected(self):
+        """Loss must ignore masked-out positions."""
+        cfg = configs.ZOO["size-xs"]
+        vec = model.init_params(cfg)
+        r = np.random.default_rng(0)
+        tokens = jnp.asarray(r.integers(4, cfg.vocab, size=(cfg.batch, cfg.seq_len)), jnp.int32)
+        half = jnp.concatenate(
+            [jnp.zeros((cfg.batch, cfg.seq_len // 2)), jnp.ones((cfg.batch, cfg.seq_len // 2))],
+            axis=1,
+        ).astype(jnp.float32)
+        # Perturb tokens only in the masked-out (prompt) label region but not
+        # the inputs that generate masked-in labels: loss over masked region
+        # uses labels at positions where half==1 only.
+        l1 = steps.ce_loss(cfg, vec, tokens, half)
+        t2 = tokens.at[:, 1 : cfg.seq_len // 2 - 1].set(7)
+        # Changing masked-out *labels* changes inputs too (same ids feed the
+        # model), so instead verify: full-mask loss != half-mask loss.
+        l_full = steps.ce_loss(cfg, vec, tokens, jnp.ones_like(half))
+        assert abs(float(l1) - float(l_full)) > 1e-7
+
+
+# ------------------------------------------------------------------- lowering
+
+
+class TestLowering:
+    def test_hlo_text_round_trips(self, tmp_path):
+        from compile import aot
+
+        cfg = configs.ZOO["size-xs"]
+        fwd = steps.make_fwd(cfg)
+        p = jax.ShapeDtypeStruct((model.param_count(cfg),), jnp.float32)
+        t = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+        lowered = jax.jit(fwd).lower(p, t)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text and "f32" in text
+        # Single-array output: the root instruction is not a tuple.
+        root_lines = [l for l in text.splitlines() if "ROOT" in l]
+        assert root_lines and all("tuple(" not in l for l in root_lines), root_lines[:2]

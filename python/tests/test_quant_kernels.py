@@ -1,0 +1,322 @@
+"""L1 correctness: Pallas NVFP4 kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal of the compile path: if these pass, the
+HLO artifacts built by aot.py contain numerically-correct NVFP4 semantics.
+Hypothesis sweeps shapes/dtypes/value distributions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import kl, matmul, nvfp4, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(shape, scale=1.0, dtype=np.float32):
+    return jnp.asarray((RNG.normal(size=shape) * scale).astype(dtype))
+
+
+# ---------------------------------------------------------------- E2M1 / E4M3
+
+
+class TestE2M1:
+    def test_grid_values_fixed(self):
+        exact = jnp.asarray([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, -3.0, -6.0])
+        assert jnp.all(ref.e2m1_round(exact) == exact)
+
+    @pytest.mark.parametrize(
+        "x,want",
+        [
+            (0.25, 0.0),  # tie -> even (0)
+            (0.75, 1.0),  # tie -> even (1.0)
+            (1.25, 1.0),
+            (1.75, 2.0),
+            (2.5, 2.0),
+            (3.5, 4.0),
+            (5.0, 4.0),
+            (-2.5, -2.0),
+            (-5.0, -4.0),
+        ],
+    )
+    def test_round_half_even_ties(self, x, want):
+        assert float(ref.e2m1_round(jnp.float32(x))) == want
+
+    def test_clamp_to_six(self):
+        assert float(ref.e2m1_round(jnp.float32(100.0))) == 6.0
+        assert float(ref.e2m1_round(jnp.float32(-7.0))) == -6.0
+
+    def test_arith_equals_table(self):
+        xs = jnp.asarray(
+            np.concatenate(
+                [
+                    RNG.normal(size=4096) * 3,
+                    RNG.uniform(-7, 7, size=4096),
+                    [0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0, -0.25, -0.75, 0.0, 6.0, -6.0, 8.0],
+                ]
+            ).astype(np.float32)
+        )
+        assert jnp.all(ref.e2m1_round(xs) == ref.e2m1_round_arith(xs))
+
+    def test_monotone(self):
+        xs = jnp.linspace(-8, 8, 2001)
+        ys = ref.e2m1_round(xs)
+        assert jnp.all(jnp.diff(ys) >= 0)
+
+
+class TestE4M3:
+    def test_exact_values(self):
+        # E4M3 represents powers of two and 448 exactly.
+        for v in [0.0, 1.0, 2.0, 0.5, 448.0, -448.0, 1.5, 0.0625]:
+            assert float(ref.e4m3_round(jnp.float32(v))) == v
+
+    def test_saturates(self):
+        assert float(ref.e4m3_round(jnp.float32(1e9))) == 448.0
+        assert float(ref.e4m3_round(jnp.float32(-1e9))) == -448.0
+
+    def test_relative_error_bound(self):
+        # Normal-range E4M3 has 3 mantissa bits -> rel err <= 2^-4.
+        x = jnp.asarray(RNG.uniform(1.0, 400.0, size=4096).astype(np.float32))
+        y = ref.e4m3_round(x)
+        assert float(jnp.max(jnp.abs(y - x) / x)) <= 2.0**-4 + 1e-6
+
+
+# ------------------------------------------------------------------- NVFP4
+
+
+class TestNVFP4Ref:
+    def test_idempotent(self):
+        x = randn((32, 64))
+        q1 = ref.nvfp4_fake_quant_ref(x)
+        q2 = ref.nvfp4_fake_quant_ref(q1)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=0, atol=1e-6)
+
+    def test_zero_tensor(self):
+        x = jnp.zeros((8, 32))
+        assert jnp.all(ref.nvfp4_fake_quant_ref(x) == 0.0)
+
+    def test_codes_on_grid(self):
+        x = randn((16, 64), scale=5.0)
+        _, codes, _ = ref.nvfp4_quantize_ref(x)
+        grid = np.asarray([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0])
+        a = np.abs(np.asarray(codes)).ravel()
+        assert np.all(np.isin(a, grid))
+
+    def test_relative_error_reasonable(self):
+        # NVFP4 on N(0,1): relative Frobenius error must sit in the known band.
+        x = randn((256, 256))
+        q = ref.nvfp4_fake_quant_ref(x)
+        rel = float(jnp.linalg.norm(q - x) / jnp.linalg.norm(x))
+        assert 0.03 < rel < 0.20, rel
+
+    def test_scale_invariance(self):
+        # Two-level scaling makes fake-quant scale-equivariant.
+        x = randn((16, 32))
+        q1 = ref.nvfp4_fake_quant_ref(x)
+        q2 = ref.nvfp4_fake_quant_ref(x * 2**10) / 2**10
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-5, atol=1e-7)
+
+    def test_outlier_containment(self):
+        # A giant outlier must not destroy other *blocks* (block-16 isolation).
+        x = np.array(randn((1, 64)))
+        x[0, 0] = 1000.0
+        q = np.asarray(ref.nvfp4_fake_quant_ref(jnp.asarray(x)))
+        # Blocks 2..4 (indices 16..64) keep a sane relative error.
+        rel = np.linalg.norm(q[0, 16:] - x[0, 16:]) / np.linalg.norm(x[0, 16:])
+        assert rel < 0.25, rel
+
+    def test_better_than_mxfp4_on_outliers(self):
+        # The paper's motivation: NVFP4's small blocks + E4M3 scales beat
+        # MXFP4's 32-blocks + power-of-two scales on outlier-heavy data.
+        x = np.array(randn((64, 128)))
+        idx = RNG.integers(0, x.size, size=32)
+        x.ravel()[idx] *= 50.0
+        x = jnp.asarray(x)
+        err_nv = float(jnp.linalg.norm(ref.nvfp4_fake_quant_ref(x) - x))
+        err_mx = float(jnp.linalg.norm(ref.mxfp4_fake_quant_ref(x) - x))
+        assert err_nv < err_mx, (err_nv, err_mx)
+
+
+class TestNVFP4Pallas:
+    @pytest.mark.parametrize("shape", [(1, 16), (4, 32), (48, 64), (128, 128), (200, 48), (3, 5, 32)])
+    def test_matches_ref(self, shape):
+        x = randn(shape, scale=2.0)
+        got = nvfp4.nvfp4_fake_quant_pallas(x)
+        want = ref.nvfp4_fake_quant_ref(x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_ref_with_outliers(self):
+        x = np.array(randn((64, 64)))
+        x[3, 17] = 500.0
+        x[10, :16] = 0.0
+        got = nvfp4.nvfp4_fake_quant_pallas(jnp.asarray(x))
+        want = ref.nvfp4_fake_quant_ref(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(1, 96),
+        cols_blocks=st.integers(1, 8),
+        scale=st.sampled_from([1e-3, 1.0, 37.5, 1e4]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, rows, cols_blocks, scale, seed):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray((r.normal(size=(rows, cols_blocks * 16)) * scale).astype(np.float32))
+        got = nvfp4.nvfp4_fake_quant_pallas(x)
+        want = ref.nvfp4_fake_quant_ref(x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_inside_jit(self):
+        x = randn((32, 32))
+        got = jax.jit(nvfp4.nvfp4_fake_quant_pallas)(x)
+        want = ref.nvfp4_fake_quant_ref(x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestFakeQuantSTE:
+    def test_none_is_identity(self):
+        x = randn((8, 16))
+        np.testing.assert_array_equal(
+            np.asarray(nvfp4.fake_quant(x, nvfp4.QuantSpec("none"))), np.asarray(x)
+        )
+
+    @pytest.mark.parametrize("fmt", ["nvfp4", "mxfp4", "int4"])
+    def test_gradient_is_identity(self, fmt):
+        spec = nvfp4.QuantSpec(fmt, impl="jnp")
+        x = randn((8, 32))
+        ct = randn((8, 32))
+        _, vjp = jax.vjp(lambda z: nvfp4.fake_quant(z, spec), x)
+        (g,) = vjp(ct)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(ct))
+
+    def test_pallas_and_jnp_impls_identical(self):
+        x = randn((40, 64), scale=3.0)
+        a = nvfp4.fake_quant(x, nvfp4.QuantSpec("nvfp4", impl="pallas"))
+        b = nvfp4.fake_quant(x, nvfp4.QuantSpec("nvfp4", impl="jnp"))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------------ KL kernel
+
+
+class TestKLKernel:
+    def test_matches_ref(self):
+        t = randn((37, 96), scale=3.0)
+        s = randn((37, 96), scale=3.0)
+        got = kl.kl_per_token(t, s, "pallas")
+        want = ref.kl_per_token_ref(t, s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    def test_identical_logits_zero_kl(self):
+        t = randn((16, 64))
+        got = kl.kl_per_token(t, t, "pallas")
+        np.testing.assert_allclose(np.asarray(got), 0.0, atol=1e-6)
+
+    def test_nonnegative(self):
+        t = randn((64, 48), scale=5.0)
+        s = randn((64, 48), scale=5.0)
+        assert float(jnp.min(kl.kl_per_token(t, s, "pallas"))) >= -1e-6
+
+    def test_shift_invariance(self):
+        # KL over softmax is invariant to per-token logit shifts.
+        t = randn((8, 32))
+        s = randn((8, 32))
+        a = kl.kl_per_token(t, s, "pallas")
+        b = kl.kl_per_token(t + 100.0, s - 50.0, "pallas")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+    def test_3d_shapes(self):
+        t = randn((2, 9, 32))
+        s = randn((2, 9, 32))
+        got = kl.kl_per_token(t, s, "pallas")
+        assert got.shape == (2, 9)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.kl_per_token_ref(t, s)), rtol=1e-5, atol=1e-6
+        )
+
+    def test_custom_vjp_matches_autodiff_of_ref(self):
+        t = randn((6, 24))
+        s = randn((6, 24))
+        g_kernel = jax.grad(lambda z: jnp.sum(kl.kl_per_token(t, z, "pallas")))(s)
+        g_ref = jax.grad(lambda z: jnp.sum(ref.kl_per_token_ref(t, z)))(s)
+        np.testing.assert_allclose(np.asarray(g_kernel), np.asarray(g_ref), rtol=1e-4, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        rows=st.integers(1, 80),
+        vocab=st.sampled_from([16, 48, 64, 160]),
+        scale=st.sampled_from([0.1, 1.0, 10.0]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, rows, vocab, scale, seed):
+        r = np.random.default_rng(seed)
+        t = jnp.asarray((r.normal(size=(rows, vocab)) * scale).astype(np.float32))
+        s = jnp.asarray((r.normal(size=(rows, vocab)) * scale).astype(np.float32))
+        got = kl.kl_per_token(t, s, "pallas")
+        want = ref.kl_per_token_ref(t, s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------- fused matmul
+
+
+class TestNVFP4Matmul:
+    @pytest.mark.parametrize(
+        "m,k,n,tiles",
+        [
+            (16, 32, 16, (16, 16, 32)),
+            (32, 64, 48, (16, 16, 32)),
+            (64, 128, 64, (32, 32, 64)),
+            (128, 128, 128, (128, 128, 128)),
+        ],
+    )
+    def test_matches_ref(self, m, k, n, tiles):
+        x = randn((m, k))
+        w = randn((k, n))
+        tm, tn, tk = tiles
+        got = matmul.nvfp4_matmul(x, w, tm=tm, tn=tn, tk=tk)
+        want = ref.nvfp4_matmul_ref(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_tiling_invariance(self):
+        # Output must not depend on the tile decomposition.
+        x = randn((64, 128))
+        w = randn((128, 64))
+        a = matmul.nvfp4_matmul(x, w, tm=64, tn=64, tk=128)
+        b = matmul.nvfp4_matmul(x, w, tm=16, tn=16, tk=16)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+    def test_matches_composed_fake_quant_gemm(self):
+        # The L2 model graphs use fake_quant(x) @ fake_quant(w.T).T — the
+        # fused kernel must agree with that composition.
+        x = randn((32, 64))
+        w = randn((64, 32))
+        composed = jnp.dot(
+            ref.nvfp4_fake_quant_ref(x), ref.nvfp4_fake_quant_ref(w.T).T
+        )
+        got = matmul.nvfp4_matmul(x, w, tm=32, tn=32, tk=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(composed), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        mi=st.integers(1, 4),
+        ki=st.integers(1, 4),
+        ni=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, mi, ki, ni, seed):
+        r = np.random.default_rng(seed)
+        m, k, n = 16 * mi, 32 * ki, 16 * ni
+        x = jnp.asarray(r.normal(size=(m, k)).astype(np.float32))
+        w = jnp.asarray(r.normal(size=(k, n)).astype(np.float32))
+        got = matmul.nvfp4_matmul(x, w, tm=16, tn=16, tk=32)
+        want = ref.nvfp4_matmul_ref(x, w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_vmem_estimate_positive(self):
+        assert matmul.vmem_bytes() == 4 * (2 * 128 * 128 + 2 * 128 * 128 + 128 * 128)

@@ -1,0 +1,85 @@
+//! Micro-benchmarks of the L3 hot-path substrates: NVFP4 codec, scalar
+//! mini-float rounding, sampler math, JSON parsing, batch generation.
+//! `cargo bench --bench ops_bench`. CSV lands in runs/bench/ops.csv.
+
+use qadx::data::{tasks, BatchFactory, BatchShape, SourceSpec, Suite, TEXT_SUITES};
+use qadx::eval::{sample_token, SampleCfg};
+use qadx::quant::baselines::{int4_fake_quant, mxfp4_fake_quant};
+use qadx::quant::fp::{e2m1_round, e4m3_round};
+use qadx::quant::nvfp4::Nvfp4Tensor;
+use qadx::util::bench::BenchSuite;
+use qadx::util::json::Json;
+use qadx::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("ops");
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..256 * 256).map(|_| rng.normal() as f32).collect();
+
+    suite.run("nvfp4_quantize_256x256 (65k elems)", 2, 20, || {
+        std::hint::black_box(Nvfp4Tensor::quantize(&x, 256, 256, None));
+    });
+    let q = Nvfp4Tensor::quantize(&x, 256, 256, None);
+    suite.run("nvfp4_dequantize_256x256", 2, 20, || {
+        std::hint::black_box(q.dequantize());
+    });
+    suite.run("mxfp4_fake_quant_256x256", 2, 20, || {
+        std::hint::black_box(mxfp4_fake_quant(&x, 256, 256));
+    });
+    suite.run("int4_fake_quant_256x256", 2, 20, || {
+        std::hint::black_box(int4_fake_quant(&x, 256, 256));
+    });
+
+    let vals: Vec<f32> = (0..10_000).map(|_| rng.normal() as f32 * 100.0).collect();
+    suite.run("e4m3_round_10k", 2, 50, || {
+        let mut acc = 0f32;
+        for v in &vals {
+            acc += e4m3_round(*v);
+        }
+        std::hint::black_box(acc);
+    });
+    suite.run("e2m1_round_10k", 2, 50, || {
+        let mut acc = 0f32;
+        for v in &vals {
+            acc += e2m1_round(*v);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // sampler math over a vocab-64 logits row
+    let logits: Vec<f32> = (0..64).map(|_| rng.normal() as f32 * 3.0).collect();
+    let cfg = SampleCfg::default();
+    let mut srng = Rng::new(2);
+    suite.run("sample_token_topp_x1000", 2, 30, || {
+        for _ in 0..1000 {
+            std::hint::black_box(sample_token(&cfg, &mut srng, &logits));
+        }
+    });
+
+    // batch generation (SFT source, full text mixture)
+    let shape = BatchShape { batch: 16, seq_len: 40, vision: false, grid: 4, patch: 16, vocab: 64 };
+    let mut factory = BatchFactory::new(shape, vec![SourceSpec::sft(TEXT_SUITES)], 3);
+    suite.run("sft_batch_generation_16x40", 2, 50, || {
+        std::hint::black_box(factory.next_batch(None).unwrap());
+    });
+
+    // task generation only
+    let mut trng = Rng::new(4);
+    suite.run("task_generate_mixed_x100", 2, 30, || {
+        for _ in 0..100 {
+            let s = *trng.choice(TEXT_SUITES);
+            std::hint::black_box(tasks::generate(s, &mut trng, 4, 16));
+        }
+    });
+    let _ = Suite::Math500;
+
+    // manifest-sized JSON parse
+    let manifest_text = std::fs::read_to_string("artifacts/manifest.json").ok();
+    if let Some(text) = manifest_text {
+        suite.run("json_parse_manifest", 2, 20, || {
+            std::hint::black_box(Json::parse(&text).unwrap());
+        });
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,80 @@
+//! §Perf A/B benchmarks — the hot-path design decisions, measured:
+//!
+//!   A. training-state placement: device-resident `execute_b` chaining
+//!      (ours) vs re-uploading the state vector every step (naive)
+//!   B. per-step metrics: 8-float device-side `scalars` artifact (ours)
+//!      vs downloading the full state and slicing on host (naive)
+//!   C. fwd precision paths: fwd_bf16 vs fwd_nvfp4 (fake-quant overhead on
+//!      CPU — on Blackwell this inverts; see DESIGN.md §Perf)
+//!   D. sampler decode step cost: full-logits download per emitted token
+//!
+//! `cargo bench --bench perf_ab`; CSV: runs/bench/perf_ab.csv.
+
+use std::path::Path;
+
+use qadx::coordinator::init_params;
+use qadx::data::{shape_for, BatchFactory, SourceSpec, TEXT_SUITES};
+use qadx::eval::{SampleCfg, Sampler};
+use qadx::runtime::{DeviceState, Engine, ModelRuntime};
+use qadx::util::bench::BenchSuite;
+
+fn main() {
+    let Ok(engine) = Engine::new(Path::new("artifacts")) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut suite = BenchSuite::new("perf_ab");
+    let model = std::env::var("QADX_PERF_MODEL").unwrap_or_else(|_| "ace-sim".into());
+    let rt = ModelRuntime::new(&engine, &model).unwrap();
+    let params = init_params(&rt.model, 0);
+    let mut factory =
+        BatchFactory::new(shape_for(&rt.model), vec![SourceSpec::sft(TEXT_SUITES)], 7);
+    let batch = factory.next_batch(None).unwrap();
+    let tokens = rt.upload_tokens(&batch).unwrap();
+    let mask = rt.upload_mask(&batch).unwrap();
+    let lr = engine.upload_scalar(1e-4).unwrap();
+    let exe = rt.exe("sft_bf16").unwrap();
+
+    // --- A: state placement ------------------------------------------------
+    let mut state = DeviceState::from_params(&rt, &params).unwrap();
+    suite.run(&format!("{model}/A1_step_device_resident"), 3, 15, || {
+        let out = engine.run_b(&exe, &[&state.buf, &tokens, &mask, &lr]).unwrap();
+        state.advance(out);
+    });
+    let mut host_state = state.full().unwrap();
+    suite.run(&format!("{model}/A2_step_host_roundtrip"), 3, 15, || {
+        // naive: upload state, step, download the whole new state
+        let s = DeviceState::from_state_vec(&rt, &host_state).unwrap();
+        let out = engine.run_b(&exe, &[&s.buf, &tokens, &mask, &lr]).unwrap();
+        host_state = s.like(out).full().unwrap();
+    });
+
+    // --- B: metrics readback -----------------------------------------------
+    suite.run(&format!("{model}/B1_metrics_scalars_artifact"), 3, 30, || {
+        std::hint::black_box(state.scalars().unwrap());
+    });
+    suite.run(&format!("{model}/B2_metrics_full_state_download"), 3, 30, || {
+        let full = state.full().unwrap();
+        std::hint::black_box(full[full.len() - 8..].to_vec());
+    });
+
+    // --- C: fwd precision --------------------------------------------------
+    let p_buf = rt.upload_params(&params).unwrap();
+    for key in ["fwd_bf16", "fwd_nvfp4"] {
+        let fwd = rt.exe(key).unwrap();
+        suite.run(&format!("{model}/C_{key}"), 3, 20, || {
+            std::hint::black_box(engine.run_b(&fwd, &[&p_buf, &tokens]).unwrap());
+        });
+    }
+
+    // --- D: sampler --------------------------------------------------------
+    let mut sampler = Sampler::new(&rt, "fwd_bf16", SampleCfg::default()).unwrap();
+    let prompts: Vec<Vec<i32>> = (0..rt.model.batch)
+        .map(|i| vec![1, 4 + (i as i32 % 10), 40, 4, 43, 3])
+        .collect();
+    suite.run(&format!("{model}/D_generate_batch_12tok"), 2, 8, || {
+        std::hint::black_box(sampler.generate(&engine, &p_buf, &prompts, None).unwrap());
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,70 @@
+//! Runtime-layer benchmarks: per-step latency of every AOT artifact kind on
+//! the PJRT CPU client — the numbers that dominate every table's wall
+//! clock. `cargo bench --bench runtime_bench`. CSV: runs/bench/runtime.csv.
+
+use std::path::Path;
+
+use qadx::coordinator::init_params;
+use qadx::data::{shape_for, BatchFactory, SourceSpec, TEXT_SUITES};
+use qadx::runtime::{DeviceState, Engine, ModelRuntime};
+use qadx::util::bench::BenchSuite;
+
+fn main() {
+    let Ok(engine) = Engine::new(Path::new("artifacts")) else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let mut suite = BenchSuite::new("runtime");
+
+    for model in ["ace-sim", "nano-sim", "nano3-sim", "super-sim"] {
+        let rt = ModelRuntime::new(&engine, model).unwrap();
+        let params = init_params(&rt.model, 0);
+        let p_buf = rt.upload_params(&params).unwrap();
+        let mut factory =
+            BatchFactory::new(shape_for(&rt.model), vec![SourceSpec::sft(TEXT_SUITES)], 7);
+        let batch = factory.next_batch(None).unwrap();
+        let tokens = rt.upload_tokens(&batch).unwrap();
+        let mask = rt.upload_mask(&batch).unwrap();
+        let lr = engine.upload_scalar(1e-4).unwrap();
+
+        // forward passes
+        for key in ["fwd_bf16", "fwd_nvfp4"] {
+            let exe = rt.exe(key).unwrap();
+            suite.run(&format!("{model}/{key}"), 2, 15, || {
+                std::hint::black_box(engine.run_b(&exe, &[&p_buf, &tokens]).unwrap());
+            });
+        }
+        // training steps (device-resident state chain)
+        let mut state = DeviceState::from_params(&rt, &params).unwrap();
+        for key in ["sft_bf16", "qat_nvfp4", "qad_nvfp4"] {
+            let exe = rt.exe(key).unwrap();
+            let needs_teacher = rt
+                .model
+                .artifact(key)
+                .unwrap()
+                .args
+                .iter()
+                .any(|a| a.name == "teacher_params");
+            suite.run(&format!("{model}/{key}"), 2, 10, || {
+                let out = if needs_teacher {
+                    engine
+                        .run_b(&exe, &[&state.buf, &p_buf, &tokens, &mask, &lr])
+                        .unwrap()
+                } else {
+                    engine.run_b(&exe, &[&state.buf, &tokens, &mask, &lr]).unwrap()
+                };
+                state.advance(out);
+            });
+        }
+        // metrics readback
+        suite.run(&format!("{model}/scalars_readback"), 2, 30, || {
+            std::hint::black_box(state.scalars().unwrap());
+        });
+        // host upload cost of a batch
+        suite.run(&format!("{model}/batch_upload"), 2, 30, || {
+            std::hint::black_box(rt.upload_tokens(&batch).unwrap());
+            std::hint::black_box(rt.upload_mask(&batch).unwrap());
+        });
+    }
+    suite.finish();
+}

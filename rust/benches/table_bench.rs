@@ -1,0 +1,63 @@
+//! End-to-end per-table benchmarks: times one reduced-budget run of every
+//! paper-table driver (teachers come from the runs/teachers cache, so this
+//! measures the recovery + evaluation pipeline — the part each table
+//! re-executes). `cargo bench --bench table_bench`.
+//!
+//! Budget knobs come from env (QADX_BENCH_STEPS / _N / _K) so the §Perf
+//! pass can compare like-for-like across optimization iterations.
+
+use std::path::Path;
+
+use qadx::exper::{self, common::Ctx};
+use qadx::util::args::Args;
+use qadx::util::bench::BenchSuite;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let steps = env_usize("QADX_BENCH_STEPS", 20);
+    let n = env_usize("QADX_BENCH_N", 8);
+    let k = env_usize("QADX_BENCH_K", 1);
+    let argv: Vec<String> = [
+        "bench".to_string(),
+        "--quick".to_string(),
+        format!("--steps={steps}"),
+        format!("--n={n}"),
+        format!("--k={k}"),
+        "--scale=0.05".to_string(),
+    ]
+    .to_vec();
+    let args = Args::parse(&argv);
+    let ctx = Ctx::from_args(&args).expect("ctx");
+    let mut suite = BenchSuite::new("tables");
+    // Default: a representative subset (alignment, RL-breakage, data
+    // ablation, size law); QADX_BENCH_ALL=1 sweeps all twelve.
+    let all = std::env::var("QADX_BENCH_ALL").is_ok();
+    let tables: &[usize] = if all {
+        &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]
+    } else {
+        &[1, 3, 5, 12]
+    };
+    for &t in tables {
+        suite.run(&format!("table{t:02}_e2e"), 0, 1, || {
+            if let Err(e) = exper::run_table(&ctx, t) {
+                eprintln!("table{t} failed in bench: {e:#}");
+            }
+        });
+    }
+    let figs: &[usize] = if all { &[1, 2] } else { &[2] };
+    for &f in figs {
+        suite.run(&format!("figure{f}_e2e"), 0, 1, || {
+            if let Err(e) = exper::run_figure(&ctx, f) {
+                eprintln!("figure{f} failed in bench: {e:#}");
+            }
+        });
+    }
+    suite.finish();
+}

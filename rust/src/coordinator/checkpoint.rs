@@ -1,0 +1,92 @@
+//! Checkpoint store: flat f32 parameter vectors in a small binary format
+//! ("QCKP"), with JSON sidecar metadata. Used for the teacher cache
+//! (runs/teachers/) and the top-k-by-val-loss selection protocol (§3.4).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 4] = b"QCKP";
+
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub step: usize,
+    pub val_loss: f64,
+    pub params: Vec<f32>,
+}
+
+/// Write a parameter vector (+ metadata) to `<path>` / `<path>.json`.
+pub fn save(path: &Path, params: &[f32], meta: &Json) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    // bulk little-endian write
+    let bytes: Vec<u8> = params.iter().flat_map(|v| v.to_le_bytes()).collect();
+    f.write_all(&bytes)?;
+    std::fs::write(path.with_extension("json"), meta.pretty())?;
+    Ok(())
+}
+
+/// Load a parameter vector; verifies magic and length.
+pub fn load(path: &Path) -> Result<Vec<f32>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {path:?}"))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?} is not a QCKP checkpoint");
+    }
+    let mut len_bytes = [0u8; 8];
+    f.read_exact(&mut len_bytes)?;
+    let len = u64::from_le_bytes(len_bytes) as usize;
+    let mut bytes = vec![0u8; len * 4];
+    f.read_exact(&mut bytes)?;
+    let mut extra = Vec::new();
+    f.read_to_end(&mut extra)?;
+    if !extra.is_empty() {
+        bail!("{path:?}: trailing bytes");
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn load_meta(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path.with_extension("json"))?;
+    Ok(Json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("qadx_ckpt_test");
+        let path = dir.join("a/b/test.qckp");
+        let params: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let meta = Json::obj(vec![("model", Json::Str("x".into())), ("steps", Json::Num(5.0))]);
+        save(&path, &params, &meta).unwrap();
+        assert_eq!(load(&path).unwrap(), params);
+        let m = load_meta(&path).unwrap();
+        assert_eq!(m.req_usize("steps").unwrap(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("qadx_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.qckp");
+        std::fs::write(&path, b"NOPE aaaaaaaaaaaaaaaa").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

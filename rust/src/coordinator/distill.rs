@@ -1,0 +1,226 @@
+//! The paper's contribution as an API: PTQ, QAD, QAT, and the ablation
+//! variants (MSE distill, native-quantized-training proxy), with the §3.4
+//! evaluation protocol (top-k checkpoints by validation loss, pick the
+//! best on benchmarks).
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+use super::pipeline;
+use super::trainer::{TrainCfg, Trainer};
+use crate::data::tasks::Suite;
+use crate::data::{shape_for, BatchFactory, SourceSpec};
+use crate::eval::{run_suites, EvalCfg, SampleCfg, TeacherGenerator};
+use crate::quant;
+use crate::runtime::{DeviceState, Engine, ModelRuntime};
+
+/// Recovery method (the rows of Tables 2/3/10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Bf16,
+    Ptq,
+    Qat,
+    Qad,
+    Mse,
+    Nqt,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Bf16 => "BF16",
+            Method::Ptq => "NVFP4 PTQ",
+            Method::Qat => "NVFP4 QAT",
+            Method::Qad => "NVFP4 QAD",
+            Method::Mse => "NVFP4 MSE-distill",
+            Method::Nqt => "NVFP4 native-QT",
+        }
+    }
+
+    pub fn step_key(&self) -> Option<&'static str> {
+        match self {
+            Method::Bf16 | Method::Ptq => None,
+            Method::Qat => Some("qat_nvfp4"),
+            Method::Qad => Some("qad_nvfp4"),
+            Method::Mse => Some("mse_nvfp4"),
+            Method::Nqt => Some("nqt_nvfp4"),
+        }
+    }
+
+    /// Which fwd artifact evaluates this method's weights.
+    pub fn fwd_key(&self) -> &'static str {
+        match self {
+            Method::Bf16 => "fwd_bf16",
+            _ => "fwd_nvfp4",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RecoveryCfg {
+    pub train: TrainCfg,
+    pub data: Vec<SourceSpec>,
+    /// Evaluate the top-k checkpoints on these suites and keep the best
+    /// average (paper §3.4). Empty -> just use the final checkpoint.
+    pub select_suites: Vec<Suite>,
+    pub eval: EvalCfg,
+    /// Teacher-side sampling for generation-backed data sources.
+    pub teacher_sample: SampleCfg,
+}
+
+impl RecoveryCfg {
+    pub fn new(data: Vec<SourceSpec>, lr: f64, steps: usize) -> RecoveryCfg {
+        RecoveryCfg {
+            train: TrainCfg {
+                steps,
+                lr,
+                val_every: (steps / 6).max(25),
+                keep_top_k: 5,
+                log_every: (steps / 10).max(10),
+                ..TrainCfg::default()
+            },
+            data,
+            select_suites: vec![],
+            eval: EvalCfg::default(),
+            teacher_sample: SampleCfg { temperature: 1.0, top_p: 1.0, max_new: 12, seed: 33 },
+        }
+    }
+
+    pub fn selecting_on(mut self, suites: &[Suite]) -> Self {
+        self.select_suites = suites.to_vec();
+        self
+    }
+}
+
+/// The student weights a method produces (plus its training curve).
+pub struct RecoveryOutcome {
+    pub method: Method,
+    pub params: Vec<f32>,
+    pub curve: Vec<(usize, f64)>,
+    pub val_curve: Vec<(usize, f64)>,
+}
+
+/// Produce student weights for `method` starting from `teacher`.
+///
+/// * BF16  — the teacher itself (evaluated unquantized)
+/// * PTQ   — teacher weights (evaluated through the fake-quant fwd; the
+///           Rust codec also packs them for the memory accounting)
+/// * QAT/QAD/MSE/NQT — fine-tuned from the teacher init with the matching
+///           step artifact
+pub fn run_method(
+    engine: &Engine,
+    rt: &ModelRuntime,
+    method: Method,
+    teacher: &[f32],
+    cfg: &RecoveryCfg,
+) -> Result<RecoveryOutcome> {
+    let mut outcome = RecoveryOutcome {
+        method,
+        params: teacher.to_vec(),
+        curve: vec![],
+        val_curve: vec![],
+    };
+    let Some(step_key) = method.step_key() else {
+        return Ok(outcome); // BF16 / PTQ need no training
+    };
+
+    let shape = shape_for(&rt.model);
+    let mut factory = BatchFactory::new(shape, cfg.data.clone(), cfg.train.seed ^ 0xda7a);
+    // Validation: clean SFT batches over the same suites.
+    let val_suites: Vec<Suite> = cfg
+        .data
+        .iter()
+        .flat_map(|s| s.suites.clone())
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect::<Vec<_>>();
+    let val_suites = if val_suites.is_empty() {
+        pipeline::train_suites(&rt.model.name).to_vec()
+    } else {
+        val_suites
+    };
+    let mut val_factory = BatchFactory::new(shape, vec![SourceSpec::sft(&val_suites)], 0x7a11);
+    let val_spec = SourceSpec::sft(&val_suites);
+    let trainer =
+        Trainer::new(engine, rt).with_validation(&mut val_factory, &val_spec, 4)?;
+
+    let needs_gen = cfg.data.iter().any(|s| s.kind.needs_generator());
+    let mut generator = if needs_gen {
+        Some(TeacherGenerator::new(engine, rt, "fwd_bf16", teacher, cfg.teacher_sample)?)
+    } else {
+        None
+    };
+
+    let teacher_buf = rt.upload_params(teacher)?;
+    let mut state = DeviceState::from_params(rt, teacher)?;
+    let log = trainer.train(
+        step_key,
+        &mut state,
+        &mut factory,
+        Some(&teacher_buf),
+        generator
+            .as_mut()
+            .map(|g| g as &mut dyn crate::data::sources::ResponseGenerator),
+        &cfg.train,
+    )?;
+
+    outcome.curve = log.records.iter().map(|r| (r.step, r.loss)).collect();
+    outcome.val_curve = log.val_losses.clone();
+
+    // §3.4 protocol: evaluate top-k checkpoints, keep the best average.
+    let top = log.top_checkpoints();
+    if top.is_empty() {
+        outcome.params = state.params()?;
+        return Ok(outcome);
+    }
+    if cfg.select_suites.is_empty() || top.len() == 1 {
+        outcome.params = top[0].params.clone();
+        return Ok(outcome);
+    }
+    let mut best: Option<(f64, Vec<f32>)> = None;
+    for ck in top.iter().take(3) {
+        let accs = run_suites(
+            engine,
+            rt,
+            method.fwd_key(),
+            &ck.params,
+            &cfg.select_suites,
+            &cfg.eval,
+        )?;
+        let avg: f64 = accs.values().sum::<f64>() / accs.len().max(1) as f64;
+        if best.as_ref().map(|(b, _)| avg > *b).unwrap_or(true) {
+            best = Some((avg, ck.params.clone()));
+        }
+    }
+    outcome.params = best.unwrap().1;
+    Ok(outcome)
+}
+
+/// Evaluate a method's weights on the given suites.
+pub fn eval_method(
+    engine: &Engine,
+    rt: &ModelRuntime,
+    method: Method,
+    params: &[f32],
+    suites: &[Suite],
+    cfg: &EvalCfg,
+) -> Result<BTreeMap<String, f64>> {
+    run_suites(engine, rt, method.fwd_key(), params, suites, cfg)
+}
+
+/// PTQ export report: pack the teacher's quantizable weights with the Rust
+/// NVFP4 codec (bit-exact with the fwd_nvfp4 graph's weight handling) and
+/// report compression + per-layer error.
+pub fn ptq_report(rt: &ModelRuntime, teacher: &[f32]) -> quant::PtqReport {
+    let mut params = teacher.to_vec();
+    let layout: Vec<(String, Vec<usize>, usize, usize)> = rt
+        .model
+        .params
+        .iter()
+        .map(|p| (p.name.clone(), p.shape.clone(), p.offset, p.size))
+        .collect();
+    let model = rt.model.clone();
+    quant::ptq_quantize_params(&mut params, &layout, &|name| {
+        model.param_skipped_by_selective_quant(name)
+    })
+}

@@ -1,0 +1,94 @@
+//! Parameter initialization on the Rust side (used when the coordinator
+//! trains teachers from scratch — the whole post-training pipeline runs
+//! in-repo, there are no external checkpoints).
+//!
+//! Follows the same scheme as python/compile/model.py `init_params`:
+//! norm scales start at 1, bias-like vectors at 0, matrices at
+//! N(0, 1/fan_in). Exact bit-equality with the Python init is not required
+//! (training starts from scratch either way); the *layout* is the manifest
+//! contract and is asserted here.
+
+use crate::runtime::ModelEntry;
+use crate::util::rng::Rng;
+
+pub fn init_params(model: &ModelEntry, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x51ab_c0de);
+    let mut out = vec![0f32; model.param_count];
+    for p in &model.params {
+        let leaf = p.name.rsplit('.').next().unwrap_or(&p.name);
+        let slice = &mut out[p.offset..p.offset + p.size];
+        if leaf.starts_with("ln") {
+            slice.fill(1.0);
+        } else if leaf == "a_bias" || leaf == "vis_bias" {
+            slice.fill(0.0);
+        } else {
+            let fan_in = if p.shape.len() >= 2 {
+                p.shape[p.shape.len() - 2]
+            } else {
+                p.shape[p.shape.len() - 1]
+            }
+            .max(1);
+            let std = 1.0 / (fan_in as f64).sqrt();
+            for v in slice.iter_mut() {
+                *v = (rng.normal() * std) as f32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{ModelEntry, ParamDef, QuantSettings};
+    use std::collections::BTreeMap;
+
+    fn toy_model() -> ModelEntry {
+        ModelEntry {
+            name: "toy".into(),
+            d_model: 8,
+            n_heads: 2,
+            d_ff: 16,
+            blocks: vec!["attn".into()],
+            vocab: 16,
+            seq_len: 8,
+            batch: 2,
+            vision: false,
+            vision_grid: 0,
+            vision_patch: 0,
+            param_count: 8 + 64,
+            state_len: 3 * 72 + 8,
+            quant: QuantSettings {
+                weights: "nvfp4".into(),
+                acts: "nvfp4".into(),
+                impl_: "jnp".into(),
+                skip_attention: false,
+                skip_first: 0,
+                skip_last: 0,
+            },
+            params: vec![
+                ParamDef { name: "b0.ln1".into(), shape: vec![8], offset: 0, size: 8 },
+                ParamDef { name: "b0.wq".into(), shape: vec![8, 8], offset: 8, size: 64 },
+            ],
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn norms_one_weights_random() {
+        let m = toy_model();
+        let p = init_params(&m, 0);
+        assert!(p[..8].iter().all(|&v| v == 1.0));
+        let w = &p[8..];
+        assert!(w.iter().any(|&v| v != 0.0));
+        let mean: f32 = w.iter().sum::<f32>() / w.len() as f32;
+        assert!(mean.abs() < 0.2);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let m = toy_model();
+        assert_eq!(init_params(&m, 7), init_params(&m, 7));
+        assert_ne!(init_params(&m, 7), init_params(&m, 8));
+    }
+}

@@ -1,0 +1,64 @@
+//! Model merging substrate — the paper's multi-stage pipelines include
+//! weight-space merging between post-training stages (Bercovich et al.,
+//! 2025). Linear interpolation and uniform souping over flat parameter
+//! vectors.
+
+use anyhow::{bail, Result};
+
+/// `(1-alpha)·a + alpha·b`, elementwise.
+pub fn lerp(a: &[f32], b: &[f32], alpha: f32) -> Result<Vec<f32>> {
+    if a.len() != b.len() {
+        bail!("merge length mismatch: {} vs {}", a.len(), b.len());
+    }
+    Ok(a.iter()
+        .zip(b)
+        .map(|(x, y)| (1.0 - alpha) * x + alpha * y)
+        .collect())
+}
+
+/// Uniform average of N parameter vectors ("model soup").
+pub fn soup(models: &[&[f32]]) -> Result<Vec<f32>> {
+    if models.is_empty() {
+        bail!("empty soup");
+    }
+    let n = models[0].len();
+    if models.iter().any(|m| m.len() != n) {
+        bail!("soup length mismatch");
+    }
+    let scale = 1.0 / models.len() as f32;
+    let mut out = vec![0f32; n];
+    for m in models {
+        for (o, v) in out.iter_mut().zip(*m) {
+            *o += v * scale;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lerp_endpoints_and_middle() {
+        let a = vec![0.0f32, 2.0];
+        let b = vec![4.0f32, -2.0];
+        assert_eq!(lerp(&a, &b, 0.0).unwrap(), a);
+        assert_eq!(lerp(&a, &b, 1.0).unwrap(), b);
+        assert_eq!(lerp(&a, &b, 0.5).unwrap(), vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn soup_is_mean() {
+        let a = vec![1.0f32, 1.0];
+        let b = vec![3.0f32, 5.0];
+        let c = vec![2.0f32, 0.0];
+        assert_eq!(soup(&[&a, &b, &c]).unwrap(), vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn mismatch_rejected() {
+        assert!(lerp(&[1.0], &[1.0, 2.0], 0.5).is_err());
+        assert!(soup(&[]).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 coordinator: the paper's pipeline — teacher post-training (SFT, RL,
+//! merging), PTQ, and the QAD/QAT/MSE/NQT recovery methods with the §3.4
+//! checkpoint-selection protocol.
+
+pub mod checkpoint;
+pub mod distill;
+pub mod init;
+pub mod merge;
+pub mod pipeline;
+pub mod rl;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use distill::{eval_method, ptq_report, run_method, Method, RecoveryCfg, RecoveryOutcome};
+pub use init::init_params;
+pub use pipeline::{get_or_train_teacher, train_teacher, PipelineScale};
+pub use rl::{rl_stage, RlCfg};
+pub use trainer::{LrSchedule, StepRecord, TrainCfg, Trainer, TrainLog};

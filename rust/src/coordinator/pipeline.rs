@@ -1,0 +1,214 @@
+//! Teacher construction: the multi-stage post-training pipelines the paper
+//! distills *from*. Each sim model gets the pipeline of its real
+//! counterpart (DESIGN.md §2):
+//!
+//!   super-sim  (Llama Nemotron Super V1): SFT branch A + SFT branch B →
+//!              weight merge → SFT polish   ("SFT + model merging")
+//!   ace-sim    (AceReason): cold-start SFT (partially-correct data) → RL
+//!   nano-sim   (Nemotron Nano 9B V2): multi-stage SFT (broad mixture)
+//!   nano3-sim  (Nemotron 3 Nano MoE): cold-start SFT → RL
+//!   vl-sim     (Nemotron Nano VL): single-stage SFT on the vision suites
+//!   size-*     : short clean SFT (Table 12 size-law sweep)
+//!
+//! Finished teachers are cached in runs/teachers/<model>.qckp; every
+//! experiment reuses the same teacher.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use super::checkpoint;
+use super::init::init_params;
+use super::merge;
+use super::rl::{rl_stage, RlCfg};
+use super::trainer::{LrSchedule, TrainCfg, Trainer};
+use crate::data::tasks::Suite;
+use crate::data::{shape_for, BatchFactory, SourceSpec, TEXT_SUITES, VISION_SUITES};
+use crate::eval::SampleCfg;
+use crate::runtime::{DeviceState, Engine, ModelRuntime};
+use crate::util::json::Json;
+use crate::util::Timer;
+
+/// Step-count scale knob: 1.0 = full sim pipeline; CI smoke uses ~0.05.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineScale(pub f64);
+
+impl PipelineScale {
+    pub fn steps(&self, base: usize) -> usize {
+        ((base as f64 * self.0).round() as usize).max(8)
+    }
+}
+
+impl Default for PipelineScale {
+    fn default() -> Self {
+        PipelineScale(1.0)
+    }
+}
+
+pub const MATH_SUITES: &[Suite] = &[Suite::Math500, Suite::Aime];
+pub const CODE_SUITES: &[Suite] = &[Suite::Lcb, Suite::SciCode];
+
+/// Training suites per model (what the real model's post-training covered).
+pub fn train_suites(model: &str) -> &'static [Suite] {
+    match model {
+        "ace-sim" => &[Suite::Math500, Suite::Aime, Suite::Lcb, Suite::SciCode],
+        "vl-sim" => VISION_SUITES,
+        _ => TEXT_SUITES,
+    }
+}
+
+/// The RL prompt distribution for the RL-heavy models.
+pub fn rl_suites(model: &str) -> &'static [Suite] {
+    match model {
+        "ace-sim" => &[Suite::Math500, Suite::Aime, Suite::Lcb, Suite::SciCode],
+        "nano3-sim" => &[Suite::Math500, Suite::Aime, Suite::Lcb, Suite::Gpqa, Suite::AaLcr],
+        _ => &[],
+    }
+}
+
+/// Whether a model's pipeline ends with an RL stage (Table 3 models).
+pub fn is_rl_heavy(model: &str) -> bool {
+    matches!(model, "ace-sim" | "nano3-sim")
+}
+
+pub struct TeacherReport {
+    pub params: Vec<f32>,
+    pub stages: Vec<String>,
+    pub rl_reward_before: f64,
+    pub rl_reward_after: f64,
+}
+
+/// Load the cached teacher or run the full pipeline.
+pub fn get_or_train_teacher(
+    engine: &Engine,
+    model: &str,
+    runs_dir: &Path,
+    scale: PipelineScale,
+) -> Result<Vec<f32>> {
+    let path = teacher_path(runs_dir, model);
+    if path.exists() {
+        let params = checkpoint::load(&path)?;
+        let expect = engine.manifest.model(model)?.param_count;
+        if params.len() == expect {
+            return Ok(params);
+        }
+        eprintln!("teacher cache {path:?} has stale size; retraining");
+    }
+    let report = train_teacher(engine, model, scale)?;
+    let meta = Json::obj(vec![
+        ("model", Json::Str(model.into())),
+        ("stages", Json::Arr(report.stages.iter().map(|s| Json::Str(s.clone())).collect())),
+        ("rl_reward_before", Json::Num(report.rl_reward_before)),
+        ("rl_reward_after", Json::Num(report.rl_reward_after)),
+        ("scale", Json::Num(scale.0)),
+    ]);
+    checkpoint::save(&path, &report.params, &meta)?;
+    Ok(report.params)
+}
+
+pub fn teacher_path(runs_dir: &Path, model: &str) -> PathBuf {
+    runs_dir.join("teachers").join(format!("{model}.qckp"))
+}
+
+/// Run the model's full post-training pipeline from random init.
+pub fn train_teacher(engine: &Engine, model: &str, scale: PipelineScale) -> Result<TeacherReport> {
+    let timer = Timer::start(&format!("teacher[{model}]"));
+    let rt = ModelRuntime::new(engine, model)?;
+    let shape = shape_for(&rt.model);
+    let mut stages = Vec::new();
+    let suites = train_suites(model);
+    let params = init_params(&rt.model, 42);
+    let mut state = DeviceState::from_params(&rt, &params)?;
+
+    let sft_cfg = |steps: usize, lr: f64, seed: u64| TrainCfg {
+        steps,
+        lr,
+        schedule: LrSchedule::CosineWarmup { warmup: steps / 10, floor: 0.1 },
+        log_every: 0,
+        val_every: 0,
+        keep_top_k: 0,
+        seed,
+    };
+
+    let mut report = TeacherReport {
+        params: Vec::new(),
+        stages: Vec::new(),
+        rl_reward_before: 0.0,
+        rl_reward_after: 0.0,
+    };
+
+    match model {
+        "super-sim" => {
+            // SFT branch A → (from A) SFT branch B on a different slice →
+            // merge → short polish: exercises the merging substrate.
+            let half_a = &suites[..suites.len() / 2 + 1];
+            let half_b = &suites[suites.len() / 2..];
+            let trainer = Trainer::new(engine, &rt);
+            let mut fa = BatchFactory::new(shape, vec![SourceSpec::sft(suites)], 1);
+            trainer.train("sft_bf16", &mut state, &mut fa, None, None, &sft_cfg(scale.steps(3000), 2e-3, 1))?;
+            stages.push("sft-base".into());
+            let base = state.params()?;
+            // branch A
+            let mut fa2 = BatchFactory::new(shape, vec![SourceSpec::sft(half_a)], 2);
+            let mut sa = DeviceState::from_params(&rt, &base)?;
+            trainer.train("sft_bf16", &mut sa, &mut fa2, None, None, &sft_cfg(scale.steps(500), 1e-3, 2))?;
+            // branch B
+            let mut fb = BatchFactory::new(shape, vec![SourceSpec::sft(half_b)], 3);
+            let mut sb = DeviceState::from_params(&rt, &base)?;
+            trainer.train("sft_bf16", &mut sb, &mut fb, None, None, &sft_cfg(scale.steps(500), 1e-3, 3))?;
+            let merged = merge::lerp(&sa.params()?, &sb.params()?, 0.5)?;
+            stages.push("sft-branches+merge".into());
+            // polish
+            state = DeviceState::from_params(&rt, &merged)?;
+            let mut fp = BatchFactory::new(shape, vec![SourceSpec::sft(suites)], 4);
+            trainer.train("sft_bf16", &mut state, &mut fp, None, None, &sft_cfg(scale.steps(600), 5e-4, 4))?;
+            stages.push("sft-polish".into());
+        }
+        "ace-sim" | "nano3-sim" => {
+            // Cold-start SFT on partially-correct data, then RL.
+            let trainer = Trainer::new(engine, &rt);
+            let cold = SourceSpec::sft_quality(suites, 0.7);
+            let mut f = BatchFactory::new(shape, vec![cold], 1);
+            trainer.train("sft_bf16", &mut state, &mut f, None, None, &sft_cfg(scale.steps(3500), 2e-3, 1))?;
+            stages.push("cold-start-sft(p_correct=0.7)".into());
+            let rl_cfg = RlCfg {
+                iterations: scale.steps(200),
+                group_size: 4,
+                lr: 1e-4,
+                sample: SampleCfg { temperature: 1.0, top_p: 1.0, max_new: 8, seed: 11 },
+                seed: 11,
+                log_every: 20,
+            };
+            let rl_log = rl_stage(engine, &rt, &mut state, rl_suites(model), &rl_cfg)?;
+            report.rl_reward_before = rl_log.curve.first().map(|c| c.1).unwrap_or(0.0);
+            report.rl_reward_after = rl_log.final_reward;
+            stages.push(format!(
+                "rl(reward {:.2} -> {:.2})",
+                report.rl_reward_before, report.rl_reward_after
+            ));
+        }
+        "nano-sim" | "vl-sim" => {
+            // Multi-stage SFT: broad mixture then a focused second stage.
+            let trainer = Trainer::new(engine, &rt);
+            let mut f = BatchFactory::new(shape, vec![SourceSpec::sft(suites)], 1);
+            trainer.train("sft_bf16", &mut state, &mut f, None, None, &sft_cfg(scale.steps(3500), 2e-3, 1))?;
+            stages.push("sft-stage1".into());
+            let mut f2 = BatchFactory::new(shape, vec![SourceSpec::sft(suites)], 2);
+            trainer.train("sft_bf16", &mut state, &mut f2, None, None, &sft_cfg(scale.steps(800), 5e-4, 2))?;
+            stages.push("sft-stage2".into());
+        }
+        m if m.starts_with("size-") => {
+            let trainer = Trainer::new(engine, &rt);
+            let sw: &[Suite] = &[Suite::Math500, Suite::Lcb, Suite::Gpqa];
+            let mut f = BatchFactory::new(shape, vec![SourceSpec::sft(sw)], 1);
+            trainer.train("sft_bf16", &mut state, &mut f, None, None, &sft_cfg(scale.steps(2500), 2e-3, 1))?;
+            stages.push("sft".into());
+        }
+        other => bail!("no pipeline defined for model {other:?}"),
+    }
+
+    report.params = state.params()?;
+    report.stages = stages;
+    eprintln!("{} ({} stages)", timer.report(), report.stages.len());
+    Ok(report)
+}

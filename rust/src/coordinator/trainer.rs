@@ -1,0 +1,266 @@
+//! The training loop: drives any step artifact (SFT / QAT / QAD / MSE /
+//! NQT / RL) with a device-resident state vector, LR scheduling,
+//! validation, and checkpoint capture.
+//!
+//! Arguments are assembled *from the manifest arg list* of the chosen
+//! artifact (name-directed), so one loop serves every step variant.
+
+use anyhow::{bail, Result};
+use xla::PjRtBuffer;
+
+use crate::data::sources::ResponseGenerator;
+use crate::data::{BatchFactory, SourceSpec};
+use crate::runtime::{scalar, Batch, DeviceState, Engine, ModelRuntime};
+
+use super::checkpoint::Checkpoint;
+
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Const,
+    /// Linear warmup over `warmup` steps then cosine decay to `floor`·lr.
+    CosineWarmup { warmup: usize, floor: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub lr: f64,
+    pub schedule: LrSchedule,
+    pub log_every: usize,
+    /// Validate + (maybe) checkpoint every N steps; 0 disables.
+    pub val_every: usize,
+    /// Keep the top-K checkpoints by validation loss (paper §3.4 keeps 10).
+    pub keep_top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            steps: 500,
+            lr: 1e-3,
+            schedule: LrSchedule::Const,
+            log_every: 50,
+            val_every: 100,
+            keep_top_k: 5,
+            seed: 0,
+        }
+    }
+}
+
+impl TrainCfg {
+    pub fn lr_at(&self, step: usize) -> f64 {
+        match &self.schedule {
+            LrSchedule::Const => self.lr,
+            LrSchedule::CosineWarmup { warmup, floor } => {
+                if step < *warmup {
+                    self.lr * (step + 1) as f64 / *warmup as f64
+                } else {
+                    let t = (step - warmup) as f64 / (self.steps - warmup).max(1) as f64;
+                    let cos = 0.5 * (1.0 + (std::f64::consts::PI * t.min(1.0)).cos());
+                    self.lr * (floor + (1.0 - floor) * cos)
+                }
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub kl: f64,
+    pub ce: f64,
+    pub grad_norm: f64,
+    pub lr: f64,
+}
+
+#[derive(Debug, Default)]
+pub struct TrainLog {
+    pub records: Vec<StepRecord>,
+    pub val_losses: Vec<(usize, f64)>,
+    pub checkpoints: Vec<Checkpoint>,
+    pub final_loss: f64,
+}
+
+impl TrainLog {
+    /// Checkpoints sorted best-val-loss first.
+    pub fn top_checkpoints(&self) -> Vec<&Checkpoint> {
+        let mut v: Vec<&Checkpoint> = self.checkpoints.iter().collect();
+        v.sort_by(|a, b| a.val_loss.partial_cmp(&b.val_loss).unwrap());
+        v
+    }
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub rt: &'e ModelRuntime<'e>,
+    /// Validation batches (pre-generated, fixed).
+    pub val_batches: Vec<Batch>,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, rt: &'e ModelRuntime<'e>) -> Trainer<'e> {
+        Trainer { engine, rt, val_batches: Vec::new() }
+    }
+
+    /// Pre-generate fixed validation batches from a clean source.
+    pub fn with_validation(
+        mut self,
+        factory: &mut BatchFactory,
+        spec: &SourceSpec,
+        n_batches: usize,
+    ) -> Result<Self> {
+        for _ in 0..n_batches {
+            self.val_batches.push(factory.batch_from_spec(spec, None)?);
+        }
+        Ok(self)
+    }
+
+    /// Run `cfg.steps` of `step_key`, pulling batches from `factory`
+    /// (using `gen` for generation-backed sources) and distilling from
+    /// `teacher` when the artifact takes teacher params.
+    pub fn train(
+        &self,
+        step_key: &str,
+        state: &mut DeviceState,
+        factory: &mut BatchFactory,
+        teacher: Option<&PjRtBuffer>,
+        mut gen: Option<&mut dyn ResponseGenerator>,
+        cfg: &TrainCfg,
+    ) -> Result<TrainLog> {
+        let exe = self.rt.exe(step_key)?;
+        let art = self.rt.model.artifact(step_key)?.clone();
+        let mut log = TrainLog::default();
+
+        for step in 0..cfg.steps {
+            let batch = {
+                let g = gen.as_mut().map(|g| &mut **g as &mut dyn ResponseGenerator);
+                factory.next_batch(g)?
+            };
+            let lr = cfg.lr_at(step) as f32;
+            let lr_buf = self.engine.upload_scalar(lr)?;
+            let tokens = self.rt.upload_tokens(&batch)?;
+            let mask = self.rt.upload_mask(&batch)?;
+            let px = self.rt.upload_pixels(&batch)?;
+            let adv = if art.args.iter().any(|a| a.name == "advantage") {
+                Some(self.rt.upload_advantage(&batch)?)
+            } else {
+                None
+            };
+
+            let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(art.args.len());
+            for a in &art.args {
+                args.push(match a.name.as_str() {
+                    "state" => &state.buf,
+                    "teacher_params" => teacher
+                        .ok_or_else(|| anyhow::anyhow!("{step_key} needs teacher params"))?,
+                    "tokens" => &tokens,
+                    "mask" => &mask,
+                    "lr" => &lr_buf,
+                    "advantage" => adv.as_ref().unwrap(),
+                    "pixels" => px
+                        .as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("{step_key} needs pixels"))?,
+                    other => bail!("unknown artifact arg {other:?}"),
+                });
+            }
+            let out = self.engine.run_b(&exe, &args)?;
+            state.advance(out);
+
+            let want_log = cfg.log_every > 0 && (step + 1) % cfg.log_every == 0;
+            let want_val = cfg.val_every > 0
+                && ((step + 1) % cfg.val_every == 0 || step + 1 == cfg.steps);
+            if want_log || want_val {
+                let sc = state.scalars()?;
+                log.records.push(StepRecord {
+                    step: step + 1,
+                    loss: sc[scalar::LOSS] as f64,
+                    kl: sc[scalar::KL] as f64,
+                    ce: sc[scalar::CE] as f64,
+                    grad_norm: sc[scalar::GRAD_NORM] as f64,
+                    lr: sc[scalar::LR] as f64,
+                });
+                log.final_loss = sc[scalar::LOSS] as f64;
+            }
+            if want_val && !self.val_batches.is_empty() {
+                let vl = self.validate(step_key, state, teacher)?;
+                log.val_losses.push((step + 1, vl));
+                let ck = Checkpoint {
+                    step: step + 1,
+                    val_loss: vl,
+                    params: state.params()?,
+                };
+                log.checkpoints.push(ck);
+                // retain top-k (+ always the latest)
+                if log.checkpoints.len() > cfg.keep_top_k {
+                    let mut idx: Vec<usize> = (0..log.checkpoints.len()).collect();
+                    idx.sort_by(|&a, &b| {
+                        log.checkpoints[a]
+                            .val_loss
+                            .partial_cmp(&log.checkpoints[b].val_loss)
+                            .unwrap()
+                    });
+                    idx.truncate(cfg.keep_top_k);
+                    idx.sort();
+                    let mut kept = Vec::with_capacity(idx.len());
+                    for i in idx {
+                        kept.push(log.checkpoints[i].clone());
+                    }
+                    log.checkpoints = kept;
+                }
+            }
+        }
+        Ok(log)
+    }
+
+    /// Validation loss: the *training* objective evaluated on the fixed
+    /// validation batches without updating (uses a zero learning rate; the
+    /// Adam moments in the scratch state are discarded).
+    fn validate(
+        &self,
+        step_key: &str,
+        state: &DeviceState,
+        teacher: Option<&PjRtBuffer>,
+    ) -> Result<f64> {
+        let exe = self.rt.exe(step_key)?;
+        let art = self.rt.model.artifact(step_key)?.clone();
+        let zero_lr = self.engine.upload_scalar(0.0)?;
+        let mut total = 0f64;
+        for batch in &self.val_batches {
+            let tokens = self.rt.upload_tokens(batch)?;
+            let mask = self.rt.upload_mask(batch)?;
+            let px = self.rt.upload_pixels(batch)?;
+            let adv_host = Batch {
+                advantage: Some(vec![0.0; self.rt.model.batch]),
+                ..Default::default()
+            };
+            let adv = if art.args.iter().any(|a| a.name == "advantage") {
+                Some(self.rt.upload_advantage(&adv_host)?)
+            } else {
+                None
+            };
+            let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(art.args.len());
+            for a in &art.args {
+                args.push(match a.name.as_str() {
+                    "state" => &state.buf,
+                    "teacher_params" => {
+                        teacher.ok_or_else(|| anyhow::anyhow!("needs teacher"))?
+                    }
+                    "tokens" => &tokens,
+                    "mask" => &mask,
+                    "lr" => &zero_lr,
+                    "advantage" => adv.as_ref().unwrap(),
+                    "pixels" => px.as_ref().ok_or_else(|| anyhow::anyhow!("needs pixels"))?,
+                    other => bail!("unknown artifact arg {other:?}"),
+                });
+            }
+            let out = self.engine.run_b(&exe, &args)?;
+            // lr = 0 leaves params untouched (Adam moments shift, but the
+            // scratch state is dropped right after reading the loss).
+            let tmp = state.like(out);
+            total += tmp.scalars()?[scalar::LOSS] as f64;
+        }
+        Ok(total / self.val_batches.len().max(1) as f64)
+    }
+}

@@ -1,0 +1,24 @@
+//! Data substrate: tokenizer, synthetic task corpus, and the Table-5 data
+//! sources (SFT / RL-generated / BOS-generated / random), assembled into
+//! device-ready batches by `BatchFactory`.
+
+pub mod sources;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use sources::{BatchFactory, BatchShape, ResponseGenerator, SourceKind, SourceSpec};
+pub use tasks::{Domain, Sample, Suite, TEXT_SUITES, VISION_SUITES};
+
+use crate::runtime::ModelEntry;
+
+/// Batch shape for a manifest model.
+pub fn shape_for(model: &ModelEntry) -> BatchShape {
+    BatchShape {
+        batch: model.batch,
+        seq_len: model.seq_len,
+        vision: model.vision,
+        grid: model.vision_grid,
+        patch: model.vision_patch,
+        vocab: model.vocab,
+    }
+}

@@ -1,0 +1,366 @@
+//! Training data sources — the paper's Table 5 ablation axis:
+//!
+//!   1. SFT data (cold-start SFT corpus, with a data-quality knob)
+//!   2. Generated from RL prompts (teacher samples responses)
+//!   3. Generated from RL prompts, correct-only (reward-filtered)
+//!   4. Generated from a BOS token (data-free distillation, Liu et al. '23)
+//!   5. Random tokens
+//!
+//! Generation-backed sources pull completions from the full-precision
+//! teacher through the `ResponseGenerator` trait (implemented by
+//! eval::Sampler over the `fwd_bf16` artifact), so the whole data path
+//! stays inside the Rust runtime.
+
+use super::tasks::{self, Sample, Suite};
+use super::tokenizer as tok;
+use crate::runtime::Batch;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum SourceKind {
+    /// Task corpus with ground-truth answers; `p_correct` < 1 simulates
+    /// cold-start data quality (answers corrupted with prob 1-p).
+    Sft { p_correct: f64 },
+    /// Teacher-generated responses to task prompts (the RL prompt set).
+    RlGenerated,
+    /// Same, filtered to reward-positive completions.
+    RlGeneratedCorrectOnly,
+    /// Teacher free-running from BOS (data-free).
+    BosGenerated,
+    /// Uniform random token sequences.
+    RandomTokens,
+}
+
+impl SourceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SourceKind::Sft { .. } => "sft",
+            SourceKind::RlGenerated => "rl-generated",
+            SourceKind::RlGeneratedCorrectOnly => "rl-generated-correct",
+            SourceKind::BosGenerated => "bos-generated",
+            SourceKind::RandomTokens => "random-tokens",
+        }
+    }
+
+    pub fn needs_generator(&self) -> bool {
+        matches!(
+            self,
+            SourceKind::RlGenerated | SourceKind::RlGeneratedCorrectOnly | SourceKind::BosGenerated
+        )
+    }
+}
+
+/// Shape info the factory needs about the target model.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchShape {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vision: bool,
+    pub grid: usize,
+    pub patch: usize,
+    pub vocab: usize,
+}
+
+/// Teacher-side completion source (wired to eval::Sampler by the
+/// coordinator; kept as a trait so `data` does not depend on `eval`).
+pub trait ResponseGenerator {
+    /// Complete each prompt row; returns full token rows (prompt + response,
+    /// PAD-tail) plus the response mask.
+    fn complete(
+        &mut self,
+        prompts: &[Vec<i32>],
+        pixels: Option<&[f32]>,
+        seq_len: usize,
+    ) -> anyhow::Result<Vec<(Vec<i32>, Vec<f32>)>>;
+}
+
+/// One weighted component of a data mixture.
+#[derive(Clone, Debug)]
+pub struct SourceSpec {
+    pub kind: SourceKind,
+    pub suites: Vec<Suite>,
+    pub weight: f64,
+}
+
+impl SourceSpec {
+    pub fn sft(suites: &[Suite]) -> SourceSpec {
+        SourceSpec { kind: SourceKind::Sft { p_correct: 1.0 }, suites: suites.to_vec(), weight: 1.0 }
+    }
+
+    pub fn sft_quality(suites: &[Suite], p_correct: f64) -> SourceSpec {
+        SourceSpec { kind: SourceKind::Sft { p_correct }, suites: suites.to_vec(), weight: 1.0 }
+    }
+
+    pub fn with_weight(mut self, w: f64) -> SourceSpec {
+        self.weight = w;
+        self
+    }
+}
+
+/// Builds training batches from a weighted mixture of sources.
+pub struct BatchFactory {
+    pub shape: BatchShape,
+    pub sources: Vec<SourceSpec>,
+    rng: Rng,
+}
+
+impl BatchFactory {
+    pub fn new(shape: BatchShape, sources: Vec<SourceSpec>, seed: u64) -> Self {
+        assert!(!sources.is_empty());
+        BatchFactory { shape, sources, rng: Rng::new(seed) }
+    }
+
+    /// Sample one task row (text or vision) from the given suites.
+    fn sample_task(&mut self, suites: &[Suite]) -> Sample {
+        let suite = *self.rng.choice(suites);
+        tasks::generate(suite, &mut self.rng, self.shape.grid, self.shape.patch)
+    }
+
+    /// Produce the next batch; `gen` must be Some for generation-backed
+    /// sources.
+    pub fn next_batch(
+        &mut self,
+        gen: Option<&mut dyn ResponseGenerator>,
+    ) -> anyhow::Result<Batch> {
+        let weights: Vec<f64> = self.sources.iter().map(|s| s.weight).collect();
+        let idx = self.rng.weighted(&weights);
+        let spec = self.sources[idx].clone();
+        self.batch_from_spec(&spec, gen)
+    }
+
+    pub fn batch_from_spec(
+        &mut self,
+        spec: &SourceSpec,
+        mut gen: Option<&mut dyn ResponseGenerator>,
+    ) -> anyhow::Result<Batch> {
+        let sh = self.shape;
+        let (b, s) = (sh.batch, sh.seq_len);
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut mask = Vec::with_capacity(b * s);
+        let mut pixels: Option<Vec<f32>> = if sh.vision { Some(Vec::new()) } else { None };
+
+        match &spec.kind {
+            SourceKind::Sft { p_correct } => {
+                for _ in 0..b {
+                    let smp = self.sample_task(&spec.suites);
+                    let answer = if self.rng.bool(*p_correct) {
+                        smp.answer.clone()
+                    } else {
+                        tasks::corrupt_answer(&smp.answer, &mut self.rng)
+                    };
+                    let (t, m) = tasks::build_row(&smp, &answer, s);
+                    tokens.extend(t);
+                    mask.extend(m);
+                    if let Some(px) = pixels.as_mut() {
+                        px.extend(smp.pixels.as_deref().unwrap_or(&vec![0.0; sh.grid * sh.grid * sh.patch]));
+                    }
+                }
+            }
+            SourceKind::RandomTokens => {
+                for _ in 0..b {
+                    tokens.push(tok::BOS);
+                    mask.push(0.0);
+                    for _ in 1..s {
+                        tokens.push(self.rng.range(4, sh.vocab as i64) as i32);
+                        mask.push(1.0);
+                    }
+                    if let Some(px) = pixels.as_mut() {
+                        for _ in 0..sh.grid * sh.grid * sh.patch {
+                            px.push(self.rng.normal() as f32);
+                        }
+                    }
+                }
+            }
+            SourceKind::BosGenerated => {
+                let g = gen.as_mut().ok_or_else(|| {
+                    anyhow::anyhow!("source {:?} needs a teacher generator", spec.kind)
+                })?;
+                let prompts: Vec<Vec<i32>> = (0..b).map(|_| vec![tok::BOS]).collect();
+                let rows = g.complete(&prompts, None, s)?;
+                for (t, m) in rows {
+                    tokens.extend(t);
+                    mask.extend(m);
+                }
+            }
+            SourceKind::RlGenerated | SourceKind::RlGeneratedCorrectOnly => {
+                let correct_only = spec.kind == SourceKind::RlGeneratedCorrectOnly;
+                let g = gen.as_mut().ok_or_else(|| {
+                    anyhow::anyhow!("source {:?} needs a teacher generator", spec.kind)
+                })?;
+                let mut rows_done = 0usize;
+                let mut attempts = 0usize;
+                while rows_done < b {
+                    attempts += 1;
+                    if attempts > 8 {
+                        // Teacher too weak to produce enough correct samples:
+                        // fall back to unfiltered for the remainder.
+                        anyhow::ensure!(!tokens.is_empty() || !correct_only || attempts <= 16,
+                            "correct-only generation starved");
+                    }
+                    let mut samples = Vec::with_capacity(b);
+                    let mut prompts = Vec::with_capacity(b);
+                    let mut pxbuf: Vec<f32> = Vec::new();
+                    for _ in 0..b {
+                        let smp = self.sample_task(&spec.suites);
+                        prompts.push(tasks::prompt_tokens(&smp, s));
+                        if sh.vision {
+                            pxbuf.extend(smp.pixels.as_deref().unwrap_or(&vec![0.0; sh.grid * sh.grid * sh.patch]));
+                        }
+                        samples.push(smp);
+                    }
+                    let px_opt = if sh.vision { Some(pxbuf.as_slice()) } else { None };
+                    let rows = g.complete(&prompts, px_opt, s)?;
+                    for (i, (t, m)) in rows.into_iter().enumerate() {
+                        if rows_done >= b {
+                            break;
+                        }
+                        if correct_only {
+                            let generated = decode_response(&t, &prompts[i]);
+                            if samples[i].suite.score(&samples[i].answer, &generated) < 1.0 {
+                                continue;
+                            }
+                        }
+                        tokens.extend(t);
+                        mask.extend(m);
+                        if let Some(px) = pixels.as_mut() {
+                            let n = sh.grid * sh.grid * sh.patch;
+                            px.extend(&pxbuf[i * n..(i + 1) * n]);
+                        }
+                        rows_done += 1;
+                    }
+                    if attempts > 32 {
+                        anyhow::bail!("correct-only generation starved after 32 rounds");
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(tokens.len() == b * s, "batch underfull: {}", tokens.len());
+        Ok(Batch { tokens, mask, pixels, advantage: None })
+    }
+}
+
+/// Decode the response region (after SEP) of a generated row.
+pub fn decode_response(row: &[i32], prompt: &[i32]) -> String {
+    tok::decode(&row[prompt.len().min(row.len())..])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::TEXT_SUITES;
+
+    fn shape() -> BatchShape {
+        BatchShape { batch: 4, seq_len: 64, vision: false, grid: 4, patch: 16, vocab: 64 }
+    }
+
+    struct EchoGen; // fake teacher: echoes the correct answer for testing
+    impl ResponseGenerator for EchoGen {
+        fn complete(
+            &mut self,
+            prompts: &[Vec<i32>],
+            _pixels: Option<&[f32]>,
+            seq_len: usize,
+        ) -> anyhow::Result<Vec<(Vec<i32>, Vec<f32>)>> {
+            Ok(prompts
+                .iter()
+                .map(|p| {
+                    let mut t = vec![tok::PAD; seq_len];
+                    let mut m = vec![0f32; seq_len];
+                    t[..p.len()].copy_from_slice(p);
+                    t[p.len()] = tok::DIGIT0 + 7; // always answer "7"
+                    m[p.len()] = 1.0;
+                    t[p.len() + 1] = tok::EOS;
+                    m[p.len() + 1] = 1.0;
+                    (t, m)
+                })
+                .collect())
+        }
+    }
+
+    #[test]
+    fn sft_batch_well_formed() {
+        let mut f = BatchFactory::new(shape(), vec![SourceSpec::sft(TEXT_SUITES)], 1);
+        let b = f.next_batch(None).unwrap();
+        assert_eq!(b.tokens.len(), 4 * 64);
+        assert_eq!(b.mask.len(), 4 * 64);
+        assert!(b.pixels.is_none());
+        // every row starts with BOS and has some mask
+        for r in 0..4 {
+            assert_eq!(b.tokens[r * 64], tok::BOS);
+            assert!(b.mask[r * 64..(r + 1) * 64].iter().sum::<f32>() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn quality_knob_corrupts() {
+        // p_correct=0 must produce different label distribution than p=1
+        let mk = |p| {
+            let mut f = BatchFactory::new(
+                shape(),
+                vec![SourceSpec::sft_quality(&[Suite::Math500], p)],
+                7,
+            );
+            f.next_batch(None).unwrap().tokens
+        };
+        assert_ne!(mk(0.0), mk(1.0));
+    }
+
+    #[test]
+    fn random_tokens_masked_everywhere() {
+        let mut f = BatchFactory::new(
+            shape(),
+            vec![SourceSpec { kind: SourceKind::RandomTokens, suites: vec![], weight: 1.0 }],
+            3,
+        );
+        let b = f.next_batch(None).unwrap();
+        assert_eq!(b.mask.iter().sum::<f32>(), 4.0 * 63.0);
+        assert!(b.tokens.iter().skip(1).all(|&t| t >= 0 && t < 64));
+    }
+
+    #[test]
+    fn generated_source_requires_generator() {
+        let mut f = BatchFactory::new(
+            shape(),
+            vec![SourceSpec { kind: SourceKind::RlGenerated, suites: vec![Suite::Math500], weight: 1.0 }],
+            3,
+        );
+        assert!(f.next_batch(None).is_err());
+        let mut g = EchoGen;
+        let b = f.next_batch(Some(&mut g)).unwrap();
+        assert_eq!(b.tokens.len(), 4 * 64);
+        assert!(b.mask.iter().sum::<f32>() >= 4.0);
+    }
+
+    #[test]
+    fn mixture_draws_from_all() {
+        let mut f = BatchFactory::new(
+            shape(),
+            vec![
+                SourceSpec::sft(&[Suite::Math500]).with_weight(0.5),
+                SourceSpec { kind: SourceKind::RandomTokens, suites: vec![], weight: 0.5 },
+            ],
+            11,
+        );
+        let mut saw_random = false;
+        let mut saw_sft = false;
+        for _ in 0..20 {
+            let b = f.next_batch(None).unwrap();
+            let msum = b.mask.iter().sum::<f32>();
+            if msum == 4.0 * 63.0 {
+                saw_random = true;
+            } else {
+                saw_sft = true;
+            }
+        }
+        assert!(saw_random && saw_sft);
+    }
+
+    #[test]
+    fn vision_batches_carry_pixels() {
+        let sh = BatchShape { vision: true, ..shape() };
+        let mut f = BatchFactory::new(sh, vec![SourceSpec::sft(&[Suite::DocVqa])], 5);
+        let b = f.next_batch(None).unwrap();
+        let px = b.pixels.unwrap();
+        assert_eq!(px.len(), 4 * 16 * 16);
+    }
+}

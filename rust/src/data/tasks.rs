@@ -1,0 +1,533 @@
+//! Synthetic task suite: the sim counterparts of the paper's evaluation
+//! benchmarks (DESIGN.md §2). Every task has a *verifiable* exact answer,
+//! which is what makes true SFT, REINFORCE-style RL, and sampling-based
+//! evaluation possible in-repo.
+//!
+//! Mapping (paper benchmark → sim suite):
+//!   MATH500            → Math500   2-digit modular addition
+//!   AIME24 / AIME25    → Aime      mul-add chains mod 100 (harder)
+//!   LiveCodeBench      → Lcb       sort / reverse digit strings
+//!   SciCode            → SciCode   composed transforms (desc-sort, inc)
+//!   GPQA-Diamond       → Gpqa      key-value recall with distractors
+//!   IFEval-Instruction → Ifeval    bracket-format compliance
+//!   AA-LCR             → AaLcr     long-context recall (context-filling KV)
+//!   AI2D/ChartQA/DocVQA/InfoVQA/OCRBench/TextVQA → grid-image QA variants
+
+use super::tokenizer as tok;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Domain {
+    Math,
+    Code,
+    Knowledge,
+    Instruction,
+    Vision,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Suite {
+    Math500,
+    Aime,
+    Lcb,
+    SciCode,
+    Gpqa,
+    Ifeval,
+    AaLcr,
+    Ai2d,
+    ChartQa,
+    DocVqa,
+    InfoVqa,
+    OcrBench,
+    TextVqa,
+}
+
+impl Suite {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Suite::Math500 => "math500",
+            Suite::Aime => "aime",
+            Suite::Lcb => "livecodebench",
+            Suite::SciCode => "scicode",
+            Suite::Gpqa => "gpqa-d",
+            Suite::Ifeval => "ifeval",
+            Suite::AaLcr => "aa-lcr",
+            Suite::Ai2d => "ai2d",
+            Suite::ChartQa => "chartqa",
+            Suite::DocVqa => "docvqa",
+            Suite::InfoVqa => "infovqa",
+            Suite::OcrBench => "ocrbench",
+            Suite::TextVqa => "textvqa",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Suite> {
+        use Suite::*;
+        Some(match s {
+            "math500" => Math500,
+            "aime" | "aime24" | "aime25" => Aime,
+            "livecodebench" | "lcb" => Lcb,
+            "scicode" => SciCode,
+            "gpqa-d" | "gpqa" => Gpqa,
+            "ifeval" => Ifeval,
+            "aa-lcr" | "aalcr" => AaLcr,
+            "ai2d" => Ai2d,
+            "chartqa" => ChartQa,
+            "docvqa" => DocVqa,
+            "infovqa" => InfoVqa,
+            "ocrbench" => OcrBench,
+            "textvqa" => TextVqa,
+            _ => return None,
+        })
+    }
+
+    pub fn domain(&self) -> Domain {
+        match self {
+            Suite::Math500 | Suite::Aime => Domain::Math,
+            Suite::Lcb | Suite::SciCode => Domain::Code,
+            Suite::Gpqa | Suite::AaLcr => Domain::Knowledge,
+            Suite::Ifeval => Domain::Instruction,
+            _ => Domain::Vision,
+        }
+    }
+
+    pub fn is_vision(&self) -> bool {
+        self.domain() == Domain::Vision
+    }
+
+    /// Scoring mode: IFEval scores instruction (format) compliance, all
+    /// other suites score exact answer match.
+    pub fn score(&self, expected: &str, generated: &str) -> f64 {
+        match self {
+            Suite::Ifeval => {
+                let g = generated.trim();
+                // instruction: answer wrapped in brackets, non-empty inside
+                if g.starts_with('[') && g.ends_with(']') && g.len() > 2 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            _ => {
+                if generated.trim() == expected.trim() {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// All text suites (the LLM benchmark set).
+pub const TEXT_SUITES: &[Suite] = &[
+    Suite::Math500,
+    Suite::Aime,
+    Suite::Lcb,
+    Suite::SciCode,
+    Suite::Gpqa,
+    Suite::Ifeval,
+    Suite::AaLcr,
+];
+
+/// All vision suites (the VLM benchmark set).
+pub const VISION_SUITES: &[Suite] = &[
+    Suite::Ai2d,
+    Suite::ChartQa,
+    Suite::DocVqa,
+    Suite::InfoVqa,
+    Suite::OcrBench,
+    Suite::TextVqa,
+];
+
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub suite: Suite,
+    pub prompt: String,
+    pub answer: String,
+    /// Flattened (grid*grid, patch) pixels for vision suites.
+    pub pixels: Option<Vec<f32>>,
+}
+
+/// A 4×4 digit grid rendered into patch pixels: each patch is filled with
+/// the (normalized) cell value — the linear vision front-end reads it back.
+fn render_grid(cells: &[u8], grid: usize, patch: usize) -> Vec<f32> {
+    let mut px = Vec::with_capacity(grid * grid * patch);
+    for &v in cells {
+        let base = (v as f32 / 9.0 - 0.5) * 2.0;
+        for j in 0..patch {
+            // small fixed positional ramp keeps patches non-constant
+            px.push(base + 0.01 * j as f32);
+        }
+    }
+    px
+}
+
+pub fn generate(suite: Suite, rng: &mut Rng, grid: usize, patch: usize) -> Sample {
+    match suite {
+        Suite::Math500 => {
+            // single-digit modular addition: learnable by the sim models in
+            // a few thousand steps on the 1-core testbed (DESIGN.md §5)
+            let a = rng.below(10);
+            let b = rng.below(10);
+            Sample {
+                suite,
+                prompt: format!("{a}+{b}="),
+                answer: format!("{}", (a + b) % 10),
+                pixels: None,
+            }
+        }
+        Suite::Aime => {
+            // harder: exact 3-term sum — multi-digit answers compound
+            // per-token errors, the "hard reasoning" analogue
+            let a = rng.below(10);
+            let b = rng.below(10);
+            let c = rng.below(10);
+            Sample {
+                suite,
+                prompt: format!("{a}+{b}+{c}="),
+                answer: format!("{}", a + b + c),
+                pixels: None,
+            }
+        }
+        Suite::Lcb => {
+            let n = 4 + rng.below(2);
+            let digits: Vec<u8> = (0..n).map(|_| rng.below(10) as u8).collect();
+            let s: String = digits.iter().map(|d| (b'0' + d) as char).collect();
+            if rng.bool(0.5) {
+                let mut v = digits.clone();
+                v.sort();
+                Sample {
+                    suite,
+                    prompt: format!("sort:{s}="),
+                    answer: v.iter().map(|d| (b'0' + d) as char).collect(),
+                    pixels: None,
+                }
+            } else {
+                Sample {
+                    suite,
+                    prompt: format!("rev:{s}="),
+                    answer: s.chars().rev().collect(),
+                    pixels: None,
+                }
+            }
+        }
+        Suite::SciCode => {
+            let n = 4 + rng.below(2);
+            let digits: Vec<u8> = (0..n).map(|_| rng.below(10) as u8).collect();
+            let s: String = digits.iter().map(|d| (b'0' + d) as char).collect();
+            if rng.bool(0.5) {
+                let mut v = digits.clone();
+                v.sort();
+                v.reverse();
+                Sample {
+                    suite,
+                    prompt: format!("dsrt:{s}="),
+                    answer: v.iter().map(|d| (b'0' + d) as char).collect(),
+                    pixels: None,
+                }
+            } else {
+                Sample {
+                    suite,
+                    prompt: format!("inc:{s}="),
+                    answer: digits.iter().map(|d| (b'0' + (d + 1) % 10) as char).collect(),
+                    pixels: None,
+                }
+            }
+        }
+        Suite::Gpqa => {
+            let keys = pick_letters(rng, 3);
+            let vals: Vec<usize> = (0..3).map(|_| rng.below(10)).collect();
+            let q = rng.below(3);
+            let ctx: Vec<String> =
+                keys.iter().zip(&vals).map(|(k, v)| format!("{k}={v}")).collect();
+            Sample {
+                suite,
+                prompt: format!("{};{}?", ctx.join(";"), keys[q]),
+                answer: format!("{}", vals[q]),
+                pixels: None,
+            }
+        }
+        Suite::AaLcr => {
+            // Fill most of the context window with KV pairs.
+            let n = 7;
+            let keys = pick_letters(rng, n);
+            let vals: Vec<usize> = (0..n).map(|_| rng.below(10)).collect();
+            let q = rng.below(n);
+            let ctx: Vec<String> =
+                keys.iter().zip(&vals).map(|(k, v)| format!("{k}={v}")).collect();
+            Sample {
+                suite,
+                prompt: format!("{};{}?", ctx.join(";"), keys[q]),
+                answer: format!("{}", vals[q]),
+                pixels: None,
+            }
+        }
+        Suite::Ifeval => {
+            let a = rng.below(10);
+            let b = rng.below(10);
+            Sample {
+                suite,
+                prompt: format!("fmt:{a}+{b}="),
+                answer: format!("[{}]", (a + b) % 10),
+                pixels: None,
+            }
+        }
+        // --- vision suites ------------------------------------------------
+        Suite::DocVqa => {
+            let cells = rand_cells(rng, grid);
+            let r = rng.below(grid);
+            let c = rng.below(grid);
+            Sample {
+                suite,
+                prompt: format!("cell{r}{c}="),
+                answer: format!("{}", cells[r * grid + c]),
+                pixels: Some(render_grid(&cells, grid, patch)),
+            }
+        }
+        Suite::InfoVqa => {
+            let cells = rand_cells(rng, grid);
+            let r = rng.below(grid);
+            let sum: usize = (0..grid).map(|c| cells[r * grid + c] as usize).sum();
+            Sample {
+                suite,
+                prompt: format!("rsum{r}="),
+                answer: format!("{}", sum % 10),
+                pixels: Some(render_grid(&cells, grid, patch)),
+            }
+        }
+        Suite::ChartQa => {
+            let cells = rand_cells(rng, grid);
+            let c = rng.below(grid);
+            let mx = (0..grid).map(|r| cells[r * grid + c]).max().unwrap();
+            Sample {
+                suite,
+                prompt: format!("cmax{c}="),
+                answer: format!("{mx}"),
+                pixels: Some(render_grid(&cells, grid, patch)),
+            }
+        }
+        Suite::Ai2d => {
+            let cells = rand_cells(rng, grid);
+            let r = rng.below(grid);
+            let k = rng.below(8) as u8;
+            let cnt = (0..grid).filter(|&c| cells[r * grid + c] > k).count();
+            Sample {
+                suite,
+                prompt: format!("cnt{r}>{k}="),
+                answer: format!("{cnt}"),
+                pixels: Some(render_grid(&cells, grid, patch)),
+            }
+        }
+        Suite::OcrBench => {
+            let cells = rand_cells(rng, grid);
+            let r = rng.below(grid);
+            let row: String =
+                (0..grid).map(|c| (b'0' + cells[r * grid + c]) as char).collect();
+            Sample {
+                suite,
+                prompt: format!("read{r}="),
+                answer: row,
+                pixels: Some(render_grid(&cells, grid, patch)),
+            }
+        }
+        Suite::TextVqa => {
+            let cells = rand_cells(rng, grid);
+            let (r1, c1) = (rng.below(grid), rng.below(grid));
+            let (r2, c2) = (rng.below(grid), rng.below(grid));
+            let a = cells[r1 * grid + c1];
+            let b = cells[r2 * grid + c2];
+            let ans = if a < b { "<" } else if a > b { ">" } else { "=" };
+            Sample {
+                suite,
+                prompt: format!("cmp{r1}{c1},{r2}{c2}="),
+                answer: ans.to_string(),
+                pixels: Some(render_grid(&cells, grid, patch)),
+            }
+        }
+    }
+}
+
+fn rand_cells(rng: &mut Rng, grid: usize) -> Vec<u8> {
+    (0..grid * grid).map(|_| rng.below(10) as u8).collect()
+}
+
+fn pick_letters(rng: &mut Rng, n: usize) -> Vec<char> {
+    let mut letters: Vec<char> = ('a'..='z').collect();
+    rng.shuffle(&mut letters);
+    letters.truncate(n);
+    letters
+}
+
+/// Corrupt an answer (cold-start SFT data quality knob): flip one digit.
+pub fn corrupt_answer(answer: &str, rng: &mut Rng) -> String {
+    let chars: Vec<char> = answer.chars().collect();
+    let digit_positions: Vec<usize> = chars
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.is_ascii_digit())
+        .map(|(i, _)| i)
+        .collect();
+    if digit_positions.is_empty() {
+        return answer.to_string();
+    }
+    let pos = *rng.choice(&digit_positions);
+    let old = chars[pos] as u8 - b'0';
+    let new = (old + 1 + rng.below(9) as u8) % 10;
+    let mut out = chars;
+    out[pos] = (b'0' + new) as char;
+    out.into_iter().collect()
+}
+
+/// Tokenized training/eval row: BOS prompt SEP answer EOS PAD…, with the
+/// loss mask covering the answer span + EOS (the *label* positions — see
+/// python/compile/steps.py `_shift`).
+pub fn build_row(sample: &Sample, answer: &str, seq_len: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut tokens = vec![tok::PAD; seq_len];
+    let mut mask = vec![0f32; seq_len];
+    let p = tok::encode(&sample.prompt);
+    let a = tok::encode(answer);
+    let mut i = 0;
+    tokens[i] = tok::BOS;
+    i += 1;
+    for &t in &p {
+        if i >= seq_len - 2 {
+            break;
+        }
+        tokens[i] = t;
+        i += 1;
+    }
+    tokens[i] = tok::SEP;
+    i += 1;
+    for &t in &a {
+        if i >= seq_len - 1 {
+            break;
+        }
+        tokens[i] = t;
+        mask[i] = 1.0;
+        i += 1;
+    }
+    tokens[i] = tok::EOS;
+    mask[i] = 1.0;
+    (tokens, mask)
+}
+
+/// Extract the prompt region (BOS..=SEP) of a row, for generation.
+pub fn prompt_tokens(sample: &Sample, seq_len: usize) -> Vec<i32> {
+    let p = tok::encode(&sample.prompt);
+    let mut out = Vec::with_capacity(p.len() + 2);
+    out.push(tok::BOS);
+    out.extend(p.iter().take(seq_len - 3));
+    out.push(tok::SEP);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(1234)
+    }
+
+    #[test]
+    fn all_text_suites_generate_and_fit() {
+        let mut r = rng();
+        for &s in TEXT_SUITES {
+            for _ in 0..50 {
+                let smp = generate(s, &mut r, 4, 16);
+                assert!(smp.pixels.is_none());
+                let (tokens, mask) = build_row(&smp, &smp.answer, 64);
+                assert_eq!(tokens.len(), 64);
+                assert!(mask.iter().sum::<f32>() >= 1.0, "{s:?}");
+                // round trip: decode must contain the answer
+                let decoded = tok::decode(&tokens);
+                assert!(decoded.contains(&smp.answer), "{s:?} {decoded} {}", smp.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn vision_suites_generate_pixels() {
+        let mut r = rng();
+        for &s in VISION_SUITES {
+            let smp = generate(s, &mut r, 4, 16);
+            let px = smp.pixels.as_ref().unwrap();
+            assert_eq!(px.len(), 4 * 4 * 16);
+            assert!(px.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn answers_verifiable() {
+        let mut r = rng();
+        // math500 correctness
+        let s = generate(Suite::Math500, &mut r, 4, 16);
+        let parts: Vec<usize> = s
+            .prompt
+            .trim_end_matches('=')
+            .split('+')
+            .map(|x| x.parse().unwrap())
+            .collect();
+        assert_eq!(s.answer, format!("{}", (parts[0] + parts[1]) % 100));
+    }
+
+    #[test]
+    fn scoring_exact_and_format() {
+        assert_eq!(Suite::Math500.score("42", "42"), 1.0);
+        assert_eq!(Suite::Math500.score("42", " 42 "), 1.0);
+        assert_eq!(Suite::Math500.score("42", "41"), 0.0);
+        assert_eq!(Suite::Ifeval.score("[9]", "[7]"), 1.0); // format-only
+        assert_eq!(Suite::Ifeval.score("[9]", "9"), 0.0);
+    }
+
+    #[test]
+    fn corrupt_changes_digits() {
+        let mut r = rng();
+        let mut changed = 0;
+        for _ in 0..50 {
+            let c = corrupt_answer("42", &mut r);
+            assert_eq!(c.len(), 2);
+            if c != "42" {
+                changed += 1;
+            }
+        }
+        assert_eq!(changed, 50); // digit flip always produces a different digit
+    }
+
+    #[test]
+    fn mask_covers_answer_and_eos_only() {
+        let s = Sample {
+            suite: Suite::Math500,
+            prompt: "1+2=".into(),
+            answer: "3".into(),
+            pixels: None,
+        };
+        let (tokens, mask) = build_row(&s, &s.answer, 16);
+        // BOS 1 + 2 = SEP 3 EOS -> positions 0..7
+        assert_eq!(tokens[0], tok::BOS);
+        assert_eq!(tokens[5], tok::SEP);
+        assert_eq!(mask.iter().sum::<f32>(), 2.0); // "3" and EOS
+        assert_eq!(mask[6], 1.0);
+        assert_eq!(mask[7], 1.0);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for &s in TEXT_SUITES {
+            let x = generate(s, &mut a, 4, 16);
+            let y = generate(s, &mut b, 4, 16);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn suite_name_round_trip() {
+        for &s in TEXT_SUITES.iter().chain(VISION_SUITES) {
+            assert_eq!(Suite::from_name(s.name()), Some(s));
+        }
+    }
+}

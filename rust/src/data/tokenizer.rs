@@ -1,0 +1,116 @@
+//! Symbolic tokenizer shared with the compile path.
+//!
+//! The vocabulary is fixed (64 ids, matching python/compile/configs.py —
+//! the manifest records the size and the engine asserts it at load). Ids:
+//!   0..3   specials: PAD BOS EOS SEP
+//!   4..13  digits 0-9
+//!   14..39 letters a-z
+//!   40..   operators / punctuation (see `SYMBOLS`)
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+
+pub const DIGIT0: i32 = 4;
+pub const LETTER_A: i32 = 14;
+pub const SYMBOL0: i32 = 40;
+
+/// Symbol characters mapped to ids 40.. in order.
+pub const SYMBOLS: &[char] = &[
+    '+', '-', '*', '=', '/', '(', ')', '[', ']', '{', '}', '<', '>', ',', '.', ':', ';', '?',
+    '!', ' ', '|', '&', '^', '%',
+];
+
+pub const VOCAB: usize = 64;
+
+/// Encode one char; None if unmappable.
+pub fn encode_char(c: char) -> Option<i32> {
+    match c {
+        '0'..='9' => Some(DIGIT0 + (c as i32 - '0' as i32)),
+        'a'..='z' => Some(LETTER_A + (c as i32 - 'a' as i32)),
+        _ => SYMBOLS.iter().position(|&s| s == c).map(|i| SYMBOL0 + i as i32),
+    }
+}
+
+/// Decode one id; '\u{fffd}' for specials/out-of-range.
+pub fn decode_id(id: i32) -> char {
+    match id {
+        d if (DIGIT0..DIGIT0 + 10).contains(&d) => (b'0' + (d - DIGIT0) as u8) as char,
+        l if (LETTER_A..LETTER_A + 26).contains(&l) => (b'a' + (l - LETTER_A) as u8) as char,
+        s if (SYMBOL0..SYMBOL0 + SYMBOLS.len() as i32).contains(&s) => {
+            SYMBOLS[(s - SYMBOL0) as usize]
+        }
+        _ => '\u{fffd}',
+    }
+}
+
+/// Encode a string; panics on unmappable chars (task generators only emit
+/// vocabulary chars — a panic here is a bug, not a data error).
+pub fn encode(s: &str) -> Vec<i32> {
+    s.chars()
+        .map(|c| encode_char(c).unwrap_or_else(|| panic!("unencodable char {c:?} in {s:?}")))
+        .collect()
+}
+
+/// Decode ids to a string, stopping at EOS and skipping PAD/BOS/SEP.
+pub fn decode(ids: &[i32]) -> String {
+    let mut out = String::new();
+    for &id in ids {
+        if id == EOS {
+            break;
+        }
+        if id == PAD || id == BOS || id == SEP {
+            continue;
+        }
+        out.push(decode_id(id));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_ascii() {
+        let s = "12+34=abc sort:x,y";
+        let ids = encode(s);
+        assert_eq!(decode(&ids), s);
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        for c in "0123456789abcdefghijklmnopqrstuvwxyz".chars() {
+            let id = encode_char(c).unwrap();
+            assert!((4..VOCAB as i32).contains(&id), "{c} -> {id}");
+        }
+        for &c in SYMBOLS {
+            let id = encode_char(c).unwrap();
+            assert!((SYMBOL0..VOCAB as i32).contains(&id), "{c} -> {id}");
+        }
+    }
+
+    #[test]
+    fn ids_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for c in "0123456789abcdefghijklmnopqrstuvwxyz".chars() {
+            assert!(seen.insert(encode_char(c).unwrap()));
+        }
+        for &c in SYMBOLS {
+            assert!(seen.insert(encode_char(c).unwrap()), "{c}");
+        }
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let ids = vec![BOS, DIGIT0 + 1, EOS, DIGIT0 + 2];
+        assert_eq!(decode(&ids), "1");
+    }
+
+    #[test]
+    fn unencodable_is_none() {
+        assert_eq!(encode_char('@'), None);
+        assert_eq!(encode_char('Z'), None);
+    }
+}

@@ -1,0 +1,53 @@
+//! Distribution-level evaluation: mean KL(teacher‖student) and CE vs labels
+//! over held-out batches, via the `eval_*` artifacts — Table 1's two
+//! columns.
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use crate::data::{BatchFactory, SourceSpec};
+use crate::runtime::{Engine, ModelRuntime};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DistMetrics {
+    pub kl: f64,
+    pub ce: f64,
+    pub tokens: f64,
+}
+
+/// Run the eval artifact over `n_batches` from a held-out source and
+/// aggregate exactly (token-weighted sums).
+pub fn eval_distribution(
+    engine: &Engine,
+    rt: &ModelRuntime,
+    eval_key: &str,
+    student: &[f32],
+    teacher: &[f32],
+    factory: &mut BatchFactory,
+    spec: &SourceSpec,
+    n_batches: usize,
+) -> Result<DistMetrics> {
+    let exe = rt.exe(eval_key)?;
+    let s_buf = rt.upload_params(student)?;
+    let t_buf = rt.upload_params(teacher)?;
+    let mut kl_sum = 0f64;
+    let mut ce_sum = 0f64;
+    let mut n_tok = 0f64;
+    for _ in 0..n_batches {
+        let batch = factory.batch_from_spec(spec, None)?;
+        let tokens = rt.upload_tokens(&batch)?;
+        let mask = rt.upload_mask(&batch)?;
+        let px = rt.upload_pixels(&batch)?;
+        let mut args: Vec<&PjRtBuffer> = vec![&s_buf, &t_buf, &tokens, &mask];
+        if let Some(p) = px.as_ref() {
+            args.push(p);
+        }
+        let out = engine.run_b(&exe, &args)?;
+        let m = engine.download_f32(&out, engine.manifest.n_scalars)?;
+        // [kl_mean, ce_mean, n, kl_sum, ce_sum, ...]
+        kl_sum += m[3] as f64;
+        ce_sum += m[4] as f64;
+        n_tok += m[2] as f64;
+    }
+    Ok(DistMetrics { kl: kl_sum / n_tok.max(1.0), ce: ce_sum / n_tok.max(1.0), tokens: n_tok })
+}

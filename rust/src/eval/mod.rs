@@ -1,0 +1,10 @@
+//! Evaluation layer: temperature/top-p sampling, benchmark suites with the
+//! paper's k-runs protocol, and distribution metrics (KL / CE).
+
+pub mod metrics;
+pub mod sampler;
+pub mod suite;
+
+pub use metrics::{eval_distribution, DistMetrics};
+pub use sampler::{sample_token, SampleCfg, Sampler, TeacherGenerator};
+pub use suite::{run_suite, run_suites, EvalCfg, SuiteResult};

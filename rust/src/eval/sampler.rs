@@ -1,0 +1,293 @@
+//! Temperature / top-p sampling over a `fwd` artifact — the generation
+//! engine behind RL rollouts, teacher-generated training data, and the
+//! sampling-based benchmark evaluation (paper §3.4: T=0.6 top-p=0.95 for
+//! the LLMs, T=1.0 top-p=1.0 for Nemotron-3-Nano).
+//!
+//! The fwd artifacts have a fixed (B, S) input; generation is incremental:
+//! one forward pass per emitted position over the whole batch, sampling
+//! each row's next token from the logits at its own frontier. Rows finish
+//! independently at EOS.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+use xla::{PjRtBuffer, PjRtLoadedExecutable};
+
+use crate::data::sources::ResponseGenerator;
+use crate::data::tokenizer as tok;
+use crate::runtime::{Engine, ModelEntry, ModelRuntime};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SampleCfg {
+    pub temperature: f32,
+    pub top_p: f32,
+    pub max_new: usize,
+    pub seed: u64,
+}
+
+impl Default for SampleCfg {
+    fn default() -> Self {
+        // Paper default for the LLM evals.
+        SampleCfg { temperature: 0.6, top_p: 0.95, max_new: 12, seed: 0 }
+    }
+}
+
+impl SampleCfg {
+    pub fn nano3() -> Self {
+        SampleCfg { temperature: 1.0, top_p: 1.0, max_new: 12, seed: 0 }
+    }
+
+    pub fn greedy() -> Self {
+        SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 12, seed: 0 }
+    }
+}
+
+/// Sampler bound to one fwd artifact of one model. The weights buffer
+/// (params vector or full train state, depending on the artifact) is passed
+/// per call so the RL loop can sample from the live device state.
+pub struct Sampler {
+    pub model: ModelEntry,
+    exe: Rc<PjRtLoadedExecutable>,
+    pub cfg: SampleCfg,
+    rng: Rng,
+}
+
+impl Sampler {
+    /// `fwd_key`: "fwd_bf16" | "fwd_nvfp4" | "fwd_bf16_state" | ...
+    pub fn new(rt: &ModelRuntime, fwd_key: &str, cfg: SampleCfg) -> Result<Sampler> {
+        Ok(Sampler {
+            model: rt.model.clone(),
+            exe: rt.exe(fwd_key)?,
+            cfg,
+            rng: Rng::new(cfg.seed ^ 0x5a5a_1234),
+        })
+    }
+
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::new(seed ^ 0x5a5a_1234);
+    }
+
+    /// Generate completions for up to `batch` prompts (shorter slices are
+    /// padded with dummy rows). Returns full rows (prompt + completion),
+    /// PAD-tailed, one per input prompt.
+    pub fn generate(
+        &mut self,
+        engine: &Engine,
+        weights: &PjRtBuffer,
+        prompts: &[Vec<i32>],
+        pixels: Option<&[f32]>,
+    ) -> Result<Vec<Vec<i32>>> {
+        let (b, s, v) = (self.model.batch, self.model.seq_len, self.model.vocab);
+        if prompts.is_empty() || prompts.len() > b {
+            bail!("need 1..={b} prompts, got {}", prompts.len());
+        }
+        let mut tokens = vec![tok::PAD; b * s];
+        let mut frontier = vec![0usize; b]; // next position to fill per row
+        for (i, p) in prompts.iter().enumerate() {
+            let n = p.len().min(s - 1);
+            tokens[i * s..i * s + n].copy_from_slice(&p[..n]);
+            frontier[i] = n;
+        }
+        // Dummy rows for the padded tail of the batch.
+        for f in frontier.iter_mut().skip(prompts.len()) {
+            *f = s; // already "done"
+        }
+        let mut done = vec![false; b];
+        for (i, d) in done.iter_mut().enumerate() {
+            *d = frontier[i] >= s;
+        }
+
+        let px_buf = match (self.model.vision, pixels) {
+            (true, Some(px)) => Some(engine.upload_f32(
+                px,
+                &[b, self.model.vision_grid * self.model.vision_grid, self.model.vision_patch],
+            )?),
+            (true, None) => bail!("VLM sampler requires pixels"),
+            _ => None,
+        };
+
+        for _ in 0..self.cfg.max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let tok_buf = engine.upload_i32(&tokens, &[b, s])?;
+            let mut args: Vec<&PjRtBuffer> = vec![weights, &tok_buf];
+            if let Some(px) = px_buf.as_ref() {
+                args.push(px);
+            }
+            let out = engine.run_b(&self.exe, &args)?;
+            let logits = engine.download_f32(&out, b * s * v)?;
+            for i in 0..prompts.len() {
+                if done[i] {
+                    continue;
+                }
+                let pos = frontier[i];
+                // logits at position pos-1 predict the token at pos
+                let row = &logits[(i * s + pos - 1) * v..(i * s + pos) * v];
+                let next = self.sample_from(row);
+                tokens[i * s + pos] = next;
+                frontier[i] += 1;
+                if next == tok::EOS || frontier[i] >= s {
+                    done[i] = true;
+                }
+            }
+        }
+        Ok((0..prompts.len())
+            .map(|i| tokens[i * s..(i + 1) * s].to_vec())
+            .collect())
+    }
+
+    /// Sample one token id from a logits row under temperature/top-p.
+    fn sample_from(&mut self, logits: &[f32]) -> i32 {
+        sample_token(&self.cfg, &mut self.rng, logits)
+    }
+}
+
+/// The sampling math itself (free function — unit-tested without PJRT).
+pub fn sample_token(cfg: &SampleCfg, rng: &mut Rng, logits: &[f32]) -> i32 {
+    if cfg.temperature <= 0.0 {
+        // greedy
+        let mut best = 0usize;
+        for (i, &l) in logits.iter().enumerate() {
+            if l > logits[best] {
+                best = i;
+            }
+        }
+        return best as i32;
+    }
+    let inv_t = 1.0 / cfg.temperature;
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<(usize, f64)> = logits
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| (i, (((l - mx) * inv_t) as f64).exp()))
+        .collect();
+    let z: f64 = probs.iter().map(|(_, p)| p).sum();
+    for p in probs.iter_mut() {
+        p.1 /= z;
+    }
+    // top-p nucleus
+    if cfg.top_p < 1.0 {
+        probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut cum = 0.0;
+        let mut cut = probs.len();
+        for (idx, (_, p)) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= cfg.top_p as f64 {
+                cut = idx + 1;
+                break;
+            }
+        }
+        probs.truncate(cut);
+    }
+    let weights: Vec<f64> = probs.iter().map(|(_, p)| *p).collect();
+    let pick = rng.weighted(&weights);
+    probs[pick].0 as i32
+}
+
+/// Adapter: a Sampler + fixed weights buffer acts as the teacher-side
+/// `ResponseGenerator` for the generation-backed data sources (Table 5).
+pub struct TeacherGenerator<'a> {
+    pub engine: &'a Engine,
+    pub sampler: Sampler,
+    pub weights: PjRtBuffer,
+}
+
+impl<'a> TeacherGenerator<'a> {
+    pub fn new(
+        engine: &'a Engine,
+        rt: &ModelRuntime,
+        fwd_key: &str,
+        weights: &[f32],
+        cfg: SampleCfg,
+    ) -> Result<TeacherGenerator<'a>> {
+        let sampler = Sampler::new(rt, fwd_key, cfg)?;
+        let weights = engine.upload_f32(weights, &[weights.len()])?;
+        Ok(TeacherGenerator { engine, sampler, weights })
+    }
+}
+
+impl ResponseGenerator for TeacherGenerator<'_> {
+    fn complete(
+        &mut self,
+        prompts: &[Vec<i32>],
+        pixels: Option<&[f32]>,
+        seq_len: usize,
+    ) -> Result<Vec<(Vec<i32>, Vec<f32>)>> {
+        let b = self.model_batch();
+        let mut out = Vec::with_capacity(prompts.len());
+        for chunk in prompts.chunks(b) {
+            let rows = self
+                .sampler
+                .generate(self.engine, &self.weights, chunk, pixels)?;
+            for (p, row) in chunk.iter().zip(rows) {
+                let mut mask = vec![0f32; seq_len];
+                for (j, m) in mask.iter_mut().enumerate().take(seq_len).skip(p.len()) {
+                    // response region: everything generated up to and incl. EOS
+                    if row[j] != tok::PAD {
+                        *m = 1.0;
+                    }
+                }
+                out.push((row, mask));
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl TeacherGenerator<'_> {
+    fn model_batch(&self) -> usize {
+        self.sampler.model.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(cfg: &SampleCfg, seed: u64, logits: &[f32]) -> i32 {
+        let mut rng = Rng::new(seed);
+        sample_token(cfg, &mut rng, logits)
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        assert_eq!(sample(&SampleCfg::greedy(), 0, &[0.0, 5.0, 1.0]), 1);
+        assert_eq!(sample(&SampleCfg::greedy(), 1, &[2.0, -5.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let cfg = SampleCfg { temperature: 1.0, top_p: 1.0, max_new: 4, seed: 3 };
+        let mut rng = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..300 {
+            seen.insert(sample_token(&cfg, &mut rng, &[1.0, 1.0, 1.0, -100.0]));
+        }
+        assert!(seen.contains(&0) && seen.contains(&1) && seen.contains(&2));
+        assert!(!seen.contains(&3)); // effectively zero probability
+    }
+
+    #[test]
+    fn top_p_cuts_tail() {
+        let cfg = SampleCfg { temperature: 1.0, top_p: 0.5, max_new: 4, seed: 9 };
+        let mut rng = Rng::new(9);
+        // One dominant token (p ~ 0.87) — nucleus at 0.5 keeps only it.
+        for _ in 0..100 {
+            assert_eq!(sample_token(&cfg, &mut rng, &[3.0, 0.0, 0.0, 0.0]), 0);
+        }
+    }
+
+    #[test]
+    fn low_temperature_sharpens() {
+        let hot = SampleCfg { temperature: 2.0, top_p: 1.0, max_new: 4, seed: 5 };
+        let cold = SampleCfg { temperature: 0.1, top_p: 1.0, max_new: 4, seed: 5 };
+        let logits = [1.0f32, 0.0, 0.0, 0.0];
+        let count = |cfg: &SampleCfg| {
+            let mut rng = Rng::new(11);
+            (0..500).filter(|_| sample_token(cfg, &mut rng, &logits) == 0).count()
+        };
+        assert!(count(&cold) > count(&hot));
+    }
+}

@@ -1,0 +1,131 @@
+//! Benchmark harness: the paper's evaluation protocol (§3.4) over the sim
+//! suites — k sampling runs per problem, exact-match (or instruction
+//! compliance) scoring, averaged accuracy.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+use xla::PjRtBuffer;
+
+use super::sampler::{SampleCfg, Sampler};
+use crate::data::tasks::{self, Suite};
+use crate::runtime::{Engine, ModelRuntime};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub suite: Suite,
+    pub accuracy: f64,
+    pub n_problems: usize,
+    pub k_runs: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EvalCfg {
+    pub n_problems: usize,
+    pub k_runs: usize,
+    pub sample: SampleCfg,
+    /// Seed for the *problem set* (fixed across methods for comparability).
+    pub problem_seed: u64,
+}
+
+impl Default for EvalCfg {
+    fn default() -> Self {
+        EvalCfg { n_problems: 32, k_runs: 3, sample: SampleCfg::default(), problem_seed: 20_250_101 }
+    }
+}
+
+/// Evaluate one suite with `weights` through the given fwd artifact.
+pub fn run_suite(
+    engine: &Engine,
+    rt: &ModelRuntime,
+    fwd_key: &str,
+    weights: &PjRtBuffer,
+    suite: Suite,
+    cfg: &EvalCfg,
+) -> Result<SuiteResult> {
+    let mut sampler = Sampler::new(rt, fwd_key, cfg.sample)?;
+    let m = &rt.model;
+    // Fixed problem set per (suite, seed): every method sees the same exams.
+    let mut prng = Rng::new(cfg.problem_seed ^ (suite.name().len() as u64) << 17 ^ hash_name(suite.name()));
+    let problems: Vec<tasks::Sample> = (0..cfg.n_problems)
+        .map(|_| tasks::generate(suite, &mut prng, m.vision_grid, m.vision_patch))
+        .collect();
+
+    let mut total = 0.0;
+    let mut count = 0usize;
+    let b = m.batch;
+    let px_len = m.vision_grid * m.vision_grid * m.vision_patch;
+    for k in 0..cfg.k_runs {
+        sampler.reseed(cfg.sample.seed ^ (k as u64 * 0x9e37) ^ hash_name(suite.name()));
+        for chunk in problems.chunks(b) {
+            let prompts: Vec<Vec<i32>> = chunk
+                .iter()
+                .map(|s| tasks::prompt_tokens(s, m.seq_len))
+                .collect();
+            let pixels: Option<Vec<f32>> = if m.vision {
+                let mut px = Vec::with_capacity(b * px_len);
+                for s in chunk {
+                    px.extend(s.pixels.as_deref().unwrap_or(&vec![0.0; px_len]));
+                }
+                // pad to full batch
+                px.resize(b * px_len, 0.0);
+                Some(px)
+            } else {
+                None
+            };
+            let rows = sampler.generate(engine, weights, &prompts, pixels.as_deref())?;
+            for ((sample, prompt), row) in chunk.iter().zip(&prompts).zip(rows) {
+                let generated = crate::data::sources::decode_response(&row, prompt);
+                total += sample.suite.score(&sample.answer, &generated);
+                count += 1;
+            }
+        }
+    }
+    Ok(SuiteResult {
+        suite,
+        accuracy: 100.0 * total / count.max(1) as f64,
+        n_problems: cfg.n_problems,
+        k_runs: cfg.k_runs,
+    })
+}
+
+/// Evaluate several suites; returns suite-name -> accuracy.
+pub fn run_suites(
+    engine: &Engine,
+    rt: &ModelRuntime,
+    fwd_key: &str,
+    weights: &[f32],
+    suites: &[Suite],
+    cfg: &EvalCfg,
+) -> Result<BTreeMap<String, f64>> {
+    let wbuf = engine.upload_f32(weights, &[weights.len()])?;
+    let mut out = BTreeMap::new();
+    for &suite in suites {
+        let r = run_suite(engine, rt, fwd_key, &wbuf, suite, cfg)?;
+        out.insert(suite.name().to_string(), r.accuracy);
+    }
+    Ok(out)
+}
+
+fn hash_name(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_cfg_defaults_match_protocol() {
+        let c = EvalCfg::default();
+        assert_eq!(c.sample.temperature, 0.6);
+        assert_eq!(c.sample.top_p, 0.95);
+        assert!(c.k_runs >= 1);
+    }
+
+    #[test]
+    fn hash_name_distinct() {
+        assert_ne!(hash_name("math500"), hash_name("aime"));
+    }
+}

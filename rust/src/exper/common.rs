@@ -1,0 +1,193 @@
+//! Shared experiment context: engine, teacher cache, recovery/eval helpers,
+//! and the sim↔paper column mappings used by the table drivers.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::{
+    get_or_train_teacher, pipeline, run_method, Method, PipelineScale, RecoveryCfg,
+};
+use crate::data::{SourceKind, SourceSpec, Suite};
+use crate::eval::{run_suite, EvalCfg, SampleCfg};
+use crate::runtime::{Engine, ModelRuntime};
+use crate::util::args::Args;
+
+/// An evaluation column: paper benchmark label → sim suite + problem-seed
+/// offset (AIME24 vs AIME25 are the same sim suite with different exams).
+#[derive(Clone, Debug)]
+pub struct Col {
+    pub label: &'static str,
+    pub suite: Suite,
+    pub seed_offset: u64,
+}
+
+pub fn col(label: &'static str, suite: Suite) -> Col {
+    Col { label, suite, seed_offset: 0 }
+}
+
+pub fn col_seeded(label: &'static str, suite: Suite, seed_offset: u64) -> Col {
+    Col { label, suite, seed_offset }
+}
+
+pub struct Ctx {
+    pub engine: Engine,
+    pub runs: PathBuf,
+    pub scale: PipelineScale,
+    pub eval: EvalCfg,
+    /// Default recovery step budget (tables override per experiment).
+    pub recover_steps: usize,
+}
+
+impl Ctx {
+    pub fn from_args(args: &Args) -> Result<Ctx> {
+        let engine = Engine::new(&PathBuf::from(args.get_or("artifacts", "artifacts")))?;
+        let quick = args.bool("quick");
+        let mut eval = EvalCfg::default();
+        eval.n_problems = args.usize_or("n", if quick { 12 } else { 40 });
+        eval.k_runs = args.usize_or("k", if quick { 1 } else { 3 });
+        Ok(Ctx {
+            engine,
+            runs: PathBuf::from(args.get_or("runs", "runs")),
+            scale: PipelineScale(args.f64_or("scale", if quick { 0.08 } else { 1.0 })),
+            eval,
+            recover_steps: args.usize_or("steps", if quick { 60 } else { 400 }),
+        })
+    }
+
+    pub fn report_dir(&self) -> PathBuf {
+        self.runs.join("report")
+    }
+
+    pub fn teacher(&self, model: &str) -> Result<Vec<f32>> {
+        get_or_train_teacher(&self.engine, model, &self.runs, self.scale)
+    }
+
+    pub fn rt(&self, model: &str) -> Result<ModelRuntime<'_>> {
+        ModelRuntime::new(&self.engine, model)
+    }
+
+    /// Eval sampling config per model (paper §3.4: nano3 uses T=1.0/top-p 1).
+    pub fn sample_cfg(&self, model: &str) -> SampleCfg {
+        if model == "nano3-sim" {
+            SampleCfg::nano3()
+        } else {
+            SampleCfg::default()
+        }
+    }
+
+    /// The default recovery data per model — mirrors paper §3.2:
+    /// SFT-heavy models use their (clean) SFT mixture; ace uses only its
+    /// cold-start SFT data; nano3 uses cold-start SFT + RL generations.
+    pub fn recovery_data(&self, model: &str) -> Vec<SourceSpec> {
+        let suites = pipeline::train_suites(model);
+        match model {
+            "ace-sim" => vec![SourceSpec::sft_quality(suites, 0.7)],
+            "nano3-sim" => vec![
+                SourceSpec::sft_quality(suites, 0.7).with_weight(0.5),
+                SourceSpec {
+                    kind: SourceKind::RlGenerated,
+                    suites: pipeline::rl_suites(model).to_vec(),
+                    weight: 0.5,
+                },
+            ],
+            _ => vec![SourceSpec::sft(suites)],
+        }
+    }
+
+    /// Default per-model recovery LR (paper §3.4 scaled to the sim).
+    pub fn recovery_lr(&self, model: &str) -> f64 {
+        if pipeline::is_rl_heavy(model) {
+            3e-4 // paper: RL-heavy models want larger QAD LRs
+        } else {
+            1e-4
+        }
+    }
+
+    pub fn recovery_cfg(&self, model: &str) -> RecoveryCfg {
+        let mut cfg = RecoveryCfg::new(
+            self.recovery_data(model),
+            self.recovery_lr(model),
+            self.recover_steps,
+        );
+        cfg.eval = self.eval;
+        cfg.teacher_sample = self.sample_cfg(model);
+        cfg
+    }
+
+    /// Run a recovery method and return the student weights.
+    pub fn recover(
+        &self,
+        rt: &ModelRuntime,
+        method: Method,
+        teacher: &[f32],
+        cfg: &RecoveryCfg,
+    ) -> Result<Vec<f32>> {
+        Ok(run_method(&self.engine, rt, method, teacher, cfg)?.params)
+    }
+
+    /// Evaluate weights over labelled columns (per-column problem seeds).
+    pub fn eval_cols(
+        &self,
+        rt: &ModelRuntime,
+        method: Method,
+        params: &[f32],
+        cols: &[Col],
+    ) -> Result<BTreeMap<&'static str, f64>> {
+        let wbuf = self.engine.upload_f32(params, &[params.len()])?;
+        let mut out = BTreeMap::new();
+        for c in cols {
+            let mut ecfg = self.eval;
+            ecfg.sample = self.sample_cfg(&rt.model.name);
+            ecfg.problem_seed = ecfg.problem_seed.wrapping_add(c.seed_offset);
+            let r = run_suite(&self.engine, rt, method.fwd_key(), &wbuf, c.suite, &ecfg)?;
+            out.insert(c.label, r.accuracy);
+        }
+        Ok(out)
+    }
+
+    /// Standard method row: name + accuracy cells in column order.
+    pub fn method_row(
+        &self,
+        label: &str,
+        cols: &[Col],
+        accs: &BTreeMap<&'static str, f64>,
+        paper: &[f64],
+    ) -> Vec<String> {
+        let mut row = vec![label.to_string()];
+        for (i, c) in cols.iter().enumerate() {
+            let m = accs.get(c.label).copied().unwrap_or(f64::NAN);
+            let p = paper.get(i).copied();
+            row.push(super::report::cell(m, p));
+        }
+        row
+    }
+}
+
+/// Method lists used by several tables.
+pub const STANDARD_METHODS: &[Method] = &[Method::Bf16, Method::Ptq, Method::Qat, Method::Qad];
+
+/// Run PTQ/QAT/QAD/BF16 for one model over given columns; returns
+/// method → (column → accuracy).
+pub fn run_standard_methods(
+    ctx: &Ctx,
+    model: &str,
+    cols: &[Col],
+    cfg_override: Option<RecoveryCfg>,
+) -> Result<Vec<(Method, BTreeMap<&'static str, f64>)>> {
+    let teacher = ctx.teacher(model)?;
+    let rt = ctx.rt(model)?;
+    let cfg = cfg_override.unwrap_or_else(|| ctx.recovery_cfg(model));
+    let mut out = Vec::new();
+    for &m in STANDARD_METHODS {
+        let params = match m {
+            Method::Bf16 | Method::Ptq => teacher.clone(),
+            _ => ctx.recover(&rt, m, &teacher, &cfg)?,
+        };
+        let accs = ctx.eval_cols(&rt, m, &params, cols)?;
+        eprintln!("  [{model}] {}: {accs:?}", m.name());
+        out.push((m, accs));
+    }
+    Ok(out)
+}

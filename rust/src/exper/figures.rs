@@ -1,0 +1,110 @@
+//! Figure 1 — the quantitative content of the paper's QAT-vs-QAD schematic:
+//! measured training curves of KL-vs-teacher and CE-vs-labels for both
+//! methods (CSV series under runs/report/figure1.csv).
+//!
+//! Figure 2 — QAT/QAD vs *native quantized training*: the nqt_nvfp4 step
+//! also quantizes the gradient path (Wgrad/Dgrad proxy); compare recovery
+//! quality and per-step cost.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::common::{col, col_seeded, Ctx};
+use super::report::TableReport;
+use crate::coordinator::{pipeline, Method, Trainer};
+use crate::data::{shape_for, BatchFactory, SourceSpec, Suite};
+use crate::eval::eval_distribution;
+use crate::runtime::DeviceState;
+use crate::util::CsvWriter;
+
+pub fn run_figure1(ctx: &Ctx) -> Result<TableReport> {
+    let model = "super-sim";
+    let teacher = ctx.teacher(model)?;
+    let rt = ctx.rt(model)?;
+    let suites = pipeline::train_suites(model);
+    let spec = SourceSpec::sft(suites);
+    let shape = shape_for(&rt.model);
+    let cfg = ctx.recovery_cfg(model);
+    let segments = 8usize;
+    let seg_steps = (cfg.train.steps / segments).max(5);
+
+    let mut csv = CsvWriter::create(
+        &ctx.report_dir().join("figure1.csv"),
+        &["method", "step", "train_loss", "kl_vs_teacher", "ce_vs_labels"],
+    )?;
+    let mut report = TableReport::new(
+        "figure1",
+        "QAT vs QAD training dynamics (KL to teacher / CE to labels)",
+        &["Method", "step", "KL vs teacher", "CE vs labels"],
+    );
+
+    for (method, step_key) in [(Method::Qat, "qat_nvfp4"), (Method::Qad, "qad_nvfp4")] {
+        let mut factory = BatchFactory::new(shape, vec![spec.clone()], 0xf16);
+        let teacher_buf = rt.upload_params(&teacher)?;
+        let mut state = DeviceState::from_params(&rt, &teacher)?;
+        let trainer = Trainer::new(&ctx.engine, &rt);
+        let mut seg_cfg = cfg.train.clone();
+        seg_cfg.steps = seg_steps;
+        seg_cfg.val_every = 0;
+        seg_cfg.log_every = seg_steps;
+        for seg in 0..segments {
+            let log = trainer.train(step_key, &mut state, &mut factory, Some(&teacher_buf), None, &seg_cfg)?;
+            let params = state.params()?;
+            let mut vf = BatchFactory::new(shape, vec![spec.clone()], 0xe7a1);
+            let m = eval_distribution(
+                &ctx.engine, &rt, "eval_nvfp4", &params, &teacher, &mut vf, &spec, 4,
+            )?;
+            let step = (seg + 1) * seg_steps;
+            csv.row_f64(
+                method.name(),
+                &[step as f64, log.final_loss, m.kl, m.ce],
+            )?;
+            if seg == segments - 1 || seg == segments / 2 - 1 {
+                report.row(vec![
+                    method.name().into(),
+                    format!("{step}"),
+                    format!("{:.4}", m.kl),
+                    format!("{:.3}", m.ce),
+                ]);
+            }
+            eprintln!("  [figure1] {} step {step}: kl={:.4} ce={:.3}", method.name(), m.kl, m.ce);
+        }
+    }
+    report.note("full series in runs/report/figure1.csv");
+    report.note("expected shape: QAD drives KL→0; QAT lowers CE but leaves KL high (distribution drift)");
+    Ok(report)
+}
+
+pub fn run_figure2(ctx: &Ctx) -> Result<TableReport> {
+    let model = "ace-sim";
+    let teacher = ctx.teacher(model)?;
+    let rt = ctx.rt(model)?;
+    let cols = vec![
+        col_seeded("AIME24", Suite::Aime, 24),
+        col_seeded("AIME25", Suite::Aime, 25),
+        col("LCB", Suite::Lcb),
+    ];
+    let mut report = TableReport::new(
+        "figure2",
+        "Quantization placement: fwd-only (QAT/QAD) vs fwd+grad (native-QT proxy)",
+        &["Variant", "AIME24", "AIME25", "LCB", "ms/step"],
+    );
+    let cfg = ctx.recovery_cfg(model);
+    for method in [Method::Qad, Method::Qat, Method::Nqt] {
+        let t0 = Instant::now();
+        let params = ctx.recover(&rt, method, &teacher, &cfg)?;
+        let ms = t0.elapsed().as_millis() as f64 / cfg.train.steps as f64;
+        let accs = ctx.eval_cols(&rt, method, &params, &cols)?;
+        eprintln!("  [figure2] {}: {accs:?} {ms:.0}ms/step", method.name());
+        let mut row = vec![method.name().to_string()];
+        for c in &cols {
+            row.push(format!("{:.1}", accs[c.label]));
+        }
+        row.push(format!("{ms:.0}"));
+        report.row(row);
+    }
+    report.note("native-QT proxy quantizes the gradient vector (Wgrad/Dgrad stand-in, DESIGN.md)");
+    report.note("expected shape: fwd-only recovery ≥ fwd+grad; QAD best");
+    Ok(report)
+}

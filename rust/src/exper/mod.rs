@@ -1,0 +1,111 @@
+//! Experiment harness: one driver per paper table/figure (DESIGN.md §4).
+//!
+//! `qadx table <n>` regenerates one table; `qadx all-tables` runs the full
+//! evaluation section. Reports are printed and saved to runs/report/.
+
+pub mod common;
+pub mod figures;
+pub mod report;
+pub mod t01_alignment;
+pub mod t02_t03_heavy;
+pub mod t04_t05_data;
+pub mod t06_t07_lr;
+pub mod t08_t11;
+pub mod t12_size;
+
+use anyhow::{bail, Result};
+
+use crate::util::args::Args;
+use crate::util::Timer;
+use common::Ctx;
+use report::TableReport;
+
+pub fn run_table(ctx: &Ctx, n: usize) -> Result<TableReport> {
+    Ok(match n {
+        1 => t01_alignment::run(ctx)?,
+        2 => t02_t03_heavy::run_table2(ctx)?,
+        3 => t02_t03_heavy::run_table3(ctx)?,
+        4 => t04_t05_data::run_table4(ctx)?,
+        5 => t04_t05_data::run_table5(ctx)?,
+        6 => t06_t07_lr::run_table6(ctx)?,
+        7 => t06_t07_lr::run_table7(ctx)?,
+        8 => t08_t11::run_table8(ctx)?,
+        9 => t08_t11::run_table9(ctx)?,
+        10 => t08_t11::run_table10(ctx)?,
+        11 => t08_t11::run_table11(ctx)?,
+        12 => t12_size::run(ctx)?,
+        other => bail!("no table {other} (1..=12)"),
+    })
+}
+
+pub fn run_figure(ctx: &Ctx, n: usize) -> Result<TableReport> {
+    Ok(match n {
+        1 => figures::run_figure1(ctx)?,
+        2 => figures::run_figure2(ctx)?,
+        other => bail!("no figure {other} (1..=2)"),
+    })
+}
+
+pub fn run_table_cmd(args: &Args) -> Result<()> {
+    let n: usize = args
+        .positional
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("usage: qadx table <1..12>"))?;
+    let ctx = Ctx::from_args(args)?;
+    let timer = Timer::start(&format!("table{n}"));
+    let rep = run_table(&ctx, n)?;
+    rep.print();
+    rep.save(&ctx.report_dir())?;
+    eprintln!("{}", timer.report());
+    Ok(())
+}
+
+pub fn run_figure_cmd(args: &Args) -> Result<()> {
+    let n: usize = args
+        .positional
+        .get(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("usage: qadx figure <1|2>"))?;
+    let ctx = Ctx::from_args(args)?;
+    let rep = run_figure(&ctx, n)?;
+    rep.print();
+    rep.save(&ctx.report_dir())?;
+    Ok(())
+}
+
+pub fn run_all_tables(args: &Args) -> Result<()> {
+    let ctx = Ctx::from_args(args)?;
+    let total = Timer::start("all-tables");
+    let only: Option<Vec<usize>> =
+        args.get("only").map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect());
+    let selected = |n: usize| only.as_ref().map(|f| f.contains(&n)).unwrap_or(true);
+    for n in 1..=12 {
+        if !selected(n) {
+            continue;
+        }
+        let timer = Timer::start(&format!("table{n}"));
+        match run_table(&ctx, n) {
+            Ok(rep) => {
+                rep.print();
+                rep.save(&ctx.report_dir())?;
+            }
+            Err(e) => eprintln!("table{n} FAILED: {e:#}"),
+        }
+        eprintln!("{}", timer.report());
+    }
+    for n in 1..=2 {
+        if !selected(100 + n) {
+            continue;
+        }
+        match run_figure(&ctx, n) {
+            Ok(rep) => {
+                rep.print();
+                rep.save(&ctx.report_dir())?;
+            }
+            Err(e) => eprintln!("figure{n} FAILED: {e:#}"),
+        }
+    }
+    eprintln!("{}", total.report());
+    Ok(())
+}

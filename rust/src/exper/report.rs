@@ -1,0 +1,92 @@
+//! Table/figure report type: paper rows next to measured rows, printed as a
+//! fixed-width table and saved under runs/report/.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::format_table;
+
+#[derive(Debug, Clone)]
+pub struct TableReport {
+    pub id: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes (paper-vs-sim caveats, substitutions).
+    pub notes: Vec<String>,
+}
+
+impl TableReport {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> TableReport {
+        TableReport {
+            id: id.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+            notes: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        let headers: Vec<&str> = self.headers.iter().map(|s| s.as_str()).collect();
+        out.push_str(&format_table(&headers, &self.rows));
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Save `<dir>/<id>.txt` and `<dir>/<id>.csv`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.txt", self.id)), self.render())?;
+        let mut csv = self.headers.join(",") + "\n";
+        for r in &self.rows {
+            csv.push_str(&r.join(","));
+            csv.push('\n');
+        }
+        std::fs::write(dir.join(format!("{}.csv", self.id)), csv)?;
+        Ok(())
+    }
+}
+
+/// Format an accuracy cell: "measured (paper P)".
+pub fn cell(measured: f64, paper: Option<f64>) -> String {
+    match paper {
+        Some(p) => format!("{measured:.1} (paper {p})"),
+        None => format!("{measured:.1}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_save() {
+        let mut t = TableReport::new("t00", "demo", &["method", "acc"]);
+        t.row(vec!["QAD".into(), cell(93.25, Some(94.6))]);
+        t.note("sim-scale");
+        let s = t.render();
+        assert!(s.contains("t00") && s.contains("93.2 (paper 94.6)") && s.contains("note:"));
+        let dir = std::env::temp_dir().join("qadx_report_test");
+        t.save(&dir).unwrap();
+        assert!(dir.join("t00.txt").exists());
+        assert!(dir.join("t00.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

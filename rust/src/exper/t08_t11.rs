@@ -1,0 +1,169 @@
+//! Table 8  — KL-divergence vs MSE distillation loss (ace-sim + nano-sim)
+//! Table 9  — original-size teacher vs larger teacher (nano-sim ← super-sim)
+//! Table 10 — VLM: single-stage SFT model, QAT ≈ QAD (Appendix A)
+//! Table 11 — Nemotron-3-Nano data-composition ablation (Appendix B)
+
+use anyhow::Result;
+
+use super::common::{col, col_seeded, run_standard_methods, Col, Ctx};
+use super::report::TableReport;
+use crate::coordinator::{run_method, Method};
+use crate::data::{shape_for, BatchFactory, SourceKind, SourceSpec, Suite, VISION_SUITES};
+use crate::runtime::DeviceState;
+
+pub fn run_table8(ctx: &Ctx) -> Result<TableReport> {
+    let mut report = TableReport::new(
+        "table8",
+        "KL divergence vs MSE distillation loss",
+        &["Model", "Loss", "GPQA-D", "AIME24", "AIME25", "LCB"],
+    );
+    let cols = vec![
+        col("GPQA-D", Suite::Gpqa),
+        col_seeded("AIME24", Suite::Aime, 24),
+        col_seeded("AIME25", Suite::Aime, 25),
+        col("LCB", Suite::Lcb),
+    ];
+    let paper: [(&str, [[f64; 4]; 2]); 2] = [
+        ("ace-sim", [[f64::NAN, 71.7, 62.0, 53.3], [f64::NAN, 71.7, 60.1, 52.4]]),
+        ("nano-sim", [[62.7, 80.4, 71.5, 67.8], [60.3, 80.0, 71.5, 66.7]]),
+    ];
+    for (model, rows) in paper {
+        let teacher = ctx.teacher(model)?;
+        let rt = ctx.rt(model)?;
+        let cfg = ctx.recovery_cfg(model);
+        for (mi, method) in [Method::Qad, Method::Mse].into_iter().enumerate() {
+            let params = ctx.recover(&rt, method, &teacher, &cfg)?;
+            let accs = ctx.eval_cols(&rt, method, &params, &cols)?;
+            eprintln!("  [table8] {model} {}: {accs:?}", method.name());
+            let label = if method == Method::Qad { "KL-Div" } else { "MSE" };
+            let mut row = vec![model.to_string(), label.to_string()];
+            for (j, c) in cols.iter().enumerate() {
+                let p = rows[mi][j];
+                row.push(super::report::cell(
+                    accs[c.label],
+                    if p.is_nan() { None } else { Some(p) },
+                ));
+            }
+            report.row(row);
+        }
+    }
+    report.note("expected shape: KL ≥ MSE on most columns");
+    Ok(report)
+}
+
+pub fn run_table9(ctx: &Ctx) -> Result<TableReport> {
+    let model = "nano-sim";
+    let teacher = ctx.teacher(model)?; // the model's own BF16 teacher ("9B")
+    let big_teacher = ctx.teacher("super-sim")?; // larger-family teacher ("12B")
+    let rt = ctx.rt(model)?;
+    let cols = vec![
+        col_seeded("AIME24", Suite::Aime, 24),
+        col_seeded("AIME25", Suite::Aime, 25),
+        col("LCB", Suite::Lcb),
+    ];
+    let mut report = TableReport::new(
+        "table9",
+        "Distilling from the original vs a larger teacher",
+        &["Teacher", "AIME24", "AIME25", "LCB"],
+    );
+
+    // Own teacher: the standard QAD path.
+    let cfg = ctx.recovery_cfg(model);
+    let own = ctx.recover(&rt, Method::Qad, &teacher, &cfg)?;
+    let own_accs = ctx.eval_cols(&rt, Method::Qad, &own, &cols)?;
+    report.row(ctx.method_row("own BF16 (9B-sim)", &cols, &own_accs, &[80.4, 71.5, 67.8]));
+
+    // Larger teacher: the qad_nvfp4_xsuper artifact takes super-sim params.
+    // run_method drives the standard artifact, so drive this one manually.
+    let shape = shape_for(&rt.model);
+    let mut factory = BatchFactory::new(shape, cfg.data.clone(), 0x7e);
+    let t_buf = ctx.engine.upload_f32(&big_teacher, &[big_teacher.len()])?;
+    let mut state = DeviceState::from_params(&rt, &teacher)?;
+    let trainer = crate::coordinator::Trainer::new(&ctx.engine, &rt);
+    trainer.train("qad_nvfp4_xsuper", &mut state, &mut factory, Some(&t_buf), None, &cfg.train)?;
+    let big = state.params()?;
+    let big_accs = ctx.eval_cols(&rt, Method::Qad, &big, &cols)?;
+    report.row(ctx.method_row("larger BF16 (12B-sim)", &cols, &big_accs, &[80.2, 69.8, 66.7]));
+
+    report.note("expected shape: own-teacher ≥ larger-teacher (matching a different distribution needs more data)");
+    Ok(report)
+}
+
+pub fn run_table10(ctx: &Ctx) -> Result<TableReport> {
+    let cols: Vec<Col> = VISION_SUITES
+        .iter()
+        .map(|&s| col(Box::leak(s.name().to_string().into_boxed_str()), s))
+        .collect();
+    let mut report = TableReport::new(
+        "table10",
+        "VLM (single-stage SFT): QAT ≈ QAD (Appendix A)",
+        &["Method", "ai2d", "chartqa", "docvqa", "infovqa", "ocrbench", "textvqa"],
+    );
+    let paper: [(&str, [f64; 6]); 4] = [
+        ("Baseline", [87.3, 89.7, 94.3, 79.3, 85.5, 85.2]),
+        ("PTQ", [86.8, 89.6, 93.8, 78.2, 85.0, 84.8]),
+        ("QAT", [86.5, 89.8, 93.7, 78.3, 84.8, 84.8]),
+        ("QAD", [86.7, 89.4, 93.9, 78.4, 85.8, 85.2]),
+    ];
+    let results = run_standard_methods(ctx, "vl-sim", &cols, None)?;
+    for ((_, accs), (label, p)) in results.iter().zip(&paper) {
+        report.row(ctx.method_row(label, &cols, accs, p));
+    }
+    report.note("paper OCRBench /1000 quoted as /10; expected shape: all four rows close (small PTQ gap)");
+    Ok(report)
+}
+
+pub fn run_table11(ctx: &Ctx) -> Result<TableReport> {
+    let model = "nano3-sim";
+    let teacher = ctx.teacher(model)?;
+    let rt = ctx.rt(model)?;
+    let cols = vec![
+        col("AA-LCR", Suite::AaLcr),
+        col_seeded("AIME25", Suite::Aime, 25),
+        col("GPQA-D", Suite::Gpqa),
+        col("LCB-v5", Suite::Lcb),
+        col("SciCode", Suite::SciCode),
+    ];
+    let mut report = TableReport::new(
+        "table11",
+        "Nemotron-3-Nano data-composition ablation (Appendix B)",
+        &["Training data", "AA-LCR", "AIME25", "GPQA-D", "LCB-v5", "SciCode"],
+    );
+    let bf = ctx.eval_cols(&rt, Method::Bf16, &teacher, &cols)?;
+    report.row(ctx.method_row("BF16 Baseline", &cols, &bf, &[35.9, 89.1, 73.0, 72.1, 33.0]));
+    let ptq = ctx.eval_cols(&rt, Method::Ptq, &teacher, &cols)?;
+    report.row(ctx.method_row("NVFP4 PTQ", &cols, &ptq, &[31.3, 85.0, 71.6, 68.9, 30.5]));
+
+    let suites = crate::coordinator::pipeline::train_suites(model);
+    let rl = crate::coordinator::pipeline::rl_suites(model);
+    let variants: [(&str, Vec<SourceSpec>, [f64; 5]); 3] = [
+        (
+            "SFT data",
+            vec![SourceSpec::sft_quality(suites, 0.7)],
+            [32.6, 86.0, 72.7, 70.0, 31.7],
+        ),
+        (
+            "Generated from RL prompts",
+            vec![SourceSpec { kind: SourceKind::RlGenerated, suites: rl.to_vec(), weight: 1.0 }],
+            [34.0, 82.7, 73.9, 70.4, 33.1],
+        ),
+        (
+            "SFT+RL generations mixture",
+            vec![
+                SourceSpec::sft_quality(suites, 0.7).with_weight(0.5),
+                SourceSpec { kind: SourceKind::RlGenerated, suites: rl.to_vec(), weight: 0.5 },
+            ],
+            [34.3, 87.9, 72.7, 68.9, 32.3],
+        ),
+    ];
+    for (label, data, paper) in variants {
+        let mut cfg = ctx.recovery_cfg(model);
+        cfg.data = data;
+        let outcome = run_method(&ctx.engine, &rt, Method::Qad, &teacher, &cfg)?;
+        let accs = ctx.eval_cols(&rt, Method::Qad, &outcome.params, &cols)?;
+        eprintln!("  [table11] {label}: {accs:?}");
+        report.row(ctx.method_row(label, &cols, &accs, &paper));
+    }
+    report.note("expected shape: all three sources land near-BF16 — QAD robust to data composition");
+    Ok(report)
+}

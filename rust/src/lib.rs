@@ -1,0 +1,19 @@
+//! qadx — Quantization-Aware Distillation for NVFP4 inference accuracy
+//! recovery: a three-layer Rust + JAX + Pallas reproduction.
+//!
+//! Layer map (see DESIGN.md):
+//! * L1 (Pallas kernels) and L2 (JAX model/step graphs) live in
+//!   `python/compile/` and are AOT-lowered to HLO text by `make artifacts`.
+//! * L3 — this crate — owns everything at run time: the PJRT runtime
+//!   (`runtime`), the bit-exact NVFP4 substrate (`quant`), synthetic task
+//!   corpus + data sources (`data`), the post-training/distillation
+//!   coordinator (`coordinator`), sampling-based evaluation (`eval`), and
+//!   the paper-table experiment harness (`exper`).
+
+pub mod quant;
+pub mod runtime;
+pub mod util;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod exper;

@@ -1,0 +1,235 @@
+//! qadx — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   info                         manifest + artifact summary
+//!   teacher <model>              run the model's post-training pipeline
+//!   ptq <model>                  PTQ export report (compression, per-layer err)
+//!   recover <model> --method M   QAD/QAT/MSE/NQT accuracy recovery
+//!   eval <model> --method M      benchmark a method's weights
+//!   pilot                        scaled-down end-to-end sanity run
+//!   table <N> | all-tables       regenerate paper tables (exper harness)
+//!   figure <1|2>                 regenerate paper figures (CSV curves)
+//!
+//! Common flags: --artifacts DIR (default artifacts/), --runs DIR (default
+//! runs/), --scale F (teacher pipeline step scale), --n / --k (eval size).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use qadx::coordinator::{self, Method, PipelineScale, RecoveryCfg};
+use qadx::data::Suite;
+use qadx::data::SourceSpec;
+use qadx::eval::EvalCfg;
+use qadx::exper;
+use qadx::runtime::{Engine, ModelRuntime};
+use qadx::util::args::Args;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn engine(args: &Args) -> anyhow::Result<Engine> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    Engine::new(&dir)
+}
+
+fn runs_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("runs", "runs"))
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(args),
+        "teacher" => teacher(args),
+        "ptq" => ptq(args),
+        "recover" => recover(args),
+        "eval" => eval_cmd(args),
+        "pilot" => pilot(args),
+        "table" => exper::run_table_cmd(args),
+        "all-tables" => exper::run_all_tables(args),
+        "figure" => exper::run_figure_cmd(args),
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "qadx — NVFP4 QAD reproduction
+usage: qadx <info|teacher|ptq|recover|eval|pilot|table|all-tables|figure> [flags]
+see rust/src/main.rs header for flags";
+
+fn info(args: &Args) -> anyhow::Result<()> {
+    let engine = engine(args)?;
+    let m = &engine.manifest;
+    println!("vocab={} scalars={:?}", m.vocab, m.scalar_names);
+    for (name, e) in &m.models {
+        println!(
+            "{name}: d={} blocks={:?} params={} state={} quant={}/{} skip(attn={},first={},last={}) artifacts={}",
+            e.d_model,
+            e.blocks,
+            e.param_count,
+            e.state_len,
+            e.quant.weights,
+            e.quant.impl_,
+            e.quant.skip_attention,
+            e.quant.skip_first,
+            e.quant.skip_last,
+            e.artifacts.len()
+        );
+    }
+    Ok(())
+}
+
+fn teacher(args: &Args) -> anyhow::Result<()> {
+    let engine = engine(args)?;
+    let model = args.positional.get(1).map(|s| s.as_str()).unwrap_or("ace-sim");
+    let scale = PipelineScale(args.f64_or("scale", 1.0));
+    let params = coordinator::get_or_train_teacher(&engine, model, &runs_dir(args), scale)?;
+    println!("teacher[{model}]: {} params cached", params.len());
+    Ok(())
+}
+
+fn ptq(args: &Args) -> anyhow::Result<()> {
+    let engine = engine(args)?;
+    let model = args.positional.get(1).map(|s| s.as_str()).unwrap_or("ace-sim");
+    let scale = PipelineScale(args.f64_or("scale", 1.0));
+    let teacher = coordinator::get_or_train_teacher(&engine, model, &runs_dir(args), scale)?;
+    let rt = ModelRuntime::new(&engine, model)?;
+    let report = coordinator::ptq_report(&rt, &teacher);
+    println!("PTQ export for {model} (NVFP4, block 16, E4M3 scales):");
+    for (name, err, bytes) in &report.layers {
+        if *err > 0.0 {
+            println!("  {name:<12} rel_err={err:.4} bytes={bytes}");
+        }
+    }
+    println!(
+        "total: {} B (f32 {} B) — compression {:.2}x",
+        report.total_bytes_nvfp4,
+        report.total_bytes_f32,
+        report.compression_ratio()
+    );
+    Ok(())
+}
+
+fn parse_method(s: &str) -> anyhow::Result<Method> {
+    Ok(match s {
+        "bf16" => Method::Bf16,
+        "ptq" => Method::Ptq,
+        "qat" => Method::Qat,
+        "qad" => Method::Qad,
+        "mse" => Method::Mse,
+        "nqt" => Method::Nqt,
+        other => anyhow::bail!("unknown method {other:?}"),
+    })
+}
+
+fn parse_suites(args: &Args, default: &[Suite]) -> Vec<Suite> {
+    args.get("suites")
+        .map(|s| s.split(',').filter_map(Suite::from_name).collect::<Vec<_>>())
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn recover(args: &Args) -> anyhow::Result<()> {
+    let engine = engine(args)?;
+    let model = args.positional.get(1).map(|s| s.as_str()).unwrap_or("ace-sim");
+    let method = parse_method(&args.get_or("method", "qad"))?;
+    let scale = PipelineScale(args.f64_or("scale", 1.0));
+    let teacher = coordinator::get_or_train_teacher(&engine, model, &runs_dir(args), scale)?;
+    let rt = ModelRuntime::new(&engine, model)?;
+    let suites = parse_suites(args, coordinator::pipeline::train_suites(model));
+    let cfg = RecoveryCfg::new(
+        vec![SourceSpec::sft(&suites)],
+        args.f64_or("lr", 1e-4),
+        args.usize_or("steps", 300),
+    );
+    let out = coordinator::run_method(&engine, &rt, method, &teacher, &cfg)?;
+    println!("{} trained; loss curve:", method.name());
+    for (s, l) in &out.curve {
+        println!("  step {s:>5}  loss {l:.5}");
+    }
+    let path = runs_dir(args)
+        .join("recovered")
+        .join(format!("{model}-{}.qckp", args.get_or("method", "qad")));
+    coordinator::checkpoint::save(
+        &path,
+        &out.params,
+        &qadx::util::json::Json::obj(vec![(
+            "method",
+            qadx::util::json::Json::Str(method.name().into()),
+        )]),
+    )?;
+    println!("saved {path:?}");
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> anyhow::Result<()> {
+    let engine = engine(args)?;
+    let model = args.positional.get(1).map(|s| s.as_str()).unwrap_or("ace-sim");
+    let method = parse_method(&args.get_or("method", "bf16"))?;
+    let scale = PipelineScale(args.f64_or("scale", 1.0));
+    let teacher = coordinator::get_or_train_teacher(&engine, model, &runs_dir(args), scale)?;
+    let rt = ModelRuntime::new(&engine, model)?;
+    let suites = parse_suites(args, coordinator::pipeline::train_suites(model));
+    let mut ecfg = EvalCfg::default();
+    ecfg.n_problems = args.usize_or("n", ecfg.n_problems);
+    ecfg.k_runs = args.usize_or("k", ecfg.k_runs);
+    let params = match method {
+        Method::Bf16 | Method::Ptq => teacher,
+        _ => {
+            let p = runs_dir(args)
+                .join("recovered")
+                .join(format!("{model}-{}.qckp", args.get_or("method", "qad")));
+            coordinator::checkpoint::load(&p)?
+        }
+    };
+    let accs = coordinator::eval_method(&engine, &rt, method, &params, &suites, &ecfg)?;
+    println!("{} on {model} (n={}, k={}):", method.name(), ecfg.n_problems, ecfg.k_runs);
+    for (s, a) in accs {
+        println!("  {s:<16} {a:6.1}");
+    }
+    Ok(())
+}
+
+/// Scaled-down end-to-end sanity run: teacher → PTQ gap → QAD/QAT recovery.
+fn pilot(args: &Args) -> anyhow::Result<()> {
+    let engine = engine(args)?;
+    let model = args.get_or("model", "ace-sim");
+    let scale = PipelineScale(args.f64_or("scale", 0.3));
+    println!("== pilot on {model} (scale {}) ==", scale.0);
+    let report = coordinator::train_teacher(&engine, &model, scale)?;
+    println!("stages: {:?}", report.stages);
+    let rt = ModelRuntime::new(&engine, &model)?;
+    let suites = parse_suites(args, &[Suite::Math500, Suite::Aime, Suite::Lcb]);
+    let mut ecfg = EvalCfg::default();
+    ecfg.n_problems = args.usize_or("n", 24);
+    ecfg.k_runs = args.usize_or("k", 2);
+
+    let bf16 = coordinator::eval_method(&engine, &rt, Method::Bf16, &report.params, &suites, &ecfg)?;
+    println!("BF16: {bf16:?}");
+    let ptq = coordinator::eval_method(&engine, &rt, Method::Ptq, &report.params, &suites, &ecfg)?;
+    println!("PTQ:  {ptq:?}");
+
+    let cfg = RecoveryCfg::new(
+        vec![SourceSpec::sft(&suites)],
+        args.f64_or("lr", 1e-4),
+        args.usize_or("steps", 200),
+    );
+    let qad = coordinator::run_method(&engine, &rt, Method::Qad, &report.params, &cfg)?;
+    println!("QAD loss curve: {:?}", qad.curve);
+    let qad_acc = coordinator::eval_method(&engine, &rt, Method::Qad, &qad.params, &suites, &ecfg)?;
+    println!("QAD:  {qad_acc:?}");
+    let qat = coordinator::run_method(&engine, &rt, Method::Qat, &report.params, &cfg)?;
+    let qat_acc = coordinator::eval_method(&engine, &rt, Method::Qat, &qat.params, &suites, &ecfg)?;
+    println!("QAT:  {qat_acc:?}");
+    Ok(())
+}

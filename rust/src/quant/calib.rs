@@ -1,0 +1,97 @@
+//! PTQ calibration: choose the per-tensor FP32 scale from calibration data.
+//!
+//! The paper's PTQ baseline uses max calibration (§2.1); we also provide
+//! percentile clipping and an MSE sweep (the "more sophisticated" methods
+//! the paper surveys) for the calibration ablation bench.
+
+use super::fp::{E2M1_MAX, E4M3_MAX};
+use super::nvfp4::{rel_error, Nvfp4Tensor};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CalibMethod {
+    /// amax / (6 * 448) — the paper's default.
+    Max,
+    /// Clip at the p-th percentile of |x| (p in tenths of a percent: 999 = 99.9%).
+    Percentile(u32),
+    /// Sweep clipping factors in [0.3, 1.0], keep the one minimizing
+    /// reconstruction MSE on the calibration tensor.
+    MseSweep,
+}
+
+/// Compute the per-tensor scale for NVFP4 from calibration samples.
+/// `rows`/`cols` describe the layout used for the error sweep.
+pub fn calibrate(x: &[f32], rows: usize, cols: usize, method: CalibMethod) -> f32 {
+    let amax = x.iter().fold(0f32, |m, v| m.max(v.abs()));
+    if amax == 0.0 {
+        return 1.0;
+    }
+    match method {
+        CalibMethod::Max => amax / (E2M1_MAX * E4M3_MAX),
+        CalibMethod::Percentile(tenths) => {
+            let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+            mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let q = (tenths as f64 / 1000.0).clamp(0.0, 1.0);
+            let idx = ((mags.len() - 1) as f64 * q).round() as usize;
+            (mags[idx].max(f32::MIN_POSITIVE)) / (E2M1_MAX * E4M3_MAX)
+        }
+        CalibMethod::MseSweep => {
+            let mut best = (f64::INFINITY, amax / (E2M1_MAX * E4M3_MAX));
+            for i in 0..15 {
+                let factor = 0.3 + 0.05 * i as f32;
+                let ts = amax * factor / (E2M1_MAX * E4M3_MAX);
+                let q = Nvfp4Tensor::quantize(x, rows, cols, Some(ts)).dequantize();
+                let err = rel_error(x, &q);
+                if err < best.0 {
+                    best = (err, ts);
+                }
+            }
+            best.1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal() as f32).collect()
+    }
+
+    #[test]
+    fn max_matches_formula() {
+        let x = randn(256, 1);
+        let amax = x.iter().fold(0f32, |m, v| m.max(v.abs()));
+        assert_eq!(calibrate(&x, 16, 16, CalibMethod::Max), amax / (6.0 * 448.0));
+    }
+
+    #[test]
+    fn percentile_clips_outliers() {
+        let mut x = randn(4096, 2);
+        x[0] = 1e6;
+        let s_max = calibrate(&x, 256, 16, CalibMethod::Max);
+        let s_p999 = calibrate(&x, 256, 16, CalibMethod::Percentile(999));
+        assert!(s_p999 < s_max / 100.0, "{s_p999} vs {s_max}");
+    }
+
+    #[test]
+    fn mse_sweep_never_worse_than_max_by_much() {
+        let x = randn(64 * 16, 3);
+        let s_mse = calibrate(&x, 64, 16, CalibMethod::MseSweep);
+        let q_max = Nvfp4Tensor::quantize(&x, 64, 16, None).dequantize();
+        let q_mse = Nvfp4Tensor::quantize(&x, 64, 16, Some(s_mse)).dequantize();
+        let e_max = rel_error(&x, &q_max);
+        let e_mse = rel_error(&x, &q_mse);
+        assert!(e_mse <= e_max + 1e-9, "mse {e_mse} max {e_max}");
+    }
+
+    #[test]
+    fn zero_input_safe() {
+        let x = vec![0f32; 64];
+        for m in [CalibMethod::Max, CalibMethod::Percentile(990), CalibMethod::MseSweep] {
+            assert_eq!(calibrate(&x, 4, 16, m), 1.0);
+        }
+    }
+}

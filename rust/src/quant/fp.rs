@@ -1,0 +1,202 @@
+//! Scalar mini-float codecs: FP8 E4M3 (fn variant) and FP4 E2M1.
+//!
+//! Encoding uses value tables + round-half-to-even-mantissa, which is
+//! definitionally correct (both formats have few enough codes to
+//! enumerate). These are cross-validated bit-exactly against the JAX
+//! oracle through the golden vectors in `artifacts/golden.json`
+//! (rust/tests/golden_cross_validation.rs).
+
+/// Maximum finite magnitude of E4M3 (fn): 0b0_1111_110 = 1.75 * 2^8.
+pub const E4M3_MAX: f32 = 448.0;
+/// Maximum magnitude of E2M1: 1.5 * 2^2.
+pub const E2M1_MAX: f32 = 6.0;
+
+/// Positive magnitudes of the E2M1 grid, indexed by the 3-bit magnitude code.
+pub const E2M1_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Decode an E4M3 (fn) byte to f32. Code 0x7f/0xff (NaN in the fn format)
+/// decodes to NaN.
+pub fn e4m3_decode(code: u8) -> f32 {
+    let sign = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((code >> 3) & 0x0f) as i32;
+    let man = (code & 0x07) as f32;
+    if exp == 0x0f && man == 7.0 {
+        return f32::NAN;
+    }
+    if exp == 0 {
+        // subnormal: m/8 * 2^-6
+        sign * (man / 8.0) * 2f32.powi(-6)
+    } else {
+        sign * (1.0 + man / 8.0) * 2f32.powi(exp - 7)
+    }
+}
+
+fn e4m3_table() -> &'static [(f32, u8)] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<Vec<(f32, u8)>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        // All non-negative finite codes, sorted by value.
+        let mut v: Vec<(f32, u8)> = (0u8..0x7f).map(|c| (e4m3_decode(c), c)).collect();
+        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        v
+    })
+}
+
+/// Encode f32 to the nearest E4M3 value (round-half-to-even mantissa),
+/// saturating at ±448. Returns the code byte.
+pub fn e4m3_encode(x: f32) -> u8 {
+    if x.is_nan() {
+        return 0x7f;
+    }
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+    let a = x.abs().min(E4M3_MAX);
+    let t = e4m3_table();
+    // Binary search for the insertion point.
+    let idx = t.partition_point(|(v, _)| *v < a);
+    let code = if idx == 0 {
+        t[0].1
+    } else if idx == t.len() {
+        t[t.len() - 1].1
+    } else {
+        let (lo_v, lo_c) = t[idx - 1];
+        let (hi_v, hi_c) = t[idx];
+        let mid = (lo_v + hi_v) * 0.5;
+        if a < mid {
+            lo_c
+        } else if a > mid {
+            hi_c
+        } else {
+            // tie: even mantissa LSB wins
+            if lo_c & 1 == 0 {
+                lo_c
+            } else {
+                hi_c
+            }
+        }
+    };
+    sign | code
+}
+
+/// Round-trip f32 through E4M3 (the "fake quant" scalar).
+pub fn e4m3_round(x: f32) -> f32 {
+    e4m3_decode(e4m3_encode(x))
+}
+
+/// Encode f32 to the nearest E2M1 magnitude code (0..7) + sign bit in bit 3.
+/// Round-half-to-even grid index, saturate at ±6.
+pub fn e2m1_encode(x: f32) -> u8 {
+    let sign = if x.is_sign_negative() { 0x8u8 } else { 0 };
+    let a = x.abs().min(E2M1_MAX);
+    let mut best = 0usize;
+    for i in 0..E2M1_GRID.len() {
+        let lo = E2M1_GRID[best];
+        let hi = E2M1_GRID[i];
+        let d_lo = (a - lo).abs();
+        let d_hi = (a - hi).abs();
+        if d_hi < d_lo || (d_hi == d_lo && i % 2 == 0) {
+            best = i;
+        }
+    }
+    sign | best as u8
+}
+
+pub fn e2m1_decode(code: u8) -> f32 {
+    let mag = E2M1_GRID[(code & 0x7) as usize];
+    if code & 0x8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+pub fn e2m1_round(x: f32) -> f32 {
+    e2m1_decode(e2m1_encode(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_exact_values() {
+        for v in [0.0f32, 1.0, -1.0, 2.0, 0.5, 448.0, -448.0, 1.5, 0.0625] {
+            assert_eq!(e4m3_round(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn e4m3_saturates() {
+        assert_eq!(e4m3_round(1e9), 448.0);
+        assert_eq!(e4m3_round(-1e9), -448.0);
+    }
+
+    #[test]
+    fn e4m3_round_trip_all_codes() {
+        for c in 0u8..=0xff {
+            let v = e4m3_decode(c);
+            if v.is_nan() {
+                continue;
+            }
+            let c2 = e4m3_encode(v);
+            assert_eq!(e4m3_decode(c2), v, "code {c:#x} -> {v} -> {c2:#x}");
+        }
+    }
+
+    #[test]
+    fn e4m3_subnormals() {
+        let min_sub = 2f32.powi(-9);
+        assert_eq!(e4m3_round(min_sub), min_sub);
+        assert_eq!(e4m3_round(min_sub * 0.4), 0.0);
+        assert_eq!(e4m3_round(min_sub * 0.6), min_sub);
+    }
+
+    #[test]
+    fn e4m3_monotone() {
+        let mut prev = f32::NEG_INFINITY;
+        for i in 0..10_000 {
+            let x = -500.0 + i as f32 * 0.1;
+            let y = e4m3_round(x);
+            assert!(y >= prev, "{x} -> {y} < {prev}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn e4m3_relative_error_bound() {
+        // normal range: 3 mantissa bits -> rel err <= 2^-4
+        let mut x = 0.02f32;
+        while x < 440.0 {
+            let y = e4m3_round(x);
+            assert!((y - x).abs() / x <= 2f32.powi(-4) + 1e-6, "{x} -> {y}");
+            x *= 1.01;
+        }
+    }
+
+    #[test]
+    fn e2m1_grid_and_ties() {
+        for (i, v) in E2M1_GRID.iter().enumerate() {
+            assert_eq!(e2m1_encode(*v) as usize, i);
+        }
+        // ties to even grid index
+        assert_eq!(e2m1_round(0.25), 0.0);
+        assert_eq!(e2m1_round(0.75), 1.0);
+        assert_eq!(e2m1_round(1.25), 1.0);
+        assert_eq!(e2m1_round(1.75), 2.0);
+        assert_eq!(e2m1_round(2.5), 2.0);
+        assert_eq!(e2m1_round(3.5), 4.0);
+        assert_eq!(e2m1_round(5.0), 4.0);
+        assert_eq!(e2m1_round(-2.5), -2.0);
+    }
+
+    #[test]
+    fn e2m1_saturates() {
+        assert_eq!(e2m1_round(100.0), 6.0);
+        assert_eq!(e2m1_round(-100.0), -6.0);
+    }
+
+    #[test]
+    fn e2m1_sign_bit() {
+        assert_eq!(e2m1_decode(e2m1_encode(-1.5)), -1.5);
+        assert_eq!(e2m1_encode(-1.5) & 0x8, 0x8);
+    }
+}

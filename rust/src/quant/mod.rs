@@ -1,0 +1,142 @@
+//! Bit-exact quantization substrate (Rust side).
+//!
+//! The JAX/Pallas kernels implement fake-quant inside the AOT'd compute
+//! graphs; this module is the *coordinator's* view of the same formats:
+//! real 4-bit packing for checkpoint export and memory accounting, PTQ
+//! calibration, per-layer error analysis, and the format baselines
+//! (MXFP4 / INT4) used by the comparison benches. Cross-validated against
+//! the JAX oracle through golden vectors (rust/tests/).
+
+pub mod baselines;
+pub mod calib;
+pub mod fp;
+pub mod nvfp4;
+
+pub use calib::CalibMethod;
+pub use nvfp4::{fake_quant, rel_error, Nvfp4Tensor};
+
+/// Quantize a whole model parameter vector layer-by-layer (PTQ weight
+/// export): 2-D weight tensors go through the NVFP4 codec along their
+/// contraction axis; 1-D tensors (norm scales, biases) stay in f32, as on
+/// real deployments.
+pub struct PtqReport {
+    /// (param name, relative Frobenius error, storage bytes)
+    pub layers: Vec<(String, f64, usize)>,
+    pub total_bytes_nvfp4: usize,
+    pub total_bytes_f32: usize,
+}
+
+impl PtqReport {
+    pub fn compression_ratio(&self) -> f64 {
+        self.total_bytes_f32 as f64 / self.total_bytes_nvfp4 as f64
+    }
+}
+
+/// Fake-quantize the weight tensors of a flat parameter vector in place,
+/// following the manifest layout. `skip` decides (by name) which tensors
+/// stay high-precision — mirrors model.py's selective quantization.
+/// Returns a per-layer error report.
+pub fn ptq_quantize_params(
+    params: &mut [f32],
+    layout: &[(String, Vec<usize>, usize, usize)],
+    skip: &dyn Fn(&str) -> bool,
+) -> PtqReport {
+    let mut layers = Vec::new();
+    let mut total_q = 0usize;
+    let mut total_f = 0usize;
+    for (name, shape, offset, size) in layout {
+        total_f += size * 4;
+        let is_matrix = shape.len() >= 2;
+        let cols = *shape.last().unwrap_or(&1);
+        // Quantize along the contraction axis: model.py quantizes w.T along
+        // K, i.e. blocks run down a column of w. Transpose here to match.
+        if !is_matrix || skip(name) || cols == 0 || size % cols != 0 {
+            total_q += size * 4;
+            layers.push((name.clone(), 0.0, size * 4));
+            continue;
+        }
+        let rows = size / cols;
+        if rows % nvfp4::BLOCK != 0 {
+            // Contraction dim not blockable — keep high precision (rare:
+            // only tiny tensors like vis_proj with patch=16 pass anyway).
+            total_q += size * 4;
+            layers.push((name.clone(), 0.0, size * 4));
+            continue;
+        }
+        let slice = &mut params[*offset..*offset + *size];
+        // transpose (rows, cols) -> (cols, rows) so blocks lie along K=rows
+        let mut t = vec![0f32; *size];
+        for r in 0..rows {
+            for c in 0..cols {
+                t[c * rows + r] = slice[r * cols + c];
+            }
+        }
+        let qt = Nvfp4Tensor::quantize(&t, cols, rows, None);
+        let deq = qt.dequantize();
+        let mut err_num = 0f64;
+        let mut err_den = 0f64;
+        for r in 0..rows {
+            for c in 0..cols {
+                let orig = slice[r * cols + c];
+                let q = deq[c * rows + r];
+                err_num += ((orig - q) as f64).powi(2);
+                err_den += (orig as f64).powi(2);
+                slice[r * cols + c] = q;
+            }
+        }
+        let rel = if err_den > 0.0 { (err_num / err_den).sqrt() } else { 0.0 };
+        total_q += qt.storage_bytes();
+        layers.push((name.clone(), rel, qt.storage_bytes()));
+    }
+    PtqReport { layers, total_bytes_nvfp4: total_q, total_bytes_f32: total_f }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn layout_2d(name: &str, rows: usize, cols: usize, off: usize) -> (String, Vec<usize>, usize, usize) {
+        (name.to_string(), vec![rows, cols], off, rows * cols)
+    }
+
+    #[test]
+    fn ptq_quantizes_matrices_skips_vectors() {
+        let mut r = Rng::new(1);
+        let rows = 32;
+        let cols = 48;
+        let mut params: Vec<f32> = (0..rows * cols + 16).map(|_| r.normal() as f32).collect();
+        let before = params.clone();
+        let layout = vec![
+            layout_2d("w", rows, cols, 0),
+            ("ln".to_string(), vec![16], rows * cols, 16),
+        ];
+        let report = ptq_quantize_params(&mut params, &layout, &|_| false);
+        // matrix changed
+        assert!(params[..rows * cols].iter().zip(&before).any(|(a, b)| a != b));
+        // vector untouched
+        assert_eq!(&params[rows * cols..], &before[rows * cols..]);
+        assert!(report.layers[0].1 > 0.0 && report.layers[0].1 < 0.2);
+        assert_eq!(report.layers[1].1, 0.0);
+    }
+
+    #[test]
+    fn skip_predicate_respected() {
+        let mut r = Rng::new(2);
+        let mut params: Vec<f32> = (0..32 * 32).map(|_| r.normal() as f32).collect();
+        let before = params.clone();
+        let layout = vec![layout_2d("b0.wq", 32, 32, 0)];
+        ptq_quantize_params(&mut params, &layout, &|n| n.contains("wq"));
+        assert_eq!(params, before);
+    }
+
+    #[test]
+    fn compression_ratio_sane() {
+        let mut r = Rng::new(3);
+        let mut params: Vec<f32> = (0..128 * 128).map(|_| r.normal() as f32).collect();
+        let layout = vec![layout_2d("w", 128, 128, 0)];
+        let report = ptq_quantize_params(&mut params, &layout, &|_| false);
+        let ratio = report.compression_ratio();
+        assert!(ratio > 6.5 && ratio < 7.5, "f32->nvfp4 should be ~7.1x, got {ratio}");
+    }
+}

@@ -1,0 +1,210 @@
+//! NVFP4 tensor codec: block-16 E2M1 values + per-block E4M3 scales +
+//! per-tensor FP32 scale, with real 4-bit packing (two codes per byte).
+//!
+//! Matches the JAX reference (python/compile/kernels/ref.py) bit-exactly —
+//! verified through golden vectors in rust/tests/. Used by the coordinator
+//! for PTQ weight export, checkpoint size accounting (the paper's ~1.8×
+//! memory-reduction claim vs FP8), and quantization-error analysis.
+
+use super::fp::{e2m1_decode, e2m1_encode, e4m3_decode, e4m3_encode, E2M1_MAX, E4M3_MAX};
+
+pub const BLOCK: usize = 16;
+
+/// A quantized tensor: packed payload + two-level scales.
+#[derive(Clone, Debug)]
+pub struct Nvfp4Tensor {
+    /// Row-major packed E2M1 codes; element 2i in low nibble, 2i+1 in high.
+    pub codes: Vec<u8>,
+    /// One E4M3 code per 16-element block, row-major.
+    pub block_scales: Vec<u8>,
+    /// Second-level FP32 scale.
+    pub tensor_scale: f32,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Per-tensor FP32 scale: maps tensor amax onto E2M1_MAX * E4M3_MAX.
+pub fn tensor_scale(x: &[f32]) -> f32 {
+    let amax = x.iter().fold(0f32, |m, v| m.max(v.abs()));
+    if amax > 0.0 {
+        amax / (E2M1_MAX * E4M3_MAX)
+    } else {
+        1.0
+    }
+}
+
+impl Nvfp4Tensor {
+    /// Quantize a (rows, cols) row-major tensor; cols must be /16.
+    /// `ts`: calibrated tensor scale, or None for dynamic (max) calibration.
+    pub fn quantize(x: &[f32], rows: usize, cols: usize, ts: Option<f32>) -> Self {
+        assert_eq!(x.len(), rows * cols, "shape mismatch");
+        assert_eq!(cols % BLOCK, 0, "cols {cols} not a multiple of {BLOCK}");
+        let ts = ts.unwrap_or_else(|| tensor_scale(x));
+        let n_blocks = rows * cols / BLOCK;
+        let mut codes = vec![0u8; (rows * cols + 1) / 2];
+        let mut block_scales = vec![0u8; n_blocks];
+        for b in 0..n_blocks {
+            let start = b * BLOCK;
+            let blk = &x[start..start + BLOCK];
+            let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
+            let raw = (amax / E2M1_MAX / ts).clamp(-E4M3_MAX, E4M3_MAX);
+            let sb_code = e4m3_encode(raw);
+            block_scales[b] = sb_code;
+            let denom = e4m3_decode(sb_code) * ts;
+            for (j, &v) in blk.iter().enumerate() {
+                let y = if denom > 0.0 { v / denom } else { 0.0 };
+                let c = e2m1_encode(y);
+                let idx = start + j;
+                if idx % 2 == 0 {
+                    codes[idx / 2] |= c;
+                } else {
+                    codes[idx / 2] |= c << 4;
+                }
+            }
+        }
+        Nvfp4Tensor { codes, block_scales, tensor_scale: ts, rows, cols }
+    }
+
+    pub fn code_at(&self, idx: usize) -> u8 {
+        let byte = self.codes[idx / 2];
+        if idx % 2 == 0 {
+            byte & 0x0f
+        } else {
+            byte >> 4
+        }
+    }
+
+    /// Dequantize back to f32 — exactly what the NVFP4 GEMM datapath sees.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let n = self.rows * self.cols;
+        let mut out = vec![0f32; n];
+        for i in 0..n {
+            // denom = sb*ts first — the exact multiplication order of the
+            // JAX oracle (bit-exactness checked by the golden tests).
+            let denom = e4m3_decode(self.block_scales[i / BLOCK]) * self.tensor_scale;
+            out[i] = e2m1_decode(self.code_at(i)) * denom;
+        }
+        out
+    }
+
+    /// Stored size in bytes: packed nibbles + E4M3 scales + f32 tensor scale.
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + self.block_scales.len() + 4
+    }
+
+    /// Effective bits per element.
+    pub fn bits_per_element(&self) -> f64 {
+        self.storage_bytes() as f64 * 8.0 / (self.rows * self.cols) as f64
+    }
+}
+
+/// One-shot fake-quant (quantize + dequantize) of a row-major tensor.
+pub fn fake_quant(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    Nvfp4Tensor::quantize(x, rows, cols, None).dequantize()
+}
+
+/// Relative Frobenius quantization error ‖q−x‖/‖x‖.
+pub fn rel_error(x: &[f32], q: &[f32]) -> f64 {
+    let num: f64 = x.iter().zip(q).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+    let den: f64 = x.iter().map(|a| (*a as f64).powi(2)).sum();
+    if den == 0.0 {
+        0.0
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal() as f32 * scale).collect()
+    }
+
+    #[test]
+    fn round_trip_error_band() {
+        let x = randn(64 * 64, 1, 1.0);
+        let q = fake_quant(&x, 64, 64);
+        let rel = rel_error(&x, &q);
+        assert!(rel > 0.03 && rel < 0.20, "rel {rel}");
+    }
+
+    #[test]
+    fn idempotent() {
+        let x = randn(32 * 32, 2, 3.0);
+        let q1 = fake_quant(&x, 32, 32);
+        let q2 = fake_quant(&q1, 32, 32);
+        for (a, b) in q1.iter().zip(&q2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_tensor() {
+        let x = vec![0f32; 256];
+        let t = Nvfp4Tensor::quantize(&x, 16, 16, None);
+        assert_eq!(t.tensor_scale, 1.0);
+        assert!(t.dequantize().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn packing_layout() {
+        // Distinct values in one block land in the right nibbles.
+        let mut x = vec![0f32; 16];
+        x[0] = 6.0;
+        x[1] = -6.0;
+        let t = Nvfp4Tensor::quantize(&x, 1, 16, None);
+        assert_eq!(t.code_at(0) & 0x7, 7); // |6| is grid idx 7
+        assert_eq!(t.code_at(1), 0x8 | 7); // negative 6
+        assert_eq!(t.code_at(2), 0);
+    }
+
+    #[test]
+    fn storage_is_about_4_5_bits() {
+        let x = randn(128 * 128, 3, 1.0);
+        let t = Nvfp4Tensor::quantize(&x, 128, 128, None);
+        let bpe = t.bits_per_element();
+        // 4 bits payload + 8/16 bits scale = 4.5 plus epsilon
+        assert!(bpe > 4.4 && bpe < 4.7, "bits/elem {bpe}");
+    }
+
+    #[test]
+    fn memory_reduction_vs_fp8() {
+        let x = randn(256 * 256, 4, 1.0);
+        let t = Nvfp4Tensor::quantize(&x, 256, 256, None);
+        let fp8_bytes = x.len(); // 1 byte/elem (ignoring fp8 scales)
+        let ratio = fp8_bytes as f64 / t.storage_bytes() as f64;
+        assert!(ratio > 1.7 && ratio < 1.9, "ratio {ratio}"); // paper: ~1.8x
+    }
+
+    #[test]
+    fn scale_equivariance() {
+        let x = randn(16 * 32, 5, 1.0);
+        let q1 = fake_quant(&x, 16, 32);
+        let xs: Vec<f32> = x.iter().map(|v| v * 1024.0).collect();
+        let q2 = fake_quant(&xs, 16, 32);
+        for (a, b) in q1.iter().zip(&q2) {
+            assert!((a * 1024.0 - b).abs() <= (b.abs() * 1e-5).max(1e-6));
+        }
+    }
+
+    #[test]
+    fn calibrated_scale_respected() {
+        let x = randn(16 * 16, 6, 1.0);
+        let t = Nvfp4Tensor::quantize(&x, 16, 16, Some(0.01));
+        assert_eq!(t.tensor_scale, 0.01);
+    }
+
+    #[test]
+    fn outlier_containment() {
+        let mut x = randn(64, 7, 1.0);
+        x[0] = 1000.0;
+        let q = fake_quant(&x, 1, 64);
+        // blocks 1..3 (elements 16..64) must keep sane error
+        let rel = rel_error(&x[16..], &q[16..]);
+        assert!(rel < 0.25, "rel {rel}");
+    }
+}

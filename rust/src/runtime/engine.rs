@@ -1,0 +1,271 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the Rust hot path. Python never runs here.
+//!
+//! Training state stays **device-resident**: every train-step artifact maps
+//! `state -> state'` as a single flat f32 array, so the output buffer of
+//! step t feeds `execute_b` of step t+1 without touching the host. Only the
+//! 8-float scalar metrics block is copied back per step
+//! (`copy_raw_to_host_sync` with an offset).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactDef, Manifest, ModelEntry};
+
+pub struct Engine {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<PathBuf, Rc<PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn load(&self, art: &ArtifactDef) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&art.file) {
+            return Ok(exe.clone());
+        }
+        let path_str = art
+            .file
+            .to_str()
+            .with_context(|| format!("non-utf8 path {:?}", art.file))?;
+        let proto = HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {:?}", art.file))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {:?}", art.file))?,
+        );
+        self.cache.borrow_mut().insert(art.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a rank-0 f32 scalar.
+    ///
+    /// Deliberately NOT `buffer_from_host_literal`: that call maps to
+    /// `BufferFromHostLiteral`, which copies *asynchronously* on a PJRT
+    /// worker thread — a temporary `Literal` would be freed mid-copy
+    /// (observed SIGSEGV in `ShapeUtil::ByteSizeOf`). `buffer_from_host_buffer`
+    /// uses `kImmutableOnlyDuringCall` semantics (synchronous copy).
+    pub fn upload_scalar(&self, v: f32) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    /// Execute with device-resident args; returns the first (only) output.
+    pub fn run_b(&self, exe: &PjRtLoadedExecutable, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
+        let mut out = exe.execute_b(args)?;
+        let replica = out.pop().context("no execution output")?;
+        replica.into_iter().next().context("empty replica output")
+    }
+
+    /// Download a full f32 buffer to the host.
+    ///
+    /// Goes through `to_literal_sync` — the TFRT CPU plugin does not
+    /// implement `CopyRawToHost`, so partial/offset reads are impossible;
+    /// small reads use dedicated slicing artifacts instead (see
+    /// `DeviceState::scalars`).
+    pub fn download_f32(&self, buf: &PjRtBuffer, len: usize) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync()?;
+        let v: Vec<f32> = lit.to_vec()?;
+        if v.len() != len {
+            bail!("downloaded {} elements, expected {}", v.len(), len);
+        }
+        Ok(v)
+    }
+}
+
+/// A host-side batch matching the artifact input layout.
+#[derive(Clone, Debug, Default)]
+pub struct Batch {
+    pub tokens: Vec<i32>,       // (B, S) row-major
+    pub mask: Vec<f32>,         // (B, S)
+    pub pixels: Option<Vec<f32>>, // (B, G*G, patch) for VLM models
+    pub advantage: Option<Vec<f32>>, // (B,) for RL steps
+}
+
+/// Per-model executable registry + shape checking.
+pub struct ModelRuntime<'e> {
+    pub engine: &'e Engine,
+    pub model: ModelEntry,
+}
+
+impl<'e> ModelRuntime<'e> {
+    pub fn new(engine: &'e Engine, model_name: &str) -> Result<ModelRuntime<'e>> {
+        let model = engine.manifest.model(model_name)?.clone();
+        Ok(ModelRuntime { engine, model })
+    }
+
+    pub fn exe(&self, key: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        self.engine.load(self.model.artifact(key)?)
+    }
+
+    /// Upload the pieces of a batch as device buffers in manifest arg order
+    /// (tokens, mask[, advantage][, pixels] — the caller interleaves state /
+    /// params / lr as required by the specific artifact).
+    pub fn upload_tokens(&self, batch: &Batch) -> Result<PjRtBuffer> {
+        let (b, s) = (self.model.batch, self.model.seq_len);
+        if batch.tokens.len() != b * s {
+            bail!("tokens len {} != {}x{}", batch.tokens.len(), b, s);
+        }
+        self.engine.upload_i32(&batch.tokens, &[b, s])
+    }
+
+    pub fn upload_mask(&self, batch: &Batch) -> Result<PjRtBuffer> {
+        let (b, s) = (self.model.batch, self.model.seq_len);
+        self.engine.upload_f32(&batch.mask, &[b, s])
+    }
+
+    pub fn upload_pixels(&self, batch: &Batch) -> Result<Option<PjRtBuffer>> {
+        if !self.model.vision {
+            return Ok(None);
+        }
+        let px = batch
+            .pixels
+            .as_ref()
+            .context("VLM model requires pixels in the batch")?;
+        let dims = [
+            self.model.batch,
+            self.model.vision_grid * self.model.vision_grid,
+            self.model.vision_patch,
+        ];
+        Ok(Some(self.engine.upload_f32(px, &dims)?))
+    }
+
+    pub fn upload_advantage(&self, batch: &Batch) -> Result<PjRtBuffer> {
+        let adv = batch.advantage.as_ref().context("RL step requires advantages")?;
+        self.engine.upload_f32(adv, &[self.model.batch])
+    }
+
+    /// Upload a parameter vector (teacher weights, PTQ weights, ...).
+    pub fn upload_params(&self, params: &[f32]) -> Result<PjRtBuffer> {
+        if params.len() != self.model.param_count {
+            bail!(
+                "params len {} != param_count {}",
+                params.len(),
+                self.model.param_count
+            );
+        }
+        self.engine.upload_f32(params, &[self.model.param_count])
+    }
+}
+
+/// Device-resident training state (the single flat vector).
+pub struct DeviceState {
+    pub buf: PjRtBuffer,
+    pub state_len: usize,
+    pub scalars_off: usize,
+    pub n_scalars: usize,
+    pub param_count: usize,
+    /// The `scalars` slicing artifact (state -> f32[8]); compiled once.
+    scalars_exe: Rc<PjRtLoadedExecutable>,
+}
+
+impl DeviceState {
+    /// Build a fresh state (params + zeroed Adam moments + zeroed scalars)
+    /// and upload it.
+    pub fn from_params(rt: &ModelRuntime, params: &[f32]) -> Result<DeviceState> {
+        let m = &rt.model;
+        if params.len() != m.param_count {
+            bail!("params len {} != {}", params.len(), m.param_count);
+        }
+        let mut state = vec![0f32; m.state_len];
+        state[..m.param_count].copy_from_slice(params);
+        Self::from_state_vec(rt, &state)
+    }
+
+    /// Upload a full pre-built state vector (checkpoint resume).
+    pub fn from_state_vec(rt: &ModelRuntime, state: &[f32]) -> Result<DeviceState> {
+        let m = &rt.model;
+        if state.len() != m.state_len {
+            bail!("state len {} != {}", state.len(), m.state_len);
+        }
+        let buf = rt.engine.upload_f32(state, &[m.state_len])?;
+        let scalars_exe = rt.engine.load(m.artifact("scalars")?)?;
+        Ok(DeviceState {
+            buf,
+            state_len: m.state_len,
+            scalars_off: m.scalars_offset(),
+            n_scalars: rt.engine.manifest.n_scalars,
+            param_count: m.param_count,
+            scalars_exe,
+        })
+    }
+
+    /// Advance: replace the device buffer with the step output.
+    pub fn advance(&mut self, new_buf: PjRtBuffer) {
+        self.buf = new_buf;
+    }
+
+    /// A sibling state viewing another buffer of the same layout (used for
+    /// scratch validation states that are dropped after reading metrics).
+    pub fn like(&self, buf: PjRtBuffer) -> DeviceState {
+        DeviceState {
+            buf,
+            state_len: self.state_len,
+            scalars_off: self.scalars_off,
+            n_scalars: self.n_scalars,
+            param_count: self.param_count,
+            scalars_exe: self.scalars_exe.clone(),
+        }
+    }
+
+    /// Read the 8-float metrics block via the device-side `scalars`
+    /// slicing artifact (cheap; never copies params to the host).
+    pub fn scalars(&self) -> Result<Vec<f32>> {
+        let mut out = self.scalars_exe.execute_b(&[&self.buf])?;
+        let replica = out.pop().context("no scalars output")?;
+        let buf = replica.into_iter().next().context("empty scalars output")?;
+        let v: Vec<f32> = buf.to_literal_sync()?.to_vec()?;
+        if v.len() != self.n_scalars {
+            bail!("scalars artifact returned {} values", v.len());
+        }
+        Ok(v)
+    }
+
+    /// Download just the parameter slice (full state copy, then truncate —
+    /// the CPU plugin has no partial reads; called only at checkpoints).
+    pub fn params(&self) -> Result<Vec<f32>> {
+        let mut full = self.full()?;
+        full.truncate(self.param_count);
+        Ok(full)
+    }
+
+    /// Download the full state (checkpointing).
+    pub fn full(&self) -> Result<Vec<f32>> {
+        let v: Vec<f32> = self.buf.to_literal_sync()?.to_vec()?;
+        if v.len() != self.state_len {
+            bail!("state download returned {} values", v.len());
+        }
+        Ok(v)
+    }
+}
+
+/// Well-known scalar slots (matches python/compile/steps.py).
+pub mod scalar {
+    pub const STEP: usize = 0;
+    pub const LOSS: usize = 1;
+    pub const KL: usize = 2;
+    pub const CE: usize = 3;
+    pub const GRAD_NORM: usize = 4;
+    pub const LR: usize = 5;
+}

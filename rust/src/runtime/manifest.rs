@@ -1,0 +1,234 @@
+//! Artifact manifest: the contract between the Python compile path
+//! (python/compile/aot.py) and the Rust coordinator. Parsed from
+//! artifacts/manifest.json.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub const SUPPORTED_VERSION: usize = 4;
+
+#[derive(Clone, Debug)]
+pub struct ArgDef {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactDef {
+    pub file: PathBuf,
+    pub args: Vec<ArgDef>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamDef {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct QuantSettings {
+    pub weights: String,
+    pub acts: String,
+    pub impl_: String,
+    pub skip_attention: bool,
+    pub skip_first: usize,
+    pub skip_last: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub blocks: Vec<String>,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub vision: bool,
+    pub vision_grid: usize,
+    pub vision_patch: usize,
+    pub param_count: usize,
+    pub state_len: usize,
+    pub quant: QuantSettings,
+    pub params: Vec<ParamDef>,
+    pub artifacts: BTreeMap<String, ArtifactDef>,
+}
+
+impl ModelEntry {
+    /// Offset of the scalar metrics block inside the state vector.
+    pub fn scalars_offset(&self) -> usize {
+        3 * self.param_count
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactDef> {
+        self.artifacts
+            .get(key)
+            .with_context(|| format!("model {} has no artifact {key:?}", self.name))
+    }
+
+    /// Selective-quantization predicate matching model.py `_block_quantized`
+    /// — used by the Rust PTQ exporter to keep the same layers at BF16.
+    pub fn param_skipped_by_selective_quant(&self, param_name: &str) -> bool {
+        if param_name == "embed" || param_name == "pos_emb" {
+            return true; // lookup tables, not GEMMs
+        }
+        let n_blocks = self.blocks.len();
+        if param_name == "head" || param_name == "ln_f" {
+            // head follows the last block's quantization decision
+            return self.quant.skip_last > 0;
+        }
+        if let Some(rest) = param_name.strip_prefix('b') {
+            if let Some((idx_s, _leaf)) = rest.split_once('.') {
+                if let Ok(i) = idx_s.parse::<usize>() {
+                    let kind = self.blocks.get(i).map(|s| s.as_str()).unwrap_or("attn");
+                    if kind == "attn" && self.quant.skip_attention {
+                        return true;
+                    }
+                    if i < self.quant.skip_first || i >= n_blocks - self.quant.skip_last {
+                        return true;
+                    }
+                    return false;
+                }
+            }
+        }
+        // vision front-end & norms handled by the 1-D rule in quant::ptq
+        false
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub vocab: usize,
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    pub sep: i32,
+    pub n_scalars: usize,
+    pub scalar_names: Vec<String>,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .context("shape not an array")?
+        .iter()
+        .map(|v| v.as_usize().unwrap_or(0))
+        .collect())
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let version = j.req_usize("version")?;
+        if version != SUPPORTED_VERSION {
+            bail!("manifest version {version} != supported {SUPPORTED_VERSION}; rebuild artifacts");
+        }
+        let special = j.req("special")?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().context("models not an object")? {
+            let quant_j = m.req("quant")?;
+            let quant = QuantSettings {
+                weights: quant_j.req_str("weights")?.to_string(),
+                acts: quant_j.req_str("acts")?.to_string(),
+                impl_: quant_j.req_str("impl")?.to_string(),
+                skip_attention: quant_j.req_bool("skip_attention")?,
+                skip_first: quant_j.req_usize("skip_first")?,
+                skip_last: quant_j.req_usize("skip_last")?,
+            };
+            let params = m
+                .req_arr("params")?
+                .iter()
+                .map(|p| -> Result<ParamDef> {
+                    Ok(ParamDef {
+                        name: p.req_str("name")?.to_string(),
+                        shape: parse_shape(p.req("shape")?)?,
+                        offset: p.req_usize("offset")?,
+                        size: p.req_usize("size")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mut artifacts = BTreeMap::new();
+            for (key, a) in m.req("artifacts")?.as_obj().context("artifacts not an object")? {
+                let args = a
+                    .req_arr("args")?
+                    .iter()
+                    .map(|arg| -> Result<ArgDef> {
+                        Ok(ArgDef {
+                            name: arg.req_str("name")?.to_string(),
+                            shape: parse_shape(arg.req("shape")?)?,
+                            dtype: arg.req_str("dtype")?.to_string(),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                artifacts.insert(
+                    key.clone(),
+                    ArtifactDef { file: artifacts_dir.join(a.req_str("file")?), args },
+                );
+            }
+            let entry = ModelEntry {
+                name: name.clone(),
+                d_model: m.req_usize("d_model")?,
+                n_heads: m.req_usize("n_heads")?,
+                d_ff: m.req_usize("d_ff")?,
+                blocks: m
+                    .req_arr("blocks")?
+                    .iter()
+                    .map(|b| b.as_str().unwrap_or("attn").to_string())
+                    .collect(),
+                vocab: m.req_usize("vocab")?,
+                seq_len: m.req_usize("seq_len")?,
+                batch: m.req_usize("batch")?,
+                vision: m.req_bool("vision")?,
+                vision_grid: m.req_usize("vision_grid")?,
+                vision_patch: m.req_usize("vision_patch")?,
+                param_count: m.req_usize("param_count")?,
+                state_len: m.req_usize("state_len")?,
+                quant,
+                params,
+                artifacts,
+            };
+            // Internal consistency.
+            let laid: usize = entry.params.iter().map(|p| p.size).sum();
+            if laid != entry.param_count {
+                bail!("model {name}: param layout sums to {laid} != param_count {}", entry.param_count);
+            }
+            if entry.state_len != 3 * entry.param_count + j.req_usize("n_scalars")? {
+                bail!("model {name}: state_len inconsistent");
+            }
+            models.insert(name.clone(), entry);
+        }
+        Ok(Manifest {
+            root: artifacts_dir.to_path_buf(),
+            vocab: j.req_usize("vocab")?,
+            pad: special.req_usize("pad")? as i32,
+            bos: special.req_usize("bos")? as i32,
+            eos: special.req_usize("eos")? as i32,
+            sep: special.req_usize("sep")? as i32,
+            n_scalars: j.req_usize("n_scalars")?,
+            scalar_names: j
+                .req_arr("scalar_names")?
+                .iter()
+                .map(|s| s.as_str().unwrap_or("").to_string())
+                .collect(),
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .with_context(|| format!("manifest has no model {name:?}"))
+    }
+}

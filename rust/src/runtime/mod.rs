@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT client wrapper + artifact manifest.
+//!
+//! `Engine` owns the PJRT CPU client and an executable cache;
+//! `ModelRuntime` binds one manifest model entry to its artifacts;
+//! `DeviceState` keeps the packed training state device-resident across
+//! steps (see python/compile/steps.py for the state layout).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{scalar, Batch, DeviceState, Engine, ModelRuntime};
+pub use manifest::{ArtifactDef, Manifest, ModelEntry, ParamDef};

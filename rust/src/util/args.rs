@@ -1,0 +1,92 @@
+//! Tiny CLI argument parser (clap is not in the offline crates cache).
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse("table 3 --lr 1e-4 --quick --out=x.csv");
+        assert_eq!(a.positional, vec!["table", "3"]);
+        assert_eq!(a.f64_or("lr", 0.0), 1e-4);
+        assert!(a.bool("quick"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("steps", 7), 7);
+        assert!(!a.bool("quick"));
+        assert_eq!(a.get_or("model", "ace-sim"), "ace-sim");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b 3");
+        assert!(a.bool("a"));
+        assert_eq!(a.usize_or("b", 0), 3);
+    }
+}

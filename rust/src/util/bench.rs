@@ -1,0 +1,99 @@
+//! Minimal benchmarking harness (criterion is not in the offline crates
+//! cache). Measures wall-clock over repeated runs, reports mean / p50 /
+//! p95 / throughput, and writes a CSV so `cargo bench` output is diffable
+//! across the §Perf iterations in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use super::{mean, percentile};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<42} {:>5} iters  mean {:>9.3} ms  p50 {:>9.3} ms  p95 {:>9.3} ms",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p95_ms
+        );
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.4},{:.4},{:.4}",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p95_ms
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warm-up runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1000.0);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean(&samples),
+        p50_ms: percentile(&samples, 50.0),
+        p95_ms: percentile(&samples, 95.0),
+    };
+    r.print();
+    r
+}
+
+/// Collects results and writes the CSV at the end.
+pub struct BenchSuite {
+    pub results: Vec<BenchResult>,
+    csv_path: std::path::PathBuf,
+}
+
+impl BenchSuite {
+    pub fn new(tag: &str) -> BenchSuite {
+        let dir = std::path::PathBuf::from("runs/bench");
+        std::fs::create_dir_all(&dir).ok();
+        BenchSuite { results: Vec::new(), csv_path: dir.join(format!("{tag}.csv")) }
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, f: F) {
+        self.results.push(bench(name, warmup, iters, f));
+    }
+
+    pub fn finish(&self) {
+        let mut csv = String::from("name,iters,mean_ms,p50_ms,p95_ms\n");
+        for r in &self.results {
+            csv.push_str(&r.csv_row());
+            csv.push('\n');
+        }
+        if let Err(e) = std::fs::write(&self.csv_path, csv) {
+            eprintln!("bench csv write failed: {e}");
+        } else {
+            println!("wrote {}", self.csv_path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ms >= 0.0 && r.p95_ms >= r.p50_ms * 0.5);
+    }
+}

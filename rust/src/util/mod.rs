@@ -1,0 +1,142 @@
+//! Small shared utilities: offline JSON, deterministic RNG, stats, timing,
+//! and CSV output for the experiment harness.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+/// Mean of a slice (0.0 for empty — callers guard when it matters).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() - 1) as f64 * p / 100.0).round() as usize;
+    v[idx]
+}
+
+/// Wall-clock timer with human-friendly reporting.
+pub struct Timer {
+    start: Instant,
+    pub label: String,
+}
+
+impl Timer {
+    pub fn start(label: &str) -> Self {
+        Timer { start: Instant::now(), label: label.to_string() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        format!("{}: {:.2}s", self.label, self.secs())
+    }
+}
+
+/// Append-only CSV writer (creates parent dirs; writes header once).
+pub struct CsvWriter {
+    file: std::fs::File,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        writeln!(self.file, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_f64(&mut self, tag: &str, fields: &[f64]) -> anyhow::Result<()> {
+        let mut v = vec![tag.to_string()];
+        v.extend(fields.iter().map(|x| format!("{x}")));
+        self.row(&v)
+    }
+}
+
+/// Format a fixed-width table (used by the experiment report printer).
+pub fn format_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        let padded: Vec<String> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:w$}", c, w = widths.get(i).copied().unwrap_or(4)))
+            .collect();
+        out.push_str("| ");
+        out.push_str(&padded.join(" | "));
+        out.push_str(" |\n");
+    };
+    line(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out.push_str("|");
+    for w in &widths {
+        out.push_str(&format!("{:-<w$}--|", "", w = w));
+    }
+    out.push('\n');
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(percentile(&[5.0, 1.0, 3.0], 50.0), 3.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn table_formatting_aligns() {
+        let t = format_table(
+            &["name", "x"],
+            &[vec!["a".into(), "1.00".into()], vec!["longer".into(), "2".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+}

@@ -1,0 +1,104 @@
+//! Bit-exact cross-validation of the Rust quant substrate against the JAX
+//! oracle (python/compile/kernels/ref.py) via artifacts/golden.json — the
+//! contract that the coordinator's PTQ packing computes exactly what the
+//! AOT'd fake-quant graphs compute.
+
+use std::path::Path;
+
+use qadx::quant::baselines::{int4_fake_quant, mxfp4_fake_quant};
+use qadx::quant::fp::{e2m1_round, e4m3_round};
+use qadx::quant::nvfp4::{tensor_scale, Nvfp4Tensor};
+use qadx::util::json::Json;
+
+fn golden() -> Option<Json> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(Json::parse(&text).expect("golden.json parses"))
+}
+
+fn vec_f32(j: &Json, key: &str) -> Vec<f32> {
+    j.req_arr(key)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+#[test]
+fn e4m3_matches_jax() {
+    let Some(g) = golden() else {
+        eprintln!("skipping: golden.json not built (run `make artifacts`)");
+        return;
+    };
+    let xin = vec_f32(&g, "e4m3_in");
+    let want = vec_f32(&g, "e4m3_out");
+    for (x, w) in xin.iter().zip(&want) {
+        let got = e4m3_round(*x);
+        assert!(
+            got == *w || (got.is_nan() && w.is_nan()),
+            "e4m3({x}) = {got}, jax says {w}"
+        );
+    }
+}
+
+#[test]
+fn e2m1_matches_jax() {
+    let Some(g) = golden() else { return };
+    let xin = vec_f32(&g, "e2m1_in");
+    let want = vec_f32(&g, "e2m1_out");
+    for (x, w) in xin.iter().zip(&want) {
+        assert_eq!(e2m1_round(*x), *w, "e2m1({x})");
+    }
+}
+
+#[test]
+fn nvfp4_codec_matches_jax() {
+    let Some(g) = golden() else { return };
+    let x = vec_f32(&g, "nvfp4_in");
+    let rows = g.req_usize("nvfp4_rows").unwrap();
+    let cols = g.req_usize("nvfp4_cols").unwrap();
+    let ts_paper = g.req("nvfp4_tensor_scale").unwrap().as_f64().unwrap() as f32;
+    assert_eq!(tensor_scale(&x), ts_paper, "tensor scale");
+
+    let q = Nvfp4Tensor::quantize(&x, rows, cols, None);
+    let deq = q.dequantize();
+    let want_deq = vec_f32(&g, "nvfp4_deq");
+    for (i, (a, b)) in deq.iter().zip(&want_deq).enumerate() {
+        assert_eq!(a, b, "dequant mismatch at {i}");
+    }
+    // codes match (golden stores signed grid values)
+    let want_codes = vec_f32(&g, "nvfp4_codes");
+    for i in 0..x.len() {
+        let code = q.code_at(i);
+        let mag = qadx::quant::fp::E2M1_GRID[(code & 7) as usize];
+        let val = if code & 8 != 0 { -mag } else { mag };
+        // jax encodes signed zero as ±0 — compare through abs for zeros
+        if want_codes[i] == 0.0 {
+            assert_eq!(mag, 0.0, "code mismatch at {i}");
+        } else {
+            assert_eq!(val, want_codes[i], "code mismatch at {i}");
+        }
+    }
+    // decoded block scales match
+    let want_scales = vec_f32(&g, "nvfp4_scales");
+    for (b, w) in want_scales.iter().enumerate() {
+        let got = qadx::quant::fp::e4m3_decode(q.block_scales[b]);
+        assert_eq!(got, *w, "block scale {b}");
+    }
+}
+
+#[test]
+fn mxfp4_and_int4_match_jax() {
+    let Some(g) = golden() else { return };
+    let x = vec_f32(&g, "nvfp4_in");
+    let rows = g.req_usize("nvfp4_rows").unwrap();
+    let cols = g.req_usize("nvfp4_cols").unwrap();
+    let mx = mxfp4_fake_quant(&x, rows, cols);
+    for (i, (a, b)) in mx.iter().zip(vec_f32(&g, "mxfp4_deq")).enumerate() {
+        assert!((a - b).abs() <= 1e-6, "mxfp4 mismatch at {i}: {a} vs {b}");
+    }
+    let i4 = int4_fake_quant(&x, rows, cols);
+    for (i, (a, b)) in i4.iter().zip(vec_f32(&g, "int4_deq")).enumerate() {
+        assert!((a - b).abs() <= 1e-5, "int4 mismatch at {i}: {a} vs {b}");
+    }
+}

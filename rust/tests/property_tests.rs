@@ -1,0 +1,269 @@
+//! Property-based tests over coordinator/data/quant invariants.
+//!
+//! `proptest` is not in the offline crates cache, so this uses the same
+//! structure by hand: seeded random-input generators sweeping hundreds of
+//! cases per invariant (no shrinking — failing seeds are printed so a case
+//! can be replayed directly).
+
+use qadx::coordinator::{merge, Checkpoint, LrSchedule, TrainCfg};
+use qadx::data::{
+    sources::decode_response, tasks, tokenizer as tok, BatchFactory, BatchShape, SourceKind,
+    SourceSpec, TEXT_SUITES, VISION_SUITES,
+};
+use qadx::quant::fp::{e2m1_round, e4m3_round};
+use qadx::quant::nvfp4::{self, Nvfp4Tensor};
+use qadx::util::json::Json;
+use qadx::util::rng::Rng;
+
+fn cases(n: usize) -> impl Iterator<Item = u64> {
+    (0..n as u64).map(|i| 0xBEEF ^ i.wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+// ------------------------------------------------------------------- quant
+
+#[test]
+fn prop_fake_quant_idempotent() {
+    for seed in cases(60) {
+        let mut rng = Rng::new(seed);
+        let rows = 1 + rng.below(24);
+        let cols = 16 * (1 + rng.below(8));
+        let scale = [1e-4f32, 1.0, 300.0][rng.below(3)];
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32 * scale).collect();
+        let q1 = nvfp4::fake_quant(&x, rows, cols);
+        let q2 = nvfp4::fake_quant(&q1, rows, cols);
+        for (i, (a, b)) in q1.iter().zip(&q2).enumerate() {
+            assert!(
+                (a - b).abs() <= a.abs() * 1e-6 + 1e-12,
+                "seed {seed}: idempotency broke at {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_quant_error_bounded() {
+    // NVFP4 worst-case relative elementwise error within a block is bounded
+    // by the E2M1 grid spacing (~1/3 relative) once scales are sane.
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        let cols = 16 * (1 + rng.below(6));
+        let x: Vec<f32> = (0..cols).map(|_| rng.normal() as f32).collect();
+        let q = nvfp4::fake_quant(&x, 1, cols);
+        let rel = nvfp4::rel_error(&x, &q);
+        assert!(rel < 0.35, "seed {seed}: rel error {rel}");
+    }
+}
+
+#[test]
+fn prop_codes_round_trip_through_packing() {
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        let rows = 1 + rng.below(8);
+        let cols = 16 * (1 + rng.below(4));
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32 * 2.0).collect();
+        let t = Nvfp4Tensor::quantize(&x, rows, cols, None);
+        // decode each packed code and re-encode: must be a fixed point
+        for i in 0..rows * cols {
+            let code = t.code_at(i);
+            assert!(code & 0xf0 == 0, "nibble overflow");
+            let v = qadx::quant::fp::e2m1_decode(code);
+            let c2 = qadx::quant::fp::e2m1_encode(v);
+            assert_eq!(qadx::quant::fp::e2m1_decode(c2), v, "seed {seed} idx {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_scalar_round_monotone() {
+    for seed in cases(20) {
+        let mut rng = Rng::new(seed);
+        let mut xs: Vec<f32> = (0..200).map(|_| rng.normal() as f32 * 200.0).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev4 = f32::NEG_INFINITY;
+        let mut prev2 = f32::NEG_INFINITY;
+        for x in xs {
+            let a = e4m3_round(x);
+            let b = e2m1_round(x);
+            assert!(a >= prev4, "e4m3 monotonicity at {x}");
+            assert!(b >= prev2, "e2m1 monotonicity at {x}");
+            prev4 = a;
+            prev2 = b;
+        }
+    }
+}
+
+// -------------------------------------------------------------------- data
+
+#[test]
+fn prop_batches_well_formed_across_sources_and_shapes() {
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        let vision = rng.bool(0.3);
+        let shape = BatchShape {
+            batch: [4, 8, 16][rng.below(3)],
+            seq_len: [40, 48, 64][rng.below(3)],
+            vision,
+            grid: 4,
+            patch: 16,
+            vocab: 64,
+        };
+        let suites = if vision { VISION_SUITES } else { TEXT_SUITES };
+        let kind = match rng.below(2) {
+            0 => SourceKind::Sft { p_correct: rng.f64() },
+            _ => SourceKind::RandomTokens,
+        };
+        let spec = SourceSpec { kind, suites: suites.to_vec(), weight: 1.0 };
+        let mut f = BatchFactory::new(shape, vec![spec], seed);
+        let b = f.next_batch(None).expect("batch");
+        assert_eq!(b.tokens.len(), shape.batch * shape.seq_len, "seed {seed}");
+        assert_eq!(b.mask.len(), shape.batch * shape.seq_len);
+        assert_eq!(b.pixels.is_some(), vision);
+        // every token id in vocab, every mask bit 0/1, some mask per row
+        assert!(b.tokens.iter().all(|&t| (0..64).contains(&t)));
+        assert!(b.mask.iter().all(|&m| m == 0.0 || m == 1.0));
+        for r in 0..shape.batch {
+            let row = &b.mask[r * shape.seq_len..(r + 1) * shape.seq_len];
+            assert!(row.iter().sum::<f32>() >= 1.0, "seed {seed} row {r} empty mask");
+        }
+    }
+}
+
+#[test]
+fn prop_factory_deterministic_per_seed() {
+    let shape = BatchShape { batch: 8, seq_len: 40, vision: false, grid: 4, patch: 16, vocab: 64 };
+    for seed in cases(20) {
+        let spec = SourceSpec::sft(TEXT_SUITES);
+        let mut a = BatchFactory::new(shape, vec![spec.clone()], seed);
+        let mut b = BatchFactory::new(shape, vec![spec], seed);
+        for _ in 0..3 {
+            let ba = a.next_batch(None).unwrap();
+            let bb = b.next_batch(None).unwrap();
+            assert_eq!(ba.tokens, bb.tokens, "seed {seed}");
+            assert_eq!(ba.mask, bb.mask);
+        }
+    }
+}
+
+#[test]
+fn prop_task_rows_decode_to_answer() {
+    for seed in cases(60) {
+        let mut rng = Rng::new(seed);
+        let suite = *rng.choice(TEXT_SUITES);
+        let s = tasks::generate(suite, &mut rng, 4, 16);
+        let (tokens, _mask) = tasks::build_row(&s, &s.answer, 40);
+        let prompt = tasks::prompt_tokens(&s, 40);
+        let resp = decode_response(&tokens, &prompt);
+        assert_eq!(resp.trim(), s.answer, "seed {seed} suite {suite:?}");
+    }
+}
+
+#[test]
+fn prop_tokenizer_round_trips_task_strings() {
+    for seed in cases(100) {
+        let mut rng = Rng::new(seed);
+        let suite = *rng.choice(TEXT_SUITES);
+        let s = tasks::generate(suite, &mut rng, 4, 16);
+        let text = format!("{}{}", s.prompt, s.answer);
+        assert_eq!(tok::decode(&tok::encode(&text)), text, "seed {seed}");
+    }
+}
+
+// -------------------------------------------------------------- coordinator
+
+#[test]
+fn prop_lr_schedule_bounded_and_warmup_monotone() {
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        let steps = 50 + rng.below(500);
+        let warmup = rng.below(steps / 2);
+        let lr = 10f64.powf(-(2.0 + rng.f64() * 4.0));
+        let cfg = TrainCfg {
+            steps,
+            lr,
+            schedule: LrSchedule::CosineWarmup { warmup, floor: 0.1 },
+            ..TrainCfg::default()
+        };
+        let mut prev = 0.0;
+        for s in 0..steps {
+            let v = cfg.lr_at(s);
+            assert!(v > 0.0 && v <= lr * (1.0 + 1e-9), "seed {seed} step {s}: {v}");
+            if s < warmup {
+                assert!(v >= prev, "warmup must be nondecreasing");
+            }
+            prev = v;
+        }
+        // tail reaches the floor region
+        assert!(cfg.lr_at(steps - 1) <= lr * 0.2 + 1e-12);
+    }
+}
+
+#[test]
+fn prop_topk_checkpoint_selection() {
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(20);
+        let mut log = qadx::coordinator::TrainLog::default();
+        for i in 0..n {
+            log.checkpoints.push(Checkpoint {
+                step: i,
+                val_loss: rng.f64() * 10.0,
+                params: vec![],
+            });
+        }
+        let top = log.top_checkpoints();
+        assert_eq!(top.len(), n);
+        for w in top.windows(2) {
+            assert!(w[0].val_loss <= w[1].val_loss, "seed {seed}: not sorted");
+        }
+    }
+}
+
+#[test]
+fn prop_merge_lerp_between_endpoints() {
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(100);
+        let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let alpha = rng.f32();
+        let m = merge::lerp(&a, &b, alpha).unwrap();
+        for i in 0..n {
+            let lo = a[i].min(b[i]) - 1e-5;
+            let hi = a[i].max(b[i]) + 1e-5;
+            assert!(m[i] >= lo && m[i] <= hi, "seed {seed} idx {i}");
+        }
+    }
+}
+
+// --------------------------------------------------------------------- json
+
+#[test]
+fn prop_json_round_trip_random_trees() {
+    fn random_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => Json::Str(
+                (0..rng.below(12))
+                    .map(|_| *rng.choice(&['a', 'Ω', '"', '\\', '\n', '7', ' ']))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_value(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in cases(80) {
+        let mut rng = Rng::new(seed);
+        let v = random_value(&mut rng, 3);
+        let s = v.to_string();
+        let v2 = Json::parse(&s).unwrap_or_else(|e| panic!("seed {seed}: {e} in {s}"));
+        assert_eq!(v, v2, "seed {seed}");
+        let v3 = Json::parse(&v.pretty()).unwrap();
+        assert_eq!(v, v3, "seed {seed} (pretty)");
+    }
+}

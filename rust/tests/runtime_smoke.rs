@@ -1,0 +1,110 @@
+//! End-to-end runtime smoke test: load AOT artifacts, chain train steps
+//! with a device-resident state vector, verify metrics and convergence.
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use qadx::coordinator::init_params;
+use qadx::runtime::{scalar, Batch, DeviceState, Engine, ModelRuntime};
+use qadx::util::rng::Rng;
+use std::path::Path;
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(&dir).expect("engine"))
+}
+
+fn rand_batch(rt: &ModelRuntime, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let (b, s) = (rt.model.batch, rt.model.seq_len);
+    Batch {
+        tokens: (0..b * s).map(|_| rng.range(4, rt.model.vocab as i64) as i32).collect(),
+        mask: vec![1.0; b * s],
+        pixels: None,
+        advantage: None,
+    }
+}
+
+#[test]
+fn sft_step_chain_decreases_loss() {
+    let Some(engine) = engine() else { return };
+    let rt = ModelRuntime::new(&engine, "size-xs").unwrap();
+    let params = init_params(&rt.model, 0);
+    let mut state = DeviceState::from_params(&rt, &params).unwrap();
+    let exe = rt.exe("sft_bf16").unwrap();
+    let batch = rand_batch(&rt, 1);
+    let tokens = rt.upload_tokens(&batch).unwrap();
+    let mask = rt.upload_mask(&batch).unwrap();
+    let lr = engine.upload_scalar(3e-3).unwrap();
+
+    let mut first = None;
+    for _ in 0..20 {
+        let out = engine.run_b(&exe, &[&state.buf, &tokens, &mask, &lr]).unwrap();
+        state.advance(out);
+        let sc = state.scalars().unwrap();
+        if first.is_none() {
+            first = Some(sc[scalar::LOSS]);
+        }
+    }
+    let sc = state.scalars().unwrap();
+    assert_eq!(sc[scalar::STEP], 20.0);
+    assert!(sc[scalar::LOSS] < first.unwrap(), "{} !< {:?}", sc[scalar::LOSS], first);
+    assert!((sc[scalar::LR] - 3e-3).abs() < 1e-9);
+}
+
+#[test]
+fn qad_step_reduces_kl_against_teacher() {
+    let Some(engine) = engine() else { return };
+    let rt = ModelRuntime::new(&engine, "size-xs").unwrap();
+    let teacher = init_params(&rt.model, 5);
+    let mut state = DeviceState::from_params(&rt, &teacher).unwrap();
+    let exe = rt.exe("qad_nvfp4").unwrap();
+    let batch = rand_batch(&rt, 2);
+    let tokens = rt.upload_tokens(&batch).unwrap();
+    let mask = rt.upload_mask(&batch).unwrap();
+    let lr = engine.upload_scalar(1e-3).unwrap();
+    let t_buf = rt.upload_params(&teacher).unwrap();
+
+    let mut kls = Vec::new();
+    for _ in 0..15 {
+        let out = engine
+            .run_b(&exe, &[&state.buf, &t_buf, &tokens, &mask, &lr])
+            .unwrap();
+        state.advance(out);
+        kls.push(state.scalars().unwrap()[scalar::KL]);
+    }
+    assert!(kls[14] < kls[0], "KL did not fall: {:?}", kls);
+    assert!(kls.iter().all(|&k| k >= 0.0));
+}
+
+#[test]
+fn fwd_logits_shape_and_eval_metrics() {
+    let Some(engine) = engine() else { return };
+    let rt = ModelRuntime::new(&engine, "size-xs").unwrap();
+    let params = init_params(&rt.model, 0);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let batch = rand_batch(&rt, 3);
+    let tokens = rt.upload_tokens(&batch).unwrap();
+    let (b, s, v) = (rt.model.batch, rt.model.seq_len, rt.model.vocab);
+
+    let fwd = rt.exe("fwd_bf16").unwrap();
+    let logits_buf = engine.run_b(&fwd, &[&p_buf, &tokens]).unwrap();
+    let logits = engine.download_f32(&logits_buf, b * s * v).unwrap();
+    assert!(logits.iter().all(|x| x.is_finite()));
+
+    // eval_bf16(params, params, ...) must give exactly KL = 0.
+    let mask = rt.upload_mask(&batch).unwrap();
+    let ev = rt.exe("eval_bf16").unwrap();
+    let out = engine.run_b(&ev, &[&p_buf, &p_buf, &tokens, &mask]).unwrap();
+    let m = engine.download_f32(&out, 8).unwrap();
+    assert!(m[0].abs() < 1e-5, "KL {m:?}");
+    assert!(m[1] > 0.0);
+
+    // eval_nvfp4(params, params, ...) — PTQ gap — must give KL > 0.
+    let evq = rt.exe("eval_nvfp4").unwrap();
+    let outq = engine.run_b(&evq, &[&p_buf, &p_buf, &tokens, &mask]).unwrap();
+    let mq = engine.download_f32(&outq, 8).unwrap();
+    assert!(mq[0] > 1e-6, "quantized KL {mq:?}");
+}

@@ -1,0 +1,34 @@
+#!/usr/bin/env python3
+"""Splice runs/report/*.txt into EXPERIMENTS.md at the <!-- RESULTS --> marker."""
+
+import glob
+import os
+import re
+import sys
+
+root = os.path.join(os.path.dirname(__file__), "..")
+report_dir = os.path.join(root, sys.argv[1] if len(sys.argv) > 1 else "runs/report")
+exp_path = os.path.join(root, "EXPERIMENTS.md")
+
+blocks = []
+order = [f"table{i}" for i in range(1, 13)] + ["figure1", "figure2", "qad_e2e"]
+for name in order:
+    path = os.path.join(report_dir, f"{name}.txt")
+    if os.path.exists(path):
+        with open(path) as f:
+            blocks.append("```\n" + f.read().rstrip() + "\n```\n")
+
+text = open(exp_path).read()
+marker = "<!-- RESULTS -->"
+if marker not in text:
+    # replace previously-spliced section between markers
+    text = re.sub(
+        r"<!-- RESULTS-BEGIN -->.*<!-- RESULTS-END -->",
+        marker,
+        text,
+        flags=re.S,
+    )
+joined = "<!-- RESULTS-BEGIN -->\n" + "\n".join(blocks) + "<!-- RESULTS-END -->"
+text = text.replace(marker, joined)
+open(exp_path, "w").write(text)
+print(f"spliced {len(blocks)} reports into EXPERIMENTS.md")
