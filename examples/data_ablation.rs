@@ -4,25 +4,23 @@
 //!
 //! Run: `cargo run --release --example data_ablation -- [--steps 120] [--scale 0.5]`
 
-use std::path::PathBuf;
-
-use qadx::coordinator::{self, pipeline, Method, PipelineScale, RecoveryCfg};
+use qadx::api::Session;
 use qadx::data::{SourceKind, SourceSpec, Suite};
 use qadx::eval::EvalCfg;
 use qadx::exper::report::TableReport;
-use qadx::runtime::{Engine, ModelRuntime};
 use qadx::util::args::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let engine = Engine::new(&PathBuf::from(args.get_or("artifacts", "artifacts")))?;
-    let runs = PathBuf::from(args.get_or("runs", "runs"));
-    let model = "ace-sim";
-    let scale = PipelineScale(args.f64_or("scale", 1.0));
-    let teacher = coordinator::get_or_train_teacher(&engine, model, &runs, scale)?;
-    let rt = ModelRuntime::new(&engine, model)?;
+    let session = Session::builder()
+        .artifacts_dir(args.get_or("artifacts", "artifacts"))
+        .runs_dir(args.get_or("runs", "runs"))
+        .scale(args.f64_or("scale", 1.0))
+        .build()?;
+    let ms = session.model("ace-sim")?;
+    let qad = session.method("qad")?;
 
-    let suites = pipeline::train_suites(model);
+    let suites = ms.train_suites();
     let steps = args.usize_or("steps", 150);
     let mut ecfg = EvalCfg::default();
     ecfg.n_problems = args.usize_or("n", 24);
@@ -51,10 +49,11 @@ fn main() -> anyhow::Result<()> {
         ),
     ];
     for (name, spec) in sources {
-        let mut cfg = RecoveryCfg::new(vec![spec], args.f64_or("lr", 3e-4), steps);
+        let mut cfg =
+            qadx::coordinator::RecoveryCfg::new(vec![spec], args.f64_or("lr", 3e-4), steps);
         cfg.eval = ecfg;
-        let out = coordinator::run_method(&engine, &rt, Method::Qad, &teacher, &cfg)?;
-        let accs = coordinator::eval_method(&engine, &rt, Method::Qad, &out.params, &eval_suites, &ecfg)?;
+        let out = ms.recover(&*qad, &cfg)?;
+        let accs = ms.evaluate(&*qad, &out.params, &eval_suites, &ecfg)?;
         let mut row = vec![name.to_string()];
         for s in &eval_suites {
             row.push(format!("{:.1}", accs[s.name()]));

@@ -1,9 +1,9 @@
 //! End-to-end validation driver (DESIGN.md §6): the full paper pipeline on
-//! a real (sim-scale) workload, proving all three layers compose.
+//! a real (sim-scale) workload through the `qadx::api` façade.
 //!
 //!   1. Train the AceReason-sim teacher through its multi-stage pipeline
 //!      (cold-start SFT on partially-correct data → RL with verifiable
-//!      rewards), all through AOT step artifacts on the PJRT runtime.
+//!      rewards) — `ModelSession::teacher()` caches it under runs/teachers.
 //!   2. PTQ-quantize (Rust NVFP4 codec) and measure the accuracy drop.
 //!   3. Run QAD for a few hundred steps, logging the loss/KL curve.
 //!   4. Evaluate BF16 / PTQ / QAD / QAT with the paper's sampling protocol
@@ -14,34 +14,34 @@
 //!
 //! Run: `cargo run --release --example qad_e2e -- [--scale 0.5]`
 
-use std::path::PathBuf;
-
-use qadx::coordinator::{
-    self, pipeline, ptq_report, Method, PipelineScale, RecoveryCfg,
-};
-use qadx::data::Suite;
+use qadx::api::Session;
+use qadx::data::{SourceSpec, Suite};
 use qadx::eval::EvalCfg;
 use qadx::exper::report::TableReport;
-use qadx::runtime::{Engine, ModelRuntime};
 use qadx::util::args::Args;
 use qadx::util::{CsvWriter, Timer};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let total = Timer::start("qad_e2e");
-    let engine = Engine::new(&PathBuf::from(args.get_or("artifacts", "artifacts")))?;
-    let runs = PathBuf::from(args.get_or("runs", "runs"));
-    let scale = PipelineScale(args.f64_or("scale", 1.0));
-    let model = "ace-sim";
+    let session = Session::builder()
+        .artifacts_dir(args.get_or("artifacts", "artifacts"))
+        .runs_dir(args.get_or("runs", "runs"))
+        .scale(args.f64_or("scale", 1.0))
+        .build()?;
+    let ms = session.model("ace-sim")?;
 
     // --- 1. teacher pipeline (SFT -> RL) ----------------------------------
-    println!("== stage 1: teacher post-training pipeline ({model}, scale {}) ==", scale.0);
-    let teacher = coordinator::get_or_train_teacher(&engine, model, &runs, scale)?;
-    let rt = ModelRuntime::new(&engine, model)?;
+    println!(
+        "== stage 1: teacher post-training pipeline ({}, scale {}) ==",
+        ms.name(),
+        session.scale().0
+    );
+    let teacher = ms.teacher()?;
 
     // --- 2. PTQ -------------------------------------------------------------
     println!("\n== stage 2: NVFP4 PTQ export ==");
-    let report = ptq_report(&rt, &teacher);
+    let report = ms.ptq_report()?;
     for (name, err, _) in report.layers.iter().filter(|(_, e, _)| *e > 0.0) {
         println!("  {name:<12} rel_err {err:.4}");
     }
@@ -54,23 +54,26 @@ fn main() -> anyhow::Result<()> {
 
     // --- 3. QAD with loss-curve logging -------------------------------------
     println!("\n== stage 3: QAD recovery ==");
-    let steps = args.usize_or("steps", (300.0 * scale.0).max(60.0) as usize);
-    let mut cfg = RecoveryCfg::new(
-        vec![qadx::data::SourceSpec::sft_quality(
-            pipeline::train_suites(model),
-            0.7,
-        )],
+    let scale = session.scale().0;
+    let steps = args.usize_or("steps", (300.0 * scale).max(60.0) as usize);
+    let mut cfg = qadx::coordinator::RecoveryCfg::new(
+        vec![SourceSpec::sft_quality(ms.train_suites(), 0.7)],
         args.f64_or("lr", 3e-4),
         steps,
     );
     cfg.train.log_every = (steps / 20).max(5);
-    let qad = coordinator::run_method(&engine, &rt, Method::Qad, &teacher, &cfg)?;
-    let mut csv = CsvWriter::create(&runs.join("e2e_loss_curve.csv"), &["step", "kl_loss"])?;
-    for (s, l) in &qad.curve {
+    let qad = session.method("qad")?;
+    let qat = session.method("qat")?;
+    let qad_out = ms.recover(&*qad, &cfg)?;
+    let mut csv = CsvWriter::create(
+        &session.runs_dir().join("e2e_loss_curve.csv"),
+        &["step", "kl_loss"],
+    )?;
+    for (s, l) in &qad_out.curve {
         println!("  step {s:>5}  KL loss {l:.5}");
         csv.row_f64("qad", &[*s as f64, *l])?;
     }
-    let qat = coordinator::run_method(&engine, &rt, Method::Qat, &teacher, &cfg)?;
+    let qat_out = ms.recover(&*qat, &cfg)?;
 
     // --- 4. evaluation -------------------------------------------------------
     println!("\n== stage 4: sampling-based evaluation ==");
@@ -83,21 +86,22 @@ fn main() -> anyhow::Result<()> {
         "end-to-end recovery (ace-sim)",
         &["Method", "math500", "aime", "livecodebench", "scicode"],
     );
-    for (m, params) in [
-        (Method::Bf16, &teacher),
-        (Method::Ptq, &teacher),
-        (Method::Qad, &qad.params),
-        (Method::Qat, &qat.params),
+    for (key, params) in [
+        ("bf16", teacher.as_slice()),
+        ("ptq", teacher.as_slice()),
+        ("qad", qad_out.params.as_slice()),
+        ("qat", qat_out.params.as_slice()),
     ] {
-        let accs = coordinator::eval_method(&engine, &rt, m, params, &suites, &ecfg)?;
-        let mut row = vec![m.name().to_string()];
+        let method = session.method(key)?;
+        let accs = ms.evaluate(&*method, params, &suites, &ecfg)?;
+        let mut row = vec![method.display_name().to_string()];
         for s in &suites {
             row.push(format!("{:.1}", accs[s.name()]));
         }
         table.row(row);
     }
     table.print();
-    table.save(&runs.join("report"))?;
+    table.save(&session.report_dir())?;
     println!("{}", total.report());
     Ok(())
 }

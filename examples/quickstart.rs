@@ -1,19 +1,20 @@
-//! Quickstart: the three layers in one page.
+//! Quickstart: the three layers in one page, through the `qadx::api`
+//! façade.
 //!
 //! 1. Quantize a tensor with the Rust NVFP4 codec and inspect the error.
-//! 2. Load an AOT artifact (built by `make artifacts`) into the PJRT
-//!    runtime and run the quantized forward pass.
+//! 2. Open a `Session` (owns the PJRT engine + AOT artifacts, built by
+//!    `make artifacts`), bind a model, and run the quantized forward pass.
 //! 3. Run one QAD training step against a BF16 teacher and watch the KL
 //!    metric come back from the device.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use qadx::api::Session;
 use qadx::coordinator::init_params;
 use qadx::data::{shape_for, BatchFactory, SourceSpec, TEXT_SUITES};
 use qadx::quant::{self, Nvfp4Tensor};
-use qadx::runtime::{scalar, DeviceState, Engine, ModelRuntime};
+use qadx::runtime::{scalar, DeviceState};
 use qadx::util::rng::Rng;
-use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     // --- 1. The NVFP4 codec (no runtime needed) ---------------------------
@@ -29,34 +30,36 @@ fn main() -> anyhow::Result<()> {
         quant::rel_error(&x, &deq),
     );
 
-    // --- 2. The PJRT runtime ----------------------------------------------
-    let engine = Engine::new(Path::new("artifacts"))?;
-    let rt = ModelRuntime::new(&engine, "ace-sim")?;
+    // --- 2. A session over the PJRT runtime -------------------------------
+    let session = Session::builder().artifacts_dir("artifacts").build()?;
+    let ms = session.model("ace-sim")?;
+    let engine = session.engine();
     println!(
         "loaded {} ({} params, {} artifacts)",
-        rt.model.name,
-        rt.model.param_count,
-        rt.model.artifacts.len()
+        ms.name(),
+        ms.rt.model.param_count,
+        ms.rt.model.artifacts.len()
     );
-    let params = init_params(&rt.model, 0);
-    let p_buf = rt.upload_params(&params)?;
+    let params = init_params(&ms.rt.model, 0);
+    let p_buf = ms.rt.upload_params(&params)?;
 
     let mut factory = BatchFactory::new(
-        shape_for(&rt.model),
+        shape_for(&ms.rt.model),
         vec![SourceSpec::sft(TEXT_SUITES)],
         1,
     );
     let batch = factory.next_batch(None)?;
-    let tokens = rt.upload_tokens(&batch)?;
-    let fwd = rt.exe("fwd_nvfp4")?;
+    let tokens = ms.rt.upload_tokens(&batch)?;
+    let fwd = ms.rt.exe("fwd_nvfp4")?;
     let logits = engine.run_b(&fwd, &[&p_buf, &tokens])?;
-    let host = engine.download_f32(&logits, rt.model.batch * rt.model.seq_len * rt.model.vocab)?;
+    let host =
+        engine.download_f32(&logits, ms.rt.model.batch * ms.rt.model.seq_len * ms.rt.model.vocab)?;
     println!("quantized fwd: {} logits, first = {:.4}", host.len(), host[0]);
 
     // --- 3. One QAD step ----------------------------------------------------
-    let mut state = DeviceState::from_params(&rt, &params)?;
-    let qad = rt.exe("qad_nvfp4")?;
-    let mask = rt.upload_mask(&batch)?;
+    let mut state = DeviceState::from_params(&ms.rt, &params)?;
+    let qad = ms.rt.exe("qad_nvfp4")?;
+    let mask = ms.rt.upload_mask(&batch)?;
     let lr = engine.upload_scalar(1e-4)?;
     for i in 0..5 {
         let out = engine.run_b(&qad, &[&state.buf, &p_buf, &tokens, &mask, &lr])?;
@@ -68,6 +71,8 @@ fn main() -> anyhow::Result<()> {
             sc[scalar::KL]
         );
     }
+    // The full recovery loop is one call away:
+    //   let out = ms.recover(&*session.method("qad")?, &ms.default_recovery_cfg(300))?;
     println!("quickstart OK");
     Ok(())
 }

@@ -1,63 +1,56 @@
-//! Serving-throughput harness: batched sampling over the quantized fwd
-//! artifact — reports tokens/s and per-request latency percentiles for the
-//! BF16 vs NVFP4 forward paths (the inference-efficiency side of the
-//! paper's motivation: NVFP4 halves memory and raises throughput).
+//! Serving-throughput harness over the `qadx::api` coalescing server:
+//! requests are submitted one at a time and the `ServeHandle` fills
+//! device batches (partial batches flush on a deadline), reporting req/s,
+//! gen-tok/s, latency percentiles, and batch fill ratio for the BF16 vs
+//! NVFP4 forward paths (the inference-efficiency side of the paper's
+//! motivation: NVFP4 halves memory and raises throughput).
+//!
+//! Equivalent CLI: `qadx serve-bench --requests 64`.
 //!
 //! Run: `cargo run --release --example serve_eval -- [--requests 64]`
 
-use std::path::PathBuf;
 use std::time::Instant;
 
-use qadx::coordinator::init_params;
+use qadx::api::{ServeCfg, Session};
 use qadx::data::{tasks, Suite};
-use qadx::eval::{SampleCfg, Sampler};
-use qadx::runtime::{Engine, ModelRuntime};
 use qadx::util::args::Args;
-use qadx::util::{mean, percentile, rng::Rng};
+use qadx::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let engine = Engine::new(&PathBuf::from(args.get_or("artifacts", "artifacts")))?;
-    let model = args.get_or("model", "ace-sim");
-    let rt = ModelRuntime::new(&engine, &model)?;
+    let session = Session::builder()
+        .artifacts_dir(args.get_or("artifacts", "artifacts"))
+        .runs_dir(args.get_or("runs", "runs"))
+        .build()?;
+    let ms = session.model(&args.get_or("model", "ace-sim"))?;
     let n_requests = args.usize_or("requests", 64);
-    let params = init_params(&rt.model, 3);
-    let weights = rt.upload_params(&params)?;
 
     let mut rng = Rng::new(42);
     let suites = [Suite::Math500, Suite::Aime, Suite::Lcb, Suite::Gpqa];
     let prompts: Vec<Vec<i32>> = (0..n_requests)
         .map(|_| {
-            let s = tasks::generate(*rng.choice(&suites), &mut rng, 4, 16);
-            tasks::prompt_tokens(&s, rt.model.seq_len)
+            let s = tasks::generate(
+                *rng.choice(&suites),
+                &mut rng,
+                ms.rt.model.vision_grid,
+                ms.rt.model.vision_patch,
+            );
+            tasks::prompt_tokens(&s, ms.rt.model.seq_len)
         })
         .collect();
 
     for fwd_key in ["fwd_bf16", "fwd_nvfp4"] {
-        let mut sampler = Sampler::new(&rt, fwd_key, SampleCfg::default())?;
-        // warm-up compile
-        let _ = sampler.generate(&engine, &weights, &prompts[..1], None)?;
-        let b = rt.model.batch;
-        let mut latencies = Vec::new();
-        let mut tokens_out = 0usize;
+        let mut cfg = ServeCfg::default();
+        cfg.max_batch_delay_ms = args.f64_or("max-delay-ms", 25.0);
+        let mut server = ms.server(fwd_key, &cfg)?;
         let t0 = Instant::now();
-        for chunk in prompts.chunks(b) {
-            let t1 = Instant::now();
-            let rows = sampler.generate(&engine, &weights, chunk, None)?;
-            latencies.push(t1.elapsed().as_secs_f64() * 1000.0);
-            for (p, row) in chunk.iter().zip(&rows) {
-                tokens_out += row.iter().skip(p.len()).filter(|&&t| t != 0).count();
-            }
+        for p in &prompts {
+            server.submit(p.clone())?;
         }
+        let responses = server.drain()?;
         let total = t0.elapsed().as_secs_f64();
-        println!(
-            "{fwd_key:<10} {n_requests} reqs | {:.1} req/s | {:.0} gen-tok/s | batch-lat p50 {:.0}ms p95 {:.0}ms (mean {:.0}ms)",
-            n_requests as f64 / total,
-            tokens_out as f64 / total,
-            percentile(&latencies, 50.0),
-            percentile(&latencies, 95.0),
-            mean(&latencies),
-        );
+        anyhow::ensure!(responses.len() == n_requests, "lost requests");
+        println!("{} | wall {total:.2}s", server.stats().summary());
     }
     Ok(())
 }

@@ -10,22 +10,23 @@
 //!
 //! `cargo bench --bench perf_ab`; CSV: runs/bench/perf_ab.csv.
 
-use std::path::Path;
-
+use qadx::api::Session;
 use qadx::coordinator::init_params;
 use qadx::data::{shape_for, BatchFactory, SourceSpec, TEXT_SUITES};
 use qadx::eval::{SampleCfg, Sampler};
-use qadx::runtime::{DeviceState, Engine, ModelRuntime};
+use qadx::runtime::DeviceState;
 use qadx::util::bench::BenchSuite;
 
 fn main() {
-    let Ok(engine) = Engine::new(Path::new("artifacts")) else {
+    let Ok(session) = Session::builder().artifacts_dir("artifacts").build() else {
         eprintln!("skipping: artifacts not built");
         return;
     };
+    let engine = session.engine();
     let mut suite = BenchSuite::new("perf_ab");
     let model = std::env::var("QADX_PERF_MODEL").unwrap_or_else(|_| "ace-sim".into());
-    let rt = ModelRuntime::new(&engine, &model).unwrap();
+    let ms = session.model(&model).unwrap();
+    let rt = &ms.rt;
     let params = init_params(&rt.model, 0);
     let mut factory =
         BatchFactory::new(shape_for(&rt.model), vec![SourceSpec::sft(TEXT_SUITES)], 7);
@@ -36,7 +37,7 @@ fn main() {
     let exe = rt.exe("sft_bf16").unwrap();
 
     // --- A: state placement ------------------------------------------------
-    let mut state = DeviceState::from_params(&rt, &params).unwrap();
+    let mut state = DeviceState::from_params(rt, &params).unwrap();
     suite.run(&format!("{model}/A1_step_device_resident"), 3, 15, || {
         let out = engine.run_b(&exe, &[&state.buf, &tokens, &mask, &lr]).unwrap();
         state.advance(out);
@@ -44,7 +45,7 @@ fn main() {
     let mut host_state = state.full().unwrap();
     suite.run(&format!("{model}/A2_step_host_roundtrip"), 3, 15, || {
         // naive: upload state, step, download the whole new state
-        let s = DeviceState::from_state_vec(&rt, &host_state).unwrap();
+        let s = DeviceState::from_state_vec(rt, &host_state).unwrap();
         let out = engine.run_b(&exe, &[&s.buf, &tokens, &mask, &lr]).unwrap();
         host_state = s.like(out).full().unwrap();
     });
@@ -68,12 +69,12 @@ fn main() {
     }
 
     // --- D: sampler --------------------------------------------------------
-    let mut sampler = Sampler::new(&rt, "fwd_bf16", SampleCfg::default()).unwrap();
+    let mut sampler = Sampler::new(rt, "fwd_bf16", SampleCfg::default()).unwrap();
     let prompts: Vec<Vec<i32>> = (0..rt.model.batch)
         .map(|i| vec![1, 4 + (i as i32 % 10), 40, 4, 43, 3])
         .collect();
     suite.run(&format!("{model}/D_generate_batch_12tok"), 2, 8, || {
-        std::hint::black_box(sampler.generate(&engine, &p_buf, &prompts, None).unwrap());
+        std::hint::black_box(sampler.generate(engine, &p_buf, &prompts, None).unwrap());
     });
 
     suite.finish();

@@ -2,22 +2,23 @@
 //! the PJRT CPU client — the numbers that dominate every table's wall
 //! clock. `cargo bench --bench runtime_bench`. CSV: runs/bench/runtime.csv.
 
-use std::path::Path;
-
+use qadx::api::Session;
 use qadx::coordinator::init_params;
 use qadx::data::{shape_for, BatchFactory, SourceSpec, TEXT_SUITES};
-use qadx::runtime::{DeviceState, Engine, ModelRuntime};
+use qadx::runtime::DeviceState;
 use qadx::util::bench::BenchSuite;
 
 fn main() {
-    let Ok(engine) = Engine::new(Path::new("artifacts")) else {
+    let Ok(session) = Session::builder().artifacts_dir("artifacts").build() else {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return;
     };
+    let engine = session.engine();
     let mut suite = BenchSuite::new("runtime");
 
     for model in ["ace-sim", "nano-sim", "nano3-sim", "super-sim"] {
-        let rt = ModelRuntime::new(&engine, model).unwrap();
+        let ms = session.model(model).unwrap();
+        let rt = &ms.rt;
         let params = init_params(&rt.model, 0);
         let p_buf = rt.upload_params(&params).unwrap();
         let mut factory =
@@ -35,7 +36,7 @@ fn main() {
             });
         }
         // training steps (device-resident state chain)
-        let mut state = DeviceState::from_params(&rt, &params).unwrap();
+        let mut state = DeviceState::from_params(rt, &params).unwrap();
         for key in ["sft_bf16", "qat_nvfp4", "qad_nvfp4"] {
             let exe = rt.exe(key).unwrap();
             let needs_teacher = rt

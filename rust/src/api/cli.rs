@@ -1,0 +1,488 @@
+//! Typed CLI command definitions. Each subcommand declares its flags once
+//! (`CommandDef`), parses them into the same config structs library users
+//! build by hand, and gets its usage text generated from the declaration —
+//! so `qadx help <cmd>` and unknown-flag errors always match what the
+//! parser actually accepts.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::data::tasks::Suite;
+use crate::eval::EvalCfg;
+use crate::util::args::Args;
+
+use super::method::MethodRef;
+use super::session::{Session, SessionBuilder};
+
+pub struct FlagDef {
+    pub name: &'static str,
+    /// Value placeholder shown in usage ("" for boolean flags).
+    pub value: &'static str,
+    pub default: &'static str,
+    pub help: &'static str,
+}
+
+pub struct CommandDef {
+    pub name: &'static str,
+    /// Positional-argument part of the usage line.
+    pub args: &'static str,
+    pub summary: &'static str,
+    pub flags: &'static [FlagDef],
+}
+
+const fn flag(
+    name: &'static str,
+    value: &'static str,
+    default: &'static str,
+    help: &'static str,
+) -> FlagDef {
+    FlagDef { name, value, default, help }
+}
+
+/// Flags every subcommand accepts (session construction).
+pub const SESSION_FLAGS: &[FlagDef] = &[
+    flag("artifacts", "DIR", "artifacts", "AOT artifact directory (make artifacts)"),
+    flag("runs", "DIR", "runs", "run outputs: teachers, checkpoints, reports"),
+    flag("scale", "F", "1.0", "teacher pipeline step scale"),
+    flag("seed", "N", "0", "session seed (data order, serve-bench mix)"),
+];
+
+pub const COMMANDS: &[CommandDef] = &[
+    CommandDef { name: "info", args: "", summary: "manifest + artifact summary", flags: &[] },
+    CommandDef {
+        name: "teacher",
+        args: "<model>",
+        summary: "run (or load) the model's post-training pipeline",
+        flags: &[],
+    },
+    CommandDef {
+        name: "ptq",
+        args: "<model>",
+        summary: "PTQ export report (compression, per-layer err)",
+        flags: &[],
+    },
+    CommandDef {
+        name: "recover",
+        args: "<model>",
+        summary: "accuracy recovery (QAD/QAT/MSE/NQT) from the teacher",
+        flags: &[
+            flag("method", "M", "qad", "recovery method (bf16|ptq|qat|qad|mse|nqt)"),
+            flag("lr", "F", "1e-4", "learning rate"),
+            flag("steps", "N", "300", "training steps"),
+            flag("suites", "A,B", "(per model)", "training suites (comma-separated)"),
+        ],
+    },
+    CommandDef {
+        name: "eval",
+        args: "<model>",
+        summary: "benchmark a method's weights (teacher or recovered ckpt)",
+        flags: &[
+            flag("method", "M", "bf16", "method whose weights to evaluate"),
+            flag("n", "N", "32", "problems per suite"),
+            flag("k", "K", "3", "sampling runs per problem"),
+            flag("suites", "A,B", "(per model)", "eval suites (comma-separated)"),
+        ],
+    },
+    CommandDef {
+        name: "pilot",
+        args: "",
+        summary: "scaled-down end-to-end sanity run (teacher→PTQ→QAD/QAT)",
+        flags: &[
+            flag("model", "M", "ace-sim", "sim model"),
+            flag("scale", "F", "0.3", "teacher pipeline step scale (pilot default)"),
+            flag("n", "N", "24", "problems per suite"),
+            flag("k", "K", "2", "sampling runs per problem"),
+            flag("lr", "F", "1e-4", "recovery learning rate"),
+            flag("steps", "N", "200", "recovery steps"),
+            flag("suites", "A,B", "math500,aime,livecodebench", "eval suites"),
+        ],
+    },
+    CommandDef {
+        name: "serve-bench",
+        args: "",
+        summary: "coalescing-server throughput: req/s, tok/s, latency, fill",
+        flags: &[
+            flag("model", "M", "ace-sim", "sim model"),
+            flag("requests", "N", "64", "requests to submit"),
+            flag("fwd", "K", "both", "forward path: both|bf16|nvfp4"),
+            flag("max-delay-ms", "F", "25", "partial-batch flush deadline"),
+            flag("max-new", "N", "12", "tokens generated per request"),
+            flag("telemetry", "FILE", "(off)", "JSONL event log (or QADX_TELEMETRY_JSONL)"),
+        ],
+    },
+    CommandDef {
+        name: "table",
+        args: "<1..12>",
+        summary: "regenerate one paper table (exper harness)",
+        flags: &[
+            flag("quick", "", "false", "reduced budgets (CI smoke)"),
+            flag("n", "N", "40", "problems per suite"),
+            flag("k", "K", "3", "sampling runs per problem"),
+            flag("steps", "N", "400", "recovery steps"),
+        ],
+    },
+    CommandDef {
+        name: "all-tables",
+        args: "",
+        summary: "run the full evaluation section (tables 1-12 + figures)",
+        flags: &[
+            flag("quick", "", "false", "reduced budgets (CI smoke)"),
+            flag("n", "N", "40", "problems per suite"),
+            flag("k", "K", "3", "sampling runs per problem"),
+            flag("steps", "N", "400", "recovery steps"),
+            flag("only", "1,3", "(all)", "subset of tables (101,102 = figures)"),
+        ],
+    },
+    CommandDef {
+        name: "figure",
+        args: "<1|2>",
+        summary: "regenerate a paper figure (CSV curves)",
+        flags: &[
+            flag("quick", "", "false", "reduced budgets (CI smoke)"),
+            flag("n", "N", "40", "problems per suite"),
+            flag("k", "K", "3", "sampling runs per problem"),
+            flag("steps", "N", "400", "recovery steps"),
+        ],
+    },
+    CommandDef {
+        name: "help",
+        args: "[command]",
+        summary: "this overview, or detailed usage for one command",
+        flags: &[],
+    },
+];
+
+pub fn find_command(name: &str) -> Option<&'static CommandDef> {
+    COMMANDS.iter().find(|c| c.name == name)
+}
+
+fn flag_line(f: &FlagDef) -> String {
+    let head = if f.value.is_empty() {
+        format!("--{}", f.name)
+    } else {
+        format!("--{} {}", f.name, f.value)
+    };
+    format!("  {head:<22} {} [default: {}]\n", f.help, f.default)
+}
+
+/// Detailed usage for one command, generated from its definition.
+pub fn render_usage(cmd: &CommandDef) -> String {
+    let mut out = format!("usage: qadx {} {}\n  {}\n", cmd.name, cmd.args, cmd.summary);
+    if !cmd.flags.is_empty() {
+        out.push_str("flags:\n");
+        for f in cmd.flags {
+            out.push_str(&flag_line(f));
+        }
+    }
+    out.push_str("session flags (all commands):\n");
+    // A command-level flag overrides (shadows) the session flag of the
+    // same name — e.g. pilot's scale default — so show only one of them.
+    for f in SESSION_FLAGS {
+        if !cmd.flags.iter().any(|c| c.name == f.name) {
+            out.push_str(&flag_line(f));
+        }
+    }
+    out
+}
+
+/// The top-level help: every command with its one-line summary.
+pub fn render_help() -> String {
+    let mut out = String::from(
+        "qadx — NVFP4 quantization-aware distillation (paper reproduction)\n\
+         usage: qadx <command> [flags]\n\ncommands:\n",
+    );
+    for c in COMMANDS {
+        let head = format!("{} {}", c.name, c.args);
+        out.push_str(&format!("  {:<24} {}\n", head.trim_end(), c.summary));
+    }
+    out.push_str("\nsession flags (all commands):\n");
+    for f in SESSION_FLAGS {
+        out.push_str(&flag_line(f));
+    }
+    out.push_str("\nrun `qadx help <command>` for per-command flags\n");
+    out
+}
+
+/// Reject flags a command does not declare, pointing at its usage text.
+pub fn check_flags(cmd: &CommandDef, args: &Args) -> Result<()> {
+    for key in args.flags.keys() {
+        let known = cmd.flags.iter().chain(SESSION_FLAGS).any(|f| f.name == key.as_str());
+        if !known {
+            bail!("unknown flag --{key} for `{}`\n\n{}", cmd.name, render_usage(cmd));
+        }
+    }
+    Ok(())
+}
+
+/// A flag value that must parse if present — a typo'd `--steps 3O0` is an
+/// error, not a silent fall-back to the default.
+fn parse_flag<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T> {
+    match args.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid value {v:?} for --{key}")),
+    }
+}
+
+/// Optional `--suites a,b,c` (None = the command's per-model default).
+/// Unknown suite names are an error, consistent with unknown-flag handling.
+pub fn parse_suites(args: &Args) -> Result<Option<Vec<Suite>>> {
+    let Some(spec) = args.get("suites") else {
+        return Ok(None);
+    };
+    let mut suites = Vec::new();
+    for name in spec.split(',').filter(|n| !n.is_empty()) {
+        match Suite::from_name(name) {
+            Some(s) => suites.push(s),
+            None => {
+                let known: Vec<&str> = crate::data::TEXT_SUITES
+                    .iter()
+                    .chain(crate::data::VISION_SUITES)
+                    .map(|s| s.name())
+                    .collect();
+                bail!("unknown suite {name:?} in --suites (known: {})", known.join(", "));
+            }
+        }
+    }
+    if suites.is_empty() {
+        bail!("--suites given but empty");
+    }
+    Ok(Some(suites))
+}
+
+/// Session construction flags shared by every command.
+#[derive(Clone, Debug)]
+pub struct SessionArgs {
+    pub artifacts: PathBuf,
+    pub runs: PathBuf,
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl SessionArgs {
+    pub fn parse(args: &Args) -> Result<SessionArgs> {
+        Ok(SessionArgs {
+            artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
+            runs: PathBuf::from(args.get_or("runs", "runs")),
+            scale: parse_flag(args, "scale", 1.0)?,
+            seed: parse_flag(args, "seed", 0)?,
+        })
+    }
+
+    pub fn builder(&self) -> SessionBuilder {
+        Session::builder()
+            .artifacts_dir(&self.artifacts)
+            .runs_dir(&self.runs)
+            .scale(self.scale)
+            .seed(self.seed)
+    }
+
+    pub fn build(&self) -> Result<Session> {
+        self.builder().build()
+    }
+}
+
+/// `qadx recover` flags as a typed config.
+#[derive(Debug)]
+pub struct RecoverArgs {
+    pub session: SessionArgs,
+    pub model: String,
+    pub method: MethodRef,
+    pub lr: f64,
+    pub steps: usize,
+    pub suites: Option<Vec<Suite>>,
+}
+
+impl RecoverArgs {
+    pub fn parse(args: &Args) -> Result<RecoverArgs> {
+        Ok(RecoverArgs {
+            session: SessionArgs::parse(args)?,
+            model: args.positional.get(1).cloned().unwrap_or_else(|| "ace-sim".into()),
+            method: args.get_or("method", "qad").parse()?,
+            lr: parse_flag(args, "lr", 1e-4)?,
+            steps: parse_flag(args, "steps", 300)?,
+            suites: parse_suites(args)?,
+        })
+    }
+}
+
+/// `qadx eval` flags as a typed config. The checkpoint path is derived
+/// from `method` (the parsed method), fixing the old inconsistency where
+/// the method defaulted to bf16 but the path to qad.
+#[derive(Debug)]
+pub struct EvalArgs {
+    pub session: SessionArgs,
+    pub model: String,
+    pub method: MethodRef,
+    pub n: usize,
+    pub k: usize,
+    pub suites: Option<Vec<Suite>>,
+}
+
+impl EvalArgs {
+    pub fn parse(args: &Args) -> Result<EvalArgs> {
+        let ecfg = EvalCfg::default();
+        Ok(EvalArgs {
+            session: SessionArgs::parse(args)?,
+            model: args.positional.get(1).cloned().unwrap_or_else(|| "ace-sim".into()),
+            method: args.get_or("method", "bf16").parse()?,
+            n: parse_flag(args, "n", ecfg.n_problems)?,
+            k: parse_flag(args, "k", ecfg.k_runs)?,
+            suites: parse_suites(args)?,
+        })
+    }
+}
+
+/// `qadx pilot` flags as a typed config (default scale 0.3).
+#[derive(Debug)]
+pub struct PilotArgs {
+    pub session: SessionArgs,
+    pub model: String,
+    pub n: usize,
+    pub k: usize,
+    pub lr: f64,
+    pub steps: usize,
+    pub suites: Option<Vec<Suite>>,
+}
+
+impl PilotArgs {
+    pub fn parse(args: &Args) -> Result<PilotArgs> {
+        let mut session = SessionArgs::parse(args)?;
+        session.scale = parse_flag(args, "scale", 0.3)?;
+        Ok(PilotArgs {
+            session,
+            model: args.get_or("model", "ace-sim"),
+            n: parse_flag(args, "n", 24)?,
+            k: parse_flag(args, "k", 2)?,
+            lr: parse_flag(args, "lr", 1e-4)?,
+            steps: parse_flag(args, "steps", 200)?,
+            suites: parse_suites(args)?,
+        })
+    }
+}
+
+/// `qadx serve-bench` flags as a typed config.
+#[derive(Clone, Debug)]
+pub struct ServeBenchArgs {
+    pub session: SessionArgs,
+    pub model: String,
+    pub requests: usize,
+    pub fwd_keys: Vec<String>,
+    pub max_delay_ms: f64,
+    pub max_new: usize,
+    pub telemetry: Option<PathBuf>,
+}
+
+impl ServeBenchArgs {
+    pub fn parse(args: &Args) -> Result<ServeBenchArgs> {
+        let fwd_keys = match args.get_or("fwd", "both").as_str() {
+            "both" => vec!["fwd_bf16".to_string(), "fwd_nvfp4".to_string()],
+            "bf16" => vec!["fwd_bf16".to_string()],
+            "nvfp4" => vec!["fwd_nvfp4".to_string()],
+            other => bail!("--fwd must be both|bf16|nvfp4, got {other:?}"),
+        };
+        Ok(ServeBenchArgs {
+            session: SessionArgs::parse(args)?,
+            model: args.get_or("model", "ace-sim"),
+            requests: parse_flag(args, "requests", 64)?,
+            fwd_keys,
+            max_delay_ms: parse_flag(args, "max-delay-ms", 25.0)?,
+            max_new: parse_flag(args, "max-new", 12)?,
+            telemetry: args.get("telemetry").map(PathBuf::from),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn every_command_renders_usage() {
+        for cmd in COMMANDS {
+            assert!(!cmd.summary.is_empty());
+            let usage = render_usage(cmd);
+            assert!(usage.contains(cmd.name), "{usage}");
+            assert!(usage.contains("--artifacts"), "{usage}");
+        }
+        let help = render_help();
+        for cmd in COMMANDS {
+            assert!(help.contains(cmd.name));
+        }
+        assert!(!help.contains("see rust/src/main.rs"));
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_with_usage() {
+        let cmd = find_command("recover").unwrap();
+        assert!(check_flags(cmd, &parse("recover ace-sim --method qad --scale 0.5")).is_ok());
+        let err = check_flags(cmd, &parse("recover ace-sim --metod qad")).unwrap_err().to_string();
+        assert!(err.contains("--metod") && err.contains("usage: qadx recover"), "{err}");
+    }
+
+    #[test]
+    fn eval_checkpoint_follows_parsed_method() {
+        // Old bug: `--method` defaulted to bf16 while the checkpoint path
+        // was built from the raw flag string with a *qad* default.
+        let e = EvalArgs::parse(&parse("eval ace-sim")).unwrap();
+        assert_eq!(e.method.name(), "bf16");
+        assert!(e.method.step_key().is_none()); // teacher weights, no ckpt
+        let e = EvalArgs::parse(&parse("eval ace-sim --method qat")).unwrap();
+        assert_eq!(e.method.name(), "qat");
+        let p = super::super::session::recovered_path(&e.session.runs, &e.model, e.method.name());
+        assert!(p.to_string_lossy().ends_with("ace-sim-qat.qckp"), "{p:?}");
+    }
+
+    #[test]
+    fn recover_args_parse_method_and_suites() {
+        let argv = parse("recover nano-sim --method mse --steps 50 --suites math500,aime");
+        let r = RecoverArgs::parse(&argv).unwrap();
+        assert_eq!(r.model, "nano-sim");
+        assert_eq!(r.method.name(), "mse");
+        assert_eq!(r.steps, 50);
+        assert_eq!(r.suites.as_ref().map(|s| s.len()), Some(2));
+        assert!(RecoverArgs::parse(&parse("recover x --method nope")).is_err());
+    }
+
+    #[test]
+    fn flag_value_typos_are_errors_not_silent_defaults() {
+        assert!(RecoverArgs::parse(&parse("recover x --steps 3O0")).is_err());
+        assert!(EvalArgs::parse(&parse("eval x --n twelve")).is_err());
+        assert!(SessionArgs::parse(&parse("info --seed abc")).is_err());
+        // absent flags still take the documented defaults
+        let r = RecoverArgs::parse(&parse("recover x")).unwrap();
+        assert_eq!(r.steps, 300);
+        assert_eq!(r.session.seed, 0);
+    }
+
+    #[test]
+    fn suite_typos_are_errors_not_silent_fallbacks() {
+        let err = parse_suites(&parse("eval x --suites mth500")).unwrap_err().to_string();
+        assert!(err.contains("mth500") && err.contains("math500"), "{err}");
+        assert!(parse_suites(&parse("eval x --suites ,")).is_err());
+        assert_eq!(parse_suites(&parse("eval x")).unwrap(), None);
+    }
+
+    #[test]
+    fn pilot_usage_shows_its_own_scale_default() {
+        let usage = render_usage(find_command("pilot").unwrap());
+        assert!(usage.contains("0.3"), "{usage}");
+        // the shadowed session-level scale line (default 1.0) is hidden
+        assert_eq!(usage.matches("--scale").count(), 1, "{usage}");
+    }
+
+    #[test]
+    fn serve_bench_fwd_selection() {
+        let s = ServeBenchArgs::parse(&parse("serve-bench --requests 10")).unwrap();
+        assert_eq!(s.fwd_keys, vec!["fwd_bf16", "fwd_nvfp4"]);
+        let s = ServeBenchArgs::parse(&parse("serve-bench --fwd nvfp4")).unwrap();
+        assert_eq!(s.fwd_keys, vec!["fwd_nvfp4"]);
+        assert!(ServeBenchArgs::parse(&parse("serve-bench --fwd tf32")).is_err());
+    }
+}

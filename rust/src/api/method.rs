@@ -1,0 +1,204 @@
+//! The open recovery-method interface. The paper's six methods
+//! (BF16/PTQ/QAT/QAD/MSE/NQT) are built-in implementations; new methods
+//! plug in by implementing [`RecoveryMethod`] and registering — no enum to
+//! grow, no dispatch sites to edit (BitDistiller- or LLM-QAT-style
+//! variants differ only in loss/data wiring, i.e. in which artifacts and
+//! config a method binds).
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use std::str::FromStr;
+
+use anyhow::Result;
+
+use crate::coordinator::distill::{run_recovery, Method, RecoveryCfg, RecoveryOutcome};
+
+use super::session::ModelSession;
+
+/// One accuracy-recovery method: a named strategy that turns teacher
+/// weights into student weights, plus the forward artifact its students
+/// are evaluated through.
+pub trait RecoveryMethod {
+    /// Registry key — the CLI `--method` value and checkpoint-file suffix
+    /// (e.g. "qad"). Must be unique within a registry.
+    fn name(&self) -> &str;
+
+    /// Human-readable label for tables/reports (e.g. "NVFP4 QAD").
+    fn display_name(&self) -> &str {
+        self.name()
+    }
+
+    /// Train-step artifact key, or None for training-free methods
+    /// (BF16 baseline, PTQ) whose students are the teacher weights.
+    fn step_key(&self) -> Option<&str>;
+
+    /// Forward artifact that evaluates/serves this method's students.
+    fn fwd_key(&self) -> &str;
+
+    /// Produce student weights from `teacher`. The default drives the
+    /// shared method-agnostic loop (train `step_key`, §3.4 top-k
+    /// checkpoint selection through `fwd_key`); override for methods
+    /// that need custom orchestration.
+    fn recover(
+        &self,
+        model: &ModelSession,
+        teacher: &[f32],
+        cfg: &RecoveryCfg,
+    ) -> Result<RecoveryOutcome> {
+        run_recovery(
+            model.engine(),
+            &model.rt,
+            self.name(),
+            self.step_key(),
+            self.fwd_key(),
+            teacher,
+            cfg,
+        )
+    }
+}
+
+impl RecoveryMethod for Method {
+    fn name(&self) -> &str {
+        self.key()
+    }
+
+    fn display_name(&self) -> &str {
+        // Inherent `Method::name` is the paper-table label.
+        Method::name(self)
+    }
+
+    fn step_key(&self) -> Option<&str> {
+        Method::step_key(self)
+    }
+
+    fn fwd_key(&self) -> &str {
+        Method::fwd_key(self)
+    }
+}
+
+/// A shared handle to a registered method (what name lookup returns).
+#[derive(Clone)]
+pub struct MethodRef(pub Rc<dyn RecoveryMethod>);
+
+impl std::ops::Deref for MethodRef {
+    type Target = dyn RecoveryMethod;
+
+    fn deref(&self) -> &Self::Target {
+        self.0.as_ref()
+    }
+}
+
+impl std::fmt::Debug for MethodRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "MethodRef({})", self.0.name())
+    }
+}
+
+/// Parse a method name against the built-in registry. Session-registered
+/// custom methods resolve through `Session::method` instead.
+impl FromStr for MethodRef {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<MethodRef> {
+        MethodRegistry::builtin().resolve(s)
+    }
+}
+
+/// Name → method lookup. `builtin()` seeds the six paper methods;
+/// `register` adds more (later registrations shadow earlier names).
+pub struct MethodRegistry {
+    methods: BTreeMap<String, Rc<dyn RecoveryMethod>>,
+}
+
+impl MethodRegistry {
+    pub fn empty() -> MethodRegistry {
+        MethodRegistry { methods: BTreeMap::new() }
+    }
+
+    pub fn builtin() -> MethodRegistry {
+        let mut reg = MethodRegistry::empty();
+        for m in Method::ALL {
+            reg.register(Rc::new(m));
+        }
+        reg
+    }
+
+    pub fn register(&mut self, method: Rc<dyn RecoveryMethod>) -> &mut Self {
+        self.methods.insert(method.name().to_string(), method);
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<MethodRef> {
+        self.methods.get(name).map(|m| MethodRef(m.clone()))
+    }
+
+    pub fn resolve(&self, name: &str) -> Result<MethodRef> {
+        self.get(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown method {name:?} (known: {})", self.names().join(", "))
+        })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.methods.keys().cloned().collect()
+    }
+}
+
+impl Default for MethodRegistry {
+    fn default() -> Self {
+        MethodRegistry::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_names_round_trip_through_fromstr() {
+        let reg = MethodRegistry::builtin();
+        let names = reg.names();
+        assert_eq!(names.len(), 6);
+        for name in names {
+            let m: MethodRef = name.parse().unwrap();
+            assert_eq!(m.name(), name);
+        }
+    }
+
+    #[test]
+    fn unknown_name_lists_known_methods() {
+        let err = "frobnicate".parse::<MethodRef>().unwrap_err().to_string();
+        assert!(err.contains("frobnicate") && err.contains("qad"), "{err}");
+    }
+
+    #[test]
+    fn enum_shim_matches_trait_view() {
+        let qad = MethodRegistry::builtin().resolve("qad").unwrap();
+        assert_eq!(qad.display_name(), "NVFP4 QAD");
+        assert_eq!(qad.step_key(), Some("qad_nvfp4"));
+        assert_eq!(qad.fwd_key(), "fwd_nvfp4");
+        let bf16 = MethodRegistry::builtin().resolve("bf16").unwrap();
+        assert_eq!(bf16.step_key(), None);
+        assert_eq!(bf16.fwd_key(), "fwd_bf16");
+    }
+
+    #[test]
+    fn custom_method_registers_and_shadows_nothing() {
+        struct Dummy;
+        impl RecoveryMethod for Dummy {
+            fn name(&self) -> &str {
+                "dummy"
+            }
+            fn step_key(&self) -> Option<&str> {
+                None
+            }
+            fn fwd_key(&self) -> &str {
+                "fwd_bf16"
+            }
+        }
+        let mut reg = MethodRegistry::builtin();
+        reg.register(Rc::new(Dummy));
+        assert_eq!(reg.names().len(), 7);
+        assert_eq!(reg.resolve("dummy").unwrap().name(), "dummy");
+        assert_eq!(reg.resolve("qad").unwrap().name(), "qad");
+    }
+}

@@ -1,0 +1,45 @@
+//! `qadx::api` — the typed session/method/serve façade every entry point
+//! builds on (CLI, examples, benches, the experiment harness).
+//!
+//! * [`Session`] / [`SessionBuilder`] own the engine, runs directory,
+//!   pipeline scale, seed, and the recovery-method registry.
+//! * [`ModelSession`] binds one manifest model: teacher resolution with
+//!   memory+disk caching, recovery, checkpoint paths, evaluation.
+//! * [`RecoveryMethod`] + [`MethodRegistry`] make recovery methods an open
+//!   set — the paper's six are built-ins; a seventh is one trait impl and
+//!   one `register` call.
+//! * [`ServeHandle`] is the serving façade: a request queue with batch
+//!   coalescing (fill to `model.batch` under a deadline) and optional
+//!   JSONL telemetry.
+//! * [`cli`] holds the typed command definitions the `qadx` binary parses
+//!   flags through, with usage text generated from the definitions.
+//!
+//! ```no_run
+//! use qadx::api::{ServeCfg, Session};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let session = Session::builder().artifacts_dir("artifacts").build()?;
+//! let ms = session.model("ace-sim")?;
+//! let teacher = ms.teacher()?; // cached: disk (runs/teachers) + memory
+//! let qad = session.method("qad")?;
+//! let out = ms.recover(&*qad, &ms.default_recovery_cfg(300))?;
+//! ms.save_recovered(&*qad, &out)?;
+//! let mut server = ms.server("fwd_nvfp4", &ServeCfg::default())?;
+//! # let _ = teacher;
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod cli;
+pub mod method;
+pub mod serve;
+pub mod session;
+pub mod telemetry;
+
+pub use method::{MethodRef, MethodRegistry, RecoveryMethod};
+pub use serve::{Coalescer, ServeCfg, ServeHandle, ServeResponse, ServeStats, ServeWeights};
+pub use session::{
+    default_recovery_cfg, default_recovery_data, default_recovery_lr, default_sample_cfg,
+    recovered_path, ModelSession, Session, SessionBuilder,
+};
+pub use telemetry::JsonlAppender;

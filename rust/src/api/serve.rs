@@ -1,0 +1,407 @@
+//! Serving façade: a request queue with batch coalescing over one fwd
+//! artifact. Requests are submitted one at a time; the handle fills
+//! device batches up to `model.batch`, flushing a partial batch once the
+//! oldest request has waited past a deadline (or on `drain`). Per-batch
+//! telemetry (compile ms, fill ratio, tokens) optionally lands in a JSONL
+//! event log.
+//!
+//! The runtime is single-threaded (PJRT buffers are not Send), so the
+//! queue is synchronous: `submit` flushes full batches inline, `poll`
+//! applies the deadline, and `drain` forces everything out.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+use xla::PjRtBuffer;
+
+use crate::data::tokenizer as tok;
+use crate::eval::{SampleCfg, Sampler};
+use crate::runtime::{Engine, ModelRuntime};
+use crate::util::json::Json;
+use crate::util::{mean, percentile};
+
+use super::telemetry::JsonlAppender;
+
+/// Where a server's weights come from (resolved by `ModelSession::server`).
+#[derive(Clone, Debug)]
+pub enum ServeWeights {
+    /// Fresh random init (throughput benchmarking — accuracy irrelevant).
+    Random { seed: u64 },
+    /// The model's cached/trained BF16 teacher.
+    Teacher,
+    /// A recovered checkpoint by method name (e.g. "qad").
+    Method(String),
+    /// An explicit parameter vector.
+    Params(Vec<f32>),
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    pub sample: SampleCfg,
+    pub weights: ServeWeights,
+    /// Flush a partial batch once its oldest request has waited this long.
+    pub max_batch_delay_ms: f64,
+    /// Run one warm-up generation so compile/first-execute cost does not
+    /// land on the first real request.
+    pub warmup: bool,
+    /// JSONL event log path; falls back to `QADX_TELEMETRY_JSONL`.
+    pub telemetry: Option<std::path::PathBuf>,
+}
+
+impl Default for ServeCfg {
+    fn default() -> ServeCfg {
+        ServeCfg {
+            sample: SampleCfg::default(),
+            weights: ServeWeights::Random { seed: 3 },
+            max_batch_delay_ms: 25.0,
+            warmup: true,
+            telemetry: None,
+        }
+    }
+}
+
+/// Pure batching policy: decides *when* a set of queued request ids forms
+/// a batch (full, deadline-expired, or forced). Kept free of PJRT so the
+/// coalescing rules are unit-testable without artifacts.
+pub struct Coalescer {
+    batch: usize,
+    max_delay: Duration,
+    queue: VecDeque<(u64, Instant)>,
+}
+
+impl Coalescer {
+    pub fn new(batch: usize, max_delay: Duration) -> Coalescer {
+        assert!(batch >= 1, "batch must be >= 1");
+        Coalescer { batch, max_delay, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, id: u64, now: Instant) {
+        self.queue.push_back((id, now));
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Take the next batch if one is ready: a full batch always; a partial
+    /// batch when forced or when the oldest entry has waited `max_delay`.
+    pub fn take_ready(&mut self, now: Instant, force: bool) -> Option<Vec<u64>> {
+        let oldest = self.queue.front()?.1;
+        let full = self.queue.len() >= self.batch;
+        let expired = now.duration_since(oldest) >= self.max_delay;
+        if !(full || expired || force) {
+            return None;
+        }
+        let n = self.queue.len().min(self.batch);
+        Some(self.queue.drain(..n).map(|(id, _)| id).collect())
+    }
+}
+
+/// One completed request.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub id: u64,
+    /// Full token row (prompt + completion, PAD-tailed).
+    pub row: Vec<i32>,
+    pub gen_tokens: usize,
+    /// Submit-to-complete latency (includes queueing delay).
+    pub latency_ms: f64,
+}
+
+/// Aggregate serving counters for one handle.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub fwd_key: String,
+    /// Artifact compile + warm-up time paid at construction.
+    pub compile_ms: f64,
+    pub requests: usize,
+    pub batches: usize,
+    pub gen_tokens: usize,
+    pub latencies_ms: Vec<f64>,
+    /// Per-batch occupancy (submitted rows / model batch size).
+    pub fill_ratios: Vec<f64>,
+    /// Time spent inside generation calls.
+    pub busy_secs: f64,
+}
+
+impl ServeStats {
+    pub fn mean_fill_ratio(&self) -> f64 {
+        mean(&self.fill_ratios)
+    }
+
+    pub fn latency_p(&self, p: f64) -> f64 {
+        percentile(&self.latencies_ms, p)
+    }
+
+    pub fn req_per_sec(&self) -> f64 {
+        if self.busy_secs > 0.0 {
+            self.requests as f64 / self.busy_secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn gen_tok_per_sec(&self) -> f64 {
+        if self.busy_secs > 0.0 {
+            self.gen_tokens as f64 / self.busy_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line report: req/s, gen-tok/s, latency percentiles, batch fill
+    /// ratio, compile cost. The single source for CLI/example output.
+    /// Throughput is over *busy* time (inside generation); callers that
+    /// want end-to-end throughput divide by their own wall clock.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<10} {} reqs / {} batches | busy {:.1} req/s {:.0} gen-tok/s | \
+             lat p50 {:.0}ms p95 {:.0}ms p99 {:.0}ms | fill {:.2} | compile {:.0}ms",
+            self.fwd_key,
+            self.requests,
+            self.batches,
+            self.req_per_sec(),
+            self.gen_tok_per_sec(),
+            self.latency_p(50.0),
+            self.latency_p(95.0),
+            self.latency_p(99.0),
+            self.mean_fill_ratio(),
+            self.compile_ms,
+        )
+    }
+}
+
+struct Pending {
+    prompt: Vec<i32>,
+    submitted: Instant,
+}
+
+/// A live server over one (model, fwd artifact, weights) binding.
+pub struct ServeHandle<'e> {
+    engine: &'e Engine,
+    sampler: Sampler,
+    weights: PjRtBuffer,
+    coalescer: Coalescer,
+    pending: HashMap<u64, Pending>,
+    next_id: u64,
+    completed: Vec<ServeResponse>,
+    stats: ServeStats,
+    telemetry: Option<JsonlAppender>,
+}
+
+impl<'e> ServeHandle<'e> {
+    /// Build a server; compiles the fwd artifact and uploads weights.
+    /// (Library users normally go through `ModelSession::server`, which
+    /// resolves `ServeWeights` first.)
+    pub fn new(
+        rt: &ModelRuntime<'e>,
+        fwd_key: &str,
+        weights: &[f32],
+        cfg: &ServeCfg,
+    ) -> Result<ServeHandle<'e>> {
+        if rt.model.vision {
+            bail!("serving façade supports text models (got VLM {:?})", rt.model.name);
+        }
+        let engine = rt.engine;
+        let t0 = Instant::now();
+        let mut sampler = Sampler::new(rt, fwd_key, cfg.sample)?;
+        let weights_buf = engine.upload_f32(weights, &[weights.len()])?;
+        if cfg.warmup {
+            sampler.generate(engine, &weights_buf, &[vec![tok::BOS]], None)?;
+            sampler.reseed(cfg.sample.seed);
+        }
+        let compile_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+        // An explicitly configured path must open (the caller asked for the
+        // log); only the env-var fallback is best-effort.
+        let mut telemetry = match cfg.telemetry.as_ref() {
+            Some(p) => Some(JsonlAppender::open(p)?),
+            None => JsonlAppender::from_env("QADX_TELEMETRY_JSONL"),
+        };
+        if let Some(tel) = telemetry.as_mut() {
+            let _ = tel.append(&Json::obj(vec![
+                ("event", Json::Str("compile".into())),
+                ("model", Json::Str(rt.model.name.clone())),
+                ("fwd", Json::Str(fwd_key.to_string())),
+                ("compile_ms", Json::Num(compile_ms)),
+            ]));
+        }
+
+        let batch = rt.model.batch;
+        Ok(ServeHandle {
+            engine,
+            sampler,
+            weights: weights_buf,
+            coalescer: Coalescer::new(
+                batch,
+                Duration::from_secs_f64(cfg.max_batch_delay_ms.max(0.0) / 1000.0),
+            ),
+            pending: HashMap::new(),
+            next_id: 0,
+            completed: Vec::new(),
+            stats: ServeStats { fwd_key: fwd_key.to_string(), compile_ms, ..Default::default() },
+            telemetry,
+        })
+    }
+
+    /// Enqueue one request; flushes inline whenever a full batch forms.
+    /// Returns the request id (matched by `ServeResponse::id`).
+    pub fn submit(&mut self, prompt: Vec<i32>) -> Result<u64> {
+        let seq_len = self.sampler.model.seq_len;
+        if prompt.is_empty() || prompt.len() >= seq_len {
+            bail!(
+                "prompt length {} out of range (need 1..{seq_len} to leave room to generate)",
+                prompt.len()
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let now = Instant::now();
+        self.pending.insert(id, Pending { prompt, submitted: now });
+        self.coalescer.push(id, now);
+        self.dispatch(false)?;
+        Ok(id)
+    }
+
+    /// Flush any batch whose deadline has passed; returns requests run.
+    pub fn poll(&mut self) -> Result<usize> {
+        self.dispatch(false)
+    }
+
+    /// Force out all queued requests (partial final batch included) and
+    /// take every completed response accumulated so far.
+    pub fn drain(&mut self) -> Result<Vec<ServeResponse>> {
+        self.dispatch(true)?;
+        Ok(std::mem::take(&mut self.completed))
+    }
+
+    pub fn queued(&self) -> usize {
+        self.coalescer.len()
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    fn dispatch(&mut self, force: bool) -> Result<usize> {
+        let mut ran = 0;
+        while let Some(ids) = self.coalescer.take_ready(Instant::now(), force) {
+            ran += ids.len();
+            self.run_batch(&ids)?;
+        }
+        Ok(ran)
+    }
+
+    fn run_batch(&mut self, ids: &[u64]) -> Result<()> {
+        let t0 = Instant::now();
+        let reqs: Vec<Pending> = ids
+            .iter()
+            .map(|id| self.pending.remove(id).expect("queued id has a pending entry"))
+            .collect();
+        let prompts: Vec<Vec<i32>> = reqs.iter().map(|r| r.prompt.clone()).collect();
+        let rows = self.sampler.generate(self.engine, &self.weights, &prompts, None)?;
+        let done = Instant::now();
+        let batch_ms = done.duration_since(t0).as_secs_f64() * 1000.0;
+        let fill = ids.len() as f64 / self.sampler.model.batch as f64;
+
+        let mut batch_tokens = 0usize;
+        for ((id, req), row) in ids.iter().zip(&reqs).zip(rows) {
+            let gen_tokens =
+                row.iter().skip(req.prompt.len()).filter(|&&t| t != tok::PAD).count();
+            batch_tokens += gen_tokens;
+            let latency_ms = done.duration_since(req.submitted).as_secs_f64() * 1000.0;
+            self.stats.latencies_ms.push(latency_ms);
+            self.completed.push(ServeResponse { id: *id, row, gen_tokens, latency_ms });
+        }
+        self.stats.requests += ids.len();
+        self.stats.batches += 1;
+        self.stats.gen_tokens += batch_tokens;
+        self.stats.fill_ratios.push(fill);
+        self.stats.busy_secs += batch_ms / 1000.0;
+
+        if let Some(tel) = self.telemetry.as_mut() {
+            let _ = tel.append(&Json::obj(vec![
+                ("event", Json::Str("batch".into())),
+                ("fwd", Json::Str(self.stats.fwd_key.clone())),
+                ("requests", Json::Num(ids.len() as f64)),
+                ("fill_ratio", Json::Num(fill)),
+                ("batch_ms", Json::Num(batch_ms)),
+                ("gen_tokens", Json::Num(batch_tokens as f64)),
+            ]));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalescer_flushes_full_batches_immediately() {
+        let now = Instant::now();
+        let mut c = Coalescer::new(4, Duration::from_secs(60));
+        for id in 0..4 {
+            c.push(id, now);
+        }
+        assert_eq!(c.take_ready(now, false), Some(vec![0, 1, 2, 3]));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn coalescer_holds_partial_until_deadline() {
+        let now = Instant::now();
+        let mut c = Coalescer::new(4, Duration::from_millis(10));
+        c.push(0, now);
+        c.push(1, now);
+        assert_eq!(c.take_ready(now, false), None);
+        // deadline reached -> partial batch goes out
+        assert_eq!(c.take_ready(now + Duration::from_millis(10), false), Some(vec![0, 1]));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn coalescer_drains_ragged_tail_completely() {
+        // N % batch != 0: every request must come out, in order, with the
+        // expected per-batch sizes.
+        let now = Instant::now();
+        let mut c = Coalescer::new(4, Duration::from_secs(60));
+        for id in 0..10 {
+            c.push(id, now);
+        }
+        let mut sizes = Vec::new();
+        let mut all = Vec::new();
+        while let Some(ids) = c.take_ready(now, true) {
+            sizes.push(ids.len());
+            all.extend(ids);
+        }
+        assert_eq!(sizes, vec![4, 4, 2]);
+        assert_eq!(all, (0..10).collect::<Vec<u64>>());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn fill_ratio_reports_partial_batches() {
+        let stats = ServeStats {
+            fill_ratios: vec![1.0, 1.0, 0.5],
+            latencies_ms: vec![10.0, 20.0, 30.0],
+            ..Default::default()
+        };
+        assert!((stats.mean_fill_ratio() - 2.5 / 3.0).abs() < 1e-12);
+        assert_eq!(stats.latency_p(50.0), 20.0);
+    }
+
+    #[test]
+    fn idle_stats_do_not_divide_by_zero() {
+        let stats = ServeStats::default();
+        assert_eq!(stats.req_per_sec(), 0.0);
+        assert_eq!(stats.gen_tok_per_sec(), 0.0);
+        assert_eq!(stats.mean_fill_ratio(), 0.0);
+        assert!(stats.summary().contains("0 reqs"));
+    }
+}

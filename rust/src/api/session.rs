@@ -1,0 +1,384 @@
+//! Session façade: one `Session` owns the engine, runs directory,
+//! pipeline scale, and method registry; a `ModelSession` binds one
+//! manifest model and owns its teacher resolution (memory + disk cache)
+//! and checkpoint paths. Every entry point — CLI, examples, benches, the
+//! experiment harness — builds on this instead of hand-threading
+//! `(Engine, ModelRuntime, teacher, runs_dir, Args)` tuples.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::coordinator::distill::RecoveryOutcome;
+use crate::coordinator::{checkpoint, pipeline, PipelineScale, RecoveryCfg, TeacherReport};
+use crate::data::tasks::Suite;
+use crate::data::{SourceKind, SourceSpec};
+use crate::eval::{run_suites, EvalCfg, SampleCfg};
+use crate::quant::PtqReport;
+use crate::runtime::{Engine, Manifest, ModelRuntime};
+use crate::util::json::Json;
+
+use super::method::{MethodRef, MethodRegistry, RecoveryMethod};
+use super::serve::{ServeCfg, ServeHandle, ServeWeights};
+
+/// Where a model's recovered checkpoint lives — derived from the *parsed*
+/// method (its registry name), never from a raw flag string.
+pub fn recovered_path(runs_dir: &Path, model: &str, method_key: &str) -> PathBuf {
+    runs_dir.join("recovered").join(format!("{model}-{method_key}.qckp"))
+}
+
+pub struct SessionBuilder {
+    artifacts_dir: PathBuf,
+    runs_dir: PathBuf,
+    scale: PipelineScale,
+    seed: u64,
+    methods: MethodRegistry,
+}
+
+impl SessionBuilder {
+    pub fn new() -> SessionBuilder {
+        SessionBuilder {
+            artifacts_dir: PathBuf::from("artifacts"),
+            runs_dir: PathBuf::from("runs"),
+            scale: PipelineScale::default(),
+            seed: 0,
+            methods: MethodRegistry::builtin(),
+        }
+    }
+
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn runs_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.runs_dir = dir.into();
+        self
+    }
+
+    /// Teacher-pipeline step scale (1.0 = full sim pipeline).
+    pub fn scale(mut self, scale: f64) -> Self {
+        self.scale = PipelineScale(scale);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Register an additional recovery method (see `api::RecoveryMethod`).
+    pub fn register_method(mut self, method: Rc<dyn RecoveryMethod>) -> Self {
+        self.methods.register(method);
+        self
+    }
+
+    pub fn build(self) -> Result<Session> {
+        let engine = Engine::new(&self.artifacts_dir)?;
+        Ok(Session {
+            engine,
+            runs_dir: self.runs_dir,
+            scale: self.scale,
+            seed: self.seed,
+            methods: self.methods,
+            teachers: RefCell::new(HashMap::new()),
+        })
+    }
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder::new()
+    }
+}
+
+/// Owns the PJRT engine, run artifacts, the recovery-method registry, and
+/// an in-memory teacher cache shared by every `ModelSession`.
+pub struct Session {
+    engine: Engine,
+    runs_dir: PathBuf,
+    scale: PipelineScale,
+    seed: u64,
+    methods: MethodRegistry,
+    teachers: RefCell<HashMap<String, Rc<Vec<f32>>>>,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.engine.manifest
+    }
+
+    pub fn runs_dir(&self) -> &Path {
+        &self.runs_dir
+    }
+
+    pub fn report_dir(&self) -> PathBuf {
+        self.runs_dir.join("report")
+    }
+
+    pub fn scale(&self) -> PipelineScale {
+        self.scale
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn methods(&self) -> &MethodRegistry {
+        &self.methods
+    }
+
+    /// Resolve a recovery method by registry name (built-ins plus any
+    /// methods registered on the builder).
+    pub fn method(&self, name: &str) -> Result<MethodRef> {
+        self.methods.resolve(name)
+    }
+
+    /// Bind a manifest model.
+    pub fn model(&self, name: &str) -> Result<ModelSession<'_>> {
+        let rt = ModelRuntime::new(&self.engine, name)?;
+        Ok(ModelSession { session: self, rt })
+    }
+}
+
+/// One model bound to a session: runtime handles, teacher resolution,
+/// recovery, evaluation, and serving.
+pub struct ModelSession<'s> {
+    session: &'s Session,
+    pub rt: ModelRuntime<'s>,
+}
+
+impl<'s> ModelSession<'s> {
+    pub fn session(&self) -> &'s Session {
+        self.session
+    }
+
+    pub fn engine(&self) -> &'s Engine {
+        &self.session.engine
+    }
+
+    pub fn name(&self) -> &str {
+        &self.rt.model.name
+    }
+
+    /// The model's BF16 teacher: in-memory cache → disk cache
+    /// (runs/teachers, rejecting stale sizes) → full post-training
+    /// pipeline. Every caller in a session shares one copy.
+    pub fn teacher(&self) -> Result<Rc<Vec<f32>>> {
+        let name = self.rt.model.name.clone();
+        if let Some(t) = self.session.teachers.borrow().get(&name) {
+            return Ok(t.clone());
+        }
+        let params = pipeline::get_or_train_teacher(
+            &self.session.engine,
+            &name,
+            &self.session.runs_dir,
+            self.session.scale,
+        )?;
+        let rc = Rc::new(params);
+        self.session.teachers.borrow_mut().insert(name, rc.clone());
+        Ok(rc)
+    }
+
+    /// Run the model's full post-training pipeline from scratch and return
+    /// the stage report (pilot / debugging). Updates the in-memory teacher
+    /// cache but deliberately not the disk cache — scaled-down pilot
+    /// teachers must not shadow full-scale ones.
+    pub fn train_teacher(&self) -> Result<TeacherReport> {
+        let report =
+            pipeline::train_teacher(&self.session.engine, &self.rt.model.name, self.session.scale)?;
+        self.session
+            .teachers
+            .borrow_mut()
+            .insert(self.rt.model.name.clone(), Rc::new(report.params.clone()));
+        Ok(report)
+    }
+
+    /// Where `method`'s recovered checkpoint for this model lives.
+    pub fn checkpoint_path(&self, method: &dyn RecoveryMethod) -> PathBuf {
+        recovered_path(&self.session.runs_dir, &self.rt.model.name, method.name())
+    }
+
+    /// Run a recovery method against the (cached) teacher.
+    pub fn recover(
+        &self,
+        method: &dyn RecoveryMethod,
+        cfg: &RecoveryCfg,
+    ) -> Result<RecoveryOutcome> {
+        let teacher = self.teacher()?;
+        method.recover(self, &teacher, cfg)
+    }
+
+    /// Run a recovery method against explicit teacher weights (cross-model
+    /// distillation, sweeps over intermediate teachers, ...).
+    pub fn recover_from(
+        &self,
+        method: &dyn RecoveryMethod,
+        teacher: &[f32],
+        cfg: &RecoveryCfg,
+    ) -> Result<RecoveryOutcome> {
+        method.recover(self, teacher, cfg)
+    }
+
+    /// Persist a recovery outcome at the method-derived checkpoint path.
+    pub fn save_recovered(
+        &self,
+        method: &dyn RecoveryMethod,
+        outcome: &RecoveryOutcome,
+    ) -> Result<PathBuf> {
+        let path = self.checkpoint_path(method);
+        checkpoint::save(
+            &path,
+            &outcome.params,
+            &Json::obj(vec![
+                ("model", Json::Str(self.rt.model.name.clone())),
+                ("method", Json::Str(method.name().to_string())),
+            ]),
+        )?;
+        Ok(path)
+    }
+
+    /// Load a method's recovered checkpoint.
+    pub fn load_recovered(&self, method: &dyn RecoveryMethod) -> Result<Vec<f32>> {
+        checkpoint::load(&self.checkpoint_path(method))
+    }
+
+    /// The weights to evaluate/serve for a method: training-free methods
+    /// (BF16/PTQ) use the teacher; trained methods load their checkpoint.
+    pub fn method_params(&self, method: &dyn RecoveryMethod) -> Result<Vec<f32>> {
+        if method.step_key().is_none() {
+            Ok(self.teacher()?.as_ref().clone())
+        } else {
+            self.load_recovered(method)
+        }
+    }
+
+    /// Evaluate weights on benchmark suites through the method's fwd path.
+    pub fn evaluate(
+        &self,
+        method: &dyn RecoveryMethod,
+        params: &[f32],
+        suites: &[Suite],
+        cfg: &EvalCfg,
+    ) -> Result<std::collections::BTreeMap<String, f64>> {
+        run_suites(&self.session.engine, &self.rt, method.fwd_key(), params, suites, cfg)
+    }
+
+    /// PTQ export report for the (cached) teacher weights.
+    pub fn ptq_report(&self) -> Result<PtqReport> {
+        let teacher = self.teacher()?;
+        Ok(crate::coordinator::ptq_report(&self.rt, &teacher))
+    }
+
+    /// Start a coalescing server over one fwd artifact, resolving the
+    /// weight source through this session (teacher cache, recovered
+    /// checkpoints, or random init).
+    pub fn server(&self, fwd_key: &str, cfg: &ServeCfg) -> Result<ServeHandle<'s>> {
+        let weights = match &cfg.weights {
+            ServeWeights::Random { seed } => crate::coordinator::init_params(&self.rt.model, *seed),
+            ServeWeights::Teacher => self.teacher()?.as_ref().clone(),
+            ServeWeights::Method(name) => {
+                let method = self.session.method(name)?;
+                self.method_params(&*method)?
+            }
+            ServeWeights::Params(p) => p.clone(),
+        };
+        ServeHandle::new(&self.rt, fwd_key, &weights, cfg)
+    }
+
+    /// The suites the model's post-training covered (its natural
+    /// training/eval distribution).
+    pub fn train_suites(&self) -> &'static [Suite] {
+        pipeline::train_suites(&self.rt.model.name)
+    }
+
+    /// Eval sampling config per model (paper §3.4: nano3 uses T=1/top-p 1).
+    pub fn sample_cfg(&self) -> SampleCfg {
+        default_sample_cfg(&self.rt.model.name)
+    }
+
+    /// The default recovery data mixture per model (paper §3.2).
+    pub fn default_recovery_data(&self) -> Vec<SourceSpec> {
+        default_recovery_data(&self.rt.model.name)
+    }
+
+    /// Default per-model recovery LR (paper §3.4 scaled to the sim).
+    pub fn default_recovery_lr(&self) -> f64 {
+        default_recovery_lr(&self.rt.model.name)
+    }
+
+    /// A ready-to-run recovery config with the per-model defaults; the
+    /// session seed drives training-data order.
+    pub fn default_recovery_cfg(&self, steps: usize) -> RecoveryCfg {
+        let mut cfg = default_recovery_cfg(&self.rt.model.name, steps);
+        cfg.train.seed = self.session.seed;
+        cfg
+    }
+}
+
+/// Eval sampling config per model (paper §3.4: nano3 uses T=1.0/top-p 1).
+pub fn default_sample_cfg(model: &str) -> SampleCfg {
+    if model == "nano3-sim" {
+        SampleCfg::nano3()
+    } else {
+        SampleCfg::default()
+    }
+}
+
+/// The default recovery data mixture per model — mirrors paper §3.2:
+/// SFT-heavy models use their (clean) SFT mixture; ace uses only its
+/// cold-start SFT data; nano3 uses cold-start SFT + RL generations.
+pub fn default_recovery_data(model: &str) -> Vec<SourceSpec> {
+    let suites = pipeline::train_suites(model);
+    match model {
+        "ace-sim" => vec![SourceSpec::sft_quality(suites, 0.7)],
+        "nano3-sim" => vec![
+            SourceSpec::sft_quality(suites, 0.7).with_weight(0.5),
+            SourceSpec {
+                kind: SourceKind::RlGenerated,
+                suites: pipeline::rl_suites(model).to_vec(),
+                weight: 0.5,
+            },
+        ],
+        _ => vec![SourceSpec::sft(suites)],
+    }
+}
+
+/// Default per-model recovery LR (paper §3.4 scaled to the sim:
+/// RL-heavy models want larger QAD LRs).
+pub fn default_recovery_lr(model: &str) -> f64 {
+    if pipeline::is_rl_heavy(model) {
+        3e-4
+    } else {
+        1e-4
+    }
+}
+
+/// A ready-to-run recovery config with the per-model defaults.
+pub fn default_recovery_cfg(model: &str, steps: usize) -> RecoveryCfg {
+    let mut cfg = RecoveryCfg::new(default_recovery_data(model), default_recovery_lr(model), steps);
+    cfg.teacher_sample = default_sample_cfg(model);
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovered_path_uses_method_key() {
+        let p = recovered_path(Path::new("runs"), "ace-sim", "qad");
+        assert_eq!(p, Path::new("runs").join("recovered").join("ace-sim-qad.qckp"));
+    }
+}

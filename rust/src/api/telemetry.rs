@@ -1,0 +1,68 @@
+//! Optional JSONL telemetry: an append-only event log for serving and
+//! compile metrics. Opt-in via `ServeCfg::telemetry` or the
+//! `QADX_TELEMETRY_JSONL` environment variable; when unset, nothing is
+//! written and the hot path pays only an `Option` check.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Append-only JSONL writer (one compact JSON object per line).
+pub struct JsonlAppender {
+    file: std::fs::File,
+    pub path: PathBuf,
+}
+
+impl JsonlAppender {
+    pub fn open(path: &Path) -> Result<JsonlAppender> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JsonlAppender { file, path: path.to_path_buf() })
+    }
+
+    /// Open from an environment variable holding a path; None when the
+    /// variable is unset or the file cannot be opened (telemetry must
+    /// never take down the serving path).
+    pub fn from_env(var: &str) -> Option<JsonlAppender> {
+        std::env::var(var).ok().and_then(|p| JsonlAppender::open(Path::new(&p)).ok())
+    }
+
+    pub fn append(&mut self, record: &Json) -> Result<()> {
+        writeln!(self.file, "{}", record.to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn appends_one_object_per_line() {
+        let dir = std::env::temp_dir().join("qadx_telemetry_test");
+        let path = dir.join("events.jsonl");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut app = JsonlAppender::open(&path).unwrap();
+            app.append(&Json::obj(vec![("event", Json::Str("a".into()))])).unwrap();
+            app.append(&Json::obj(vec![("event", Json::Str("b".into()))])).unwrap();
+        }
+        // re-open appends rather than truncating
+        let mut app = JsonlAppender::open(&path).unwrap();
+        app.append(&Json::obj(vec![("event", Json::Str("c".into()))])).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in lines {
+            assert!(Json::parse(line).is_ok());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

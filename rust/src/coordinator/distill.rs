@@ -14,7 +14,13 @@ use crate::eval::{run_suites, EvalCfg, SampleCfg, TeacherGenerator};
 use crate::quant;
 use crate::runtime::{DeviceState, Engine, ModelRuntime};
 
-/// Recovery method (the rows of Tables 2/3/10).
+/// The paper's six recovery methods (the rows of Tables 2/3/10).
+///
+/// This enum is a convenience handle over the open `api::RecoveryMethod`
+/// trait: each variant is registered as a built-in in
+/// `api::MethodRegistry::builtin()`, and new methods are added by
+/// implementing the trait — not by growing this enum. The experiment
+/// harness (`exper/`) keeps using the enum for its fixed paper tables.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
     Bf16,
@@ -26,6 +32,22 @@ pub enum Method {
 }
 
 impl Method {
+    /// All built-in methods, in paper-table row order.
+    pub const ALL: [Method; 6] =
+        [Method::Bf16, Method::Ptq, Method::Qat, Method::Qad, Method::Mse, Method::Nqt];
+
+    /// Short registry key (CLI `--method` value, checkpoint file suffix).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Method::Bf16 => "bf16",
+            Method::Ptq => "ptq",
+            Method::Qat => "qat",
+            Method::Qad => "qad",
+            Method::Mse => "mse",
+            Method::Nqt => "nqt",
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Method::Bf16 => "BF16",
@@ -94,13 +116,15 @@ impl RecoveryCfg {
 
 /// The student weights a method produces (plus its training curve).
 pub struct RecoveryOutcome {
-    pub method: Method,
+    /// Registry key of the method that produced these weights ("qad", ...).
+    pub method: String,
     pub params: Vec<f32>,
     pub curve: Vec<(usize, f64)>,
     pub val_curve: Vec<(usize, f64)>,
 }
 
-/// Produce student weights for `method` starting from `teacher`.
+/// Produce student weights for the built-in `method` (enum convenience
+/// wrapper over [`run_recovery`]).
 ///
 /// * BF16  — the teacher itself (evaluated unquantized)
 /// * PTQ   — teacher weights (evaluated through the fake-quant fwd; the
@@ -114,13 +138,31 @@ pub fn run_method(
     teacher: &[f32],
     cfg: &RecoveryCfg,
 ) -> Result<RecoveryOutcome> {
+    run_recovery(engine, rt, method.key(), method.step_key(), method.fwd_key(), teacher, cfg)
+}
+
+/// The method-agnostic recovery loop: train `step_key` from the teacher
+/// init (or return the teacher unchanged when `step_key` is None), then
+/// apply the §3.4 top-k checkpoint-selection protocol through `fwd_key`.
+///
+/// This is the engine behind every `api::RecoveryMethod` implementation;
+/// the method only decides which artifacts drive it.
+pub fn run_recovery(
+    engine: &Engine,
+    rt: &ModelRuntime,
+    method_key: &str,
+    step_key: Option<&str>,
+    fwd_key: &str,
+    teacher: &[f32],
+    cfg: &RecoveryCfg,
+) -> Result<RecoveryOutcome> {
     let mut outcome = RecoveryOutcome {
-        method,
+        method: method_key.to_string(),
         params: teacher.to_vec(),
         curve: vec![],
         val_curve: vec![],
     };
-    let Some(step_key) = method.step_key() else {
+    let Some(step_key) = step_key else {
         return Ok(outcome); // BF16 / PTQ need no training
     };
 
@@ -182,7 +224,7 @@ pub fn run_method(
         let accs = run_suites(
             engine,
             rt,
-            method.fwd_key(),
+            fwd_key,
             &ck.params,
             &cfg.select_suites,
             &cfg.eval,

@@ -11,8 +11,10 @@ pub mod rl;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
-pub use distill::{eval_method, ptq_report, run_method, Method, RecoveryCfg, RecoveryOutcome};
+pub use distill::{
+    eval_method, ptq_report, run_method, run_recovery, Method, RecoveryCfg, RecoveryOutcome,
+};
 pub use init::init_params;
-pub use pipeline::{get_or_train_teacher, train_teacher, PipelineScale};
+pub use pipeline::{get_or_train_teacher, train_teacher, PipelineScale, TeacherReport};
 pub use rl::{rl_stage, RlCfg};
 pub use trainer::{LrSchedule, StepRecord, TrainCfg, Trainer, TrainLog};

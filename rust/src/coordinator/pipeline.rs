@@ -78,6 +78,29 @@ pub struct TeacherReport {
     pub rl_reward_after: f64,
 }
 
+/// Load a cached teacher checkpoint if it exists and matches the expected
+/// parameter count. A stale (wrong-size) or unreadable cache returns None
+/// so the caller retrains instead of serving bad weights.
+pub fn load_cached_teacher(path: &Path, expect: usize) -> Option<Vec<f32>> {
+    if !path.exists() {
+        return None;
+    }
+    match checkpoint::load(path) {
+        Ok(params) if params.len() == expect => Some(params),
+        Ok(params) => {
+            eprintln!(
+                "teacher cache {path:?} has stale size ({} != {expect}); retraining",
+                params.len()
+            );
+            None
+        }
+        Err(e) => {
+            eprintln!("teacher cache {path:?} unreadable ({e:#}); retraining");
+            None
+        }
+    }
+}
+
 /// Load the cached teacher or run the full pipeline.
 pub fn get_or_train_teacher(
     engine: &Engine,
@@ -86,13 +109,9 @@ pub fn get_or_train_teacher(
     scale: PipelineScale,
 ) -> Result<Vec<f32>> {
     let path = teacher_path(runs_dir, model);
-    if path.exists() {
-        let params = checkpoint::load(&path)?;
-        let expect = engine.manifest.model(model)?.param_count;
-        if params.len() == expect {
-            return Ok(params);
-        }
-        eprintln!("teacher cache {path:?} has stale size; retraining");
+    let expect = engine.manifest.model(model)?.param_count;
+    if let Some(params) = load_cached_teacher(&path, expect) {
+        return Ok(params);
     }
     let report = train_teacher(engine, model, scale)?;
     let meta = Json::obj(vec![
@@ -211,4 +230,24 @@ pub fn train_teacher(engine: &Engine, model: &str, scale: PipelineScale) -> Resu
     report.stages = stages;
     eprintln!("{} ({} stages)", timer.report(), report.stages.len());
     Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn cached_teacher_rejects_stale_size() {
+        let dir = std::env::temp_dir().join("qadx_teacher_cache_test");
+        let path = teacher_path(&dir, "m");
+        let params: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        checkpoint::save(&path, &params, &Json::obj(vec![])).unwrap();
+        assert_eq!(load_cached_teacher(&path, 16), Some(params));
+        // wrong expected size -> treated as a miss, not served
+        assert_eq!(load_cached_teacher(&path, 8), None);
+        // missing file -> miss
+        assert_eq!(load_cached_teacher(&teacher_path(&dir, "other"), 16), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

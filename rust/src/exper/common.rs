@@ -1,15 +1,14 @@
-//! Shared experiment context: engine, teacher cache, recovery/eval helpers,
-//! and the sim↔paper column mappings used by the table drivers.
+//! Shared experiment context: a `qadx::api::Session` plus eval/recovery
+//! budgets, and the sim↔paper column mappings used by the table drivers.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::coordinator::{
-    get_or_train_teacher, pipeline, run_method, Method, PipelineScale, RecoveryCfg,
-};
-use crate::data::{SourceKind, SourceSpec, Suite};
+use crate::api::{self, cli, Session};
+use crate::coordinator::{run_method, Method, RecoveryCfg};
+use crate::data::{SourceSpec, Suite};
 use crate::eval::{run_suite, EvalCfg, SampleCfg};
 use crate::runtime::{Engine, ModelRuntime};
 use crate::util::args::Args;
@@ -32,9 +31,7 @@ pub fn col_seeded(label: &'static str, suite: Suite, seed_offset: u64) -> Col {
 }
 
 pub struct Ctx {
-    pub engine: Engine,
-    pub runs: PathBuf,
-    pub scale: PipelineScale,
+    pub session: Session,
     pub eval: EvalCfg,
     /// Default recovery step budget (tables override per experiment).
     pub recover_steps: usize,
@@ -42,77 +39,58 @@ pub struct Ctx {
 
 impl Ctx {
     pub fn from_args(args: &Args) -> Result<Ctx> {
-        let engine = Engine::new(&PathBuf::from(args.get_or("artifacts", "artifacts")))?;
         let quick = args.bool("quick");
+        let mut sargs = cli::SessionArgs::parse(args)?;
+        if args.get("scale").is_none() {
+            sargs.scale = if quick { 0.08 } else { 1.0 };
+        }
+        let session = sargs.build()?;
         let mut eval = EvalCfg::default();
         eval.n_problems = args.usize_or("n", if quick { 12 } else { 40 });
         eval.k_runs = args.usize_or("k", if quick { 1 } else { 3 });
         Ok(Ctx {
-            engine,
-            runs: PathBuf::from(args.get_or("runs", "runs")),
-            scale: PipelineScale(args.f64_or("scale", if quick { 0.08 } else { 1.0 })),
+            session,
             eval,
             recover_steps: args.usize_or("steps", if quick { 60 } else { 400 }),
         })
     }
 
-    pub fn report_dir(&self) -> PathBuf {
-        self.runs.join("report")
+    pub fn engine(&self) -> &Engine {
+        self.session.engine()
     }
 
+    pub fn report_dir(&self) -> PathBuf {
+        self.session.report_dir()
+    }
+
+    /// The model's teacher (session-cached in memory + on disk).
     pub fn teacher(&self, model: &str) -> Result<Vec<f32>> {
-        get_or_train_teacher(&self.engine, model, &self.runs, self.scale)
+        Ok(self.session.model(model)?.teacher()?.as_ref().clone())
     }
 
     pub fn rt(&self, model: &str) -> Result<ModelRuntime<'_>> {
-        ModelRuntime::new(&self.engine, model)
+        ModelRuntime::new(self.session.engine(), model)
     }
 
     /// Eval sampling config per model (paper §3.4: nano3 uses T=1.0/top-p 1).
     pub fn sample_cfg(&self, model: &str) -> SampleCfg {
-        if model == "nano3-sim" {
-            SampleCfg::nano3()
-        } else {
-            SampleCfg::default()
-        }
+        api::default_sample_cfg(model)
     }
 
-    /// The default recovery data per model — mirrors paper §3.2:
-    /// SFT-heavy models use their (clean) SFT mixture; ace uses only its
-    /// cold-start SFT data; nano3 uses cold-start SFT + RL generations.
+    /// The default recovery data per model (paper §3.2).
     pub fn recovery_data(&self, model: &str) -> Vec<SourceSpec> {
-        let suites = pipeline::train_suites(model);
-        match model {
-            "ace-sim" => vec![SourceSpec::sft_quality(suites, 0.7)],
-            "nano3-sim" => vec![
-                SourceSpec::sft_quality(suites, 0.7).with_weight(0.5),
-                SourceSpec {
-                    kind: SourceKind::RlGenerated,
-                    suites: pipeline::rl_suites(model).to_vec(),
-                    weight: 0.5,
-                },
-            ],
-            _ => vec![SourceSpec::sft(suites)],
-        }
+        api::default_recovery_data(model)
     }
 
     /// Default per-model recovery LR (paper §3.4 scaled to the sim).
     pub fn recovery_lr(&self, model: &str) -> f64 {
-        if pipeline::is_rl_heavy(model) {
-            3e-4 // paper: RL-heavy models want larger QAD LRs
-        } else {
-            1e-4
-        }
+        api::default_recovery_lr(model)
     }
 
     pub fn recovery_cfg(&self, model: &str) -> RecoveryCfg {
-        let mut cfg = RecoveryCfg::new(
-            self.recovery_data(model),
-            self.recovery_lr(model),
-            self.recover_steps,
-        );
+        let mut cfg = api::default_recovery_cfg(model, self.recover_steps);
+        cfg.train.seed = self.session.seed();
         cfg.eval = self.eval;
-        cfg.teacher_sample = self.sample_cfg(model);
         cfg
     }
 
@@ -124,7 +102,7 @@ impl Ctx {
         teacher: &[f32],
         cfg: &RecoveryCfg,
     ) -> Result<Vec<f32>> {
-        Ok(run_method(&self.engine, rt, method, teacher, cfg)?.params)
+        Ok(run_method(self.engine(), rt, method, teacher, cfg)?.params)
     }
 
     /// Evaluate weights over labelled columns (per-column problem seeds).
@@ -135,13 +113,13 @@ impl Ctx {
         params: &[f32],
         cols: &[Col],
     ) -> Result<BTreeMap<&'static str, f64>> {
-        let wbuf = self.engine.upload_f32(params, &[params.len()])?;
+        let wbuf = self.engine().upload_f32(params, &[params.len()])?;
         let mut out = BTreeMap::new();
         for c in cols {
             let mut ecfg = self.eval;
             ecfg.sample = self.sample_cfg(&rt.model.name);
             ecfg.problem_seed = ecfg.problem_seed.wrapping_add(c.seed_offset);
-            let r = run_suite(&self.engine, rt, method.fwd_key(), &wbuf, c.suite, &ecfg)?;
+            let r = run_suite(self.engine(), rt, method.fwd_key(), &wbuf, c.suite, &ecfg)?;
             out.insert(c.label, r.accuracy);
         }
         Ok(out)

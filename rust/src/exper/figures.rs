@@ -43,7 +43,7 @@ pub fn run_figure1(ctx: &Ctx) -> Result<TableReport> {
         let mut factory = BatchFactory::new(shape, vec![spec.clone()], 0xf16);
         let teacher_buf = rt.upload_params(&teacher)?;
         let mut state = DeviceState::from_params(&rt, &teacher)?;
-        let trainer = Trainer::new(&ctx.engine, &rt);
+        let trainer = Trainer::new(ctx.engine(), &rt);
         let mut seg_cfg = cfg.train.clone();
         seg_cfg.steps = seg_steps;
         seg_cfg.val_every = 0;
@@ -53,7 +53,7 @@ pub fn run_figure1(ctx: &Ctx) -> Result<TableReport> {
             let params = state.params()?;
             let mut vf = BatchFactory::new(shape, vec![spec.clone()], 0xe7a1);
             let m = eval_distribution(
-                &ctx.engine, &rt, "eval_nvfp4", &params, &teacher, &mut vf, &spec, 4,
+                ctx.engine(), &rt, "eval_nvfp4", &params, &teacher, &mut vf, &spec, 4,
             )?;
             let step = (seg + 1) * seg_steps;
             csv.row_f64(

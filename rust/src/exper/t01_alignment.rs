@@ -43,7 +43,7 @@ pub fn run(ctx: &Ctx) -> Result<TableReport> {
         let mut factory =
             BatchFactory::new(shape_for(&rt.model), vec![spec.clone()], 0xe7a1);
         let m = eval_distribution(
-            &ctx.engine, &rt, key, params, &teacher, &mut factory, &spec, n_batches,
+            ctx.engine(), &rt, key, params, &teacher, &mut factory, &spec, n_batches,
         )?;
         report.row(vec![
             name.to_string(),

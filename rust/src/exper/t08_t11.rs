@@ -77,9 +77,9 @@ pub fn run_table9(ctx: &Ctx) -> Result<TableReport> {
     // run_method drives the standard artifact, so drive this one manually.
     let shape = shape_for(&rt.model);
     let mut factory = BatchFactory::new(shape, cfg.data.clone(), 0x7e);
-    let t_buf = ctx.engine.upload_f32(&big_teacher, &[big_teacher.len()])?;
+    let t_buf = ctx.engine().upload_f32(&big_teacher, &[big_teacher.len()])?;
     let mut state = DeviceState::from_params(&rt, &teacher)?;
-    let trainer = crate::coordinator::Trainer::new(&ctx.engine, &rt);
+    let trainer = crate::coordinator::Trainer::new(ctx.engine(), &rt);
     trainer.train("qad_nvfp4_xsuper", &mut state, &mut factory, Some(&t_buf), None, &cfg.train)?;
     let big = state.params()?;
     let big_accs = ctx.eval_cols(&rt, Method::Qad, &big, &cols)?;
@@ -159,7 +159,7 @@ pub fn run_table11(ctx: &Ctx) -> Result<TableReport> {
     for (label, data, paper) in variants {
         let mut cfg = ctx.recovery_cfg(model);
         cfg.data = data;
-        let outcome = run_method(&ctx.engine, &rt, Method::Qad, &teacher, &cfg)?;
+        let outcome = run_method(ctx.engine(), &rt, Method::Qad, &teacher, &cfg)?;
         let accs = ctx.eval_cols(&rt, Method::Qad, &outcome.params, &cols)?;
         eprintln!("  [table11] {label}: {accs:?}");
         report.row(ctx.method_row(label, &cols, &accs, &paper));

@@ -10,6 +10,7 @@
 //!   coordinator (`coordinator`), sampling-based evaluation (`eval`), and
 //!   the paper-table experiment harness (`exper`).
 
+pub mod api;
 pub mod quant;
 pub mod runtime;
 pub mod util;

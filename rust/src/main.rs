@@ -1,28 +1,24 @@
 //! qadx — leader entrypoint / CLI.
 //!
-//! Subcommands:
-//!   info                         manifest + artifact summary
-//!   teacher <model>              run the model's post-training pipeline
-//!   ptq <model>                  PTQ export report (compression, per-layer err)
-//!   recover <model> --method M   QAD/QAT/MSE/NQT accuracy recovery
-//!   eval <model> --method M      benchmark a method's weights
-//!   pilot                        scaled-down end-to-end sanity run
-//!   table <N> | all-tables       regenerate paper tables (exper harness)
-//!   figure <1|2>                 regenerate paper figures (CSV curves)
-//!
-//! Common flags: --artifacts DIR (default artifacts/), --runs DIR (default
-//! runs/), --scale F (teacher pipeline step scale), --n / --k (eval size).
+//! Every subcommand is a thin typed wrapper over `qadx::api`: flags parse
+//! into the same config structs library users build by hand
+//! (`api::cli::*Args`), sessions come from `Session::builder()`, and all
+//! teacher/checkpoint/method plumbing lives in the API layer. Run
+//! `qadx help` (or `qadx help <command>`) for generated usage text.
 
-use std::path::PathBuf;
 use std::process::ExitCode;
+use std::time::Instant;
 
-use qadx::coordinator::{self, Method, PipelineScale, RecoveryCfg};
-use qadx::data::Suite;
-use qadx::data::SourceSpec;
+use qadx::api::cli::{
+    self, EvalArgs, PilotArgs, RecoverArgs, ServeBenchArgs, SessionArgs,
+};
+use qadx::api::ServeCfg;
+use qadx::coordinator::RecoveryCfg;
+use qadx::data::{tasks, SourceSpec, Suite};
 use qadx::eval::EvalCfg;
 use qadx::exper;
-use qadx::runtime::{Engine, ModelRuntime};
 use qadx::util::args::Args;
+use qadx::util::rng::Rng;
 
 fn main() -> ExitCode {
     let args = Args::from_env();
@@ -35,41 +31,45 @@ fn main() -> ExitCode {
     }
 }
 
-fn engine(args: &Args) -> anyhow::Result<Engine> {
-    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    Engine::new(&dir)
-}
-
-fn runs_dir(args: &Args) -> PathBuf {
-    PathBuf::from(args.get_or("runs", "runs"))
-}
-
 fn run(args: &Args) -> anyhow::Result<()> {
-    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
+    let name = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let Some(cmd) = cli::find_command(name) else {
+        println!("{}", cli::render_help());
+        if name != "help" {
+            anyhow::bail!("unknown command {name:?}");
+        }
+        return Ok(());
+    };
+    cli::check_flags(cmd, args)?;
+    match cmd.name {
         "info" => info(args),
         "teacher" => teacher(args),
         "ptq" => ptq(args),
         "recover" => recover(args),
         "eval" => eval_cmd(args),
         "pilot" => pilot(args),
+        "serve-bench" => serve_bench(args),
         "table" => exper::run_table_cmd(args),
         "all-tables" => exper::run_all_tables(args),
         "figure" => exper::run_figure_cmd(args),
         _ => {
-            println!("{HELP}");
+            // `help [command]`
+            match args.positional.get(1).and_then(|c| cli::find_command(c)) {
+                Some(c) => println!("{}", cli::render_usage(c)),
+                None => println!("{}", cli::render_help()),
+            }
             Ok(())
         }
     }
 }
 
-const HELP: &str = "qadx — NVFP4 QAD reproduction
-usage: qadx <info|teacher|ptq|recover|eval|pilot|table|all-tables|figure> [flags]
-see rust/src/main.rs header for flags";
+fn positional_model(args: &Args) -> String {
+    args.positional.get(1).cloned().unwrap_or_else(|| "ace-sim".into())
+}
 
 fn info(args: &Args) -> anyhow::Result<()> {
-    let engine = engine(args)?;
-    let m = &engine.manifest;
+    let session = SessionArgs::parse(args)?.build()?;
+    let m = session.manifest();
     println!("vocab={} scalars={:?}", m.vocab, m.scalar_names);
     for (name, e) in &m.models {
         println!(
@@ -86,26 +86,23 @@ fn info(args: &Args) -> anyhow::Result<()> {
             e.artifacts.len()
         );
     }
+    println!("methods: {}", session.methods().names().join(", "));
     Ok(())
 }
 
 fn teacher(args: &Args) -> anyhow::Result<()> {
-    let engine = engine(args)?;
-    let model = args.positional.get(1).map(|s| s.as_str()).unwrap_or("ace-sim");
-    let scale = PipelineScale(args.f64_or("scale", 1.0));
-    let params = coordinator::get_or_train_teacher(&engine, model, &runs_dir(args), scale)?;
-    println!("teacher[{model}]: {} params cached", params.len());
+    let session = SessionArgs::parse(args)?.build()?;
+    let ms = session.model(&positional_model(args))?;
+    let params = ms.teacher()?;
+    println!("teacher[{}]: {} params cached", ms.name(), params.len());
     Ok(())
 }
 
 fn ptq(args: &Args) -> anyhow::Result<()> {
-    let engine = engine(args)?;
-    let model = args.positional.get(1).map(|s| s.as_str()).unwrap_or("ace-sim");
-    let scale = PipelineScale(args.f64_or("scale", 1.0));
-    let teacher = coordinator::get_or_train_teacher(&engine, model, &runs_dir(args), scale)?;
-    let rt = ModelRuntime::new(&engine, model)?;
-    let report = coordinator::ptq_report(&rt, &teacher);
-    println!("PTQ export for {model} (NVFP4, block 16, E4M3 scales):");
+    let session = SessionArgs::parse(args)?.build()?;
+    let ms = session.model(&positional_model(args))?;
+    let report = ms.ptq_report()?;
+    println!("PTQ export for {} (NVFP4, block 16, E4M3 scales):", ms.name());
     for (name, err, bytes) in &report.layers {
         if *err > 0.0 {
             println!("  {name:<12} rel_err={err:.4} bytes={bytes}");
@@ -120,80 +117,43 @@ fn ptq(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn parse_method(s: &str) -> anyhow::Result<Method> {
-    Ok(match s {
-        "bf16" => Method::Bf16,
-        "ptq" => Method::Ptq,
-        "qat" => Method::Qat,
-        "qad" => Method::Qad,
-        "mse" => Method::Mse,
-        "nqt" => Method::Nqt,
-        other => anyhow::bail!("unknown method {other:?}"),
-    })
-}
-
-fn parse_suites(args: &Args, default: &[Suite]) -> Vec<Suite> {
-    args.get("suites")
-        .map(|s| s.split(',').filter_map(Suite::from_name).collect::<Vec<_>>())
-        .filter(|v| !v.is_empty())
-        .unwrap_or_else(|| default.to_vec())
-}
-
 fn recover(args: &Args) -> anyhow::Result<()> {
-    let engine = engine(args)?;
-    let model = args.positional.get(1).map(|s| s.as_str()).unwrap_or("ace-sim");
-    let method = parse_method(&args.get_or("method", "qad"))?;
-    let scale = PipelineScale(args.f64_or("scale", 1.0));
-    let teacher = coordinator::get_or_train_teacher(&engine, model, &runs_dir(args), scale)?;
-    let rt = ModelRuntime::new(&engine, model)?;
-    let suites = parse_suites(args, coordinator::pipeline::train_suites(model));
-    let cfg = RecoveryCfg::new(
-        vec![SourceSpec::sft(&suites)],
-        args.f64_or("lr", 1e-4),
-        args.usize_or("steps", 300),
-    );
-    let out = coordinator::run_method(&engine, &rt, method, &teacher, &cfg)?;
-    println!("{} trained; loss curve:", method.name());
+    let r = RecoverArgs::parse(args)?;
+    let session = r.session.build()?;
+    let ms = session.model(&r.model)?;
+    let suites = r.suites.clone().unwrap_or_else(|| ms.train_suites().to_vec());
+    let mut cfg = RecoveryCfg::new(vec![SourceSpec::sft(&suites)], r.lr, r.steps);
+    cfg.train.seed = session.seed();
+    let out = ms.recover(&*r.method, &cfg)?;
+    println!("{} trained; loss curve:", r.method.display_name());
     for (s, l) in &out.curve {
         println!("  step {s:>5}  loss {l:.5}");
     }
-    let path = runs_dir(args)
-        .join("recovered")
-        .join(format!("{model}-{}.qckp", args.get_or("method", "qad")));
-    coordinator::checkpoint::save(
-        &path,
-        &out.params,
-        &qadx::util::json::Json::obj(vec![(
-            "method",
-            qadx::util::json::Json::Str(method.name().into()),
-        )]),
-    )?;
+    let path = ms.save_recovered(&*r.method, &out)?;
     println!("saved {path:?}");
     Ok(())
 }
 
 fn eval_cmd(args: &Args) -> anyhow::Result<()> {
-    let engine = engine(args)?;
-    let model = args.positional.get(1).map(|s| s.as_str()).unwrap_or("ace-sim");
-    let method = parse_method(&args.get_or("method", "bf16"))?;
-    let scale = PipelineScale(args.f64_or("scale", 1.0));
-    let teacher = coordinator::get_or_train_teacher(&engine, model, &runs_dir(args), scale)?;
-    let rt = ModelRuntime::new(&engine, model)?;
-    let suites = parse_suites(args, coordinator::pipeline::train_suites(model));
+    let e = EvalArgs::parse(args)?;
+    let session = e.session.build()?;
+    let ms = session.model(&e.model)?;
+    let suites = e.suites.clone().unwrap_or_else(|| ms.train_suites().to_vec());
     let mut ecfg = EvalCfg::default();
-    ecfg.n_problems = args.usize_or("n", ecfg.n_problems);
-    ecfg.k_runs = args.usize_or("k", ecfg.k_runs);
-    let params = match method {
-        Method::Bf16 | Method::Ptq => teacher,
-        _ => {
-            let p = runs_dir(args)
-                .join("recovered")
-                .join(format!("{model}-{}.qckp", args.get_or("method", "qad")));
-            coordinator::checkpoint::load(&p)?
-        }
-    };
-    let accs = coordinator::eval_method(&engine, &rt, method, &params, &suites, &ecfg)?;
-    println!("{} on {model} (n={}, k={}):", method.name(), ecfg.n_problems, ecfg.k_runs);
+    ecfg.n_problems = e.n;
+    ecfg.k_runs = e.k;
+    ecfg.sample = ms.sample_cfg();
+    // Weights follow the *parsed* method: teacher for training-free
+    // methods, otherwise the checkpoint at the method-derived path.
+    let params = ms.method_params(&*e.method)?;
+    let accs = ms.evaluate(&*e.method, &params, &suites, &ecfg)?;
+    println!(
+        "{} on {} (n={}, k={}):",
+        e.method.display_name(),
+        ms.name(),
+        ecfg.n_problems,
+        ecfg.k_runs
+    );
     for (s, a) in accs {
         println!("  {s:<16} {a:6.1}");
     }
@@ -202,34 +162,83 @@ fn eval_cmd(args: &Args) -> anyhow::Result<()> {
 
 /// Scaled-down end-to-end sanity run: teacher → PTQ gap → QAD/QAT recovery.
 fn pilot(args: &Args) -> anyhow::Result<()> {
-    let engine = engine(args)?;
-    let model = args.get_or("model", "ace-sim");
-    let scale = PipelineScale(args.f64_or("scale", 0.3));
-    println!("== pilot on {model} (scale {}) ==", scale.0);
-    let report = coordinator::train_teacher(&engine, &model, scale)?;
+    let p = PilotArgs::parse(args)?;
+    let session = p.session.build()?;
+    let ms = session.model(&p.model)?;
+    println!("== pilot on {} (scale {}) ==", p.model, session.scale().0);
+    let report = ms.train_teacher()?;
     println!("stages: {:?}", report.stages);
-    let rt = ModelRuntime::new(&engine, &model)?;
-    let suites = parse_suites(args, &[Suite::Math500, Suite::Aime, Suite::Lcb]);
+    let suites = p
+        .suites
+        .clone()
+        .unwrap_or_else(|| vec![Suite::Math500, Suite::Aime, Suite::Lcb]);
     let mut ecfg = EvalCfg::default();
-    ecfg.n_problems = args.usize_or("n", 24);
-    ecfg.k_runs = args.usize_or("k", 2);
+    ecfg.n_problems = p.n;
+    ecfg.k_runs = p.k;
 
-    let bf16 = coordinator::eval_method(&engine, &rt, Method::Bf16, &report.params, &suites, &ecfg)?;
-    println!("BF16: {bf16:?}");
-    let ptq = coordinator::eval_method(&engine, &rt, Method::Ptq, &report.params, &suites, &ecfg)?;
-    println!("PTQ:  {ptq:?}");
+    let bf16 = session.method("bf16")?;
+    let ptq = session.method("ptq")?;
+    let qad = session.method("qad")?;
+    let qat = session.method("qat")?;
 
-    let cfg = RecoveryCfg::new(
-        vec![SourceSpec::sft(&suites)],
-        args.f64_or("lr", 1e-4),
-        args.usize_or("steps", 200),
-    );
-    let qad = coordinator::run_method(&engine, &rt, Method::Qad, &report.params, &cfg)?;
-    println!("QAD loss curve: {:?}", qad.curve);
-    let qad_acc = coordinator::eval_method(&engine, &rt, Method::Qad, &qad.params, &suites, &ecfg)?;
+    let bf16_acc = ms.evaluate(&*bf16, &report.params, &suites, &ecfg)?;
+    println!("BF16: {bf16_acc:?}");
+    let ptq_acc = ms.evaluate(&*ptq, &report.params, &suites, &ecfg)?;
+    println!("PTQ:  {ptq_acc:?}");
+
+    let mut cfg = RecoveryCfg::new(vec![SourceSpec::sft(&suites)], p.lr, p.steps);
+    cfg.train.seed = session.seed();
+    let qad_out = ms.recover_from(&*qad, &report.params, &cfg)?;
+    println!("QAD loss curve: {:?}", qad_out.curve);
+    let qad_acc = ms.evaluate(&*qad, &qad_out.params, &suites, &ecfg)?;
     println!("QAD:  {qad_acc:?}");
-    let qat = coordinator::run_method(&engine, &rt, Method::Qat, &report.params, &cfg)?;
-    let qat_acc = coordinator::eval_method(&engine, &rt, Method::Qat, &qat.params, &suites, &ecfg)?;
+    let qat_out = ms.recover_from(&*qat, &report.params, &cfg)?;
+    let qat_acc = ms.evaluate(&*qat, &qat_out.params, &suites, &ecfg)?;
     println!("QAT:  {qat_acc:?}");
+    Ok(())
+}
+
+/// Coalescing-server throughput benchmark over both forward paths.
+fn serve_bench(args: &Args) -> anyhow::Result<()> {
+    let sb = ServeBenchArgs::parse(args)?;
+    let session = sb.session.build()?;
+    let ms = session.model(&sb.model)?;
+
+    // Session seed varies the request mix (default 0 keeps the historic
+    // serve_eval prompt stream).
+    let mut rng = Rng::new(42 ^ session.seed());
+    let suites = [Suite::Math500, Suite::Aime, Suite::Lcb, Suite::Gpqa];
+    let prompts: Vec<Vec<i32>> = (0..sb.requests)
+        .map(|_| {
+            let s = tasks::generate(
+                *rng.choice(&suites),
+                &mut rng,
+                ms.rt.model.vision_grid,
+                ms.rt.model.vision_patch,
+            );
+            tasks::prompt_tokens(&s, ms.rt.model.seq_len)
+        })
+        .collect();
+
+    for fwd_key in &sb.fwd_keys {
+        let mut cfg = ServeCfg::default();
+        cfg.max_batch_delay_ms = sb.max_delay_ms;
+        cfg.sample.max_new = sb.max_new;
+        cfg.telemetry = sb.telemetry.clone();
+        let mut server = ms.server(fwd_key, &cfg)?;
+        let t0 = Instant::now();
+        for p in &prompts {
+            server.submit(p.clone())?;
+        }
+        let responses = server.drain()?;
+        let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+        anyhow::ensure!(
+            responses.len() == sb.requests,
+            "served {} of {} requests",
+            responses.len(),
+            sb.requests
+        );
+        println!("{} | wall {elapsed:.2}s", server.stats().summary());
+    }
     Ok(())
 }

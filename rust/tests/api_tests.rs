@@ -1,0 +1,203 @@
+//! `qadx::api` integration tests. Most run against a minimal synthetic
+//! manifest (no AOT artifacts needed); the serve test additionally runs
+//! against real artifacts when they exist, mirroring runtime_smoke's
+//! skip-with-message convention.
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use qadx::api::{RecoveryMethod, ServeCfg, Session};
+use qadx::coordinator::{checkpoint, RecoveryCfg};
+use qadx::data::{SourceSpec, Suite};
+use qadx::util::json::Json;
+
+const PARAM_COUNT: usize = 8;
+
+/// Write a minimal-but-valid artifacts dir: a manifest with one model
+/// ("tiny"), no artifact files. Engine construction only needs the
+/// manifest + a PJRT CPU client.
+fn fake_artifacts(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qadx_api_test_{tag}")).join("artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let n_scalars = 8;
+    let manifest = format!(
+        r#"{{
+  "version": 4,
+  "vocab": 64,
+  "special": {{"pad": 0, "bos": 1, "eos": 2, "sep": 3}},
+  "n_scalars": {n_scalars},
+  "scalar_names": ["step", "loss", "kl", "ce", "grad_norm", "lr", "r0", "r1"],
+  "models": {{
+    "tiny": {{
+      "d_model": 4, "n_heads": 1, "d_ff": 8,
+      "blocks": ["attn"],
+      "vocab": 64, "seq_len": 8, "batch": 2,
+      "vision": false, "vision_grid": 0, "vision_patch": 0,
+      "param_count": {PARAM_COUNT},
+      "state_len": {state_len},
+      "quant": {{"weights": "nvfp4", "acts": "bf16", "impl": "ref",
+                 "skip_attention": false, "skip_first": 0, "skip_last": 0}},
+      "params": [{{"name": "embed", "shape": [2, 4], "offset": 0, "size": {PARAM_COUNT}}}],
+      "artifacts": {{}}
+    }}
+  }}
+}}"#,
+        state_len = 3 * PARAM_COUNT + n_scalars,
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+fn tmp_runs(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("qadx_api_test_{tag}")).join("runs");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn save_teacher(runs: &Path, model: &str, params: &[f32]) -> PathBuf {
+    let path = runs.join("teachers").join(format!("{model}.qckp"));
+    checkpoint::save(&path, params, &Json::obj(vec![])).unwrap();
+    path
+}
+
+fn build_session(artifacts: &Path, runs: &Path) -> Option<Session> {
+    match Session::builder().artifacts_dir(artifacts).runs_dir(runs).build() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping: cannot build session ({e:#})");
+            None
+        }
+    }
+}
+
+#[test]
+fn teacher_disk_cache_then_memory_cache() {
+    let artifacts = fake_artifacts("cache");
+    let runs = tmp_runs("cache");
+    let params: Vec<f32> = (0..PARAM_COUNT).map(|i| i as f32 * 0.25).collect();
+    let tpath = save_teacher(&runs, "tiny", &params);
+    let Some(session) = build_session(&artifacts, &runs) else { return };
+
+    let ms = session.model("tiny").unwrap();
+    assert_eq!(ms.teacher().unwrap().as_ref(), &params);
+
+    // Remove the disk cache: a second model() + teacher() must be served
+    // from the session's in-memory cache, not retrained.
+    std::fs::remove_file(&tpath).unwrap();
+    let ms2 = session.model("tiny").unwrap();
+    assert_eq!(ms2.teacher().unwrap().as_ref(), &params);
+
+    std::fs::remove_dir_all(artifacts.parent().unwrap()).ok();
+}
+
+#[test]
+fn stale_teacher_cache_is_not_served() {
+    let artifacts = fake_artifacts("stale");
+    let runs = tmp_runs("stale");
+    // Wrong parameter count: must trigger retraining (which fails fast
+    // here — the fake manifest has no step artifacts) instead of serving
+    // wrong-size weights.
+    save_teacher(&runs, "tiny", &[1.0, 2.0]);
+    let Some(session) = build_session(&artifacts, &runs) else { return };
+
+    let ms = session.model("tiny").unwrap();
+    let res = ms.teacher();
+    assert!(res.is_err(), "stale cache must not be served");
+
+    std::fs::remove_dir_all(artifacts.parent().unwrap()).ok();
+}
+
+/// A seventh recovery method: one trait impl + one registry entry, no
+/// enum edits, no dispatch-site edits.
+struct EchoTeacher;
+
+impl RecoveryMethod for EchoTeacher {
+    fn name(&self) -> &str {
+        "echo"
+    }
+    fn step_key(&self) -> Option<&str> {
+        None // training-free: students are the teacher weights
+    }
+    fn fwd_key(&self) -> &str {
+        "fwd_bf16"
+    }
+}
+
+#[test]
+fn seventh_method_is_trait_impl_plus_registration() {
+    let artifacts = fake_artifacts("seventh");
+    let runs = tmp_runs("seventh");
+    let params: Vec<f32> = (0..PARAM_COUNT).map(|i| (i as f32).sin()).collect();
+    save_teacher(&runs, "tiny", &params);
+    let session = match Session::builder()
+        .artifacts_dir(&artifacts)
+        .runs_dir(&runs)
+        .register_method(Rc::new(EchoTeacher))
+        .build()
+    {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: cannot build session ({e:#})");
+            return;
+        }
+    };
+
+    // Resolvable by name alongside the six built-ins.
+    let echo = session.method("echo").unwrap();
+    assert_eq!(session.methods().names().len(), 7);
+
+    let ms = session.model("tiny").unwrap();
+    let cfg = RecoveryCfg::new(vec![SourceSpec::sft(&[Suite::Math500])], 1e-4, 10);
+    let out = ms.recover(&*echo, &cfg).unwrap();
+    assert_eq!(out.method, "echo");
+    assert_eq!(out.params, params);
+
+    // Checkpoint paths derive from the registered name.
+    let path = ms.checkpoint_path(&*echo);
+    assert!(path.to_string_lossy().ends_with("tiny-echo.qckp"), "{path:?}");
+    ms.save_recovered(&*echo, &out).unwrap();
+    assert_eq!(ms.load_recovered(&*echo).unwrap(), params);
+    // Training-free methods evaluate the teacher weights.
+    assert_eq!(ms.method_params(&*echo).unwrap(), params);
+
+    std::fs::remove_dir_all(artifacts.parent().unwrap()).ok();
+}
+
+#[test]
+fn serve_handle_coalesces_over_real_artifacts() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let runs = tmp_runs("serve");
+    let Some(session) = build_session(&dir, &runs) else { return };
+    let ms = session.model("size-xs").unwrap();
+    let b = ms.rt.model.batch;
+    let n = 2 * b + (b + 1) / 2; // ragged tail whenever b > 1
+
+    let mut cfg = ServeCfg::default();
+    cfg.sample.max_new = 2;
+    cfg.max_batch_delay_ms = 1e9; // only fullness / drain flush batches
+    let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+    for i in 0..n {
+        server.submit(vec![1, 4 + (i % 8) as i32, 3]).unwrap();
+    }
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), n, "every request must complete");
+    let ids: std::collections::BTreeSet<u64> = responses.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), n);
+
+    let st = server.stats();
+    assert_eq!(st.requests, n);
+    assert_eq!(st.batches, (n + b - 1) / b);
+    assert_eq!(st.fill_ratios.len(), st.batches);
+    let tail = n % b;
+    if tail > 0 {
+        let last = *st.fill_ratios.last().unwrap();
+        assert!((last - tail as f64 / b as f64).abs() < 1e-12, "fill {last}");
+    }
+    assert!(st.fill_ratios.iter().all(|&f| f > 0.0 && f <= 1.0));
+
+    std::fs::remove_dir_all(runs.parent().unwrap()).ok();
+}
