@@ -153,10 +153,11 @@ def _io_shapes(cfg: ModelCfg):
     mask = _sds((B, S), jnp.float32)
     lr = _sds((), jnp.float32)
     adv = _sds((B,), jnp.float32)
+    idx = _sds((B,), jnp.int32)
     pix = (
         _sds((B, cfg.vision_grid**2, cfg.vision_patch), jnp.float32) if cfg.vision else None
     )
-    return state, params, tokens, mask, lr, adv, pix
+    return state, params, tokens, mask, lr, adv, idx, pix
 
 
 def _pix_args(cfg, pix):
@@ -169,7 +170,7 @@ def build_model_artifacts(b: ArtifactBuilder, name: str, full: bool = True):
     base = configs.ZOO[name]  # BF16 config
     qcfg = base.with_quant(quant_cfg_for(name))
     impl = "pallas" if name in configs.PALLAS_MODELS else "jnp"
-    state, params, tokens, mask, lr, adv, pix = _io_shapes(base)
+    state, params, tokens, mask, lr, adv, idx, pix = _io_shapes(base)
     pargs, pdesc = _pix_args(base, pix)
 
     st_d = [_arg("state", state.shape, "f32")]
@@ -179,12 +180,29 @@ def build_model_artifacts(b: ArtifactBuilder, name: str, full: bool = True):
     mk_d = [_arg("mask", mask.shape, "f32")]
     lr_d = [_arg("lr", (), "f32")]
     adv_d = [_arg("advantage", adv.shape, "f32")]
+    ix_d = [_arg("frontier_idx", idx.shape, "i32")]
 
     # --- forward passes -------------------------------------------------
     fwd_b = steps.make_fwd(base)
     fwd_q = steps.make_fwd(qcfg)
     b.lower(base, "fwd_bf16", lambda p, t, *px: fwd_b(p, t, *px), [params, tokens, *pargs], pa_d + tk_d + pdesc)
     b.lower(base, "fwd_nvfp4", lambda p, t, *px: fwd_q(p, t, *px), [params, tokens, *pargs], pa_d + tk_d + pdesc)
+
+    # Frontier-gather twins: fused forward + per-row dynamic slice of the
+    # logits at a frontier-index input -> (B, V). The Rust decode loop
+    # (`Sampler::generate`) downloads B·V floats per emitted token through
+    # these instead of the full B·S·V tensor, falling back transparently
+    # when an older manifest lacks the keys.
+    fwd_last_b = steps.make_fwd_last(base)
+    fwd_last_q = steps.make_fwd_last(qcfg)
+    b.lower(
+        base, "fwd_last_bf16", lambda p, t, i, *px: fwd_last_b(p, t, i, *px),
+        [params, tokens, idx, *pargs], pa_d + tk_d + ix_d + pdesc,
+    )
+    b.lower(
+        base, "fwd_last_nvfp4", lambda p, t, i, *px: fwd_last_q(p, t, i, *px),
+        [params, tokens, idx, *pargs], pa_d + tk_d + ix_d + pdesc,
+    )
 
     # Device-side scalar-block slice: the CPU PJRT plugin has no
     # CopyRawToHost, so the Rust loop reads per-step metrics through this
@@ -200,6 +218,11 @@ def build_model_artifacts(b: ArtifactBuilder, name: str, full: bool = True):
         base, "fwd_bf16_state",
         lambda s, t, *px: fwd_b(s[:pcount], t, *px),
         [state, tokens, *pargs], st_d + tk_d + pdesc,
+    )
+    b.lower(
+        base, "fwd_last_bf16_state",
+        lambda s, t, i, *px: fwd_last_b(s[:pcount], t, i, *px),
+        [state, tokens, idx, *pargs], st_d + tk_d + ix_d + pdesc,
     )
 
     # --- teacher-precision training (stage 1 SFT) ------------------------
@@ -263,6 +286,11 @@ def build_model_artifacts(b: ArtifactBuilder, name: str, full: bool = True):
             b.lower(
                 base, f"fwd_{fmt}", lambda p, t, *px: fwd_f(p, t, *px),
                 [params, tokens, *pargs], pa_d + tk_d + pdesc,
+            )
+            fwd_last_f = steps.make_fwd_last(fcfg)
+            b.lower(
+                base, f"fwd_last_{fmt}", lambda p, t, i, *px: fwd_last_f(p, t, i, *px),
+                [params, tokens, idx, *pargs], pa_d + tk_d + ix_d + pdesc,
             )
 
     # --- cross-size teacher (Table 9: nano student, super teacher) --------

@@ -200,6 +200,19 @@ def make_fwd(cfg: ModelCfg):
     return fwd
 
 
+def make_fwd_last(cfg: ModelCfg):
+    """Fused forward + per-row frontier gather: (params, tokens, idx) ->
+    (B, V) logits rows, where idx[b] selects the position whose logits the
+    decode loop needs (its frontier minus one). The sampler downloads B·V
+    floats per emitted token instead of the full B·S·V tensor."""
+
+    def fwd_last(params, tokens, idx, pixels=None):
+        logits = forward(cfg, params, tokens, pixels)  # (B, S, V)
+        return jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0, :]
+
+    return fwd_last
+
+
 def make_eval_metrics(cfg: ModelCfg, tcfg: ModelCfg, impl="jnp"):
     """-> f32[8]: [kl_mean, ce_mean, masked_tokens, kl_sum, ce_sum, 0, 0, 0].
 

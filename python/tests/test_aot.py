@@ -41,6 +41,36 @@ class TestHloText:
             cfg = configs.ZOO[name]
             assert steps.state_len(cfg) == 3 * model.param_count(cfg) + steps.N_SCALARS
 
+    def test_fwd_last_gathers_frontier_rows(self):
+        """The frontier-gather graph must equal the full forward sliced at
+        each row's own index — the contract `Sampler::generate` relies on
+        when it downloads B·V floats instead of B·S·V."""
+        cfg = configs.ZOO["size-xs"]
+        rng = np.random.default_rng(0)
+        params = model.init_params(cfg, 0)
+        tokens = jnp.asarray(
+            rng.integers(4, cfg.vocab, size=(cfg.batch, cfg.seq_len)), jnp.int32
+        )
+        idx = jnp.asarray(rng.integers(0, cfg.seq_len, size=(cfg.batch,)), jnp.int32)
+        full = steps.make_fwd(cfg)(params, tokens)
+        last = steps.make_fwd_last(cfg)(params, tokens, idx)
+        assert last.shape == (cfg.batch, cfg.vocab)
+        for b in range(cfg.batch):
+            np.testing.assert_array_equal(
+                np.asarray(last[b]), np.asarray(full[b, int(idx[b])])
+            )
+
+    def test_fwd_last_lowers_to_parseable_hlo(self):
+        cfg = configs.ZOO["size-xs"]
+        fwd_last = steps.make_fwd_last(cfg)
+        p = jax.ShapeDtypeStruct((model.param_count(cfg),), jnp.float32)
+        t = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+        i = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+        text = aot.to_hlo_text(jax.jit(fwd_last).lower(p, t, i))
+        assert "ENTRY" in text
+        roots = [l for l in text.splitlines() if "ROOT" in l]
+        assert roots and all("tuple(" not in l for l in roots)
+
 
 class TestManifest:
     @pytest.fixture(scope="class")

@@ -1,9 +1,10 @@
 //! Micro-benchmarks of the L3 hot-path substrates: NVFP4 codec, scalar
 //! mini-float rounding, sampler math, JSON parsing, batch generation.
-//! `cargo bench --bench ops_bench`. CSV lands in runs/bench/ops.csv.
+//! `cargo bench --bench ops_bench`. CSV lands in runs/bench/ops.csv and
+//! machine-readable numbers in BENCH_ops.json at the repo root.
 
 use qadx::data::{tasks, BatchFactory, BatchShape, SourceSpec, Suite, TEXT_SUITES};
-use qadx::eval::{sample_token, SampleCfg};
+use qadx::eval::{sample_token_with, SampleCfg, SampleScratch};
 use qadx::quant::baselines::{int4_fake_quant, mxfp4_fake_quant};
 use qadx::quant::fp::{e2m1_round, e4m3_round};
 use qadx::quant::nvfp4::Nvfp4Tensor;
@@ -22,6 +23,11 @@ fn main() {
     let q = Nvfp4Tensor::quantize(&x, 256, 256, None);
     suite.run("nvfp4_dequantize_256x256", 2, 20, || {
         std::hint::black_box(q.dequantize());
+    });
+    let mut deq_buf = vec![0f32; 256 * 256];
+    suite.run("nvfp4_dequantize_into_256x256", 2, 20, || {
+        q.dequantize_into(&mut deq_buf);
+        std::hint::black_box(&deq_buf);
     });
     suite.run("mxfp4_fake_quant_256x256", 2, 20, || {
         std::hint::black_box(mxfp4_fake_quant(&x, 256, 256));
@@ -46,13 +52,20 @@ fn main() {
         std::hint::black_box(acc);
     });
 
-    // sampler math over a vocab-64 logits row
+    // sampler math over a vocab-64 logits row (allocation-free hot path)
     let logits: Vec<f32> = (0..64).map(|_| rng.normal() as f32 * 3.0).collect();
     let cfg = SampleCfg::default();
     let mut srng = Rng::new(2);
+    let mut scratch = SampleScratch::default();
     suite.run("sample_token_topp_x1000", 2, 30, || {
         for _ in 0..1000 {
-            std::hint::black_box(sample_token(&cfg, &mut srng, &logits));
+            std::hint::black_box(sample_token_with(&cfg, &mut srng, &logits, &mut scratch));
+        }
+    });
+    let greedy = SampleCfg::greedy();
+    suite.run("sample_token_greedy_x1000", 2, 30, || {
+        for _ in 0..1000 {
+            std::hint::black_box(sample_token_with(&greedy, &mut srng, &logits, &mut scratch));
         }
     });
 

@@ -6,7 +6,8 @@
 //!      vs downloading the full state and slicing on host (naive)
 //!   C. fwd precision paths: fwd_bf16 vs fwd_nvfp4 (fake-quant overhead on
 //!      CPU — on Blackwell this inverts; see DESIGN.md §Perf)
-//!   D. sampler decode step cost: full-logits download per emitted token
+//!   D. sampler decode paths: frontier-gather (`fwd_last`, B·V floats per
+//!      emitted token) vs the naive full-logits download (B·S·V)
 //!
 //! `cargo bench --bench perf_ab`; CSV: runs/bench/perf_ab.csv.
 
@@ -68,14 +69,28 @@ fn main() {
         });
     }
 
-    // --- D: sampler --------------------------------------------------------
+    // --- D: sampler decode paths -------------------------------------------
     let mut sampler = Sampler::new(rt, "fwd_bf16", SampleCfg::default()).unwrap();
+    println!(
+        "{model}: frontier-gather decode {}",
+        if sampler.uses_frontier() { "available" } else { "absent (full download)" }
+    );
     let prompts: Vec<Vec<i32>> = (0..rt.model.batch)
         .map(|i| vec![1, 4 + (i as i32 % 10), 40, 4, 43, 3])
         .collect();
     suite.run(&format!("{model}/D_generate_batch_12tok"), 2, 8, || {
         std::hint::black_box(sampler.generate(engine, &p_buf, &prompts, None).unwrap());
     });
+    if sampler.uses_frontier() {
+        // naive path for comparison: full B·S·V logits download per token
+        let mut sampler_full = Sampler::new(rt, "fwd_bf16", SampleCfg::default()).unwrap();
+        sampler_full.force_full_logits(true);
+        suite.run(&format!("{model}/D2_generate_full_download_12tok"), 2, 8, || {
+            std::hint::black_box(
+                sampler_full.generate(engine, &p_buf, &prompts, None).unwrap(),
+            );
+        });
+    }
 
     suite.finish();
 }

@@ -1,6 +1,7 @@
 //! Runtime-layer benchmarks: per-step latency of every AOT artifact kind on
 //! the PJRT CPU client — the numbers that dominate every table's wall
-//! clock. `cargo bench --bench runtime_bench`. CSV: runs/bench/runtime.csv.
+//! clock. `cargo bench --bench runtime_bench`. CSV: runs/bench/runtime.csv;
+//! JSON: BENCH_runtime.json at the repo root.
 
 use qadx::api::Session;
 use qadx::coordinator::init_params;
@@ -33,6 +34,20 @@ fn main() {
             let exe = rt.exe(key).unwrap();
             suite.run(&format!("{model}/{key}"), 2, 15, || {
                 std::hint::black_box(engine.run_b(&exe, &[&p_buf, &tokens]).unwrap());
+            });
+        }
+        // frontier-gather twins: fused fwd + per-row logits slice (B·V out)
+        let frontier: Vec<i32> = vec![(rt.model.seq_len - 1) as i32; rt.model.batch];
+        for key in ["fwd_last_bf16", "fwd_last_nvfp4"] {
+            if !rt.model.has_artifact(key) {
+                continue; // older artifact build
+            }
+            let exe = rt.exe(key).unwrap();
+            let idx_buf = engine.upload_i32(&frontier, &[rt.model.batch]).unwrap();
+            suite.run(&format!("{model}/{key}"), 2, 15, || {
+                std::hint::black_box(
+                    engine.run_b(&exe, &[&p_buf, &tokens, &idx_buf]).unwrap(),
+                );
             });
         }
         // training steps (device-resident state chain)

@@ -4,7 +4,9 @@
 //! re-executes). `cargo bench --bench table_bench`.
 //!
 //! Budget knobs come from env (QADX_BENCH_STEPS / _N / _K) so the §Perf
-//! pass can compare like-for-like across optimization iterations.
+//! pass can compare like-for-like across optimization iterations;
+//! QADX_BENCH_SMOKE=1 clamps to 1 warmup / 1 iter (CI bit-rot guard).
+//! CSV: runs/bench/tables.csv; JSON: BENCH_tables.json at the repo root.
 
 use std::path::Path;
 

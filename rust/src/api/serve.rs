@@ -19,7 +19,7 @@ use crate::data::tokenizer as tok;
 use crate::eval::{SampleCfg, Sampler};
 use crate::runtime::{Engine, ModelRuntime};
 use crate::util::json::Json;
-use crate::util::{mean, percentile};
+use crate::util::StatsWindow;
 
 use super::telemetry::JsonlAppender;
 
@@ -114,6 +114,11 @@ pub struct ServeResponse {
 }
 
 /// Aggregate serving counters for one handle.
+///
+/// Per-sample series are bounded sliding windows (`StatsWindow`): exact
+/// lifetime counts/means stay in scalars while percentiles come from the
+/// most recent samples — a long-running server's stats stay O(window),
+/// not O(requests).
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     pub fwd_key: String,
@@ -122,20 +127,22 @@ pub struct ServeStats {
     pub requests: usize,
     pub batches: usize,
     pub gen_tokens: usize,
-    pub latencies_ms: Vec<f64>,
+    pub latencies_ms: StatsWindow,
     /// Per-batch occupancy (submitted rows / model batch size).
-    pub fill_ratios: Vec<f64>,
+    pub fill_ratios: StatsWindow,
     /// Time spent inside generation calls.
     pub busy_secs: f64,
 }
 
 impl ServeStats {
+    /// Exact lifetime mean occupancy (not windowed).
     pub fn mean_fill_ratio(&self) -> f64 {
-        mean(&self.fill_ratios)
+        self.fill_ratios.mean()
     }
 
+    /// Latency percentile over the retained window.
     pub fn latency_p(&self, p: f64) -> f64 {
-        percentile(&self.latencies_ms, p)
+        self.latencies_ms.percentile(p)
     }
 
     pub fn req_per_sec(&self) -> f64 {
@@ -299,24 +306,27 @@ impl<'e> ServeHandle<'e> {
 
     fn run_batch(&mut self, ids: &[u64]) -> Result<()> {
         let t0 = Instant::now();
-        let reqs: Vec<Pending> = ids
-            .iter()
-            .map(|id| self.pending.remove(id).expect("queued id has a pending entry"))
-            .collect();
-        let prompts: Vec<Vec<i32>> = reqs.iter().map(|r| r.prompt.clone()).collect();
+        // move prompts out of the pending map — no per-request cloning
+        let mut prompts = Vec::with_capacity(ids.len());
+        let mut submitted = Vec::with_capacity(ids.len());
+        for id in ids {
+            let p = self.pending.remove(id).expect("queued id has a pending entry");
+            prompts.push(p.prompt);
+            submitted.push(p.submitted);
+        }
         let rows = self.sampler.generate(self.engine, &self.weights, &prompts, None)?;
         let done = Instant::now();
         let batch_ms = done.duration_since(t0).as_secs_f64() * 1000.0;
         let fill = ids.len() as f64 / self.sampler.model.batch as f64;
 
         let mut batch_tokens = 0usize;
-        for ((id, req), row) in ids.iter().zip(&reqs).zip(rows) {
+        for (k, row) in rows.into_iter().enumerate() {
             let gen_tokens =
-                row.iter().skip(req.prompt.len()).filter(|&&t| t != tok::PAD).count();
+                row.iter().skip(prompts[k].len()).filter(|&&t| t != tok::PAD).count();
             batch_tokens += gen_tokens;
-            let latency_ms = done.duration_since(req.submitted).as_secs_f64() * 1000.0;
+            let latency_ms = done.duration_since(submitted[k]).as_secs_f64() * 1000.0;
             self.stats.latencies_ms.push(latency_ms);
-            self.completed.push(ServeResponse { id: *id, row, gen_tokens, latency_ms });
+            self.completed.push(ServeResponse { id: ids[k], row, gen_tokens, latency_ms });
         }
         self.stats.requests += ids.len();
         self.stats.batches += 1;
@@ -387,13 +397,31 @@ mod tests {
 
     #[test]
     fn fill_ratio_reports_partial_batches() {
-        let stats = ServeStats {
-            fill_ratios: vec![1.0, 1.0, 0.5],
-            latencies_ms: vec![10.0, 20.0, 30.0],
-            ..Default::default()
-        };
+        let mut stats = ServeStats::default();
+        for f in [1.0, 1.0, 0.5] {
+            stats.fill_ratios.push(f);
+        }
+        for l in [10.0, 20.0, 30.0] {
+            stats.latencies_ms.push(l);
+        }
         assert!((stats.mean_fill_ratio() - 2.5 / 3.0).abs() < 1e-12);
         assert_eq!(stats.latency_p(50.0), 20.0);
+    }
+
+    #[test]
+    fn stats_stay_bounded_for_long_running_servers() {
+        let mut stats = ServeStats::default();
+        let n = 3 * crate::util::STATS_WINDOW_DEFAULT;
+        for i in 0..n {
+            stats.latencies_ms.push(i as f64);
+            stats.fill_ratios.push(0.5);
+        }
+        assert_eq!(stats.latencies_ms.len(), crate::util::STATS_WINDOW_DEFAULT);
+        assert_eq!(stats.latencies_ms.count(), n as u64);
+        // exact lifetime mean survives the windowing
+        assert!((stats.mean_fill_ratio() - 0.5).abs() < 1e-12);
+        // percentiles reflect the recent window
+        assert!(stats.latency_p(0.0) >= (n - crate::util::STATS_WINDOW_DEFAULT) as f64);
     }
 
     #[test]

@@ -7,6 +7,15 @@
 //! one forward pass per emitted position over the whole batch, sampling
 //! each row's next token from the logits at its own frontier. Rows finish
 //! independently at EOS.
+//!
+//! Decode hot path: when the manifest carries a frontier-gather twin of
+//! the fwd artifact (`fwd_last_*`: fused forward + per-row dynamic slice
+//! of the logits at a frontier-index input), each step downloads `B·V`
+//! floats instead of `B·S·V`. Falls back transparently to the full
+//! download when the artifact is absent (older artifact builds, synthetic
+//! manifests) or when `QADX_FORCE_FULL_LOGITS=1` is set (operational
+//! escape hatch). Host-side scratch (token upload buffer, logits vector,
+//! frontier indices, sampling candidates) is reused across steps and calls.
 
 use std::rc::Rc;
 
@@ -49,23 +58,65 @@ impl SampleCfg {
 pub struct Sampler {
     pub model: ModelEntry,
     exe: Rc<PjRtLoadedExecutable>,
+    /// Frontier-gather twin (`fwd_last_*`); None when the manifest lacks it.
+    exe_last: Option<Rc<PjRtLoadedExecutable>>,
     pub cfg: SampleCfg,
     rng: Rng,
+    // per-step scratch, reused across steps and generate() calls
+    scratch: SampleScratch,
+    logits_host: Vec<f32>,
+    idx_host: Vec<i32>,
+    force_full: bool,
 }
 
 impl Sampler {
     /// `fwd_key`: "fwd_bf16" | "fwd_nvfp4" | "fwd_bf16_state" | ...
     pub fn new(rt: &ModelRuntime, fwd_key: &str, cfg: SampleCfg) -> Result<Sampler> {
+        let exe = rt.exe(fwd_key)?;
+        // QADX_FORCE_FULL_LOGITS=1: operational escape hatch — skip the
+        // frontier-gather path entirely without rebuilding artifacts.
+        let force_full_env = crate::util::env_flag("QADX_FORCE_FULL_LOGITS");
+        let exe_last = match rt.model.frontier_artifact(fwd_key) {
+            Some(_) if force_full_env => None,
+            Some(art) => match rt.engine.load(art) {
+                Ok(e) => Some(e),
+                Err(err) => {
+                    eprintln!(
+                        "warning: frontier artifact for {fwd_key:?} failed to load \
+                         ({err:#}); falling back to full-logits decode"
+                    );
+                    None
+                }
+            },
+            None => None,
+        };
         Ok(Sampler {
             model: rt.model.clone(),
-            exe: rt.exe(fwd_key)?,
+            exe,
+            exe_last,
             cfg,
             rng: Rng::new(cfg.seed ^ 0x5a5a_1234),
+            scratch: SampleScratch::default(),
+            logits_host: Vec::new(),
+            idx_host: Vec::new(),
+            force_full: false,
         })
     }
 
     pub fn reseed(&mut self, seed: u64) {
         self.rng = Rng::new(seed ^ 0x5a5a_1234);
+    }
+
+    /// Force the full `B·S·V` logits download even when a frontier-gather
+    /// artifact is available (A/B benches, equivalence tests).
+    pub fn force_full_logits(&mut self, force: bool) {
+        self.force_full = force;
+    }
+
+    /// Whether generation currently uses the frontier-gather decode path
+    /// (`B·V` host transfer per emitted token instead of `B·S·V`).
+    pub fn uses_frontier(&self) -> bool {
+        !self.force_full && self.exe_last.is_some()
     }
 
     /// Generate completions for up to `batch` prompts (shorter slices are
@@ -85,6 +136,9 @@ impl Sampler {
         let mut tokens = vec![tok::PAD; b * s];
         let mut frontier = vec![0usize; b]; // next position to fill per row
         for (i, p) in prompts.iter().enumerate() {
+            if p.is_empty() {
+                bail!("empty prompt at row {i}");
+            }
             let n = p.len().min(s - 1);
             tokens[i * s..i * s + n].copy_from_slice(&p[..n]);
             frontier[i] = n;
@@ -107,25 +161,49 @@ impl Sampler {
             _ => None,
         };
 
+        let exe_last = if self.force_full { None } else { self.exe_last.clone() };
+        let exe = self.exe.clone();
         for _ in 0..self.cfg.max_new {
             if done.iter().all(|&d| d) {
                 break;
             }
             let tok_buf = engine.upload_i32(&tokens, &[b, s])?;
-            let mut args: Vec<&PjRtBuffer> = vec![weights, &tok_buf];
-            if let Some(px) = px_buf.as_ref() {
-                args.push(px);
-            }
-            let out = engine.run_b(&self.exe, &args)?;
-            let logits = engine.download_f32(&out, b * s * v)?;
+            let frontier_step = if let Some(exe_last) = exe_last.as_ref() {
+                // logits at position frontier-1 predict the token at
+                // frontier; done/dummy rows pass a valid index but are
+                // never sampled.
+                self.idx_host.clear();
+                self.idx_host
+                    .extend(frontier.iter().map(|&f| f.saturating_sub(1).min(s - 1) as i32));
+                let idx_buf = engine.upload_i32(&self.idx_host, &[b])?;
+                let mut args: Vec<&PjRtBuffer> = vec![weights, &tok_buf, &idx_buf];
+                if let Some(px) = px_buf.as_ref() {
+                    args.push(px);
+                }
+                let out = engine.run_b(exe_last, &args)?;
+                engine.download_f32_into(&out, b * v, &mut self.logits_host)?;
+                true
+            } else {
+                let mut args: Vec<&PjRtBuffer> = vec![weights, &tok_buf];
+                if let Some(px) = px_buf.as_ref() {
+                    args.push(px);
+                }
+                let out = engine.run_b(&exe, &args)?;
+                engine.download_f32_into(&out, b * s * v, &mut self.logits_host)?;
+                false
+            };
             for i in 0..prompts.len() {
                 if done[i] {
                     continue;
                 }
                 let pos = frontier[i];
                 // logits at position pos-1 predict the token at pos
-                let row = &logits[(i * s + pos - 1) * v..(i * s + pos) * v];
-                let next = self.sample_from(row);
+                let row = if frontier_step {
+                    &self.logits_host[i * v..(i + 1) * v]
+                } else {
+                    &self.logits_host[(i * s + pos - 1) * v..(i * s + pos) * v]
+                };
+                let next = sample_token_with(&self.cfg, &mut self.rng, row, &mut self.scratch);
                 tokens[i * s + pos] = next;
                 frontier[i] += 1;
                 if next == tok::EOS || frontier[i] >= s {
@@ -137,53 +215,124 @@ impl Sampler {
             .map(|i| tokens[i * s..(i + 1) * s].to_vec())
             .collect())
     }
+}
 
-    /// Sample one token id from a logits row under temperature/top-p.
-    fn sample_from(&mut self, logits: &[f32]) -> i32 {
-        sample_token(&self.cfg, &mut self.rng, logits)
-    }
+/// Reusable candidate storage for `sample_token_with` — keeps the top-p
+/// hot path allocation-free across calls.
+#[derive(Clone, Debug, Default)]
+pub struct SampleScratch {
+    /// (unnormalized probability, token id); doubles as the selection heap.
+    probs: Vec<(f64, u32)>,
 }
 
 /// The sampling math itself (free function — unit-tested without PJRT).
+/// Allocates scratch per call; the hot path uses `sample_token_with`.
 pub fn sample_token(cfg: &SampleCfg, rng: &mut Rng, logits: &[f32]) -> i32 {
+    sample_token_with(cfg, rng, logits, &mut SampleScratch::default())
+}
+
+/// Sample one token id from a logits row under temperature/top-p.
+///
+/// Allocation-free given reused scratch: greedy touches no memory, the
+/// top-p path heap-selects candidates in descending probability and stops
+/// as soon as the kept mass reaches `top_p` — no full-vocab sort. Exactly
+/// one uniform draw is consumed per non-greedy call (same stream shape as
+/// the seed implementation).
+pub fn sample_token_with(
+    cfg: &SampleCfg,
+    rng: &mut Rng,
+    logits: &[f32],
+    scratch: &mut SampleScratch,
+) -> i32 {
     if cfg.temperature <= 0.0 {
-        // greedy
-        let mut best = 0usize;
-        for (i, &l) in logits.iter().enumerate() {
-            if l > logits[best] {
-                best = i;
-            }
-        }
-        return best as i32;
+        return argmax(logits);
     }
     let inv_t = 1.0 / cfg.temperature;
     let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut probs: Vec<(usize, f64)> = logits
-        .iter()
-        .enumerate()
-        .map(|(i, &l)| (i, (((l - mx) * inv_t) as f64).exp()))
-        .collect();
-    let z: f64 = probs.iter().map(|(_, p)| p).sum();
-    for p in probs.iter_mut() {
-        p.1 /= z;
+    let probs = &mut scratch.probs;
+    probs.clear();
+    let mut z = 0.0f64;
+    for (i, &l) in logits.iter().enumerate() {
+        let p = (((l - mx) * inv_t) as f64).exp();
+        z += p;
+        probs.push((p, i as u32));
     }
-    // top-p nucleus
-    if cfg.top_p < 1.0 {
-        probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        let mut cum = 0.0;
-        let mut cut = probs.len();
-        for (idx, (_, p)) in probs.iter().enumerate() {
-            cum += p;
-            if cum >= cfg.top_p as f64 {
-                cut = idx + 1;
-                break;
+    if z.is_nan() || z <= 0.0 {
+        // degenerate row (empty or all -inf): fall back to argmax
+        return argmax(logits);
+    }
+    if cfg.top_p >= 1.0 {
+        // no nucleus cut: one cumulative walk over the unnormalized mass
+        let mut x = rng.f64() * z;
+        for &(p, i) in probs.iter() {
+            x -= p;
+            if x <= 0.0 {
+                return i as i32;
             }
         }
-        probs.truncate(cut);
+        return probs.last().map(|&(_, i)| i as i32).unwrap_or(0);
     }
-    let weights: Vec<f64> = probs.iter().map(|(_, p)| *p).collect();
-    let pick = rng.weighted(&weights);
-    probs[pick].0 as i32
+    // Partial selection: heapify, then pop the most probable candidates
+    // until their cumulative mass reaches top_p·z. Popped entries collect
+    // at the tail in ascending-position = descending-probability order.
+    let n = probs.len();
+    for i in (0..n / 2).rev() {
+        sift_down(probs, i, n);
+    }
+    let target = cfg.top_p as f64 * z;
+    let mut cum = 0.0f64;
+    let mut k = 0usize;
+    while k < n {
+        probs.swap(0, n - 1 - k);
+        k += 1;
+        sift_down(probs, 0, n - k);
+        cum += probs[n - k].0;
+        if cum >= target {
+            break;
+        }
+    }
+    let mut x = rng.f64() * cum;
+    for &(p, i) in probs[n - k..].iter().rev() {
+        x -= p;
+        if x <= 0.0 {
+            return i as i32;
+        }
+    }
+    // numerical residue: lowest-probability kept candidate (matches the
+    // seed's "last weight wins" fallback)
+    probs[n - k].1 as i32
+}
+
+fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Restore the max-heap property (by probability) for `heap[..len]` from
+/// root `i` downward.
+fn sift_down(heap: &mut [(f64, u32)], mut i: usize, len: usize) {
+    loop {
+        let l = 2 * i + 1;
+        if l >= len {
+            return;
+        }
+        let mut m = l;
+        let r = l + 1;
+        if r < len && heap[r].0 > heap[l].0 {
+            m = r;
+        }
+        if heap[m].0 > heap[i].0 {
+            heap.swap(i, m);
+            i = m;
+        } else {
+            return;
+        }
+    }
 }
 
 /// Adapter: a Sampler + fixed weights buffer acts as the teacher-side
@@ -289,5 +438,48 @@ mod tests {
             (0..500).filter(|_| sample_token(cfg, &mut rng, &logits) == 0).count()
         };
         assert!(count(&cold) > count(&hot));
+    }
+
+    #[test]
+    fn scratch_reuse_is_equivalent() {
+        // one shared scratch across calls == fresh scratch per call
+        let cfg = SampleCfg { temperature: 0.8, top_p: 0.9, max_new: 4, seed: 21 };
+        let logits: Vec<Vec<f32>> = (0..50)
+            .map(|k| (0..32).map(|i| ((i * 7 + k * 13) % 19) as f32 * 0.3 - 2.0).collect())
+            .collect();
+        let mut r1 = Rng::new(77);
+        let mut r2 = Rng::new(77);
+        let mut scratch = SampleScratch::default();
+        for row in &logits {
+            let a = sample_token_with(&cfg, &mut r1, row, &mut scratch);
+            let b = sample_token(&cfg, &mut r2, row);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn top_p_partial_selection_matches_distribution_of_full_sort() {
+        // nucleus membership check: with p=0.7 over a known distribution,
+        // tokens outside the nucleus must never be sampled
+        let cfg = SampleCfg { temperature: 1.0, top_p: 0.7, max_new: 4, seed: 1 };
+        // probs ~ [0.64, 0.23, 0.09, 0.03]: nucleus at 0.7 = {0, 1}
+        let logits = [3.0f32, 2.0, 1.0, 0.0];
+        let mut rng = Rng::new(13);
+        let mut counts = [0usize; 4];
+        for _ in 0..2000 {
+            counts[sample_token(&cfg, &mut rng, &logits) as usize] += 1;
+        }
+        assert_eq!(counts[2] + counts[3], 0, "{counts:?}");
+        assert!(counts[0] > counts[1], "{counts:?}");
+    }
+
+    #[test]
+    fn degenerate_logits_fall_back_to_argmax() {
+        let cfg = SampleCfg { temperature: 1.0, top_p: 0.9, max_new: 4, seed: 2 };
+        let mut rng = Rng::new(2);
+        let logits = [f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY];
+        // all-(-inf) row: no mass anywhere; must not panic
+        let t = sample_token(&cfg, &mut rng, &logits);
+        assert!((0..3).contains(&t));
     }
 }

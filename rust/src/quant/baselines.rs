@@ -12,17 +12,24 @@ pub fn mxfp4_fake_quant(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     assert_eq!(x.len(), rows * cols);
     assert_eq!(cols % MXFP4_BLOCK, 0);
     let mut out = vec![0f32; x.len()];
-    for b in 0..(x.len() / MXFP4_BLOCK) {
-        let s = b * MXFP4_BLOCK;
-        let blk = &x[s..s + MXFP4_BLOCK];
+    for (blk, o) in x.chunks_exact(MXFP4_BLOCK).zip(out.chunks_exact_mut(MXFP4_BLOCK)) {
         let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
         if amax == 0.0 {
             continue;
         }
         let e = amax.log2().floor() - 2.0;
         let scale = e.exp2();
-        for (j, &v) in blk.iter().enumerate() {
-            out[s + j] = e2m1_round(v / scale) * scale;
+        // hoisted reciprocal: exact for a power-of-two scale unless it
+        // leaves the normal range (then divide, bit-identical either way)
+        let inv = 1.0 / scale;
+        if inv.is_normal() {
+            for (o, &v) in o.iter_mut().zip(blk) {
+                *o = e2m1_round(v * inv) * scale;
+            }
+        } else {
+            for (o, &v) in o.iter_mut().zip(blk) {
+                *o = e2m1_round(v / scale) * scale;
+            }
         }
     }
     out
@@ -32,13 +39,17 @@ pub fn mxfp4_fake_quant(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
 pub fn int4_fake_quant(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     assert_eq!(x.len(), rows * cols);
     let mut out = vec![0f32; x.len()];
-    for r in 0..rows {
-        let row = &x[r * cols..(r + 1) * cols];
+    if cols == 0 {
+        return out;
+    }
+    for (row, o) in x.chunks_exact(cols).zip(out.chunks_exact_mut(cols)) {
         let amax = row.iter().fold(0f32, |m, v| m.max(v.abs()));
         let s = if amax > 0.0 { amax / 7.0 } else { 1.0 };
-        for (j, &v) in row.iter().enumerate() {
+        // s = amax/7 is not a power of two, so the division must stay
+        // exact — a rounded reciprocal flips q at round-half midpoints
+        for (o, &v) in o.iter_mut().zip(row) {
             let q = (v / s).round().clamp(-7.0, 7.0);
-            out[r * cols + j] = q * s;
+            *o = q * s;
         }
     }
     out

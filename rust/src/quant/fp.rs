@@ -1,105 +1,134 @@
 //! Scalar mini-float codecs: FP8 E4M3 (fn variant) and FP4 E2M1.
 //!
-//! Encoding uses value tables + round-half-to-even-mantissa, which is
-//! definitionally correct (both formats have few enough codes to
-//! enumerate). These are cross-validated bit-exactly against the JAX
-//! oracle through the golden vectors in `artifacts/golden.json`
-//! (rust/tests/golden_cross_validation.rs).
+//! Hot-path implementations are table- and bit-driven: a const 256-entry
+//! E4M3 decode LUT, a mantissa-rounding bit trick for E4M3 encode, and a
+//! branchless threshold cascade (in integer bit space) for E2M1 encode.
+//! All of them are bit-identical to the seed's value-table +
+//! round-half-to-even-mantissa reference, which is kept under
+//! `reference` (cfg(test)) as the property-test oracle, and they are
+//! cross-validated bit-exactly against the JAX oracle through the golden
+//! vectors in `artifacts/golden.json` (rust/tests/golden_cross_validation.rs).
 
 /// Maximum finite magnitude of E4M3 (fn): 0b0_1111_110 = 1.75 * 2^8.
 pub const E4M3_MAX: f32 = 448.0;
+/// Smallest normal E4M3 magnitude: 2^-6.
+pub const E4M3_MIN_NORMAL: f32 = 0.015625;
 /// Maximum magnitude of E2M1: 1.5 * 2^2.
 pub const E2M1_MAX: f32 = 6.0;
 
 /// Positive magnitudes of the E2M1 grid, indexed by the 3-bit magnitude code.
 pub const E2M1_GRID: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
 
-/// Decode an E4M3 (fn) byte to f32. Code 0x7f/0xff (NaN in the fn format)
-/// decodes to NaN.
-pub fn e4m3_decode(code: u8) -> f32 {
+/// Exact power of two as f32 (const-evaluable; exponents stay in range).
+const fn pow2f(e: i32) -> f32 {
+    let mut v = 1.0f32;
+    let mut i = 0;
+    while i < e {
+        v *= 2.0;
+        i += 1;
+    }
+    while i > e {
+        v *= 0.5;
+        i -= 1;
+    }
+    v
+}
+
+const fn e4m3_decode_scalar(code: u8) -> f32 {
     let sign = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
     let exp = ((code >> 3) & 0x0f) as i32;
     let man = (code & 0x07) as f32;
-    if exp == 0x0f && man == 7.0 {
+    if exp == 0x0f && (code & 0x07) == 7 {
         return f32::NAN;
     }
     if exp == 0 {
         // subnormal: m/8 * 2^-6
-        sign * (man / 8.0) * 2f32.powi(-6)
+        sign * (man / 8.0) * pow2f(-6)
     } else {
-        sign * (1.0 + man / 8.0) * 2f32.powi(exp - 7)
+        sign * (1.0 + man / 8.0) * pow2f(exp - 7)
     }
 }
 
-fn e4m3_table() -> &'static [(f32, u8)] {
-    use std::sync::OnceLock;
-    static TABLE: OnceLock<Vec<(f32, u8)>> = OnceLock::new();
-    TABLE.get_or_init(|| {
-        // All non-negative finite codes, sorted by value.
-        let mut v: Vec<(f32, u8)> = (0u8..0x7f).map(|c| (e4m3_decode(c), c)).collect();
-        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        v
-    })
+const fn build_e4m3_decode_lut() -> [f32; 256] {
+    let mut t = [0f32; 256];
+    let mut c = 0usize;
+    while c < 256 {
+        t[c] = e4m3_decode_scalar(c as u8);
+        c += 1;
+    }
+    t
+}
+
+/// All 256 E4M3 codes decoded to f32 (0x7f/0xff hold NaN).
+pub static E4M3_DECODE_LUT: [f32; 256] = build_e4m3_decode_lut();
+
+/// Decode an E4M3 (fn) byte to f32 — one table load. Code 0x7f/0xff (NaN
+/// in the fn format) decodes to NaN.
+#[inline]
+pub fn e4m3_decode(code: u8) -> f32 {
+    E4M3_DECODE_LUT[code as usize]
 }
 
 /// Encode f32 to the nearest E4M3 value (round-half-to-even mantissa),
 /// saturating at ±448. Returns the code byte.
+///
+/// Normal range rounds the f32 mantissa to 3 bits directly in bit space
+/// (add `half-ulp - 1 + kept-lsb`, truncate); the carry into the exponent
+/// field lands on the correct next binade automatically. Subnormals
+/// (|x| < 2^-6) are a round-ties-even of x·2^9; the overflow value 8 *is*
+/// code 8 (exp=1, man=0), so the cast stays uniform.
+#[inline]
 pub fn e4m3_encode(x: f32) -> u8 {
     if x.is_nan() {
         return 0x7f;
     }
     let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
     let a = x.abs().min(E4M3_MAX);
-    let t = e4m3_table();
-    // Binary search for the insertion point.
-    let idx = t.partition_point(|(v, _)| *v < a);
-    let code = if idx == 0 {
-        t[0].1
-    } else if idx == t.len() {
-        t[t.len() - 1].1
-    } else {
-        let (lo_v, lo_c) = t[idx - 1];
-        let (hi_v, hi_c) = t[idx];
-        let mid = (lo_v + hi_v) * 0.5;
-        if a < mid {
-            lo_c
-        } else if a > mid {
-            hi_c
-        } else {
-            // tie: even mantissa LSB wins
-            if lo_c & 1 == 0 {
-                lo_c
-            } else {
-                hi_c
-            }
-        }
-    };
-    sign | code
+    if a < E4M3_MIN_NORMAL {
+        return sign | (a * 512.0).round_ties_even() as u8;
+    }
+    let bits = a.to_bits();
+    let lsb = (bits >> 20) & 1;
+    let r = bits + 0x0007_ffff + lsb;
+    let exp = (r >> 23) - 120; // f32 bias 127 -> e4m3 bias 7
+    let man = (r >> 20) & 7;
+    sign | ((exp << 3) | man) as u8
 }
 
 /// Round-trip f32 through E4M3 (the "fake quant" scalar).
+#[inline]
 pub fn e4m3_round(x: f32) -> f32 {
     e4m3_decode(e4m3_encode(x))
 }
 
 /// Encode f32 to the nearest E2M1 magnitude code (0..7) + sign bit in bit 3.
 /// Round-half-to-even grid index, saturate at ±6.
+///
+/// Branchless: for non-negative floats IEEE ordering equals integer
+/// ordering of the bit patterns, so the seven grid midpoints become
+/// integer thresholds on `bits & 0x7fff_ffff`. The `>` / `>=` alternation
+/// encodes the tie-to-even-grid-index rule exactly, and the magnitude
+/// clamp to 6.0 maps NaN payloads to 6.0 — the same result the reference
+/// gets from `abs().min(E2M1_MAX)` (f32::min returns the non-NaN operand).
+#[inline]
 pub fn e2m1_encode(x: f32) -> u8 {
-    let sign = if x.is_sign_negative() { 0x8u8 } else { 0 };
-    let a = x.abs().min(E2M1_MAX);
-    let mut best = 0usize;
-    for i in 0..E2M1_GRID.len() {
-        let lo = E2M1_GRID[best];
-        let hi = E2M1_GRID[i];
-        let d_lo = (a - lo).abs();
-        let d_hi = (a - hi).abs();
-        if d_hi < d_lo || (d_hi == d_lo && i % 2 == 0) {
-            best = i;
-        }
+    let bits = x.to_bits();
+    let sign = ((bits >> 28) & 8) as u8;
+    let mut ab = bits & 0x7fff_ffff;
+    if ab > 0x40c0_0000 {
+        ab = 0x40c0_0000; // clamp to |6.0|
     }
-    sign | best as u8
+    let idx = (ab > 0x3e80_0000) as u8   // 0.25: tie -> idx 0 (even)
+        + (ab >= 0x3f40_0000) as u8      // 0.75: tie -> idx 2 (even)
+        + (ab > 0x3fa0_0000) as u8       // 1.25: tie -> idx 2 (even)
+        + (ab >= 0x3fe0_0000) as u8      // 1.75: tie -> idx 4 (even)
+        + (ab > 0x4020_0000) as u8       // 2.5:  tie -> idx 4 (even)
+        + (ab >= 0x4060_0000) as u8      // 3.5:  tie -> idx 6 (even)
+        + (ab > 0x40a0_0000) as u8; // 5.0:  tie -> idx 6 (even)
+    sign | idx
 }
 
+#[inline]
 pub fn e2m1_decode(code: u8) -> f32 {
     let mag = E2M1_GRID[(code & 0x7) as usize];
     if code & 0x8 != 0 {
@@ -109,13 +138,92 @@ pub fn e2m1_decode(code: u8) -> f32 {
     }
 }
 
+#[inline]
 pub fn e2m1_round(x: f32) -> f32 {
     e2m1_decode(e2m1_encode(x))
+}
+
+/// The seed's scalar codecs (value-table binary search for E4M3,
+/// nearest-grid loop for E2M1) — kept verbatim as the oracle the LUT
+/// implementations are property-tested against, bit for bit.
+#[cfg(test)]
+pub(crate) mod reference {
+    use super::{E2M1_GRID, E2M1_MAX, E4M3_MAX};
+
+    pub fn e4m3_decode(code: u8) -> f32 {
+        let sign = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
+        let exp = ((code >> 3) & 0x0f) as i32;
+        let man = (code & 0x07) as f32;
+        if exp == 0x0f && man == 7.0 {
+            return f32::NAN;
+        }
+        if exp == 0 {
+            sign * (man / 8.0) * 2f32.powi(-6)
+        } else {
+            sign * (1.0 + man / 8.0) * 2f32.powi(exp - 7)
+        }
+    }
+
+    fn e4m3_table() -> &'static [(f32, u8)] {
+        use std::sync::OnceLock;
+        static TABLE: OnceLock<Vec<(f32, u8)>> = OnceLock::new();
+        TABLE.get_or_init(|| {
+            let mut v: Vec<(f32, u8)> = (0u8..0x7f).map(|c| (e4m3_decode(c), c)).collect();
+            v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            v
+        })
+    }
+
+    pub fn e4m3_encode(x: f32) -> u8 {
+        if x.is_nan() {
+            return 0x7f;
+        }
+        let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+        let a = x.abs().min(E4M3_MAX);
+        let t = e4m3_table();
+        let idx = t.partition_point(|(v, _)| *v < a);
+        let code = if idx == 0 {
+            t[0].1
+        } else if idx == t.len() {
+            t[t.len() - 1].1
+        } else {
+            let (lo_v, lo_c) = t[idx - 1];
+            let (hi_v, hi_c) = t[idx];
+            let mid = (lo_v + hi_v) * 0.5;
+            if a < mid {
+                lo_c
+            } else if a > mid {
+                hi_c
+            } else if lo_c & 1 == 0 {
+                lo_c
+            } else {
+                hi_c
+            }
+        };
+        sign | code
+    }
+
+    pub fn e2m1_encode(x: f32) -> u8 {
+        let sign = if x.is_sign_negative() { 0x8u8 } else { 0 };
+        let a = x.abs().min(E2M1_MAX);
+        let mut best = 0usize;
+        for i in 0..E2M1_GRID.len() {
+            let lo = E2M1_GRID[best];
+            let hi = E2M1_GRID[i];
+            let d_lo = (a - lo).abs();
+            let d_hi = (a - hi).abs();
+            if d_hi < d_lo || (d_hi == d_lo && i % 2 == 0) {
+                best = i;
+            }
+        }
+        sign | best as u8
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn e4m3_exact_values() {
@@ -198,5 +306,83 @@ mod tests {
     fn e2m1_sign_bit() {
         assert_eq!(e2m1_decode(e2m1_encode(-1.5)), -1.5);
         assert_eq!(e2m1_encode(-1.5) & 0x8, 0x8);
+    }
+
+    // ---- LUT-vs-reference property tests --------------------------------
+
+    #[test]
+    fn e4m3_lut_decode_matches_reference_all_256_codes() {
+        for c in 0u8..=0xff {
+            let lut = e4m3_decode(c);
+            let oracle = reference::e4m3_decode(c);
+            assert!(
+                lut.to_bits() == oracle.to_bits()
+                    || (lut.is_nan() && oracle.is_nan()),
+                "code {c:#x}: lut {lut} vs reference {oracle}"
+            );
+        }
+    }
+
+    #[test]
+    fn e4m3_encode_matches_reference_on_grid_and_midpoints() {
+        // every code value, every value-space midpoint, and ±1-ulp
+        // neighbours of the midpoints: the complete set of tie cases.
+        let mut vals: Vec<f32> = (0u8..0x7f).map(reference::e4m3_decode).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut cases = vals.clone();
+        for w in vals.windows(2) {
+            let mid = (w[0] + w[1]) * 0.5;
+            cases.push(mid);
+            if mid > 0.0 {
+                cases.push(f32::from_bits(mid.to_bits() - 1));
+                cases.push(f32::from_bits(mid.to_bits() + 1));
+            }
+        }
+        cases.extend([0.0, -0.0, f32::INFINITY, f32::NEG_INFINITY, 449.0, 1e30]);
+        for &v in &cases {
+            for x in [v, -v] {
+                assert_eq!(
+                    e4m3_encode(x),
+                    reference::e4m3_encode(x),
+                    "e4m3_encode({x}) diverges from the reference"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn encoders_match_reference_on_random_bit_patterns() {
+        // raw u32 bit patterns cover every float class: normals across all
+        // binades, subnormals, zeros, infinities, and NaN payloads.
+        let mut r = Rng::new(0xB17F10A7);
+        for _ in 0..200_000 {
+            let x = f32::from_bits(r.next_u64() as u32);
+            assert_eq!(
+                e4m3_encode(x),
+                reference::e4m3_encode(x),
+                "e4m3_encode({x} = {:#010x})",
+                x.to_bits()
+            );
+            assert_eq!(
+                e2m1_encode(x),
+                reference::e2m1_encode(x),
+                "e2m1_encode({x} = {:#010x})",
+                x.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn e2m1_matches_reference_at_thresholds() {
+        for t in [0.25f32, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0, 6.0] {
+            for x in [
+                t,
+                -t,
+                f32::from_bits(t.to_bits() - 1),
+                f32::from_bits(t.to_bits() + 1),
+            ] {
+                assert_eq!(e2m1_encode(x), reference::e2m1_encode(x), "{x}");
+            }
+        }
     }
 }

@@ -5,10 +5,43 @@
 //! verified through golden vectors in rust/tests/. Used by the coordinator
 //! for PTQ weight export, checkpoint size accounting (the paper's ~1.8×
 //! memory-reduction claim vs FP8), and quantization-error analysis.
+//!
+//! Hot-path layout: `quantize` runs as flat vectorizable passes (block
+//! scales → per-block exact scale division → branchless E2M1 encode →
+//! nibble pack) with the per-block denominator hoisted out of the element
+//! loop; `dequantize` turns each packed byte into two values through a
+//! 256-entry nibble-pair LUT with the block denominator hoisted. Both are
+//! bit-identical to the seed's scalar loop for *all* inputs (the scale
+//! division is kept exact on purpose — a rounded reciprocal can flip
+//! codes at grid midpoints), with the seed kept under `reference`
+//! (cfg(test)) as the property-test oracle.
 
-use super::fp::{e2m1_decode, e2m1_encode, e4m3_decode, e4m3_encode, E2M1_MAX, E4M3_MAX};
+use super::fp::{e2m1_encode, e4m3_decode, e4m3_encode, E2M1_GRID, E2M1_MAX, E4M3_MAX};
 
 pub const BLOCK: usize = 16;
+
+const fn e2m1_decode_const(code: u8) -> f32 {
+    let mag = E2M1_GRID[(code & 0x7) as usize];
+    if code & 0x8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+const fn build_nibble_pair_lut() -> [[f32; 2]; 256] {
+    let mut t = [[0f32; 2]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b] = [e2m1_decode_const((b & 0x0f) as u8), e2m1_decode_const((b >> 4) as u8)];
+        b += 1;
+    }
+    t
+}
+
+/// Both nibbles of every packed code byte decoded at once:
+/// `[low nibble (element 2i), high nibble (element 2i+1)]`.
+static NIBBLE_PAIR_LUT: [[f32; 2]; 256] = build_nibble_pair_lut();
 
 /// A quantized tensor: packed payload + two-level scales.
 #[derive(Clone, Debug)]
@@ -40,28 +73,50 @@ impl Nvfp4Tensor {
         assert_eq!(x.len(), rows * cols, "shape mismatch");
         assert_eq!(cols % BLOCK, 0, "cols {cols} not a multiple of {BLOCK}");
         let ts = ts.unwrap_or_else(|| tensor_scale(x));
-        let n_blocks = rows * cols / BLOCK;
-        let mut codes = vec![0u8; (rows * cols + 1) / 2];
+        let n = rows * cols;
+        let n_blocks = n / BLOCK;
+
+        // Pass 1: per-block E4M3 scales.
         let mut block_scales = vec![0u8; n_blocks];
-        for b in 0..n_blocks {
-            let start = b * BLOCK;
-            let blk = &x[start..start + BLOCK];
+        for (sb, blk) in block_scales.iter_mut().zip(x.chunks_exact(BLOCK)) {
             let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
             let raw = (amax / E2M1_MAX / ts).clamp(-E4M3_MAX, E4M3_MAX);
-            let sb_code = e4m3_encode(raw);
-            block_scales[b] = sb_code;
-            let denom = e4m3_decode(sb_code) * ts;
-            for (j, &v) in blk.iter().enumerate() {
-                let y = if denom > 0.0 { v / denom } else { 0.0 };
-                let c = e2m1_encode(y);
-                let idx = start + j;
-                if idx % 2 == 0 {
-                    codes[idx / 2] |= c;
-                } else {
-                    codes[idx / 2] |= c << 4;
-                }
-            }
+            *sb = e4m3_encode(raw);
         }
+
+        // Pass 2: scale elements into E2M1 range. The per-block denominator
+        // (E4M3 LUT decode × tensor scale) is hoisted out of the element
+        // loop; the division itself stays exact — multiplying by a rounded
+        // reciprocal can flip codes at grid midpoints, and a flat
+        // vectorized divide measures within noise of the multiply anyway.
+        let mut y = vec![0f32; n];
+        for ((&sb, blk), out) in block_scales
+            .iter()
+            .zip(x.chunks_exact(BLOCK))
+            .zip(y.chunks_exact_mut(BLOCK))
+        {
+            // denom = sb*ts first — the exact multiplication order of the
+            // JAX oracle (bit-exactness checked by the golden tests).
+            let denom = e4m3_decode(sb) * ts;
+            if denom > 0.0 {
+                for (o, &v) in out.iter_mut().zip(blk) {
+                    *o = v / denom;
+                }
+            } // else: y stays 0.0, matching the reference's denom==0 branch
+        }
+
+        // Pass 3: branchless E2M1 encode of every scaled element.
+        let mut nibbles = vec![0u8; n];
+        for (c, &v) in nibbles.iter_mut().zip(&y) {
+            *c = e2m1_encode(v);
+        }
+
+        // Pass 4: pack two 4-bit codes per byte.
+        let mut codes = vec![0u8; n / 2];
+        for (byte, pair) in codes.iter_mut().zip(nibbles.chunks_exact(2)) {
+            *byte = pair[0] | (pair[1] << 4);
+        }
+
         Nvfp4Tensor { codes, block_scales, tensor_scale: ts, rows, cols }
     }
 
@@ -76,15 +131,32 @@ impl Nvfp4Tensor {
 
     /// Dequantize back to f32 — exactly what the NVFP4 GEMM datapath sees.
     pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.rows * self.cols];
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Dequantize into a caller-provided slice (len must be rows*cols) —
+    /// the allocation-free hot path: one nibble-pair LUT load + two
+    /// multiplies per packed byte, block denominator hoisted.
+    pub fn dequantize_into(&self, out: &mut [f32]) {
         let n = self.rows * self.cols;
-        let mut out = vec![0f32; n];
-        for i in 0..n {
+        assert_eq!(out.len(), n, "output slice shape mismatch");
+        for ((&sb, bytes), o) in self
+            .block_scales
+            .iter()
+            .zip(self.codes.chunks_exact(BLOCK / 2))
+            .zip(out.chunks_exact_mut(BLOCK))
+        {
             // denom = sb*ts first — the exact multiplication order of the
             // JAX oracle (bit-exactness checked by the golden tests).
-            let denom = e4m3_decode(self.block_scales[i / BLOCK]) * self.tensor_scale;
-            out[i] = e2m1_decode(self.code_at(i)) * denom;
+            let denom = e4m3_decode(sb) * self.tensor_scale;
+            for (pair, &byte) in o.chunks_exact_mut(2).zip(bytes) {
+                let d = &NIBBLE_PAIR_LUT[byte as usize];
+                pair[0] = d[0] * denom;
+                pair[1] = d[1] * denom;
+            }
         }
-        out
     }
 
     /// Stored size in bytes: packed nibbles + E4M3 scales + f32 tensor scale.
@@ -111,6 +183,54 @@ pub fn rel_error(x: &[f32], q: &[f32]) -> f64 {
         0.0
     } else {
         (num / den).sqrt()
+    }
+}
+
+/// The seed's scalar codec loop (per-element division, per-element scale
+/// decode), built on the `fp::reference` oracle — the bit-for-bit ground
+/// truth for the LUT property tests.
+#[cfg(test)]
+pub(crate) mod reference {
+    use super::super::fp::{e2m1_decode, reference as fpref};
+    use super::{Nvfp4Tensor, BLOCK, E2M1_MAX, E4M3_MAX};
+
+    pub fn quantize(x: &[f32], rows: usize, cols: usize, ts: Option<f32>) -> Nvfp4Tensor {
+        assert_eq!(x.len(), rows * cols, "shape mismatch");
+        assert_eq!(cols % BLOCK, 0);
+        let ts = ts.unwrap_or_else(|| super::tensor_scale(x));
+        let n_blocks = rows * cols / BLOCK;
+        let mut codes = vec![0u8; (rows * cols + 1) / 2];
+        let mut block_scales = vec![0u8; n_blocks];
+        for b in 0..n_blocks {
+            let start = b * BLOCK;
+            let blk = &x[start..start + BLOCK];
+            let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
+            let raw = (amax / E2M1_MAX / ts).clamp(-E4M3_MAX, E4M3_MAX);
+            let sb_code = fpref::e4m3_encode(raw);
+            block_scales[b] = sb_code;
+            let denom = fpref::e4m3_decode(sb_code) * ts;
+            for (j, &v) in blk.iter().enumerate() {
+                let y = if denom > 0.0 { v / denom } else { 0.0 };
+                let c = fpref::e2m1_encode(y);
+                let idx = start + j;
+                if idx % 2 == 0 {
+                    codes[idx / 2] |= c;
+                } else {
+                    codes[idx / 2] |= c << 4;
+                }
+            }
+        }
+        Nvfp4Tensor { codes, block_scales, tensor_scale: ts, rows, cols }
+    }
+
+    pub fn dequantize(t: &Nvfp4Tensor) -> Vec<f32> {
+        let n = t.rows * t.cols;
+        let mut out = vec![0f32; n];
+        for (i, o) in out.iter_mut().enumerate() {
+            let denom = fpref::e4m3_decode(t.block_scales[i / BLOCK]) * t.tensor_scale;
+            *o = e2m1_decode(t.code_at(i)) * denom;
+        }
+        out
     }
 }
 
@@ -206,5 +326,69 @@ mod tests {
         // blocks 1..3 (elements 16..64) must keep sane error
         let rel = rel_error(&x[16..], &q[16..]);
         assert!(rel < 0.25, "rel {rel}");
+    }
+
+    #[test]
+    fn dequantize_into_matches_dequantize() {
+        let x = randn(32 * 32, 8, 1.0);
+        let t = Nvfp4Tensor::quantize(&x, 32, 32, None);
+        let a = t.dequantize();
+        let mut b = vec![0f32; 32 * 32];
+        t.dequantize_into(&mut b);
+        assert_eq!(a, b);
+    }
+
+    // ---- LUT-vs-reference property tests --------------------------------
+
+    fn assert_codec_bit_identical(x: &[f32], rows: usize, cols: usize) {
+        let fast = Nvfp4Tensor::quantize(x, rows, cols, None);
+        let oracle = reference::quantize(x, rows, cols, None);
+        assert_eq!(
+            fast.tensor_scale.to_bits(),
+            oracle.tensor_scale.to_bits(),
+            "tensor scale diverged"
+        );
+        assert_eq!(fast.block_scales, oracle.block_scales, "block scales diverged");
+        assert_eq!(fast.codes, oracle.codes, "packed codes diverged");
+        let deq_fast = fast.dequantize();
+        let deq_oracle = reference::dequantize(&oracle);
+        for (i, (a, b)) in deq_fast.iter().zip(&deq_oracle).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "dequant bit mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn lut_codec_bit_identical_to_reference_randomized() {
+        // Randomized tensors across magnitudes (incl. a near-subnormal
+        // scale) — the full codec must agree with the seed's scalar
+        // reference bit for bit, which holds for arbitrary inputs because
+        // the element ops are exhaustively-equivalent encodes plus the
+        // same exact division.
+        for k in 0..8u64 {
+            let x = randn(64 * 64, 0xC0DEC + k, 1.0);
+            assert_codec_bit_identical(&x, 64, 64);
+        }
+        let x = randn(32 * 32, 0xC0DEC + 100, 3.0);
+        assert_codec_bit_identical(&x, 32, 32);
+        let x = randn(16 * 64, 0xC0DEC + 101, 0.01);
+        assert_codec_bit_identical(&x, 16, 64);
+        let x = randn(8 * 128, 0xC0DEC + 102, 50.0);
+        assert_codec_bit_identical(&x, 8, 128);
+        let x = randn(16 * 16, 0xC0DEC + 103, 1e-38);
+        assert_codec_bit_identical(&x, 16, 16);
+    }
+
+    #[test]
+    fn lut_codec_bit_identical_on_structured_tensors() {
+        // outlier + all-zero block, mirroring the golden tensor's shape
+        let mut x = randn(8 * 64, 0xC0DEC + 200, 2.0);
+        x[3] = 77.0;
+        for v in x[5 * 16..7 * 16].iter_mut() {
+            *v = 0.0;
+        }
+        assert_codec_bit_identical(&x, 8, 64);
+        // pure zeros
+        let zeros = vec![0f32; 256];
+        assert_codec_bit_identical(&zeros, 16, 16);
     }
 }

@@ -85,12 +85,31 @@ impl Engine {
     /// small reads use dedicated slicing artifacts instead (see
     /// `DeviceState::scalars`).
     pub fn download_f32(&self, buf: &PjRtBuffer, len: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.download_f32_into(buf, len, &mut out)?;
+        Ok(out)
+    }
+
+    /// Download an f32 buffer into a caller-held vector (decode hot loop).
+    ///
+    /// The literal path always materializes a fresh Vec, so this moves the
+    /// download into `out` and frees the previous backing store — callers
+    /// hold one live logits buffer per step instead of two, and the
+    /// hot-loop call sites stay shaped for true reuse if the xla crate
+    /// grows a copy-into API.
+    pub fn download_f32_into(
+        &self,
+        buf: &PjRtBuffer,
+        len: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let lit = buf.to_literal_sync()?;
         let v: Vec<f32> = lit.to_vec()?;
         if v.len() != len {
             bail!("downloaded {} elements, expected {}", v.len(), len);
         }
-        Ok(v)
+        *out = v;
+        Ok(())
     }
 }
 

@@ -62,6 +62,17 @@ pub struct ModelEntry {
     pub artifacts: BTreeMap<String, ArtifactDef>,
 }
 
+/// Manifest key of the frontier-gather twin of a forward artifact
+/// ("fwd_bf16" → "fwd_last_bf16", "fwd_bf16_state" → "fwd_last_bf16_state");
+/// None when `fwd_key` is not a fwd key or is already a frontier key.
+pub fn frontier_key(fwd_key: &str) -> Option<String> {
+    let rest = fwd_key.strip_prefix("fwd_")?;
+    if rest.starts_with("last_") {
+        return None;
+    }
+    Some(format!("fwd_last_{rest}"))
+}
+
 impl ModelEntry {
     /// Offset of the scalar metrics block inside the state vector.
     pub fn scalars_offset(&self) -> usize {
@@ -72,6 +83,17 @@ impl ModelEntry {
         self.artifacts
             .get(key)
             .with_context(|| format!("model {} has no artifact {key:?}", self.name))
+    }
+
+    pub fn has_artifact(&self, key: &str) -> bool {
+        self.artifacts.contains_key(key)
+    }
+
+    /// The frontier-gather twin of `fwd_key`, when the manifest carries one.
+    /// Older artifact builds simply lack the key, in which case callers fall
+    /// back to the full-logits download path.
+    pub fn frontier_artifact(&self, fwd_key: &str) -> Option<&ArtifactDef> {
+        frontier_key(fwd_key).and_then(|k| self.artifacts.get(&k))
     }
 
     /// Selective-quantization predicate matching model.py `_block_quantized`

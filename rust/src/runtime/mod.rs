@@ -9,4 +9,4 @@ pub mod engine;
 pub mod manifest;
 
 pub use engine::{scalar, Batch, DeviceState, Engine, ModelRuntime};
-pub use manifest::{ArtifactDef, Manifest, ModelEntry, ParamDef};
+pub use manifest::{frontier_key, ArtifactDef, Manifest, ModelEntry, ParamDef};

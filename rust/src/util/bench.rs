@@ -1,10 +1,17 @@
 //! Minimal benchmarking harness (criterion is not in the offline crates
 //! cache). Measures wall-clock over repeated runs, reports mean / p50 /
-//! p95 / throughput, and writes a CSV so `cargo bench` output is diffable
-//! across the §Perf iterations in EXPERIMENTS.md.
+//! p95 / throughput, writes a CSV under runs/bench/, and emits a
+//! machine-readable `BENCH_<tag>.json` at the repo root so the perf
+//! trajectory is diffable across PRs (`scripts/bench_diff.py`).
+//!
+//! Env knobs:
+//!   QADX_BENCH_SMOKE=1  — clamp every benchmark to 1 warmup / 1 iter and
+//!                         skip the repo-root JSON rewrite (CI bit-rot
+//!                         guard; numbers from a smoke run are noise).
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::{mean, percentile};
 
 pub struct BenchResult {
@@ -16,6 +23,19 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    pub fn ns_per_op(&self) -> f64 {
+        self.mean_ms * 1e6
+    }
+
+    /// Throughput in operations per second (1 op = one benchmarked call).
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.mean_ms > 0.0 {
+            1e3 / self.mean_ms
+        } else {
+            0.0
+        }
+    }
+
     pub fn print(&self) {
         println!(
             "{:<42} {:>5} iters  mean {:>9.3} ms  p50 {:>9.3} ms  p95 {:>9.3} ms",
@@ -29,10 +49,33 @@ impl BenchResult {
             self.name, self.iters, self.mean_ms, self.p50_ms, self.p95_ms
         )
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("ns_per_op", Json::Num(self.ns_per_op())),
+            ("ops_per_sec", Json::Num(self.ops_per_sec())),
+        ])
+    }
+}
+
+/// Smoke mode: 1 warmup / 1 iter per benchmark (CI bit-rot guard).
+/// Enabled by QADX_BENCH_SMOKE set to anything but ""/"0"/"false".
+pub fn smoke_mode() -> bool {
+    super::env_flag("QADX_BENCH_SMOKE")
 }
 
 /// Time `f` for `iters` iterations after `warmup` warm-up runs.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    let (warmup, iters) = if smoke_mode() {
+        (warmup.min(1), 1)
+    } else {
+        (warmup, iters.max(1))
+    };
     for _ in 0..warmup {
         f();
     }
@@ -53,9 +96,27 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     r
 }
 
-/// Collects results and writes the CSV at the end.
+/// Walk up from the current directory to the repo root (marked by
+/// ROADMAP.md); falls back to the current directory.
+fn repo_root() -> std::path::PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let mut dir = cwd.clone();
+    for _ in 0..4 {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        match dir.parent() {
+            Some(p) => dir = p.to_path_buf(),
+            None => break,
+        }
+    }
+    cwd
+}
+
+/// Collects results; writes the CSV and the repo-root JSON at the end.
 pub struct BenchSuite {
     pub results: Vec<BenchResult>,
+    tag: String,
     csv_path: std::path::PathBuf,
 }
 
@@ -63,7 +124,11 @@ impl BenchSuite {
     pub fn new(tag: &str) -> BenchSuite {
         let dir = std::path::PathBuf::from("runs/bench");
         std::fs::create_dir_all(&dir).ok();
-        BenchSuite { results: Vec::new(), csv_path: dir.join(format!("{tag}.csv")) }
+        BenchSuite {
+            results: Vec::new(),
+            tag: tag.to_string(),
+            csv_path: dir.join(format!("{tag}.csv")),
+        }
     }
 
     pub fn run<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, f: F) {
@@ -81,6 +146,34 @@ impl BenchSuite {
         } else {
             println!("wrote {}", self.csv_path.display());
         }
+        if smoke_mode() {
+            println!("smoke mode: skipping BENCH_{}.json rewrite", self.tag);
+            return;
+        }
+        let json_path = repo_root().join(format!("BENCH_{}.json", self.tag));
+        // Carry a committed "baseline" section forward across regenerations
+        // so before/after stays diffable (scripts/bench_diff.py).
+        let baseline = std::fs::read_to_string(&json_path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|j| j.get("baseline").cloned());
+        let mut pairs = vec![
+            ("schema", Json::Str("qadx-bench-v1".into())),
+            ("tag", Json::Str(self.tag.clone())),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ];
+        if let Some(b) = baseline {
+            pairs.push(("baseline", b));
+        }
+        let doc = Json::obj(pairs);
+        if let Err(e) = std::fs::write(&json_path, doc.pretty()) {
+            eprintln!("bench json write failed: {e}");
+        } else {
+            println!("wrote {}", json_path.display());
+        }
     }
 }
 
@@ -93,7 +186,22 @@ mod tests {
         let r = bench("noop-ish", 1, 5, || {
             std::hint::black_box((0..1000).sum::<usize>());
         });
-        assert_eq!(r.iters, 5);
+        assert!(r.iters >= 1);
         assert!(r.mean_ms >= 0.0 && r.p95_ms >= r.p50_ms * 0.5);
+    }
+
+    #[test]
+    fn result_json_has_throughput_fields() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 3,
+            mean_ms: 2.0,
+            p50_ms: 2.0,
+            p95_ms: 2.5,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("ns_per_op").and_then(|v| v.as_f64()), Some(2e6));
+        assert_eq!(j.get("ops_per_sec").and_then(|v| v.as_f64()), Some(500.0));
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("x"));
     }
 }

@@ -10,6 +10,14 @@ use std::io::Write;
 use std::path::Path;
 use std::time::Instant;
 
+/// Truthy env flag: set to anything except "" / "0" / "false".
+pub fn env_flag(name: &str) -> bool {
+    match std::env::var(name) {
+        Ok(v) => !matches!(v.as_str(), "" | "0" | "false"),
+        Err(_) => false,
+    }
+}
+
 /// Mean of a slice (0.0 for empty — callers guard when it matters).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -35,6 +43,90 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let idx = ((v.len() - 1) as f64 * p / 100.0).round() as usize;
     v[idx]
+}
+
+/// Bounded sliding-window statistics: percentiles come from the last
+/// `cap` samples, while exact lifetime totals (count / sum) live in
+/// scalars — long-running servers record every request without growing
+/// memory per request.
+#[derive(Clone, Debug)]
+pub struct StatsWindow {
+    cap: usize,
+    buf: std::collections::VecDeque<f64>,
+    count: u64,
+    sum: f64,
+}
+
+/// Default window: enough samples for stable p99 at negligible memory.
+pub const STATS_WINDOW_DEFAULT: usize = 4096;
+
+impl Default for StatsWindow {
+    fn default() -> StatsWindow {
+        StatsWindow::with_capacity(STATS_WINDOW_DEFAULT)
+    }
+}
+
+impl StatsWindow {
+    pub fn with_capacity(cap: usize) -> StatsWindow {
+        assert!(cap >= 1, "window capacity must be >= 1");
+        StatsWindow {
+            cap,
+            buf: std::collections::VecDeque::with_capacity(cap.min(1024)),
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(v);
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Samples currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Exact lifetime sample count (not windowed).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact lifetime sum (not windowed).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact lifetime mean (not windowed).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.buf.back().copied()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = f64> + '_ {
+        self.buf.iter().copied()
+    }
+
+    /// Percentile over the retained window.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let v: Vec<f64> = self.buf.iter().copied().collect();
+        percentile(&v, p)
+    }
 }
 
 /// Wall-clock timer with human-friendly reporting.
@@ -126,6 +218,32 @@ mod tests {
         assert!((stddev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
         assert_eq!(percentile(&[5.0, 1.0, 3.0], 50.0), 3.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn stats_window_bounds_memory_keeps_exact_totals() {
+        let mut w = StatsWindow::with_capacity(16);
+        for i in 0..10_000 {
+            w.push(i as f64);
+        }
+        assert_eq!(w.len(), 16, "window must stay bounded");
+        assert_eq!(w.count(), 10_000, "lifetime count is exact");
+        assert_eq!(w.sum(), (0..10_000).sum::<u64>() as f64);
+        assert!((w.mean() - 4999.5).abs() < 1e-9);
+        assert_eq!(w.last(), Some(9999.0));
+        // window holds the most recent samples, in order
+        let kept: Vec<f64> = w.iter().collect();
+        assert_eq!(kept, (9984..10_000).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(w.percentile(100.0), 9999.0);
+    }
+
+    #[test]
+    fn stats_window_empty_is_safe() {
+        let w = StatsWindow::default();
+        assert!(w.is_empty());
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.percentile(50.0), 0.0);
+        assert_eq!(w.last(), None);
     }
 
     #[test]

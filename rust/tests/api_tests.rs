@@ -192,12 +192,13 @@ fn serve_handle_coalesces_over_real_artifacts() {
     assert_eq!(st.requests, n);
     assert_eq!(st.batches, (n + b - 1) / b);
     assert_eq!(st.fill_ratios.len(), st.batches);
+    assert_eq!(st.fill_ratios.count(), st.batches as u64);
     let tail = n % b;
     if tail > 0 {
-        let last = *st.fill_ratios.last().unwrap();
+        let last = st.fill_ratios.last().unwrap();
         assert!((last - tail as f64 / b as f64).abs() < 1e-12, "fill {last}");
     }
-    assert!(st.fill_ratios.iter().all(|&f| f > 0.0 && f <= 1.0));
+    assert!(st.fill_ratios.iter().all(|f| f > 0.0 && f <= 1.0));
 
     std::fs::remove_dir_all(runs.parent().unwrap()).ok();
 }

@@ -1,0 +1,67 @@
+//! Decode-path equivalence: the frontier-gather (`fwd_last_*`) artifact and
+//! the full-logits download must produce identical rows for a fixed seed —
+//! the gather changes how logits reach the host, never what gets sampled.
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use std::path::Path;
+
+use qadx::coordinator::init_params;
+use qadx::eval::{SampleCfg, Sampler};
+use qadx::runtime::{frontier_key, Engine, ModelRuntime};
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::new(&dir).expect("engine"))
+}
+
+#[test]
+fn frontier_key_mapping() {
+    assert_eq!(frontier_key("fwd_bf16").as_deref(), Some("fwd_last_bf16"));
+    assert_eq!(frontier_key("fwd_nvfp4").as_deref(), Some("fwd_last_nvfp4"));
+    assert_eq!(
+        frontier_key("fwd_bf16_state").as_deref(),
+        Some("fwd_last_bf16_state")
+    );
+    assert_eq!(frontier_key("sft_bf16"), None);
+    assert_eq!(frontier_key("scalars"), None);
+    // already-frontier keys must not double-map
+    assert_eq!(frontier_key("fwd_last_bf16"), None);
+}
+
+#[test]
+fn frontier_and_full_download_rows_identical() {
+    let Some(engine) = engine() else { return };
+    let rt = ModelRuntime::new(&engine, "size-xs").unwrap();
+    let params = init_params(&rt.model, 0);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let prompts: Vec<Vec<i32>> = (0..rt.model.batch.min(4))
+        .map(|i| vec![1, 4 + i as i32, 7, 3])
+        .collect();
+    let cfg = SampleCfg { temperature: 0.6, top_p: 0.95, max_new: 6, seed: 42 };
+
+    let mut fast = Sampler::new(&rt, "fwd_bf16", cfg).unwrap();
+    if !fast.uses_frontier() {
+        eprintln!("skipping: manifest has no fwd_last_bf16 (rebuild artifacts)");
+        return;
+    }
+    let mut full = Sampler::new(&rt, "fwd_bf16", cfg).unwrap();
+    full.force_full_logits(true);
+    assert!(!full.uses_frontier());
+
+    let rows_fast = fast.generate(&engine, &p_buf, &prompts, None).unwrap();
+    let rows_full = full.generate(&engine, &p_buf, &prompts, None).unwrap();
+    assert_eq!(rows_fast, rows_full, "decode paths diverged");
+
+    // greedy decode must agree as well (argmax is download-order invariant)
+    let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 6, seed: 7 };
+    let mut fast_g = Sampler::new(&rt, "fwd_bf16", greedy).unwrap();
+    let mut full_g = Sampler::new(&rt, "fwd_bf16", greedy).unwrap();
+    full_g.force_full_logits(true);
+    let a = fast_g.generate(&engine, &p_buf, &prompts, None).unwrap();
+    let b = full_g.generate(&engine, &p_buf, &prompts, None).unwrap();
+    assert_eq!(a, b, "greedy decode paths diverged");
+}

@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Compare two qadx bench JSON files (BENCH_*.json) and fail on regression.
+
+Usage:
+    bench_diff.py OLD.json NEW.json [--threshold 0.25]
+    bench_diff.py FILE.json --against-baseline [--threshold 0.25]
+
+The first form compares the "results" arrays of two files; the second
+compares a single file's "results" (after) against its embedded
+"baseline" array (before) — the layout `BenchSuite::finish` preserves
+across regenerations. Benchmarks are matched by name on ns_per_op; any
+matched benchmark slower by more than the threshold (default +25%) fails
+the run with exit code 1. Unmatched names are reported but never fail.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_results(path: str, key: str = "results") -> dict[str, dict]:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get(key)
+    if rows is None:
+        raise SystemExit(f"{path}: no {key!r} array (schema {doc.get('schema')!r})")
+    out = {}
+    for r in rows:
+        out[r["name"]] = r
+    return out
+
+
+def fmt_ns(ns: float) -> str:
+    if ns >= 1e6:
+        return f"{ns / 1e6:.3f} ms"
+    if ns >= 1e3:
+        return f"{ns / 1e3:.2f} us"
+    return f"{ns:.0f} ns"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", help="baseline JSON (or the only file with --against-baseline)")
+    ap.add_argument("new", nargs="?", help="candidate JSON")
+    ap.add_argument(
+        "--against-baseline",
+        action="store_true",
+        help="compare OLD's 'results' against its own embedded 'baseline'",
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="max allowed slowdown as a fraction (default 0.25 = +25%%)",
+    )
+    args = ap.parse_args()
+
+    if args.against_baseline:
+        if args.new:
+            ap.error("--against-baseline takes a single file")
+        old = load_results(args.old, "baseline")
+        new = load_results(args.old, "results")
+        old_name, new_name = "baseline", "results"
+    else:
+        if not args.new:
+            ap.error("need OLD.json NEW.json (or --against-baseline)")
+        old = load_results(args.old)
+        new = load_results(args.new)
+        old_name, new_name = args.old, args.new
+
+    matched = sorted(set(old) & set(new))
+    only_old = sorted(set(old) - set(new))
+    only_new = sorted(set(new) - set(old))
+    if not matched:
+        print(f"no common benchmark names between {old_name} and {new_name}")
+        return 1
+
+    width = max(len(n) for n in matched)
+    regressions = []
+    print(f"{'benchmark':<{width}}  {'before':>10}  {'after':>10}  {'ratio':>7}")
+    for name in matched:
+        a = float(old[name]["ns_per_op"])
+        b = float(new[name]["ns_per_op"])
+        ratio = b / a if a > 0 else float("inf")
+        flag = ""
+        if ratio > 1.0 + args.threshold:
+            flag = "  << REGRESSION"
+            regressions.append((name, ratio))
+        elif ratio < 1.0 / (1.0 + args.threshold):
+            flag = "  (faster)"
+        print(f"{name:<{width}}  {fmt_ns(a):>10}  {fmt_ns(b):>10}  {ratio:>6.2f}x{flag}")
+
+    for name in only_old:
+        print(f"{name:<{width}}  only in {old_name}")
+    for name in only_new:
+        print(f"{name:<{width}}  only in {new_name}")
+
+    if regressions:
+        print(
+            f"\nFAIL: {len(regressions)} benchmark(s) regressed beyond "
+            f"+{args.threshold * 100:.0f}%:"
+        )
+        for name, ratio in regressions:
+            print(f"  {name}: {ratio:.2f}x")
+        return 1
+    print(f"\nOK: no regression beyond +{args.threshold * 100:.0f}% across {len(matched)} benchmarks")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
