@@ -46,6 +46,7 @@ pub const SESSION_FLAGS: &[FlagDef] = &[
     flag("runs", "DIR", "runs", "run outputs: teachers, checkpoints, reports"),
     flag("scale", "F", "1.0", "teacher pipeline step scale"),
     flag("seed", "N", "0", "session seed (data order, serve-bench mix)"),
+    flag("backend", "B", "(QADX_BACKEND or pjrt)", "execution backend: pjrt|reference"),
 ];
 
 pub const COMMANDS: &[CommandDef] = &[
@@ -259,6 +260,9 @@ pub struct SessionArgs {
     pub runs: PathBuf,
     pub scale: f64,
     pub seed: u64,
+    /// Execution backend (`--backend pjrt|reference`); None defers to
+    /// `QADX_BACKEND` / the build default.
+    pub backend: Option<crate::runtime::BackendKind>,
 }
 
 impl SessionArgs {
@@ -268,15 +272,23 @@ impl SessionArgs {
             runs: PathBuf::from(args.get_or("runs", "runs")),
             scale: parse_flag(args, "scale", 1.0)?,
             seed: parse_flag(args, "seed", 0)?,
+            backend: match args.get("backend") {
+                Some(v) => Some(crate::runtime::BackendKind::parse(v)?),
+                None => None,
+            },
         })
     }
 
     pub fn builder(&self) -> SessionBuilder {
-        Session::builder()
+        let mut b = Session::builder()
             .artifacts_dir(&self.artifacts)
             .runs_dir(&self.runs)
             .scale(self.scale)
-            .seed(self.seed)
+            .seed(self.seed);
+        if let Some(kind) = self.backend {
+            b = b.backend(kind);
+        }
+        b
     }
 
     pub fn build(&self) -> Result<Session> {

@@ -13,11 +13,10 @@ use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
-use xla::PjRtBuffer;
 
 use crate::data::tokenizer as tok;
 use crate::eval::{SampleCfg, Sampler};
-use crate::runtime::{Engine, ModelRuntime};
+use crate::runtime::{Buffer, Engine, ModelRuntime};
 use crate::util::json::Json;
 use crate::util::StatsWindow;
 
@@ -192,7 +191,7 @@ struct Pending {
 pub struct ServeHandle<'e> {
     engine: &'e Engine,
     sampler: Sampler,
-    weights: PjRtBuffer,
+    weights: Buffer,
     coalescer: Coalescer,
     pending: HashMap<u64, Pending>,
     next_id: u64,

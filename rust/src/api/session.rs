@@ -18,7 +18,7 @@ use crate::data::tasks::Suite;
 use crate::data::{SourceKind, SourceSpec};
 use crate::eval::{run_suites, EvalCfg, SampleCfg};
 use crate::quant::PtqReport;
-use crate::runtime::{Engine, Manifest, ModelRuntime};
+use crate::runtime::{BackendKind, Engine, Manifest, ModelRuntime};
 use crate::util::json::Json;
 
 use super::method::{MethodRef, MethodRegistry, RecoveryMethod};
@@ -36,6 +36,7 @@ pub struct SessionBuilder {
     scale: PipelineScale,
     seed: u64,
     methods: MethodRegistry,
+    backend: Option<BackendKind>,
 }
 
 impl SessionBuilder {
@@ -46,6 +47,7 @@ impl SessionBuilder {
             scale: PipelineScale::default(),
             seed: 0,
             methods: MethodRegistry::builtin(),
+            backend: None,
         }
     }
 
@@ -76,8 +78,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Choose the execution backend explicitly. Without this, the engine
+    /// follows `QADX_BACKEND` and then the build default (PJRT when the
+    /// `pjrt` feature is compiled in, reference otherwise).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = Some(kind);
+        self
+    }
+
     pub fn build(self) -> Result<Session> {
-        let engine = Engine::new(&self.artifacts_dir)?;
+        let kind = BackendKind::resolve(self.backend)?;
+        let engine = Engine::with_backend(&self.artifacts_dir, kind)?;
         Ok(Session {
             engine,
             runs_dir: self.runs_dir,

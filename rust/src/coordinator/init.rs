@@ -50,6 +50,7 @@ mod tests {
             n_heads: 2,
             d_ff: 16,
             blocks: vec!["attn".into()],
+            n_experts: 0,
             vocab: 16,
             seq_len: 8,
             batch: 2,

@@ -6,11 +6,10 @@
 //! artifact (name-directed), so one loop serves every step variant.
 
 use anyhow::{bail, Result};
-use xla::PjRtBuffer;
 
 use crate::data::sources::ResponseGenerator;
 use crate::data::{BatchFactory, SourceSpec};
-use crate::runtime::{scalar, Batch, DeviceState, Engine, ModelRuntime};
+use crate::runtime::{scalar, Batch, Buffer, DeviceState, Engine, ModelRuntime};
 
 use super::checkpoint::Checkpoint;
 
@@ -125,7 +124,7 @@ impl<'e> Trainer<'e> {
         step_key: &str,
         state: &mut DeviceState,
         factory: &mut BatchFactory,
-        teacher: Option<&PjRtBuffer>,
+        teacher: Option<&Buffer>,
         mut gen: Option<&mut dyn ResponseGenerator>,
         cfg: &TrainCfg,
     ) -> Result<TrainLog> {
@@ -149,7 +148,7 @@ impl<'e> Trainer<'e> {
                 None
             };
 
-            let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(art.args.len());
+            let mut args: Vec<&Buffer> = Vec::with_capacity(art.args.len());
             for a in &art.args {
                 args.push(match a.name.as_str() {
                     "state" => &state.buf,
@@ -221,7 +220,7 @@ impl<'e> Trainer<'e> {
         &self,
         step_key: &str,
         state: &DeviceState,
-        teacher: Option<&PjRtBuffer>,
+        teacher: Option<&Buffer>,
     ) -> Result<f64> {
         let exe = self.rt.exe(step_key)?;
         let art = self.rt.model.artifact(step_key)?.clone();
@@ -240,7 +239,7 @@ impl<'e> Trainer<'e> {
             } else {
                 None
             };
-            let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(art.args.len());
+            let mut args: Vec<&Buffer> = Vec::with_capacity(art.args.len());
             for a in &art.args {
                 args.push(match a.name.as_str() {
                     "state" => &state.buf,

@@ -3,10 +3,9 @@
 //! columns.
 
 use anyhow::Result;
-use xla::PjRtBuffer;
 
 use crate::data::{BatchFactory, SourceSpec};
-use crate::runtime::{Engine, ModelRuntime};
+use crate::runtime::{Buffer, Engine, ModelRuntime};
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct DistMetrics {
@@ -38,7 +37,7 @@ pub fn eval_distribution(
         let tokens = rt.upload_tokens(&batch)?;
         let mask = rt.upload_mask(&batch)?;
         let px = rt.upload_pixels(&batch)?;
-        let mut args: Vec<&PjRtBuffer> = vec![&s_buf, &t_buf, &tokens, &mask];
+        let mut args: Vec<&Buffer> = vec![&s_buf, &t_buf, &tokens, &mask];
         if let Some(p) = px.as_ref() {
             args.push(p);
         }

@@ -20,11 +20,10 @@
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
-use xla::{PjRtBuffer, PjRtLoadedExecutable};
 
 use crate::data::sources::ResponseGenerator;
 use crate::data::tokenizer as tok;
-use crate::runtime::{Engine, ModelEntry, ModelRuntime};
+use crate::runtime::{frontier_key, Buffer, Engine, Executable, ModelEntry, ModelRuntime};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug)]
@@ -57,9 +56,9 @@ impl SampleCfg {
 /// per call so the RL loop can sample from the live device state.
 pub struct Sampler {
     pub model: ModelEntry,
-    exe: Rc<PjRtLoadedExecutable>,
+    exe: Rc<Executable>,
     /// Frontier-gather twin (`fwd_last_*`); None when the manifest lacks it.
-    exe_last: Option<Rc<PjRtLoadedExecutable>>,
+    exe_last: Option<Rc<Executable>>,
     pub cfg: SampleCfg,
     rng: Rng,
     // per-step scratch, reused across steps and generate() calls
@@ -76,9 +75,10 @@ impl Sampler {
         // QADX_FORCE_FULL_LOGITS=1: operational escape hatch — skip the
         // frontier-gather path entirely without rebuilding artifacts.
         let force_full_env = crate::util::env_flag("QADX_FORCE_FULL_LOGITS");
-        let exe_last = match rt.model.frontier_artifact(fwd_key) {
+        let fkey = frontier_key(fwd_key).filter(|k| rt.model.has_artifact(k));
+        let exe_last = match fkey {
             Some(_) if force_full_env => None,
-            Some(art) => match rt.engine.load(art) {
+            Some(key) => match rt.exe(&key) {
                 Ok(e) => Some(e),
                 Err(err) => {
                     eprintln!(
@@ -125,7 +125,7 @@ impl Sampler {
     pub fn generate(
         &mut self,
         engine: &Engine,
-        weights: &PjRtBuffer,
+        weights: &Buffer,
         prompts: &[Vec<i32>],
         pixels: Option<&[f32]>,
     ) -> Result<Vec<Vec<i32>>> {
@@ -176,7 +176,7 @@ impl Sampler {
                 self.idx_host
                     .extend(frontier.iter().map(|&f| f.saturating_sub(1).min(s - 1) as i32));
                 let idx_buf = engine.upload_i32(&self.idx_host, &[b])?;
-                let mut args: Vec<&PjRtBuffer> = vec![weights, &tok_buf, &idx_buf];
+                let mut args: Vec<&Buffer> = vec![weights, &tok_buf, &idx_buf];
                 if let Some(px) = px_buf.as_ref() {
                     args.push(px);
                 }
@@ -184,7 +184,7 @@ impl Sampler {
                 engine.download_f32_into(&out, b * v, &mut self.logits_host)?;
                 true
             } else {
-                let mut args: Vec<&PjRtBuffer> = vec![weights, &tok_buf];
+                let mut args: Vec<&Buffer> = vec![weights, &tok_buf];
                 if let Some(px) = px_buf.as_ref() {
                     args.push(px);
                 }
@@ -340,7 +340,7 @@ fn sift_down(heap: &mut [(f64, u32)], mut i: usize, len: usize) {
 pub struct TeacherGenerator<'a> {
     pub engine: &'a Engine,
     pub sampler: Sampler,
-    pub weights: PjRtBuffer,
+    pub weights: Buffer,
 }
 
 impl<'a> TeacherGenerator<'a> {

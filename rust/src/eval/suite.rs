@@ -5,11 +5,10 @@
 use std::collections::BTreeMap;
 
 use anyhow::Result;
-use xla::PjRtBuffer;
 
 use super::sampler::{SampleCfg, Sampler};
 use crate::data::tasks::{self, Suite};
-use crate::runtime::{Engine, ModelRuntime};
+use crate::runtime::{Buffer, Engine, ModelRuntime};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -40,7 +39,7 @@ pub fn run_suite(
     engine: &Engine,
     rt: &ModelRuntime,
     fwd_key: &str,
-    weights: &PjRtBuffer,
+    weights: &Buffer,
     suite: Suite,
     cfg: &EvalCfg,
 ) -> Result<SuiteResult> {

@@ -1,0 +1,244 @@
+//! The execution-backend abstraction: compile / upload / execute / download
+//! behind opaque buffer handles.
+//!
+//! `Engine`, `ModelRuntime`, `DeviceState`, the sampler, the serve façade,
+//! and the coordinator all speak [`Buffer`] / [`Executable`] — never a
+//! concrete backend type — so the same decode, serve, and distill code runs
+//! on the PJRT CPU client (AOT HLO artifacts) or on the pure-Rust
+//! [`reference`](super::reference) interpreter, and future backends (GPU,
+//! sharded, remote) slot in behind the same trait.
+//!
+//! Backend selection: [`BackendKind`] — explicit via
+//! `Session::builder().backend(..)` / `Engine::with_backend`, or the
+//! `QADX_BACKEND` environment variable (`pjrt` | `reference`), defaulting
+//! to PJRT when the crate is built with the `pjrt` feature (the default).
+
+use std::any::Any;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{Manifest, ModelEntry};
+
+/// Element type of a device buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// An opaque device buffer handle. The payload is backend-private; callers
+/// only see the logical shape (when the backend tracks one) and the dtype.
+pub struct Buffer {
+    dims: Option<Vec<usize>>,
+    dtype: Dtype,
+    inner: Box<dyn Any>,
+}
+
+impl Buffer {
+    /// Wrap a backend-private payload. `dims: None` means the backend does
+    /// not know the logical shape (e.g. PJRT execution outputs); length
+    /// checks then happen at download time only.
+    pub fn new(dims: Option<Vec<usize>>, dtype: Dtype, inner: Box<dyn Any>) -> Buffer {
+        Buffer { dims, dtype, inner }
+    }
+
+    pub fn dims(&self) -> Option<&[usize]> {
+        self.dims.as_deref()
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Total element count, when the logical shape is known.
+    pub fn element_count(&self) -> Option<usize> {
+        self.dims.as_ref().map(|d| d.iter().product())
+    }
+
+    /// Downcast the backend-private payload (backend implementations only).
+    pub fn payload<T: 'static>(&self) -> Option<&T> {
+        self.inner.downcast_ref::<T>()
+    }
+}
+
+impl std::fmt::Debug for Buffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Buffer({:?}, dims {:?})", self.dtype, self.dims)
+    }
+}
+
+/// An opaque compiled program handle (one manifest artifact on one backend).
+pub struct Executable {
+    key: String,
+    inner: Box<dyn Any>,
+}
+
+impl Executable {
+    pub fn new(key: impl Into<String>, inner: Box<dyn Any>) -> Executable {
+        Executable { key: key.into(), inner }
+    }
+
+    /// The manifest artifact key this executable was compiled from.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Downcast the backend-private payload (backend implementations only).
+    pub fn payload<T: 'static>(&self) -> Option<&T> {
+        self.inner.downcast_ref::<T>()
+    }
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Executable({:?})", self.key)
+    }
+}
+
+/// One execution backend: compiles manifest artifacts and moves tensors.
+///
+/// All handles are opaque; passing a handle created by a different backend
+/// is detected and reported as an error (never UB, never a silent
+/// misread).
+pub trait ExecBackend {
+    /// Short name for logs/errors ("pjrt", "reference", ...).
+    fn name(&self) -> &'static str;
+
+    /// Compile (or construct) the executable for artifact `key` of `model`.
+    /// `manifest` is available for cross-model artifacts (e.g. the
+    /// cross-size distillation step references a second model entry).
+    fn compile(&self, manifest: &Manifest, model: &ModelEntry, key: &str) -> Result<Executable>;
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer>;
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer>;
+
+    /// Execute with device-resident args; returns the single output buffer.
+    fn execute(&self, exe: &Executable, args: &[&Buffer]) -> Result<Buffer>;
+
+    /// Download an f32 buffer into `out`, verifying the element count.
+    /// Backends must error (not truncate, not pad) when the buffer holds a
+    /// different number of elements than `expect_len`.
+    fn download_f32(&self, buf: &Buffer, expect_len: usize, out: &mut Vec<f32>) -> Result<()>;
+}
+
+/// Which execution backend an engine runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The PJRT CPU client executing AOT HLO-text artifacts (requires the
+    /// `pjrt` cargo feature and compiled artifacts on disk).
+    Pjrt,
+    /// The pure-Rust reference interpreter: executes artifact semantics
+    /// directly from manifest metadata — no XLA, no artifact files.
+    Reference,
+}
+
+impl BackendKind {
+    /// Parse a backend name (`QADX_BACKEND`, `--backend`).
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            "reference" | "ref" => Ok(BackendKind::Reference),
+            other => bail!("unknown backend {other:?} (known: pjrt, reference)"),
+        }
+    }
+
+    /// The `QADX_BACKEND` override, if set (empty counts as unset).
+    pub fn from_env() -> Result<Option<BackendKind>> {
+        match std::env::var("QADX_BACKEND") {
+            Ok(v) if !v.trim().is_empty() => Ok(Some(BackendKind::parse(&v)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// The build's default backend: PJRT when compiled in, else reference.
+    pub fn default_kind() -> BackendKind {
+        #[cfg(feature = "pjrt")]
+        {
+            BackendKind::Pjrt
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            BackendKind::Reference
+        }
+    }
+
+    /// Resolve the effective kind: explicit choice, else `QADX_BACKEND`,
+    /// else the build default.
+    pub fn resolve(explicit: Option<BackendKind>) -> Result<BackendKind> {
+        if let Some(k) = explicit {
+            return Ok(k);
+        }
+        Ok(BackendKind::from_env()?.unwrap_or_else(BackendKind::default_kind))
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendKind::Pjrt => write!(f, "pjrt"),
+            BackendKind::Reference => write!(f, "reference"),
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<BackendKind> {
+        BackendKind::parse(s)
+    }
+}
+
+/// Construct a backend of the given kind.
+pub fn make_backend(kind: BackendKind) -> Result<Rc<dyn ExecBackend>> {
+    match kind {
+        BackendKind::Pjrt => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(Rc::new(super::pjrt::PjrtBackend::new()?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                bail!(
+                    "backend 'pjrt' requested but this build has no `pjrt` feature; \
+                     rebuild with --features pjrt or use QADX_BACKEND=reference"
+                )
+            }
+        }
+        BackendKind::Reference => Ok(Rc::new(super::reference::ReferenceBackend::new())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_aliases() {
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("REF").unwrap(), BackendKind::Reference);
+        assert_eq!(BackendKind::parse(" reference ").unwrap(), BackendKind::Reference);
+        assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn backend_kind_round_trips_display() {
+        for k in [BackendKind::Pjrt, BackendKind::Reference] {
+            assert_eq!(BackendKind::parse(&k.to_string()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn buffer_reports_shape_and_dtype() {
+        let b = Buffer::new(Some(vec![2, 3]), Dtype::F32, Box::new(vec![0f32; 6]));
+        assert_eq!(b.element_count(), Some(6));
+        assert_eq!(b.dims(), Some(&[2usize, 3][..]));
+        assert_eq!(b.dtype(), Dtype::F32);
+        assert!(b.payload::<Vec<f32>>().is_some());
+        assert!(b.payload::<Vec<i32>>().is_none());
+        let unknown = Buffer::new(None, Dtype::F32, Box::new(()));
+        assert_eq!(unknown.element_count(), None);
+    }
+}

@@ -1,90 +1,90 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
-//! the Rust hot path. Python never runs here.
+//! Backend-agnostic runtime core: `Engine` owns an [`ExecBackend`] plus the
+//! artifact manifest and an executable cache; `ModelRuntime` binds one
+//! manifest model; `DeviceState` keeps the packed training state
+//! device-resident across steps.
 //!
 //! Training state stays **device-resident**: every train-step artifact maps
 //! `state -> state'` as a single flat f32 array, so the output buffer of
-//! step t feeds `execute_b` of step t+1 without touching the host. Only the
-//! 8-float scalar metrics block is copied back per step
-//! (`copy_raw_to_host_sync` with an offset).
+//! step t feeds the next execute without touching the host. Only the
+//! 8-float scalar metrics block is copied back per step (via the `scalars`
+//! slicing artifact).
+//!
+//! No concrete backend type appears here or anywhere above this layer —
+//! the PJRT client lives behind `runtime::pjrt`, the pure-Rust interpreter
+//! behind `runtime::reference`, both selectable per engine (see
+//! [`BackendKind`]).
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
-use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-use super::manifest::{ArtifactDef, Manifest, ModelEntry};
+use super::backend::{make_backend, BackendKind, Buffer, ExecBackend, Executable};
+use super::manifest::{Manifest, ModelEntry};
 
 pub struct Engine {
-    pub client: PjRtClient,
+    backend: Rc<dyn ExecBackend>,
+    kind: BackendKind,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<PathBuf, Rc<PjRtLoadedExecutable>>>,
+    cache: RefCell<HashMap<(String, String), Rc<Executable>>>,
 }
 
 impl Engine {
-    /// Create a CPU PJRT client and load the artifact manifest.
+    /// Load the artifact manifest and construct the default backend
+    /// (`QADX_BACKEND` env override, else PJRT when compiled in).
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
+        Engine::with_backend(artifacts_dir, BackendKind::resolve(None)?)
     }
 
-    /// Compile (or fetch from cache) the executable for an artifact.
-    pub fn load(&self, art: &ArtifactDef) -> Result<Rc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(&art.file) {
+    /// Load the manifest on an explicitly chosen backend.
+    pub fn with_backend(artifacts_dir: &Path, kind: BackendKind) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let backend = make_backend(kind)?;
+        Ok(Engine { backend, kind, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Which backend this engine executes on.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    pub(crate) fn backend(&self) -> Rc<dyn ExecBackend> {
+        self.backend.clone()
+    }
+
+    /// Compile (or fetch from cache) the executable for `key` of `model`.
+    pub fn load(&self, model: &ModelEntry, key: &str) -> Result<Rc<Executable>> {
+        let cache_key = (model.name.clone(), key.to_string());
+        if let Some(exe) = self.cache.borrow().get(&cache_key) {
             return Ok(exe.clone());
         }
-        let path_str = art
-            .file
-            .to_str()
-            .with_context(|| format!("non-utf8 path {:?}", art.file))?;
-        let proto = HloModuleProto::from_text_file(path_str)
-            .with_context(|| format!("parsing HLO text {:?}", art.file))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling {:?}", art.file))?,
-        );
-        self.cache.borrow_mut().insert(art.file.clone(), exe.clone());
+        let exe = Rc::new(self.backend.compile(&self.manifest, model, key)?);
+        self.cache.borrow_mut().insert(cache_key, exe.clone());
         Ok(exe)
     }
 
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        self.backend.upload_f32(data, dims)
     }
 
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        self.backend.upload_i32(data, dims)
     }
 
     /// Upload a rank-0 f32 scalar.
-    ///
-    /// Deliberately NOT `buffer_from_host_literal`: that call maps to
-    /// `BufferFromHostLiteral`, which copies *asynchronously* on a PJRT
-    /// worker thread — a temporary `Literal` would be freed mid-copy
-    /// (observed SIGSEGV in `ShapeUtil::ByteSizeOf`). `buffer_from_host_buffer`
-    /// uses `kImmutableOnlyDuringCall` semantics (synchronous copy).
-    pub fn upload_scalar(&self, v: f32) -> Result<PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    pub fn upload_scalar(&self, v: f32) -> Result<Buffer> {
+        self.backend.upload_f32(&[v], &[])
     }
 
-    /// Execute with device-resident args; returns the first (only) output.
-    pub fn run_b(&self, exe: &PjRtLoadedExecutable, args: &[&PjRtBuffer]) -> Result<PjRtBuffer> {
-        let mut out = exe.execute_b(args)?;
-        let replica = out.pop().context("no execution output")?;
-        replica.into_iter().next().context("empty replica output")
+    /// Execute with device-resident args; returns the single output.
+    pub fn run_b(&self, exe: &Executable, args: &[&Buffer]) -> Result<Buffer> {
+        self.backend.execute(exe, args)
     }
 
     /// Download a full f32 buffer to the host.
-    ///
-    /// Goes through `to_literal_sync` — the TFRT CPU plugin does not
-    /// implement `CopyRawToHost`, so partial/offset reads are impossible;
-    /// small reads use dedicated slicing artifacts instead (see
-    /// `DeviceState::scalars`).
-    pub fn download_f32(&self, buf: &PjRtBuffer, len: usize) -> Result<Vec<f32>> {
+    pub fn download_f32(&self, buf: &Buffer, len: usize) -> Result<Vec<f32>> {
         let mut out = Vec::new();
         self.download_f32_into(buf, len, &mut out)?;
         Ok(out)
@@ -92,24 +92,17 @@ impl Engine {
 
     /// Download an f32 buffer into a caller-held vector (decode hot loop).
     ///
-    /// The literal path always materializes a fresh Vec, so this moves the
-    /// download into `out` and frees the previous backing store — callers
-    /// hold one live logits buffer per step instead of two, and the
-    /// hot-loop call sites stay shaped for true reuse if the xla crate
-    /// grows a copy-into API.
-    pub fn download_f32_into(
-        &self,
-        buf: &PjRtBuffer,
-        len: usize,
-        out: &mut Vec<f32>,
-    ) -> Result<()> {
-        let lit = buf.to_literal_sync()?;
-        let v: Vec<f32> = lit.to_vec()?;
-        if v.len() != len {
-            bail!("downloaded {} elements, expected {}", v.len(), len);
+    /// Hardened on element count: when the buffer knows its logical shape,
+    /// a `len` mismatch errors *before* touching the backend, and every
+    /// backend re-verifies the actual element count after the transfer —
+    /// a wrong caller-supplied length can never silently truncate or pad.
+    pub fn download_f32_into(&self, buf: &Buffer, len: usize, out: &mut Vec<f32>) -> Result<()> {
+        if let Some(n) = buf.element_count() {
+            if n != len {
+                bail!("download of {len} elements requested from a buffer holding {n}");
+            }
         }
-        *out = v;
-        Ok(())
+        self.backend.download_f32(buf, len, out)
     }
 }
 
@@ -134,14 +127,14 @@ impl<'e> ModelRuntime<'e> {
         Ok(ModelRuntime { engine, model })
     }
 
-    pub fn exe(&self, key: &str) -> Result<Rc<PjRtLoadedExecutable>> {
-        self.engine.load(self.model.artifact(key)?)
+    pub fn exe(&self, key: &str) -> Result<Rc<Executable>> {
+        self.engine.load(&self.model, key)
     }
 
     /// Upload the pieces of a batch as device buffers in manifest arg order
     /// (tokens, mask[, advantage][, pixels] — the caller interleaves state /
     /// params / lr as required by the specific artifact).
-    pub fn upload_tokens(&self, batch: &Batch) -> Result<PjRtBuffer> {
+    pub fn upload_tokens(&self, batch: &Batch) -> Result<Buffer> {
         let (b, s) = (self.model.batch, self.model.seq_len);
         if batch.tokens.len() != b * s {
             bail!("tokens len {} != {}x{}", batch.tokens.len(), b, s);
@@ -149,12 +142,12 @@ impl<'e> ModelRuntime<'e> {
         self.engine.upload_i32(&batch.tokens, &[b, s])
     }
 
-    pub fn upload_mask(&self, batch: &Batch) -> Result<PjRtBuffer> {
+    pub fn upload_mask(&self, batch: &Batch) -> Result<Buffer> {
         let (b, s) = (self.model.batch, self.model.seq_len);
         self.engine.upload_f32(&batch.mask, &[b, s])
     }
 
-    pub fn upload_pixels(&self, batch: &Batch) -> Result<Option<PjRtBuffer>> {
+    pub fn upload_pixels(&self, batch: &Batch) -> Result<Option<Buffer>> {
         if !self.model.vision {
             return Ok(None);
         }
@@ -170,13 +163,13 @@ impl<'e> ModelRuntime<'e> {
         Ok(Some(self.engine.upload_f32(px, &dims)?))
     }
 
-    pub fn upload_advantage(&self, batch: &Batch) -> Result<PjRtBuffer> {
+    pub fn upload_advantage(&self, batch: &Batch) -> Result<Buffer> {
         let adv = batch.advantage.as_ref().context("RL step requires advantages")?;
         self.engine.upload_f32(adv, &[self.model.batch])
     }
 
     /// Upload a parameter vector (teacher weights, PTQ weights, ...).
-    pub fn upload_params(&self, params: &[f32]) -> Result<PjRtBuffer> {
+    pub fn upload_params(&self, params: &[f32]) -> Result<Buffer> {
         if params.len() != self.model.param_count {
             bail!(
                 "params len {} != param_count {}",
@@ -190,13 +183,14 @@ impl<'e> ModelRuntime<'e> {
 
 /// Device-resident training state (the single flat vector).
 pub struct DeviceState {
-    pub buf: PjRtBuffer,
+    pub buf: Buffer,
     pub state_len: usize,
     pub scalars_off: usize,
     pub n_scalars: usize,
     pub param_count: usize,
+    backend: Rc<dyn ExecBackend>,
     /// The `scalars` slicing artifact (state -> f32[8]); compiled once.
-    scalars_exe: Rc<PjRtLoadedExecutable>,
+    scalars_exe: Rc<Executable>,
 }
 
 impl DeviceState {
@@ -219,31 +213,33 @@ impl DeviceState {
             bail!("state len {} != {}", state.len(), m.state_len);
         }
         let buf = rt.engine.upload_f32(state, &[m.state_len])?;
-        let scalars_exe = rt.engine.load(m.artifact("scalars")?)?;
+        let scalars_exe = rt.engine.load(m, "scalars")?;
         Ok(DeviceState {
             buf,
             state_len: m.state_len,
             scalars_off: m.scalars_offset(),
             n_scalars: rt.engine.manifest.n_scalars,
             param_count: m.param_count,
+            backend: rt.engine.backend(),
             scalars_exe,
         })
     }
 
     /// Advance: replace the device buffer with the step output.
-    pub fn advance(&mut self, new_buf: PjRtBuffer) {
+    pub fn advance(&mut self, new_buf: Buffer) {
         self.buf = new_buf;
     }
 
     /// A sibling state viewing another buffer of the same layout (used for
     /// scratch validation states that are dropped after reading metrics).
-    pub fn like(&self, buf: PjRtBuffer) -> DeviceState {
+    pub fn like(&self, buf: Buffer) -> DeviceState {
         DeviceState {
             buf,
             state_len: self.state_len,
             scalars_off: self.scalars_off,
             n_scalars: self.n_scalars,
             param_count: self.param_count,
+            backend: self.backend.clone(),
             scalars_exe: self.scalars_exe.clone(),
         }
     }
@@ -251,13 +247,9 @@ impl DeviceState {
     /// Read the 8-float metrics block via the device-side `scalars`
     /// slicing artifact (cheap; never copies params to the host).
     pub fn scalars(&self) -> Result<Vec<f32>> {
-        let mut out = self.scalars_exe.execute_b(&[&self.buf])?;
-        let replica = out.pop().context("no scalars output")?;
-        let buf = replica.into_iter().next().context("empty scalars output")?;
-        let v: Vec<f32> = buf.to_literal_sync()?.to_vec()?;
-        if v.len() != self.n_scalars {
-            bail!("scalars artifact returned {} values", v.len());
-        }
+        let out = self.backend.execute(&self.scalars_exe, &[&self.buf])?;
+        let mut v = Vec::new();
+        self.backend.download_f32(&out, self.n_scalars, &mut v)?;
         Ok(v)
     }
 
@@ -271,10 +263,8 @@ impl DeviceState {
 
     /// Download the full state (checkpointing).
     pub fn full(&self) -> Result<Vec<f32>> {
-        let v: Vec<f32> = self.buf.to_literal_sync()?.to_vec()?;
-        if v.len() != self.state_len {
-            bail!("state download returned {} values", v.len());
-        }
+        let mut v = Vec::new();
+        self.backend.download_f32(&self.buf, self.state_len, &mut v)?;
         Ok(v)
     }
 }

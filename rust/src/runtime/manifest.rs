@@ -49,6 +49,10 @@ pub struct ModelEntry {
     pub n_heads: usize,
     pub d_ff: usize,
     pub blocks: Vec<String>,
+    /// Experts per "moe" block (0 for models without moe blocks and for
+    /// pre-field manifests; the reference backend then derives it from the
+    /// router parameter shape).
+    pub n_experts: usize,
     pub vocab: usize,
     pub seq_len: usize,
     pub batch: usize,
@@ -87,13 +91,6 @@ impl ModelEntry {
 
     pub fn has_artifact(&self, key: &str) -> bool {
         self.artifacts.contains_key(key)
-    }
-
-    /// The frontier-gather twin of `fwd_key`, when the manifest carries one.
-    /// Older artifact builds simply lack the key, in which case callers fall
-    /// back to the full-logits download path.
-    pub fn frontier_artifact(&self, fwd_key: &str) -> Option<&ArtifactDef> {
-        frontier_key(fwd_key).and_then(|k| self.artifacts.get(&k))
     }
 
     /// Selective-quantization predicate matching model.py `_block_quantized`
@@ -209,6 +206,7 @@ impl Manifest {
                     .iter()
                     .map(|b| b.as_str().unwrap_or("attn").to_string())
                     .collect(),
+                n_experts: m.req_usize("n_experts").unwrap_or(0),
                 vocab: m.req_usize("vocab")?,
                 seq_len: m.req_usize("seq_len")?,
                 batch: m.req_usize("batch")?,
@@ -252,5 +250,413 @@ impl Manifest {
         self.models
             .get(name)
             .with_context(|| format!("manifest has no model {name:?}"))
+    }
+}
+
+/// Spec for a synthetic manifest model — the knobs behind hermetic tests:
+/// model size, block kinds, quantization format, and which artifact keys
+/// exist. `entry()` produces a `ModelEntry` with the exact parameter
+/// layout of python/compile/model.py `param_layout` and per-key artifact
+/// argument lists matching aot.py, so the reference backend can execute
+/// it without any files on disk; `manifest_json` serializes a full
+/// manifest for tests that go through `Manifest::load`.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub blocks: Vec<String>,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_experts: usize,
+    pub vision: bool,
+    pub vision_grid: usize,
+    pub vision_patch: usize,
+    pub weights: String,
+    pub acts: String,
+    pub skip_attention: bool,
+    pub skip_first: usize,
+    pub skip_last: usize,
+    /// Artifact keys to declare ("fwd_bf16", "sft_bf16", "scalars", ...).
+    pub artifact_keys: Vec<String>,
+    pub n_scalars: usize,
+}
+
+impl SynthSpec {
+    /// A small all-attention text model with the standard artifact set —
+    /// the base most hermetic tests start from.
+    pub fn small(name: &str) -> SynthSpec {
+        SynthSpec {
+            name: name.to_string(),
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 32,
+            blocks: vec!["attn".into(), "attn".into()],
+            vocab: 64,
+            seq_len: 32,
+            batch: 4,
+            n_experts: 0,
+            vision: false,
+            vision_grid: 0,
+            vision_patch: 0,
+            weights: "nvfp4".into(),
+            acts: "nvfp4".into(),
+            skip_attention: false,
+            skip_first: 0,
+            skip_last: 0,
+            artifact_keys: vec![
+                "fwd_bf16".into(),
+                "fwd_last_bf16".into(),
+                "fwd_nvfp4".into(),
+                "fwd_last_nvfp4".into(),
+                "fwd_bf16_state".into(),
+                "fwd_last_bf16_state".into(),
+                "scalars".into(),
+                "sft_bf16".into(),
+                "qat_nvfp4".into(),
+                "qad_nvfp4".into(),
+                "mse_nvfp4".into(),
+                "nqt_nvfp4".into(),
+                "rl_bf16".into(),
+                "eval_bf16".into(),
+                "eval_nvfp4".into(),
+            ],
+            n_scalars: 8,
+        }
+    }
+
+    /// Parameter layout matching model.py `param_defs` exactly.
+    pub fn param_layout(&self) -> Vec<ParamDef> {
+        let d = self.d_model;
+        let ff = self.d_ff;
+        let v = self.vocab;
+        let n_img = if self.vision { self.vision_grid * self.vision_grid } else { 0 };
+        let total_seq = self.seq_len + n_img;
+        let mut defs: Vec<(String, Vec<usize>)> = vec![
+            ("embed".into(), vec![v, d]),
+            ("pos_emb".into(), vec![total_seq, d]),
+        ];
+        if self.vision {
+            defs.push(("vis_proj".into(), vec![self.vision_patch, d]));
+            defs.push(("vis_bias".into(), vec![d]));
+        }
+        for (i, kind) in self.blocks.iter().enumerate() {
+            let p = format!("b{i}.");
+            match kind.as_str() {
+                "attn" => {
+                    defs.push((format!("{p}ln1"), vec![d]));
+                    defs.push((format!("{p}wq"), vec![d, d]));
+                    defs.push((format!("{p}wk"), vec![d, d]));
+                    defs.push((format!("{p}wv"), vec![d, d]));
+                    defs.push((format!("{p}wo"), vec![d, d]));
+                    defs.push((format!("{p}ln2"), vec![d]));
+                    defs.push((format!("{p}w1"), vec![d, ff]));
+                    defs.push((format!("{p}w2"), vec![ff, d]));
+                }
+                "ssm" => {
+                    defs.push((format!("{p}ln"), vec![d]));
+                    defs.push((format!("{p}win"), vec![d, 3 * d]));
+                    defs.push((format!("{p}a_bias"), vec![d]));
+                    defs.push((format!("{p}wout"), vec![d, d]));
+                }
+                "moe" => {
+                    defs.push((format!("{p}ln"), vec![d]));
+                    defs.push((format!("{p}router"), vec![d, self.n_experts]));
+                    defs.push((format!("{p}w1"), vec![self.n_experts, d, ff]));
+                    defs.push((format!("{p}w2"), vec![self.n_experts, ff, d]));
+                }
+                other => panic!("unknown block kind {other:?}"),
+            }
+        }
+        defs.push(("ln_f".into(), vec![d]));
+        defs.push(("head".into(), vec![d, v]));
+        let mut out = Vec::with_capacity(defs.len());
+        let mut off = 0usize;
+        for (name, shape) in defs {
+            let size: usize = shape.iter().product();
+            out.push(ParamDef { name, shape, offset: off, size });
+            off += size;
+        }
+        out
+    }
+
+    /// Argument list for one artifact key (aot.py arg order + names).
+    fn artifact_args(&self, key: &str, param_count: usize, state_len: usize) -> Vec<ArgDef> {
+        let arg = |name: &str, shape: Vec<usize>, dtype: &str| ArgDef {
+            name: name.to_string(),
+            shape,
+            dtype: dtype.to_string(),
+        };
+        let (b, s) = (self.batch, self.seq_len);
+        let state = arg("state", vec![state_len], "f32");
+        let params = arg("params", vec![param_count], "f32");
+        let teacher = arg("teacher_params", vec![param_count], "f32");
+        let tokens = arg("tokens", vec![b, s], "i32");
+        let mask = arg("mask", vec![b, s], "f32");
+        let lr = arg("lr", vec![], "f32");
+        let adv = arg("advantage", vec![b], "f32");
+        let idx = arg("frontier_idx", vec![b], "i32");
+        let pix = arg(
+            "pixels",
+            vec![b, self.vision_grid * self.vision_grid, self.vision_patch],
+            "f32",
+        );
+        // Cross-size (`*_xsuper`) steps take the *teacher* model's param
+        // shape (aot.py uses sup_params.shape); a SynthSpec cannot know
+        // another spec's param count, so declaring such a key here would
+        // silently produce an unexecutable arg list — fail loudly instead.
+        assert!(
+            !key.ends_with("_xsuper"),
+            "SynthSpec cannot declare cross-size artifact {key:?}; build its arg list by hand"
+        );
+        let mut args: Vec<ArgDef> = if key == "scalars" {
+            return vec![state];
+        } else if key.starts_with("fwd_") {
+            let from_state = key.ends_with("_state");
+            let last = key.starts_with("fwd_last_");
+            let mut v = vec![if from_state { state } else { params }, tokens];
+            if last {
+                v.push(idx);
+            }
+            v
+        } else if key.starts_with("qad_") || key.starts_with("mse_") {
+            vec![state, teacher, tokens, mask, lr]
+        } else if key.starts_with("rl_") {
+            vec![state, tokens, mask, adv, lr]
+        } else if key.starts_with("eval_") {
+            vec![params, teacher, tokens, mask]
+        } else {
+            // sft / qat / nqt and any other CE-style step
+            vec![state, tokens, mask, lr]
+        };
+        if self.vision {
+            args.push(pix);
+        }
+        args
+    }
+
+    /// Build the `ModelEntry` (no files involved; artifact paths are
+    /// placeholders the reference backend never opens).
+    pub fn entry(&self) -> ModelEntry {
+        let params = self.param_layout();
+        let param_count: usize = params.iter().map(|p| p.size).sum();
+        let state_len = 3 * param_count + self.n_scalars;
+        let mut artifacts = BTreeMap::new();
+        for key in &self.artifact_keys {
+            artifacts.insert(
+                key.clone(),
+                ArtifactDef {
+                    file: PathBuf::from(format!("{}/{key}.hlo.txt", self.name)),
+                    args: self.artifact_args(key, param_count, state_len),
+                },
+            );
+        }
+        ModelEntry {
+            name: self.name.clone(),
+            d_model: self.d_model,
+            n_heads: self.n_heads,
+            d_ff: self.d_ff,
+            blocks: self.blocks.clone(),
+            n_experts: self.n_experts,
+            vocab: self.vocab,
+            seq_len: self.seq_len,
+            batch: self.batch,
+            vision: self.vision,
+            vision_grid: self.vision_grid,
+            vision_patch: self.vision_patch,
+            param_count,
+            state_len,
+            quant: QuantSettings {
+                weights: self.weights.clone(),
+                acts: self.acts.clone(),
+                impl_: "ref".into(),
+                skip_attention: self.skip_attention,
+                skip_first: self.skip_first,
+                skip_last: self.skip_last,
+            },
+            params,
+            artifacts,
+        }
+    }
+}
+
+/// Serialize synthetic specs as a full manifest.json body (version 4) —
+/// what hermetic integration tests write to a temp artifacts dir so the
+/// whole `Manifest::load` → `Engine` path is exercised.
+pub fn synthetic_manifest_json(specs: &[SynthSpec]) -> String {
+    let n_scalars = specs.first().map(|s| s.n_scalars).unwrap_or(8);
+    let vocab = specs.first().map(|s| s.vocab).unwrap_or(64);
+    // The manifest header carries one global vocab / scalar-block size;
+    // heterogeneous specs would silently disagree with their own entries.
+    for s in specs {
+        assert_eq!(s.vocab, vocab, "all SynthSpecs in one manifest share a vocab");
+        assert_eq!(s.n_scalars, n_scalars, "all SynthSpecs share n_scalars");
+    }
+    let mut models = Vec::new();
+    for spec in specs {
+        let entry = spec.entry();
+        let params = Json::Arr(
+            entry
+                .params
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("name", Json::Str(p.name.clone())),
+                        (
+                            "shape",
+                            Json::Arr(p.shape.iter().map(|&v| Json::Num(v as f64)).collect()),
+                        ),
+                        ("offset", Json::Num(p.offset as f64)),
+                        ("size", Json::Num(p.size as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let artifacts = Json::Obj(
+            entry
+                .artifacts
+                .iter()
+                .map(|(key, a)| {
+                    let args = Json::Arr(
+                        a.args
+                            .iter()
+                            .map(|arg| {
+                                Json::obj(vec![
+                                    ("name", Json::Str(arg.name.clone())),
+                                    (
+                                        "shape",
+                                        Json::Arr(
+                                            arg.shape
+                                                .iter()
+                                                .map(|&v| Json::Num(v as f64))
+                                                .collect(),
+                                        ),
+                                    ),
+                                    ("dtype", Json::Str(arg.dtype.clone())),
+                                ])
+                            })
+                            .collect(),
+                    );
+                    (
+                        key.clone(),
+                        Json::obj(vec![
+                            ("file", Json::Str(format!("{}/{key}.hlo.txt", spec.name))),
+                            ("args", args),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        models.push((
+            spec.name.clone(),
+            Json::obj(vec![
+                ("d_model", Json::Num(entry.d_model as f64)),
+                ("n_heads", Json::Num(entry.n_heads as f64)),
+                ("d_ff", Json::Num(entry.d_ff as f64)),
+                (
+                    "blocks",
+                    Json::Arr(entry.blocks.iter().map(|b| Json::Str(b.clone())).collect()),
+                ),
+                ("n_experts", Json::Num(entry.n_experts as f64)),
+                ("vocab", Json::Num(entry.vocab as f64)),
+                ("seq_len", Json::Num(entry.seq_len as f64)),
+                ("batch", Json::Num(entry.batch as f64)),
+                ("vision", Json::Bool(entry.vision)),
+                ("vision_grid", Json::Num(entry.vision_grid as f64)),
+                ("vision_patch", Json::Num(entry.vision_patch as f64)),
+                ("param_count", Json::Num(entry.param_count as f64)),
+                ("state_len", Json::Num(entry.state_len as f64)),
+                (
+                    "quant",
+                    Json::obj(vec![
+                        ("weights", Json::Str(entry.quant.weights.clone())),
+                        ("acts", Json::Str(entry.quant.acts.clone())),
+                        ("impl", Json::Str(entry.quant.impl_.clone())),
+                        ("skip_attention", Json::Bool(entry.quant.skip_attention)),
+                        ("skip_first", Json::Num(entry.quant.skip_first as f64)),
+                        ("skip_last", Json::Num(entry.quant.skip_last as f64)),
+                    ]),
+                ),
+                ("params", params),
+                ("artifacts", artifacts),
+            ]),
+        ));
+    }
+    Json::obj(vec![
+        ("version", Json::Num(SUPPORTED_VERSION as f64)),
+        ("vocab", Json::Num(vocab as f64)),
+        (
+            "special",
+            Json::obj(vec![
+                ("pad", Json::Num(0.0)),
+                ("bos", Json::Num(1.0)),
+                ("eos", Json::Num(2.0)),
+                ("sep", Json::Num(3.0)),
+            ]),
+        ),
+        ("n_scalars", Json::Num(n_scalars as f64)),
+        (
+            "scalar_names",
+            Json::Arr(
+                ["step", "loss", "kl", "ce", "grad_norm", "lr", "aux0", "aux1"]
+                    .iter()
+                    .map(|s| Json::Str(s.to_string()))
+                    .collect(),
+            ),
+        ),
+        ("models", Json::Obj(models)),
+    ])
+    .pretty()
+}
+
+#[cfg(test)]
+mod synth_tests {
+    use super::*;
+
+    #[test]
+    fn synth_entry_layout_is_consistent() {
+        let spec = SynthSpec::small("t");
+        let e = spec.entry();
+        let laid: usize = e.params.iter().map(|p| p.size).sum();
+        assert_eq!(laid, e.param_count);
+        assert_eq!(e.state_len, 3 * e.param_count + 8);
+        // layout is contiguous
+        let mut off = 0;
+        for p in &e.params {
+            assert_eq!(p.offset, off, "{}", p.name);
+            off += p.size;
+        }
+        assert!(e.artifacts.contains_key("fwd_bf16"));
+        assert_eq!(e.artifacts["sft_bf16"].args.len(), 4);
+        assert_eq!(e.artifacts["qad_nvfp4"].args.len(), 5);
+        assert_eq!(e.artifacts["rl_bf16"].args[3].name, "advantage");
+        assert_eq!(e.artifacts["fwd_last_bf16"].args[2].name, "frontier_idx");
+    }
+
+    #[test]
+    fn synth_manifest_round_trips_through_load() {
+        let dir = std::env::temp_dir().join("qadx_synth_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut spec = SynthSpec::small("round");
+        spec.blocks = vec!["attn".into(), "ssm".into(), "moe".into()];
+        spec.n_experts = 3;
+        let text = synthetic_manifest_json(&[spec.clone()]);
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.model("round").unwrap();
+        let want = spec.entry();
+        assert_eq!(e.param_count, want.param_count);
+        assert_eq!(e.state_len, want.state_len);
+        assert_eq!(e.n_experts, 3);
+        assert_eq!(e.blocks, want.blocks);
+        assert_eq!(e.params.len(), want.params.len());
+        for (a, b) in e.params.iter().zip(&want.params) {
+            assert_eq!((a.name.as_str(), &a.shape, a.offset, a.size),
+                       (b.name.as_str(), &b.shape, b.offset, b.size));
+        }
+        assert_eq!(e.artifacts.len(), want.artifacts.len());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,12 +1,31 @@
-//! Runtime layer: PJRT client wrapper + artifact manifest.
+//! Runtime layer: pluggable execution backends + artifact manifest.
 //!
-//! `Engine` owns the PJRT CPU client and an executable cache;
+//! [`ExecBackend`] abstracts compile/upload/execute/download behind opaque
+//! [`Buffer`]/[`Executable`] handles. Two implementations ship:
+//! * `pjrt` (feature-gated, default) — the PJRT CPU client running AOT
+//!   HLO-text artifacts;
+//! * `reference` — a pure-Rust interpreter of the artifact semantics
+//!   (forward, frontier gather, train steps, eval metrics) driven entirely
+//!   by manifest metadata, selectable via `QADX_BACKEND=reference`, which
+//!   makes the whole stack hermetically testable and cross-checks the
+//!   PJRT path when real artifacts exist.
+//!
+//! `Engine` owns a backend + the manifest + an executable cache;
 //! `ModelRuntime` binds one manifest model entry to its artifacts;
 //! `DeviceState` keeps the packed training state device-resident across
 //! steps (see python/compile/steps.py for the state layout).
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
+pub mod refmodel;
 
+pub use backend::{make_backend, BackendKind, Buffer, Dtype, ExecBackend, Executable};
 pub use engine::{scalar, Batch, DeviceState, Engine, ModelRuntime};
-pub use manifest::{frontier_key, ArtifactDef, Manifest, ModelEntry, ParamDef};
+pub use manifest::{
+    frontier_key, synthetic_manifest_json, ArtifactDef, Manifest, ModelEntry, ParamDef, SynthSpec,
+};
+pub use reference::ReferenceBackend;

@@ -1,0 +1,97 @@
+//! PJRT execution backend: the original AOT path — load HLO-text
+//! artifacts, compile once per file through the PJRT CPU client, execute
+//! device-resident. This is the only module in the crate that names an
+//! `xla::` type; everything above it speaks the [`ExecBackend`] handles.
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::backend::{Buffer, Dtype, ExecBackend, Executable};
+use super::manifest::{Manifest, ModelEntry};
+
+pub struct PjrtBackend {
+    client: PjRtClient,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client.
+    pub fn new() -> Result<PjrtBackend> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { client })
+    }
+
+    fn pjrt_buffer<'a>(&self, buf: &'a Buffer) -> Result<&'a PjRtBuffer> {
+        buf.payload::<PjRtBuffer>()
+            .context("buffer was not created by the pjrt backend")
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(&self, _manifest: &Manifest, model: &ModelEntry, key: &str) -> Result<Executable> {
+        let art = model.artifact(key)?;
+        let path_str = art
+            .file
+            .to_str()
+            .with_context(|| format!("non-utf8 path {:?}", art.file))?;
+        let proto = HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {:?}", art.file))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {:?}", art.file))?;
+        Ok(Executable::new(key, Box::new(exe)))
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        // NOTE on scalars (dims == []): deliberately NOT
+        // `buffer_from_host_literal` — that call maps to
+        // `BufferFromHostLiteral`, which copies *asynchronously* on a PJRT
+        // worker thread; a temporary `Literal` would be freed mid-copy
+        // (observed SIGSEGV in `ShapeUtil::ByteSizeOf`).
+        // `buffer_from_host_buffer` uses `kImmutableOnlyDuringCall`
+        // semantics (synchronous copy).
+        let buf = self.client.buffer_from_host_buffer(data, dims, None)?;
+        Ok(Buffer::new(Some(dims.to_vec()), Dtype::F32, Box::new(buf)))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        let buf = self.client.buffer_from_host_buffer(data, dims, None)?;
+        Ok(Buffer::new(Some(dims.to_vec()), Dtype::I32, Box::new(buf)))
+    }
+
+    fn execute(&self, exe: &Executable, args: &[&Buffer]) -> Result<Buffer> {
+        let pexe = exe
+            .payload::<PjRtLoadedExecutable>()
+            .with_context(|| format!("executable {:?} was not compiled by pjrt", exe.key()))?;
+        let mut pargs: Vec<&PjRtBuffer> = Vec::with_capacity(args.len());
+        for a in args {
+            pargs.push(self.pjrt_buffer(a)?);
+        }
+        let mut out = pexe.execute_b(&pargs)?;
+        let replica = out.pop().context("no execution output")?;
+        let buf = replica.into_iter().next().context("empty replica output")?;
+        // The xla crate does not expose the output shape; downloads verify
+        // the element count against the literal instead.
+        Ok(Buffer::new(None, Dtype::F32, Box::new(buf)))
+    }
+
+    fn download_f32(&self, buf: &Buffer, expect_len: usize, out: &mut Vec<f32>) -> Result<()> {
+        // Goes through `to_literal_sync` — the TFRT CPU plugin does not
+        // implement `CopyRawToHost`, so partial/offset reads are
+        // impossible; small reads use dedicated slicing artifacts instead
+        // (see `DeviceState::scalars`).
+        let pbuf = self.pjrt_buffer(buf)?;
+        let lit = pbuf.to_literal_sync()?;
+        let v: Vec<f32> = lit.to_vec()?;
+        if v.len() != expect_len {
+            bail!("downloaded {} elements, expected {expect_len}", v.len());
+        }
+        *out = v;
+        Ok(())
+    }
+}

@@ -1,0 +1,444 @@
+//! The pure-Rust reference execution backend.
+//!
+//! "Compiling" an artifact key here means parsing the key's semantics
+//! (fwd / fwd_last / scalars / train-step / eval, with a precision-format
+//! suffix) against the manifest model entry; executing interprets those
+//! semantics directly via [`refmodel`](super::refmodel) — no artifact
+//! files, no XLA runtime. This is what makes the decode, serve, and
+//! distill integration suites hermetic, and it doubles as a standing
+//! cross-check oracle for the PJRT backend (see
+//! rust/tests/backend_cross_validation.rs).
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{Buffer, Dtype, ExecBackend, Executable};
+use super::manifest::{ArgDef, Manifest, ModelEntry};
+use super::refmodel::{self, LossKind, RefCfg};
+
+/// Host-side tensor payload of a reference-backend buffer.
+pub(crate) enum HostData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+enum ProgKind {
+    /// state -> trailing scalar block.
+    Scalars,
+    Fwd {
+        cfg: RefCfg,
+        last: bool,
+        from_state: bool,
+    },
+    Step {
+        cfg: RefCfg,
+        loss: LossKind,
+        teacher: Option<RefCfg>,
+        quantize_grads: bool,
+    },
+    Eval {
+        student: RefCfg,
+        teacher: RefCfg,
+    },
+}
+
+struct RefProgram {
+    n_scalars: usize,
+    args: Vec<ArgDef>,
+    kind: ProgKind,
+}
+
+#[derive(Default)]
+pub struct ReferenceBackend;
+
+impl ReferenceBackend {
+    pub fn new() -> ReferenceBackend {
+        ReferenceBackend
+    }
+}
+
+fn parse_key(manifest: &Manifest, model: &ModelEntry, key: &str) -> Result<ProgKind> {
+    if key == "scalars" {
+        return Ok(ProgKind::Scalars);
+    }
+    if let Some(rest) = key.strip_prefix("fwd_") {
+        let (rest, last) = match rest.strip_prefix("last_") {
+            Some(r) => (r, true),
+            None => (rest, false),
+        };
+        let (fmt, from_state) = match rest.strip_suffix("_state") {
+            Some(f) => (f, true),
+            None => (rest, false),
+        };
+        return Ok(ProgKind::Fwd { cfg: RefCfg::for_key_format(model, fmt)?, last, from_state });
+    }
+    let (stem, fmt) = key
+        .split_once('_')
+        .with_context(|| format!("unrecognized artifact key {key:?}"))?;
+    match stem {
+        "sft" | "qat" | "nqt" => Ok(ProgKind::Step {
+            cfg: RefCfg::for_key_format(model, fmt)?,
+            loss: LossKind::Ce,
+            teacher: None,
+            quantize_grads: stem == "nqt",
+        }),
+        "rl" => Ok(ProgKind::Step {
+            cfg: RefCfg::for_key_format(model, fmt)?,
+            loss: LossKind::Reinforce,
+            teacher: None,
+            quantize_grads: false,
+        }),
+        "qad" | "mse" => {
+            // "qad_nvfp4" distills from this model's BF16 teacher;
+            // "qad_nvfp4_xsuper" from the super-sim teacher (Table 9).
+            let (fmt, teacher) = match fmt.strip_suffix("_xsuper") {
+                Some(f) => {
+                    let t = manifest
+                        .model("super-sim")
+                        .context("cross-size step needs a super-sim manifest entry")?;
+                    (f, RefCfg::bf16(t))
+                }
+                None => (fmt, RefCfg::bf16(model)),
+            };
+            Ok(ProgKind::Step {
+                cfg: RefCfg::for_key_format(model, fmt)?,
+                loss: if stem == "qad" { LossKind::Kl } else { LossKind::Mse },
+                teacher: Some(teacher),
+                quantize_grads: false,
+            })
+        }
+        "eval" => Ok(ProgKind::Eval {
+            student: RefCfg::for_key_format(model, fmt)?,
+            teacher: RefCfg::bf16(model),
+        }),
+        other => bail!("reference backend does not know artifact stem {other:?} (key {key:?})"),
+    }
+}
+
+fn f32_data<'a>(buf: &'a Buffer, what: &str) -> Result<&'a [f32]> {
+    match buf.payload::<HostData>() {
+        Some(HostData::F32(v)) => Ok(v),
+        Some(HostData::I32(_)) => bail!("{what}: expected f32 buffer, got i32"),
+        None => bail!("{what}: buffer was not created by the reference backend"),
+    }
+}
+
+fn i32_data<'a>(buf: &'a Buffer, what: &str) -> Result<&'a [i32]> {
+    match buf.payload::<HostData>() {
+        Some(HostData::I32(v)) => Ok(v),
+        Some(HostData::F32(_)) => bail!("{what}: expected i32 buffer, got f32"),
+        None => bail!("{what}: buffer was not created by the reference backend"),
+    }
+}
+
+/// Positional args resolved to named slots, validated against the
+/// manifest's declared shapes/dtypes.
+struct ArgMap<'a> {
+    named: Vec<(&'a str, &'a Buffer)>,
+}
+
+impl<'a> ArgMap<'a> {
+    fn bind(defs: &'a [ArgDef], args: &[&'a Buffer], key: &str) -> Result<ArgMap<'a>> {
+        if defs.len() != args.len() {
+            bail!("artifact {key:?} takes {} args, got {}", defs.len(), args.len());
+        }
+        let mut named = Vec::with_capacity(defs.len());
+        for (d, &b) in defs.iter().zip(args) {
+            let want: usize = d.shape.iter().product();
+            let got = match b.payload::<HostData>() {
+                Some(HostData::F32(v)) => v.len(),
+                Some(HostData::I32(v)) => v.len(),
+                None => bail!(
+                    "artifact {key:?} arg {:?}: buffer was not created by the reference backend",
+                    d.name
+                ),
+            };
+            if got != want {
+                bail!(
+                    "artifact {key:?} arg {:?}: buffer has {got} elements, \
+                     manifest declares {:?} ({want})",
+                    d.name,
+                    d.shape
+                );
+            }
+            named.push((d.name.as_str(), b));
+        }
+        Ok(ArgMap { named })
+    }
+
+    fn get(&self, name: &str) -> Result<&'a Buffer> {
+        self.named
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, b)| *b)
+            .with_context(|| format!("artifact is missing arg {name:?}"))
+    }
+
+    fn maybe(&self, name: &str) -> Option<&'a Buffer> {
+        self.named.iter().find(|(n, _)| *n == name).map(|(_, b)| *b)
+    }
+
+    fn f32(&self, name: &str) -> Result<&'a [f32]> {
+        f32_data(self.get(name)?, name)
+    }
+
+    fn i32(&self, name: &str) -> Result<&'a [i32]> {
+        i32_data(self.get(name)?, name)
+    }
+
+    fn maybe_f32(&self, name: &str) -> Result<Option<&'a [f32]>> {
+        match self.maybe(name) {
+            Some(b) => Ok(Some(f32_data(b, name)?)),
+            None => Ok(None),
+        }
+    }
+}
+
+fn out_f32(data: Vec<f32>, dims: Vec<usize>) -> Buffer {
+    Buffer::new(Some(dims), Dtype::F32, Box::new(HostData::F32(data)))
+}
+
+impl ExecBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn compile(&self, manifest: &Manifest, model: &ModelEntry, key: &str) -> Result<Executable> {
+        let art = model.artifact(key)?;
+        let kind = parse_key(manifest, model, key)
+            .with_context(|| format!("reference backend compiling {key:?} for {}", model.name))?;
+        let prog = RefProgram { n_scalars: manifest.n_scalars, args: art.args.clone(), kind };
+        Ok(Executable::new(key, Box::new(prog)))
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        let want: usize = dims.iter().product();
+        if data.len() != want {
+            bail!("upload_f32: {} elements for dims {dims:?}", data.len());
+        }
+        Ok(Buffer::new(Some(dims.to_vec()), Dtype::F32, Box::new(HostData::F32(data.to_vec()))))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        let want: usize = dims.iter().product();
+        if data.len() != want {
+            bail!("upload_i32: {} elements for dims {dims:?}", data.len());
+        }
+        Ok(Buffer::new(Some(dims.to_vec()), Dtype::I32, Box::new(HostData::I32(data.to_vec()))))
+    }
+
+    fn execute(&self, exe: &Executable, args: &[&Buffer]) -> Result<Buffer> {
+        let prog = exe
+            .payload::<RefProgram>()
+            .with_context(|| format!("executable {:?} was not compiled by reference", exe.key()))?;
+        let am = ArgMap::bind(&prog.args, args, exe.key())?;
+        match &prog.kind {
+            ProgKind::Scalars => {
+                let state = am.f32("state")?;
+                if state.len() < prog.n_scalars {
+                    bail!("state shorter than scalar block");
+                }
+                let sc = state[state.len() - prog.n_scalars..].to_vec();
+                Ok(out_f32(sc, vec![prog.n_scalars]))
+            }
+            ProgKind::Fwd { cfg, last, from_state } => {
+                let m = &cfg.model;
+                let tokens = am.i32("tokens")?;
+                let tok_def = am.get("tokens")?;
+                let dims = tok_def.dims().context("tokens buffer has no dims")?;
+                if dims.len() != 2 {
+                    bail!("tokens must be rank 2, got {dims:?}");
+                }
+                let (b, s) = (dims[0], dims[1]);
+                let params_full = if *from_state { am.f32("state")? } else { am.f32("params")? };
+                if params_full.len() < m.param_count {
+                    bail!(
+                        "weights buffer has {} floats < param_count {}",
+                        params_full.len(),
+                        m.param_count
+                    );
+                }
+                let params = &params_full[..m.param_count];
+                let pixels = am.maybe_f32("pixels")?;
+                if *last {
+                    let idx = am.i32("frontier_idx")?;
+                    let out = refmodel::fwd_last(cfg, params, tokens, idx, b, s, pixels)?;
+                    Ok(out_f32(out, vec![b, m.vocab]))
+                } else {
+                    let out = refmodel::fwd_logits(cfg, params, tokens, b, s, pixels)?;
+                    Ok(out_f32(out, vec![b, s, m.vocab]))
+                }
+            }
+            ProgKind::Step { cfg, loss, teacher, quantize_grads } => {
+                let state = am.f32("state")?;
+                let tokens = am.i32("tokens")?;
+                let mask = am.f32("mask")?;
+                let dims = am.get("tokens")?.dims().context("tokens buffer has no dims")?;
+                if dims.len() != 2 {
+                    bail!("tokens must be rank 2, got {dims:?}");
+                }
+                let (b, s) = (dims[0], dims[1]);
+                let lr_buf = am.f32("lr")?;
+                let lr = *lr_buf.first().context("lr buffer is empty")?;
+                let adv = am.maybe_f32("advantage")?;
+                let pixels = am.maybe_f32("pixels")?;
+                let teacher_pair = match teacher {
+                    Some(tcfg) => {
+                        let tp = am.f32("teacher_params")?;
+                        if tp.len() != tcfg.model.param_count {
+                            bail!(
+                                "teacher params len {} != teacher param_count {}",
+                                tp.len(),
+                                tcfg.model.param_count
+                            );
+                        }
+                        Some((tcfg, tp))
+                    }
+                    None => None,
+                };
+                let out = refmodel::train_step(
+                    cfg,
+                    teacher_pair,
+                    loss,
+                    *quantize_grads,
+                    state,
+                    tokens,
+                    mask,
+                    b,
+                    s,
+                    lr,
+                    adv,
+                    pixels,
+                    prog.n_scalars,
+                )?;
+                let n = out.len();
+                Ok(out_f32(out, vec![n]))
+            }
+            ProgKind::Eval { student, teacher } => {
+                let params = am.f32("params")?;
+                let t_params = am.f32("teacher_params")?;
+                let tokens = am.i32("tokens")?;
+                let mask = am.f32("mask")?;
+                let dims = am.get("tokens")?.dims().context("tokens buffer has no dims")?;
+                let (b, s) = (dims[0], dims[1]);
+                let pixels = am.maybe_f32("pixels")?;
+                let out = refmodel::eval_metrics(
+                    student,
+                    params,
+                    teacher,
+                    t_params,
+                    tokens,
+                    mask,
+                    b,
+                    s,
+                    pixels,
+                    prog.n_scalars,
+                )?;
+                let n = out.len();
+                Ok(out_f32(out, vec![n]))
+            }
+        }
+    }
+
+    fn download_f32(&self, buf: &Buffer, expect_len: usize, out: &mut Vec<f32>) -> Result<()> {
+        let v = f32_data(buf, "download")?;
+        if v.len() != expect_len {
+            bail!("downloaded {} elements, expected {expect_len}", v.len());
+        }
+        out.clear();
+        out.extend_from_slice(v);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{synthetic_manifest_json, SynthSpec};
+
+    /// One unique dir per (test, process): the tests in this module run
+    /// concurrently on harness threads, so the fixture must never share a
+    /// path across tests.
+    fn synth_manifest(tag: &str) -> Manifest {
+        let dir = std::env::temp_dir()
+            .join(format!("qadx_refbackend_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = SynthSpec::small("ref-b");
+        std::fs::write(dir.join("manifest.json"), synthetic_manifest_json(&[spec])).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        m
+    }
+
+    #[test]
+    fn compiles_every_declared_key() {
+        let manifest = synth_manifest("compiles_every");
+        let model = manifest.model("ref-b").unwrap().clone();
+        let be = ReferenceBackend::new();
+        for key in model.artifacts.keys() {
+            be.compile(&manifest, &model, key)
+                .unwrap_or_else(|e| panic!("key {key}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn unknown_key_is_a_clear_error() {
+        let manifest = synth_manifest("unknown_key");
+        let mut model = manifest.model("ref-b").unwrap().clone();
+        // declare a bogus artifact so the key lookup passes
+        let art = model.artifacts["fwd_bf16"].clone();
+        model.artifacts.insert("frobnicate_bf16".into(), art);
+        let be = ReferenceBackend::new();
+        let err = be.compile(&manifest, &model, "frobnicate_bf16").unwrap_err();
+        assert!(format!("{err:#}").contains("frobnicate"), "{err:#}");
+    }
+
+    #[test]
+    fn scalars_program_slices_tail() {
+        let manifest = synth_manifest("scalars_program");
+        let model = manifest.model("ref-b").unwrap().clone();
+        let be = ReferenceBackend::new();
+        let exe = be.compile(&manifest, &model, "scalars").unwrap();
+        let mut state = vec![0f32; model.state_len];
+        for (i, v) in state.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let sbuf = be.upload_f32(&state, &[model.state_len]).unwrap();
+        let out = be.execute(&exe, &[&sbuf]).unwrap();
+        let mut got = Vec::new();
+        be.download_f32(&out, 8, &mut got).unwrap();
+        let want: Vec<f32> = (model.state_len - 8..model.state_len).map(|i| i as f32).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn download_len_mismatch_is_an_error_not_a_truncation() {
+        let be = ReferenceBackend::new();
+        let buf = be.upload_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let mut out = Vec::new();
+        let err = be.download_f32(&buf, 5, &mut out).unwrap_err();
+        assert!(format!("{err}").contains("expected 5"), "{err}");
+        assert!(out.is_empty());
+        be.download_f32(&buf, 4, &mut out).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn upload_rejects_shape_mismatch() {
+        let be = ReferenceBackend::new();
+        assert!(be.upload_f32(&[1.0; 3], &[2, 2]).is_err());
+        assert!(be.upload_i32(&[1; 4], &[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn wrong_arg_count_and_dtype_are_rejected() {
+        let manifest = synth_manifest("wrong_arg");
+        let model = manifest.model("ref-b").unwrap().clone();
+        let be = ReferenceBackend::new();
+        let exe = be.compile(&manifest, &model, "scalars").unwrap();
+        let b1 = be.upload_f32(&[0.0; 4], &[4]).unwrap();
+        // wrong arity
+        assert!(be.execute(&exe, &[&b1, &b1]).is_err());
+        // wrong element count vs the declared state shape
+        assert!(be.execute(&exe, &[&b1]).is_err());
+    }
+}

@@ -1,82 +1,45 @@
-//! `qadx::api` integration tests. Most run against a minimal synthetic
-//! manifest (no AOT artifacts needed); the serve test additionally runs
-//! against real artifacts when they exist, mirroring runtime_smoke's
-//! skip-with-message convention.
+//! `qadx::api` integration tests. All of them run hermetically on the
+//! reference backend over synthetic manifests (tests/common); the serve
+//! path additionally runs against real AOT artifacts when they exist
+//! (artifact tier).
 
-use std::path::{Path, PathBuf};
+mod common;
+
+use std::path::Path;
 use std::rc::Rc;
 
 use qadx::api::{RecoveryMethod, ServeCfg, Session};
 use qadx::coordinator::{checkpoint, RecoveryCfg};
 use qadx::data::{SourceSpec, Suite};
+use qadx::runtime::BackendKind;
 use qadx::util::json::Json;
 
-const PARAM_COUNT: usize = 8;
-
-/// Write a minimal-but-valid artifacts dir: a manifest with one model
-/// ("tiny"), no artifact files. Engine construction only needs the
-/// manifest + a PJRT CPU client.
-fn fake_artifacts(tag: &str) -> PathBuf {
-    let dir = std::env::temp_dir().join(format!("qadx_api_test_{tag}")).join("artifacts");
-    std::fs::create_dir_all(&dir).unwrap();
-    let n_scalars = 8;
-    let manifest = format!(
-        r#"{{
-  "version": 4,
-  "vocab": 64,
-  "special": {{"pad": 0, "bos": 1, "eos": 2, "sep": 3}},
-  "n_scalars": {n_scalars},
-  "scalar_names": ["step", "loss", "kl", "ce", "grad_norm", "lr", "r0", "r1"],
-  "models": {{
-    "tiny": {{
-      "d_model": 4, "n_heads": 1, "d_ff": 8,
-      "blocks": ["attn"],
-      "vocab": 64, "seq_len": 8, "batch": 2,
-      "vision": false, "vision_grid": 0, "vision_patch": 0,
-      "param_count": {PARAM_COUNT},
-      "state_len": {state_len},
-      "quant": {{"weights": "nvfp4", "acts": "bf16", "impl": "ref",
-                 "skip_attention": false, "skip_first": 0, "skip_last": 0}},
-      "params": [{{"name": "embed", "shape": [2, 4], "offset": 0, "size": {PARAM_COUNT}}}],
-      "artifacts": {{}}
-    }}
-  }}
-}}"#,
-        state_len = 3 * PARAM_COUNT + n_scalars,
-    );
-    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
-    dir
-}
-
-fn tmp_runs(tag: &str) -> PathBuf {
-    let dir = std::env::temp_dir().join(format!("qadx_api_test_{tag}")).join("runs");
-    std::fs::create_dir_all(&dir).unwrap();
-    dir
-}
-
-fn save_teacher(runs: &Path, model: &str, params: &[f32]) -> PathBuf {
+fn save_teacher(runs: &Path, model: &str, params: &[f32]) -> std::path::PathBuf {
     let path = runs.join("teachers").join(format!("{model}.qckp"));
     checkpoint::save(&path, params, &Json::obj(vec![])).unwrap();
     path
 }
 
-fn build_session(artifacts: &Path, runs: &Path) -> Option<Session> {
-    match Session::builder().artifacts_dir(artifacts).runs_dir(runs).build() {
-        Ok(s) => Some(s),
-        Err(e) => {
-            eprintln!("skipping: cannot build session ({e:#})");
-            None
-        }
-    }
+/// Session over a synthetic single-model manifest on the reference backend.
+fn session_with(tag: &str, spec: qadx::runtime::SynthSpec) -> (Session, std::path::PathBuf) {
+    let artifacts = common::write_artifacts(tag, &[spec]);
+    let runs = common::tmp_runs(tag);
+    let session = Session::builder()
+        .artifacts_dir(&artifacts)
+        .runs_dir(&runs)
+        .backend(BackendKind::Reference)
+        .build()
+        .expect("reference session");
+    (session, runs)
 }
 
 #[test]
 fn teacher_disk_cache_then_memory_cache() {
-    let artifacts = fake_artifacts("cache");
-    let runs = tmp_runs("cache");
-    let params: Vec<f32> = (0..PARAM_COUNT).map(|i| i as f32 * 0.25).collect();
+    let spec = common::small_spec("tiny");
+    let param_count = spec.entry().param_count;
+    let (session, runs) = session_with("cache", spec);
+    let params: Vec<f32> = (0..param_count).map(|i| i as f32 * 0.25).collect();
     let tpath = save_teacher(&runs, "tiny", &params);
-    let Some(session) = build_session(&artifacts, &runs) else { return };
 
     let ms = session.model("tiny").unwrap();
     assert_eq!(ms.teacher().unwrap().as_ref(), &params);
@@ -87,24 +50,22 @@ fn teacher_disk_cache_then_memory_cache() {
     let ms2 = session.model("tiny").unwrap();
     assert_eq!(ms2.teacher().unwrap().as_ref(), &params);
 
-    std::fs::remove_dir_all(artifacts.parent().unwrap()).ok();
+    common::cleanup("cache");
 }
 
 #[test]
 fn stale_teacher_cache_is_not_served() {
-    let artifacts = fake_artifacts("stale");
-    let runs = tmp_runs("stale");
+    let (session, runs) = session_with("stale", common::small_spec("tiny"));
     // Wrong parameter count: must trigger retraining (which fails fast
-    // here — the fake manifest has no step artifacts) instead of serving
+    // here — "tiny" has no teacher pipeline) instead of serving
     // wrong-size weights.
     save_teacher(&runs, "tiny", &[1.0, 2.0]);
-    let Some(session) = build_session(&artifacts, &runs) else { return };
 
     let ms = session.model("tiny").unwrap();
     let res = ms.teacher();
     assert!(res.is_err(), "stale cache must not be served");
 
-    std::fs::remove_dir_all(artifacts.parent().unwrap()).ok();
+    common::cleanup("stale");
 }
 
 /// A seventh recovery method: one trait impl + one registry entry, no
@@ -125,22 +86,19 @@ impl RecoveryMethod for EchoTeacher {
 
 #[test]
 fn seventh_method_is_trait_impl_plus_registration() {
-    let artifacts = fake_artifacts("seventh");
-    let runs = tmp_runs("seventh");
-    let params: Vec<f32> = (0..PARAM_COUNT).map(|i| (i as f32).sin()).collect();
+    let spec = common::small_spec("tiny");
+    let param_count = spec.entry().param_count;
+    let artifacts = common::write_artifacts("seventh", &[spec]);
+    let runs = common::tmp_runs("seventh");
+    let params: Vec<f32> = (0..param_count).map(|i| (i as f32).sin()).collect();
     save_teacher(&runs, "tiny", &params);
-    let session = match Session::builder()
+    let session = Session::builder()
         .artifacts_dir(&artifacts)
         .runs_dir(&runs)
+        .backend(BackendKind::Reference)
         .register_method(Rc::new(EchoTeacher))
         .build()
-    {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("skipping: cannot build session ({e:#})");
-            return;
-        }
-    };
+        .expect("reference session");
 
     // Resolvable by name alongside the six built-ins.
     let echo = session.method("echo").unwrap();
@@ -160,19 +118,12 @@ fn seventh_method_is_trait_impl_plus_registration() {
     // Training-free methods evaluate the teacher weights.
     assert_eq!(ms.method_params(&*echo).unwrap(), params);
 
-    std::fs::remove_dir_all(artifacts.parent().unwrap()).ok();
+    common::cleanup("seventh");
 }
 
-#[test]
-fn serve_handle_coalesces_over_real_artifacts() {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return;
-    }
-    let runs = tmp_runs("serve");
-    let Some(session) = build_session(&dir, &runs) else { return };
-    let ms = session.model("size-xs").unwrap();
+/// The full coalescing-server behavior contract, shared by both tiers.
+fn assert_serve_coalesces(session: &Session, model: &str) {
+    let ms = session.model(model).unwrap();
     let b = ms.rt.model.batch;
     let n = 2 * b + (b + 1) / 2; // ragged tail whenever b > 1
 
@@ -187,6 +138,9 @@ fn serve_handle_coalesces_over_real_artifacts() {
     assert_eq!(responses.len(), n, "every request must complete");
     let ids: std::collections::BTreeSet<u64> = responses.iter().map(|r| r.id).collect();
     assert_eq!(ids.len(), n);
+    for r in &responses {
+        assert_eq!(r.row.len(), ms.rt.model.seq_len);
+    }
 
     let st = server.stats();
     assert_eq!(st.requests, n);
@@ -199,6 +153,44 @@ fn serve_handle_coalesces_over_real_artifacts() {
         assert!((last - tail as f64 / b as f64).abs() < 1e-12, "fill {last}");
     }
     assert!(st.fill_ratios.iter().all(|f| f > 0.0 && f <= 1.0));
+}
 
-    std::fs::remove_dir_all(runs.parent().unwrap()).ok();
+#[test]
+fn serve_handle_coalesces_hermetically() {
+    let (session, _runs) = session_with("serve_ref", common::small_spec("size-serve"));
+    assert_serve_coalesces(&session, "size-serve");
+    common::cleanup("serve_ref");
+}
+
+#[test]
+fn serve_quantized_fwd_path_hermetically() {
+    // The nvfp4 serving path end-to-end: quantized forward + frontier
+    // decode under the coalescer.
+    let (session, _runs) = session_with("serve_ref_q", common::small_spec("size-serveq"));
+    let ms = session.model("size-serveq").unwrap();
+    let mut cfg = ServeCfg::default();
+    cfg.sample.max_new = 2;
+    let mut server = ms.server("fwd_nvfp4", &cfg).unwrap();
+    for i in 0..3 {
+        server.submit(vec![1, 5 + i, 3]).unwrap();
+    }
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), 3);
+    assert!(server.stats().gen_tokens > 0);
+    common::cleanup("serve_ref_q");
+}
+
+#[test]
+fn serve_handle_coalesces_over_real_artifacts() {
+    let Some(dir) = common::real_artifacts_dir() else {
+        common::artifact_tier_disabled("serve_coalesce");
+        return;
+    };
+    let runs = common::tmp_runs("serve_art");
+    let session = match Session::builder().artifacts_dir(&dir).runs_dir(&runs).build() {
+        Ok(s) => s,
+        Err(e) => panic!("artifacts exist but session failed: {e:#}"),
+    };
+    assert_serve_coalesces(&session, "size-xs");
+    common::cleanup("serve_art");
 }

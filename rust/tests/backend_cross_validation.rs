@@ -1,0 +1,183 @@
+//! Backend cross-validation: when real AOT artifacts exist, the PJRT
+//! backend (XLA executing the lowered HLO) and the pure-Rust reference
+//! backend must agree on golden inputs — forward logits, frontier gather,
+//! eval metrics, and a full train-step state update. This turns the
+//! reference interpreter into a standing oracle for future backend work
+//! (GPU, sharded, remote): any divergence is a bug in one of the two.
+#![cfg(feature = "pjrt")]
+
+mod common;
+
+use qadx::coordinator::init_params;
+use qadx::runtime::{scalar, BackendKind, Batch, DeviceState, Engine, ModelRuntime};
+use qadx::util::rng::Rng;
+
+const MODEL: &str = "size-xs";
+
+fn engines() -> Option<(Engine, Engine)> {
+    let dir = match common::real_artifacts_dir() {
+        Some(d) => d,
+        None => {
+            common::artifact_tier_disabled("backend_cross_validation");
+            return None;
+        }
+    };
+    let pjrt = Engine::with_backend(&dir, BackendKind::Pjrt).expect("pjrt engine");
+    let reference = Engine::with_backend(&dir, BackendKind::Reference).expect("reference engine");
+    Some((pjrt, reference))
+}
+
+fn golden_batch(rt: &ModelRuntime) -> Batch {
+    let mut rng = Rng::new(0x601d);
+    let (b, s) = (rt.model.batch, rt.model.seq_len);
+    Batch {
+        tokens: (0..b * s).map(|_| rng.range(4, rt.model.vocab as i64) as i32).collect(),
+        mask: vec![1.0; b * s],
+        pixels: None,
+        advantage: None,
+    }
+}
+
+fn max_rel_diff(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let scale = b.iter().fold(0f64, |m, v| m.max(v.abs() as f64)).max(1e-12);
+    a.iter()
+        .zip(b)
+        .fold(0f64, |m, (x, y)| m.max((*x as f64 - *y as f64).abs()))
+        / scale
+}
+
+#[test]
+fn forward_logits_agree_across_backends() {
+    let Some((pjrt, refe)) = engines() else { return };
+    for fwd_key in ["fwd_bf16", "fwd_nvfp4"] {
+        let rt_p = ModelRuntime::new(&pjrt, MODEL).unwrap();
+        let rt_r = ModelRuntime::new(&refe, MODEL).unwrap();
+        let params = init_params(&rt_p.model, 0);
+        let batch = golden_batch(&rt_p);
+        let (b, s, v) = (rt_p.model.batch, rt_p.model.seq_len, rt_p.model.vocab);
+
+        let out_p = pjrt
+            .run_b(
+                &rt_p.exe(fwd_key).unwrap(),
+                &[&rt_p.upload_params(&params).unwrap(), &rt_p.upload_tokens(&batch).unwrap()],
+            )
+            .unwrap();
+        let lp = pjrt.download_f32(&out_p, b * s * v).unwrap();
+        let out_r = refe
+            .run_b(
+                &rt_r.exe(fwd_key).unwrap(),
+                &[&rt_r.upload_params(&params).unwrap(), &rt_r.upload_tokens(&batch).unwrap()],
+            )
+            .unwrap();
+        let lr_ = refe.download_f32(&out_r, b * s * v).unwrap();
+        let d = max_rel_diff(&lr_, &lp);
+        assert!(d < 5e-3, "{fwd_key}: backends diverge (max rel diff {d})");
+    }
+}
+
+#[test]
+fn frontier_gather_agrees_across_backends() {
+    let Some((pjrt, refe)) = engines() else { return };
+    let rt_p = ModelRuntime::new(&pjrt, MODEL).unwrap();
+    let rt_r = ModelRuntime::new(&refe, MODEL).unwrap();
+    if !rt_p.model.has_artifact("fwd_last_bf16") {
+        common::artifact_tier_disabled("frontier_gather_cross (no fwd_last_bf16)");
+        return;
+    }
+    let params = init_params(&rt_p.model, 2);
+    let batch = golden_batch(&rt_p);
+    let (b, s, v) = (rt_p.model.batch, rt_p.model.seq_len, rt_p.model.vocab);
+    let idx: Vec<i32> = (0..b).map(|i| (i % s) as i32).collect();
+
+    let out_p = pjrt
+        .run_b(
+            &rt_p.exe("fwd_last_bf16").unwrap(),
+            &[
+                &rt_p.upload_params(&params).unwrap(),
+                &rt_p.upload_tokens(&batch).unwrap(),
+                &pjrt.upload_i32(&idx, &[b]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let lp = pjrt.download_f32(&out_p, b * v).unwrap();
+    let out_r = refe
+        .run_b(
+            &rt_r.exe("fwd_last_bf16").unwrap(),
+            &[
+                &rt_r.upload_params(&params).unwrap(),
+                &rt_r.upload_tokens(&batch).unwrap(),
+                &refe.upload_i32(&idx, &[b]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let lr_ = refe.download_f32(&out_r, b * v).unwrap();
+    let d = max_rel_diff(&lr_, &lp);
+    assert!(d < 5e-3, "frontier gather diverges (max rel diff {d})");
+}
+
+#[test]
+fn eval_metrics_agree_across_backends() {
+    let Some((pjrt, refe)) = engines() else { return };
+    let rt_p = ModelRuntime::new(&pjrt, MODEL).unwrap();
+    let rt_r = ModelRuntime::new(&refe, MODEL).unwrap();
+    let student = init_params(&rt_p.model, 1);
+    let teacher = init_params(&rt_p.model, 5);
+    let batch = golden_batch(&rt_p);
+
+    let run = |engine: &Engine, rt: &ModelRuntime| -> Vec<f32> {
+        let out = engine
+            .run_b(
+                &rt.exe("eval_nvfp4").unwrap(),
+                &[
+                    &rt.upload_params(&student).unwrap(),
+                    &rt.upload_params(&teacher).unwrap(),
+                    &rt.upload_tokens(&batch).unwrap(),
+                    &rt.upload_mask(&batch).unwrap(),
+                ],
+            )
+            .unwrap();
+        engine.download_f32(&out, 8).unwrap()
+    };
+    let mp = run(&pjrt, &rt_p);
+    let mr = run(&refe, &rt_r);
+    // kl_mean, ce_mean, token count must agree; sums follow.
+    for i in [0usize, 1, 2] {
+        let rel = ((mp[i] - mr[i]).abs() as f64) / (mp[i].abs() as f64).max(1e-6);
+        assert!(rel < 1e-2, "eval slot {i}: pjrt {} vs reference {}", mp[i], mr[i]);
+    }
+}
+
+#[test]
+fn train_step_state_update_agrees_across_backends() {
+    let Some((pjrt, refe)) = engines() else { return };
+    let rt_p = ModelRuntime::new(&pjrt, MODEL).unwrap();
+    let rt_r = ModelRuntime::new(&refe, MODEL).unwrap();
+    let params = init_params(&rt_p.model, 7);
+    let batch = golden_batch(&rt_p);
+    let lr = 1e-3f32;
+
+    let run = |engine: &Engine, rt: &ModelRuntime| -> (Vec<f32>, Vec<f32>) {
+        let mut state = DeviceState::from_params(rt, &params).unwrap();
+        let exe = rt.exe("sft_bf16").unwrap();
+        let tokens = rt.upload_tokens(&batch).unwrap();
+        let mask = rt.upload_mask(&batch).unwrap();
+        let lr_buf = engine.upload_scalar(lr).unwrap();
+        let out = engine.run_b(&exe, &[&state.buf, &tokens, &mask, &lr_buf]).unwrap();
+        state.advance(out);
+        (state.scalars().unwrap(), state.params().unwrap())
+    };
+    let (sc_p, pp) = run(&pjrt, &rt_p);
+    let (sc_r, pr) = run(&refe, &rt_r);
+    assert_eq!(sc_p[scalar::STEP], sc_r[scalar::STEP]);
+    let loss_rel =
+        ((sc_p[scalar::LOSS] - sc_r[scalar::LOSS]).abs() as f64) / (sc_p[scalar::LOSS] as f64);
+    assert!(loss_rel < 5e-3, "loss diverges: {} vs {}", sc_p[scalar::LOSS], sc_r[scalar::LOSS]);
+    // Adam clips per-param updates to ~lr; allow a few lr of drift where
+    // tiny gradients flip the moment-normalized sign.
+    let max_abs = pp
+        .iter()
+        .zip(&pr)
+        .fold(0f32, |m, (a, b)| m.max((a - b).abs()));
+    assert!(max_abs <= 4.0 * lr, "params diverge by {max_abs} (> 4*lr)");
+}

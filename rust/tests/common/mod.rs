@@ -1,0 +1,92 @@
+//! Shared fixtures for the integration suites.
+//!
+//! `write_artifacts` materializes a synthetic artifacts dir (manifest only
+//! — the reference backend needs no artifact files) from [`SynthSpec`]s,
+//! whose knobs cover model size, block kinds, quantization format, and
+//! which artifact keys exist. `reference_engine` / `reference_session`
+//! wrap it into ready-to-use handles pinned to the reference backend, so
+//! the hermetic tier runs identically everywhere — CI containers with no
+//! XLA toolchain included.
+//!
+//! The artifact-backed tier goes through [`real_artifacts_dir`]:
+//! `QADX_ARTIFACTS_DIR` when set, else `rust/artifacts` (the `make
+//! artifacts` output location). Those tests run *in addition to* the
+//! hermetic ones and print an "artifact tier disabled" note (never the
+//! "skipping:" marker CI greps for) when artifacts are absent.
+
+#![allow(dead_code)]
+
+use std::path::{Path, PathBuf};
+
+use qadx::api::Session;
+use qadx::runtime::{synthetic_manifest_json, BackendKind, Engine, SynthSpec};
+
+/// Write a synthetic artifacts dir (manifest.json only) and return it.
+pub fn write_artifacts(tag: &str, specs: &[SynthSpec]) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("qadx_it_{tag}_{}", std::process::id()))
+        .join("artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), synthetic_manifest_json(specs)).unwrap();
+    dir
+}
+
+/// Fresh runs dir next to the artifacts dir of `tag`.
+pub fn tmp_runs(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("qadx_it_{tag}_{}", std::process::id()))
+        .join("runs");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Remove the whole `tag` scratch tree.
+pub fn cleanup(tag: &str) {
+    let dir = std::env::temp_dir().join(format!("qadx_it_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// An engine over a synthetic manifest, pinned to the reference backend
+/// (hermetic: ignores `QADX_BACKEND`, needs no artifacts, no XLA).
+pub fn reference_engine(tag: &str, specs: &[SynthSpec]) -> Engine {
+    let dir = write_artifacts(tag, specs);
+    Engine::with_backend(&dir, BackendKind::Reference).expect("reference engine")
+}
+
+/// A full api::Session over a synthetic manifest on the reference backend.
+pub fn reference_session(tag: &str, specs: &[SynthSpec]) -> Session {
+    let dir = write_artifacts(tag, specs);
+    Session::builder()
+        .artifacts_dir(&dir)
+        .runs_dir(tmp_runs(tag))
+        .backend(BackendKind::Reference)
+        .build()
+        .expect("reference session")
+}
+
+/// The default hermetic model: small, two attention blocks, nvfp4 quant,
+/// full artifact key set.
+pub fn small_spec(name: &str) -> SynthSpec {
+    SynthSpec::small(name)
+}
+
+/// Where real AOT artifacts live, if any: `QADX_ARTIFACTS_DIR`, else the
+/// `make artifacts` location. None disables the artifact-backed tier.
+pub fn real_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(d) = std::env::var("QADX_ARTIFACTS_DIR") {
+        let p = PathBuf::from(d);
+        return if p.join("manifest.json").exists() { Some(p) } else { None };
+    }
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        None
+    }
+}
+
+/// Standard note for a disabled artifact tier (deliberately NOT the
+/// "skipping:" marker — CI fails on that to catch hermetic-test skips).
+pub fn artifact_tier_disabled(test: &str) {
+    eprintln!("{test}: artifact tier disabled (no AOT artifacts; set QADX_ARTIFACTS_DIR)");
+}

@@ -10,10 +10,12 @@ use qadx::data::{
     sources::decode_response, tasks, tokenizer as tok, BatchFactory, BatchShape, SourceKind,
     SourceSpec, TEXT_SUITES, VISION_SUITES,
 };
+use qadx::eval::{sample_token, SampleCfg};
 use qadx::quant::fp::{e2m1_round, e4m3_round};
 use qadx::quant::nvfp4::{self, Nvfp4Tensor};
 use qadx::util::json::Json;
 use qadx::util::rng::Rng;
+use qadx::util::{percentile, StatsWindow};
 
 fn cases(n: usize) -> impl Iterator<Item = u64> {
     (0..n as u64).map(|i| 0xBEEF ^ i.wrapping_mul(0x9E3779B97F4A7C15))
@@ -231,6 +233,244 @@ fn prop_merge_lerp_between_endpoints() {
             let lo = a[i].min(b[i]) - 1e-5;
             let hi = a[i].max(b[i]) + 1e-5;
             assert!(m[i] >= lo && m[i] <= hi, "seed {seed} idx {i}");
+        }
+    }
+}
+
+// ----------------------------------------------------------------- sampling
+
+/// Full-sort top-p oracle mirroring the seed semantics: sort candidates by
+/// descending probability, keep the minimal prefix whose cumulative mass
+/// reaches p·z, walk it highest-first with one uniform draw.
+fn sample_token_oracle(cfg: &SampleCfg, rng: &mut Rng, logits: &[f32]) -> i32 {
+    if cfg.temperature <= 0.0 {
+        return argmax_oracle(logits);
+    }
+    let inv_t = 1.0 / cfg.temperature;
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<(f64, u32)> = Vec::with_capacity(logits.len());
+    let mut z = 0f64;
+    for (i, &l) in logits.iter().enumerate() {
+        let p = (((l - mx) * inv_t) as f64).exp();
+        z += p;
+        probs.push((p, i as u32));
+    }
+    if z.is_nan() || z <= 0.0 {
+        return argmax_oracle(logits);
+    }
+    if cfg.top_p >= 1.0 {
+        let mut x = rng.f64() * z;
+        for &(p, i) in probs.iter() {
+            x -= p;
+            if x <= 0.0 {
+                return i as i32;
+            }
+        }
+        return probs.last().map(|&(_, i)| i as i32).unwrap_or(0);
+    }
+    let mut sorted = probs;
+    sorted.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let target = cfg.top_p as f64 * z;
+    let mut cum = 0f64;
+    let mut k = 0usize;
+    while k < sorted.len() {
+        cum += sorted[k].0;
+        k += 1;
+        if cum >= target {
+            break;
+        }
+    }
+    let mut x = rng.f64() * cum;
+    for &(p, i) in sorted[..k].iter() {
+        x -= p;
+        if x <= 0.0 {
+            return i as i32;
+        }
+    }
+    sorted[k - 1].1 as i32
+}
+
+fn argmax_oracle(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Scaled probabilities exactly as both implementations compute them.
+fn scaled_probs(cfg: &SampleCfg, logits: &[f32]) -> Vec<f64> {
+    let inv_t = 1.0 / cfg.temperature;
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    logits.iter().map(|&l| (((l - mx) * inv_t) as f64).exp()).collect()
+}
+
+#[test]
+fn prop_top_p_heap_matches_full_sort_oracle_on_distinct_probs() {
+    // With all probabilities distinct, the heap's partial selection visits
+    // candidates in exactly the oracle's sorted order, so the kept set,
+    // cumulative mass, and single rng draw must coincide draw-for-draw.
+    let mut hits = 0usize;
+    for seed in cases(120) {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.below(48);
+        let temperature = 0.3 + rng.f32() * 1.5;
+        let top_p = 0.05 + rng.f32() * 0.9;
+        let logits: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 3.0).collect();
+        let cfg = SampleCfg { temperature, top_p, max_new: 1, seed };
+        let probs = scaled_probs(&cfg, &logits);
+        let mut sorted = probs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if sorted.windows(2).any(|w| w[0] == w[1]) {
+            continue; // tie — covered by the membership property below
+        }
+        for draw in 0..8u64 {
+            let mut r1 = Rng::new(seed ^ (draw << 32));
+            let mut r2 = Rng::new(seed ^ (draw << 32));
+            let a = sample_token(&cfg, &mut r1, &logits);
+            let b = sample_token_oracle(&cfg, &mut r2, &logits);
+            assert_eq!(a, b, "seed {seed} draw {draw}: heap {a} vs oracle {b}");
+            hits += 1;
+        }
+    }
+    assert!(hits > 500, "too few distinct-prob cases exercised ({hits})");
+}
+
+#[test]
+fn prop_top_p_ties_never_escape_the_nucleus_closure() {
+    // Adversarial ties: logits drawn from a tiny value set so many
+    // candidates share identical probabilities, including at the nucleus
+    // boundary. Whatever the heap's tie order, the sampled token's
+    // probability must be >= the k-th largest (the tie-closed nucleus).
+    for seed in cases(80) {
+        let mut rng = Rng::new(seed);
+        let n = 4 + rng.below(28);
+        let vals = [0.0f32, 1.0, 2.0];
+        let logits: Vec<f32> = (0..n).map(|_| *rng.choice(&vals)).collect();
+        let top_p = [0.3f32, 0.5, 0.7, 0.9][rng.below(4)];
+        let cfg = SampleCfg { temperature: 1.0, top_p, max_new: 1, seed };
+        let probs = scaled_probs(&cfg, &logits);
+        let z: f64 = probs.iter().sum();
+        let mut sorted = probs.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let target = top_p as f64 * z;
+        let mut cum = 0f64;
+        let mut k = 0usize;
+        while k < sorted.len() {
+            cum += sorted[k];
+            k += 1;
+            if cum >= target {
+                break;
+            }
+        }
+        let min_kept = sorted[k - 1];
+        for draw in 0..10u64 {
+            let mut r = Rng::new(seed ^ (draw << 24) ^ 0xA5);
+            let t = sample_token(&cfg, &mut r, &logits) as usize;
+            assert!(
+                probs[t] >= min_kept,
+                "seed {seed}: sampled prob {} below nucleus floor {min_kept} (p {top_p})",
+                probs[t]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_top_p_edge_values() {
+    for seed in cases(40) {
+        let mut rng = Rng::new(seed);
+        let n = 3 + rng.below(20);
+        let logits: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 2.0).collect();
+        // p = 1.0: no nucleus cut — one cumulative walk in index order,
+        // identical to the oracle's p>=1 branch draw-for-draw.
+        let cfg1 = SampleCfg { temperature: 0.9, top_p: 1.0, max_new: 1, seed };
+        let mut r1 = Rng::new(seed ^ 1);
+        let mut r2 = Rng::new(seed ^ 1);
+        assert_eq!(
+            sample_token(&cfg1, &mut r1, &logits),
+            sample_token_oracle(&cfg1, &mut r2, &logits),
+            "seed {seed} (p=1.0)"
+        );
+        // p = 0.0: nucleus degenerates to a single maximal-probability
+        // token.
+        let cfg0 = SampleCfg { temperature: 0.9, top_p: 0.0, max_new: 1, seed };
+        let mut r = Rng::new(seed ^ 2);
+        let t = sample_token(&cfg0, &mut r, &logits) as usize;
+        let probs = scaled_probs(&cfg0, &logits);
+        let pmax = probs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(probs[t], pmax, "seed {seed}: p=0 must pick a max-prob token");
+    }
+}
+
+#[test]
+fn prop_all_neg_inf_rows_fall_back_to_argmax_without_panicking() {
+    for seed in cases(20) {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(12);
+        let logits = vec![f32::NEG_INFINITY; n];
+        for &top_p in &[0.0f32, 0.4, 1.0] {
+            let cfg = SampleCfg { temperature: 0.8, top_p, max_new: 1, seed };
+            let mut r = Rng::new(seed);
+            let t = sample_token(&cfg, &mut r, &logits);
+            assert!((0..n as i32).contains(&t), "seed {seed} p {top_p}: {t}");
+        }
+        // single -inf survivor among -inf: still in range
+        let mut mixed = vec![f32::NEG_INFINITY; n];
+        mixed[seed as usize % n] = 0.0;
+        let cfg = SampleCfg { temperature: 1.0, top_p: 0.5, max_new: 1, seed };
+        let mut r = Rng::new(seed);
+        assert_eq!(sample_token(&cfg, &mut r, &mixed), (seed as usize % n) as i32);
+    }
+}
+
+// ------------------------------------------------------------- stats window
+
+#[test]
+fn prop_stats_window_matches_naive_recompute() {
+    for seed in cases(60) {
+        let mut rng = Rng::new(seed);
+        let cap = 1 + rng.below(64);
+        let len = 1 + rng.below(400);
+        let mut w = StatsWindow::with_capacity(cap);
+        let mut all: Vec<f64> = Vec::with_capacity(len);
+        for step in 0..len {
+            let v = match rng.below(4) {
+                0 => rng.normal() * 100.0,
+                1 => rng.f64() * 1e-6,
+                2 => -(rng.f64() * 50.0),
+                _ => (rng.below(10) as f64) - 5.0, // clustered duplicates
+            };
+            w.push(v);
+            all.push(v);
+            if step % 37 != 0 && step + 1 != len {
+                continue; // spot-check periodically + at the end
+            }
+            let tail: Vec<f64> =
+                all[all.len().saturating_sub(cap)..].to_vec();
+            assert_eq!(w.len(), tail.len(), "seed {seed} step {step}");
+            assert_eq!(w.count(), all.len() as u64);
+            let naive_sum: f64 = all.iter().sum();
+            assert!(
+                (w.sum() - naive_sum).abs() <= 1e-9 * (1.0 + naive_sum.abs()),
+                "seed {seed}: sum {} vs naive {naive_sum}",
+                w.sum()
+            );
+            let naive_mean = naive_sum / all.len() as f64;
+            assert!(
+                (w.mean() - naive_mean).abs() <= 1e-9 * (1.0 + naive_mean.abs()),
+                "seed {seed}: mean"
+            );
+            assert_eq!(w.last(), all.last().copied());
+            for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+                let want = percentile(&tail, p);
+                let got = w.percentile(p);
+                assert_eq!(got, want, "seed {seed} step {step} p{p}");
+            }
+            let kept: Vec<f64> = w.iter().collect();
+            assert_eq!(kept, tail, "seed {seed}: window contents/order");
         }
     }
 }

@@ -1,20 +1,17 @@
-//! End-to-end runtime smoke test: load AOT artifacts, chain train steps
-//! with a device-resident state vector, verify metrics and convergence.
-//! Requires `make artifacts` (skipped with a clear message otherwise).
+//! End-to-end runtime smoke tests in two tiers.
+//!
+//! Hermetic tier (always runs, every machine, no artifacts, no XLA):
+//! the reference backend executes the same chain — device-resident state
+//! through train steps, scalars artifact, fwd + eval artifacts — over a
+//! synthetic manifest. Artifact tier (additional, when AOT artifacts
+//! exist): the identical assertions against the real `size-xs` artifacts
+//! on the engine's default backend.
+
+mod common;
 
 use qadx::coordinator::init_params;
 use qadx::runtime::{scalar, Batch, DeviceState, Engine, ModelRuntime};
 use qadx::util::rng::Rng;
-use std::path::Path;
-
-fn engine() -> Option<Engine> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Engine::new(&dir).expect("engine"))
-}
 
 fn rand_batch(rt: &ModelRuntime, seed: u64) -> Batch {
     let mut rng = Rng::new(seed);
@@ -27,10 +24,8 @@ fn rand_batch(rt: &ModelRuntime, seed: u64) -> Batch {
     }
 }
 
-#[test]
-fn sft_step_chain_decreases_loss() {
-    let Some(engine) = engine() else { return };
-    let rt = ModelRuntime::new(&engine, "size-xs").unwrap();
+fn assert_sft_chain_decreases_loss(engine: &Engine, model: &str) {
+    let rt = ModelRuntime::new(engine, model).unwrap();
     let params = init_params(&rt.model, 0);
     let mut state = DeviceState::from_params(&rt, &params).unwrap();
     let exe = rt.exe("sft_bf16").unwrap();
@@ -54,10 +49,8 @@ fn sft_step_chain_decreases_loss() {
     assert!((sc[scalar::LR] - 3e-3).abs() < 1e-9);
 }
 
-#[test]
-fn qad_step_reduces_kl_against_teacher() {
-    let Some(engine) = engine() else { return };
-    let rt = ModelRuntime::new(&engine, "size-xs").unwrap();
+fn assert_qad_chain_reduces_kl(engine: &Engine, model: &str) {
+    let rt = ModelRuntime::new(engine, model).unwrap();
     let teacher = init_params(&rt.model, 5);
     let mut state = DeviceState::from_params(&rt, &teacher).unwrap();
     let exe = rt.exe("qad_nvfp4").unwrap();
@@ -79,10 +72,8 @@ fn qad_step_reduces_kl_against_teacher() {
     assert!(kls.iter().all(|&k| k >= 0.0));
 }
 
-#[test]
-fn fwd_logits_shape_and_eval_metrics() {
-    let Some(engine) = engine() else { return };
-    let rt = ModelRuntime::new(&engine, "size-xs").unwrap();
+fn assert_fwd_and_eval_metrics(engine: &Engine, model: &str) {
+    let rt = ModelRuntime::new(engine, model).unwrap();
     let params = init_params(&rt.model, 0);
     let p_buf = rt.upload_params(&params).unwrap();
     let batch = rand_batch(&rt, 3);
@@ -107,4 +98,90 @@ fn fwd_logits_shape_and_eval_metrics() {
     let outq = engine.run_b(&evq, &[&p_buf, &p_buf, &tokens, &mask]).unwrap();
     let mq = engine.download_f32(&outq, 8).unwrap();
     assert!(mq[0] > 1e-6, "quantized KL {mq:?}");
+}
+
+// --- hermetic tier (reference backend, synthetic manifest) -----------------
+
+#[test]
+fn sft_step_chain_decreases_loss() {
+    let engine = common::reference_engine("smoke_sft", &[common::small_spec("size-smoke")]);
+    assert_sft_chain_decreases_loss(&engine, "size-smoke");
+    common::cleanup("smoke_sft");
+}
+
+#[test]
+fn qad_step_reduces_kl_against_teacher() {
+    let engine = common::reference_engine("smoke_qad", &[common::small_spec("size-smoke")]);
+    assert_qad_chain_reduces_kl(&engine, "size-smoke");
+    common::cleanup("smoke_qad");
+}
+
+#[test]
+fn fwd_logits_shape_and_eval_metrics() {
+    let engine = common::reference_engine("smoke_fwd", &[common::small_spec("size-smoke")]);
+    assert_fwd_and_eval_metrics(&engine, "size-smoke");
+    common::cleanup("smoke_fwd");
+}
+
+#[test]
+fn hermetic_chain_works_on_hybrid_blocks() {
+    // The reference backend's ssm/moe paths through the same smoke chain.
+    let mut spec = common::small_spec("size-hybrid");
+    spec.blocks = vec!["ssm".into(), "moe".into(), "attn".into()];
+    spec.n_experts = 3;
+    let engine = common::reference_engine("smoke_hybrid", &[spec]);
+    assert_sft_chain_decreases_loss(&engine, "size-hybrid");
+    assert_fwd_and_eval_metrics(&engine, "size-hybrid");
+    common::cleanup("smoke_hybrid");
+}
+
+#[test]
+fn download_element_count_mismatch_is_an_error() {
+    // Engine::download_f32_into must reject a wrong caller length instead
+    // of trusting it — both via the buffer's known shape (pre-transfer)
+    // and the backend's element count (post-transfer).
+    let engine = common::reference_engine("smoke_dl", &[common::small_spec("size-smoke")]);
+    let buf = engine.upload_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+    let mut out = Vec::new();
+    let err = engine.download_f32_into(&buf, 7, &mut out).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains('7') && msg.contains('6'), "unhelpful error: {msg}");
+    assert!(out.is_empty(), "mismatched download must not write output");
+    engine.download_f32_into(&buf, 6, &mut out).unwrap();
+    assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    // the whole-buffer convenience path agrees
+    assert!(engine.download_f32(&buf, 5).is_err());
+    common::cleanup("smoke_dl");
+}
+
+// --- artifact tier (real AOT artifacts, default backend) -------------------
+
+#[test]
+fn sft_step_chain_decreases_loss_artifact_tier() {
+    let Some(dir) = common::real_artifacts_dir() else {
+        common::artifact_tier_disabled("sft_step_chain");
+        return;
+    };
+    let engine = Engine::new(&dir).expect("engine");
+    assert_sft_chain_decreases_loss(&engine, "size-xs");
+}
+
+#[test]
+fn qad_step_reduces_kl_against_teacher_artifact_tier() {
+    let Some(dir) = common::real_artifacts_dir() else {
+        common::artifact_tier_disabled("qad_step_chain");
+        return;
+    };
+    let engine = Engine::new(&dir).expect("engine");
+    assert_qad_chain_reduces_kl(&engine, "size-xs");
+}
+
+#[test]
+fn fwd_logits_shape_and_eval_metrics_artifact_tier() {
+    let Some(dir) = common::real_artifacts_dir() else {
+        common::artifact_tier_disabled("fwd_logits_eval");
+        return;
+    };
+    let engine = Engine::new(&dir).expect("engine");
+    assert_fwd_and_eval_metrics(&engine, "size-xs");
 }

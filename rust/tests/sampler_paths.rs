@@ -1,22 +1,16 @@
-//! Decode-path equivalence: the frontier-gather (`fwd_last_*`) artifact and
+//! Decode-path equivalence: the frontier-gather (`fwd_last_*`) path and
 //! the full-logits download must produce identical rows for a fixed seed —
 //! the gather changes how logits reach the host, never what gets sampled.
-//! Requires `make artifacts` (skipped with a clear message otherwise).
+//!
+//! Hermetic tier runs on the reference backend over a synthetic manifest
+//! (always, everywhere); the artifact tier repeats the check against real
+//! AOT artifacts when they exist.
 
-use std::path::Path;
+mod common;
 
 use qadx::coordinator::init_params;
 use qadx::eval::{SampleCfg, Sampler};
 use qadx::runtime::{frontier_key, Engine, ModelRuntime};
-
-fn engine() -> Option<Engine> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Engine::new(&dir).expect("engine"))
-}
 
 #[test]
 fn frontier_key_mapping() {
@@ -32,10 +26,8 @@ fn frontier_key_mapping() {
     assert_eq!(frontier_key("fwd_last_bf16"), None);
 }
 
-#[test]
-fn frontier_and_full_download_rows_identical() {
-    let Some(engine) = engine() else { return };
-    let rt = ModelRuntime::new(&engine, "size-xs").unwrap();
+fn assert_frontier_and_full_rows_identical(engine: &Engine, model: &str) {
+    let rt = ModelRuntime::new(engine, model).unwrap();
     let params = init_params(&rt.model, 0);
     let p_buf = rt.upload_params(&params).unwrap();
     let prompts: Vec<Vec<i32>> = (0..rt.model.batch.min(4))
@@ -44,16 +36,16 @@ fn frontier_and_full_download_rows_identical() {
     let cfg = SampleCfg { temperature: 0.6, top_p: 0.95, max_new: 6, seed: 42 };
 
     let mut fast = Sampler::new(&rt, "fwd_bf16", cfg).unwrap();
-    if !fast.uses_frontier() {
-        eprintln!("skipping: manifest has no fwd_last_bf16 (rebuild artifacts)");
-        return;
-    }
+    assert!(
+        fast.uses_frontier(),
+        "manifest carries fwd_last_bf16 but the sampler did not pick it up"
+    );
     let mut full = Sampler::new(&rt, "fwd_bf16", cfg).unwrap();
     full.force_full_logits(true);
     assert!(!full.uses_frontier());
 
-    let rows_fast = fast.generate(&engine, &p_buf, &prompts, None).unwrap();
-    let rows_full = full.generate(&engine, &p_buf, &prompts, None).unwrap();
+    let rows_fast = fast.generate(engine, &p_buf, &prompts, None).unwrap();
+    let rows_full = full.generate(engine, &p_buf, &prompts, None).unwrap();
     assert_eq!(rows_fast, rows_full, "decode paths diverged");
 
     // greedy decode must agree as well (argmax is download-order invariant)
@@ -61,7 +53,65 @@ fn frontier_and_full_download_rows_identical() {
     let mut fast_g = Sampler::new(&rt, "fwd_bf16", greedy).unwrap();
     let mut full_g = Sampler::new(&rt, "fwd_bf16", greedy).unwrap();
     full_g.force_full_logits(true);
-    let a = fast_g.generate(&engine, &p_buf, &prompts, None).unwrap();
-    let b = full_g.generate(&engine, &p_buf, &prompts, None).unwrap();
+    let a = fast_g.generate(engine, &p_buf, &prompts, None).unwrap();
+    let b = full_g.generate(engine, &p_buf, &prompts, None).unwrap();
     assert_eq!(a, b, "greedy decode paths diverged");
+}
+
+// --- hermetic tier ---------------------------------------------------------
+
+#[test]
+fn frontier_and_full_download_rows_identical() {
+    let engine = common::reference_engine("sampler_eq", &[common::small_spec("size-dec")]);
+    assert_frontier_and_full_rows_identical(&engine, "size-dec");
+    common::cleanup("sampler_eq");
+}
+
+#[test]
+fn quantized_decode_paths_agree_too() {
+    let engine = common::reference_engine("sampler_eq_q", &[common::small_spec("size-decq")]);
+    let rt = ModelRuntime::new(&engine, "size-decq").unwrap();
+    let params = init_params(&rt.model, 3);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let prompts: Vec<Vec<i32>> = vec![vec![1, 9, 3], vec![1, 12, 17, 3]];
+    let cfg = SampleCfg { temperature: 0.8, top_p: 0.9, max_new: 5, seed: 11 };
+    let mut fast = Sampler::new(&rt, "fwd_nvfp4", cfg).unwrap();
+    assert!(fast.uses_frontier());
+    let mut full = Sampler::new(&rt, "fwd_nvfp4", cfg).unwrap();
+    full.force_full_logits(true);
+    let a = fast.generate(&engine, &p_buf, &prompts, None).unwrap();
+    let b = full.generate(&engine, &p_buf, &prompts, None).unwrap();
+    assert_eq!(a, b, "quantized decode paths diverged");
+    common::cleanup("sampler_eq_q");
+}
+
+#[test]
+fn frontier_fallback_when_manifest_lacks_twin() {
+    // A manifest without fwd_last_* keys: generation still works through
+    // the full-logits path and reports uses_frontier() == false.
+    let mut spec = common::small_spec("size-nolast");
+    spec.artifact_keys.retain(|k| !k.starts_with("fwd_last_"));
+    let engine = common::reference_engine("sampler_fb", &[spec]);
+    let rt = ModelRuntime::new(&engine, "size-nolast").unwrap();
+    let params = init_params(&rt.model, 1);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let cfg = SampleCfg { temperature: 0.6, top_p: 0.95, max_new: 4, seed: 2 };
+    let mut s = Sampler::new(&rt, "fwd_bf16", cfg).unwrap();
+    assert!(!s.uses_frontier());
+    let rows = s.generate(&engine, &p_buf, &[vec![1, 5, 3]], None).unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].len(), rt.model.seq_len);
+    common::cleanup("sampler_fb");
+}
+
+// --- artifact tier ---------------------------------------------------------
+
+#[test]
+fn frontier_and_full_download_rows_identical_artifact_tier() {
+    let Some(dir) = common::real_artifacts_dir() else {
+        common::artifact_tier_disabled("frontier_vs_full");
+        return;
+    };
+    let engine = Engine::new(&dir).expect("engine");
+    assert_frontier_and_full_rows_identical(&engine, "size-xs");
 }
