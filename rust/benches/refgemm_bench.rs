@@ -1,0 +1,149 @@
+//! Reference-backend compute-core benchmarks: the blocked/parallel GEMM
+//! family, the hermetic full forward, the QAD train step, and decode
+//! throughput (tokens/sec) through the reference engine. Entirely
+//! hermetic — a synthetic manifest, no artifacts, no XLA.
+//!
+//! `cargo bench --bench refgemm_bench` → BENCH_refgemm.json at the repo
+//! root (the committed file carries a `baseline` section with the pre-PR
+//! single-thread naive numbers, so `scripts/bench_diff.py
+//! BENCH_refgemm.json --against-baseline` tracks the speedup).
+//! `QADX_THREADS` / `--threads` size the pool; `_t1` rows pin one thread
+//! for an on-machine scaling reference.
+
+use qadx::runtime::refmodel::{self, LossKind, RefCfg};
+use qadx::runtime::{synthetic_manifest_json, BackendKind, Engine, ModelRuntime, SynthSpec};
+use qadx::util::bench::BenchSuite;
+use qadx::util::rng::Rng;
+use qadx::util::{gemm, pool};
+
+fn randn(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.normal() as f32 * scale).collect()
+}
+
+/// The bench model: big enough that every GEMM crosses the parallel
+/// threshold, small enough to iterate quickly.
+fn bench_spec() -> SynthSpec {
+    let mut spec = SynthSpec::small("refgemm-bench");
+    spec.d_model = 128;
+    spec.n_heads = 4;
+    spec.d_ff = 256;
+    spec.vocab = 512;
+    spec.seq_len = 32;
+    spec.batch = 4;
+    spec
+}
+
+/// Init params like the reference tests: ln scales 1, biases 0, fan-in
+/// scaled normals elsewhere.
+fn init_params(cfg: &RefCfg, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    let mut p = vec![0f32; cfg.model.param_count];
+    for d in &cfg.model.params {
+        let leaf = d.name.rsplit('.').next().unwrap_or("");
+        let slice = &mut p[d.offset..d.offset + d.size];
+        if leaf.starts_with("ln") {
+            slice.fill(1.0);
+        } else if leaf == "a_bias" || leaf == "vis_bias" {
+            slice.fill(0.0);
+        } else {
+            let fan_in =
+                if d.shape.len() >= 2 { d.shape[d.shape.len() - 2] } else { d.shape[0] };
+            let std = 1.0 / (fan_in as f32).sqrt();
+            for v in slice.iter_mut() {
+                *v = r.normal() as f32 * std;
+            }
+        }
+    }
+    p
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("refgemm");
+    println!("pool threads: {}", pool::threads());
+
+    // ---- GEMM family, 256^3 ------------------------------------------
+    let n = 256usize;
+    let a = randn(n * n, 1, 1.0);
+    let b = randn(n * n, 2, 1.0);
+    suite.run("gemm_matmul_256x256x256", 3, 30, || {
+        std::hint::black_box(gemm::matmul(&a, &b, n, n, n));
+    });
+    suite.run("gemm_matmul_256x256x256_t1", 3, 30, || {
+        pool::with_threads(1, || {
+            std::hint::black_box(gemm::matmul(&a, &b, n, n, n));
+        });
+    });
+    suite.run("gemm_matmul_tn_256x256x256", 3, 30, || {
+        std::hint::black_box(gemm::matmul_tn(&a, &b, n, n, n));
+    });
+    suite.run("gemm_matmul_nt_256x256x256", 3, 30, || {
+        std::hint::black_box(gemm::matmul_nt(&a, &b, n, n, n));
+    });
+
+    // ---- hermetic full forward / train step --------------------------
+    let spec = bench_spec();
+    let entry = spec.entry();
+    let cfg = RefCfg::for_key_format(&entry, "nvfp4").expect("nvfp4 cfg");
+    let teacher_cfg = RefCfg::bf16(&entry);
+    let params = init_params(&cfg, 11);
+    let m = cfg.model.clone();
+    let mut rng = Rng::new(13);
+    let tokens: Vec<i32> =
+        (0..m.batch * m.seq_len).map(|_| rng.range(1, m.vocab as i64) as i32).collect();
+    let mask = vec![1f32; m.batch * m.seq_len];
+
+    suite.run("ref_full_forward_nvfp4_d128_b4s32", 2, 12, || {
+        std::hint::black_box(
+            refmodel::fwd_logits(&cfg, &params, &tokens, m.batch, m.seq_len, None).unwrap(),
+        );
+    });
+
+    let mut state = vec![0f32; 3 * m.param_count + 8];
+    state[..m.param_count].copy_from_slice(&params);
+    suite.run("ref_train_step_qad_d128_b4s32", 1, 8, || {
+        let out = refmodel::train_step(
+            &cfg,
+            Some((&teacher_cfg, &params)),
+            &LossKind::Kl,
+            false,
+            &state,
+            &tokens,
+            &mask,
+            m.batch,
+            m.seq_len,
+            1e-3,
+            None,
+            None,
+            8,
+        )
+        .unwrap();
+        std::hint::black_box(out);
+    });
+
+    // ---- decode tokens/sec through the reference engine --------------
+    let dir = std::env::temp_dir().join(format!("qadx_refgemm_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    std::fs::write(dir.join("manifest.json"), synthetic_manifest_json(&[spec]))
+        .expect("write manifest");
+    let engine =
+        Engine::with_backend(&dir, BackendKind::Reference).expect("reference engine");
+    {
+        let rt = ModelRuntime::new(&engine, "refgemm-bench").expect("model runtime");
+        let sample = qadx::eval::SampleCfg { temperature: 0.6, top_p: 0.95, max_new: 12, seed: 7 };
+        let mut sampler = qadx::eval::Sampler::new(&rt, "fwd_nvfp4", sample).expect("sampler");
+        let wbuf = engine.upload_f32(&params, &[params.len()]).expect("weights");
+        let prompts: Vec<Vec<i32>> =
+            (0..m.batch).map(|i| vec![2 + i as i32, 3, 4, 5]).collect();
+        // nominal decode work per call (rows may stop early at EOS)
+        let units = (m.batch * sample.max_new) as f64;
+        suite.run_units("ref_decode_nvfp4_b4_new12_toks", 1, 10, units, || {
+            std::hint::black_box(
+                sampler.generate(&engine, &wbuf, &prompts, None).expect("generate"),
+            );
+        });
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    suite.finish();
+}

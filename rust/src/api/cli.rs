@@ -47,6 +47,12 @@ pub const SESSION_FLAGS: &[FlagDef] = &[
     flag("scale", "F", "1.0", "teacher pipeline step scale"),
     flag("seed", "N", "0", "session seed (data order, serve-bench mix)"),
     flag("backend", "B", "(QADX_BACKEND or pjrt)", "execution backend: pjrt|reference"),
+    flag(
+        "threads",
+        "N",
+        "(QADX_THREADS or all cores)",
+        "reference-backend worker threads (results identical at any count)",
+    ),
 ];
 
 pub const COMMANDS: &[CommandDef] = &[
@@ -263,10 +269,20 @@ pub struct SessionArgs {
     /// Execution backend (`--backend pjrt|reference`); None defers to
     /// `QADX_BACKEND` / the build default.
     pub backend: Option<crate::runtime::BackendKind>,
+    /// Worker threads for the parallel compute core (`--threads N`);
+    /// None defers to `QADX_THREADS` / available parallelism.
+    pub threads: Option<usize>,
 }
 
 impl SessionArgs {
     pub fn parse(args: &Args) -> Result<SessionArgs> {
+        let threads = match args.get("threads") {
+            Some(v) => match v.parse::<usize>() {
+                Ok(n) if n >= 1 => Some(n),
+                _ => bail!("invalid value {v:?} for --threads (need a positive integer)"),
+            },
+            None => None,
+        };
         Ok(SessionArgs {
             artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
             runs: PathBuf::from(args.get_or("runs", "runs")),
@@ -276,6 +292,7 @@ impl SessionArgs {
                 Some(v) => Some(crate::runtime::BackendKind::parse(v)?),
                 None => None,
             },
+            threads,
         })
     }
 
@@ -287,6 +304,9 @@ impl SessionArgs {
             .seed(self.seed);
         if let Some(kind) = self.backend {
             b = b.backend(kind);
+        }
+        if let Some(n) = self.threads {
+            b = b.threads(n);
         }
         b
     }
@@ -460,6 +480,16 @@ mod tests {
         assert_eq!(r.steps, 50);
         assert_eq!(r.suites.as_ref().map(|s| s.len()), Some(2));
         assert!(RecoverArgs::parse(&parse("recover x --method nope")).is_err());
+    }
+
+    #[test]
+    fn threads_flag_parses_and_rejects_garbage() {
+        let s = SessionArgs::parse(&parse("info")).unwrap();
+        assert_eq!(s.threads, None);
+        let s = SessionArgs::parse(&parse("info --threads 4")).unwrap();
+        assert_eq!(s.threads, Some(4));
+        assert!(SessionArgs::parse(&parse("info --threads 0")).is_err());
+        assert!(SessionArgs::parse(&parse("info --threads many")).is_err());
     }
 
     #[test]

@@ -129,6 +129,12 @@ pub struct ServeStats {
     pub latencies_ms: StatsWindow,
     /// Per-batch occupancy (submitted rows / model batch size).
     pub fill_ratios: StatsWindow,
+    /// Per-request time spent queued before its batch launched — the
+    /// coalescing cost. latency ≈ queue wait + execute.
+    pub queue_wait_ms: StatsWindow,
+    /// Per-request time inside the generation call that served it — the
+    /// compute cost (where `--threads` shows up).
+    pub execute_ms: StatsWindow,
     /// Time spent inside generation calls.
     pub busy_secs: f64,
 }
@@ -160,14 +166,16 @@ impl ServeStats {
         }
     }
 
-    /// One-line report: req/s, gen-tok/s, latency percentiles, batch fill
-    /// ratio, compile cost. The single source for CLI/example output.
-    /// Throughput is over *busy* time (inside generation); callers that
-    /// want end-to-end throughput divide by their own wall clock.
+    /// One-line report: req/s, gen-tok/s, latency percentiles (with the
+    /// queue-wait / execute split), batch fill ratio, compile cost. The
+    /// single source for CLI/example output. Throughput is over *busy*
+    /// time (inside generation); callers that want end-to-end throughput
+    /// divide by their own wall clock.
     pub fn summary(&self) -> String {
         format!(
             "{:<10} {} reqs / {} batches | busy {:.1} req/s {:.0} gen-tok/s | \
-             lat p50 {:.0}ms p95 {:.0}ms p99 {:.0}ms | fill {:.2} | compile {:.0}ms",
+             lat p50 {:.0}ms p95 {:.0}ms p99 {:.0}ms (wait p50 {:.0}ms exec p50 {:.0}ms) | \
+             fill {:.2} | compile {:.0}ms",
             self.fwd_key,
             self.requests,
             self.batches,
@@ -176,6 +184,8 @@ impl ServeStats {
             self.latency_p(50.0),
             self.latency_p(95.0),
             self.latency_p(99.0),
+            self.queue_wait_ms.percentile(50.0),
+            self.execute_ms.percentile(50.0),
             self.mean_fill_ratio(),
             self.compile_ms,
         )
@@ -319,12 +329,19 @@ impl<'e> ServeHandle<'e> {
         let fill = ids.len() as f64 / self.sampler.model.batch as f64;
 
         let mut batch_tokens = 0usize;
+        let mut max_wait_ms = 0f64;
         for (k, row) in rows.into_iter().enumerate() {
             let gen_tokens =
                 row.iter().skip(prompts[k].len()).filter(|&&t| t != tok::PAD).count();
             batch_tokens += gen_tokens;
             let latency_ms = done.duration_since(submitted[k]).as_secs_f64() * 1000.0;
+            // split: time queued before the batch launched vs time inside
+            // the generation call (shared by every request in the batch)
+            let wait_ms = t0.duration_since(submitted[k]).as_secs_f64() * 1000.0;
+            max_wait_ms = max_wait_ms.max(wait_ms);
             self.stats.latencies_ms.push(latency_ms);
+            self.stats.queue_wait_ms.push(wait_ms);
+            self.stats.execute_ms.push(batch_ms);
             self.completed.push(ServeResponse { id: ids[k], row, gen_tokens, latency_ms });
         }
         self.stats.requests += ids.len();
@@ -339,7 +356,11 @@ impl<'e> ServeHandle<'e> {
                 ("fwd", Json::Str(self.stats.fwd_key.clone())),
                 ("requests", Json::Num(ids.len() as f64)),
                 ("fill_ratio", Json::Num(fill)),
+                // batch_ms is the batch's execute time (kept under its
+                // pre-existing name); max_queue_wait_ms is the slowest
+                // request's coalescing wait before this batch launched
                 ("batch_ms", Json::Num(batch_ms)),
+                ("max_queue_wait_ms", Json::Num(max_wait_ms)),
                 ("gen_tokens", Json::Num(batch_tokens as f64)),
             ]));
         }
@@ -430,5 +451,21 @@ mod tests {
         assert_eq!(stats.gen_tok_per_sec(), 0.0);
         assert_eq!(stats.mean_fill_ratio(), 0.0);
         assert!(stats.summary().contains("0 reqs"));
+    }
+
+    #[test]
+    fn queue_wait_execute_split_lands_in_summary() {
+        let mut stats = ServeStats::default();
+        // three requests from one batch: same execute time, varying waits
+        for w in [2.0, 5.0, 11.0] {
+            stats.queue_wait_ms.push(w);
+            stats.execute_ms.push(40.0);
+            stats.latencies_ms.push(w + 40.0);
+        }
+        assert_eq!(stats.queue_wait_ms.percentile(50.0), 5.0);
+        assert_eq!(stats.execute_ms.percentile(50.0), 40.0);
+        let s = stats.summary();
+        assert!(s.contains("wait p50 5ms"), "{s}");
+        assert!(s.contains("exec p50 40ms"), "{s}");
     }
 }

@@ -37,6 +37,7 @@ pub struct SessionBuilder {
     seed: u64,
     methods: MethodRegistry,
     backend: Option<BackendKind>,
+    threads: Option<usize>,
 }
 
 impl SessionBuilder {
@@ -48,6 +49,7 @@ impl SessionBuilder {
             seed: 0,
             methods: MethodRegistry::builtin(),
             backend: None,
+            threads: None,
         }
     }
 
@@ -86,9 +88,27 @@ impl SessionBuilder {
         self
     }
 
+    /// Worker threads for the reference backend's parallel compute core
+    /// (`--threads` on the CLI). This sets the *process-global* worker
+    /// count at `build()` (the compute core is a process-wide pool):
+    /// the latest built session wins, and sessions built without
+    /// `.threads(..)` keep whatever the knob was last set to (initially
+    /// `QADX_THREADS`, then available parallelism). Results are
+    /// identical at every thread count — purely a throughput knob; for a
+    /// scoped override use `util::pool::with_threads`.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
     pub fn build(self) -> Result<Session> {
         let kind = BackendKind::resolve(self.backend)?;
         let engine = Engine::with_backend(&self.artifacts_dir, kind)?;
+        // Only touch the process-global knob once construction can no
+        // longer fail — a failed build must not change pool sizing.
+        if let Some(n) = self.threads {
+            crate::util::pool::set_threads(n);
+        }
         Ok(Session {
             engine,
             runs_dir: self.runs_dir,

@@ -1,58 +1,85 @@
 //! Baseline 4-bit formats the paper compares NVFP4 against: MXFP4
 //! (block-32, power-of-two E8M0 scales) and symmetric INT4 (per-channel
 //! scale). Mirror the JAX references in python/compile/kernels/ref.py.
+//! Both fake-quants run block-/row-parallel over `util::pool` chunks
+//! (independent scale groups, so results are thread-count-invariant) and
+//! have `*_into` variants that reuse the caller's output allocation.
 
 use super::fp::e2m1_round;
+use crate::util::pool;
 
 pub const MXFP4_BLOCK: usize = 32;
+
+/// Scale blocks per parallel chunk for mxfp4 (8 KiB of input).
+const MX_BLOCKS_PER_CHUNK: usize = 64;
 
 /// MXFP4 fake-quant of a row-major (rows, cols) tensor; cols % 32 == 0.
 /// Shared scale per block is 2^(floor(log2(amax)) - 2) (E8M0 semantics).
 pub fn mxfp4_fake_quant(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(x.len());
+    mxfp4_fake_quant_into(x, rows, cols, &mut out);
+    out
+}
+
+/// MXFP4 fake-quant into a caller-provided Vec (cleared and refilled).
+pub fn mxfp4_fake_quant_into(x: &[f32], rows: usize, cols: usize, out: &mut Vec<f32>) {
     assert_eq!(x.len(), rows * cols);
     assert_eq!(cols % MXFP4_BLOCK, 0);
-    let mut out = vec![0f32; x.len()];
-    for (blk, o) in x.chunks_exact(MXFP4_BLOCK).zip(out.chunks_exact_mut(MXFP4_BLOCK)) {
-        let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
-        if amax == 0.0 {
-            continue;
-        }
-        let e = amax.log2().floor() - 2.0;
-        let scale = e.exp2();
-        // hoisted reciprocal: exact for a power-of-two scale unless it
-        // leaves the normal range (then divide, bit-identical either way)
-        let inv = 1.0 / scale;
-        if inv.is_normal() {
-            for (o, &v) in o.iter_mut().zip(blk) {
-                *o = e2m1_round(v * inv) * scale;
+    out.clear();
+    out.resize(x.len(), 0.0);
+    pool::for_chunks(x.len() * 6, out, MX_BLOCKS_PER_CHUNK * MXFP4_BLOCK, |ci, out_chunk| {
+        let base = ci * MX_BLOCKS_PER_CHUNK * MXFP4_BLOCK;
+        for (bb, o) in out_chunk.chunks_exact_mut(MXFP4_BLOCK).enumerate() {
+            let blk = &x[base + bb * MXFP4_BLOCK..base + (bb + 1) * MXFP4_BLOCK];
+            let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
+            if amax == 0.0 {
+                continue;
             }
-        } else {
-            for (o, &v) in o.iter_mut().zip(blk) {
-                *o = e2m1_round(v / scale) * scale;
+            let e = amax.log2().floor() - 2.0;
+            let scale = e.exp2();
+            // hoisted reciprocal: exact for a power-of-two scale unless it
+            // leaves the normal range (then divide, bit-identical either way)
+            let inv = 1.0 / scale;
+            if inv.is_normal() {
+                for (ov, &v) in o.iter_mut().zip(blk) {
+                    *ov = e2m1_round(v * inv) * scale;
+                }
+            } else {
+                for (ov, &v) in o.iter_mut().zip(blk) {
+                    *ov = e2m1_round(v / scale) * scale;
+                }
             }
         }
-    }
-    out
+    });
 }
 
 /// Symmetric INT4 per-channel (row) fake-quant, grid -7..7.
 pub fn int4_fake_quant(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(x.len());
+    int4_fake_quant_into(x, rows, cols, &mut out);
+    out
+}
+
+/// INT4 fake-quant into a caller-provided Vec (cleared and refilled).
+/// Row-parallel: each channel's scale group is independent.
+pub fn int4_fake_quant_into(x: &[f32], rows: usize, cols: usize, out: &mut Vec<f32>) {
     assert_eq!(x.len(), rows * cols);
-    let mut out = vec![0f32; x.len()];
+    out.clear();
+    out.resize(x.len(), 0.0);
     if cols == 0 {
-        return out;
+        return;
     }
-    for (row, o) in x.chunks_exact(cols).zip(out.chunks_exact_mut(cols)) {
+    pool::for_chunks(x.len() * 5, out, cols, |i, o| {
+        let row = &x[i * cols..(i + 1) * cols];
         let amax = row.iter().fold(0f32, |m, v| m.max(v.abs()));
         let s = if amax > 0.0 { amax / 7.0 } else { 1.0 };
         // s = amax/7 is not a power of two, so the division must stay
         // exact — a rounded reciprocal flips q at round-half midpoints
-        for (o, &v) in o.iter_mut().zip(row) {
+        for (ov, &v) in o.iter_mut().zip(row) {
             let q = (v / s).round().clamp(-7.0, 7.0);
-            *o = q * s;
+            *ov = q * s;
         }
-    }
-    out
+    });
 }
 
 /// BF16 rounding (truncate-with-RNE of the low 16 f32 bits) — used when
@@ -128,6 +155,34 @@ mod tests {
         let s = 1.0f32; // amax 7 / 7
         for (a, b) in x.iter().zip(&q) {
             assert!((a / s).round().clamp(-7.0, 7.0) * s == *b);
+        }
+    }
+
+    #[test]
+    fn baseline_codecs_thread_invariant_and_into_variants_reuse() {
+        // 128x128 = 16384 elements puts both codecs past PAR_MIN_WORK,
+        // so the 4-thread run exercises the parallel partition.
+        let (r, c) = (128usize, 128usize);
+        let x = randn(r * c, 11);
+        let run = |t: usize| {
+            crate::util::pool::with_threads(t, || {
+                (mxfp4_fake_quant(&x, r, c), int4_fake_quant(&x, r, c))
+            })
+        };
+        let (m1, i1) = run(1);
+        let (m4, i4) = run(4);
+        for (a, b) in m1.iter().zip(&m4).chain(i1.iter().zip(&i4)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut buf = vec![7f32; 3]; // stale contents + wrong size
+        mxfp4_fake_quant_into(&x, r, c, &mut buf);
+        assert_eq!(buf.len(), r * c);
+        for (a, b) in buf.iter().zip(&m1) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        int4_fake_quant_into(&x, r, c, &mut buf);
+        for (a, b) in buf.iter().zip(&i1) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -6,19 +6,26 @@
 //! for PTQ weight export, checkpoint size accounting (the paper's ~1.8×
 //! memory-reduction claim vs FP8), and quantization-error analysis.
 //!
-//! Hot-path layout: `quantize` runs as flat vectorizable passes (block
-//! scales → per-block exact scale division → branchless E2M1 encode →
-//! nibble pack) with the per-block denominator hoisted out of the element
-//! loop; `dequantize` turns each packed byte into two values through a
-//! 256-entry nibble-pair LUT with the block denominator hoisted. Both are
-//! bit-identical to the seed's scalar loop for *all* inputs (the scale
-//! division is kept exact on purpose — a rounded reciprocal can flip
-//! codes at grid midpoints), with the seed kept under `reference`
-//! (cfg(test)) as the property-test oracle.
+//! Hot-path layout: the codec runs block-parallel over the independent
+//! 16-element scale blocks (chunked through `util::pool`, deterministic
+//! at every thread count), with the per-block denominator (E4M3 LUT
+//! decode × tensor scale) hoisted out of the element loop, a branchless
+//! E2M1 encode, and a 256-entry nibble-pair LUT on the dequantize side.
+//! The scale division stays exact (a rounded reciprocal can flip codes at
+//! grid midpoints). `fake_quant` fuses encode+decode per element — no
+//! packed intermediates — and the `*_into` variants reuse caller buffers
+//! so per-GEMM fake-quant in the reference model stops allocating. All of
+//! it is bit-identical to the seed's scalar loop for *all* inputs, with
+//! the seed kept under `reference` (cfg(test)) as the property-test
+//! oracle.
 
-use super::fp::{e2m1_encode, e4m3_decode, e4m3_encode, E2M1_GRID, E2M1_MAX, E4M3_MAX};
+use super::fp::{e2m1_encode, e2m1_round, e4m3_decode, e4m3_encode, E2M1_GRID, E2M1_MAX, E4M3_MAX};
+use crate::util::pool;
 
 pub const BLOCK: usize = 16;
+
+/// Scale blocks per parallel chunk (16 KiB of input per chunk).
+const BLOCKS_PER_CHUNK: usize = 256;
 
 const fn e2m1_decode_const(code: u8) -> f32 {
     let mag = E2M1_GRID[(code & 0x7) as usize];
@@ -57,8 +64,9 @@ pub struct Nvfp4Tensor {
 }
 
 /// Per-tensor FP32 scale: maps tensor amax onto E2M1_MAX * E4M3_MAX.
+/// (The amax reduction is chunk-parallel; f32 max is order-insensitive.)
 pub fn tensor_scale(x: &[f32]) -> f32 {
-    let amax = x.iter().fold(0f32, |m, v| m.max(v.abs()));
+    let amax = pool::max_abs(x);
     if amax > 0.0 {
         amax / (E2M1_MAX * E4M3_MAX)
     } else {
@@ -66,58 +74,81 @@ pub fn tensor_scale(x: &[f32]) -> f32 {
     }
 }
 
+/// One scale block: E4M3 scale code + the 8 packed payload bytes.
+/// The op sequence per element is exactly the seed's (scale → exact
+/// divide → branchless encode → nibble pack).
+#[inline]
+fn quantize_block(blk: &[f32], ts: f32, bytes: &mut [u8]) -> u8 {
+    let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
+    let raw = (amax / E2M1_MAX / ts).clamp(-E4M3_MAX, E4M3_MAX);
+    let sb = e4m3_encode(raw);
+    // denom = sb*ts first — the exact multiplication order of the JAX
+    // oracle (bit-exactness checked by the golden tests). The division
+    // stays exact: a rounded reciprocal can flip codes at grid midpoints.
+    let denom = e4m3_decode(sb) * ts;
+    for (byte, pair) in bytes.iter_mut().zip(blk.chunks_exact(2)) {
+        if denom > 0.0 {
+            *byte = e2m1_encode(pair[0] / denom) | (e2m1_encode(pair[1] / denom) << 4);
+        } else {
+            // matches the reference's denom==0 branch (y stays 0.0)
+            *byte = 0;
+        }
+    }
+    sb
+}
+
 impl Nvfp4Tensor {
     /// Quantize a (rows, cols) row-major tensor; cols must be /16.
     /// `ts`: calibrated tensor scale, or None for dynamic (max) calibration.
     pub fn quantize(x: &[f32], rows: usize, cols: usize, ts: Option<f32>) -> Self {
+        let mut t = Nvfp4Tensor {
+            codes: Vec::new(),
+            block_scales: Vec::new(),
+            tensor_scale: 1.0,
+            rows,
+            cols,
+        };
+        Nvfp4Tensor::quantize_into(x, rows, cols, ts, &mut t);
+        t
+    }
+
+    /// Quantize into an existing tensor, reusing its `codes` /
+    /// `block_scales` allocations (the hot-path variant). Block-parallel
+    /// over the independent 16-element scale blocks.
+    pub fn quantize_into(
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        ts: Option<f32>,
+        t: &mut Nvfp4Tensor,
+    ) {
         assert_eq!(x.len(), rows * cols, "shape mismatch");
         assert_eq!(cols % BLOCK, 0, "cols {cols} not a multiple of {BLOCK}");
         let ts = ts.unwrap_or_else(|| tensor_scale(x));
         let n = rows * cols;
         let n_blocks = n / BLOCK;
-
-        // Pass 1: per-block E4M3 scales.
-        let mut block_scales = vec![0u8; n_blocks];
-        for (sb, blk) in block_scales.iter_mut().zip(x.chunks_exact(BLOCK)) {
-            let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
-            let raw = (amax / E2M1_MAX / ts).clamp(-E4M3_MAX, E4M3_MAX);
-            *sb = e4m3_encode(raw);
-        }
-
-        // Pass 2: scale elements into E2M1 range. The per-block denominator
-        // (E4M3 LUT decode × tensor scale) is hoisted out of the element
-        // loop; the division itself stays exact — multiplying by a rounded
-        // reciprocal can flip codes at grid midpoints, and a flat
-        // vectorized divide measures within noise of the multiply anyway.
-        let mut y = vec![0f32; n];
-        for ((&sb, blk), out) in block_scales
-            .iter()
-            .zip(x.chunks_exact(BLOCK))
-            .zip(y.chunks_exact_mut(BLOCK))
-        {
-            // denom = sb*ts first — the exact multiplication order of the
-            // JAX oracle (bit-exactness checked by the golden tests).
-            let denom = e4m3_decode(sb) * ts;
-            if denom > 0.0 {
-                for (o, &v) in out.iter_mut().zip(blk) {
-                    *o = v / denom;
+        t.codes.clear();
+        t.codes.resize(n / 2, 0);
+        t.block_scales.clear();
+        t.block_scales.resize(n_blocks, 0);
+        t.tensor_scale = ts;
+        t.rows = rows;
+        t.cols = cols;
+        pool::for_chunks2(
+            n * 6,
+            &mut t.codes,
+            BLOCKS_PER_CHUNK * BLOCK / 2,
+            &mut t.block_scales,
+            BLOCKS_PER_CHUNK,
+            |ci, code_chunk, scale_chunk| {
+                let b0 = ci * BLOCKS_PER_CHUNK;
+                for (bb, sb) in scale_chunk.iter_mut().enumerate() {
+                    let blk = &x[(b0 + bb) * BLOCK..(b0 + bb + 1) * BLOCK];
+                    let bytes = &mut code_chunk[bb * BLOCK / 2..(bb + 1) * BLOCK / 2];
+                    *sb = quantize_block(blk, ts, bytes);
                 }
-            } // else: y stays 0.0, matching the reference's denom==0 branch
-        }
-
-        // Pass 3: branchless E2M1 encode of every scaled element.
-        let mut nibbles = vec![0u8; n];
-        for (c, &v) in nibbles.iter_mut().zip(&y) {
-            *c = e2m1_encode(v);
-        }
-
-        // Pass 4: pack two 4-bit codes per byte.
-        let mut codes = vec![0u8; n / 2];
-        for (byte, pair) in codes.iter_mut().zip(nibbles.chunks_exact(2)) {
-            *byte = pair[0] | (pair[1] << 4);
-        }
-
-        Nvfp4Tensor { codes, block_scales, tensor_scale: ts, rows, cols }
+            },
+        );
     }
 
     pub fn code_at(&self, idx: usize) -> u8 {
@@ -138,25 +169,26 @@ impl Nvfp4Tensor {
 
     /// Dequantize into a caller-provided slice (len must be rows*cols) —
     /// the allocation-free hot path: one nibble-pair LUT load + two
-    /// multiplies per packed byte, block denominator hoisted.
+    /// multiplies per packed byte, block denominator hoisted,
+    /// block-parallel over scale-block chunks.
     pub fn dequantize_into(&self, out: &mut [f32]) {
         let n = self.rows * self.cols;
         assert_eq!(out.len(), n, "output slice shape mismatch");
-        for ((&sb, bytes), o) in self
-            .block_scales
-            .iter()
-            .zip(self.codes.chunks_exact(BLOCK / 2))
-            .zip(out.chunks_exact_mut(BLOCK))
-        {
-            // denom = sb*ts first — the exact multiplication order of the
-            // JAX oracle (bit-exactness checked by the golden tests).
-            let denom = e4m3_decode(sb) * self.tensor_scale;
-            for (pair, &byte) in o.chunks_exact_mut(2).zip(bytes) {
-                let d = &NIBBLE_PAIR_LUT[byte as usize];
-                pair[0] = d[0] * denom;
-                pair[1] = d[1] * denom;
+        pool::for_chunks(n * 3, out, BLOCKS_PER_CHUNK * BLOCK, |ci, out_chunk| {
+            let b0 = ci * BLOCKS_PER_CHUNK;
+            for (bb, o) in out_chunk.chunks_exact_mut(BLOCK).enumerate() {
+                let sb = self.block_scales[b0 + bb];
+                let bytes = &self.codes[(b0 + bb) * BLOCK / 2..(b0 + bb + 1) * BLOCK / 2];
+                // denom = sb*ts first — the exact multiplication order of
+                // the JAX oracle (bit-exactness checked by golden tests).
+                let denom = e4m3_decode(sb) * self.tensor_scale;
+                for (pair, &byte) in o.chunks_exact_mut(2).zip(bytes) {
+                    let d = &NIBBLE_PAIR_LUT[byte as usize];
+                    pair[0] = d[0] * denom;
+                    pair[1] = d[1] * denom;
+                }
             }
-        }
+        });
     }
 
     /// Stored size in bytes: packed nibbles + E4M3 scales + f32 tensor scale.
@@ -172,7 +204,46 @@ impl Nvfp4Tensor {
 
 /// One-shot fake-quant (quantize + dequantize) of a row-major tensor.
 pub fn fake_quant(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-    Nvfp4Tensor::quantize(x, rows, cols, None).dequantize()
+    let mut out = Vec::with_capacity(x.len());
+    fake_quant_into(x, rows, cols, &mut out);
+    out
+}
+
+/// Fake-quant into a caller-provided Vec (cleared and refilled — reuses
+/// its allocation): the per-GEMM hot path of the reference model.
+///
+/// Fused per block: encode+decode per element with no packed
+/// intermediates. The op sequence is exactly quantize→dequantize
+/// (`e2m1_round(v / denom) * denom`, with the reference's denom==0
+/// branch), so the result is bit-identical to the two-step codec —
+/// asserted by the property tests. Block-parallel like the codec.
+pub fn fake_quant_into(x: &[f32], rows: usize, cols: usize, out: &mut Vec<f32>) {
+    assert_eq!(x.len(), rows * cols, "shape mismatch");
+    assert_eq!(cols % BLOCK, 0, "cols {cols} not a multiple of {BLOCK}");
+    let ts = tensor_scale(x);
+    let n = rows * cols;
+    out.clear();
+    out.resize(n, 0.0);
+    pool::for_chunks(n * 8, out, BLOCKS_PER_CHUNK * BLOCK, |ci, out_chunk| {
+        let base = ci * BLOCKS_PER_CHUNK * BLOCK;
+        for (bb, o) in out_chunk.chunks_exact_mut(BLOCK).enumerate() {
+            let blk = &x[base + bb * BLOCK..base + (bb + 1) * BLOCK];
+            let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
+            let raw = (amax / E2M1_MAX / ts).clamp(-E4M3_MAX, E4M3_MAX);
+            let denom = e4m3_decode(e4m3_encode(raw)) * ts;
+            if denom > 0.0 {
+                for (ov, &v) in o.iter_mut().zip(blk) {
+                    *ov = e2m1_round(v / denom) * denom;
+                }
+            } else {
+                // quantize leaves all codes 0; dequantize multiplies the
+                // decoded 0.0 by denom — keep the same op for bit-parity
+                for ov in o.iter_mut() {
+                    *ov = 0.0 * denom;
+                }
+            }
+        }
+    });
 }
 
 /// Relative Frobenius quantization error ‖q−x‖/‖x‖.
@@ -376,6 +447,59 @@ mod tests {
         assert_codec_bit_identical(&x, 8, 128);
         let x = randn(16 * 16, 0xC0DEC + 103, 1e-38);
         assert_codec_bit_identical(&x, 16, 16);
+    }
+
+    #[test]
+    fn fake_quant_into_bit_identical_to_two_step_codec() {
+        for (seed, scale) in [(1u64, 1.0f32), (2, 0.01), (3, 30.0), (4, 1e-30)] {
+            let x = randn(64 * 64, 0xFA4E + seed, scale);
+            let two_step = reference::dequantize(&reference::quantize(&x, 64, 64, None));
+            let mut fused = Vec::new();
+            fake_quant_into(&x, 64, 64, &mut fused);
+            for (i, (a, b)) in fused.iter().zip(&two_step).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "scale {scale} elem {i}: {a} vs {b}");
+            }
+        }
+        // denom==0 path: all-zero input
+        let zeros = vec![0f32; 64];
+        let mut out = vec![9f32; 1]; // stale contents must be discarded
+        fake_quant_into(&zeros, 4, 16, &mut out);
+        assert_eq!(out.len(), 64);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn quantize_into_reuses_buffers_and_matches_fresh() {
+        let x1 = randn(32 * 32, 21, 1.0);
+        let x2 = randn(16 * 16, 22, 4.0);
+        let mut t = Nvfp4Tensor::quantize(&x1, 32, 32, None);
+        Nvfp4Tensor::quantize_into(&x2, 16, 16, None, &mut t);
+        let fresh = Nvfp4Tensor::quantize(&x2, 16, 16, None);
+        assert_eq!(t.codes, fresh.codes);
+        assert_eq!(t.block_scales, fresh.block_scales);
+        assert_eq!(t.tensor_scale.to_bits(), fresh.tensor_scale.to_bits());
+        assert_eq!((t.rows, t.cols), (16, 16));
+    }
+
+    #[test]
+    fn codec_is_thread_count_invariant() {
+        // 256x128 = 32768 elements: every leg (quantize work 6n,
+        // dequantize 3n, fake-quant 8n) clears PAR_MIN_WORK, so the
+        // 4-thread run really partitions (not serial-vs-serial).
+        let x = randn(256 * 128, 0x7777, 2.0);
+        let run = |threads: usize| {
+            crate::util::pool::with_threads(threads, || {
+                let t = Nvfp4Tensor::quantize(&x, 256, 128, None);
+                (t.block_scales.clone(), t.codes.clone(), t.dequantize(), fake_quant(&x, 256, 128))
+            })
+        };
+        let (s1, c1, d1, f1) = run(1);
+        let (s4, c4, d4, f4) = run(4);
+        assert_eq!(s1, s4);
+        assert_eq!(c1, c4);
+        for (a, b) in d1.iter().zip(&d4).chain(f1.iter().zip(&f4)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //! distill integration suites hermetic, and it doubles as a standing
 //! cross-check oracle for the PJRT backend (see
 //! rust/tests/backend_cross_validation.rs).
+//!
+//! Execution is multi-threaded through the shared compute core
+//! (`util::{pool,gemm}`): forwards, train steps, eval metrics, and the
+//! batch-row frontier gather all partition over worker threads sized by
+//! `QADX_THREADS` / `--threads` / `Session::builder().threads(..)`,
+//! while staying bit-identical at every thread count (the determinism
+//! contract asserted by rust/tests/threading.rs).
 
 use anyhow::{bail, Context, Result};
 

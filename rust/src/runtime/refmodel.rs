@@ -11,12 +11,25 @@
 //! all agree to float32 noise across attn/ssm/moe/vision configs and
 //! nvfp4/mxfp4/int4 formats). The in-crate guard is the finite-difference
 //! gradient tests at the bottom of this file.
+//!
+//! Compute runs on the shared parallel core: GEMMs go through
+//! [`util::gemm`](crate::util::gemm) (cache-blocked, row-tile parallel,
+//! bit-identical to the seed's naive loops) and the remaining hot loops
+//! (attention scores/AV, softmax rows, gelu, rmsnorm, the ssm scan over
+//! batch lanes, Adam) partition over [`util::pool`](crate::util::pool)
+//! chunks whose per-element f32 accumulation chains are exactly the
+//! serial ones. Order-bearing reductions (grad-norm, dscale/dbias
+//! columns, loss sums, the embedding scatter) deliberately stay serial —
+//! or reduce over per-row values in row order — so every result is
+//! invariant under `QADX_THREADS` (asserted by rust/tests/threading.rs).
 
 use anyhow::{bail, Context, Result};
 
 use super::engine::scalar;
 use super::manifest::{ModelEntry, ParamDef};
 use crate::quant::{baselines, nvfp4};
+use crate::util::gemm::{matmul, matmul_nt, matmul_tn};
+use crate::util::pool;
 
 const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
@@ -153,97 +166,110 @@ impl RefCfg {
 
 // ------------------------------------------------------------ fake quant
 
-/// Fake-quantize a row-major (rows, cols) activation along the last axis.
-fn quant_acts(x: &[f32], rows: usize, cols: usize, fmt: Format) -> Result<Vec<f32>> {
+/// Fake-quantize a row-major (rows, cols) activation along the last axis
+/// into `out` (cleared and refilled — reuses its allocation).
+fn quant_acts_into(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    fmt: Format,
+    out: &mut Vec<f32>,
+) -> Result<()> {
     match fmt {
-        Format::None => Ok(x.to_vec()),
+        Format::None => {
+            out.clear();
+            out.extend_from_slice(x);
+        }
         Format::Nvfp4 => {
             if cols % nvfp4::BLOCK != 0 {
                 bail!("nvfp4 needs cols % 16 == 0, got {cols}");
             }
-            Ok(nvfp4::fake_quant(x, rows, cols))
+            nvfp4::fake_quant_into(x, rows, cols, out);
         }
         Format::Mxfp4 => {
             if cols % baselines::MXFP4_BLOCK != 0 {
                 bail!("mxfp4 needs cols % 32 == 0, got {cols}");
             }
-            Ok(baselines::mxfp4_fake_quant(x, rows, cols))
+            baselines::mxfp4_fake_quant_into(x, rows, cols, out);
         }
-        Format::Int4 => Ok(baselines::int4_fake_quant(x, rows, cols)),
+        Format::Int4 => baselines::int4_fake_quant_into(x, rows, cols, out),
     }
+    Ok(())
 }
 
-/// Fake-quantize a (k, n) weight along its contraction axis K: transpose,
-/// quantize rows of the (n, k) view, transpose back (model.py qgemm).
-fn quant_weight(w: &[f32], k: usize, n: usize, fmt: Format) -> Result<Vec<f32>> {
+thread_local! {
+    /// Transpose scratch for weight fake-quant — the per-GEMM temporaries
+    /// that used to be fresh allocations on every call.
+    static WQ_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Fake-quantize a (k, n) weight along its contraction axis K into `out`:
+/// transpose, quantize rows of the (n, k) view, transpose back (model.py
+/// qgemm). The transpose temporaries live in thread-local scratch.
+fn quant_weight_into(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    fmt: Format,
+    out: &mut Vec<f32>,
+) -> Result<()> {
     if fmt == Format::None {
-        return Ok(w.to_vec());
+        out.clear();
+        out.extend_from_slice(w);
+        return Ok(());
     }
-    let mut t = vec![0f32; k * n];
-    for r in 0..k {
-        for c in 0..n {
-            t[c * k + r] = w[r * n + c];
+    WQ_SCRATCH.with(|cell| {
+        let (t, tq) = &mut *cell.borrow_mut();
+        t.clear();
+        t.resize(k * n, 0.0);
+        for r in 0..k {
+            for c in 0..n {
+                t[c * k + r] = w[r * n + c];
+            }
         }
-    }
-    let tq = quant_acts(&t, n, k, fmt)?;
-    let mut out = vec![0f32; k * n];
-    for r in 0..k {
-        for c in 0..n {
-            out[r * n + c] = tq[c * k + r];
+        quant_acts_into(t, n, k, fmt, tq)?;
+        out.clear();
+        out.resize(k * n, 0.0);
+        for r in 0..k {
+            for c in 0..n {
+                out[r * n + c] = tq[c * k + r];
+            }
         }
-    }
-    Ok(out)
+        Ok(())
+    })
 }
 
 // --------------------------------------------------------------- tensor ops
+//
+// GEMMs live in crate::util::gemm (blocked + row-tile parallel, bit-
+// identical to the seed loops). The helpers below cover the elementwise
+// combines: chunk-parallel, one f32 op chain per element.
 
-/// (m,k) @ (k,n) -> (m,n), naive f32 with cache-friendly ikj order.
-fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
+/// Elementwise chunk size for the parallel helpers below.
+const EW_CHUNK: usize = 8192;
+
+/// dst[i] += src[i].
+fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    pool::for_chunks(dst.len(), dst, EW_CHUNK, |ci, c| {
+        let base = ci * EW_CHUNK;
+        for (j, v) in c.iter_mut().enumerate() {
+            *v += src[base + j];
         }
-    }
-    out
+    });
 }
 
-/// aᵀ @ b for a (m,k), b (m,n) -> (k,n).
-fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0f32; k * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            let orow = &mut out[p * n..(p + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
+/// dst[i] += a[i] + b[i] (the three-way grad combine, seed op order).
+fn add_assign2(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    pool::for_chunks(dst.len(), dst, EW_CHUNK, |ci, c| {
+        let base = ci * EW_CHUNK;
+        for (j, v) in c.iter_mut().enumerate() {
+            *v += a[base + j] + b[base + j];
         }
-    }
-    out
-}
-
-/// a @ bᵀ for a (m,n), b (k,n) -> (m,k).
-fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    let mut out = vec![0f32; m * k];
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        for p in 0..k {
-            let brow = &b[p * n..(p + 1) * n];
-            let mut s = 0f32;
-            for j in 0..n {
-                s += arow[j] * brow[j];
-            }
-            out[i * k + p] = s;
-        }
-    }
-    out
+    });
 }
 
 /// One quantized GEMM with cached quantized operands; backward applies the
@@ -270,8 +296,20 @@ impl Gemm {
         if x.len() != m * k || w.len() != k * n {
             bail!("gemm shape mismatch: x {} != {m}x{k} or w {} != {k}x{n}", x.len(), w.len());
         }
-        let xq = if quantized { quant_acts(x, m, k, cfg.acts_fmt)? } else { x.to_vec() };
-        let wq = if quantized { quant_weight(w, k, n, cfg.weights_fmt)? } else { w.to_vec() };
+        let xq = if quantized {
+            let mut v = Vec::with_capacity(m * k);
+            quant_acts_into(x, m, k, cfg.acts_fmt, &mut v)?;
+            v
+        } else {
+            x.to_vec()
+        };
+        let wq = if quantized {
+            let mut v = Vec::with_capacity(k * n);
+            quant_weight_into(w, k, n, cfg.weights_fmt, &mut v)?;
+            v
+        } else {
+            w.to_vec()
+        };
         let out = matmul(&xq, &wq, m, k, n);
         Ok(Gemm { xq, wq, out, m, k, n })
     }
@@ -285,26 +323,28 @@ impl Gemm {
 }
 
 /// rmsnorm over rows of length d; returns (y, per-row r = rsqrt(ms+eps)).
+/// Row-parallel: each row's chain is self-contained.
 fn rmsnorm_fwd(x: &[f32], scale: &[f32], rows: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
     let mut y = vec![0f32; rows * d];
     let mut rs = vec![0f32; rows];
-    for i in 0..rows {
+    pool::for_chunks2(rows * d * 3, &mut y, d, &mut rs, 1, |i, yr, rv| {
         let xr = &x[i * d..(i + 1) * d];
         let mut ms = 0f32;
         for &v in xr {
             ms += v * v;
         }
         let r = 1.0 / (ms / d as f32 + RMS_EPS).sqrt();
-        rs[i] = r;
-        let yr = &mut y[i * d..(i + 1) * d];
+        rv[0] = r;
         for j in 0..d {
             yr[j] = xr[j] * r * scale[j];
         }
-    }
+    });
     (y, rs)
 }
 
-/// Backward of rmsnorm; accumulates dscale, returns dx.
+/// Backward of rmsnorm; accumulates dscale, returns dx. dx is row-
+/// parallel; the dscale columns are an order-bearing reduction over rows
+/// and stay a serial second pass (same ascending-row chain as the seed).
 fn rmsnorm_bwd(
     dy: &[f32],
     x: &[f32],
@@ -315,19 +355,25 @@ fn rmsnorm_bwd(
     dscale: &mut [f32],
 ) -> Vec<f32> {
     let mut dx = vec![0f32; rows * d];
-    for i in 0..rows {
+    pool::for_chunks(rows * d * 6, &mut dx, d, |i, dxr| {
         let r = rs[i];
         let xr = &x[i * d..(i + 1) * d];
         let dyr = &dy[i * d..(i + 1) * d];
         let mut s = 0f32;
         for j in 0..d {
-            dscale[j] += dyr[j] * xr[j] * r;
             s += dyr[j] * scale[j] * xr[j];
         }
         let c = r * r * r / d as f32 * s;
-        let dxr = &mut dx[i * d..(i + 1) * d];
         for j in 0..d {
             dxr[j] = r * scale[j] * dyr[j] - xr[j] * c;
+        }
+    });
+    for i in 0..rows {
+        let r = rs[i];
+        let xr = &x[i * d..(i + 1) * d];
+        let dyr = &dy[i * d..(i + 1) * d];
+        for j in 0..d {
+            dscale[j] += dyr[j] * xr[j] * r;
         }
     }
     dx
@@ -337,23 +383,30 @@ fn rmsnorm_bwd(
 fn gelu_fwd(x: &[f32]) -> (Vec<f32>, Vec<f32>) {
     let mut y = vec![0f32; x.len()];
     let mut ts = vec![0f32; x.len()];
-    for (i, &v) in x.iter().enumerate() {
-        let t = (SQRT_2_OVER_PI * (v + 0.044715 * v * v * v)).tanh();
-        ts[i] = t;
-        y[i] = 0.5 * v * (1.0 + t);
-    }
+    pool::for_chunks2(x.len() * 8, &mut y, EW_CHUNK, &mut ts, EW_CHUNK, |ci, yc, tc| {
+        let base = ci * EW_CHUNK;
+        for j in 0..yc.len() {
+            let v = x[base + j];
+            let t = (SQRT_2_OVER_PI * (v + 0.044715 * v * v * v)).tanh();
+            tc[j] = t;
+            yc[j] = 0.5 * v * (1.0 + t);
+        }
+    });
     (y, ts)
 }
 
 fn gelu_bwd(dy: &[f32], x: &[f32], ts: &[f32]) -> Vec<f32> {
     let mut dx = vec![0f32; x.len()];
-    for i in 0..x.len() {
-        let v = x[i];
-        let t = ts[i];
-        let dinner = SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * v * v);
-        let dt = (1.0 - t * t) * dinner;
-        dx[i] = dy[i] * (0.5 * (1.0 + t) + 0.5 * v * dt);
-    }
+    pool::for_chunks(x.len() * 8, &mut dx, EW_CHUNK, |ci, c| {
+        let base = ci * EW_CHUNK;
+        for (j, o) in c.iter_mut().enumerate() {
+            let v = x[base + j];
+            let t = ts[base + j];
+            let dinner = SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * v * v);
+            let dt = (1.0 - t * t) * dinner;
+            *o = dy[base + j] * (0.5 * (1.0 + t) + 0.5 * v * dt);
+        }
+    });
     dx
 }
 
@@ -362,13 +415,12 @@ fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
-/// Softmax over contiguous rows of length n, in place semantics on a copy.
+/// Softmax over contiguous rows of length n (row-parallel).
 fn softmax_rows(x: &[f32], rows: usize, n: usize) -> Vec<f32> {
     let mut p = vec![0f32; rows * n];
-    for i in 0..rows {
+    pool::for_chunks(rows * n * 6, &mut p, n, |i, pr| {
         let xr = &x[i * n..(i + 1) * n];
         let m = xr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let pr = &mut p[i * n..(i + 1) * n];
         let mut z = 0f32;
         for j in 0..n {
             let e = (xr[j] - m).exp();
@@ -378,13 +430,13 @@ fn softmax_rows(x: &[f32], rows: usize, n: usize) -> Vec<f32> {
         for v in pr.iter_mut() {
             *v /= z;
         }
-    }
+    });
     p
 }
 
 fn log_softmax_rows(x: &[f32], rows: usize, n: usize) -> Vec<f32> {
     let mut lp = vec![0f32; rows * n];
-    for i in 0..rows {
+    pool::for_chunks(rows * n * 6, &mut lp, n, |i, lpr| {
         let xr = &x[i * n..(i + 1) * n];
         let m = xr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut z = 0f32;
@@ -392,29 +444,27 @@ fn log_softmax_rows(x: &[f32], rows: usize, n: usize) -> Vec<f32> {
             z += (v - m).exp();
         }
         let lz = z.ln();
-        let lpr = &mut lp[i * n..(i + 1) * n];
         for j in 0..n {
             lpr[j] = xr[j] - m - lz;
         }
-    }
+    });
     lp
 }
 
-/// dsoftmax: p ⊙ (dy − Σ dy⊙p), rowwise.
+/// dsoftmax: p ⊙ (dy − Σ dy⊙p), rowwise (row-parallel).
 fn softmax_bwd_rows(dy: &[f32], p: &[f32], rows: usize, n: usize) -> Vec<f32> {
     let mut dx = vec![0f32; rows * n];
-    for i in 0..rows {
+    pool::for_chunks(rows * n * 4, &mut dx, n, |i, dxr| {
         let dyr = &dy[i * n..(i + 1) * n];
         let pr = &p[i * n..(i + 1) * n];
         let mut s = 0f32;
         for j in 0..n {
             s += dyr[j] * pr[j];
         }
-        let dxr = &mut dx[i * n..(i + 1) * n];
         for j in 0..n {
             dxr[j] = pr[j] * (dyr[j] - s);
         }
-    }
+    });
     dx
 }
 
@@ -509,6 +559,7 @@ pub fn forward(
     let mut x = vec![0f32; b * t_len * d];
 
     let mut vis_gemm = None;
+    let mut vis_bias: &[f32] = &[];
     if m.vision {
         let px = pixels.context("VLM forward requires pixels")?;
         let patch = m.vision_patch;
@@ -516,41 +567,37 @@ pub fn forward(
             bail!("pixels len {} != {b}x{n_img}x{patch}", px.len());
         }
         let vis_proj = cfg.pslice(params, "vis_proj")?;
-        let vis_bias = cfg.pslice(params, "vis_bias")?;
+        vis_bias = cfg.pslice(params, "vis_bias")?;
         let quant_vis = cfg.quant_enabled();
-        let gm = Gemm::forward(px, vis_proj, b * n_img, patch, d, quant_vis, cfg)?;
-        for bi in 0..b {
-            for ii in 0..n_img {
-                let src = &gm.out[(bi * n_img + ii) * d..(bi * n_img + ii + 1) * d];
-                let dst = &mut x[(bi * t_len + ii) * d..(bi * t_len + ii + 1) * d];
-                for j in 0..d {
-                    dst[j] = src[j] + vis_bias[j];
-                }
-            }
-        }
-        vis_gemm = Some(gm);
-    }
-    for bi in 0..b {
-        for si in 0..s_in {
-            let id = ids[bi * s_in + si];
-            let src = &embed[id * d..(id + 1) * d];
-            let dst =
-                &mut x[(bi * t_len + n_img + si) * d..(bi * t_len + n_img + si + 1) * d];
-            dst.copy_from_slice(src);
-        }
+        vis_gemm = Some(Gemm::forward(px, vis_proj, b * n_img, patch, d, quant_vis, cfg)?);
     }
     let pos_emb = cfg.pslice(params, "pos_emb")?;
     if pos_emb.len() < t_len * d {
         bail!("pos_emb size {} < seq {t_len} x d {d}", pos_emb.len());
     }
-    for bi in 0..b {
-        for ti in 0..t_len {
-            let dst = &mut x[(bi * t_len + ti) * d..(bi * t_len + ti + 1) * d];
+    // One row-parallel pass builds x: image rows = vis_proj out + bias +
+    // pos, text rows = embedding + pos (seed's add order per element).
+    {
+        let vis_ref = vis_gemm.as_ref();
+        let ids = &ids;
+        pool::for_chunks(b * t_len * d * 2, &mut x, d, |ci, dst| {
+            let ti = ci % t_len;
+            let bi = ci / t_len;
             let pe = &pos_emb[ti * d..(ti + 1) * d];
-            for j in 0..d {
-                dst[j] += pe[j];
+            if ti < n_img {
+                let gm = vis_ref.expect("image rows imply a vision gemm");
+                let src = &gm.out[(bi * n_img + ti) * d..(bi * n_img + ti + 1) * d];
+                for j in 0..d {
+                    dst[j] = src[j] + vis_bias[j] + pe[j];
+                }
+            } else {
+                let id = ids[bi * s_in + (ti - n_img)];
+                let src = &embed[id * d..(id + 1) * d];
+                for j in 0..d {
+                    dst[j] = src[j] + pe[j];
+                }
             }
-        }
+        });
     }
 
     let mut caches = Vec::with_capacity(m.blocks.len());
@@ -615,53 +662,49 @@ fn attn_fwd(
     let gk = Gemm::forward(&y, cfg.pslice(params, &format!("{pre}wk"))?, rows, d, d, quant, cfg)?;
     let gv = Gemm::forward(&y, cfg.pslice(params, &format!("{pre}wv"))?, rows, d, d, quant, cfg)?;
     // att[b,head,i,j] = q·k / sqrt(hd), causal-masked, softmaxed over j.
+    // Parallel over (b, head, i) score rows — each row self-contained.
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
     let mut att = vec![0f32; b * h * t * t];
-    for bi in 0..b {
-        for head in 0..h {
-            for i in 0..t {
-                let q = &gq.out[(bi * t + i) * d + head * hd..(bi * t + i) * d + (head + 1) * hd];
-                let ar = ((bi * h + head) * t + i) * t;
-                let arow = &mut att[ar..ar + t];
-                for j in 0..t {
-                    if j > i {
-                        arow[j] = -1e30;
-                        continue;
-                    }
-                    let k = &gk.out
-                        [(bi * t + j) * d + head * hd..(bi * t + j) * d + (head + 1) * hd];
-                    let mut s = 0f32;
-                    for c in 0..hd {
-                        s += q[c] * k[c];
-                    }
-                    arow[j] = s * inv_sqrt;
-                }
+    pool::for_chunks(b * h * t * t * hd, &mut att, t, |ci, arow| {
+        let i = ci % t;
+        let head = (ci / t) % h;
+        let bi = ci / (t * h);
+        let q = &gq.out[(bi * t + i) * d + head * hd..(bi * t + i) * d + (head + 1) * hd];
+        for (j, av) in arow.iter_mut().enumerate() {
+            if j > i {
+                *av = -1e30;
+                continue;
             }
+            let k = &gk.out[(bi * t + j) * d + head * hd..(bi * t + j) * d + (head + 1) * hd];
+            let mut s = 0f32;
+            for c in 0..hd {
+                s += q[c] * k[c];
+            }
+            *av = s * inv_sqrt;
         }
-    }
+    });
     let pa = softmax_rows(&att, b * h * t, t);
-    // o[b,i,head,c] = Σ_j pa · v
+    // o[b,i,head,c] = Σ_j pa · v — parallel over (b, i) output rows; the
+    // per-element chain (ascending j within one head) is the seed's.
     let mut o = vec![0f32; rows * d];
-    for bi in 0..b {
+    pool::for_chunks(rows * d * t, &mut o, d, |ci, orow_all| {
+        let i = ci % t;
+        let bi = ci / t;
         for head in 0..h {
-            for i in 0..t {
-                let parow = &pa[((bi * h + head) * t + i) * t..((bi * h + head) * t + i + 1) * t];
-                let orow = &mut o[(bi * t + i) * d + head * hd..(bi * t + i) * d + (head + 1) * hd];
-                for (j, &pj) in parow.iter().enumerate().take(i + 1) {
-                    let vv = &gv.out
-                        [(bi * t + j) * d + head * hd..(bi * t + j) * d + (head + 1) * hd];
-                    for c in 0..hd {
-                        orow[c] += pj * vv[c];
-                    }
+            let parow = &pa[((bi * h + head) * t + i) * t..((bi * h + head) * t + i + 1) * t];
+            let orow = &mut orow_all[head * hd..(head + 1) * hd];
+            for (j, &pj) in parow.iter().enumerate().take(i + 1) {
+                let vv =
+                    &gv.out[(bi * t + j) * d + head * hd..(bi * t + j) * d + (head + 1) * hd];
+                for c in 0..hd {
+                    orow[c] += pj * vv[c];
                 }
             }
         }
-    }
+    });
     let go = Gemm::forward(&o, cfg.pslice(params, &format!("{pre}wo"))?, rows, d, d, quant, cfg)?;
     let mut x1 = x.clone();
-    for (xv, ov) in x1.iter_mut().zip(&go.out) {
-        *xv += *ov;
-    }
+    add_assign(&mut x1, &go.out);
     let ln2 = cfg.pslice(params, &format!("{pre}ln2"))?;
     let (y2, r2) = rmsnorm_fwd(&x1, ln2, rows, d);
     let w1 = cfg.pslice(params, &format!("{pre}w1"))?;
@@ -670,9 +713,7 @@ fn attn_fwd(
     let w2 = cfg.pslice(params, &format!("{pre}w2"))?;
     let g2 = Gemm::forward(&hdn, w2, rows, ff, d, quant, cfg)?;
     let mut x2 = x1.clone();
-    for (xv, ov) in x2.iter_mut().zip(&g2.out) {
-        *xv += *ov;
-    }
+    add_assign(&mut x2, &g2.out);
     caches.push(BlockCache::Attn {
         x,
         r1,
@@ -708,43 +749,42 @@ fn ssm_fwd(
     let gin =
         Gemm::forward(&y, cfg.pslice(params, &format!("{pre}win"))?, rows, d, 3 * d, quant, cfg)?;
     let a_bias = cfg.pslice(params, &format!("{pre}a_bias"))?;
-    // z rows: [v | g | decay-logit]
+    // z rows: [v | g | decay-logit] — decay gate is row-parallel.
     let mut a = vec![0f32; rows * d];
-    for i in 0..rows {
+    pool::for_chunks(rows * d * 8, &mut a, d, |i, ar| {
         let z = &gin.out[i * 3 * d..(i + 1) * 3 * d];
         for j in 0..d {
-            a[i * d + j] = sigmoid(z[2 * d + j] + a_bias[j]);
+            ar[j] = sigmoid(z[2 * d + j] + a_bias[j]);
         }
-    }
-    // scan: h_t = a_t ⊙ h_{t-1} + (1-a_t) ⊙ v_t
+    });
+    // scan: h_t = a_t ⊙ h_{t-1} + (1-a_t) ⊙ v_t — sequential in t,
+    // independent (and parallel) across batch lanes.
     let mut hs = vec![0f32; rows * d];
-    for bi in 0..b {
+    pool::for_chunks(rows * d * 4, &mut hs, t * d, |bi, hb| {
         for ti in 0..t {
             let i = bi * t + ti;
             let z = &gin.out[i * 3 * d..(i + 1) * 3 * d];
             for j in 0..d {
                 let av = a[i * d + j];
                 let bv = (1.0 - av) * z[j];
-                let prev = if ti > 0 { hs[(i - 1) * d + j] } else { 0.0 };
-                hs[i * d + j] = av * prev + bv;
+                let prev = if ti > 0 { hb[(ti - 1) * d + j] } else { 0.0 };
+                hb[ti * d + j] = av * prev + bv;
             }
         }
-    }
-    // o = h ⊙ silu(g)
+    });
+    // o = h ⊙ silu(g) — row-parallel.
     let mut o = vec![0f32; rows * d];
-    for i in 0..rows {
+    pool::for_chunks(rows * d * 8, &mut o, d, |i, or| {
         let z = &gin.out[i * 3 * d..(i + 1) * 3 * d];
         for j in 0..d {
             let g = z[d + j];
-            o[i * d + j] = hs[i * d + j] * g * sigmoid(g);
+            or[j] = hs[i * d + j] * g * sigmoid(g);
         }
-    }
+    });
     let gout =
         Gemm::forward(&o, cfg.pslice(params, &format!("{pre}wout"))?, rows, d, d, quant, cfg)?;
     let mut x2 = x.clone();
-    for (xv, ov) in x2.iter_mut().zip(&gout.out) {
-        *xv += *ov;
-    }
+    add_assign(&mut x2, &gout.out);
     caches.push(BlockCache::Ssm { x, r, gin, a, h: hs, gout });
     Ok(x2)
 }
@@ -821,20 +861,19 @@ fn moe_fwd(
         let (hdn, gelu_t) = gelu_fwd(&g1.out);
         let g2 =
             Gemm::forward(&hdn, &w2[ei * ff * d..(ei + 1) * ff * d], rows, ff, d, quant, cfg)?;
-        for i in 0..rows {
+        // gated combine, row-parallel (expert order stays the serial one,
+        // so each out element's accumulation chain is unchanged)
+        pool::for_chunks(rows * d * 2, &mut out, d, |i, orow| {
             let gn = gaten[i * e + ei];
-            let orow = &mut out[i * d..(i + 1) * d];
             let srow = &g2.out[i * d..(i + 1) * d];
             for j in 0..d {
                 orow[j] += gn * srow[j];
             }
-        }
+        });
         experts.push((g1, gelu_t, g2));
     }
     let mut x2 = x.clone();
-    for (xv, ov) in x2.iter_mut().zip(&out) {
-        *xv += *ov;
-    }
+    add_assign(&mut x2, &out);
     caches.push(BlockCache::Moe { x, r, y2, probs, kept, gate, z, gaten, experts });
     Ok(x2)
 }
@@ -906,17 +945,18 @@ impl ForwardPass {
         }
 
         // dx is the grad wrt (embeddings ++ image tokens) + pos_emb.
+        // dpos rows are independent: gather over ascending bi per row
+        // (the seed's bi-outer chain), parallel across ti.
         let pe_def = cfg.pdef("pos_emb")?;
         let mut dpos = vec![0f32; pe_def.size];
-        for bi in 0..b {
-            for ti in 0..t {
+        pool::for_chunks(b * t * d, &mut dpos[..t * d], d, |ti, dst| {
+            for bi in 0..b {
                 let src = &dx[(bi * t + ti) * d..(bi * t + ti + 1) * d];
-                let dst = &mut dpos[ti * d..(ti + 1) * d];
                 for j in 0..d {
                     dst[j] += src[j];
                 }
             }
-        }
+        });
         grads.add("pos_emb", &dpos)?;
         if let Some(vg) = &self.vis {
             let mut dimg = vec![0f32; b * n_img * d];
@@ -979,77 +1019,95 @@ impl ForwardPass {
         let mut dln2 = vec![0f32; d];
         let mut dx1 = rmsnorm_bwd(&dy2, x1, r2, ln2, rows, d, &mut dln2);
         grads.add(&format!("{pre}ln2"), &dln2)?;
-        for (a, bv) in dx1.iter_mut().zip(&dx2) {
-            *a += *bv; // residual
-        }
+        add_assign(&mut dx1, &dx2); // residual
         // attention half
         let (do2, dwo) = go.backward(&dx1);
         grads.add(&format!("{pre}wo"), &dwo)?;
-        // dpa, dv
+        // dpa: parallel over (b, head, i) rows (independent writes).
         let mut dpa = vec![0f32; b * h * t * t];
+        pool::for_chunks(b * h * t * t * hd, &mut dpa, t, |ci, dparow| {
+            let i = ci % t;
+            let head = (ci / t) % h;
+            let bi = ci / (t * h);
+            let doff = (bi * t + i) * d + head * hd;
+            let dor = &do2[doff..doff + hd];
+            for (j, dpj) in dparow.iter_mut().enumerate().take(i + 1) {
+                let vv =
+                    &gv.out[(bi * t + j) * d + head * hd..(bi * t + j) * d + (head + 1) * hd];
+                let mut s = 0f32;
+                for c in 0..hd {
+                    s += dor[c] * vv[c];
+                }
+                *dpj = s;
+            }
+        });
+        // dv: the seed scattered over j from an i-outer loop; gathered
+        // form sums i = j..t ascending per row — the identical chain —
+        // and is parallel over (b, j) rows.
         let mut dv = vec![0f32; rows * d];
-        for bi in 0..b {
+        pool::for_chunks(b * t * t * d, &mut dv, d, |ci, dvrow| {
+            let j = ci % t;
+            let bi = ci / t;
             for head in 0..h {
-                for i in 0..t {
-                    let doff = (bi * t + i) * d + head * hd;
-                    let dor = &do2[doff..doff + hd];
-                    let parow =
-                        &pa[((bi * h + head) * t + i) * t..((bi * h + head) * t + i + 1) * t];
-                    let dparow = &mut dpa
-                        [((bi * h + head) * t + i) * t..((bi * h + head) * t + i + 1) * t];
-                    for j in 0..=i {
-                        let vv = &gv.out
-                            [(bi * t + j) * d + head * hd..(bi * t + j) * d + (head + 1) * hd];
-                        let mut s = 0f32;
-                        for c in 0..hd {
-                            s += dor[c] * vv[c];
-                        }
-                        dparow[j] = s;
-                        let dvr = &mut dv
-                            [(bi * t + j) * d + head * hd..(bi * t + j) * d + (head + 1) * hd];
-                        for c in 0..hd {
-                            dvr[c] += parow[j] * dor[c];
-                        }
+                let dvr = &mut dvrow[head * hd..(head + 1) * hd];
+                for i in j..t {
+                    let pj = pa[((bi * h + head) * t + i) * t + j];
+                    let dor = &do2
+                        [(bi * t + i) * d + head * hd..(bi * t + i) * d + (head + 1) * hd];
+                    for c in 0..hd {
+                        dvr[c] += pj * dor[c];
                     }
                 }
             }
-        }
+        });
         let mut datt = softmax_bwd_rows(&dpa, pa, b * h * t, t);
         let inv_sqrt = 1.0 / (hd as f32).sqrt();
-        for v in datt.iter_mut() {
-            *v *= inv_sqrt;
-        }
-        // dq, dk
+        pool::for_chunks(datt.len(), &mut datt, EW_CHUNK, |_, c| {
+            for v in c.iter_mut() {
+                *v *= inv_sqrt;
+            }
+        });
+        // dq: parallel over (b, i) rows (ascending-j chain as the seed).
         let mut dq = vec![0f32; rows * d];
-        let mut dk = vec![0f32; rows * d];
-        for bi in 0..b {
+        pool::for_chunks(b * t * t * d, &mut dq, d, |ci, dqrow| {
+            let i = ci % t;
+            let bi = ci / t;
             for head in 0..h {
-                for i in 0..t {
-                    let darow =
-                        &datt[((bi * h + head) * t + i) * t..((bi * h + head) * t + i + 1) * t];
-                    let qrow =
-                        &gq.out[(bi * t + i) * d + head * hd..(bi * t + i) * d + (head + 1) * hd];
-                    for j in 0..=i {
-                        let da = darow[j];
-                        if da == 0.0 {
-                            continue;
-                        }
-                        let krow = &gk.out
-                            [(bi * t + j) * d + head * hd..(bi * t + j) * d + (head + 1) * hd];
-                        let dqr = &mut dq
-                            [(bi * t + i) * d + head * hd..(bi * t + i) * d + (head + 1) * hd];
-                        for c in 0..hd {
-                            dqr[c] += da * krow[c];
-                        }
-                        let dkr = &mut dk
-                            [(bi * t + j) * d + head * hd..(bi * t + j) * d + (head + 1) * hd];
-                        for c in 0..hd {
-                            dkr[c] += da * qrow[c];
-                        }
+                let darow =
+                    &datt[((bi * h + head) * t + i) * t..((bi * h + head) * t + i + 1) * t];
+                let dqr = &mut dqrow[head * hd..(head + 1) * hd];
+                for (j, &da) in darow.iter().enumerate().take(i + 1) {
+                    if da == 0.0 {
+                        continue;
+                    }
+                    let krow = &gk.out
+                        [(bi * t + j) * d + head * hd..(bi * t + j) * d + (head + 1) * hd];
+                    for c in 0..hd {
+                        dqr[c] += da * krow[c];
                     }
                 }
             }
-        }
+        });
+        // dk: gathered form of the seed's scatter — ascending i per row.
+        let mut dk = vec![0f32; rows * d];
+        pool::for_chunks(b * t * t * d, &mut dk, d, |ci, dkrow| {
+            let j = ci % t;
+            let bi = ci / t;
+            for head in 0..h {
+                let dkr = &mut dkrow[head * hd..(head + 1) * hd];
+                for i in j..t {
+                    let da = datt[((bi * h + head) * t + i) * t + j];
+                    if da == 0.0 {
+                        continue;
+                    }
+                    let qrow = &gq.out
+                        [(bi * t + i) * d + head * hd..(bi * t + i) * d + (head + 1) * hd];
+                    for c in 0..hd {
+                        dkr[c] += da * qrow[c];
+                    }
+                }
+            }
+        });
         let (dyq, dwq) = gq.backward(&dq);
         let (dyk, dwk) = gk.backward(&dk);
         let (dyv, dwv) = gv.backward(&dv);
@@ -1057,16 +1115,12 @@ impl ForwardPass {
         grads.add(&format!("{pre}wk"), &dwk)?;
         grads.add(&format!("{pre}wv"), &dwv)?;
         let mut dy = dyq;
-        for i in 0..dy.len() {
-            dy[i] += dyk[i] + dyv[i];
-        }
+        add_assign2(&mut dy, &dyk, &dyv);
         let ln1 = cfg.pslice(params, &format!("{pre}ln1"))?;
         let mut dln1 = vec![0f32; d];
         let mut dxa = rmsnorm_bwd(&dy, x, r1, ln1, rows, d, &mut dln1);
         grads.add(&format!("{pre}ln1"), &dln1)?;
-        for (a, bv) in dxa.iter_mut().zip(&dx1) {
-            *a += *bv;
-        }
+        add_assign(&mut dxa, &dx1);
         Ok(dxa)
     }
 
@@ -1087,23 +1141,23 @@ impl ForwardPass {
         let rows = b * t;
         let (do2, dwout) = gout.backward(&dx2);
         grads.add(&format!("{pre}wout"), &dwout)?;
-        // o = h ⊙ silu(g): dh, dg
+        // o = h ⊙ silu(g): dh, dg — row-parallel.
         let mut dh = vec![0f32; rows * d];
         let mut dz = vec![0f32; rows * 3 * d]; // [dv | dg | dal]
-        for i in 0..rows {
+        pool::for_chunks2(rows * d * 10, &mut dh, d, &mut dz, 3 * d, |i, dhr, dzr| {
             let z = &gin.out[i * 3 * d..(i + 1) * 3 * d];
             for j in 0..d {
                 let g = z[d + j];
                 let sg = sigmoid(g);
                 let sil = g * sg;
-                dh[i * d + j] = do2[i * d + j] * sil;
-                dz[i * 3 * d + d + j] =
-                    do2[i * d + j] * h[i * d + j] * (sg * (1.0 + g * (1.0 - sg)));
+                dhr[j] = do2[i * d + j] * sil;
+                dzr[d + j] = do2[i * d + j] * h[i * d + j] * (sg * (1.0 + g * (1.0 - sg)));
             }
-        }
+        });
         // scan backward: g_t = dh_t + a_{t+1} ⊙ g_{t+1};
-        // da_t = g_t ⊙ (h_{t-1} − v_t); dv_t = g_t ⊙ (1 − a_t)
-        for bi in 0..b {
+        // da_t = g_t ⊙ (h_{t-1} − v_t); dv_t = g_t ⊙ (1 − a_t).
+        // Sequential in t, parallel across batch lanes.
+        pool::for_chunks(rows * d * 8, &mut dz, t * 3 * d, |bi, dzb| {
             let mut gacc = vec![0f32; d];
             for ti in (0..t).rev() {
                 let i = bi * t + ti;
@@ -1113,12 +1167,12 @@ impl ForwardPass {
                     let hprev = if ti > 0 { h[(i - 1) * d + j] } else { 0.0 };
                     let av = a[i * d + j];
                     let da = gt * (hprev - z[j]);
-                    dz[i * 3 * d + 2 * d + j] = da * av * (1.0 - av); // through sigmoid
-                    dz[i * 3 * d + j] = gt * (1.0 - av);
+                    dzb[ti * 3 * d + 2 * d + j] = da * av * (1.0 - av); // through sigmoid
+                    dzb[ti * 3 * d + j] = gt * (1.0 - av);
                     gacc[j] = gt * av;
                 }
             }
-        }
+        });
         let mut dbias = vec![0f32; d];
         for i in 0..rows {
             for j in 0..d {
@@ -1132,9 +1186,7 @@ impl ForwardPass {
         let mut dln = vec![0f32; d];
         let mut dxa = rmsnorm_bwd(&dy, x, r, ln, rows, d, &mut dln);
         grads.add(&format!("{pre}ln"), &dln)?;
-        for (av, bv) in dxa.iter_mut().zip(&dx2) {
-            *av += *bv;
-        }
+        add_assign(&mut dxa, &dx2);
         Ok(dxa)
     }
 
@@ -1159,28 +1211,31 @@ impl ForwardPass {
         let mut dgaten = vec![0f32; rows * e];
         let mut dw1 = vec![0f32; e * d * ff];
         let mut dw2 = vec![0f32; e * ff * d];
+        let mut scol = vec![0f32; rows];
         for (ei, (g1, gelu_t, g2)) in experts.iter().enumerate() {
             let mut doe = vec![0f32; rows * d];
-            for i in 0..rows {
+            // row-parallel: doe rows + the per-row gate sensitivities
+            // (scol is scattered into dgaten's strided column serially)
+            pool::for_chunks2(rows * d * 3, &mut doe, d, &mut scol, 1, |i, der, sv| {
                 let dout = &dx2[i * d..(i + 1) * d];
                 let oe = &g2.out[i * d..(i + 1) * d];
-                let mut s = 0f32;
                 let gn = gaten[i * e + ei];
-                let der = &mut doe[i * d..(i + 1) * d];
+                let mut s = 0f32;
                 for j in 0..d {
                     s += dout[j] * oe[j];
                     der[j] = dout[j] * gn;
                 }
-                dgaten[i * e + ei] = s;
+                sv[0] = s;
+            });
+            for i in 0..rows {
+                dgaten[i * e + ei] = scol[i];
             }
             let (dhdn, dw2e) = g2.backward(&doe);
             dw2[ei * ff * d..(ei + 1) * ff * d].copy_from_slice(&dw2e);
             let dg1 = gelu_bwd(&dhdn, &g1.out, gelu_t);
             let (dye, dw1e) = g1.backward(&dg1);
             dw1[ei * d * ff..(ei + 1) * d * ff].copy_from_slice(&dw1e);
-            for (av, bv) in dy2.iter_mut().zip(&dye) {
-                *av += *bv;
-            }
+            add_assign(&mut dy2, &dye);
         }
         grads.add(&format!("{pre}w1"), &dw1)?;
         grads.add(&format!("{pre}w2"), &dw2)?;
@@ -1203,16 +1258,12 @@ impl ForwardPass {
         let drouter = matmul_tn(y2, &dlogits, rows, d, e);
         grads.add(&format!("{pre}router"), &drouter)?;
         let dy_router = matmul_nt(&dlogits, router, rows, e, d);
-        for (av, bv) in dy2.iter_mut().zip(&dy_router) {
-            *av += *bv;
-        }
+        add_assign(&mut dy2, &dy_router);
         let ln = cfg.pslice(params, &format!("{pre}ln"))?;
         let mut dln = vec![0f32; d];
         let mut dxa = rmsnorm_bwd(&dy2, x, r, ln, rows, d, &mut dln);
         grads.add(&format!("{pre}ln"), &dln)?;
-        for (av, bv) in dxa.iter_mut().zip(&dx2) {
-            *av += *bv;
-        }
+        add_assign(&mut dxa, &dx2);
         Ok(dxa)
     }
 }
@@ -1246,22 +1297,29 @@ fn clamp_ids(lab: &[i32], v: usize) -> Vec<usize> {
     lab.iter().map(|&t| (t.max(0) as usize).min(v.saturating_sub(1))).collect()
 }
 
-/// CE vs labels: (loss, dlogits).
+/// CE vs labels: (loss, dlogits). Gradient rows are parallel; the loss
+/// reduces over per-row terms in ascending row order (the seed's chain).
 fn ce_loss(logits: &[f32], lab: &[i32], m: &[f32], rows: usize, v: usize) -> (f32, Vec<f32>) {
     let lp = log_softmax_rows(logits, rows, v);
     let ids = clamp_ids(lab, v);
     let denom: f32 = m.iter().sum::<f32>() + 1e-6;
-    let mut loss = 0f32;
     let mut dl = vec![0f32; rows * v];
-    for i in 0..rows {
-        loss -= lp[i * v + ids[i]] * m[i];
-        let c = m[i] / denom;
-        let dr = &mut dl[i * v..(i + 1) * v];
-        let lpr = &lp[i * v..(i + 1) * v];
-        for j in 0..v {
-            dr[j] = lpr[j].exp() * c;
-        }
-        dr[ids[i]] -= c;
+    let mut lrow = vec![0f32; rows];
+    {
+        let ids = &ids;
+        pool::for_chunks2(rows * v * 3, &mut dl, v, &mut lrow, 1, |i, dr, lv| {
+            lv[0] = lp[i * v + ids[i]] * m[i];
+            let c = m[i] / denom;
+            let lpr = &lp[i * v..(i + 1) * v];
+            for j in 0..v {
+                dr[j] = lpr[j].exp() * c;
+            }
+            dr[ids[i]] -= c;
+        });
+    }
+    let mut loss = 0f32;
+    for &lv in &lrow {
+        loss -= lv;
     }
     (loss / denom, dl)
 }
@@ -1277,20 +1335,23 @@ fn kl_loss(
     let ls = log_softmax_rows(s_logits, rows, v);
     let lt = log_softmax_rows(t_logits, rows, v);
     let denom: f32 = m.iter().sum::<f32>() + 1e-6;
-    let mut loss = 0f32;
     let mut dl = vec![0f32; rows * v];
-    for i in 0..rows {
+    let mut lrow = vec![0f32; rows];
+    pool::for_chunks2(rows * v * 6, &mut dl, v, &mut lrow, 1, |i, dr, lv| {
         let lsr = &ls[i * v..(i + 1) * v];
         let ltr = &lt[i * v..(i + 1) * v];
         let mut kl = 0f32;
         let c = m[i] / denom;
-        let dr = &mut dl[i * v..(i + 1) * v];
         for j in 0..v {
             let pt = ltr[j].exp();
             kl += pt * (ltr[j] - lsr[j]);
             dr[j] = (lsr[j].exp() - pt) * c;
         }
-        loss += kl * m[i];
+        lv[0] = kl * m[i];
+    });
+    let mut loss = 0f32;
+    for &lv in &lrow {
+        loss += lv;
     }
     (loss / denom, dl)
 }
@@ -1304,17 +1365,21 @@ fn mse_loss(
     v: usize,
 ) -> (f32, Vec<f32>) {
     let denom: f32 = m.iter().sum::<f32>() + 1e-6;
-    let mut loss = 0f32;
     let mut dl = vec![0f32; rows * v];
-    for i in 0..rows {
+    let mut lrow = vec![0f32; rows];
+    pool::for_chunks2(rows * v * 4, &mut dl, v, &mut lrow, 1, |i, dr, lv| {
         let mut se = 0f32;
         let c = m[i] / denom * 2.0 / v as f32;
         for j in 0..v {
             let diff = s_logits[i * v + j] - t_logits[i * v + j];
             se += diff * diff;
-            dl[i * v + j] = diff * c;
+            dr[j] = diff * c;
         }
-        loss += se / v as f32 * m[i];
+        lv[0] = se / v as f32 * m[i];
+    });
+    let mut loss = 0f32;
+    for &lv in &lrow {
+        loss += lv;
     }
     (loss / denom, dl)
 }
@@ -1374,8 +1439,7 @@ fn quantize_grads_nvfp4(g: &mut Vec<f32>) {
     let padn = (16 - n % 16) % 16;
     let mut padded = std::mem::take(g);
     padded.resize(n + padn, 0.0);
-    let q = nvfp4::fake_quant(&padded, 1, n + padn);
-    *g = q;
+    nvfp4::fake_quant_into(&padded, 1, n + padn, g);
     g.truncate(n);
 }
 
@@ -1399,19 +1463,38 @@ fn adam_update(
     let step = sc_in[scalar::STEP] + 1.0;
     let bc1 = 1.0 - ADAM_B1.powf(step);
     let bc2 = 1.0 - ADAM_B2.powf(step);
+    // The grad-norm is an order-bearing reduction: keep the seed's single
+    // ascending chain (serial — one cheap pass next to the update math).
     let mut gnorm_sq = 0f32;
-    for i in 0..pcount {
-        let g = grads[i];
+    for &g in grads {
         gnorm_sq += g * g;
-        let m = ADAM_B1 * state[pcount + i] + (1.0 - ADAM_B1) * g;
-        let v = ADAM_B2 * state[2 * pcount + i] + (1.0 - ADAM_B2) * g * g;
-        let mhat = m / bc1;
-        let vhat = v / bc2;
-        out[i] = state[i] - lr * mhat / (vhat.sqrt() + ADAM_EPS);
-        out[pcount + i] = m;
-        out[2 * pcount + i] = v;
     }
-    let sc = &mut out[3 * pcount..];
+    // The update itself is pure elementwise work: one chunk-parallel pass
+    // for the (m, v) moments, then one for the parameters (identical op
+    // sequences to the seed's fused loop, so bits are unchanged).
+    let (pout, rest) = out.split_at_mut(pcount);
+    let (mout, rest) = rest.split_at_mut(pcount);
+    let (vout, sc) = rest.split_at_mut(pcount);
+    pool::for_chunks2(pcount * 4, mout, EW_CHUNK, vout, EW_CHUNK, |ci, mc, vc| {
+        let base = ci * EW_CHUNK;
+        for j in 0..mc.len() {
+            let g = grads[base + j];
+            mc[j] = ADAM_B1 * state[pcount + base + j] + (1.0 - ADAM_B1) * g;
+            vc[j] = ADAM_B2 * state[2 * pcount + base + j] + (1.0 - ADAM_B2) * g * g;
+        }
+    });
+    {
+        let mro: &[f32] = mout;
+        let vro: &[f32] = vout;
+        pool::for_chunks(pcount * 6, pout, EW_CHUNK, |ci, pc| {
+            let base = ci * EW_CHUNK;
+            for (j, p) in pc.iter_mut().enumerate() {
+                let mhat = mro[base + j] / bc1;
+                let vhat = vro[base + j] / bc2;
+                *p = state[base + j] - lr * mhat / (vhat.sqrt() + ADAM_EPS);
+            }
+        });
+    }
     sc.copy_from_slice(sc_in);
     sc[scalar::STEP] = step;
     sc[scalar::GRAD_NORM] = gnorm_sq.sqrt();
@@ -1529,18 +1612,29 @@ pub fn eval_metrics(
     let ls = log_softmax_rows(&s_logits, rows, v);
     let lt = log_softmax_rows(&t_logits, rows, v);
     let ids = clamp_ids(&lab, v);
+    // Per-row KL/CE terms in parallel; the running sums then reduce over
+    // rows in ascending order — the seed's exact chains.
+    let mut klrow = vec![0f32; rows];
+    let mut cerow = vec![0f32; rows];
+    {
+        let ids = &ids;
+        pool::for_chunks2(rows * v * 4, &mut klrow, 1, &mut cerow, 1, |i, kv, cv| {
+            let mut kl = 0f32;
+            for j in 0..v {
+                let pt = lt[i * v + j].exp();
+                kl += pt * (lt[i * v + j] - ls[i * v + j]);
+            }
+            kv[0] = kl * msk[i];
+            cv[0] = ls[i * v + ids[i]] * msk[i];
+        });
+    }
     let mut n = 0f32;
     let mut kl_sum = 0f32;
     let mut ce_sum = 0f32;
     for i in 0..rows {
         n += msk[i];
-        let mut kl = 0f32;
-        for j in 0..v {
-            let pt = lt[i * v + j].exp();
-            kl += pt * (lt[i * v + j] - ls[i * v + j]);
-        }
-        kl_sum += kl * msk[i];
-        ce_sum -= ls[i * v + ids[i]] * msk[i];
+        kl_sum += klrow[i];
+        ce_sum -= cerow[i];
     }
     if n_scalars < 5 {
         bail!("eval metrics need n_scalars >= 5, manifest says {n_scalars}");
@@ -1583,11 +1677,12 @@ pub fn fwd_last(
     let logits = fwd_logits(cfg, params, tokens, b, s, pixels)?;
     let v = cfg.model.vocab;
     let mut out = vec![0f32; b * v];
-    for bi in 0..b {
+    // batch-row parallel frontier gather
+    pool::for_chunks(b * v, &mut out, v, |bi, orow| {
         // clamp like an XLA dynamic-slice gather
         let p = (idx[bi].max(0) as usize).min(s - 1);
-        out[bi * v..(bi + 1) * v].copy_from_slice(&logits[(bi * s + p) * v..(bi * s + p + 1) * v]);
-    }
+        orow.copy_from_slice(&logits[(bi * s + p) * v..(bi * s + p + 1) * v]);
+    });
     Ok(out)
 }
 
@@ -1953,6 +2048,68 @@ mod tests {
     #[test]
     fn scan_backward_matches_fd_directly() {
         // Dedicated probe on the ssm block (the trickiest backward).
-        check_grads(&["ssm"], "none", false, 71, 0.08);
+        let cfg = synth_cfg(&["ssm"], "none", false);
+        check_grads(&cfg, 71, 0.08, probe_all);
+    }
+
+    /// Full train step at a fixed thread count (helper for the
+    /// invariance tests below).
+    fn step_at_threads(threads: usize, blocks: &[&str], loss: LossKind) -> Vec<f32> {
+        crate::util::pool::with_threads(threads, || {
+            let cfg = synth_cfg(blocks, "nvfp4", false);
+            let m = cfg.model.clone();
+            let params = rand_params(&cfg, 81);
+            let (tokens, mask, _) = rand_batch(&cfg, 83);
+            let mut state = vec![0f32; 3 * m.param_count + 8];
+            state[..m.param_count].copy_from_slice(&params);
+            let teacher_cfg = RefCfg::bf16(&m);
+            for _ in 0..2 {
+                let teacher = match loss {
+                    LossKind::Kl => Some((&teacher_cfg, &params[..])),
+                    _ => None,
+                };
+                state = train_step(
+                    &cfg, teacher, &loss, false, &state, &tokens, &mask, m.batch, m.seq_len,
+                    1e-2, None, None, 8,
+                )
+                .unwrap();
+            }
+            state
+        })
+    }
+
+    #[test]
+    fn train_step_state_is_thread_count_invariant() {
+        // The packed state (params + Adam moments + scalars) must be
+        // bit-identical at 1 and 4 threads — the determinism contract of
+        // the parallel compute core.
+        let a = step_at_threads(1, &["attn", "ssm", "moe"], LossKind::Ce);
+        let b = step_at_threads(4, &["attn", "ssm", "moe"], LossKind::Ce);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "state[{i}]: {x} vs {y}");
+        }
+        let a = step_at_threads(1, &["attn"], LossKind::Kl);
+        let b = step_at_threads(3, &["attn"], LossKind::Kl);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "kl state[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn forward_logits_are_thread_count_invariant() {
+        let cfg = synth_cfg(&["ssm", "moe", "attn"], "nvfp4", false);
+        let m = cfg.model.clone();
+        let params = rand_params(&cfg, 91);
+        let (tokens, _, _) = rand_batch(&cfg, 93);
+        let one = crate::util::pool::with_threads(1, || {
+            fwd_logits(&cfg, &params, &tokens, m.batch, m.seq_len, None).unwrap()
+        });
+        let four = crate::util::pool::with_threads(4, || {
+            fwd_logits(&cfg, &params, &tokens, m.batch, m.seq_len, None).unwrap()
+        });
+        for (i, (x, y)) in one.iter().zip(&four).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "logits[{i}]");
+        }
     }
 }

@@ -20,6 +20,9 @@ pub struct BenchResult {
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
+    /// Work units one benchmarked call performs (e.g. tokens decoded) —
+    /// 1.0 unless set via `bench_units`; drives `units_per_sec`.
+    pub units_per_iter: f64,
 }
 
 impl BenchResult {
@@ -34,6 +37,11 @@ impl BenchResult {
         } else {
             0.0
         }
+    }
+
+    /// Unit throughput (e.g. tokens/sec for decode benchmarks).
+    pub fn units_per_sec(&self) -> f64 {
+        self.ops_per_sec() * self.units_per_iter
     }
 
     pub fn print(&self) {
@@ -51,7 +59,7 @@ impl BenchResult {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", Json::Str(self.name.clone())),
             ("iters", Json::Num(self.iters as f64)),
             ("mean_ms", Json::Num(self.mean_ms)),
@@ -59,7 +67,12 @@ impl BenchResult {
             ("p95_ms", Json::Num(self.p95_ms)),
             ("ns_per_op", Json::Num(self.ns_per_op())),
             ("ops_per_sec", Json::Num(self.ops_per_sec())),
-        ])
+        ];
+        if self.units_per_iter != 1.0 {
+            pairs.push(("units_per_iter", Json::Num(self.units_per_iter)));
+            pairs.push(("units_per_sec", Json::Num(self.units_per_sec())));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -70,7 +83,20 @@ pub fn smoke_mode() -> bool {
 }
 
 /// Time `f` for `iters` iterations after `warmup` warm-up runs.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> BenchResult {
+    bench_units(name, warmup, iters, 1.0, f)
+}
+
+/// Like [`bench`] but records that each call performs `units_per_iter`
+/// work units (e.g. tokens decoded), so the JSON carries a unit
+/// throughput (`units_per_sec`) next to the per-call numbers.
+pub fn bench_units<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    units_per_iter: f64,
+    mut f: F,
+) -> BenchResult {
     let (warmup, iters) = if smoke_mode() {
         (warmup.min(1), 1)
     } else {
@@ -91,6 +117,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
         mean_ms: mean(&samples),
         p50_ms: percentile(&samples, 50.0),
         p95_ms: percentile(&samples, 95.0),
+        units_per_iter,
     };
     r.print();
     r
@@ -135,6 +162,19 @@ impl BenchSuite {
         self.results.push(bench(name, warmup, iters, f));
     }
 
+    /// Run a benchmark whose call performs `units` work units (tokens,
+    /// rows, ...) — lands `units_per_sec` in the JSON.
+    pub fn run_units<F: FnMut()>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        units: f64,
+        f: F,
+    ) {
+        self.results.push(bench_units(name, warmup, iters, units, f));
+    }
+
     pub fn finish(&self) {
         let mut csv = String::from("name,iters,mean_ms,p50_ms,p95_ms\n");
         for r in &self.results {
@@ -151,12 +191,12 @@ impl BenchSuite {
             return;
         }
         let json_path = repo_root().join(format!("BENCH_{}.json", self.tag));
-        // Carry a committed "baseline" section forward across regenerations
-        // so before/after stays diffable (scripts/bench_diff.py).
-        let baseline = std::fs::read_to_string(&json_path)
-            .ok()
-            .and_then(|t| Json::parse(&t).ok())
-            .and_then(|j| j.get("baseline").cloned());
+        // Carry the committed "baseline" section (and its provenance
+        // "note") forward across regenerations so before/after stays
+        // diffable (scripts/bench_diff.py).
+        let prev = std::fs::read_to_string(&json_path).ok().and_then(|t| Json::parse(&t).ok());
+        let baseline = prev.as_ref().and_then(|j| j.get("baseline").cloned());
+        let note = prev.as_ref().and_then(|j| j.get("note").cloned());
         let mut pairs = vec![
             ("schema", Json::Str("qadx-bench-v1".into())),
             ("tag", Json::Str(self.tag.clone())),
@@ -165,6 +205,9 @@ impl BenchSuite {
                 Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
             ),
         ];
+        if let Some(n) = note {
+            pairs.push(("note", n));
+        }
         if let Some(b) = baseline {
             pairs.push(("baseline", b));
         }
@@ -198,10 +241,28 @@ mod tests {
             mean_ms: 2.0,
             p50_ms: 2.0,
             p95_ms: 2.5,
+            units_per_iter: 1.0,
         };
         let j = r.to_json();
         assert_eq!(j.get("ns_per_op").and_then(|v| v.as_f64()), Some(2e6));
         assert_eq!(j.get("ops_per_sec").and_then(|v| v.as_f64()), Some(500.0));
         assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("x"));
+        assert!(j.get("units_per_sec").is_none(), "unit fields only when set");
+    }
+
+    #[test]
+    fn unit_throughput_scales_ops_per_sec() {
+        let r = BenchResult {
+            name: "decode".into(),
+            iters: 3,
+            mean_ms: 10.0,
+            p50_ms: 10.0,
+            p95_ms: 11.0,
+            units_per_iter: 48.0,
+        };
+        assert_eq!(r.ops_per_sec(), 100.0);
+        assert_eq!(r.units_per_sec(), 4800.0);
+        let j = r.to_json();
+        assert_eq!(j.get("units_per_sec").and_then(|v| v.as_f64()), Some(4800.0));
     }
 }

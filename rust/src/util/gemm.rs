@@ -1,0 +1,355 @@
+//! The reference backend's GEMM family: cache-blocked, unrolled, and
+//! row-tile parallel over [`pool`](super::pool) — while staying
+//! *bit-identical* to the seed's naive loops.
+//!
+//! The invariant that makes that possible: for every output element, the
+//! sequence of f32 operations (one rounded multiply + one rounded add per
+//! contraction index, accumulated in ascending contraction order from a
+//! 0.0 start) is exactly the seed kernel's sequence. Blocking only
+//! reorders *which element* is updated next, never the op sequence within
+//! an element; parallelism only partitions whole output rows, whose
+//! chains are self-contained. Rust f32 arithmetic is strict IEEE (no FMA
+//! contraction, no reassociation), so equal op sequences give equal bits
+//! on every platform and at every thread count. The seed kernels are kept
+//! under `reference` (cfg(test)) and the property tests at the bottom
+//! assert bitwise equality across rectangular, ragged, and randomized
+//! shapes.
+//!
+//! `matmul_nt` historically walked `i,p,j` with a scalar dot-product
+//! accumulator — a strictly sequential FP reduction the compiler cannot
+//! vectorize without changing results. It now packs Bᵀ once and runs the
+//! same `i,k,j`-hoisted axpy traversal as `matmul`, which performs the
+//! identical per-element op sequence (ascending contraction order) and
+//! therefore identical bits, but vectorizes and blocks like the others.
+
+use super::pool;
+
+/// Contraction-panel length (rows of B kept hot across a row tile).
+const KC: usize = 128;
+/// Output-column panel length (f32s of each B row touched per pass).
+const NC: usize = 256;
+
+/// out[j] += av * b[j], unrolled by 8. Each element is one rounded
+/// multiply + one rounded add — exactly the seed's scalar update.
+#[inline]
+fn axpy(o: &mut [f32], av: f32, b: &[f32]) {
+    debug_assert_eq!(o.len(), b.len());
+    let mut oc = o.chunks_exact_mut(8);
+    let mut bc = b.chunks_exact(8);
+    for (ov, bv) in (&mut oc).zip(&mut bc) {
+        ov[0] += av * bv[0];
+        ov[1] += av * bv[1];
+        ov[2] += av * bv[2];
+        ov[3] += av * bv[3];
+        ov[4] += av * bv[4];
+        ov[5] += av * bv[5];
+        ov[6] += av * bv[6];
+        ov[7] += av * bv[7];
+    }
+    for (ov, bv) in oc.into_remainder().iter_mut().zip(bc.remainder()) {
+        *ov += av * *bv;
+    }
+}
+
+/// Rows per parallel tile: enough tiles for load balance, capped so the
+/// per-tile working set stays cache-sized. Purely a throughput knob —
+/// results are tile-size-invariant.
+fn row_tile(m: usize) -> usize {
+    let target = pool::threads().saturating_mul(4).max(1);
+    m.div_ceil(target).clamp(1, 64)
+}
+
+/// The blocked inner kernel for `rows` output rows starting at absolute
+/// row `r0`: C[r0..r0+rows, :] += A[r0.., :k] · B, with B given in
+/// (contraction, out-col) = (k, n) layout.
+fn kernel_nn(a: &[f32], b: &[f32], out_tile: &mut [f32], r0: usize, k: usize, n: usize) {
+    let rows = if n == 0 { 0 } else { out_tile.len() / n };
+    for jj in (0..n).step_by(NC) {
+        let jmax = (jj + NC).min(n);
+        for kk in (0..k).step_by(KC) {
+            let kmax = (kk + KC).min(k);
+            for i in 0..rows {
+                let arow = &a[(r0 + i) * k + kk..(r0 + i) * k + kmax];
+                let orow = &mut out_tile[i * n + jj..i * n + jmax];
+                for (dp, &av) in arow.iter().enumerate() {
+                    let p = kk + dp;
+                    axpy(orow, av, &b[p * n + jj..p * n + jmax]);
+                }
+            }
+        }
+    }
+}
+
+/// (m,k) @ (k,n) -> (m,n) into `out`, overwriting it.
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A is not {m}x{k}");
+    assert_eq!(b.len(), k * n, "B is not {k}x{n}");
+    assert_eq!(out.len(), m * n, "out is not {m}x{n}");
+    if out.is_empty() {
+        return;
+    }
+    let tile = row_tile(m);
+    let work = m.saturating_mul(k).saturating_mul(n);
+    pool::for_chunks(work, out, tile * n, |ci, out_tile| {
+        out_tile.fill(0.0);
+        kernel_nn(a, b, out_tile, ci * tile, k, n);
+    });
+}
+
+/// (m,k) @ (k,n) -> (m,n), allocating.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    matmul_into(a, b, &mut out, m, k, n);
+    out
+}
+
+/// aᵀ @ b for a (m,k), b (m,n) -> (k,n) into `out`, overwriting it.
+/// Parallel over output (k) row tiles; each out[p][j] accumulates over
+/// ascending i — the seed's chain (its i loop was outermost).
+pub fn matmul_tn_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A is not {m}x{k}");
+    assert_eq!(b.len(), m * n, "B is not {m}x{n}");
+    assert_eq!(out.len(), k * n, "out is not {k}x{n}");
+    if out.is_empty() {
+        return;
+    }
+    let tile = row_tile(k);
+    let work = m.saturating_mul(k).saturating_mul(n);
+    pool::for_chunks(work, out, tile * n, |ci, out_tile| {
+        out_tile.fill(0.0);
+        let p0 = ci * tile;
+        let rows = if n == 0 { 0 } else { out_tile.len() / n };
+        for jj in (0..n).step_by(NC) {
+            let jmax = (jj + NC).min(n);
+            for ii in (0..m).step_by(KC) {
+                let imax = (ii + KC).min(m);
+                for p in 0..rows {
+                    let orow = &mut out_tile[p * n + jj..p * n + jmax];
+                    for i in ii..imax {
+                        let av = a[i * k + p0 + p];
+                        axpy(orow, av, &b[i * n + jj..i * n + jmax]);
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// aᵀ @ b for a (m,k), b (m,n) -> (k,n), allocating.
+pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; k * n];
+    matmul_tn_into(a, b, &mut out, m, k, n);
+    out
+}
+
+thread_local! {
+    /// Reused Bᵀ pack buffer for `matmul_nt` (per thread: packing happens
+    /// on the calling thread before workers fan out).
+    static NT_PACK: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// a @ bᵀ for a (m,n), b (k,n) -> (m,k) into `out`, overwriting it.
+///
+/// Canonical traversal: pack Bᵀ (n,k), then the `matmul` kernel. For each
+/// out[i][p] this performs the contraction in ascending j with a single
+/// accumulator — the same rounded-op sequence as the historical scalar
+/// dot product, so bits are unchanged while the inner loop vectorizes.
+pub fn matmul_nt_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * n, "A is not {m}x{n}");
+    assert_eq!(b.len(), k * n, "B is not {k}x{n}");
+    assert_eq!(out.len(), m * k, "out is not {m}x{k}");
+    if out.is_empty() {
+        return;
+    }
+    NT_PACK.with(|cell| {
+        let mut pack = cell.borrow_mut();
+        pack.clear();
+        pack.resize(n * k, 0.0);
+        // blocked transpose of b (k,n) -> bt (n,k)
+        const TB: usize = 32;
+        for r0 in (0..k).step_by(TB) {
+            let rmax = (r0 + TB).min(k);
+            for c0 in (0..n).step_by(TB) {
+                let cmax = (c0 + TB).min(n);
+                for r in r0..rmax {
+                    for c in c0..cmax {
+                        pack[c * k + r] = b[r * n + c];
+                    }
+                }
+            }
+        }
+        let tile = row_tile(m);
+        let work = m.saturating_mul(k).saturating_mul(n);
+        let bt: &[f32] = &pack;
+        pool::for_chunks(work, out, tile * k, |ci, out_tile| {
+            out_tile.fill(0.0);
+            kernel_nn(a, bt, out_tile, ci * tile, n, k);
+        });
+    });
+}
+
+/// a @ bᵀ for a (m,n), b (k,n) -> (m,k), allocating.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * k];
+    matmul_nt_into(a, b, &mut out, m, n, k);
+    out
+}
+
+/// The seed's naive kernels, verbatim — the bit-for-bit oracles the
+/// blocked/parallel family is property-tested against.
+#[cfg(test)]
+pub(crate) mod reference {
+    /// (m,k) @ (k,n) -> (m,n), naive f32 with cache-friendly ikj order.
+    pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                let brow = &b[p * n..(p + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// aᵀ @ b for a (m,k), b (m,n) -> (k,n).
+    pub fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; k * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                let orow = &mut out[p * n..(p + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// a @ bᵀ for a (m,n), b (k,n) -> (m,k) — the seed's i,p,j scalar-dot
+    /// traversal (ascending-j chain, same as the packed kernel's).
+    pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * k];
+        for i in 0..m {
+            let arow = &a[i * n..(i + 1) * n];
+            for p in 0..k {
+                let brow = &b[p * n..(p + 1) * n];
+                let mut s = 0f32;
+                for j in 0..n {
+                    s += arow[j] * brow[j];
+                }
+                out[i * k + p] = s;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::with_threads;
+    use crate::util::rng::Rng;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.normal() as f32).collect()
+    }
+
+    fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "{what}: bit mismatch at {i}: {g} vs {w}");
+        }
+    }
+
+    fn check_all(m: usize, k: usize, n: usize, seed: u64, threads: usize) {
+        let a = randn(m * k, seed);
+        let b = randn(k * n, seed ^ 0xb0b);
+        let at = randn(m * k, seed ^ 0x7e); // (m,k) for tn
+        let bt = randn(m * n, seed ^ 0x5a); // (m,n) for tn
+        let an = randn(m * n, seed ^ 0x11); // (m,n) for nt
+        let bn = randn(k * n, seed ^ 0x22); // (k,n) for nt
+        with_threads(threads, || {
+            assert_bits_eq(
+                &matmul(&a, &b, m, k, n),
+                &reference::matmul(&a, &b, m, k, n),
+                &format!("matmul {m}x{k}x{n} t{threads}"),
+            );
+            assert_bits_eq(
+                &matmul_tn(&at, &bt, m, k, n),
+                &reference::matmul_tn(&at, &bt, m, k, n),
+                &format!("matmul_tn {m}x{k}x{n} t{threads}"),
+            );
+            assert_bits_eq(
+                &matmul_nt(&an, &bn, m, n, k),
+                &reference::matmul_nt(&an, &bn, m, n, k),
+                &format!("matmul_nt {m}x{n}x{k} t{threads}"),
+            );
+        });
+    }
+
+    #[test]
+    fn blocked_matches_oracle_on_shape_cross_product() {
+        // rectangular + ragged shapes: every (m,k,n) in the cross product,
+        // at 1 thread and at 4 (4 forces the parallel partition whenever
+        // the work threshold is met).
+        let dims = [1usize, 2, 3, 16, 17, 64];
+        for (si, &m) in dims.iter().enumerate() {
+            for (sj, &k) in dims.iter().enumerate() {
+                for (sk, &n) in dims.iter().enumerate() {
+                    let seed = 1000 + (si * 36 + sj * 6 + sk) as u64;
+                    check_all(m, k, n, seed, 1);
+                    check_all(m, k, n, seed, 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matches_oracle_randomized() {
+        // 50 randomized shapes spanning the blocking boundaries (tiles,
+        // KC/NC panels, unroll remainders), random thread counts.
+        let mut r = Rng::new(0x6e44);
+        for case in 0..50u64 {
+            let m = 1 + r.below(97);
+            let k = 1 + r.below(160);
+            let n = 1 + r.below(300);
+            let t = 1 + r.below(6);
+            check_all(m, k, n, 0xA000 + case, t);
+        }
+    }
+
+    #[test]
+    fn panels_larger_than_blocking_constants_split_correctly() {
+        // exceed KC and NC so multiple panels + ragged last panels run
+        check_all(70, KC + 37, NC + 61, 0xBEEF, 3);
+    }
+
+    #[test]
+    fn into_variants_overwrite_stale_contents() {
+        let m = 9;
+        let k = 33;
+        let n = 21;
+        let a = randn(m * k, 5);
+        let b = randn(k * n, 6);
+        let mut out = vec![f32::NAN; m * n];
+        matmul_into(&a, &b, &mut out, m, k, n);
+        assert_bits_eq(&out, &reference::matmul(&a, &b, m, k, n), "overwrite");
+    }
+
+    #[test]
+    fn zero_sized_dims_are_fine() {
+        assert!(matmul(&[], &[], 0, 0, 0).is_empty());
+        assert_eq!(matmul(&[], &randn(6, 1), 0, 3, 2), Vec::<f32>::new());
+        // k = 0: all-zero output of the right shape
+        assert_eq!(matmul(&[], &[], 2, 0, 3), vec![0f32; 6]);
+        assert_eq!(matmul_tn(&[], &[], 0, 2, 3), vec![0f32; 6]);
+        assert_eq!(matmul_nt(&[], &[], 2, 0, 3), vec![0f32; 6]);
+    }
+}

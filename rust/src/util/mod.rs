@@ -3,7 +3,9 @@
 
 pub mod args;
 pub mod bench;
+pub mod gemm;
 pub mod json;
+pub mod pool;
 pub mod rng;
 
 use std::io::Write;

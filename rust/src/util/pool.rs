@@ -1,0 +1,349 @@
+//! Scoped worker pool for the reference-backend compute core.
+//!
+//! Parallelism here is *deterministic by construction*: each chunk is
+//! processed by exactly one worker running the same per-chunk code the
+//! serial path runs, and — the invariant kernels must uphold — no f32
+//! accumulation chain ever crosses a chunk boundary, with each chain
+//! executing the serial op sequence. Chunk *sizes* may legitimately vary
+//! with the worker count (the GEMM row tiles do); what makes results
+//! bit-identical at 1 and at N threads is chain containment, not fixed
+//! boundaries. Corollary for kernel authors: an order-bearing reduction
+//! that combines per-chunk partials is only deterministic if its chunk
+//! size is independent of the thread count (see `max_abs`, whose max
+//! combine is order-insensitive and therefore safe either way). This is
+//! what lets `QADX_THREADS` be a pure throughput knob (asserted by
+//! rust/tests/threading.rs over full train steps and decode).
+//!
+//! Threads are `std::thread::scope` spawns per parallel region (no new
+//! dependencies, no unsafe, no 'static bounds on borrowed inputs). Spawn
+//! cost is a few tens of microseconds, so regions below [`PAR_MIN_WORK`]
+//! scalar ops run inline on the caller thread — the tiny shapes of the
+//! hermetic test models never pay for threads they can't use.
+//!
+//! Thread-count resolution, strongest first:
+//! 1. [`with_threads`] (thread-local, scoped — used by tests to compare
+//!    1-thread vs N-thread runs without racing the parallel test harness)
+//! 2. [`set_threads`] (process-global — `--threads` CLI flag /
+//!    `Session::builder().threads(..)`)
+//! 3. `QADX_THREADS` env var (read once per process)
+//! 4. `std::thread::available_parallelism()`
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Minimum scalar-op estimate for a region to go parallel; smaller
+/// regions run inline (spawn overhead would dominate).
+pub const PAR_MIN_WORK: usize = 64 * 1024;
+
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static TLS_THREADS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// `QADX_THREADS` (read once) or the machine's available parallelism.
+fn default_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        if let Ok(v) = std::env::var("QADX_THREADS") {
+            match v.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => return n,
+                _ => eprintln!(
+                    "QADX_THREADS={v:?} is not a positive integer; using available parallelism"
+                ),
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// The worker count parallel regions entered from this thread will use.
+pub fn threads() -> usize {
+    let tls = TLS_THREADS.with(|t| t.get());
+    if tls >= 1 {
+        return tls;
+    }
+    let global = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if global >= 1 {
+        return global;
+    }
+    default_threads()
+}
+
+/// Set the process-global worker count (CLI `--threads`,
+/// `Session::builder().threads(..)`). `0` clears the override, falling
+/// back to `QADX_THREADS` / available parallelism.
+pub fn set_threads(n: usize) {
+    GLOBAL_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Run `f` with the worker count pinned to `n` on this thread (scoped,
+/// restores the previous value on exit — panic-safe). Worker counts are
+/// resolved on the thread that *enters* a parallel region, so this pins
+/// every region `f` runs, including on spawned workers' behalf.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            TLS_THREADS.with(|t| t.set(self.0));
+        }
+    }
+    let prev = TLS_THREADS.with(|t| t.replace(n));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Contiguous chunk-index ranges: `workers` near-equal spans of
+/// `0..n_chunks` (earlier workers take the remainder).
+fn plan(n_chunks: usize, workers: usize) -> impl Iterator<Item = (usize, usize)> {
+    let base = n_chunks / workers;
+    let rem = n_chunks % workers;
+    let mut start = 0usize;
+    (0..workers).map(move |w| {
+        let len = base + usize::from(w < rem);
+        let span = (start, start + len);
+        start += len;
+        span
+    })
+}
+
+fn should_parallelize(work: usize, n_chunks: usize) -> usize {
+    if work < PAR_MIN_WORK || n_chunks < 2 {
+        return 1;
+    }
+    threads().min(n_chunks)
+}
+
+/// Apply `f(chunk_index, chunk)` to every `chunk`-sized piece of `data`
+/// (last piece may be ragged), in parallel when `work` — a caller
+/// estimate of total scalar ops for the whole region — justifies it.
+///
+/// For a given `(data.len(), chunk)` the serial path runs the identical
+/// per-chunk calls, so results never depend on the worker count as long
+/// as `f` keeps every accumulation chain inside its own chunk. Callers
+/// whose `chunk` itself derives from `threads()` must not do
+/// order-bearing cross-chunk reductions over the results.
+pub fn for_chunks<T, F>(work: usize, data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk >= 1, "chunk size must be >= 1");
+    let n_chunks = data.len().div_ceil(chunk);
+    let workers = should_parallelize(work, n_chunks);
+    if workers <= 1 {
+        for (ci, c) in data.chunks_mut(chunk).enumerate() {
+            f(ci, c);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = data;
+        for (w, (c0, c1)) in plan(n_chunks, workers).enumerate() {
+            let elems = ((c1 - c0) * chunk).min(rest.len());
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(elems);
+            rest = tail;
+            let fr = &f;
+            let run = move || {
+                for (ci, c) in head.chunks_mut(chunk).enumerate() {
+                    fr(c0 + ci, c);
+                }
+            };
+            if w + 1 == workers {
+                run(); // caller thread takes the last span
+            } else {
+                s.spawn(run);
+            }
+        }
+    });
+}
+
+/// Two-output variant: chunk `i` pairs `a[i*ca..][..ca]` with
+/// `b[i*cb..][..cb]` (both possibly ragged at the end). The chunk count
+/// is driven by `a`; `b` must hold matching chunks.
+pub fn for_chunks2<A, B, F>(work: usize, a: &mut [A], ca: usize, b: &mut [B], cb: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    assert!(ca >= 1 && cb >= 1, "chunk sizes must be >= 1");
+    let n_chunks = a.len().div_ceil(ca);
+    assert!(
+        b.len().div_ceil(cb) == n_chunks,
+        "paired slices disagree on chunk count: {} vs {}",
+        n_chunks,
+        b.len().div_ceil(cb)
+    );
+    let workers = should_parallelize(work, n_chunks);
+    if workers <= 1 {
+        for (ci, (pa, pb)) in a.chunks_mut(ca).zip(b.chunks_mut(cb)).enumerate() {
+            f(ci, pa, pb);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest_a = a;
+        let mut rest_b = b;
+        for (w, (c0, c1)) in plan(n_chunks, workers).enumerate() {
+            let ea = ((c1 - c0) * ca).min(rest_a.len());
+            let eb = ((c1 - c0) * cb).min(rest_b.len());
+            let (ha, ta) = std::mem::take(&mut rest_a).split_at_mut(ea);
+            let (hb, tb) = std::mem::take(&mut rest_b).split_at_mut(eb);
+            rest_a = ta;
+            rest_b = tb;
+            let fr = &f;
+            let run = move || {
+                for (ci, (pa, pb)) in ha.chunks_mut(ca).zip(hb.chunks_mut(cb)).enumerate() {
+                    fr(c0 + ci, pa, pb);
+                }
+            };
+            if w + 1 == workers {
+                run();
+            } else {
+                s.spawn(run);
+            }
+        }
+    });
+}
+
+/// Max |x| over a slice, chunk-parallel. f32 max is insensitive to
+/// combination order (and `f32::max` drops NaN operands the same way in
+/// any order), so this is exact and thread-count-invariant.
+pub fn max_abs(x: &[f32]) -> f32 {
+    const CHUNK: usize = 16 * 1024;
+    if x.len() <= CHUNK {
+        return x.iter().fold(0f32, |m, v| m.max(v.abs()));
+    }
+    let mut partials = vec![0f32; x.len().div_ceil(CHUNK)];
+    for_chunks(x.len(), &mut partials, 1, |ci, slot| {
+        let blk = &x[ci * CHUNK..((ci + 1) * CHUNK).min(x.len())];
+        slot[0] = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
+    });
+    partials.iter().fold(0f32, |m, v| m.max(*v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn thread_resolution_precedence() {
+        assert!(threads() >= 1);
+        with_threads(7, || {
+            assert_eq!(threads(), 7);
+            with_threads(2, || assert_eq!(threads(), 2));
+            assert_eq!(threads(), 7);
+        });
+        assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn with_threads_restores_on_panic() {
+        let before = TLS_THREADS.with(|t| t.get());
+        let r = std::panic::catch_unwind(|| with_threads(5, || panic!("boom")));
+        assert!(r.is_err());
+        assert_eq!(TLS_THREADS.with(|t| t.get()), before);
+    }
+
+    #[test]
+    fn plan_covers_all_chunks_contiguously() {
+        for n in [0usize, 1, 2, 7, 16, 33] {
+            for w in [1usize, 2, 3, 8] {
+                let spans: Vec<_> = plan(n, w).collect();
+                assert_eq!(spans.len(), w);
+                let mut next = 0;
+                for (a, b) in spans {
+                    assert_eq!(a, next);
+                    assert!(b >= a);
+                    next = b;
+                }
+                assert_eq!(next, n);
+            }
+        }
+    }
+
+    fn fill_by_chunk(n: usize, chunk: usize, threads: usize) -> Vec<u64> {
+        let mut out = vec![0u64; n];
+        with_threads(threads, || {
+            // force the parallel path regardless of size
+            for_chunks(PAR_MIN_WORK, &mut out, chunk, |ci, c| {
+                for (j, v) in c.iter_mut().enumerate() {
+                    *v = ((ci as u64) << 32) | j as u64;
+                }
+            });
+        });
+        out
+    }
+
+    #[test]
+    fn for_chunks_matches_serial_for_ragged_shapes() {
+        for n in [1usize, 5, 64, 101, 1024] {
+            for chunk in [1usize, 3, 16, 200] {
+                let serial = fill_by_chunk(n, chunk, 1);
+                for t in [2usize, 3, 8] {
+                    assert_eq!(fill_by_chunk(n, chunk, t), serial, "n={n} chunk={chunk} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_chunks2_pairs_chunks_correctly() {
+        let rows = 37usize;
+        let (da, db) = (8usize, 3usize);
+        let run = |t: usize| {
+            let mut a = vec![0u32; rows * da];
+            let mut b = vec![0u32; rows * db];
+            with_threads(t, || {
+                for_chunks2(PAR_MIN_WORK, &mut a, da, &mut b, db, |ci, pa, pb| {
+                    for v in pa.iter_mut() {
+                        *v = ci as u32 + 1;
+                    }
+                    for v in pb.iter_mut() {
+                        *v = (ci as u32 + 1) * 1000;
+                    }
+                });
+            });
+            (a, b)
+        };
+        let (a1, b1) = run(1);
+        let (a4, b4) = run(4);
+        assert_eq!(a1, a4);
+        assert_eq!(b1, b4);
+        assert_eq!(a1[0], 1);
+        assert_eq!(a1[rows * da - 1], rows as u32);
+        assert_eq!(b1[rows * db - 1], rows as u32 * 1000);
+    }
+
+    #[test]
+    fn small_work_stays_inline() {
+        // work below the threshold must not spawn: detectable because the
+        // closure sees the caller's thread id for every chunk.
+        let caller = std::thread::current().id();
+        let mut data = vec![0u8; 64];
+        with_threads(8, || {
+            for_chunks(1, &mut data, 4, |_, _| {
+                assert_eq!(std::thread::current().id(), caller);
+            });
+        });
+    }
+
+    #[test]
+    fn max_abs_matches_serial_fold() {
+        let mut r = Rng::new(9);
+        let x: Vec<f32> = (0..100_000).map(|_| r.normal() as f32 * 3.0).collect();
+        let want = x.iter().fold(0f32, |m, v| m.max(v.abs()));
+        assert_eq!(max_abs(&x).to_bits(), want.to_bits());
+        let with_nan = {
+            let mut y = x.clone();
+            y[5] = f32::NAN;
+            y
+        };
+        let want = with_nan.iter().fold(0f32, |m, v| m.max(v.abs()));
+        assert_eq!(max_abs(&with_nan).to_bits(), want.to_bits());
+        assert_eq!(max_abs(&[]), 0.0);
+    }
+}

@@ -153,6 +153,19 @@ fn assert_serve_coalesces(session: &Session, model: &str) {
         assert!((last - tail as f64 / b as f64).abs() < 1e-12, "fill {last}");
     }
     assert!(st.fill_ratios.iter().all(|f| f > 0.0 && f <= 1.0));
+    // queue-wait vs execute split: one sample of each per request, waits
+    // and execute times non-negative, and wait + execute ≈ latency.
+    assert_eq!(st.queue_wait_ms.count(), n as u64);
+    assert_eq!(st.execute_ms.count(), n as u64);
+    assert!(st.queue_wait_ms.iter().all(|w| w >= 0.0));
+    assert!(st.execute_ms.iter().all(|e| e > 0.0));
+    let lat_sum: f64 = st.latencies_ms.iter().sum();
+    let split_sum: f64 =
+        st.queue_wait_ms.iter().sum::<f64>() + st.execute_ms.iter().sum::<f64>();
+    assert!(
+        (lat_sum - split_sum).abs() <= 0.05 * lat_sum.max(1.0),
+        "latency {lat_sum} vs wait+execute {split_sum}"
+    );
 }
 
 #[test]
