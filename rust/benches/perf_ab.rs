@@ -83,7 +83,10 @@ fn main() {
     });
     if sampler.uses_frontier() {
         // naive path for comparison: full B·S·V logits download per token
+        // (pinned to the stateless decode mode so the label stays true on
+        // backends with stateful prefill/step decode)
         let mut sampler_full = Sampler::new(rt, "fwd_bf16", SampleCfg::default()).unwrap();
+        sampler_full.set_decode_mode(qadx::eval::DecodeMode::Full);
         sampler_full.force_full_logits(true);
         suite.run(&format!("{model}/D2_generate_full_download_12tok"), 2, 8, || {
             std::hint::black_box(

@@ -1,7 +1,10 @@
 //! Reference-backend compute-core benchmarks: the blocked/parallel GEMM
 //! family, the hermetic full forward, the QAD train step, and decode
-//! throughput (tokens/sec) through the reference engine. Entirely
-//! hermetic — a synthetic manifest, no artifacts, no XLA.
+//! throughput (tokens/sec) through the reference engine — including a
+//! long-context seq-len sweep comparing the stateful prefill/step decode
+//! against the stateless full-forward path (step per-token time stays
+//! ~flat in seq_len; full grows with it). Entirely hermetic — a
+//! synthetic manifest, no artifacts, no XLA.
 //!
 //! `cargo bench --bench refgemm_bench` → BENCH_refgemm.json at the repo
 //! root (the committed file carries a `baseline` section with the pre-PR
@@ -122,15 +125,25 @@ fn main() {
     });
 
     // ---- decode tokens/sec through the reference engine --------------
+    // One manifest carries the bench model plus long-context variants for
+    // the seq-len sweep.
+    let mut specs = vec![spec];
+    for s in [64usize, 256] {
+        let mut long = bench_spec();
+        long.name = format!("refgemm-bench-s{s}");
+        long.seq_len = s;
+        specs.push(long);
+    }
     let dir = std::env::temp_dir().join(format!("qadx_refgemm_bench_{}", std::process::id()));
     std::fs::create_dir_all(&dir).expect("bench tmp dir");
-    std::fs::write(dir.join("manifest.json"), synthetic_manifest_json(&[spec]))
+    std::fs::write(dir.join("manifest.json"), synthetic_manifest_json(&specs))
         .expect("write manifest");
     let engine =
         Engine::with_backend(&dir, BackendKind::Reference).expect("reference engine");
     {
         let rt = ModelRuntime::new(&engine, "refgemm-bench").expect("model runtime");
         let sample = qadx::eval::SampleCfg { temperature: 0.6, top_p: 0.95, max_new: 12, seed: 7 };
+        // default decode (stateful prefill/step on the reference backend)
         let mut sampler = qadx::eval::Sampler::new(&rt, "fwd_nvfp4", sample).expect("sampler");
         let wbuf = engine.upload_f32(&params, &[params.len()]).expect("weights");
         let prompts: Vec<Vec<i32>> =
@@ -142,6 +155,44 @@ fn main() {
                 sampler.generate(&engine, &wbuf, &prompts, None).expect("generate"),
             );
         });
+
+        // long-context sweep with a fixed short prompt: the full path
+        // re-forwards the whole (B, S) artifact per token, so its
+        // per-token time grows with seq_len; the step path works at the
+        // frontier and stays ~flat. A final long-prompt row isolates the
+        // prefill-dominated regime (prompt ≈ S) on the step path.
+        for (model_name, s, prompt_len, iters, modes) in [
+            ("refgemm-bench-s64", 64usize, 4usize, 6usize, &["step", "full"][..]),
+            ("refgemm-bench-s256", 256, 4, 3, &["step", "full"][..]),
+            ("refgemm-bench-s256", 256, 240, 3, &["step"][..]),
+        ] {
+            let rt = ModelRuntime::new(&engine, model_name).expect("sweep runtime");
+            let cfg_s = RefCfg::for_key_format(&rt.model, "nvfp4").expect("sweep cfg");
+            let sweep_params = init_params(&cfg_s, 11);
+            let wbuf = engine
+                .upload_f32(&sweep_params, &[sweep_params.len()])
+                .expect("sweep weights");
+            let prompts: Vec<Vec<i32>> = (0..rt.model.batch)
+                .map(|i| (0..prompt_len).map(|j| 2 + ((i * 7 + j) % 300) as i32).collect())
+                .collect();
+            let units = (rt.model.batch * sample.max_new) as f64;
+            for &label in modes {
+                let mode = if label == "step" {
+                    qadx::eval::DecodeMode::Step
+                } else {
+                    qadx::eval::DecodeMode::Full
+                };
+                let mut sampler =
+                    qadx::eval::Sampler::new(&rt, "fwd_nvfp4", sample).expect("sweep sampler");
+                sampler.set_decode_mode(mode);
+                let name = format!("ref_decode_{label}_nvfp4_s{s}_p{prompt_len}_toks");
+                suite.run_units(&name, 1, iters, units, || {
+                    std::hint::black_box(
+                        sampler.generate(&engine, &wbuf, &prompts, None).expect("generate"),
+                    );
+                });
+            }
+        }
     }
     std::fs::remove_dir_all(&dir).ok();
 

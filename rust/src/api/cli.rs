@@ -9,7 +9,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use crate::data::tasks::Suite;
-use crate::eval::EvalCfg;
+use crate::eval::{DecodeMode, EvalCfg};
 use crate::util::args::Args;
 
 use super::method::MethodRef;
@@ -108,12 +108,19 @@ pub const COMMANDS: &[CommandDef] = &[
     CommandDef {
         name: "serve-bench",
         args: "",
-        summary: "coalescing-server throughput: req/s, tok/s, latency, fill",
+        summary: "serving throughput: req/s, tok/s, latency, TTFT, occupancy",
         flags: &[
             flag("model", "M", "ace-sim", "sim model"),
             flag("requests", "N", "64", "requests to submit"),
             flag("fwd", "K", "both", "forward path: both|bf16|nvfp4"),
-            flag("max-delay-ms", "F", "25", "partial-batch flush deadline"),
+            flag(
+                "decode",
+                "M",
+                "auto",
+                "scheduler: auto|step|full (step = continuous batching required)",
+            ),
+            flag("slots", "N", "0", "continuous in-flight slots (0 = model batch)"),
+            flag("max-delay-ms", "F", "25", "coalescing partial-batch flush deadline"),
             flag("max-new", "N", "12", "tokens generated per request"),
             flag("telemetry", "FILE", "(off)", "JSONL event log (or QADX_TELEMETRY_JSONL)"),
         ],
@@ -402,6 +409,10 @@ pub struct ServeBenchArgs {
     pub model: String,
     pub requests: usize,
     pub fwd_keys: Vec<String>,
+    /// Scheduler selection (`--decode auto|step|full`).
+    pub decode: DecodeMode,
+    /// Continuous in-flight slot width (`--slots`, 0 = model batch).
+    pub slots: usize,
     pub max_delay_ms: f64,
     pub max_new: usize,
     pub telemetry: Option<PathBuf>,
@@ -420,6 +431,8 @@ impl ServeBenchArgs {
             model: args.get_or("model", "ace-sim"),
             requests: parse_flag(args, "requests", 64)?,
             fwd_keys,
+            decode: parse_flag(args, "decode", DecodeMode::Auto)?,
+            slots: parse_flag(args, "slots", 0)?,
             max_delay_ms: parse_flag(args, "max-delay-ms", 25.0)?,
             max_new: parse_flag(args, "max-new", 12)?,
             telemetry: args.get("telemetry").map(PathBuf::from),
@@ -526,5 +539,24 @@ mod tests {
         let s = ServeBenchArgs::parse(&parse("serve-bench --fwd nvfp4")).unwrap();
         assert_eq!(s.fwd_keys, vec!["fwd_nvfp4"]);
         assert!(ServeBenchArgs::parse(&parse("serve-bench --fwd tf32")).is_err());
+    }
+
+    #[test]
+    fn serve_bench_decode_and_slots_flags() {
+        let s = ServeBenchArgs::parse(&parse("serve-bench")).unwrap();
+        assert_eq!(s.decode, DecodeMode::Auto);
+        assert_eq!(s.slots, 0);
+        let s = ServeBenchArgs::parse(&parse("serve-bench --decode step --slots 6")).unwrap();
+        assert_eq!(s.decode, DecodeMode::Step);
+        assert_eq!(s.slots, 6);
+        let s = ServeBenchArgs::parse(&parse("serve-bench --decode full")).unwrap();
+        assert_eq!(s.decode, DecodeMode::Full);
+        // typo'd values are errors, not silent defaults
+        assert!(ServeBenchArgs::parse(&parse("serve-bench --decode fast")).is_err());
+        assert!(ServeBenchArgs::parse(&parse("serve-bench --slots many")).is_err());
+        // the flags are declared, so the unknown-flag gate accepts them
+        let cmd = find_command("serve-bench").unwrap();
+        assert!(check_flags(cmd, &parse("serve-bench --decode step --slots 2")).is_ok());
+        assert!(render_usage(cmd).contains("--decode"), "usage must list --decode");
     }
 }

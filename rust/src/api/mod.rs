@@ -8,9 +8,10 @@
 //! * [`RecoveryMethod`] + [`MethodRegistry`] make recovery methods an open
 //!   set — the paper's six are built-ins; a seventh is one trait impl and
 //!   one `register` call.
-//! * [`ServeHandle`] is the serving façade: a request queue with batch
-//!   coalescing (fill to `model.batch` under a deadline) and optional
-//!   JSONL telemetry.
+//! * [`ServeHandle`] is the serving façade: a continuous-batching slot
+//!   scheduler over stateful prefill/step decode (with a run-to-completion
+//!   batch-coalescing fallback for stateless backends) and optional JSONL
+//!   telemetry.
 //! * [`cli`] holds the typed command definitions the `qadx` binary parses
 //!   flags through, with usage text generated from the definitions.
 //!
@@ -36,6 +37,7 @@ pub mod serve;
 pub mod session;
 pub mod telemetry;
 
+pub use crate::eval::DecodeMode;
 pub use method::{MethodRef, MethodRegistry, RecoveryMethod};
 pub use serve::{Coalescer, ServeCfg, ServeHandle, ServeResponse, ServeStats, ServeWeights};
 pub use session::{

@@ -1,13 +1,25 @@
-//! Serving façade: a request queue with batch coalescing over one fwd
-//! artifact. Requests are submitted one at a time; the handle fills
-//! device batches up to `model.batch`, flushing a partial batch once the
-//! oldest request has waited past a deadline (or on `drain`). Per-batch
-//! telemetry (compile ms, fill ratio, tokens) optionally lands in a JSONL
-//! event log.
+//! Serving façade over one fwd artifact, in one of two scheduling modes:
 //!
-//! The runtime is single-threaded (PJRT buffers are not Send), so the
-//! queue is synchronous: `submit` flushes full batches inline, `poll`
-//! applies the deadline, and `drain` forces everything out.
+//! * **Continuous batching** (default when the backend advertises the
+//!   stateful-decode capability): a fixed-width set of in-flight slots
+//!   over one [`DecodeSession`]. A submitted request is prefilled into a
+//!   free slot immediately (its first token — TTFT — is sampled right
+//!   there); each decode round then steps every live slot by one token,
+//!   and a slot freed by EOS/length is refilled from the queue *mid
+//!   generation* — a request arriving one step after others start waits
+//!   one round, not a whole generation. Rows are independent by the
+//!   decode-session contract, so admissions never perturb in-flight rows.
+//! * **Batch coalescing** (fallback, and `decode = full`): the legacy
+//!   run-to-completion path — requests queue until `model.batch` rows
+//!   coalesce (or the oldest waits past a deadline), then one
+//!   `Sampler::generate` runs the whole batch.
+//!
+//! Per-request telemetry (TTFT, inter-token gaps, latency) and per-round
+//! slot occupancy land in [`ServeStats`] and, optionally, a JSONL event
+//! log. The runtime is single-threaded (device buffers are not Send), so
+//! the queue is synchronous: `submit` admits/flushes inline, `poll` runs
+//! one decode round (or applies the coalescing deadline), `drain` runs
+//! everything out.
 
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -15,9 +27,10 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::data::tokenizer as tok;
-use crate::eval::{SampleCfg, Sampler};
-use crate::runtime::{Buffer, Engine, ModelRuntime};
+use crate::eval::{sample_token_with, DecodeMode, SampleCfg, SampleScratch, Sampler};
+use crate::runtime::{Buffer, DecodeSession, Engine, ModelRuntime};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::util::StatsWindow;
 
 use super::telemetry::JsonlAppender;
@@ -39,8 +52,16 @@ pub enum ServeWeights {
 pub struct ServeCfg {
     pub sample: SampleCfg,
     pub weights: ServeWeights,
-    /// Flush a partial batch once its oldest request has waited this long.
+    /// Coalescing mode only: flush a partial batch once its oldest
+    /// request has waited this long (continuous admission is immediate).
     pub max_batch_delay_ms: f64,
+    /// Scheduling: `Auto` = continuous batching when the backend has
+    /// stateful decode, else coalescing; `Step` = require continuous;
+    /// `Full` = force the legacy coalescing path.
+    pub decode: DecodeMode,
+    /// Continuous mode: in-flight slot width (0 = `model.batch`). Unlike
+    /// the coalescing path, the width is not bound by the artifact batch.
+    pub max_slots: usize,
     /// Run one warm-up generation so compile/first-execute cost does not
     /// land on the first real request.
     pub warmup: bool,
@@ -54,15 +75,17 @@ impl Default for ServeCfg {
             sample: SampleCfg::default(),
             weights: ServeWeights::Random { seed: 3 },
             max_batch_delay_ms: 25.0,
+            decode: DecodeMode::Auto,
+            max_slots: 0,
             warmup: true,
             telemetry: None,
         }
     }
 }
 
-/// Pure batching policy: decides *when* a set of queued request ids forms
-/// a batch (full, deadline-expired, or forced). Kept free of PJRT so the
-/// coalescing rules are unit-testable without artifacts.
+/// Pure batching policy for the coalescing fallback: decides *when* a set
+/// of queued request ids forms a batch (full, deadline-expired, or
+/// forced). Kept free of any backend so the rules are unit-testable.
 pub struct Coalescer {
     batch: usize,
     max_delay: Duration,
@@ -110,6 +133,10 @@ pub struct ServeResponse {
     pub gen_tokens: usize,
     /// Submit-to-complete latency (includes queueing delay).
     pub latency_ms: f64,
+    /// Submit-to-first-generated-token. In the coalescing fallback tokens
+    /// only surface when the whole batch completes, so there it equals
+    /// `latency_ms`.
+    pub ttft_ms: f64,
 }
 
 /// Aggregate serving counters for one handle.
@@ -127,15 +154,31 @@ pub struct ServeStats {
     pub batches: usize,
     pub gen_tokens: usize,
     pub latencies_ms: StatsWindow,
-    /// Per-batch occupancy (submitted rows / model batch size).
+    /// Per-batch occupancy (submitted rows / model batch size) — the
+    /// coalescing path's fill metric.
     pub fill_ratios: StatsWindow,
-    /// Per-request time spent queued before its batch launched — the
-    /// coalescing cost. latency ≈ queue wait + execute.
+    /// Per-request time spent queued before its batch/slot launched — the
+    /// scheduling cost. latency ≈ queue wait + execute.
     pub queue_wait_ms: StatsWindow,
-    /// Per-request time inside the generation call that served it — the
-    /// compute cost (where `--threads` shows up).
+    /// Per-request time from admission to completion (coalescing: the
+    /// generation call that served it) — the compute cost.
     pub execute_ms: StatsWindow,
-    /// Time spent inside generation calls.
+    /// Per-request submit → first generated token. Continuous mode
+    /// measures the true first-token time (prefill + one sample); the
+    /// coalescing fallback can only observe batch completion, so there it
+    /// equals the request latency.
+    pub ttft_ms: StatsWindow,
+    /// Per-token gap between consecutive emitted tokens of one request
+    /// (continuous mode only).
+    pub inter_token_ms: StatsWindow,
+    /// Per-decode-round in-flight slots / slot width (continuous mode).
+    pub slot_occupancy: StatsWindow,
+    /// Requests admitted into a slot freed while other rows were still
+    /// mid-generation — the continuous scheduler doing its job.
+    pub mid_gen_admissions: usize,
+    /// Decode rounds executed by the continuous scheduler.
+    pub decode_rounds: usize,
+    /// Time spent inside prefill/step/generation calls.
     pub busy_secs: f64,
 }
 
@@ -167,18 +210,32 @@ impl ServeStats {
     }
 
     /// One-line report: req/s, gen-tok/s, latency percentiles (with the
-    /// queue-wait / execute split), batch fill ratio, compile cost. The
-    /// single source for CLI/example output. Throughput is over *busy*
-    /// time (inside generation); callers that want end-to-end throughput
-    /// divide by their own wall clock.
+    /// queue-wait / execute split), TTFT, and the schedule's utilization
+    /// metric — per-round slot occupancy for the continuous scheduler,
+    /// batch fill ratio for the coalescing path. The single source for
+    /// CLI/example output. Throughput is over *busy* time (inside
+    /// generation); callers that want end-to-end throughput divide by
+    /// their own wall clock.
     pub fn summary(&self) -> String {
+        let shape = if self.decode_rounds > 0 {
+            format!(
+                "{} reqs / {} rounds (+{} mid-gen)",
+                self.requests, self.decode_rounds, self.mid_gen_admissions
+            )
+        } else {
+            format!("{} reqs / {} batches", self.requests, self.batches)
+        };
+        let util = if self.decode_rounds > 0 {
+            format!("occ {:.2}", self.slot_occupancy.mean())
+        } else {
+            format!("fill {:.2}", self.mean_fill_ratio())
+        };
         format!(
-            "{:<10} {} reqs / {} batches | busy {:.1} req/s {:.0} gen-tok/s | \
+            "{:<10} {} | busy {:.1} req/s {:.0} gen-tok/s | \
              lat p50 {:.0}ms p95 {:.0}ms p99 {:.0}ms (wait p50 {:.0}ms exec p50 {:.0}ms) | \
-             fill {:.2} | compile {:.0}ms",
+             ttft p50 {:.0}ms | {} | compile {:.0}ms",
             self.fwd_key,
-            self.requests,
-            self.batches,
+            shape,
             self.req_per_sec(),
             self.gen_tok_per_sec(),
             self.latency_p(50.0),
@@ -186,7 +243,8 @@ impl ServeStats {
             self.latency_p(99.0),
             self.queue_wait_ms.percentile(50.0),
             self.execute_ms.percentile(50.0),
-            self.mean_fill_ratio(),
+            self.ttft_ms.percentile(50.0),
+            util,
             self.compile_ms,
         )
     }
@@ -197,21 +255,101 @@ struct Pending {
     submitted: Instant,
 }
 
+/// A request waiting for a continuous-scheduler slot.
+struct Queued {
+    id: u64,
+    prompt: Vec<i32>,
+    submitted: Instant,
+}
+
+/// One in-flight continuous-scheduler row.
+struct Slot {
+    id: u64,
+    /// Full seq_len row (prompt + generated so far, PAD tail).
+    row: Vec<i32>,
+    frontier: usize,
+    submitted: Instant,
+    admitted: Instant,
+    ttft_ms: f64,
+    last_token: Instant,
+    gen: usize,
+}
+
+enum Sched {
+    /// Slot-based continuous batching over a stateful decode session.
+    Continuous {
+        session: Box<dyn DecodeSession>,
+        slots: Vec<Option<Slot>>,
+        queue: VecDeque<Queued>,
+        rng: Rng,
+        scratch: SampleScratch,
+        logits: Vec<f32>,
+        /// Decode rounds since the scheduler was last fully idle — an
+        /// admission while this is non-zero (and another row is live) is
+        /// a mid-generation admission.
+        rounds_in_flight: usize,
+    },
+    /// Legacy run-to-completion batches over `Sampler::generate`.
+    /// (Boxed: the sampler embeds a full `ModelEntry`, which would
+    /// otherwise dwarf the `Continuous` variant.)
+    Coalescing {
+        sampler: Box<Sampler>,
+        coalescer: Coalescer,
+        pending: HashMap<u64, Pending>,
+    },
+}
+
 /// A live server over one (model, fwd artifact, weights) binding.
 pub struct ServeHandle<'e> {
     engine: &'e Engine,
-    sampler: Sampler,
+    seq_len: usize,
+    batch: usize,
+    sample: SampleCfg,
     weights: Buffer,
-    coalescer: Coalescer,
-    pending: HashMap<u64, Pending>,
+    sched: Sched,
     next_id: u64,
     completed: Vec<ServeResponse>,
     stats: ServeStats,
     telemetry: Option<JsonlAppender>,
 }
 
+/// Record one completed request into stats/completed/telemetry (free
+/// function so scheduler methods can call it while `sched` is borrowed).
+#[allow(clippy::too_many_arguments)]
+fn finish_request(
+    stats: &mut ServeStats,
+    completed: &mut Vec<ServeResponse>,
+    telemetry: &mut Option<JsonlAppender>,
+    id: u64,
+    row: Vec<i32>,
+    gen_tokens: usize,
+    submitted: Instant,
+    admitted: Instant,
+    ttft_ms: f64,
+    now: Instant,
+) {
+    let latency_ms = now.duration_since(submitted).as_secs_f64() * 1000.0;
+    let execute_ms = now.duration_since(admitted).as_secs_f64() * 1000.0;
+    stats.requests += 1;
+    stats.gen_tokens += gen_tokens;
+    stats.latencies_ms.push(latency_ms);
+    stats.execute_ms.push(execute_ms);
+    if let Some(tel) = telemetry.as_mut() {
+        let _ = tel.append(&Json::obj(vec![
+            ("event", Json::Str("request".into())),
+            ("id", Json::Num(id as f64)),
+            ("ttft_ms", Json::Num(ttft_ms)),
+            ("latency_ms", Json::Num(latency_ms)),
+            ("gen_tokens", Json::Num(gen_tokens as f64)),
+        ]));
+    }
+    completed.push(ServeResponse { id, row, gen_tokens, latency_ms, ttft_ms });
+}
+
 impl<'e> ServeHandle<'e> {
-    /// Build a server; compiles the fwd artifact and uploads weights.
+    /// Build a server; uploads weights, then opens the stateful decode
+    /// session (continuous batching) or compiles the fwd artifact for
+    /// batch coalescing, per `cfg.decode` and the backend's capability.
     /// (Library users normally go through `ModelSession::server`, which
     /// resolves `ServeWeights` first.)
     pub fn new(
@@ -225,12 +363,61 @@ impl<'e> ServeHandle<'e> {
         }
         let engine = rt.engine;
         let t0 = Instant::now();
-        let mut sampler = Sampler::new(rt, fwd_key, cfg.sample)?;
         let weights_buf = engine.upload_f32(weights, &[weights.len()])?;
-        if cfg.warmup {
-            sampler.generate(engine, &weights_buf, &[vec![tok::BOS]], None)?;
-            sampler.reseed(cfg.sample.seed);
+        let width = (if cfg.max_slots == 0 { rt.model.batch } else { cfg.max_slots }).max(1);
+
+        let mut sched = None;
+        if cfg.decode != DecodeMode::Full {
+            let opened = engine.open_decode(&rt.model, fwd_key, &weights_buf, width)?;
+            if let Some(mut session) = opened {
+                let mut rng = Rng::new(cfg.sample.seed ^ 0x5a5a_1234);
+                if cfg.warmup {
+                    // exercise weight pre-quantization + one prefill/sample
+                    let mut logits = Vec::new();
+                    session.prefill(0, &[tok::BOS], &mut logits)?;
+                    let mut scratch = SampleScratch::default();
+                    let _ = sample_token_with(&cfg.sample, &mut rng, &logits, &mut scratch);
+                    rng = Rng::new(cfg.sample.seed ^ 0x5a5a_1234);
+                }
+                sched = Some(Sched::Continuous {
+                    session,
+                    slots: (0..width).map(|_| None).collect(),
+                    queue: VecDeque::new(),
+                    rng,
+                    scratch: SampleScratch::default(),
+                    logits: Vec::new(),
+                    rounds_in_flight: 0,
+                });
+            } else if cfg.decode == DecodeMode::Step {
+                bail!(
+                    "serve decode mode 'step' requires a stateful-decode backend \
+                     (backend {} has none for {fwd_key:?})",
+                    engine.backend_kind()
+                );
+            }
         }
+        let sched = match sched {
+            Some(s) => s,
+            None => {
+                let mut sampler = Box::new(Sampler::new(rt, fwd_key, cfg.sample)?);
+                // the run-to-completion path is the stateless one by
+                // definition — don't step inside coalesced batches
+                sampler.set_decode_mode(DecodeMode::Full);
+                if cfg.warmup {
+                    sampler.generate(engine, &weights_buf, &[vec![tok::BOS]], None)?;
+                    sampler.reseed(cfg.sample.seed);
+                }
+                Sched::Coalescing {
+                    sampler,
+                    coalescer: Coalescer::new(
+                        rt.model.batch,
+                        Duration::from_secs_f64(cfg.max_batch_delay_ms.max(0.0) / 1000.0),
+                    ),
+                    pending: HashMap::new(),
+                }
+            }
+        };
+        let continuous = matches!(sched, Sched::Continuous { .. });
         let compile_ms = t0.elapsed().as_secs_f64() * 1000.0;
 
         // An explicitly configured path must open (the caller asked for the
@@ -244,20 +431,22 @@ impl<'e> ServeHandle<'e> {
                 ("event", Json::Str("compile".into())),
                 ("model", Json::Str(rt.model.name.clone())),
                 ("fwd", Json::Str(fwd_key.to_string())),
+                (
+                    "mode",
+                    Json::Str((if continuous { "continuous" } else { "coalescing" }).into()),
+                ),
+                ("slots", Json::Num(width as f64)),
                 ("compile_ms", Json::Num(compile_ms)),
             ]));
         }
 
-        let batch = rt.model.batch;
         Ok(ServeHandle {
             engine,
-            sampler,
+            seq_len: rt.model.seq_len,
+            batch: rt.model.batch,
+            sample: cfg.sample,
             weights: weights_buf,
-            coalescer: Coalescer::new(
-                batch,
-                Duration::from_secs_f64(cfg.max_batch_delay_ms.max(0.0) / 1000.0),
-            ),
-            pending: HashMap::new(),
+            sched,
             next_id: 0,
             completed: Vec::new(),
             stats: ServeStats { fwd_key: fwd_key.to_string(), compile_ms, ..Default::default() },
@@ -265,10 +454,25 @@ impl<'e> ServeHandle<'e> {
         })
     }
 
-    /// Enqueue one request; flushes inline whenever a full batch forms.
-    /// Returns the request id (matched by `ServeResponse::id`).
+    /// Whether requests run under the continuous (prefill/step) scheduler.
+    pub fn continuous(&self) -> bool {
+        matches!(self.sched, Sched::Continuous { .. })
+    }
+
+    /// Rows currently being generated (continuous mode; 0 otherwise).
+    pub fn in_flight(&self) -> usize {
+        match &self.sched {
+            Sched::Continuous { slots, .. } => slots.iter().filter(|s| s.is_some()).count(),
+            Sched::Coalescing { .. } => 0,
+        }
+    }
+
+    /// Enqueue one request. Continuous mode admits it into a free slot
+    /// immediately (prefill + first token); the coalescing fallback
+    /// flushes inline whenever a full batch forms. Returns the request id
+    /// (matched by `ServeResponse::id`).
     pub fn submit(&mut self, prompt: Vec<i32>) -> Result<u64> {
-        let seq_len = self.sampler.model.seq_len;
+        let seq_len = self.seq_len;
         if prompt.is_empty() || prompt.len() >= seq_len {
             bail!(
                 "prompt length {} out of range (need 1..{seq_len} to leave room to generate)",
@@ -278,55 +482,252 @@ impl<'e> ServeHandle<'e> {
         let id = self.next_id;
         self.next_id += 1;
         let now = Instant::now();
-        self.pending.insert(id, Pending { prompt, submitted: now });
-        self.coalescer.push(id, now);
-        self.dispatch(false)?;
+        match &mut self.sched {
+            Sched::Continuous { queue, .. } => {
+                queue.push_back(Queued { id, prompt, submitted: now });
+            }
+            Sched::Coalescing { coalescer, pending, .. } => {
+                pending.insert(id, Pending { prompt, submitted: now });
+                coalescer.push(id, now);
+            }
+        }
+        if self.continuous() {
+            self.admit()?;
+        } else {
+            self.dispatch(false)?;
+        }
         Ok(id)
     }
 
-    /// Flush any batch whose deadline has passed; returns requests run.
+    /// Advance the scheduler: continuous mode admits what it can and runs
+    /// one decode round; the coalescing fallback flushes any batch whose
+    /// deadline has passed. Returns requests completed (continuous) /
+    /// dispatched (coalescing) by this call.
     pub fn poll(&mut self) -> Result<usize> {
-        self.dispatch(false)
+        if self.continuous() {
+            let before = self.completed.len();
+            self.admit()?;
+            self.step_round()?;
+            self.admit()?;
+            Ok(self.completed.len() - before)
+        } else {
+            self.dispatch(false)
+        }
     }
 
-    /// Force out all queued requests (partial final batch included) and
-    /// take every completed response accumulated so far.
+    /// Run every queued and in-flight request to completion and take all
+    /// accumulated responses.
     pub fn drain(&mut self) -> Result<Vec<ServeResponse>> {
-        self.dispatch(true)?;
+        if self.continuous() {
+            loop {
+                self.admit()?;
+                if self.in_flight() == 0 {
+                    break;
+                }
+                self.step_round()?;
+            }
+        } else {
+            self.dispatch(true)?;
+        }
         Ok(std::mem::take(&mut self.completed))
     }
 
     pub fn queued(&self) -> usize {
-        self.coalescer.len()
+        match &self.sched {
+            Sched::Continuous { queue, .. } => queue.len(),
+            Sched::Coalescing { coalescer, .. } => coalescer.len(),
+        }
     }
 
     pub fn stats(&self) -> &ServeStats {
         &self.stats
     }
 
+    /// Admit queued requests into free slots: prefill the prompt, sample
+    /// the first token (TTFT), and either park the row in the slot or —
+    /// for EOS/length-1 completions — finish it on the spot.
+    fn admit(&mut self) -> Result<usize> {
+        let mut admitted = 0usize;
+        loop {
+            let Sched::Continuous {
+                session,
+                slots,
+                queue,
+                rng,
+                scratch,
+                logits,
+                rounds_in_flight,
+            } = &mut self.sched
+            else {
+                return Ok(admitted);
+            };
+            if queue.is_empty() {
+                return Ok(admitted);
+            }
+            let Some(slot_idx) = slots.iter().position(|s| s.is_none()) else {
+                return Ok(admitted);
+            };
+            let any_active = slots.iter().any(|s| s.is_some());
+            let q = queue.pop_front().expect("checked non-empty");
+            let t0 = Instant::now();
+            let np = q.prompt.len().min(self.seq_len - 1);
+            session.prefill(slot_idx, &q.prompt[..np], logits)?;
+            let next = sample_token_with(&self.sample, rng, logits, scratch);
+            let now = Instant::now();
+            let wait_ms = t0.duration_since(q.submitted).as_secs_f64() * 1000.0;
+            let ttft_ms = now.duration_since(q.submitted).as_secs_f64() * 1000.0;
+            self.stats.queue_wait_ms.push(wait_ms);
+            self.stats.ttft_ms.push(ttft_ms);
+            self.stats.busy_secs += now.duration_since(t0).as_secs_f64();
+            if any_active && *rounds_in_flight > 0 {
+                self.stats.mid_gen_admissions += 1;
+            }
+            admitted += 1;
+            let mut row = vec![tok::PAD; self.seq_len];
+            row[..np].copy_from_slice(&q.prompt[..np]);
+            if self.sample.max_new == 0 {
+                // degenerate cap: nothing may be emitted (matches the
+                // stateless path, whose decode loop never runs)
+                finish_request(
+                    &mut self.stats,
+                    &mut self.completed,
+                    &mut self.telemetry,
+                    q.id,
+                    row,
+                    0,
+                    q.submitted,
+                    t0,
+                    ttft_ms,
+                    now,
+                );
+                continue;
+            }
+            row[np] = next;
+            if next == tok::EOS || np + 1 >= self.seq_len || self.sample.max_new == 1 {
+                finish_request(
+                    &mut self.stats,
+                    &mut self.completed,
+                    &mut self.telemetry,
+                    q.id,
+                    row,
+                    1,
+                    q.submitted,
+                    t0,
+                    ttft_ms,
+                    now,
+                );
+            } else {
+                slots[slot_idx] = Some(Slot {
+                    id: q.id,
+                    row,
+                    frontier: np + 1,
+                    submitted: q.submitted,
+                    admitted: t0,
+                    ttft_ms,
+                    last_token: now,
+                    gen: 1,
+                });
+            }
+        }
+    }
+
+    /// One decode round: step every live slot by one token (ascending
+    /// slot order), finishing rows that hit EOS or the sequence end.
+    fn step_round(&mut self) -> Result<usize> {
+        let Sched::Continuous { session, slots, rng, scratch, logits, rounds_in_flight, .. } =
+            &mut self.sched
+        else {
+            return Ok(0);
+        };
+        let width = slots.len();
+        let active = slots.iter().filter(|s| s.is_some()).count();
+        if active == 0 {
+            return Ok(0);
+        }
+        let t0 = Instant::now();
+        let mut finished = 0usize;
+        for idx in 0..width {
+            let (last_tok, pos) = match slots[idx].as_ref() {
+                Some(s) => (s.row[s.frontier - 1], s.frontier),
+                None => continue,
+            };
+            session.step(idx, last_tok, logits)?;
+            let next = sample_token_with(&self.sample, rng, logits, scratch);
+            let now = Instant::now();
+            let slot = slots[idx].as_mut().expect("slot checked live above");
+            self.stats
+                .inter_token_ms
+                .push(now.duration_since(slot.last_token).as_secs_f64() * 1000.0);
+            slot.last_token = now;
+            slot.row[pos] = next;
+            slot.frontier += 1;
+            slot.gen += 1;
+            // same per-request cap as the stateless path: at most max_new
+            // generated tokens (EOS / sequence end finish earlier)
+            if next == tok::EOS || slot.frontier >= self.seq_len || slot.gen >= self.sample.max_new
+            {
+                let sl = slots[idx].take().expect("slot checked live above");
+                finish_request(
+                    &mut self.stats,
+                    &mut self.completed,
+                    &mut self.telemetry,
+                    sl.id,
+                    sl.row,
+                    sl.gen,
+                    sl.submitted,
+                    sl.admitted,
+                    sl.ttft_ms,
+                    now,
+                );
+                finished += 1;
+            }
+        }
+        *rounds_in_flight += 1;
+        self.stats.decode_rounds += 1;
+        self.stats.slot_occupancy.push(active as f64 / width as f64);
+        self.stats.busy_secs += Instant::now().duration_since(t0).as_secs_f64();
+        if slots.iter().all(|s| s.is_none()) {
+            *rounds_in_flight = 0;
+        }
+        Ok(finished)
+    }
+
+    /// Coalescing fallback: flush ready batches.
     fn dispatch(&mut self, force: bool) -> Result<usize> {
         let mut ran = 0;
-        while let Some(ids) = self.coalescer.take_ready(Instant::now(), force) {
+        loop {
+            let ids = {
+                let Sched::Coalescing { coalescer, .. } = &mut self.sched else {
+                    return Ok(ran);
+                };
+                match coalescer.take_ready(Instant::now(), force) {
+                    Some(ids) => ids,
+                    None => return Ok(ran),
+                }
+            };
             ran += ids.len();
             self.run_batch(&ids)?;
         }
-        Ok(ran)
     }
 
     fn run_batch(&mut self, ids: &[u64]) -> Result<()> {
         let t0 = Instant::now();
+        let engine = self.engine;
+        let Sched::Coalescing { sampler, pending, .. } = &mut self.sched else {
+            bail!("run_batch called on the continuous scheduler");
+        };
         // move prompts out of the pending map — no per-request cloning
         let mut prompts = Vec::with_capacity(ids.len());
         let mut submitted = Vec::with_capacity(ids.len());
         for id in ids {
-            let p = self.pending.remove(id).expect("queued id has a pending entry");
+            let p = pending.remove(id).expect("queued id has a pending entry");
             prompts.push(p.prompt);
             submitted.push(p.submitted);
         }
-        let rows = self.sampler.generate(self.engine, &self.weights, &prompts, None)?;
+        let rows = sampler.generate(engine, &self.weights, &prompts, None)?;
         let done = Instant::now();
         let batch_ms = done.duration_since(t0).as_secs_f64() * 1000.0;
-        let fill = ids.len() as f64 / self.sampler.model.batch as f64;
+        let fill = ids.len() as f64 / self.batch as f64;
 
         let mut batch_tokens = 0usize;
         let mut max_wait_ms = 0f64;
@@ -342,7 +743,15 @@ impl<'e> ServeHandle<'e> {
             self.stats.latencies_ms.push(latency_ms);
             self.stats.queue_wait_ms.push(wait_ms);
             self.stats.execute_ms.push(batch_ms);
-            self.completed.push(ServeResponse { id: ids[k], row, gen_tokens, latency_ms });
+            // first token surfaces only at batch completion here
+            self.stats.ttft_ms.push(latency_ms);
+            self.completed.push(ServeResponse {
+                id: ids[k],
+                row,
+                gen_tokens,
+                latency_ms,
+                ttft_ms: latency_ms,
+            });
         }
         self.stats.requests += ids.len();
         self.stats.batches += 1;
@@ -416,6 +825,50 @@ mod tests {
     }
 
     #[test]
+    fn coalescer_force_on_empty_queue_is_none() {
+        let now = Instant::now();
+        let mut c = Coalescer::new(4, Duration::from_millis(1));
+        assert_eq!(c.take_ready(now, true), None);
+        // still none after time passes with nothing queued
+        assert_eq!(c.take_ready(now + Duration::from_secs(5), true), None);
+    }
+
+    #[test]
+    fn coalescer_exact_deadline_boundary_flushes() {
+        // duration_since(oldest) == max_delay must flush (>=, not >)
+        let now = Instant::now();
+        let delay = Duration::from_millis(25);
+        let mut c = Coalescer::new(8, delay);
+        c.push(0, now);
+        assert_eq!(c.take_ready(now + delay - Duration::from_nanos(1), false), None);
+        assert_eq!(c.take_ready(now + delay, false), Some(vec![0]));
+    }
+
+    #[test]
+    fn coalescer_zero_delay_flushes_every_poll() {
+        let now = Instant::now();
+        let mut c = Coalescer::new(4, Duration::from_secs(0));
+        c.push(7, now);
+        assert_eq!(c.take_ready(now, false), Some(vec![7]));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn coalescer_overfull_queue_drains_batch_at_a_time() {
+        // more than one full batch queued and expired: each take_ready
+        // returns exactly one batch, oldest first
+        let now = Instant::now();
+        let mut c = Coalescer::new(3, Duration::from_secs(0));
+        for id in 0..7 {
+            c.push(id, now);
+        }
+        assert_eq!(c.take_ready(now, false), Some(vec![0, 1, 2]));
+        assert_eq!(c.take_ready(now, false), Some(vec![3, 4, 5]));
+        assert_eq!(c.take_ready(now, false), Some(vec![6]));
+        assert_eq!(c.take_ready(now, false), None);
+    }
+
+    #[test]
     fn fill_ratio_reports_partial_batches() {
         let mut stats = ServeStats::default();
         for f in [1.0, 1.0, 0.5] {
@@ -467,5 +920,31 @@ mod tests {
         let s = stats.summary();
         assert!(s.contains("wait p50 5ms"), "{s}");
         assert!(s.contains("exec p50 40ms"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_ttft_and_mode_specific_utilization() {
+        // coalescing shape: batches + fill
+        let mut stats = ServeStats::default();
+        stats.requests = 4;
+        stats.batches = 1;
+        stats.ttft_ms.push(12.0);
+        stats.fill_ratios.push(1.0);
+        let s = stats.summary();
+        assert!(s.contains("ttft p50 12ms"), "{s}");
+        assert!(s.contains("4 reqs / 1 batches"), "{s}");
+        assert!(s.contains("fill 1.00"), "{s}");
+        // continuous shape: rounds + occupancy + mid-gen admissions
+        let mut stats = ServeStats::default();
+        stats.requests = 3;
+        stats.decode_rounds = 5;
+        stats.mid_gen_admissions = 1;
+        stats.ttft_ms.push(3.0);
+        stats.slot_occupancy.push(0.5);
+        stats.slot_occupancy.push(1.0);
+        let s = stats.summary();
+        assert!(s.contains("3 reqs / 5 rounds (+1 mid-gen)"), "{s}");
+        assert!(s.contains("occ 0.75"), "{s}");
+        assert!(s.contains("ttft p50 3ms"), "{s}");
     }
 }

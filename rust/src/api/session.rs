@@ -18,7 +18,7 @@ use crate::data::tasks::Suite;
 use crate::data::{SourceKind, SourceSpec};
 use crate::eval::{run_suites, EvalCfg, SampleCfg};
 use crate::quant::PtqReport;
-use crate::runtime::{BackendKind, Engine, Manifest, ModelRuntime};
+use crate::runtime::{BackendKind, Buffer, DecodeSession, Engine, Manifest, ModelRuntime};
 use crate::util::json::Json;
 
 use super::method::{MethodRef, MethodRegistry, RecoveryMethod};
@@ -312,9 +312,24 @@ impl<'s> ModelSession<'s> {
         Ok(crate::coordinator::ptq_report(&self.rt, &teacher))
     }
 
-    /// Start a coalescing server over one fwd artifact, resolving the
-    /// weight source through this session (teacher cache, recovered
-    /// checkpoints, or random init).
+    /// Open the backend's stateful-decode capability for one fwd artifact
+    /// of this model: prefill-once-then-step over cached per-layer state
+    /// (`Ok(None)` when the backend only supports stateless decode). The
+    /// sampler and the serving scheduler use this internally; it is
+    /// exposed for callers building their own decode loops.
+    pub fn decode_session(
+        &self,
+        fwd_key: &str,
+        weights: &Buffer,
+        rows: usize,
+    ) -> Result<Option<Box<dyn DecodeSession>>> {
+        self.session.engine.open_decode(&self.rt.model, fwd_key, weights, rows)
+    }
+
+    /// Start a server over one fwd artifact — continuous batching when
+    /// the backend supports stateful decode (see `ServeCfg::decode`),
+    /// batch coalescing otherwise — resolving the weight source through
+    /// this session (teacher cache, recovered checkpoints, random init).
     pub fn server(&self, fwd_key: &str, cfg: &ServeCfg) -> Result<ServeHandle<'s>> {
         let weights = match &cfg.weights {
             ServeWeights::Random { seed } => crate::coordinator::init_params(&self.rt.model, *seed),

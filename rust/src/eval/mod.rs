@@ -6,5 +6,8 @@ pub mod sampler;
 pub mod suite;
 
 pub use metrics::{eval_distribution, DistMetrics};
-pub use sampler::{sample_token, sample_token_with, SampleCfg, SampleScratch, Sampler, TeacherGenerator};
+pub use sampler::{
+    sample_token, sample_token_with, DecodeMode, SampleCfg, SampleScratch, Sampler,
+    TeacherGenerator,
+};
 pub use suite::{run_suite, run_suites, EvalCfg, SuiteResult};

@@ -8,14 +8,29 @@
 //! each row's next token from the logits at its own frontier. Rows finish
 //! independently at EOS.
 //!
-//! Decode hot path: when the manifest carries a frontier-gather twin of
-//! the fwd artifact (`fwd_last_*`: fused forward + per-row dynamic slice
-//! of the logits at a frontier-index input), each step downloads `B·V`
-//! floats instead of `B·S·V`. Falls back transparently to the full
-//! download when the artifact is absent (older artifact builds, synthetic
-//! manifests) or when `QADX_FORCE_FULL_LOGITS=1` is set (operational
-//! escape hatch). Host-side scratch (token upload buffer, logits vector,
-//! frontier indices, sampling candidates) is reused across steps and calls.
+//! Decode hot path, in order of preference:
+//!
+//! 1. **Stateful prefill+step** ([`DecodeMode::Auto`], when the backend
+//!    advertises the [`DecodeSession`] capability): the prompt is consumed
+//!    once, per-layer state (attention K/V rows, SSM scan carries) is
+//!    cached, and every emitted token costs O(frontier) work plus a `V`
+//!    float transfer — no full (B, S) re-forward at all. Step logits are
+//!    bit-identical to the stateless path's frontier rows, and rows are
+//!    sampled in the same order with the same rng stream, so both paths
+//!    emit identical tokens (rust/tests/decode_equivalence.rs).
+//! 2. **Frontier gather**: when the manifest carries a frontier-gather
+//!    twin of the fwd artifact (`fwd_last_*`: fused forward + per-row
+//!    dynamic slice of the logits at a frontier-index input), each step
+//!    downloads `B·V` floats instead of `B·S·V`.
+//! 3. **Full logits**: the plain fwd artifact with a `B·S·V` download —
+//!    always available (PJRT artifact builds without the twin, or
+//!    `QADX_FORCE_FULL_LOGITS=1` as an operational escape hatch).
+//!
+//! `QADX_DECODE=auto|step|full` (or [`Sampler::set_decode_mode`]) pins the
+//! choice between 1 and 2/3; `step` errors when the backend lacks the
+//! capability instead of silently degrading. Host-side scratch (token
+//! upload buffer, logits vector, frontier indices, sampling candidates) is
+//! reused across steps and calls.
 
 use std::rc::Rc;
 
@@ -23,8 +38,61 @@ use anyhow::{bail, Result};
 
 use crate::data::sources::ResponseGenerator;
 use crate::data::tokenizer as tok;
-use crate::runtime::{frontier_key, Buffer, Engine, Executable, ModelEntry, ModelRuntime};
+use crate::runtime::{
+    frontier_key, Buffer, DecodeSession, Engine, Executable, ModelEntry, ModelRuntime,
+};
 use crate::util::rng::Rng;
+
+/// How `Sampler::generate` (and the serving scheduler) executes decoding.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Stateful prefill+step when the backend supports it, else the
+    /// stateless frontier/full path. The default.
+    #[default]
+    Auto,
+    /// Require stateful prefill+step; error when the backend lacks it.
+    Step,
+    /// Force the stateless path (frontier gather still applies unless
+    /// `force_full_logits` is set).
+    Full,
+}
+
+impl DecodeMode {
+    pub fn parse(s: &str) -> Result<DecodeMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(DecodeMode::Auto),
+            "step" => Ok(DecodeMode::Step),
+            "full" => Ok(DecodeMode::Full),
+            other => bail!("unknown decode mode {other:?} (known: auto, step, full)"),
+        }
+    }
+
+    /// The `QADX_DECODE` override, if set (empty counts as unset).
+    pub fn from_env() -> Result<Option<DecodeMode>> {
+        match std::env::var("QADX_DECODE") {
+            Ok(v) if !v.trim().is_empty() => Ok(Some(DecodeMode::parse(&v)?)),
+            _ => Ok(None),
+        }
+    }
+}
+
+impl std::fmt::Display for DecodeMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeMode::Auto => write!(f, "auto"),
+            DecodeMode::Step => write!(f, "step"),
+            DecodeMode::Full => write!(f, "full"),
+        }
+    }
+}
+
+impl std::str::FromStr for DecodeMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<DecodeMode> {
+        DecodeMode::parse(s)
+    }
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct SampleCfg {
@@ -56,6 +124,7 @@ impl SampleCfg {
 /// per call so the RL loop can sample from the live device state.
 pub struct Sampler {
     pub model: ModelEntry,
+    fwd_key: String,
     exe: Rc<Executable>,
     /// Frontier-gather twin (`fwd_last_*`); None when the manifest lacks it.
     exe_last: Option<Rc<Executable>>,
@@ -66,7 +135,14 @@ pub struct Sampler {
     logits_host: Vec<f32>,
     idx_host: Vec<i32>,
     force_full: bool,
+    decode_mode: DecodeMode,
 }
+
+/// The frontier-artifact load failure is a degraded-path notice, not a
+/// per-call event: samplers are constructed inside generate-heavy loops
+/// (RL rollouts, eval suites), and repeating the same warning every
+/// construction drowns real output. Reported once per process.
+static FRONTIER_LOAD_NOTICE: std::sync::Once = std::sync::Once::new();
 
 impl Sampler {
     /// `fwd_key`: "fwd_bf16" | "fwd_nvfp4" | "fwd_bf16_state" | ...
@@ -81,10 +157,13 @@ impl Sampler {
             Some(key) => match rt.exe(&key) {
                 Ok(e) => Some(e),
                 Err(err) => {
-                    eprintln!(
-                        "warning: frontier artifact for {fwd_key:?} failed to load \
-                         ({err:#}); falling back to full-logits decode"
-                    );
+                    FRONTIER_LOAD_NOTICE.call_once(|| {
+                        eprintln!(
+                            "notice: frontier artifact for {fwd_key:?} failed to load \
+                             ({err:#}); falling back to full-logits decode \
+                             (reported once per process)"
+                        );
+                    });
                     None
                 }
             },
@@ -92,6 +171,7 @@ impl Sampler {
         };
         Ok(Sampler {
             model: rt.model.clone(),
+            fwd_key: fwd_key.to_string(),
             exe,
             exe_last,
             cfg,
@@ -100,6 +180,7 @@ impl Sampler {
             logits_host: Vec::new(),
             idx_host: Vec::new(),
             force_full: false,
+            decode_mode: DecodeMode::from_env()?.unwrap_or(DecodeMode::Auto),
         })
     }
 
@@ -108,7 +189,8 @@ impl Sampler {
     }
 
     /// Force the full `B·S·V` logits download even when a frontier-gather
-    /// artifact is available (A/B benches, equivalence tests).
+    /// artifact is available (A/B benches, equivalence tests). Only
+    /// meaningful on the stateless path ([`DecodeMode::Full`]).
     pub fn force_full_logits(&mut self, force: bool) {
         self.force_full = force;
     }
@@ -117,6 +199,21 @@ impl Sampler {
     /// (`B·V` host transfer per emitted token instead of `B·S·V`).
     pub fn uses_frontier(&self) -> bool {
         !self.force_full && self.exe_last.is_some()
+    }
+
+    /// Pin how decoding executes (default [`DecodeMode::Auto`], or the
+    /// `QADX_DECODE` env override captured at construction).
+    pub fn set_decode_mode(&mut self, mode: DecodeMode) {
+        self.decode_mode = mode;
+    }
+
+    pub fn decode_mode(&self) -> DecodeMode {
+        self.decode_mode
+    }
+
+    /// The fwd artifact key this sampler decodes through.
+    pub fn fwd_key(&self) -> &str {
+        &self.fwd_key
     }
 
     /// Generate completions for up to `batch` prompts (shorter slices are
@@ -132,6 +229,21 @@ impl Sampler {
         let (b, s, v) = (self.model.batch, self.model.seq_len, self.model.vocab);
         if prompts.is_empty() || prompts.len() > b {
             bail!("need 1..={b} prompts, got {}", prompts.len());
+        }
+        // Stateful prefill+step path: per-layer state cached across steps,
+        // so each emitted token costs O(frontier) instead of a full (B, S)
+        // forward. Vision models stay on the stateless path (pixels).
+        if self.decode_mode != DecodeMode::Full && !self.model.vision {
+            match engine.open_decode(&self.model, &self.fwd_key, weights, prompts.len())? {
+                Some(session) => return self.generate_stepped(session, prompts),
+                None if self.decode_mode == DecodeMode::Step => bail!(
+                    "decode mode 'step' requested but backend {} has no stateful decode \
+                     for {:?}",
+                    engine.backend_kind(),
+                    self.fwd_key
+                ),
+                None => {}
+            }
         }
         let mut tokens = vec![tok::PAD; b * s];
         let mut frontier = vec![0usize; b]; // next position to fill per row
@@ -214,6 +326,67 @@ impl Sampler {
         Ok((0..prompts.len())
             .map(|i| tokens[i * s..(i + 1) * s].to_vec())
             .collect())
+    }
+
+    /// The stateful decode loop: round 0 prefills each row at its prompt
+    /// frontier, later rounds step one token per live row. Rows are
+    /// visited in ascending order every round and consume exactly one rng
+    /// draw each — the stateless path's sampling stream — and step logits
+    /// are bit-identical to its frontier rows, so both paths emit
+    /// identical tokens.
+    fn generate_stepped(
+        &mut self,
+        mut session: Box<dyn DecodeSession>,
+        prompts: &[Vec<i32>],
+    ) -> Result<Vec<Vec<i32>>> {
+        let (s, v) = (self.model.seq_len, self.model.vocab);
+        let n = prompts.len();
+        let mut tokens = vec![tok::PAD; n * s];
+        let mut frontier = vec![0usize; n];
+        let mut done = vec![false; n];
+        for (i, p) in prompts.iter().enumerate() {
+            if p.is_empty() {
+                bail!("empty prompt at row {i}");
+            }
+            let np = p.len().min(s - 1);
+            tokens[i * s..i * s + np].copy_from_slice(&p[..np]);
+            frontier[i] = np;
+        }
+        for round in 0..self.cfg.max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            for i in 0..n {
+                if done[i] {
+                    continue;
+                }
+                let pos = frontier[i];
+                if round == 0 {
+                    session.prefill(i, &tokens[i * s..i * s + pos], &mut self.logits_host)?;
+                } else {
+                    // the token sampled last round sits at pos - 1
+                    session.step(i, tokens[i * s + pos - 1], &mut self.logits_host)?;
+                }
+                if self.logits_host.len() != v {
+                    bail!(
+                        "stateful decode returned {} logits, expected vocab {v}",
+                        self.logits_host.len()
+                    );
+                }
+                let next = sample_token_with(
+                    &self.cfg,
+                    &mut self.rng,
+                    &self.logits_host,
+                    &mut self.scratch,
+                );
+                tokens[i * s + pos] = next;
+                frontier[i] += 1;
+                if next == tok::EOS || frontier[i] >= s {
+                    done[i] = true;
+                }
+            }
+        }
+        Ok((0..n).map(|i| tokens[i * s..(i + 1) * s].to_vec()).collect())
     }
 }
 
@@ -398,6 +571,18 @@ mod tests {
     fn sample(cfg: &SampleCfg, seed: u64, logits: &[f32]) -> i32 {
         let mut rng = Rng::new(seed);
         sample_token(cfg, &mut rng, logits)
+    }
+
+    #[test]
+    fn decode_mode_parses_and_round_trips() {
+        assert_eq!(DecodeMode::parse("auto").unwrap(), DecodeMode::Auto);
+        assert_eq!(DecodeMode::parse(" STEP ").unwrap(), DecodeMode::Step);
+        assert_eq!(DecodeMode::parse("full").unwrap(), DecodeMode::Full);
+        assert!(DecodeMode::parse("fast").is_err());
+        for m in [DecodeMode::Auto, DecodeMode::Step, DecodeMode::Full] {
+            assert_eq!(DecodeMode::parse(&m.to_string()).unwrap(), m);
+        }
+        assert_eq!(DecodeMode::default(), DecodeMode::Auto);
     }
 
     #[test]

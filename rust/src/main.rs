@@ -198,7 +198,9 @@ fn pilot(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Coalescing-server throughput benchmark over both forward paths.
+/// Serving throughput benchmark over both forward paths (continuous
+/// batching when the backend supports stateful decode; `--decode full`
+/// pins the legacy coalescing path for A/B comparison).
 fn serve_bench(args: &Args) -> anyhow::Result<()> {
     let sb = ServeBenchArgs::parse(args)?;
     let session = sb.session.build()?;
@@ -224,6 +226,8 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
         let mut cfg = ServeCfg::default();
         cfg.max_batch_delay_ms = sb.max_delay_ms;
         cfg.sample.max_new = sb.max_new;
+        cfg.decode = sb.decode;
+        cfg.max_slots = sb.slots;
         cfg.telemetry = sb.telemetry.clone();
         let mut server = ms.server(fwd_key, &cfg)?;
         let t0 = Instant::now();

@@ -96,6 +96,35 @@ impl std::fmt::Debug for Executable {
     }
 }
 
+/// One open stateful-decode binding: a fixed weight snapshot plus opaque
+/// per-layer state (attention K/V rows, SSM scan carries) for a set of
+/// independent row slots. `prefill` consumes a prompt once; every
+/// `step` then costs O(frontier) instead of a full (B, S) forward.
+///
+/// Rows are fully independent — one row's prompt or tokens never affect
+/// another row's logits — which is what lets a continuous-batching
+/// scheduler refill a freed slot mid-generation. Backends must keep step
+/// outputs bit-identical to the corresponding row of the stateless full
+/// forward (the contract rust/tests/decode_equivalence.rs asserts).
+pub trait DecodeSession {
+    /// Concurrent row slots this session tracks.
+    fn rows(&self) -> usize;
+
+    /// Max sequence positions one row can hold (the model's seq_len).
+    fn capacity(&self) -> usize;
+
+    /// Positions currently cached for `row`.
+    fn len(&self, row: usize) -> usize;
+
+    /// Reset `row`, consume `prompt` (1..=capacity tokens), and write the
+    /// vocab-sized logits row predicting the next token into `logits`.
+    fn prefill(&mut self, row: usize, prompt: &[i32], logits: &mut Vec<f32>) -> Result<()>;
+
+    /// Append `token` at `row`'s frontier and write the logits row
+    /// predicting the following position. Errors once the row is full.
+    fn step(&mut self, row: usize, token: i32, logits: &mut Vec<f32>) -> Result<()>;
+}
+
 /// One execution backend: compiles manifest artifacts and moves tensors.
 ///
 /// All handles are opaque; passing a handle created by a different backend
@@ -121,6 +150,26 @@ pub trait ExecBackend {
     /// Backends must error (not truncate, not pad) when the buffer holds a
     /// different number of elements than `expect_len`.
     fn download_f32(&self, buf: &Buffer, expect_len: usize, out: &mut Vec<f32>) -> Result<()>;
+
+    /// Probe/open the optional stateful-decode capability for one plain
+    /// `fwd_*` artifact, binding `weights` (params vector, or the packed
+    /// train state for `fwd_*_state` keys) and `rows` independent slots.
+    ///
+    /// `Ok(None)` means the capability is absent (this default): callers
+    /// fall back to the stateless frontier/full-logits decode path. A
+    /// malformed request (non-fwd key, missing artifact, bad weights
+    /// length) is an error, not `None`.
+    fn open_decode(
+        &self,
+        manifest: &Manifest,
+        model: &ModelEntry,
+        fwd_key: &str,
+        weights: &Buffer,
+        rows: usize,
+    ) -> Result<Option<Box<dyn DecodeSession>>> {
+        let _ = (manifest, model, fwd_key, weights, rows);
+        Ok(None)
+    }
 }
 
 /// Which execution backend an engine runs on.

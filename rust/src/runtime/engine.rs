@@ -21,7 +21,7 @@ use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
-use super::backend::{make_backend, BackendKind, Buffer, ExecBackend, Executable};
+use super::backend::{make_backend, BackendKind, Buffer, DecodeSession, ExecBackend, Executable};
 use super::manifest::{Manifest, ModelEntry};
 
 pub struct Engine {
@@ -103,6 +103,20 @@ impl Engine {
             }
         }
         self.backend.download_f32(buf, len, out)
+    }
+
+    /// Probe/open the backend's stateful-decode capability for one plain
+    /// `fwd_*` artifact (see [`DecodeSession`]). `Ok(None)` means the
+    /// backend only supports stateless decode — callers fall back to the
+    /// frontier/full-logits path.
+    pub fn open_decode(
+        &self,
+        model: &ModelEntry,
+        fwd_key: &str,
+        weights: &Buffer,
+        rows: usize,
+    ) -> Result<Option<Box<dyn DecodeSession>>> {
+        self.backend.open_decode(&self.manifest, model, fwd_key, weights, rows)
     }
 }
 

@@ -23,7 +23,9 @@ pub mod pjrt;
 pub mod reference;
 pub mod refmodel;
 
-pub use backend::{make_backend, BackendKind, Buffer, Dtype, ExecBackend, Executable};
+pub use backend::{
+    make_backend, BackendKind, Buffer, DecodeSession, Dtype, ExecBackend, Executable,
+};
 pub use engine::{scalar, Batch, DeviceState, Engine, ModelRuntime};
 pub use manifest::{
     frontier_key, synthetic_manifest_json, ArtifactDef, Manifest, ModelEntry, ParamDef, SynthSpec,

@@ -18,9 +18,9 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::backend::{Buffer, Dtype, ExecBackend, Executable};
+use super::backend::{Buffer, DecodeSession, Dtype, ExecBackend, Executable};
 use super::manifest::{ArgDef, Manifest, ModelEntry};
-use super::refmodel::{self, LossKind, RefCfg};
+use super::refmodel::{self, DecodeCtx, DecodeRow, LossKind, RefCfg};
 
 /// Host-side tensor payload of a reference-backend buffer.
 pub(crate) enum HostData {
@@ -204,6 +204,49 @@ fn out_f32(data: Vec<f32>, dims: Vec<usize>) -> Buffer {
     Buffer::new(Some(dims), Dtype::F32, Box::new(HostData::F32(data)))
 }
 
+/// The reference backend's stateful-decode session: a [`DecodeCtx`]
+/// (weight snapshot + pre-quantized GEMM weights + step scratch) plus one
+/// [`DecodeRow`] of per-layer state per slot. Step logits are
+/// bit-identical to the stateless full forward's frontier rows (the
+/// refmodel decode contract), and rows never interact — a freed slot can
+/// be refilled mid-generation.
+struct RefDecodeSession {
+    ctx: DecodeCtx,
+    rows: Vec<DecodeRow>,
+}
+
+impl DecodeSession for RefDecodeSession {
+    fn rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn capacity(&self) -> usize {
+        self.ctx.model().seq_len
+    }
+
+    fn len(&self, row: usize) -> usize {
+        self.rows.get(row).map(|r| r.len()).unwrap_or(0)
+    }
+
+    fn prefill(&mut self, row: usize, prompt: &[i32], logits: &mut Vec<f32>) -> Result<()> {
+        let n = self.rows.len();
+        let r = self
+            .rows
+            .get_mut(row)
+            .with_context(|| format!("decode row {row} out of range ({n} slots)"))?;
+        self.ctx.prefill(r, prompt, logits)
+    }
+
+    fn step(&mut self, row: usize, token: i32, logits: &mut Vec<f32>) -> Result<()> {
+        let n = self.rows.len();
+        let r = self
+            .rows
+            .get_mut(row)
+            .with_context(|| format!("decode row {row} out of range ({n} slots)"))?;
+        self.ctx.step(r, token, logits)
+    }
+}
+
 impl ExecBackend for ReferenceBackend {
     fn name(&self) -> &'static str {
         "reference"
@@ -355,6 +398,47 @@ impl ExecBackend for ReferenceBackend {
         out.extend_from_slice(v);
         Ok(())
     }
+
+    fn open_decode(
+        &self,
+        _manifest: &Manifest,
+        model: &ModelEntry,
+        fwd_key: &str,
+        weights: &Buffer,
+        rows: usize,
+    ) -> Result<Option<Box<dyn DecodeSession>>> {
+        let Some(rest) = fwd_key.strip_prefix("fwd_") else {
+            bail!("stateful decode needs a plain fwd_* artifact key, got {fwd_key:?}");
+        };
+        // The frontier-gather twin is itself a stateless artifact; vision
+        // models decode through the stateless path (pixels plumbing).
+        if rest.starts_with("last_") || model.vision {
+            return Ok(None);
+        }
+        // Mirror the stateless path's contract: decoding an undeclared
+        // artifact is an error there, so it is here too.
+        model.artifact(fwd_key)?;
+        let (fmt, from_state) = match rest.strip_suffix("_state") {
+            Some(f) => (f, true),
+            None => (rest, false),
+        };
+        let cfg = RefCfg::for_key_format(model, fmt)?;
+        let data = f32_data(weights, "decode weights")?;
+        if from_state {
+            if data.len() < model.param_count {
+                bail!(
+                    "state buffer has {} floats < param_count {}",
+                    data.len(),
+                    model.param_count
+                );
+            }
+        } else if data.len() != model.param_count {
+            bail!("params len {} != param_count {}", data.len(), model.param_count);
+        }
+        let ctx = DecodeCtx::new(cfg, data[..model.param_count].to_vec())?;
+        let rows = (0..rows.max(1)).map(|_| ctx.new_row()).collect();
+        Ok(Some(Box::new(RefDecodeSession { ctx, rows })))
+    }
 }
 
 #[cfg(test)]
@@ -434,6 +518,61 @@ mod tests {
         let be = ReferenceBackend::new();
         assert!(be.upload_f32(&[1.0; 3], &[2, 2]).is_err());
         assert!(be.upload_i32(&[1; 4], &[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn decode_capability_probe_rules() {
+        let manifest = synth_manifest("decode_probe");
+        let model = manifest.model("ref-b").unwrap().clone();
+        let be = ReferenceBackend::new();
+        let params = vec![0.01f32; model.param_count];
+        let w = be.upload_f32(&params, &[model.param_count]).unwrap();
+        // plain fwd keys open a session
+        let s = be.open_decode(&manifest, &model, "fwd_bf16", &w, 3).unwrap().unwrap();
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.capacity(), model.seq_len);
+        assert_eq!(s.len(0), 0);
+        // the frontier twin is stateless -> capability absent, not an error
+        assert!(be.open_decode(&manifest, &model, "fwd_last_bf16", &w, 1).unwrap().is_none());
+        // non-fwd keys and undeclared artifacts are errors
+        assert!(be.open_decode(&manifest, &model, "sft_bf16", &w, 1).is_err());
+        assert!(be.open_decode(&manifest, &model, "fwd_int4", &w, 1).is_err());
+        // wrong weights length is an error
+        let short = be.upload_f32(&[0.0; 4], &[4]).unwrap();
+        assert!(be.open_decode(&manifest, &model, "fwd_bf16", &short, 1).is_err());
+    }
+
+    #[test]
+    fn decode_from_state_key_slices_params() {
+        // fwd_bf16_state binds the packed train state; its decode must
+        // match fwd_bf16 bound to the bare params slice, bit for bit.
+        let manifest = synth_manifest("decode_state");
+        let model = manifest.model("ref-b").unwrap().clone();
+        let be = ReferenceBackend::new();
+        let mut state = vec![0f32; model.state_len];
+        for (i, v) in state.iter_mut().enumerate() {
+            *v = ((i * 37 % 101) as f32 - 50.0) * 1e-2;
+        }
+        let params = state[..model.param_count].to_vec();
+        let sbuf = be.upload_f32(&state, &[model.state_len]).unwrap();
+        let pbuf = be.upload_f32(&params, &[model.param_count]).unwrap();
+        let mut a = be.open_decode(&manifest, &model, "fwd_bf16_state", &sbuf, 1).unwrap().unwrap();
+        let mut b = be.open_decode(&manifest, &model, "fwd_bf16", &pbuf, 1).unwrap().unwrap();
+        let (mut la, mut lb) = (Vec::new(), Vec::new());
+        a.prefill(0, &[1, 5, 9], &mut la).unwrap();
+        b.prefill(0, &[1, 5, 9], &mut lb).unwrap();
+        assert_eq!(la.len(), model.vocab);
+        for (x, y) in la.iter().zip(&lb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        a.step(0, 7, &mut la).unwrap();
+        b.step(0, 7, &mut lb).unwrap();
+        for (x, y) in la.iter().zip(&lb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.len(0), 4);
+        // out-of-range rows error cleanly
+        assert!(a.prefill(5, &[1], &mut la).is_err());
     }
 
     #[test]

@@ -23,12 +23,14 @@
 //! or reduce over per-row values in row order — so every result is
 //! invariant under `QADX_THREADS` (asserted by rust/tests/threading.rs).
 
+use std::ops::Range;
+
 use anyhow::{bail, Context, Result};
 
 use super::engine::scalar;
 use super::manifest::{ModelEntry, ParamDef};
 use crate::quant::{baselines, nvfp4};
-use crate::util::gemm::{matmul, matmul_nt, matmul_tn};
+use crate::util::gemm::{matmul, matmul_into, matmul_nt, matmul_tn};
 use crate::util::pool;
 
 const ADAM_B1: f32 = 0.9;
@@ -1686,6 +1688,602 @@ pub fn fwd_last(
     Ok(out)
 }
 
+// ------------------------------------------------------ incremental decode
+//
+// The stateful prefill/step path behind the reference backend's
+// `DecodeSession` capability: one prefill builds the per-layer decode
+// state (attention K/V rows, the SSM scan carry) by harvesting a normal
+// `forward` pass over the prompt; each step then runs every layer at a
+// single position against that state — O(frontier) per token instead of a
+// full (B, S) forward.
+//
+// Bit-identity contract: every f32 op chain below is the corresponding
+// per-row chain of `forward` (same expressions, same ascending
+// contraction/position orders), and masked-out attention columns in the
+// full pass contribute exactly 0.0 to its softmax sums, so step logits
+// are bit-identical to the full forward's frontier rows (asserted by the
+// tests at the bottom of this file and rust/tests/decode_equivalence.rs).
+// Rows never interact, so a scheduler can admit a new row mid-generation
+// without disturbing in-flight ones.
+
+/// Per-layer decode state of one row.
+enum RowBlockState {
+    /// Cached post-GEMM K/V rows, `t * d` valid floats each.
+    Attn { k: Vec<f32>, v: Vec<f32> },
+    /// The scan carry h_{t-1}, `d` floats.
+    Ssm { h: Vec<f32> },
+    /// MoE blocks are position-local: nothing to carry.
+    Moe,
+}
+
+/// One row's incremental decode state (see [`DecodeCtx`]).
+pub struct DecodeRow {
+    blocks: Vec<RowBlockState>,
+    t: usize,
+}
+
+impl DecodeRow {
+    /// Positions consumed so far.
+    pub fn len(&self) -> usize {
+        self.t
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t == 0
+    }
+}
+
+/// Reusable per-step scratch (no allocation on the step hot path).
+#[derive(Default)]
+struct StepScratch {
+    x: Vec<f32>,
+    x1: Vec<f32>,
+    y: Vec<f32>,
+    xq: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    att: Vec<f32>,
+    o: Vec<f32>,
+    z3: Vec<f32>,
+    h1: Vec<f32>,
+    h1g: Vec<f32>,
+    tmp: Vec<f32>,
+    probs: Vec<f32>,
+    gate: Vec<f32>,
+    gaten: Vec<f32>,
+    moe_out: Vec<f32>,
+}
+
+/// One pre-resolved GEMM weight on the step path: a fake-quantized copy
+/// for quantized blocks (exactly what `Gemm::forward` recomputes on
+/// every call) or the raw parameter range.
+enum StepWeight {
+    Quantized(Vec<f32>),
+    Raw(Range<usize>),
+}
+
+impl StepWeight {
+    fn slice<'a>(&'a self, params: &'a [f32]) -> &'a [f32] {
+        match self {
+            StepWeight::Quantized(v) => v,
+            StepWeight::Raw(r) => &params[r.clone()],
+        }
+    }
+}
+
+/// Per-block weights resolved once at bind time, so the step hot path
+/// does no name formatting, no map lookups, no layout searches.
+enum BlockWeights {
+    Attn {
+        ln1: Range<usize>,
+        wq: StepWeight,
+        wk: StepWeight,
+        wv: StepWeight,
+        wo: StepWeight,
+        ln2: Range<usize>,
+        w1: StepWeight,
+        w2: StepWeight,
+    },
+    Ssm {
+        ln: Range<usize>,
+        win: StepWeight,
+        a_bias: Range<usize>,
+        wout: StepWeight,
+    },
+    Moe {
+        ln: Range<usize>,
+        router: Range<usize>,
+        /// (w1, w2) per expert, ascending expert order.
+        experts: Vec<(StepWeight, StepWeight)>,
+    },
+}
+
+/// Weights bound for incremental decode: the raw parameter snapshot plus
+/// per-block pre-resolved weight slices, with every quantized-GEMM
+/// weight fake-quantized once up front (the full forward re-quantizes
+/// weights on every call; a per-token re-quantization would dwarf the
+/// O(frontier) step itself).
+pub struct DecodeCtx {
+    cfg: RefCfg,
+    params: Vec<f32>,
+    embed: Range<usize>,
+    pos_emb: Range<usize>,
+    ln_f: Range<usize>,
+    head: StepWeight,
+    /// (block quantized?, resolved weights), one per model block.
+    blocks: Vec<(bool, BlockWeights)>,
+    scratch: StepScratch,
+}
+
+impl DecodeCtx {
+    /// Bind `params` for decode under `cfg`. Rejects vision models (the
+    /// stateless path handles pixels) and pre-quantizes every GEMM weight
+    /// of the quantized blocks along its contraction axis — identical to
+    /// what `Gemm::forward` computes per call.
+    pub fn new(cfg: RefCfg, params: Vec<f32>) -> Result<DecodeCtx> {
+        let m = &cfg.model;
+        if m.vision {
+            bail!("incremental decode does not cover vision models");
+        }
+        if params.len() != m.param_count {
+            bail!("params len {} != param_count {}", params.len(), m.param_count);
+        }
+        if m.d_model == 0 || m.n_heads == 0 || m.d_model % m.n_heads != 0 {
+            bail!("model {}: d_model {} not divisible by n_heads {}", m.name, m.d_model, m.n_heads);
+        }
+        let d = m.d_model;
+        let ff = m.d_ff;
+        let fmt = cfg.weights_fmt;
+        // Resolve a parameter's range in the flat vector (bounds-checked
+        // once here; the step path then indexes directly).
+        let prange = |name: &str| -> Result<Range<usize>> {
+            let def = cfg.pdef(name)?;
+            if def.offset + def.size > params.len() {
+                bail!(
+                    "parameter {name:?} [{}..{}] out of range of params len {}",
+                    def.offset,
+                    def.offset + def.size,
+                    params.len()
+                );
+            }
+            Ok(def.offset..def.offset + def.size)
+        };
+        // Resolve one GEMM weight: pre-fake-quantize it for quantized
+        // blocks, keep the raw range otherwise.
+        let wres = |name: &str, k: usize, n: usize, quant: bool| -> Result<StepWeight> {
+            let r = prange(name)?;
+            if r.end - r.start != k * n {
+                bail!("weight {name:?} has {} floats, expected {k}x{n}", r.end - r.start);
+            }
+            if quant {
+                let mut out = Vec::with_capacity(k * n);
+                quant_weight_into(&params[r], k, n, fmt, &mut out)?;
+                Ok(StepWeight::Quantized(out))
+            } else {
+                Ok(StepWeight::Raw(r))
+            }
+        };
+        let quant_expert =
+            |r: Range<usize>, k: usize, n: usize, quant: bool| -> Result<StepWeight> {
+                if quant {
+                    let mut out = Vec::with_capacity(k * n);
+                    quant_weight_into(&params[r], k, n, fmt, &mut out)?;
+                    Ok(StepWeight::Quantized(out))
+                } else {
+                    Ok(StepWeight::Raw(r))
+                }
+            };
+        let mut blocks = Vec::with_capacity(m.blocks.len());
+        for (i, kind) in m.blocks.iter().enumerate() {
+            let quant = cfg.block_quantized(i, kind);
+            let pre = format!("b{i}.");
+            let bw = match kind.as_str() {
+                "attn" => BlockWeights::Attn {
+                    ln1: prange(&format!("{pre}ln1"))?,
+                    wq: wres(&format!("{pre}wq"), d, d, quant)?,
+                    wk: wres(&format!("{pre}wk"), d, d, quant)?,
+                    wv: wres(&format!("{pre}wv"), d, d, quant)?,
+                    wo: wres(&format!("{pre}wo"), d, d, quant)?,
+                    ln2: prange(&format!("{pre}ln2"))?,
+                    w1: wres(&format!("{pre}w1"), d, ff, quant)?,
+                    w2: wres(&format!("{pre}w2"), ff, d, quant)?,
+                },
+                "ssm" => BlockWeights::Ssm {
+                    ln: prange(&format!("{pre}ln"))?,
+                    win: wres(&format!("{pre}win"), d, 3 * d, quant)?,
+                    a_bias: prange(&format!("{pre}a_bias"))?,
+                    wout: wres(&format!("{pre}wout"), d, d, quant)?,
+                },
+                "moe" => {
+                    let e = cfg.n_experts()?;
+                    if e < 2 {
+                        bail!("moe block needs n_experts >= 2, got {e}");
+                    }
+                    let router = prange(&format!("{pre}router"))?;
+                    if router.end - router.start != d * e {
+                        bail!("router size {} != d*E {}", router.end - router.start, d * e);
+                    }
+                    let w1 = prange(&format!("{pre}w1"))?;
+                    let w2 = prange(&format!("{pre}w2"))?;
+                    if w1.end - w1.start != e * d * ff || w2.end - w2.start != e * ff * d {
+                        bail!("moe expert weights have unexpected sizes");
+                    }
+                    let mut experts = Vec::with_capacity(e);
+                    for ei in 0..e {
+                        let r1 = w1.start + ei * d * ff..w1.start + (ei + 1) * d * ff;
+                        let r2 = w2.start + ei * ff * d..w2.start + (ei + 1) * ff * d;
+                        experts.push((
+                            quant_expert(r1, d, ff, quant)?,
+                            quant_expert(r2, ff, d, quant)?,
+                        ));
+                    }
+                    BlockWeights::Moe { ln: prange(&format!("{pre}ln"))?, router, experts }
+                }
+                other => bail!("unknown block kind {other:?} in model {}", m.name),
+            };
+            blocks.push((quant, bw));
+        }
+        let embed = prange("embed")?;
+        if embed.end - embed.start != m.vocab * d {
+            bail!("embed param size {} != vocab*d {}", embed.end - embed.start, m.vocab * d);
+        }
+        let pos_emb = prange("pos_emb")?;
+        let ln_f = prange("ln_f")?;
+        let head = wres("head", d, m.vocab, cfg.head_quantized())?;
+        Ok(DecodeCtx {
+            cfg,
+            params,
+            embed,
+            pos_emb,
+            ln_f,
+            head,
+            blocks,
+            scratch: StepScratch::default(),
+        })
+    }
+
+    pub fn model(&self) -> &ModelEntry {
+        &self.cfg.model
+    }
+
+    /// A fresh (empty) row for this model's block stack.
+    pub fn new_row(&self) -> DecodeRow {
+        let m = &self.cfg.model;
+        let d = m.d_model;
+        let cap = m.seq_len * d;
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|(_, bw)| match bw {
+                BlockWeights::Attn { .. } => RowBlockState::Attn {
+                    k: Vec::with_capacity(cap),
+                    v: Vec::with_capacity(cap),
+                },
+                BlockWeights::Ssm { .. } => RowBlockState::Ssm { h: vec![0f32; d] },
+                BlockWeights::Moe { .. } => RowBlockState::Moe,
+            })
+            .collect();
+        DecodeRow { blocks, t: 0 }
+    }
+
+    /// Reset `row` to `prompt` and write the logits row predicting the
+    /// next token. Runs one normal `forward` over the prompt and harvests
+    /// its caches into the row state (K/V rows come straight from the
+    /// forward's per-position GEMM outputs; the scan carry is the last
+    /// scan state), so prefill logits are the full forward's by
+    /// construction.
+    pub fn prefill(
+        &mut self,
+        row: &mut DecodeRow,
+        prompt: &[i32],
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
+        let m = &self.cfg.model;
+        let (d, v, s) = (m.d_model, m.vocab, m.seq_len);
+        if prompt.is_empty() || prompt.len() > s {
+            bail!("prefill needs 1..={s} prompt tokens, got {}", prompt.len());
+        }
+        let l = prompt.len();
+        let fwd = forward(&self.cfg, &self.params, prompt, 1, l, None)?;
+        if row.blocks.len() != fwd.caches.len() {
+            bail!("decode row block count {} != model {}", row.blocks.len(), fwd.caches.len());
+        }
+        for (bs, cache) in row.blocks.iter_mut().zip(&fwd.caches) {
+            match (bs, cache) {
+                (RowBlockState::Attn { k, v }, BlockCache::Attn { gk, gv, .. }) => {
+                    k.clear();
+                    k.extend_from_slice(&gk.out);
+                    v.clear();
+                    v.extend_from_slice(&gv.out);
+                }
+                (RowBlockState::Ssm { h }, BlockCache::Ssm { h: hs, .. }) => {
+                    h.copy_from_slice(&hs[(l - 1) * d..l * d]);
+                }
+                (RowBlockState::Moe, BlockCache::Moe { .. }) => {}
+                _ => bail!("decode row block kinds diverged from the model"),
+            }
+        }
+        row.t = l;
+        logits.clear();
+        logits.extend_from_slice(&fwd.logits[(l - 1) * v..l * v]);
+        Ok(())
+    }
+
+    /// Append `token` at the row frontier and write the next logits row.
+    pub fn step(&mut self, row: &mut DecodeRow, token: i32, logits: &mut Vec<f32>) -> Result<()> {
+        let DecodeCtx { cfg, params, embed, pos_emb, ln_f, head, blocks, scratch } = self;
+        step_position(
+            cfg,
+            params,
+            embed.clone(),
+            pos_emb.clone(),
+            ln_f.clone(),
+            head,
+            blocks,
+            scratch,
+            row,
+            token,
+            logits,
+        )
+    }
+}
+
+/// One single-row GEMM on the step path: fake-quantize the activation row
+/// when the block is quantized, multiply against the (pre-quantized)
+/// weight via the shared blocked kernel — per-element chains are
+/// `matmul`'s (ascending contraction order), so bits match the full pass.
+fn step_gemm(
+    x: &[f32],
+    w: &[f32],
+    k: usize,
+    n: usize,
+    quant: bool,
+    acts_fmt: Format,
+    xq: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    if w.len() != k * n {
+        bail!("step gemm weight len {} != {k}x{n}", w.len());
+    }
+    let xrow: &[f32] = if quant {
+        quant_acts_into(x, 1, k, acts_fmt, xq)?;
+        xq
+    } else {
+        x
+    };
+    out.clear();
+    out.resize(n, 0.0);
+    matmul_into(xrow, w, out, 1, k, n);
+    Ok(())
+}
+
+/// rmsnorm of one row (the `rmsnorm_fwd` per-row chain).
+fn step_rmsnorm(x: &[f32], scale: &[f32], out: &mut Vec<f32>) {
+    let d = x.len();
+    out.clear();
+    out.resize(d, 0.0);
+    let mut ms = 0f32;
+    for &v in x {
+        ms += v * v;
+    }
+    let r = 1.0 / (ms / d as f32 + RMS_EPS).sqrt();
+    for j in 0..d {
+        out[j] = x[j] * r * scale[j];
+    }
+}
+
+/// tanh-approximate gelu of one row (the `gelu_fwd` per-element chain).
+fn step_gelu(x: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(x.len(), 0.0);
+    for (j, &v) in x.iter().enumerate() {
+        let t = (SQRT_2_OVER_PI * (v + 0.044715 * v * v * v)).tanh();
+        out[j] = 0.5 * v * (1.0 + t);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn step_position(
+    cfg: &RefCfg,
+    params: &[f32],
+    embed: Range<usize>,
+    pos_emb: Range<usize>,
+    ln_f: Range<usize>,
+    head: &StepWeight,
+    blocks: &[(bool, BlockWeights)],
+    sc: &mut StepScratch,
+    row: &mut DecodeRow,
+    token: i32,
+    logits: &mut Vec<f32>,
+) -> Result<()> {
+    let m = &cfg.model;
+    let (d, v, s) = (m.d_model, m.vocab, m.seq_len);
+    let t = row.t;
+    if t >= s {
+        bail!("decode row is full ({t} of {s} positions)");
+    }
+    let h = m.n_heads;
+    let hd = d / h;
+    let ff = m.d_ff;
+    let acts = cfg.acts_fmt;
+
+    // Embedding + positional row (ids clamped like an XLA gather).
+    let embed = &params[embed];
+    let pos_emb = &params[pos_emb];
+    if pos_emb.len() < (t + 1) * d {
+        bail!("pos_emb size {} < position {t} x d {d}", pos_emb.len());
+    }
+    let id = (token.max(0) as usize).min(v.saturating_sub(1));
+    sc.x.clear();
+    sc.x.resize(d, 0.0);
+    let src = &embed[id * d..(id + 1) * d];
+    let pe = &pos_emb[t * d..(t + 1) * d];
+    for j in 0..d {
+        sc.x[j] = src[j] + pe[j];
+    }
+
+    for (i, ((quant, bw), state)) in blocks.iter().zip(row.blocks.iter_mut()).enumerate() {
+        let quant = *quant;
+        match (bw, state) {
+            (
+                BlockWeights::Attn { ln1, wq, wk, wv, wo, ln2, w1, w2 },
+                RowBlockState::Attn { k: kc, v: vc },
+            ) => {
+                step_rmsnorm(&sc.x, &params[ln1.clone()], &mut sc.y);
+                step_gemm(&sc.y, wq.slice(params), d, d, quant, acts, &mut sc.xq, &mut sc.q)?;
+                step_gemm(&sc.y, wk.slice(params), d, d, quant, acts, &mut sc.xq, &mut sc.k)?;
+                step_gemm(&sc.y, wv.slice(params), d, d, quant, acts, &mut sc.xq, &mut sc.v)?;
+                kc.extend_from_slice(&sc.k);
+                vc.extend_from_slice(&sc.v);
+                // Scores over the cached prefix + softmax + AV, one head
+                // at a time — each chain is the full pass's row chain
+                // (ascending j; masked columns there are exact 0.0).
+                let inv_sqrt = 1.0 / (hd as f32).sqrt();
+                sc.o.clear();
+                sc.o.resize(d, 0.0);
+                sc.att.resize(t + 1, 0.0);
+                for head in 0..h {
+                    let qh = &sc.q[head * hd..(head + 1) * hd];
+                    for j in 0..=t {
+                        let kh = &kc[j * d + head * hd..j * d + (head + 1) * hd];
+                        let mut sdot = 0f32;
+                        for c in 0..hd {
+                            sdot += qh[c] * kh[c];
+                        }
+                        sc.att[j] = sdot * inv_sqrt;
+                    }
+                    let att = &mut sc.att[..=t];
+                    let mx = att.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut z = 0f32;
+                    for a in att.iter_mut() {
+                        let e = (*a - mx).exp();
+                        *a = e;
+                        z += e;
+                    }
+                    for a in att.iter_mut() {
+                        *a /= z;
+                    }
+                    let orow = &mut sc.o[head * hd..(head + 1) * hd];
+                    for j in 0..=t {
+                        let pj = sc.att[j];
+                        let vv = &vc[j * d + head * hd..j * d + (head + 1) * hd];
+                        for c in 0..hd {
+                            orow[c] += pj * vv[c];
+                        }
+                    }
+                }
+                step_gemm(&sc.o, wo.slice(params), d, d, quant, acts, &mut sc.xq, &mut sc.tmp)?;
+                sc.x1.clear();
+                sc.x1.resize(d, 0.0);
+                for j in 0..d {
+                    sc.x1[j] = sc.x[j] + sc.tmp[j];
+                }
+                step_rmsnorm(&sc.x1, &params[ln2.clone()], &mut sc.y);
+                step_gemm(&sc.y, w1.slice(params), d, ff, quant, acts, &mut sc.xq, &mut sc.h1)?;
+                step_gelu(&sc.h1, &mut sc.h1g);
+                step_gemm(&sc.h1g, w2.slice(params), ff, d, quant, acts, &mut sc.xq, &mut sc.tmp)?;
+                for j in 0..d {
+                    sc.x[j] = sc.x1[j] + sc.tmp[j];
+                }
+            }
+            (BlockWeights::Ssm { ln, win, a_bias, wout }, RowBlockState::Ssm { h: hstate }) => {
+                step_rmsnorm(&sc.x, &params[ln.clone()], &mut sc.y);
+                step_gemm(&sc.y, win.slice(params), d, 3 * d, quant, acts, &mut sc.xq, &mut sc.z3)?;
+                let a_bias = &params[a_bias.clone()];
+                // h_t = a ⊙ h_{t-1} + (1-a) ⊙ v (the scan's exact chain;
+                // the carry starts at 0.0 like the full pass's ti == 0).
+                for j in 0..d {
+                    let av = sigmoid(sc.z3[2 * d + j] + a_bias[j]);
+                    let bv = (1.0 - av) * sc.z3[j];
+                    hstate[j] = av * hstate[j] + bv;
+                }
+                sc.o.clear();
+                sc.o.resize(d, 0.0);
+                for j in 0..d {
+                    let g = sc.z3[d + j];
+                    sc.o[j] = hstate[j] * g * sigmoid(g);
+                }
+                step_gemm(&sc.o, wout.slice(params), d, d, quant, acts, &mut sc.xq, &mut sc.tmp)?;
+                for j in 0..d {
+                    sc.x[j] += sc.tmp[j];
+                }
+            }
+            (BlockWeights::Moe { ln, router, experts }, RowBlockState::Moe) => {
+                let e = experts.len();
+                step_rmsnorm(&sc.x, &params[ln.clone()], &mut sc.y);
+                // Router stays high-precision (matmul's ascending-k chain).
+                let router = &params[router.clone()];
+                sc.tmp.clear();
+                sc.tmp.resize(e, 0.0);
+                matmul_into(&sc.y, router, &mut sc.tmp, 1, d, e);
+                // softmax (the `softmax_rows` row chain)
+                sc.probs.clear();
+                sc.probs.resize(e, 0.0);
+                let mx = sc.tmp.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0f32;
+                for j in 0..e {
+                    let ev = (sc.tmp[j] - mx).exp();
+                    sc.probs[j] = ev;
+                    z += ev;
+                }
+                for p in sc.probs.iter_mut() {
+                    *p /= z;
+                }
+                // Top-2 threshold gating (model.py's two-pass form).
+                let mut m1 = 0usize;
+                for j in 1..e {
+                    if sc.probs[j] > sc.probs[m1] {
+                        m1 = j;
+                    }
+                }
+                let mut thresh = f32::NEG_INFINITY;
+                for (j, &p) in sc.probs.iter().enumerate() {
+                    if j != m1 && p > thresh {
+                        thresh = p;
+                    }
+                }
+                sc.gate.clear();
+                sc.gate.resize(e, 0.0);
+                let mut zi = 0f32;
+                for j in 0..e {
+                    if sc.probs[j] >= thresh {
+                        sc.gate[j] = sc.probs[j];
+                        zi += sc.probs[j];
+                    }
+                }
+                sc.gaten.clear();
+                sc.gaten.resize(e, 0.0);
+                for j in 0..e {
+                    sc.gaten[j] = sc.gate[j] / (zi + 1e-9);
+                }
+                sc.moe_out.clear();
+                sc.moe_out.resize(d, 0.0);
+                for (ei, (w1, w2)) in experts.iter().enumerate() {
+                    let w1 = w1.slice(params);
+                    step_gemm(&sc.y, w1, d, ff, quant, acts, &mut sc.xq, &mut sc.h1)?;
+                    step_gelu(&sc.h1, &mut sc.h1g);
+                    let w2 = w2.slice(params);
+                    step_gemm(&sc.h1g, w2, ff, d, quant, acts, &mut sc.xq, &mut sc.tmp)?;
+                    let gn = sc.gaten[ei];
+                    for j in 0..d {
+                        sc.moe_out[j] += gn * sc.tmp[j];
+                    }
+                }
+                for j in 0..d {
+                    sc.x[j] += sc.moe_out[j];
+                }
+            }
+            _ => bail!("decode row block kind mismatch at b{i}"),
+        }
+    }
+
+    step_rmsnorm(&sc.x, &params[ln_f], &mut sc.y);
+    step_gemm(&sc.y, head.slice(params), d, v, cfg.head_quantized(), acts, &mut sc.xq, logits)?;
+    row.t = t + 1;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2094,6 +2692,149 @@ mod tests {
         for (i, (x, y)) in a.iter().zip(&b).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(), "kl state[{i}]: {x} vs {y}");
         }
+    }
+
+    /// Replay one token row through prefill+step and assert every step's
+    /// logits are bit-identical to the full forward's row at the same
+    /// position — the decode-cache contract, per block stack and format.
+    fn assert_stepped_matches_full(blocks: &[&str], quant: &str, prefix: usize, seed: u64) {
+        let cfg = synth_cfg(blocks, quant, false);
+        let m = cfg.model.clone();
+        let (s, v) = (m.seq_len, m.vocab);
+        let params = rand_params(&cfg, seed);
+        let (tokens, _, _) = rand_batch(&cfg, seed ^ 0x77);
+        let row_tokens = &tokens[..s]; // first batch row
+        let full = fwd_logits(&cfg, &params, row_tokens, 1, s, None).unwrap();
+
+        let mut ctx = DecodeCtx::new(cfg.clone(), params.clone()).unwrap();
+        let mut row = ctx.new_row();
+        let mut logits = Vec::new();
+        let prefix = prefix.clamp(1, s - 1);
+        ctx.prefill(&mut row, &row_tokens[..prefix], &mut logits).unwrap();
+        assert_eq!(row.len(), prefix);
+        let check = |logits: &[f32], pos: usize| {
+            let want = &full[pos * v..(pos + 1) * v];
+            for (j, (a, b)) in logits.iter().zip(want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "blocks {blocks:?} quant {quant} pos {pos} logit {j}: {a} vs {b}"
+                );
+            }
+        };
+        check(&logits, prefix - 1);
+        for pos in prefix..s {
+            ctx.step(&mut row, row_tokens[pos], &mut logits).unwrap();
+            assert_eq!(row.len(), pos + 1);
+            check(&logits, pos);
+        }
+        // the row is now full: one more step must error, not wrap
+        assert!(ctx.step(&mut row, 1, &mut logits).is_err());
+    }
+
+    #[test]
+    fn stepped_decode_bit_identical_attn() {
+        assert_stepped_matches_full(&["attn", "attn"], "none", 2, 101);
+        assert_stepped_matches_full(&["attn", "attn"], "nvfp4", 3, 103);
+    }
+
+    #[test]
+    fn stepped_decode_bit_identical_ssm() {
+        assert_stepped_matches_full(&["ssm", "ssm"], "none", 1, 105);
+        assert_stepped_matches_full(&["ssm"], "nvfp4", 2, 107);
+    }
+
+    #[test]
+    fn stepped_decode_bit_identical_hybrid() {
+        assert_stepped_matches_full(&["attn", "ssm", "moe"], "none", 2, 109);
+        assert_stepped_matches_full(&["ssm", "moe", "attn"], "nvfp4", 4, 111);
+    }
+
+    #[test]
+    fn stepped_decode_single_token_prefill() {
+        // prefill of exactly one token, stepping the whole rest of the row
+        assert_stepped_matches_full(&["attn", "ssm"], "nvfp4", 1, 113);
+    }
+
+    #[test]
+    fn stepped_decode_is_thread_count_invariant() {
+        let run = |threads: usize| {
+            crate::util::pool::with_threads(threads, || {
+                let cfg = synth_cfg(&["attn", "ssm", "moe"], "nvfp4", false);
+                let m = cfg.model.clone();
+                let params = rand_params(&cfg, 115);
+                let (tokens, _, _) = rand_batch(&cfg, 117);
+                let mut ctx = DecodeCtx::new(cfg, params).unwrap();
+                let mut row = ctx.new_row();
+                let mut logits = Vec::new();
+                let mut all = Vec::new();
+                ctx.prefill(&mut row, &tokens[..2], &mut logits).unwrap();
+                all.extend_from_slice(&logits);
+                for pos in 2..m.seq_len {
+                    ctx.step(&mut row, tokens[pos], &mut logits).unwrap();
+                    all.extend_from_slice(&logits);
+                }
+                all
+            })
+        };
+        let one = run(1);
+        let four = run(4);
+        for (i, (a, b)) in one.iter().zip(&four).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "stepped logits[{i}]");
+        }
+    }
+
+    #[test]
+    fn decode_rows_are_independent() {
+        // Interleaving a second row's prefill/steps must not perturb the
+        // first row's logits — the invariant continuous batching needs.
+        let cfg = synth_cfg(&["attn", "ssm"], "nvfp4", false);
+        let m = cfg.model.clone();
+        let params = rand_params(&cfg, 121);
+        let (tokens, _, _) = rand_batch(&cfg, 123);
+        let (a_toks, b_toks) = (&tokens[..m.seq_len], &tokens[m.seq_len..2 * m.seq_len]);
+
+        let mut solo_ctx = DecodeCtx::new(cfg.clone(), params.clone()).unwrap();
+        let mut solo = solo_ctx.new_row();
+        let mut solo_logits = Vec::new();
+        solo_ctx.prefill(&mut solo, &a_toks[..3], &mut solo_logits).unwrap();
+        let mut solo_all = solo_logits.clone();
+        for pos in 3..m.seq_len {
+            solo_ctx.step(&mut solo, a_toks[pos], &mut solo_logits).unwrap();
+            solo_all.extend_from_slice(&solo_logits);
+        }
+
+        let mut ctx = DecodeCtx::new(cfg, params).unwrap();
+        let (mut ra, mut rb) = (ctx.new_row(), ctx.new_row());
+        let mut logits = Vec::new();
+        ctx.prefill(&mut ra, &a_toks[..3], &mut logits).unwrap();
+        let mut inter_all = logits.clone();
+        for pos in 3..m.seq_len {
+            // admit/step the other row between every step of row a
+            if pos == 4 {
+                ctx.prefill(&mut rb, &b_toks[..2], &mut logits).unwrap();
+            } else if !rb.is_empty() && rb.len() < m.seq_len {
+                ctx.step(&mut rb, b_toks[rb.len()], &mut logits).unwrap();
+            }
+            ctx.step(&mut ra, a_toks[pos], &mut logits).unwrap();
+            inter_all.extend_from_slice(&logits);
+        }
+        for (i, (x, y)) in solo_all.iter().zip(&inter_all).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "interleaved logits[{i}]");
+        }
+    }
+
+    #[test]
+    fn decode_ctx_rejects_bad_shapes() {
+        let cfg = synth_cfg(&["attn"], "none", false);
+        assert!(DecodeCtx::new(cfg.clone(), vec![0.0; 3]).is_err());
+        let params = rand_params(&cfg, 131);
+        let mut ctx = DecodeCtx::new(cfg, params).unwrap();
+        let mut row = ctx.new_row();
+        let mut logits = Vec::new();
+        assert!(ctx.prefill(&mut row, &[], &mut logits).is_err());
+        let too_long = vec![1i32; ctx.model().seq_len + 1];
+        assert!(ctx.prefill(&mut row, &too_long, &mut logits).is_err());
     }
 
     #[test]

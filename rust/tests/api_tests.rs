@@ -8,8 +8,9 @@ mod common;
 use std::path::Path;
 use std::rc::Rc;
 
-use qadx::api::{RecoveryMethod, ServeCfg, Session};
+use qadx::api::{DecodeMode, RecoveryMethod, ServeCfg, ServeWeights, Session};
 use qadx::coordinator::{checkpoint, RecoveryCfg};
+use qadx::data::tokenizer as tok;
 use qadx::data::{SourceSpec, Suite};
 use qadx::runtime::BackendKind;
 use qadx::util::json::Json;
@@ -122,6 +123,9 @@ fn seventh_method_is_trait_impl_plus_registration() {
 }
 
 /// The full coalescing-server behavior contract, shared by both tiers.
+/// Pinned to `DecodeMode::Full` so the run-to-completion batch path is
+/// what actually runs even on backends with stateful decode (the
+/// continuous scheduler has its own contract tests below).
 fn assert_serve_coalesces(session: &Session, model: &str) {
     let ms = session.model(model).unwrap();
     let b = ms.rt.model.batch;
@@ -130,7 +134,9 @@ fn assert_serve_coalesces(session: &Session, model: &str) {
     let mut cfg = ServeCfg::default();
     cfg.sample.max_new = 2;
     cfg.max_batch_delay_ms = 1e9; // only fullness / drain flush batches
+    cfg.decode = DecodeMode::Full;
     let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+    assert!(!server.continuous(), "decode=full must select the coalescing path");
     for i in 0..n {
         server.submit(vec![1, 4 + (i % 8) as i32, 3]).unwrap();
     }
@@ -157,6 +163,9 @@ fn assert_serve_coalesces(session: &Session, model: &str) {
     // and execute times non-negative, and wait + execute ≈ latency.
     assert_eq!(st.queue_wait_ms.count(), n as u64);
     assert_eq!(st.execute_ms.count(), n as u64);
+    // batch mode surfaces tokens only at completion: TTFT == latency
+    assert_eq!(st.ttft_ms.count(), n as u64);
+    assert_eq!(st.decode_rounds, 0);
     assert!(st.queue_wait_ms.iter().all(|w| w >= 0.0));
     assert!(st.execute_ms.iter().all(|e| e > 0.0));
     let lat_sum: f64 = st.latencies_ms.iter().sum();
@@ -177,13 +186,15 @@ fn serve_handle_coalesces_hermetically() {
 
 #[test]
 fn serve_quantized_fwd_path_hermetically() {
-    // The nvfp4 serving path end-to-end: quantized forward + frontier
-    // decode under the coalescer.
+    // The nvfp4 serving path end-to-end: quantized prefill/step decode
+    // under the continuous scheduler (Auto resolves to continuous on the
+    // reference backend).
     let (session, _runs) = session_with("serve_ref_q", common::small_spec("size-serveq"));
     let ms = session.model("size-serveq").unwrap();
     let mut cfg = ServeCfg::default();
     cfg.sample.max_new = 2;
     let mut server = ms.server("fwd_nvfp4", &cfg).unwrap();
+    assert!(server.continuous(), "reference backend should serve continuously by default");
     for i in 0..3 {
         server.submit(vec![1, 5 + i, 3]).unwrap();
     }
@@ -191,6 +202,217 @@ fn serve_quantized_fwd_path_hermetically() {
     assert_eq!(responses.len(), 3);
     assert!(server.stats().gen_tokens > 0);
     common::cleanup("serve_ref_q");
+}
+
+/// Build the deterministic "clock" model (no blocks, one-hot positional
+/// rows, identity head): under greedy decode, position p always emits a
+/// filler token below position 6 and EOS at/after it, so a row with
+/// prompt length L generates exactly 7 - L tokens. Finish times are a
+/// pure function of prompt length — ideal for scheduler assertions.
+fn clock_spec_and_params() -> (qadx::runtime::SynthSpec, Vec<f32>) {
+    let mut spec = common::small_spec("clock-serve");
+    spec.blocks = vec![];
+    spec.n_experts = 0;
+    spec.d_model = 16;
+    spec.vocab = 16;
+    spec.seq_len = 12;
+    spec.batch = 4;
+    let entry = spec.entry();
+    let (d, v, s) = (entry.d_model, entry.vocab, entry.seq_len);
+    let mut params = vec![0f32; entry.param_count];
+    for def in &entry.params {
+        let slice = &mut params[def.offset..def.offset + def.size];
+        match def.name.as_str() {
+            "pos_emb" => {
+                for t in 0..s {
+                    let g = if t >= 5 { tok::EOS as usize } else { 5 };
+                    slice[t * d + g] = 1.0;
+                }
+            }
+            "ln_f" => slice.fill(1.0),
+            "head" => {
+                for j in 0..d {
+                    slice[j * v + j] = 1.0;
+                }
+            }
+            _ => {}
+        }
+    }
+    (spec, params)
+}
+
+#[test]
+fn continuous_scheduler_admits_mid_generation() {
+    // Two slots, three requests with finish times fixed by the clock
+    // model: A (prompt len 4) EOSes two rounds before B (len 2), freeing
+    // a slot while B is still generating — C must be admitted into it
+    // before the batch drains, and every row must still be exact.
+    let (spec, params) = clock_spec_and_params();
+    let (session, _runs) = session_with("serve_cont", spec);
+    let ms = session.model("clock-serve").unwrap();
+    let mut cfg = ServeCfg::default();
+    cfg.sample = qadx::eval::SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 8, seed: 0 };
+    cfg.weights = ServeWeights::Params(params);
+    cfg.max_slots = 2;
+    let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+    assert!(server.continuous());
+
+    let a = server.submit(vec![1, 4, 4, 4]).unwrap(); // gen 3 (EOS at pos 6)
+    let b = server.submit(vec![1, 4]).unwrap(); //        gen 5 (EOS at pos 6)
+    assert_eq!(server.in_flight(), 2, "both requests admitted immediately");
+    let c = server.submit(vec![1, 4, 4, 4]).unwrap(); // queued: slots full
+    assert_eq!(server.queued(), 1);
+
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), 3, "every request completes");
+    let by_id: std::collections::HashMap<u64, _> =
+        responses.iter().map(|r| (r.id, r)).collect();
+    assert_eq!(by_id[&a].gen_tokens, 3);
+    assert_eq!(by_id[&b].gen_tokens, 5);
+    assert_eq!(by_id[&c].gen_tokens, 3);
+    // exact rows: prompt, fillers, EOS at position 6, PAD tail
+    let mut want_a = vec![tok::PAD; 12];
+    want_a[..4].copy_from_slice(&[1, 4, 4, 4]);
+    want_a[4] = 5;
+    want_a[5] = 5;
+    want_a[6] = tok::EOS;
+    assert_eq!(by_id[&a].row, want_a);
+    assert_eq!(by_id[&c].row, want_a);
+
+    let st = server.stats();
+    assert_eq!(st.requests, 3);
+    assert!(
+        st.mid_gen_admissions >= 1,
+        "C must take A's freed slot mid-generation: {}",
+        st.summary()
+    );
+    // A and C each need 2 post-admission rounds, B needs 4; C rides in
+    // A's freed slot, so the whole mix drains in exactly 4 rounds.
+    assert_eq!(st.decode_rounds, 4, "{}", st.summary());
+    assert_eq!(st.ttft_ms.count(), 3, "one TTFT sample per request");
+    // inter-token gaps: one per generated token after the first of each
+    // request -> gen_tokens - requests
+    assert_eq!(st.inter_token_ms.count(), (st.gen_tokens - st.requests) as u64);
+    assert_eq!(st.slot_occupancy.count(), st.decode_rounds as u64);
+    // per-request TTFT is at most the full latency
+    for r in &responses {
+        assert!(r.ttft_ms <= r.latency_ms + 1e-6, "ttft {} > latency {}", r.ttft_ms, r.latency_ms);
+    }
+    let s = st.summary();
+    assert!(s.contains("ttft p50"), "{s}");
+    assert!(s.contains("mid-gen"), "{s}");
+    common::cleanup("serve_cont");
+}
+
+#[test]
+fn continuous_scheduler_honors_max_new() {
+    // The clock model would keep emitting fillers until EOS at position
+    // 6; with max_new = 2 the request must stop after exactly 2 tokens
+    // (the stateless path's cap), with no EOS in the row.
+    let (spec, params) = clock_spec_and_params();
+    let (session, _runs) = session_with("serve_cap", spec);
+    let ms = session.model("clock-serve").unwrap();
+    let mut cfg = ServeCfg::default();
+    cfg.sample = qadx::eval::SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 2, seed: 0 };
+    cfg.weights = ServeWeights::Params(params);
+    let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+    assert!(server.continuous());
+    server.submit(vec![1, 4]).unwrap();
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), 1);
+    assert_eq!(responses[0].gen_tokens, 2);
+    let mut want = vec![tok::PAD; 12];
+    want[..2].copy_from_slice(&[1, 4]);
+    want[2] = 5;
+    want[3] = 5;
+    assert_eq!(responses[0].row, want);
+    common::cleanup("serve_cap");
+}
+
+#[test]
+fn continuous_scheduler_poll_advances_one_round() {
+    let (spec, params) = clock_spec_and_params();
+    let (session, _runs) = session_with("serve_poll", spec);
+    let ms = session.model("clock-serve").unwrap();
+    let mut cfg = ServeCfg::default();
+    cfg.sample = qadx::eval::SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 8, seed: 0 };
+    cfg.weights = ServeWeights::Params(params);
+    cfg.max_slots = 1;
+    let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+    // prompt len 4 -> first token at admission, then 2 more rounds to EOS
+    server.submit(vec![1, 4, 4, 4]).unwrap();
+    assert_eq!(server.in_flight(), 1);
+    assert_eq!(server.poll().unwrap(), 0, "round 1: still generating");
+    assert_eq!(server.poll().unwrap(), 1, "round 2 hits EOS");
+    assert_eq!(server.in_flight(), 0);
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), 1);
+    assert_eq!(responses[0].gen_tokens, 3);
+    common::cleanup("serve_poll");
+}
+
+#[test]
+fn continuous_serve_telemetry_carries_ttft_fields() {
+    let (spec, params) = clock_spec_and_params();
+    let artifacts = common::write_artifacts("serve_tel", &[spec]);
+    let runs = common::tmp_runs("serve_tel");
+    let session = Session::builder()
+        .artifacts_dir(&artifacts)
+        .runs_dir(&runs)
+        .backend(BackendKind::Reference)
+        .build()
+        .unwrap();
+    let ms = session.model("clock-serve").unwrap();
+    let tel_path = runs.join("serve_events.jsonl");
+    let mut cfg = ServeCfg::default();
+    cfg.sample = qadx::eval::SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 8, seed: 0 };
+    cfg.weights = ServeWeights::Params(params);
+    cfg.telemetry = Some(tel_path.clone());
+    let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+    server.submit(vec![1, 4, 4, 4]).unwrap();
+    server.submit(vec![1, 4]).unwrap();
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), 2);
+    drop(server);
+    let log = std::fs::read_to_string(&tel_path).unwrap();
+    assert!(log.contains("\"event\":\"compile\""), "{log}");
+    assert!(log.contains("\"mode\":\"continuous\""), "{log}");
+    let request_events: Vec<&str> =
+        log.lines().filter(|l| l.contains("\"event\":\"request\"")).collect();
+    assert_eq!(request_events.len(), 2, "{log}");
+    for ev in request_events {
+        assert!(ev.contains("\"ttft_ms\""), "{ev}");
+        assert!(ev.contains("\"latency_ms\""), "{ev}");
+        assert!(ev.contains("\"gen_tokens\""), "{ev}");
+    }
+    common::cleanup("serve_tel");
+}
+
+#[test]
+fn serve_decode_step_mode_is_honored_and_full_mode_keeps_batches() {
+    let (session, _runs) = session_with("serve_modes", common::small_spec("size-modes"));
+    let ms = session.model("size-modes").unwrap();
+    // step: required and available on the reference backend
+    let mut cfg = ServeCfg::default();
+    cfg.sample.max_new = 2;
+    cfg.decode = DecodeMode::Step;
+    let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+    assert!(server.continuous());
+    server.submit(vec![1, 5, 3]).unwrap();
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), 1);
+    assert!(server.stats().decode_rounds >= 1 || responses[0].gen_tokens == 1);
+    // full: the coalescing path, batches counted
+    let mut cfg = ServeCfg::default();
+    cfg.sample.max_new = 2;
+    cfg.decode = DecodeMode::Full;
+    let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+    assert!(!server.continuous());
+    server.submit(vec![1, 5, 3]).unwrap();
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), 1);
+    assert_eq!(server.stats().batches, 1);
+    common::cleanup("serve_modes");
 }
 
 #[test]

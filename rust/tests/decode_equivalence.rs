@@ -1,0 +1,298 @@
+//! Step-vs-full decode equivalence: `Sampler::generate` must emit
+//! bit-identical token rows whether it runs the stateful prefill+step
+//! path (`DecodeMode::Step`) or the stateless full-forward path
+//! (`DecodeMode::Full`) — across block stacks (attn-only, ssm, hybrid
+//! attn+ssm+moe), precisions (bf16/nvfp4), sampling regimes (greedy and
+//! top-p), EOS finishing rows mid-batch, prompt lengths straddling
+//! seq_len, and thread counts.
+//!
+//! Entirely hermetic: reference backend over synthetic manifests. CI pins
+//! `QADX_THREADS=2` on this suite so the parallel compute core is what
+//! the stateless side exercises; the 1-vs-4 thread test pins both counts
+//! explicitly on top.
+
+mod common;
+
+use qadx::coordinator::init_params;
+use qadx::data::tokenizer as tok;
+use qadx::eval::{DecodeMode, SampleCfg, Sampler};
+use qadx::runtime::{ModelRuntime, SynthSpec};
+use qadx::util::pool;
+
+fn spec_with_blocks(name: &str, blocks: &[&str]) -> SynthSpec {
+    let mut spec = common::small_spec(name);
+    spec.blocks = blocks.iter().map(|s| s.to_string()).collect();
+    spec.n_experts = if blocks.contains(&"moe") { 3 } else { 0 };
+    spec
+}
+
+/// Decode the same prompts under Step and Full modes and assert the
+/// emitted rows are identical (same tokens, same EOS/PAD structure).
+fn assert_step_matches_full(
+    tag: &str,
+    blocks: &[&str],
+    fwd_key: &str,
+    cfg: SampleCfg,
+    prompts: &[Vec<i32>],
+) -> Vec<Vec<i32>> {
+    let engine = common::reference_engine(tag, &[spec_with_blocks("eq-sim", blocks)]);
+    let rt = ModelRuntime::new(&engine, "eq-sim").unwrap();
+    let params = init_params(&rt.model, 41);
+    let p_buf = rt.upload_params(&params).unwrap();
+
+    let mut stepped = Sampler::new(&rt, fwd_key, cfg).unwrap();
+    stepped.set_decode_mode(DecodeMode::Step);
+    let mut full = Sampler::new(&rt, fwd_key, cfg).unwrap();
+    full.set_decode_mode(DecodeMode::Full);
+
+    let a = stepped.generate(&engine, &p_buf, prompts, None).unwrap();
+    let b = full.generate(&engine, &p_buf, prompts, None).unwrap();
+    assert_eq!(a, b, "step vs full diverged ({blocks:?}, {fwd_key}, {cfg:?})");
+    common::cleanup(tag);
+    a
+}
+
+fn varied_prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|i| {
+            let mut p = vec![tok::BOS];
+            p.extend((0..=i).map(|j| 4 + ((i * 5 + j) % 8) as i32));
+            p
+        })
+        .collect()
+}
+
+#[test]
+fn step_matches_full_attn_only() {
+    let prompts = varied_prompts(3);
+    for fwd_key in ["fwd_bf16", "fwd_nvfp4"] {
+        assert_step_matches_full(
+            "deq_attn",
+            &["attn", "attn"],
+            fwd_key,
+            SampleCfg { temperature: 0.8, top_p: 0.9, max_new: 8, seed: 11 },
+            &prompts,
+        );
+        assert_step_matches_full(
+            "deq_attn_g",
+            &["attn", "attn"],
+            fwd_key,
+            SampleCfg::greedy(),
+            &prompts,
+        );
+    }
+}
+
+#[test]
+fn step_matches_full_ssm() {
+    let prompts = varied_prompts(2);
+    for fwd_key in ["fwd_bf16", "fwd_nvfp4"] {
+        assert_step_matches_full(
+            "deq_ssm",
+            &["ssm", "ssm"],
+            fwd_key,
+            SampleCfg { temperature: 0.7, top_p: 0.95, max_new: 8, seed: 13 },
+            &prompts,
+        );
+    }
+}
+
+#[test]
+fn step_matches_full_hybrid() {
+    let prompts = varied_prompts(4);
+    for (tag, cfg) in [
+        ("deq_hyb_tp", SampleCfg { temperature: 1.0, top_p: 0.85, max_new: 10, seed: 17 }),
+        ("deq_hyb_g", SampleCfg::greedy()),
+    ] {
+        for fwd_key in ["fwd_bf16", "fwd_nvfp4"] {
+            assert_step_matches_full(tag, &["attn", "ssm", "moe"], fwd_key, cfg, &prompts);
+        }
+    }
+}
+
+#[test]
+fn step_matches_full_state_weights_key() {
+    // fwd_bf16_state binds the packed train state as the weights buffer
+    let engine = common::reference_engine("deq_state", &[spec_with_blocks("eq-sim", &["attn"])]);
+    let rt = ModelRuntime::new(&engine, "eq-sim").unwrap();
+    let params = init_params(&rt.model, 43);
+    let mut state = vec![0f32; rt.model.state_len];
+    state[..rt.model.param_count].copy_from_slice(&params);
+    let s_buf = engine.upload_f32(&state, &[rt.model.state_len]).unwrap();
+    let cfg = SampleCfg { temperature: 0.6, top_p: 0.95, max_new: 6, seed: 19 };
+    let prompts = varied_prompts(2);
+    let mut stepped = Sampler::new(&rt, "fwd_bf16_state", cfg).unwrap();
+    stepped.set_decode_mode(DecodeMode::Step);
+    let mut full = Sampler::new(&rt, "fwd_bf16_state", cfg).unwrap();
+    full.set_decode_mode(DecodeMode::Full);
+    let a = stepped.generate(&engine, &s_buf, &prompts, None).unwrap();
+    let b = full.generate(&engine, &s_buf, &prompts, None).unwrap();
+    assert_eq!(a, b, "state-key decode diverged");
+    common::cleanup("deq_state");
+}
+
+#[test]
+fn prompt_lengths_straddling_seq_len() {
+    // prompts at s-1 (one slot left) and past s (must truncate to s-1 and
+    // still emit exactly one token), mixed with a short prompt
+    let engine =
+        common::reference_engine("deq_straddle", &[spec_with_blocks("eq-sim", &["attn", "ssm"])]);
+    let rt = ModelRuntime::new(&engine, "eq-sim").unwrap();
+    let s = rt.model.seq_len;
+    let params = init_params(&rt.model, 47);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let prompts = vec![
+        vec![5i32; s - 1],     // exactly one position left
+        vec![6i32; s + 3],     // longer than the row: truncated to s-1
+        vec![tok::BOS, 7, 8],  // plenty of room
+    ];
+    let cfg = SampleCfg { temperature: 0.9, top_p: 0.9, max_new: 6, seed: 23 };
+    let mut stepped = Sampler::new(&rt, "fwd_nvfp4", cfg).unwrap();
+    stepped.set_decode_mode(DecodeMode::Step);
+    let mut full = Sampler::new(&rt, "fwd_nvfp4", cfg).unwrap();
+    full.set_decode_mode(DecodeMode::Full);
+    let a = stepped.generate(&engine, &p_buf, &prompts, None).unwrap();
+    let b = full.generate(&engine, &p_buf, &prompts, None).unwrap();
+    assert_eq!(a, b, "straddling prompts diverged");
+    for row in &a {
+        assert_eq!(row.len(), s);
+    }
+    // the (truncated) prompts survive verbatim; only position s-1 was free
+    assert_eq!(&a[0][..s - 1], &vec![5i32; s - 1][..]);
+    assert_eq!(&a[1][..s - 1], &vec![6i32; s - 1][..]);
+    common::cleanup("deq_straddle");
+}
+
+/// A deterministic "clock" model: no blocks, zero embeddings, one-hot
+/// positional rows, identity head — the greedy token emitted at position
+/// p is a pure function of p (a filler token below position K, EOS at and
+/// after). Rows with different prompt lengths therefore hit EOS in
+/// different decode rounds, exercising EOS-mid-batch deterministically.
+fn clock_spec() -> SynthSpec {
+    let mut spec = common::small_spec("clock-sim");
+    spec.blocks = vec![];
+    spec.n_experts = 0;
+    spec.d_model = 16;
+    spec.vocab = 16;
+    spec.seq_len = 12;
+    spec.batch = 4;
+    spec
+}
+
+/// K = 6: positions 0..5 point at token 5, positions >= 5 point at EOS.
+fn clock_params(spec: &SynthSpec) -> Vec<f32> {
+    let entry = spec.entry();
+    let (d, v, s) = (entry.d_model, entry.vocab, entry.seq_len);
+    assert_eq!(d, v, "clock model needs an identity head");
+    let mut params = vec![0f32; entry.param_count];
+    for def in &entry.params {
+        let slice = &mut params[def.offset..def.offset + def.size];
+        match def.name.as_str() {
+            "pos_emb" => {
+                for t in 0..s {
+                    let g = if t >= 5 { tok::EOS as usize } else { 5 };
+                    slice[t * d + g] = 1.0;
+                }
+            }
+            "ln_f" => slice.fill(1.0),
+            "head" => {
+                for j in 0..d {
+                    slice[j * v + j] = 1.0;
+                }
+            }
+            _ => {} // embed stays zero: emitted tokens never feed back
+        }
+    }
+    params
+}
+
+#[test]
+fn eos_mid_batch_rows_finish_independently_and_identically() {
+    let spec = clock_spec();
+    let params = clock_params(&spec);
+    let engine = common::reference_engine("deq_clock", &[spec]);
+    let rt = ModelRuntime::new(&engine, "clock-sim").unwrap();
+    let p_buf = rt.upload_params(&params).unwrap();
+    // prompt lengths 2 and 4: the long prompt reaches position K first,
+    // so it EOSes at round 3 while the short row keeps generating to
+    // round 5 — EOS mid-batch, deterministic under greedy decode.
+    let prompts = vec![vec![1i32, 4], vec![1i32, 4, 4, 4]];
+    let cfg = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 8, seed: 0 };
+    let mut stepped = Sampler::new(&rt, "fwd_bf16", cfg).unwrap();
+    stepped.set_decode_mode(DecodeMode::Step);
+    let mut full = Sampler::new(&rt, "fwd_bf16", cfg).unwrap();
+    full.set_decode_mode(DecodeMode::Full);
+    let a = stepped.generate(&engine, &p_buf, &prompts, None).unwrap();
+    let b = full.generate(&engine, &p_buf, &prompts, None).unwrap();
+    assert_eq!(a, b, "clock decode diverged");
+    // row 0 (len 2): fillers at positions 2..=5, EOS at 6 -> 5 generated
+    let mut want0 = vec![tok::PAD; 12];
+    want0[..2].copy_from_slice(&[1, 4]);
+    want0[2..6].fill(5);
+    want0[6] = tok::EOS;
+    assert_eq!(a[0], want0);
+    // row 1 (len 4): fillers at 4..=5, EOS at 6 -> 3 generated (finished
+    // two rounds before row 0 — mid-batch EOS by construction)
+    let mut want1 = vec![tok::PAD; 12];
+    want1[..4].copy_from_slice(&[1, 4, 4, 4]);
+    want1[4] = 5;
+    want1[5] = 5;
+    want1[6] = tok::EOS;
+    assert_eq!(a[1], want1);
+    common::cleanup("deq_clock");
+}
+
+#[test]
+fn stepped_decode_bit_identical_across_thread_counts() {
+    // the stateful path at 1 and 4 workers must emit the same rows (the
+    // decode-state compute runs on the shared parallel core)
+    let run = |tag: &str, threads: usize| {
+        pool::with_threads(threads, || {
+            let mut spec = spec_with_blocks("thr-eq", &["attn", "ssm", "moe"]);
+            spec.d_model = 64;
+            spec.n_heads = 4;
+            spec.d_ff = 128;
+            spec.vocab = 256;
+            spec.seq_len = 16;
+            spec.n_experts = 2;
+            let engine = common::reference_engine(tag, &[spec]);
+            let rt = ModelRuntime::new(&engine, "thr-eq").unwrap();
+            let params = init_params(&rt.model, 53);
+            let p_buf = rt.upload_params(&params).unwrap();
+            let cfg = SampleCfg { temperature: 0.8, top_p: 0.9, max_new: 8, seed: 29 };
+            let mut s = Sampler::new(&rt, "fwd_nvfp4", cfg).unwrap();
+            s.set_decode_mode(DecodeMode::Step);
+            let prompts: Vec<Vec<i32>> =
+                (0..rt.model.batch).map(|i| vec![4 + i as i32, 9, 6]).collect();
+            s.generate(&engine, &p_buf, &prompts, None).unwrap()
+        })
+    };
+    let one = run("deq_thr1", 1);
+    let four = run("deq_thr4", 4);
+    assert_eq!(one, four, "stepped decode rows diverged across thread counts");
+    common::cleanup("deq_thr1");
+    common::cleanup("deq_thr4");
+}
+
+#[test]
+fn engine_capability_probe() {
+    let engine = common::reference_engine("deq_probe", &[common::small_spec("probe-sim")]);
+    let rt = ModelRuntime::new(&engine, "probe-sim").unwrap();
+    let params = init_params(&rt.model, 59);
+    let p_buf = rt.upload_params(&params).unwrap();
+    // plain fwd key: capability present, requested slot count honored
+    let sess = engine.open_decode(&rt.model, "fwd_nvfp4", &p_buf, 2).unwrap();
+    let mut sess = sess.expect("reference backend has stateful decode");
+    assert_eq!(sess.rows(), 2);
+    assert_eq!(sess.capacity(), rt.model.seq_len);
+    let mut logits = Vec::new();
+    sess.prefill(1, &[1, 5, 7], &mut logits).unwrap();
+    assert_eq!(logits.len(), rt.model.vocab);
+    assert_eq!(sess.len(1), 3);
+    assert_eq!(sess.len(0), 0);
+    sess.step(1, 4, &mut logits).unwrap();
+    assert_eq!(sess.len(1), 4);
+    // the frontier-gather twin is stateless: probe says None, not error
+    assert!(engine.open_decode(&rt.model, "fwd_last_nvfp4", &p_buf, 1).unwrap().is_none());
+    common::cleanup("deq_probe");
+}

@@ -6,10 +6,15 @@
 //! (always, everywhere); the artifact tier repeats the check against real
 //! AOT artifacts when they exist.
 
+//! (The stateful prefill/step path has its own equivalence suite in
+//! tests/decode_equivalence.rs; here every sampler is pinned to
+//! `DecodeMode::Full` so the frontier-vs-full contract is what actually
+//! runs, even on backends with stateful decode.)
+
 mod common;
 
 use qadx::coordinator::init_params;
-use qadx::eval::{SampleCfg, Sampler};
+use qadx::eval::{DecodeMode, SampleCfg, Sampler};
 use qadx::runtime::{frontier_key, Engine, ModelRuntime};
 
 #[test]
@@ -36,11 +41,13 @@ fn assert_frontier_and_full_rows_identical(engine: &Engine, model: &str) {
     let cfg = SampleCfg { temperature: 0.6, top_p: 0.95, max_new: 6, seed: 42 };
 
     let mut fast = Sampler::new(&rt, "fwd_bf16", cfg).unwrap();
+    fast.set_decode_mode(DecodeMode::Full);
     assert!(
         fast.uses_frontier(),
         "manifest carries fwd_last_bf16 but the sampler did not pick it up"
     );
     let mut full = Sampler::new(&rt, "fwd_bf16", cfg).unwrap();
+    full.set_decode_mode(DecodeMode::Full);
     full.force_full_logits(true);
     assert!(!full.uses_frontier());
 
@@ -51,7 +58,9 @@ fn assert_frontier_and_full_rows_identical(engine: &Engine, model: &str) {
     // greedy decode must agree as well (argmax is download-order invariant)
     let greedy = SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 6, seed: 7 };
     let mut fast_g = Sampler::new(&rt, "fwd_bf16", greedy).unwrap();
+    fast_g.set_decode_mode(DecodeMode::Full);
     let mut full_g = Sampler::new(&rt, "fwd_bf16", greedy).unwrap();
+    full_g.set_decode_mode(DecodeMode::Full);
     full_g.force_full_logits(true);
     let a = fast_g.generate(engine, &p_buf, &prompts, None).unwrap();
     let b = full_g.generate(engine, &p_buf, &prompts, None).unwrap();
@@ -76,8 +85,10 @@ fn quantized_decode_paths_agree_too() {
     let prompts: Vec<Vec<i32>> = vec![vec![1, 9, 3], vec![1, 12, 17, 3]];
     let cfg = SampleCfg { temperature: 0.8, top_p: 0.9, max_new: 5, seed: 11 };
     let mut fast = Sampler::new(&rt, "fwd_nvfp4", cfg).unwrap();
+    fast.set_decode_mode(DecodeMode::Full);
     assert!(fast.uses_frontier());
     let mut full = Sampler::new(&rt, "fwd_nvfp4", cfg).unwrap();
+    full.set_decode_mode(DecodeMode::Full);
     full.force_full_logits(true);
     let a = fast.generate(&engine, &p_buf, &prompts, None).unwrap();
     let b = full.generate(&engine, &p_buf, &prompts, None).unwrap();
@@ -97,6 +108,7 @@ fn frontier_fallback_when_manifest_lacks_twin() {
     let p_buf = rt.upload_params(&params).unwrap();
     let cfg = SampleCfg { temperature: 0.6, top_p: 0.95, max_new: 4, seed: 2 };
     let mut s = Sampler::new(&rt, "fwd_bf16", cfg).unwrap();
+    s.set_decode_mode(DecodeMode::Full);
     assert!(!s.uses_frontier());
     let rows = s.generate(&engine, &p_buf, &[vec![1, 5, 3]], None).unwrap();
     assert_eq!(rows.len(), 1);

@@ -9,7 +9,7 @@
 mod common;
 
 use qadx::coordinator::init_params;
-use qadx::eval::{SampleCfg, Sampler};
+use qadx::eval::{DecodeMode, SampleCfg, Sampler};
 use qadx::runtime::{scalar, Batch, DeviceState, ModelRuntime, SynthSpec};
 use qadx::util::pool;
 use qadx::util::rng::Rng;
@@ -79,13 +79,14 @@ fn qad_train_chain_bit_identical_across_thread_counts() {
 }
 
 /// Decode a fixed prompt set; returns the generated token rows.
-fn decode_rows(tag: &str, threads: usize, fwd_key: &str) -> Vec<Vec<i32>> {
+fn decode_rows(tag: &str, threads: usize, fwd_key: &str, mode: DecodeMode) -> Vec<Vec<i32>> {
     pool::with_threads(threads, || {
         let engine = common::reference_engine(tag, &[threaded_spec("thr-sim")]);
         let rt = ModelRuntime::new(&engine, "thr-sim").unwrap();
         let params = init_params(&rt.model, 11);
         let cfg = SampleCfg { temperature: 0.8, top_p: 0.9, max_new: 8, seed: 5 };
         let mut sampler = Sampler::new(&rt, fwd_key, cfg).unwrap();
+        sampler.set_decode_mode(mode);
         let weights = engine.upload_f32(&params, &[params.len()]).unwrap();
         let prompts: Vec<Vec<i32>> =
             (0..rt.model.batch).map(|i| vec![4 + i as i32, 9, 6]).collect();
@@ -95,14 +96,21 @@ fn decode_rows(tag: &str, threads: usize, fwd_key: &str) -> Vec<Vec<i32>> {
 
 #[test]
 fn decode_tokens_identical_across_thread_counts() {
-    // quantized decode through the frontier-gather path and the full
-    // forward both stay deterministic under threading
+    // quantized decode stays deterministic under threading on every
+    // path: stateful prefill/step, the frontier gather, and the full
+    // forward (and Step == Full by the decode-equivalence contract, so
+    // all four row sets below must in fact agree per key)
     for fwd_key in ["fwd_nvfp4", "fwd_bf16"] {
-        let one = decode_rows("thr_dec1", 1, fwd_key);
-        let four = decode_rows("thr_dec4", 4, fwd_key);
-        assert_eq!(one, four, "decode rows diverged for {fwd_key}");
-        common::cleanup("thr_dec1");
-        common::cleanup("thr_dec4");
+        let mut per_mode = Vec::new();
+        for mode in [DecodeMode::Step, DecodeMode::Full] {
+            let one = decode_rows("thr_dec1", 1, fwd_key, mode);
+            let four = decode_rows("thr_dec4", 4, fwd_key, mode);
+            assert_eq!(one, four, "decode rows diverged for {fwd_key} ({mode})");
+            common::cleanup("thr_dec1");
+            common::cleanup("thr_dec4");
+            per_mode.push(one);
+        }
+        assert_eq!(per_mode[0], per_mode[1], "step vs full diverged for {fwd_key}");
     }
 }
 
