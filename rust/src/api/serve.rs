@@ -21,7 +21,7 @@
 //! one decode round (or applies the coalescing deadline), `drain` runs
 //! everything out.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -137,6 +137,10 @@ pub struct ServeResponse {
     /// only surface when the whole batch completes, so there it equals
     /// `latency_ms`.
     pub ttft_ms: f64,
+    /// Set when this request degraded instead of completing: a failed
+    /// prefill/step ends the one request (row = prompt so far, no further
+    /// tokens) without taking down the scheduler or its slot-mates.
+    pub error: Option<String>,
 }
 
 /// Aggregate serving counters for one handle.
@@ -176,6 +180,9 @@ pub struct ServeStats {
     /// Requests admitted into a slot freed while other rows were still
     /// mid-generation — the continuous scheduler doing its job.
     pub mid_gen_admissions: usize,
+    /// Requests that ended with `ServeResponse::error` set (a failed
+    /// prefill/step degraded the one request, not the scheduler).
+    pub degraded: usize,
     /// Decode rounds executed by the continuous scheduler.
     pub decode_rounds: usize,
     /// Time spent inside prefill/step/generation calls.
@@ -295,7 +302,10 @@ enum Sched {
     Coalescing {
         sampler: Box<Sampler>,
         coalescer: Coalescer,
-        pending: HashMap<u64, Pending>,
+        /// BTreeMap, not HashMap: `run_batch` never iterates it today
+        /// (the coalescer queue fixes batch order), but a deterministic
+        /// map keeps any future iteration byte-stable by construction.
+        pending: BTreeMap<u64, Pending>,
     },
 }
 
@@ -326,6 +336,7 @@ fn finish_request(
     submitted: Instant,
     admitted: Instant,
     ttft_ms: f64,
+    error: Option<String>,
     now: Instant,
 ) {
     let latency_ms = now.duration_since(submitted).as_secs_f64() * 1000.0;
@@ -334,16 +345,23 @@ fn finish_request(
     stats.gen_tokens += gen_tokens;
     stats.latencies_ms.push(latency_ms);
     stats.execute_ms.push(execute_ms);
+    if error.is_some() {
+        stats.degraded += 1;
+    }
     if let Some(tel) = telemetry.as_mut() {
-        let _ = tel.append(&Json::obj(vec![
+        let mut fields = vec![
             ("event", Json::Str("request".into())),
             ("id", Json::Num(id as f64)),
             ("ttft_ms", Json::Num(ttft_ms)),
             ("latency_ms", Json::Num(latency_ms)),
             ("gen_tokens", Json::Num(gen_tokens as f64)),
-        ]));
+        ];
+        if let Some(e) = &error {
+            fields.push(("error", Json::Str(e.clone())));
+        }
+        let _ = tel.append(&Json::obj(fields));
     }
-    completed.push(ServeResponse { id, row, gen_tokens, latency_ms, ttft_ms });
+    completed.push(ServeResponse { id, row, gen_tokens, latency_ms, ttft_ms, error });
 }
 
 impl<'e> ServeHandle<'e> {
@@ -413,7 +431,7 @@ impl<'e> ServeHandle<'e> {
                         rt.model.batch,
                         Duration::from_secs_f64(cfg.max_batch_delay_ms.max(0.0) / 1000.0),
                     ),
-                    pending: HashMap::new(),
+                    pending: BTreeMap::new(),
                 }
             }
         };
@@ -545,7 +563,9 @@ impl<'e> ServeHandle<'e> {
 
     /// Admit queued requests into free slots: prefill the prompt, sample
     /// the first token (TTFT), and either park the row in the slot or —
-    /// for EOS/length-1 completions — finish it on the spot.
+    /// for EOS/length-1 completions — finish it on the spot. A failed
+    /// prefill finishes that one request with `error` set; the scheduler
+    /// and every other slot keep running.
     fn admit(&mut self) -> Result<usize> {
         let mut admitted = 0usize;
         loop {
@@ -561,18 +581,22 @@ impl<'e> ServeHandle<'e> {
             else {
                 return Ok(admitted);
             };
-            if queue.is_empty() {
-                return Ok(admitted);
-            }
             let Some(slot_idx) = slots.iter().position(|s| s.is_none()) else {
                 return Ok(admitted);
             };
             let any_active = slots.iter().any(|s| s.is_some());
-            let q = queue.pop_front().expect("checked non-empty");
+            let Some(q) = queue.pop_front() else {
+                return Ok(admitted);
+            };
             let t0 = Instant::now();
             let np = q.prompt.len().min(self.seq_len - 1);
-            session.prefill(slot_idx, &q.prompt[..np], logits)?;
-            let next = sample_token_with(&self.sample, rng, logits, scratch);
+            // np <= prompt.len() by construction, so get() always hits
+            let prompt = q.prompt.get(..np).unwrap_or(&q.prompt);
+            let prefill = session.prefill(slot_idx, prompt, logits);
+            let next = match &prefill {
+                Ok(()) => sample_token_with(&self.sample, rng, logits, scratch),
+                Err(_) => tok::EOS,
+            };
             let now = Instant::now();
             let wait_ms = t0.duration_since(q.submitted).as_secs_f64() * 1000.0;
             let ttft_ms = now.duration_since(q.submitted).as_secs_f64() * 1000.0;
@@ -584,7 +608,26 @@ impl<'e> ServeHandle<'e> {
             }
             admitted += 1;
             let mut row = vec![tok::PAD; self.seq_len];
-            row[..np].copy_from_slice(&q.prompt[..np]);
+            for (dst, src) in row.iter_mut().zip(prompt.iter()) {
+                *dst = *src;
+            }
+            if let Err(e) = prefill {
+                // degrade the one request: prompt-only row, zero tokens
+                finish_request(
+                    &mut self.stats,
+                    &mut self.completed,
+                    &mut self.telemetry,
+                    q.id,
+                    row,
+                    0,
+                    q.submitted,
+                    t0,
+                    ttft_ms,
+                    Some(format!("prefill failed: {e:#}")),
+                    now,
+                );
+                continue;
+            }
             if self.sample.max_new == 0 {
                 // degenerate cap: nothing may be emitted (matches the
                 // stateless path, whose decode loop never runs)
@@ -598,11 +641,14 @@ impl<'e> ServeHandle<'e> {
                     q.submitted,
                     t0,
                     ttft_ms,
+                    None,
                     now,
                 );
                 continue;
             }
-            row[np] = next;
+            if let Some(cell) = row.get_mut(np) {
+                *cell = next;
+            }
             if next == tok::EOS || np + 1 >= self.seq_len || self.sample.max_new == 1 {
                 finish_request(
                     &mut self.stats,
@@ -614,10 +660,11 @@ impl<'e> ServeHandle<'e> {
                     q.submitted,
                     t0,
                     ttft_ms,
+                    None,
                     now,
                 );
-            } else {
-                slots[slot_idx] = Some(Slot {
+            } else if let Some(slot) = slots.get_mut(slot_idx) {
+                *slot = Some(Slot {
                     id: q.id,
                     row,
                     frontier: np + 1,
@@ -632,7 +679,9 @@ impl<'e> ServeHandle<'e> {
     }
 
     /// One decode round: step every live slot by one token (ascending
-    /// slot order), finishing rows that hit EOS or the sequence end.
+    /// slot order), finishing rows that hit EOS or the sequence end. A
+    /// failed step finishes that one slot's request with `error` set and
+    /// leaves every other slot running.
     fn step_round(&mut self) -> Result<usize> {
         let Sched::Continuous { session, slots, rng, scratch, logits, rounds_in_flight, .. } =
             &mut self.sched
@@ -647,39 +696,59 @@ impl<'e> ServeHandle<'e> {
         let t0 = Instant::now();
         let mut finished = 0usize;
         for idx in 0..width {
-            let (last_tok, pos) = match slots[idx].as_ref() {
-                Some(s) => (s.row[s.frontier - 1], s.frontier),
+            let (last_tok, pos) = match slots.get(idx).and_then(|s| s.as_ref()) {
+                Some(s) => match s.frontier.checked_sub(1).and_then(|i| s.row.get(i)) {
+                    Some(&t) => (t, s.frontier),
+                    None => (tok::PAD, s.frontier), // frontier always >= 1 once parked
+                },
                 None => continue,
             };
-            session.step(idx, last_tok, logits)?;
-            let next = sample_token_with(&self.sample, rng, logits, scratch);
+            let stepped = session.step(idx, last_tok, logits);
+            let mut error: Option<String> = None;
+            let next = match &stepped {
+                Ok(()) => sample_token_with(&self.sample, rng, logits, scratch),
+                Err(e) => {
+                    error = Some(format!("decode step failed: {e:#}"));
+                    tok::EOS
+                }
+            };
             let now = Instant::now();
-            let slot = slots[idx].as_mut().expect("slot checked live above");
+            let Some(slot) = slots.get_mut(idx).and_then(|s| s.as_mut()) else { continue };
             self.stats
                 .inter_token_ms
                 .push(now.duration_since(slot.last_token).as_secs_f64() * 1000.0);
             slot.last_token = now;
-            slot.row[pos] = next;
-            slot.frontier += 1;
-            slot.gen += 1;
+            if error.is_none() {
+                if let Some(cell) = slot.row.get_mut(pos) {
+                    *cell = next;
+                }
+                slot.frontier += 1;
+                slot.gen += 1;
+            }
             // same per-request cap as the stateless path: at most max_new
-            // generated tokens (EOS / sequence end finish earlier)
-            if next == tok::EOS || slot.frontier >= self.seq_len || slot.gen >= self.sample.max_new
+            // generated tokens (EOS / sequence end finish earlier); an
+            // errored slot finishes immediately with whatever it has
+            if error.is_some()
+                || next == tok::EOS
+                || slot.frontier >= self.seq_len
+                || slot.gen >= self.sample.max_new
             {
-                let sl = slots[idx].take().expect("slot checked live above");
-                finish_request(
-                    &mut self.stats,
-                    &mut self.completed,
-                    &mut self.telemetry,
-                    sl.id,
-                    sl.row,
-                    sl.gen,
-                    sl.submitted,
-                    sl.admitted,
-                    sl.ttft_ms,
-                    now,
-                );
-                finished += 1;
+                if let Some(sl) = slots.get_mut(idx).and_then(|s| s.take()) {
+                    finish_request(
+                        &mut self.stats,
+                        &mut self.completed,
+                        &mut self.telemetry,
+                        sl.id,
+                        sl.row,
+                        sl.gen,
+                        sl.submitted,
+                        sl.admitted,
+                        sl.ttft_ms,
+                        error,
+                        now,
+                    );
+                    finished += 1;
+                }
             }
         }
         *rounds_in_flight += 1;
@@ -716,29 +785,37 @@ impl<'e> ServeHandle<'e> {
         let Sched::Coalescing { sampler, pending, .. } = &mut self.sched else {
             bail!("run_batch called on the continuous scheduler");
         };
-        // move prompts out of the pending map — no per-request cloning
+        // move prompts out of the pending map — no per-request cloning;
+        // an id with no pending entry (can't happen via the public API)
+        // is skipped rather than panicking the scheduler
+        let mut kept = Vec::with_capacity(ids.len());
         let mut prompts = Vec::with_capacity(ids.len());
         let mut submitted = Vec::with_capacity(ids.len());
         for id in ids {
-            let p = pending.remove(id).expect("queued id has a pending entry");
+            let Some(p) = pending.remove(id) else { continue };
+            kept.push(*id);
             prompts.push(p.prompt);
             submitted.push(p.submitted);
+        }
+        if kept.is_empty() {
+            return Ok(());
         }
         let rows = sampler.generate(engine, &self.weights, &prompts, None)?;
         let done = Instant::now();
         let batch_ms = done.duration_since(t0).as_secs_f64() * 1000.0;
-        let fill = ids.len() as f64 / self.batch as f64;
+        let fill = kept.len() as f64 / self.batch as f64;
 
         let mut batch_tokens = 0usize;
         let mut max_wait_ms = 0f64;
-        for (k, row) in rows.into_iter().enumerate() {
-            let gen_tokens =
-                row.iter().skip(prompts[k].len()).filter(|&&t| t != tok::PAD).count();
+        for (((row, id), prompt), sub) in
+            rows.into_iter().zip(&kept).zip(&prompts).zip(&submitted)
+        {
+            let gen_tokens = row.iter().skip(prompt.len()).filter(|&&t| t != tok::PAD).count();
             batch_tokens += gen_tokens;
-            let latency_ms = done.duration_since(submitted[k]).as_secs_f64() * 1000.0;
+            let latency_ms = done.duration_since(*sub).as_secs_f64() * 1000.0;
             // split: time queued before the batch launched vs time inside
             // the generation call (shared by every request in the batch)
-            let wait_ms = t0.duration_since(submitted[k]).as_secs_f64() * 1000.0;
+            let wait_ms = t0.duration_since(*sub).as_secs_f64() * 1000.0;
             max_wait_ms = max_wait_ms.max(wait_ms);
             self.stats.latencies_ms.push(latency_ms);
             self.stats.queue_wait_ms.push(wait_ms);
@@ -746,14 +823,15 @@ impl<'e> ServeHandle<'e> {
             // first token surfaces only at batch completion here
             self.stats.ttft_ms.push(latency_ms);
             self.completed.push(ServeResponse {
-                id: ids[k],
+                id: *id,
                 row,
                 gen_tokens,
                 latency_ms,
                 ttft_ms: latency_ms,
+                error: None,
             });
         }
-        self.stats.requests += ids.len();
+        self.stats.requests += kept.len();
         self.stats.batches += 1;
         self.stats.gen_tokens += batch_tokens;
         self.stats.fill_ratios.push(fill);
@@ -763,7 +841,7 @@ impl<'e> ServeHandle<'e> {
             let _ = tel.append(&Json::obj(vec![
                 ("event", Json::Str("batch".into())),
                 ("fwd", Json::Str(self.stats.fwd_key.clone())),
-                ("requests", Json::Num(ids.len() as f64)),
+                ("requests", Json::Num(kept.len() as f64)),
                 ("fill_ratio", Json::Num(fill)),
                 // batch_ms is the batch's execute time (kept under its
                 // pre-existing name); max_queue_wait_ms is the slowest

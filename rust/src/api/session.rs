@@ -6,7 +6,7 @@
 //! `(Engine, ModelRuntime, teacher, runs_dir, Args)` tuples.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
@@ -115,7 +115,7 @@ impl SessionBuilder {
             scale: self.scale,
             seed: self.seed,
             methods: self.methods,
-            teachers: RefCell::new(HashMap::new()),
+            teachers: RefCell::new(BTreeMap::new()),
         })
     }
 }
@@ -134,7 +134,9 @@ pub struct Session {
     scale: PipelineScale,
     seed: u64,
     methods: MethodRegistry,
-    teachers: RefCell<HashMap<String, Rc<Vec<f32>>>>,
+    /// BTreeMap keeps any future iteration over cached teachers in
+    /// deterministic key order (today it is get/insert only).
+    teachers: RefCell<BTreeMap<String, Rc<Vec<f32>>>>,
 }
 
 impl Session {

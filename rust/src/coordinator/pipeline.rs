@@ -117,7 +117,9 @@ pub fn get_or_train_teacher(
     let meta = Json::obj(vec![
         ("model", Json::Str(model.into())),
         ("stages", Json::Arr(report.stages.iter().map(|s| Json::Str(s.clone())).collect())),
+        // qadx-lint: allow(artifact-keys) -- checkpoint JSON metadata field, not an artifact key
         ("rl_reward_before", Json::Num(report.rl_reward_before)),
+        // qadx-lint: allow(artifact-keys) -- checkpoint JSON metadata field, not an artifact key
         ("rl_reward_after", Json::Num(report.rl_reward_after)),
         ("scale", Json::Num(scale.0)),
     ]);

@@ -28,6 +28,7 @@ pub struct Engine {
     backend: Rc<dyn ExecBackend>,
     kind: BackendKind,
     pub manifest: Manifest,
+    // qadx-lint: allow(nondet-iteration) -- exe cache is get/insert only; it never iterates into output
     cache: RefCell<HashMap<(String, String), Rc<Executable>>>,
 }
 
@@ -42,6 +43,7 @@ impl Engine {
     pub fn with_backend(artifacts_dir: &Path, kind: BackendKind) -> Result<Engine> {
         let manifest = Manifest::load(artifacts_dir)?;
         let backend = make_backend(kind)?;
+        // qadx-lint: allow(nondet-iteration) -- exe cache is get/insert only; it never iterates into output
         Ok(Engine { backend, kind, manifest, cache: RefCell::new(HashMap::new()) })
     }
 

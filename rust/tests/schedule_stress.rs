@@ -1,0 +1,214 @@
+//! Schedule-stress determinism sweep: the hermetic QAD train step, the
+//! stateful stepped decoder, and the continuous-batching serve scheduler
+//! must be bit-identical at every pool width QADX_THREADS ∈ {1,2,3,4} —
+//! not just the 1-vs-4 endpoints the threading suite pins. Serve runs
+//! compare full responses (ids, token rows, gen counts) *and* the
+//! telemetry JSONL stream on its deterministic projection (every `*_ms`
+//! timing field stripped; field order is stable because `Json::Obj` is a
+//! BTreeMap). Entirely hermetic: reference backend, synthetic manifests.
+
+mod common;
+
+use qadx::api::{DecodeMode, ServeCfg, ServeWeights};
+use qadx::coordinator::init_params;
+use qadx::eval::{SampleCfg, Sampler};
+use qadx::runtime::refmodel::{self, RefCfg};
+use qadx::runtime::{scalar, Batch, DeviceState, ModelRuntime, SynthSpec};
+use qadx::util::json::Json;
+use qadx::util::pool;
+use qadx::util::rng::Rng;
+
+const SWEEP: [usize; 4] = [1, 2, 3, 4];
+
+/// Big enough that GEMMs cross the pool's parallel-work threshold, with
+/// all three block kinds, so every thread count in the sweep genuinely
+/// partitions work differently.
+fn stress_spec(name: &str) -> SynthSpec {
+    let mut spec = SynthSpec::small(name);
+    spec.d_model = 64;
+    spec.n_heads = 4;
+    spec.d_ff = 128;
+    spec.vocab = 256;
+    spec.seq_len = 16;
+    spec.batch = 4;
+    spec.blocks = vec!["attn".into(), "ssm".into(), "moe".into()];
+    spec.n_experts = 2;
+    spec
+}
+
+fn rand_batch(rt: &ModelRuntime, seed: u64) -> Batch {
+    let mut rng = Rng::new(seed);
+    let (b, s) = (rt.model.batch, rt.model.seq_len);
+    Batch {
+        tokens: (0..b * s).map(|_| rng.range(4, rt.model.vocab as i64) as i32).collect(),
+        mask: vec![1.0; b * s],
+        pixels: None,
+        advantage: None,
+    }
+}
+
+fn assert_bits_eq(what: &str, threads: usize, base: &[f32], got: &[f32]) {
+    assert_eq!(base.len(), got.len(), "{what}: length diverged at {threads} threads");
+    for (i, (a, b)) in base.iter().zip(got).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what}: [{i}] diverged at {threads} threads: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn qad_step_chain_bit_identical_across_thread_sweep() {
+    let chain = |tag: &str, threads: usize| -> Vec<f32> {
+        pool::with_threads(threads, || {
+            let engine = common::reference_engine(tag, &[stress_spec("stress-sim")]);
+            let rt = ModelRuntime::new(&engine, "stress-sim").unwrap();
+            let teacher = init_params(&rt.model, 7);
+            let student = init_params(&rt.model, 8);
+            let mut state = DeviceState::from_params(&rt, &student).unwrap();
+            let exe = rt.exe("qad_nvfp4").unwrap();
+            let batch = rand_batch(&rt, 3);
+            let tokens = rt.upload_tokens(&batch).unwrap();
+            let mask = rt.upload_mask(&batch).unwrap();
+            let t_buf = rt.upload_params(&teacher).unwrap();
+            let lr = engine.upload_scalar(1e-3).unwrap();
+            for _ in 0..3 {
+                let out = engine.run_b(&exe, &[&state.buf, &t_buf, &tokens, &mask, &lr]).unwrap();
+                state.advance(out);
+            }
+            let sc = state.scalars().unwrap();
+            assert_eq!(sc[scalar::STEP], 3.0);
+            state.full().unwrap()
+        })
+    };
+    let base = chain("sstress_qad_1", 1);
+    for t in &SWEEP[1..] {
+        let tag = format!("sstress_qad_{t}");
+        let got = chain(&tag, *t);
+        assert_bits_eq("qad packed state", *t, &base, &got);
+        common::cleanup(&tag);
+    }
+    common::cleanup("sstress_qad_1");
+}
+
+#[test]
+fn forward_logits_bit_identical_across_thread_sweep() {
+    let spec = stress_spec("stress-sim");
+    let entry = spec.entry();
+    let cfg = RefCfg::for_key_format(&entry, "nvfp4").unwrap();
+    let params = init_params(&entry, 23);
+    let mut rng = Rng::new(29);
+    let tokens: Vec<i32> = (0..entry.batch * entry.seq_len)
+        .map(|_| rng.range(4, entry.vocab as i64) as i32)
+        .collect();
+    let run = |threads: usize| {
+        pool::with_threads(threads, || {
+            refmodel::fwd_logits(&cfg, &params, &tokens, entry.batch, entry.seq_len, None).unwrap()
+        })
+    };
+    let base = run(1);
+    for t in &SWEEP[1..] {
+        assert_bits_eq("fwd logits", *t, &base, &run(*t));
+    }
+}
+
+#[test]
+fn stepped_decode_rows_identical_across_thread_sweep() {
+    let rows = |tag: &str, threads: usize| -> Vec<Vec<i32>> {
+        pool::with_threads(threads, || {
+            let engine = common::reference_engine(tag, &[stress_spec("stress-sim")]);
+            let rt = ModelRuntime::new(&engine, "stress-sim").unwrap();
+            let params = init_params(&rt.model, 11);
+            let cfg = SampleCfg { temperature: 0.8, top_p: 0.9, max_new: 8, seed: 5 };
+            let mut sampler = Sampler::new(&rt, "fwd_nvfp4", cfg).unwrap();
+            sampler.set_decode_mode(DecodeMode::Step);
+            let weights = engine.upload_f32(&params, &[params.len()]).unwrap();
+            let prompts: Vec<Vec<i32>> =
+                (0..rt.model.batch).map(|i| vec![4 + i as i32, 9, 6]).collect();
+            sampler.generate(&engine, &weights, &prompts, None).unwrap()
+        })
+    };
+    let base = rows("sstress_dec_1", 1);
+    for t in &SWEEP[1..] {
+        let tag = format!("sstress_dec_{t}");
+        assert_eq!(base, rows(&tag, *t), "stepped decode diverged at {t} threads");
+        common::cleanup(&tag);
+    }
+    common::cleanup("sstress_dec_1");
+}
+
+/// One serve run: continuous scheduler, 2 slots, 6 requests submitted in
+/// two waves with polls in between (so slots free mid-generation and
+/// late requests admit mid-gen), telemetry to a JSONL file. Returns the
+/// completed responses (sorted by id) and the telemetry stream projected
+/// onto its deterministic fields.
+type ServeRows = Vec<(u64, Vec<i32>, usize, Option<String>)>;
+
+fn serve_run(tag: &str, threads: usize) -> (ServeRows, Vec<String>) {
+    pool::with_threads(threads, || {
+        let session = common::reference_session(tag, &[stress_spec("stress-sim")]);
+        let ms = session.model("stress-sim").unwrap();
+        let tel_path = common::tmp_runs(tag).join("serve_telemetry.jsonl");
+        let cfg = ServeCfg {
+            sample: SampleCfg { temperature: 0.7, top_p: 0.9, max_new: 6, seed: 9 },
+            weights: ServeWeights::Random { seed: 21 },
+            decode: DecodeMode::Step, // require the continuous scheduler
+            max_slots: 2,
+            telemetry: Some(tel_path.clone()),
+            ..ServeCfg::default()
+        };
+        let mut server = ms.server("fwd_nvfp4", &cfg).unwrap();
+        assert!(server.continuous(), "reference backend must serve continuously");
+        for i in 0..3u64 {
+            server.submit(vec![1, 4 + i as i32, 3]).unwrap();
+        }
+        server.poll().unwrap();
+        server.poll().unwrap();
+        for i in 3..6u64 {
+            server.submit(vec![1, 4 + i as i32, 3, 5]).unwrap();
+        }
+        let mut responses = server.drain().unwrap();
+        assert_eq!(server.stats().degraded, 0, "no request may degrade in this sweep");
+        responses.sort_by_key(|r| r.id);
+        let rows: Vec<(u64, Vec<i32>, usize, Option<String>)> = responses
+            .into_iter()
+            .map(|r| (r.id, r.row, r.gen_tokens, r.error))
+            .collect();
+
+        let raw = std::fs::read_to_string(&tel_path).unwrap();
+        let projected: Vec<String> = raw
+            .lines()
+            .map(|line| {
+                let ev = Json::parse(line).unwrap();
+                let obj = ev.as_obj().unwrap();
+                // wall-clock timing differs run to run; everything else
+                // (event kinds, ids, token counts, slots, fwd key, order
+                // of events) must be identical at every thread count
+                let kept: Vec<(&str, Json)> = obj
+                    .iter()
+                    .filter(|(k, _)| !k.ends_with("_ms"))
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect();
+                Json::obj(kept).to_string()
+            })
+            .collect();
+        (rows, projected)
+    })
+}
+
+#[test]
+fn continuous_serve_responses_and_telemetry_identical_across_thread_sweep() {
+    let (base_rows, base_tel) = serve_run("sstress_srv_1", 1);
+    assert_eq!(base_rows.len(), 6, "all submitted requests complete");
+    assert!(base_rows.iter().all(|(_, _, _, e)| e.is_none()));
+    assert!(!base_tel.is_empty(), "telemetry stream captured");
+    for t in &SWEEP[1..] {
+        let tag = format!("sstress_srv_{t}");
+        let (rows, tel) = serve_run(&tag, *t);
+        assert_eq!(base_rows, rows, "serve responses diverged at {t} threads");
+        assert_eq!(base_tel, tel, "telemetry projection diverged at {t} threads");
+        common::cleanup(&tag);
+    }
+    common::cleanup("sstress_srv_1");
+}

@@ -1,0 +1,9 @@
+// corpus: annotation meta-rule MUST fire — an allow without a
+// `-- reason` is itself a finding, and it suppresses nothing, so the
+// underlying nondet-iteration finding stays unallowed too.
+use std::collections::HashMap;
+
+pub struct Cache {
+    // qadx-lint: allow(nondet-iteration)
+    pub inner: HashMap<String, u32>,
+}

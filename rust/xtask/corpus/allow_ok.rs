@@ -1,0 +1,13 @@
+// corpus: a well-formed allow-annotation (rule + `--` + reason) covers
+// the finding on its own line or the next code line; the finding is
+// still reported, but as allowed, and the gate stays green.
+use std::collections::HashMap;
+
+pub struct Cache {
+    // qadx-lint: allow(nondet-iteration) -- get/insert only, never iterated into output
+    pub inner: HashMap<String, u32>,
+}
+
+pub fn build() -> HashMap<String, u32> { // qadx-lint: allow(nondet-iteration) -- mirrors Cache::inner
+    HashMap::new() // qadx-lint: allow(nondet-iteration) -- mirrors Cache::inner
+}

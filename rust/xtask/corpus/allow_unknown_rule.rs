@@ -1,0 +1,6 @@
+// corpus: annotation meta-rule MUST fire — allow() naming a rule the
+// linter does not know is a typo that would otherwise rot silently.
+pub fn f() -> u32 {
+    // qadx-lint: allow(nondet-interation) -- typo'd rule name
+    1
+}

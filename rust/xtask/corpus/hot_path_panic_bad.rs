@@ -1,0 +1,19 @@
+// corpus: hot-path-panic MUST fire — unwrap/expect/panic! and (with
+// index_check) bare slice indexing inside a configured scheduler
+// function can kill every in-flight request.
+impl Handle {
+    fn admit(&mut self) -> Result<usize> {
+        let q = self.queue.pop_front().expect("checked non-empty");
+        let first = q.prompt[0];
+        let parsed = parse(first).unwrap();
+        if parsed == 0 {
+            panic!("zero token");
+        }
+        Ok(parsed)
+    }
+
+    fn cold_helper(&self) -> usize {
+        // not in the hot-fn list: unwrap here is out of scope
+        self.queue.front().unwrap().prompt.len()
+    }
+}

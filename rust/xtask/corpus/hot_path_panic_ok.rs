@@ -1,0 +1,25 @@
+// corpus: hot-path-panic must NOT fire — the same scheduler function
+// written in the degrade-through-Result shape: let-else, get(),
+// unwrap_or, and error values instead of panics.
+impl Handle {
+    fn admit(&mut self) -> Result<usize> {
+        let Some(q) = self.queue.pop_front() else {
+            return Ok(0);
+        };
+        let first = q.prompt.get(0).copied().unwrap_or_default();
+        let parsed = parse(first)?;
+        if parsed == 0 {
+            return Err(anyhow!("zero token"));
+        }
+        Ok(parsed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap_and_index() {
+        let v = vec![1, 2, 3];
+        assert_eq!(v[0], *v.first().unwrap());
+    }
+}

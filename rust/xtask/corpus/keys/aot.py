@@ -1,0 +1,13 @@
+# corpus: python lowering side for the artifact-keys cross-check.
+# Lowers fwd_bf16 and the fwd_last_* family, plus one key the Rust side
+# never references (mse_python_only -> MUST fire) and one deliberately
+# one-sided key excused by the python-side allow-annotation.
+KEYS = ["fwd_bf16", "scalars"]
+
+def emit(fmt):
+    write(f"fwd_last_{fmt}")
+
+# qadx-lint: allow(artifact-keys) -- lowered for external tooling only
+EXTRA = "nqt_external_probe"
+
+ORPHAN = "mse_python_only"

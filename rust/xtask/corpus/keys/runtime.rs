@@ -1,0 +1,11 @@
+// corpus: Rust runtime side for the artifact-keys cross-check. Loads
+// fwd_bf16 / scalars / the fwd_last_* family (all covered by aot.py)
+// plus one key python never lowers (qad_rust_only -> MUST fire).
+pub fn load_all(m: &Manifest) -> Result<()> {
+    m.load("fwd_bf16")?;
+    m.load("scalars")?;
+    let k = format!("fwd_last_{}", fmt);
+    m.load(&k)?;
+    m.load("qad_rust_only")?;
+    Ok(())
+}

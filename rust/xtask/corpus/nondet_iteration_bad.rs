@@ -1,0 +1,14 @@
+// corpus: nondet-iteration MUST fire — a HashMap in a module whose
+// output is serialized (telemetry / manifest / reports) makes emission
+// order depend on the hasher seed.
+use std::collections::HashMap;
+
+pub struct Report {
+    pub per_layer: HashMap<String, f32>,
+}
+
+pub fn collect() -> HashMap<String, f32> {
+    let mut m = HashMap::new();
+    m.insert("a".to_string(), 1.0);
+    m
+}

@@ -1,0 +1,27 @@
+// corpus: nondet-iteration must NOT fire — BTreeMap everywhere, and the
+// only HashMap mentions are a `use` line (no-op by itself) plus test
+// scaffolding, which the module rules exempt.
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+pub struct Report {
+    pub per_layer: BTreeMap<String, f32>,
+}
+
+pub fn collect() -> BTreeMap<String, f32> {
+    let mut m = BTreeMap::new();
+    m.insert("a".to_string(), 1.0);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_maps_are_fine_in_tests() {
+        let mut scratch: HashMap<u32, u32> = HashMap::new();
+        scratch.insert(1, 2);
+        assert_eq!(collect().len(), 1);
+    }
+}

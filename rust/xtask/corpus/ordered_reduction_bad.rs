@@ -1,0 +1,20 @@
+// corpus: ordered-reduction MUST fire — the closure accumulates into
+// state captured from the enclosing scope, so the reduction order (and
+// therefore the float result) depends on chunk scheduling.
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    crate::util::pool::for_chunks2(a.len(), a, 1, b, 1, |_i, ca, cb| {
+        for (x, y) in ca.iter().zip(cb) {
+            acc += x * y;
+        }
+    });
+    acc
+}
+
+fn norm(a: &[f32]) -> f32 {
+    let mut total = 0.0f32;
+    crate::util::pool::for_chunks(a.len(), a, 1, |_i, chunk| {
+        total = chunk.iter().map(|x| x * x).sum();
+    });
+    total
+}

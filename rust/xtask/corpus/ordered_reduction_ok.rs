@@ -1,0 +1,19 @@
+// corpus: ordered-reduction must NOT fire — accumulation stays inside
+// the closure (chunk-local partials), and the cross-chunk combine is a
+// sequential pass outside the parallel region. This is the repo's
+// sanctioned two-pass reduction shape.
+fn dot(a: &[f32], b: &[f32], partials: &mut [f32]) -> f32 {
+    crate::util::pool::for_chunks2(partials.len(), a, 1, b, 1, |_i, ca, cb| {
+        let mut local = 0.0f32;
+        for (x, y) in ca.iter().zip(cb) {
+            local += x * y;
+        }
+        let s: f32 = ca.iter().sum();
+        let _ = s;
+    });
+    let mut acc = 0.0f32;
+    for p in partials.iter() {
+        acc += p; // sequential combine outside for_chunks: deterministic
+    }
+    acc
+}

@@ -1,0 +1,7 @@
+// corpus: annotation meta-rule MUST fire — an allow-annotation that no
+// finding needs is stale (the violation it excused was fixed or moved)
+// and must be deleted, or it will excuse a future regression.
+pub fn f() -> u32 {
+    // qadx-lint: allow(nondet-iteration) -- this code no longer uses a map
+    1
+}

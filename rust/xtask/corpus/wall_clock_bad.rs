@@ -1,0 +1,11 @@
+// corpus: wall-clock MUST fire — reading the clock inside a numeric
+// kernel ties its behavior to wall time; timing belongs to callers.
+use std::time::Instant;
+
+pub fn gemm_block(a: &[f32], b: &[f32], c: &mut [f32]) {
+    let t0 = Instant::now();
+    for (i, x) in a.iter().enumerate() {
+        c[i] = x * b[i];
+    }
+    let _elapsed = t0.elapsed();
+}

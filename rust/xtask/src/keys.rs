@@ -1,0 +1,304 @@
+//! Cross-language artifact-key check.
+//!
+//! The python lowering side (`python/compile/aot.py`, `steps.py`) and the
+//! Rust runtime must agree on artifact key names (`fwd_bf16`,
+//! `qad_nvfp4`, `fwd_last_*` frontier keys, `scalars`, ...). A key that
+//! exists on only one side is a latent runtime error: python emits an
+//! artifact nobody loads, or Rust requests one the lowering never wrote.
+//!
+//! Key literals are recognized by shape: `scalars`, or `<family>_<rest>`
+//! for the step/forward families. Format interpolations (`f"fwd_{fmt}"`,
+//! `format!("fwd_last_{rest}")`) become `*` wildcards and match any
+//! concrete key of their family; literals ending in `_` are prefix
+//! probes (e.g. `strip_prefix("fwd_")`), not keys.
+
+use crate::lexer::{Kind, Lexed};
+use crate::rules::{Finding, RULE_ARTIFACT_KEYS};
+
+const FAMILIES: &[&str] = &["fwd_", "sft_", "qat_", "qad_", "mse_", "nqt_", "rl_"];
+
+/// A key literal occurrence.
+#[derive(Debug, Clone)]
+pub struct KeyUse {
+    pub key: String,
+    pub file: String,
+    pub line: u32,
+}
+
+/// Normalize a string literal to a key pattern, or None when the literal
+/// is not key-shaped.
+pub fn key_pattern(lit: &str) -> Option<String> {
+    // interpolations ({fmt}, {rest}, {}) become wildcards
+    let mut out = String::new();
+    let mut depth = 0usize;
+    for c in lit.chars() {
+        match c {
+            '{' => {
+                depth += 1;
+                if depth == 1 {
+                    out.push('*');
+                }
+            }
+            '}' => depth = depth.saturating_sub(1),
+            _ if depth == 0 => out.push(c),
+            _ => {}
+        }
+    }
+    if out == "scalars" {
+        return Some(out);
+    }
+    if !FAMILIES.iter().any(|f| out.starts_with(f)) {
+        return None;
+    }
+    if out.ends_with('_') {
+        return None; // prefix probe, not a key
+    }
+    if !out.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '*') {
+        return None;
+    }
+    Some(out)
+}
+
+/// `pattern` ⊇ `key`? Simple `*`-wildcard match (greedy segment scan).
+pub fn wildcard_match(pattern: &str, key: &str) -> bool {
+    if !pattern.contains('*') {
+        return pattern == key;
+    }
+    let segs: Vec<&str> = pattern.split('*').collect();
+    let mut rest = key;
+    for (i, seg) in segs.iter().enumerate() {
+        if i == 0 {
+            match rest.strip_prefix(seg) {
+                Some(r) => rest = r,
+                None => return false,
+            }
+        } else if i == segs.len() - 1 {
+            return seg.is_empty() || rest.ends_with(seg);
+        } else if let Some(at) = rest.find(seg) {
+            rest = &rest[at + seg.len()..];
+        } else {
+            return false;
+        }
+    }
+    true
+}
+
+/// Harvest key-shaped string literals from a lexed Rust file.
+pub fn rust_keys(rel: &str, lexed: &Lexed) -> Vec<KeyUse> {
+    let mut out = Vec::new();
+    for t in &lexed.toks {
+        if t.kind != Kind::Str {
+            continue;
+        }
+        if let Some(k) = key_pattern(&t.text) {
+            out.push(KeyUse { key: k, file: rel.to_string(), line: t.line });
+        }
+    }
+    out
+}
+
+/// Harvest key-shaped string literals from python source (handles `'`/`"`
+/// strings, triple quotes, `#` comments; f-string interpolations become
+/// wildcards via [`key_pattern`]).
+pub fn python_keys(rel: &str, src: &str) -> Vec<KeyUse> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == '#' {
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == '"' || c == '\'' {
+            let q = c;
+            let triple = i + 2 < n && chars[i + 1] == q && chars[i + 2] == q;
+            let start_line = line;
+            let mut text = String::new();
+            if triple {
+                i += 3;
+                while i < n {
+                    if chars[i] == q && i + 2 < n && chars[i + 1] == q && chars[i + 2] == q {
+                        i += 3;
+                        break;
+                    }
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    text.push(chars[i]);
+                    i += 1;
+                }
+            } else {
+                i += 1;
+                while i < n && chars[i] != q && chars[i] != '\n' {
+                    if chars[i] == '\\' && i + 1 < n {
+                        text.push(chars[i]);
+                        text.push(chars[i + 1]);
+                        i += 2;
+                        continue;
+                    }
+                    text.push(chars[i]);
+                    i += 1;
+                }
+                if i < n && chars[i] == q {
+                    i += 1;
+                }
+            }
+            if let Some(k) = key_pattern(&text) {
+                out.push(KeyUse { key: k, file: rel.to_string(), line: start_line });
+            }
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Lines of python source carrying `# qadx-lint: allow(artifact-keys) --`
+/// (the python side's minimal annotation channel); a finding on line L is
+/// allowed when L or L-1 carries one.
+fn python_allow_lines(src: &str) -> Vec<u32> {
+    let mut out = Vec::new();
+    for (ln, text) in src.lines().enumerate() {
+        if let Some(at) = text.find('#') {
+            let c = &text[at..];
+            if c.contains("qadx-lint:") && c.contains("allow(artifact-keys)") && c.contains("--") {
+                out.push(ln as u32 + 1);
+            }
+        }
+    }
+    out
+}
+
+/// Cross-check: every concrete key on one side must be matched (exactly
+/// or by a wildcard pattern) on the other. Returns (rust-side findings,
+/// python-side findings) — rust-side ones flow through the standard
+/// annotation engine; python-side ones are pre-filtered here.
+pub fn cross_check(
+    rust: &[KeyUse],
+    python: &[KeyUse],
+    python_srcs: &[(String, String)],
+) -> (Vec<Finding>, Vec<Finding>) {
+    let covered = |k: &str, other: &[KeyUse]| other.iter().any(|o| wildcard_match(&o.key, k));
+    let mut seen = std::collections::BTreeSet::new();
+    let mut rust_out = Vec::new();
+    for u in rust {
+        if u.key.contains('*') || !seen.insert(u.key.clone()) {
+            continue;
+        }
+        if !covered(&u.key, python) {
+            rust_out.push(Finding {
+                rule: RULE_ARTIFACT_KEYS.to_string(),
+                file: u.file.clone(),
+                line: u.line,
+                msg: format!(
+                    "artifact key \"{}\" is used by Rust but never lowered by \
+                     python/compile — one-sided keys fail at runtime",
+                    u.key
+                ),
+                allowed: false,
+            });
+        }
+    }
+    let mut seen_py = std::collections::BTreeSet::new();
+    let mut py_out = Vec::new();
+    for u in python {
+        if u.key.contains('*') || !seen_py.insert(u.key.clone()) {
+            continue;
+        }
+        if !covered(&u.key, rust) {
+            let allow = python_srcs
+                .iter()
+                .find(|(f, _)| *f == u.file)
+                .map(|(_, src)| python_allow_lines(src))
+                .unwrap_or_default();
+            let allowed = allow.iter().any(|&l| l == u.line || l + 1 == u.line);
+            py_out.push(Finding {
+                rule: RULE_ARTIFACT_KEYS.to_string(),
+                file: u.file.clone(),
+                line: u.line,
+                msg: format!(
+                    "artifact key \"{}\" is lowered by python/compile but never \
+                     referenced from the Rust runtime",
+                    u.key
+                ),
+                allowed,
+            });
+        }
+    }
+    (rust_out, py_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn key_pattern_filters_shapes() {
+        assert_eq!(key_pattern("fwd_bf16"), Some("fwd_bf16".to_string()));
+        assert_eq!(key_pattern("qad_nvfp4_xsuper"), Some("qad_nvfp4_xsuper".to_string()));
+        assert_eq!(key_pattern("scalars"), Some("scalars".to_string()));
+        assert_eq!(key_pattern("fwd_last_{rest}"), Some("fwd_last_*".to_string()));
+        assert_eq!(key_pattern("fwd_"), None, "prefix probe");
+        assert_eq!(key_pattern("qad"), None, "method name, not a key");
+        assert_eq!(key_pattern("forward pass"), None);
+        assert_eq!(key_pattern("fwd_BF16"), None, "keys are lowercase");
+    }
+
+    #[test]
+    fn wildcard_match_families() {
+        assert!(wildcard_match("fwd_*", "fwd_bf16"));
+        assert!(wildcard_match("fwd_last_*", "fwd_last_nvfp4"));
+        assert!(!wildcard_match("fwd_last_*", "fwd_bf16"));
+        assert!(wildcard_match("fwd_bf16", "fwd_bf16"));
+        assert!(!wildcard_match("fwd_bf16", "fwd_nvfp4"));
+    }
+
+    #[test]
+    fn cross_check_flags_one_sided_keys_both_ways() {
+        let rs = lex("fn f() { load(\"fwd_bf16\"); load(\"qat_only_in_rust\"); }");
+        let rust = rust_keys("rust/src/x.rs", &rs);
+        let py_src = "KEYS = [\"fwd_bf16\", \"mse_only_in_python\"]\n".to_string();
+        let python = python_keys("python/compile/aot.py", &py_src);
+        let srcs = vec![("python/compile/aot.py".to_string(), py_src)];
+        let (r, p) = cross_check(&rust, &python, &srcs);
+        assert_eq!(r.len(), 1, "{r:?}");
+        assert!(r[0].msg.contains("qat_only_in_rust"));
+        assert_eq!(p.len(), 1, "{p:?}");
+        assert!(p[0].msg.contains("mse_only_in_python"));
+    }
+
+    #[test]
+    fn wildcards_cover_concrete_keys_across_sides() {
+        let rs = lex("fn f() { let k = format!(\"fwd_last_{rest}\"); }");
+        let rust = rust_keys("rust/src/x.rs", &rs);
+        let py_src = "emit(f\"fwd_last_{fmt}\")\nemit(\"fwd_last_bf16\")\n".to_string();
+        let python = python_keys("python/compile/aot.py", &py_src);
+        let srcs = vec![("python/compile/aot.py".to_string(), py_src)];
+        let (r, p) = cross_check(&rust, &python, &srcs);
+        assert!(r.is_empty(), "{r:?}");
+        // python's concrete fwd_last_bf16 is covered by rust's wildcard
+        assert!(p.is_empty(), "{p:?}");
+    }
+
+    #[test]
+    fn python_allow_annotation_suppresses() {
+        let py_src = "# qadx-lint: allow(artifact-keys) -- lowered for external tools\nemit(\"nqt_external\")\n"
+            .to_string();
+        let python = python_keys("python/compile/aot.py", &py_src);
+        let srcs = vec![("python/compile/aot.py".to_string(), py_src)];
+        let (_, p) = cross_check(&[], &python, &srcs);
+        assert_eq!(p.len(), 1);
+        assert!(p[0].allowed, "{p:?}");
+    }
+}

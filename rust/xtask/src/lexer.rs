@@ -1,0 +1,430 @@
+//! Minimal Rust lexer for qadx-lint.
+//!
+//! Produces a flat token stream with line numbers plus the side channels
+//! the rule passes need: `// qadx-lint: allow(..)` annotations harvested
+//! from comments, and the set of lines that carry real code (used to bind
+//! a standalone annotation comment to the next code line). The lexer
+//! understands just enough real Rust — nested block comments, string /
+//! raw-string / byte-string literals, char literals vs lifetimes — that
+//! rule passes never mistake literal or comment text for code.
+
+use std::collections::BTreeSet;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One `// qadx-lint: allow(rule[, rule]) -- reason` comment.
+#[derive(Debug, Clone)]
+pub struct Annotation {
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub has_reason: bool,
+    /// Set when the comment names qadx-lint but does not parse.
+    pub malformed: Option<String>,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub annotations: Vec<Annotation>,
+    /// Lines on which at least one token appears.
+    pub code_lines: BTreeSet<u32>,
+}
+
+/// Multi-char punctuation, longest first so maximal munch wins.
+const PUNCTS: &[&str] = &[
+    "..=", "<<=", ">>=", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "::", "->", "=>", "==",
+    "!=", "<=", ">=", "&&", "||", "<<", ">>", "..",
+];
+
+pub const ANNOTATION_TAG: &str = "qadx-lint:";
+
+/// Parse one comment body (text after `//`) as an allow-annotation.
+/// Returns None when the comment does not mention qadx-lint at all.
+pub fn parse_annotation(line: u32, comment: &str) -> Option<Annotation> {
+    let at = comment.find(ANNOTATION_TAG)?;
+    let rest = comment[at + ANNOTATION_TAG.len()..].trim();
+    let malformed = |msg: &str| {
+        Some(Annotation {
+            line,
+            rules: vec![],
+            has_reason: false,
+            malformed: Some(msg.to_string()),
+        })
+    };
+    let Some(body) = rest.strip_prefix("allow(") else {
+        return malformed("expected `allow(<rule>[, <rule>]) -- <reason>`");
+    };
+    let Some(close) = body.find(')') else {
+        return malformed("unclosed `allow(`");
+    };
+    let mut rules = Vec::new();
+    for part in body[..close].split(',') {
+        let r = part.trim();
+        if r.is_empty() {
+            return malformed("empty rule name in allow(..)");
+        }
+        rules.push(r.to_string());
+    }
+    let tail = body[close + 1..].trim();
+    let has_reason = match tail.strip_prefix("--") {
+        Some(reason) => !reason.trim().is_empty(),
+        None => false,
+    };
+    Some(Annotation { line, rules, has_reason, malformed: None })
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let is_ident_start = |c: char| c.is_alphabetic() || c == '_';
+    let is_ident_cont = |c: char| c.is_alphanumeric() || c == '_';
+
+    fn push(toks: &mut Vec<Tok>, lines: &mut BTreeSet<u32>, kind: Kind, text: String, ln: u32) {
+        lines.insert(ln);
+        toks.push(Tok { kind, text, line: ln });
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (and the annotation channel)
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let text: String = chars[start..j].iter().collect();
+            if let Some(ann) = parse_annotation(line, &text) {
+                out.annotations.push(ann);
+            }
+            i = j;
+            continue;
+        }
+        // nested block comment
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // identifier, or a string prefix (r"", b"", br"", b'')
+        if is_ident_start(c) {
+            let start = i;
+            let mut j = i;
+            while j < n && is_ident_cont(chars[j]) {
+                j += 1;
+            }
+            let word: String = chars[start..j].iter().collect();
+            // raw / byte string prefixes
+            if (word == "r" || word == "b" || word == "br" || word == "rb")
+                && j < n
+                && (chars[j] == '"' || chars[j] == '#')
+                && word != "b"
+            {
+                // raw string: r"..." / r#"..."# (any # count)
+                let mut hashes = 0usize;
+                let mut k = j;
+                while k < n && chars[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && chars[k] == '"' {
+                    k += 1;
+                    let body_start = k;
+                    let ln = line;
+                    'raw: while k < n {
+                        if chars[k] == '\n' {
+                            line += 1;
+                            k += 1;
+                            continue;
+                        }
+                        if chars[k] == '"' {
+                            let mut h = 0usize;
+                            while k + 1 + h < n && h < hashes && chars[k + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                let text: String = chars[body_start..k].iter().collect();
+                                push(&mut out.toks, &mut out.code_lines, Kind::Str, text, ln);
+                                k += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        k += 1;
+                    }
+                    i = k;
+                    continue;
+                }
+                // not actually a raw string (e.g. `r#ident`): fall through
+            }
+            if word == "b" && j < n && (chars[j] == '"' || chars[j] == '\'') {
+                // byte string / byte char: lex as the underlying literal
+                i = j;
+                continue; // next loop iteration handles the quote
+            }
+            push(&mut out.toks, &mut out.code_lines, Kind::Ident, word, line);
+            i = j;
+            continue;
+        }
+        // number (loose: digits, `_`, suffixes, one decimal part; stops
+        // before `..` so ranges survive)
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            while j < n && (is_ident_cont(chars[j])) {
+                j += 1;
+            }
+            if j < n && chars[j] == '.' && !(j + 1 < n && chars[j + 1] == '.') {
+                // decimal part (also tolerates `1.` and `1.0f32`)
+                j += 1;
+                while j < n && is_ident_cont(chars[j]) {
+                    j += 1;
+                }
+            }
+            let text: String = chars[start..j].iter().collect();
+            push(&mut out.toks, &mut out.code_lines, Kind::Num, text, line);
+            i = j;
+            continue;
+        }
+        // cooked string
+        if c == '"' {
+            let ln = line;
+            let mut j = i + 1;
+            let mut text = String::new();
+            while j < n {
+                match chars[j] {
+                    '\\' if j + 1 < n => {
+                        // keep escapes opaque; they never form key text
+                        text.push(chars[j]);
+                        text.push(chars[j + 1]);
+                        if chars[j + 1] == '\n' {
+                            line += 1;
+                        }
+                        j += 2;
+                    }
+                    '"' => {
+                        j += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        text.push('\n');
+                        j += 1;
+                    }
+                    ch => {
+                        text.push(ch);
+                        j += 1;
+                    }
+                }
+            }
+            push(&mut out.toks, &mut out.code_lines, Kind::Str, text, ln);
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // escaped char literal: '\n', '\'', '\\', '\u{..}' — the
+                // char right after the backslash is part of the escape
+                // (crucial for '\''), so the closing-quote scan starts
+                // one past it
+                let mut j = i + 3;
+                while j < n && chars[j] != '\'' {
+                    j += 1;
+                }
+                push(&mut out.toks, &mut out.code_lines, Kind::Char, String::new(), line);
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 1 < n && is_ident_start(chars[i + 1]) {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(chars[j]) {
+                    j += 1;
+                }
+                if j < n && chars[j] == '\'' && j == i + 2 {
+                    // 'a' — single-char literal
+                    push(&mut out.toks, &mut out.code_lines, Kind::Char, String::new(), line);
+                    i = j + 1;
+                } else {
+                    let text: String = chars[i + 1..j].iter().collect();
+                    push(&mut out.toks, &mut out.code_lines, Kind::Lifetime, text, line);
+                    i = j;
+                }
+                continue;
+            }
+            // '0', '+', non-ascii, ...
+            let mut j = i + 1;
+            while j < n && chars[j] != '\'' && chars[j] != '\n' {
+                j += 1;
+            }
+            push(&mut out.toks, &mut out.code_lines, Kind::Char, String::new(), line);
+            i = (j + 1).min(n);
+            continue;
+        }
+        // punctuation (maximal munch)
+        let mut matched = false;
+        for p in PUNCTS {
+            let pc: Vec<char> = p.chars().collect();
+            if i + pc.len() <= n && chars[i..i + pc.len()] == pc[..] {
+                push(&mut out.toks, &mut out.code_lines, Kind::Punct, p.to_string(), line);
+                i += pc.len();
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            push(&mut out.toks, &mut out.code_lines, Kind::Punct, c.to_string(), line);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_leak_tokens() {
+        let l = lex("let x = \"HashMap // not a comment\"; // HashMap\n/* unwrap() */ y");
+        let idents: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, vec!["let", "x", "y"]);
+        let strs: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs, vec!["HashMap // not a comment"]);
+    }
+
+    #[test]
+    fn raw_strings_and_nested_block_comments() {
+        let l = lex("r#\"unwrap() \"quoted\" \"# /* a /* nested */ still */ z");
+        assert_eq!(l.toks.len(), 2);
+        assert_eq!(l.toks[0].kind, Kind::Str);
+        assert_eq!(l.toks[0].text, "unwrap() \"quoted\" ");
+        assert_eq!(l.toks[1].text, "z");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        let lifetimes: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["a", "a"]);
+        assert_eq!(l.toks.iter().filter(|t| t.kind == Kind::Char).count(), 2);
+    }
+
+    #[test]
+    fn escaped_quote_char_literal_does_not_swallow_code() {
+        // '\'' once terminated the scan at the ESCAPED quote, leaving a
+        // stray ' that ate everything to the next quote/newline —
+        // silently hiding real tokens from every rule pass
+        let l = lex("if c == '\\'' || c == '\\\\' { HashMap } else { '\\u{7f}'; }");
+        let idents: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, vec!["if", "c", "c", "HashMap", "else"]);
+        assert_eq!(l.toks.iter().filter(|t| t.kind == Kind::Char).count(), 3);
+    }
+
+    #[test]
+    fn compound_punct_and_ranges() {
+        assert_eq!(texts("a += 1; b[..n] 0..=3"), vec![
+            "a", "+=", "1", ";", "b", "[", "..", "n", "]", "0", "..=", "3"
+        ]);
+    }
+
+    #[test]
+    fn line_numbers_track_every_literal_form() {
+        let src = "a\n\"two\nlines\"\n/* c\nc */ b\nc";
+        let l = lex(src);
+        let by_text: Vec<(String, u32)> =
+            l.toks.iter().map(|t| (t.text.clone(), t.line)).collect();
+        assert_eq!(by_text, vec![
+            ("a".to_string(), 1),
+            ("two\nlines".to_string(), 2),
+            ("b".to_string(), 5),
+            ("c".to_string(), 6),
+        ]);
+    }
+
+    #[test]
+    fn annotation_parses_rules_and_reason() {
+        let l = lex("// qadx-lint: allow(nondet-iteration, hot-path-panic) -- cache never iterates\nlet x = 1;");
+        assert_eq!(l.annotations.len(), 1);
+        let a = &l.annotations[0];
+        assert_eq!(a.rules, vec!["nondet-iteration", "hot-path-panic"]);
+        assert!(a.has_reason);
+        assert!(a.malformed.is_none());
+        assert_eq!(a.line, 1);
+    }
+
+    #[test]
+    fn annotation_without_reason_or_malformed_is_recorded() {
+        let l = lex("// qadx-lint: allow(wall-clock)\n// qadx-lint: deny(everything)\n");
+        assert_eq!(l.annotations.len(), 2);
+        assert!(!l.annotations[0].has_reason);
+        assert!(l.annotations[0].malformed.is_none());
+        assert!(l.annotations[1].malformed.is_some());
+    }
+}

@@ -1,0 +1,88 @@
+//! qadx-lint library surface: the lexer, the rule passes, the
+//! cross-language key check, and the repo-tree driver. The `xtask`
+//! binary (`src/main.rs`) is a thin CLI over [`run_lint`]; the
+//! integration tests run the same entry points against the corpus and
+//! against the real tree.
+
+pub mod keys;
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use rules::{analyze_source, finalize, Config, FileAnalysis, Finding};
+
+/// Directories scanned for Rust sources, relative to the repo root.
+pub const RUST_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+/// Python lowering sources for the artifact-key cross-check.
+pub const PY_FILES: &[&str] = &["python/compile/aot.py", "python/compile/steps.py"];
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn rel_of(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+/// Run the full analysis over a repo tree with the given enforcement map.
+pub fn run_lint(root: &Path, cfg: &Config) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for d in RUST_DIRS {
+        collect_rs(&root.join(d), &mut files);
+    }
+    let mut analyses: Vec<FileAnalysis> = Vec::new();
+    for p in &files {
+        let src = std::fs::read_to_string(p)?;
+        analyses.push(analyze_source(&rel_of(root, p), &src, cfg));
+    }
+
+    // cross-language artifact keys
+    let mut rust_keys = Vec::new();
+    for fa in &analyses {
+        // benches/examples/tests invent throwaway tags; key ground truth
+        // on the Rust side is the runtime + api + eval tree
+        if fa.rel.starts_with("rust/src/") {
+            rust_keys.extend(keys::rust_keys(&fa.rel, &fa.lexed));
+        }
+    }
+    let mut py_srcs = Vec::new();
+    let mut py_keys = Vec::new();
+    for f in PY_FILES {
+        let p = root.join(f);
+        if let Ok(src) = std::fs::read_to_string(&p) {
+            py_keys.extend(keys::python_keys(f, &src));
+            py_srcs.push((f.to_string(), src));
+        }
+    }
+    let (rust_side, py_side) = keys::cross_check(&rust_keys, &py_keys, &py_srcs);
+    for f in rust_side {
+        if let Some(fa) = analyses.iter_mut().find(|a| a.rel == f.file) {
+            fa.findings.push(f);
+        }
+    }
+
+    let mut findings = Vec::new();
+    for fa in &mut analyses {
+        finalize(fa);
+        findings.append(&mut fa.findings);
+    }
+    findings.extend(py_side);
+    Ok(findings)
+}
+
+/// Analyze one source string as if it lived at `rel` (corpus testing).
+pub fn lint_snippet(rel: &str, src: &str, cfg: &Config) -> Vec<Finding> {
+    let mut fa = analyze_source(rel, src, cfg);
+    finalize(&mut fa);
+    fa.findings
+}

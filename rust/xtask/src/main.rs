@@ -1,0 +1,107 @@
+//! qadx-lint — repo-native determinism & numerics static analysis.
+//!
+//! Usage:
+//!   cargo run -p xtask -- lint [--json] [--root <repo-root>]
+//!
+//! Scans rust/src, rust/tests, rust/benches, examples/ plus the python
+//! lowering side (python/compile/{aot,steps}.py) and enforces the rules
+//! documented in rust/xtask/README.md. Exit status: 0 when every finding
+//! is covered by an allow-annotation, 1 on any unallowed finding, 2 on
+//! usage/IO errors.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use xtask::rules::{Config, Finding};
+use xtask::run_lint;
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut cmd = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "lint" if cmd.is_none() => cmd = Some("lint"),
+            "--json" => json = true,
+            "--root" => match it.next() {
+                Some(r) => root = Some(PathBuf::from(r)),
+                None => {
+                    eprintln!("--root requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown argument {other:?}");
+                eprintln!("usage: cargo run -p xtask -- lint [--json] [--root <repo-root>]");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if cmd != Some("lint") {
+        eprintln!("usage: cargo run -p xtask -- lint [--json] [--root <repo-root>]");
+        return ExitCode::from(2);
+    }
+    // default root: this crate lives at <root>/rust/xtask
+    let root =
+        root.unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(".."));
+
+    let findings = match run_lint(&root, &Config::repo()) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("qadx-lint: io error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let unallowed: Vec<&Finding> = findings.iter().filter(|f| !f.allowed).collect();
+    let allowed = findings.len() - unallowed.len();
+
+    if json {
+        let mut out = String::from("{\"findings\":[");
+        for (i, f) in findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"allowed\":{},\"message\":\"{}\"}}",
+                json_escape(&f.rule),
+                json_escape(&f.file),
+                f.line,
+                f.allowed,
+                json_escape(&f.msg)
+            ));
+        }
+        out.push_str(&format!("],\"allowed\":{},\"unallowed\":{}}}", allowed, unallowed.len()));
+        println!("{out}");
+    } else {
+        for f in &unallowed {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+        }
+        println!(
+            "qadx-lint: {} finding(s) ({} allowed by annotation, {} unallowed)",
+            findings.len(),
+            allowed,
+            unallowed.len()
+        );
+    }
+    if unallowed.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,777 @@
+//! The qadx-lint rule passes.
+//!
+//! Every pass works on the token stream from [`crate::lexer`] plus two
+//! structural side tables computed here: bracket mate indices and
+//! test-code token ranges (`#[test]` / `#[cfg(test)]` items), so findings
+//! never fire on test scaffolding unless a rule opts in.
+//!
+//! Rules (ids are what `allow(..)` annotations name):
+//! * `ordered-reduction` — closures passed to `for_chunks`/`for_chunks2`
+//!   must not accumulate (`+=`, `-=`, assigned `.sum()`/`.product()`)
+//!   into captured state; chunk-local and closure-local accumulation is
+//!   fine. Applies everywhere, including tests.
+//! * `nondet-iteration` — no `HashMap`/`HashSet` in numeric or
+//!   serialization-facing modules (conservative: any non-`use` mention,
+//!   so iteration can never sneak in behind an alias); `BTreeMap` or an
+//!   explicit sort is the sanctioned shape, a deliberate exception
+//!   carries an allow-annotation.
+//! * `hot-path-panic` — no `unwrap`/`expect`/`panic!`-family (and, where
+//!   configured, slice indexing) inside the serve scheduler / sampler /
+//!   decode-session hot functions; degrade through `Result` instead.
+//! * `wall-clock` — no `Instant::now`/`SystemTime::now` inside numeric
+//!   kernels (timing belongs to callers; kernels stay replayable).
+//! * `artifact-keys` — cross-language key check, see [`crate::keys`].
+//! * `annotation` — meta-rule: malformed / reason-less / unknown-rule /
+//!   unused allow-annotations are themselves findings.
+
+use std::collections::BTreeSet;
+
+use crate::lexer::{lex, Kind, Lexed, Tok};
+
+pub const RULE_ORDERED_REDUCTION: &str = "ordered-reduction";
+pub const RULE_NONDET_ITERATION: &str = "nondet-iteration";
+pub const RULE_HOT_PATH_PANIC: &str = "hot-path-panic";
+pub const RULE_WALL_CLOCK: &str = "wall-clock";
+pub const RULE_ARTIFACT_KEYS: &str = "artifact-keys";
+pub const RULE_ANNOTATION: &str = "annotation";
+
+pub const KNOWN_RULES: &[&str] = &[
+    RULE_ORDERED_REDUCTION,
+    RULE_NONDET_ITERATION,
+    RULE_HOT_PATH_PANIC,
+    RULE_WALL_CLOCK,
+    RULE_ARTIFACT_KEYS,
+    RULE_ANNOTATION,
+];
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: String,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+    /// True once a valid allow-annotation covered this finding.
+    pub allowed: bool,
+}
+
+impl Finding {
+    fn new(rule: &str, file: &str, line: u32, msg: String) -> Finding {
+        Finding { rule: rule.to_string(), file: file.to_string(), line, msg, allowed: false }
+    }
+}
+
+/// Hot-path rule scope: named functions of one file.
+#[derive(Debug, Clone)]
+pub struct HotPathSpec {
+    pub file: String,
+    pub fns: Vec<String>,
+    /// Also flag slice/array indexing (`x[i]`, `&x[..n]`) in those
+    /// functions. Off for numeric kernels, where indexing is the idiom
+    /// and bounds are structural; on for the scheduler, where an index
+    /// panic kills every in-flight request.
+    pub index_check: bool,
+}
+
+/// What the linter enforces where. Paths are repo-relative with `/`
+/// separators; a file is covered when its path starts with an entry.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub nondet_paths: Vec<String>,
+    pub wallclock_paths: Vec<String>,
+    pub hot_paths: Vec<HotPathSpec>,
+}
+
+impl Config {
+    /// The repo's enforcement map (the single source of truth for which
+    /// modules each rule covers — extend it as modules are added).
+    pub fn repo() -> Config {
+        let hot = |file: &str, fns: &[&str], index_check: bool| HotPathSpec {
+            file: file.to_string(),
+            fns: fns.iter().map(|s| s.to_string()).collect(),
+            index_check,
+        };
+        Config {
+            // numeric modules + everything whose output is serialized
+            // (telemetry JSONL, manifest, exper reports, checkpoints)
+            nondet_paths: [
+                "rust/src/quant/",
+                "rust/src/util/gemm.rs",
+                "rust/src/eval/",
+                "rust/src/runtime/refmodel.rs",
+                "rust/src/runtime/reference.rs",
+                "rust/src/runtime/engine.rs",
+                "rust/src/runtime/manifest.rs",
+                "rust/src/api/serve.rs",
+                "rust/src/api/session.rs",
+                "rust/src/api/telemetry.rs",
+                "rust/src/exper/",
+                "rust/src/coordinator/",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+            wallclock_paths: [
+                "rust/src/quant/",
+                "rust/src/util/gemm.rs",
+                "rust/src/util/pool.rs",
+                "rust/src/runtime/refmodel.rs",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+            hot_paths: vec![
+                hot(
+                    "rust/src/api/serve.rs",
+                    &["submit", "poll", "drain", "admit", "step_round", "dispatch", "run_batch"],
+                    true,
+                ),
+                hot("rust/src/eval/sampler.rs", &["generate", "generate_stepped"], false),
+                hot(
+                    "rust/src/runtime/refmodel.rs",
+                    &["prefill", "step", "step_position", "step_gemm", "step_rmsnorm", "step_gelu"],
+                    false,
+                ),
+                hot("rust/src/runtime/reference.rs", &["prefill", "step"], false),
+            ],
+        }
+    }
+}
+
+/// One analyzed file: findings carry `allowed` after [`finalize`].
+pub struct FileAnalysis {
+    pub rel: String,
+    pub lexed: Lexed,
+    pub findings: Vec<Finding>,
+}
+
+/// Mate index per bracket token (`(`/`)`, `[`/`]`, `{`/`}`), both ways.
+fn bracket_mates(toks: &[Tok]) -> Vec<Option<usize>> {
+    let mut mate = vec![None; toks.len()];
+    let mut stack: Vec<(usize, char)> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Punct || t.text.len() != 1 {
+            continue;
+        }
+        match t.text.as_bytes()[0] as char {
+            c @ ('(' | '[' | '{') => stack.push((i, c)),
+            c @ (')' | ']' | '}') => {
+                let want = match c {
+                    ')' => '(',
+                    ']' => '[',
+                    _ => '{',
+                };
+                if let Some(&(j, open)) = stack.last() {
+                    if open == want {
+                        stack.pop();
+                        mate[i] = Some(j);
+                        mate[j] = Some(i);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    mate
+}
+
+/// Token-index ranges belonging to `#[test]` / `#[cfg(test)]` items.
+fn test_ranges(toks: &[Tok], mate: &[Option<usize>]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if !(toks[i].text == "#" && toks[i + 1].text == "[") {
+            i += 1;
+            continue;
+        }
+        let Some(close) = mate[i + 1] else {
+            i += 1;
+            continue;
+        };
+        let is_test = toks[i + 2..close].iter().any(|t| t.kind == Kind::Ident && t.text == "test");
+        let mut k = close + 1;
+        if is_test {
+            // skip any further attributes on the same item
+            while k + 1 < toks.len() && toks[k].text == "#" && toks[k + 1].text == "[" {
+                match mate[k + 1] {
+                    Some(c) => k = c + 1,
+                    None => break,
+                }
+            }
+            // brace-less items (`#[cfg(test)] use ...;`) have no range
+            let mut body = None;
+            let mut j = k;
+            while j < toks.len() {
+                if toks[j].text == ";" {
+                    break;
+                }
+                if toks[j].text == "{" {
+                    body = mate[j].map(|c| (j, c));
+                    break;
+                }
+                j += 1;
+            }
+            if let Some(r) = body {
+                ranges.push(r);
+                i = r.1 + 1;
+                continue;
+            }
+        }
+        i = close + 1;
+    }
+    ranges
+}
+
+fn in_ranges(ranges: &[(usize, usize)], idx: usize) -> bool {
+    ranges.iter().any(|&(a, b)| idx >= a && idx <= b)
+}
+
+/// Walk the left-hand side of an assignment ending just before `end`
+/// (exclusive) back to its base identifier: `self.stats.x`, `out[i]`,
+/// `*total.lock().unwrap()` all resolve to their leftmost identifier.
+fn lhs_base_ident(
+    toks: &[Tok],
+    mate: &[Option<usize>],
+    end: usize,
+    floor: usize,
+) -> Option<String> {
+    const STOP_KEYWORDS: &[&str] = &["let", "mut", "ref", "if", "else", "match", "return", "in"];
+    let mut base: Option<String> = None;
+    let mut p = end;
+    while p > floor {
+        p -= 1;
+        let t = &toks[p];
+        match t.kind {
+            Kind::Punct => match t.text.as_str() {
+                ")" | "]" => match mate[p] {
+                    Some(open) if open > floor => p = open,
+                    _ => break,
+                },
+                "." | "::" | "*" => {}
+                _ => break,
+            },
+            Kind::Ident => {
+                if STOP_KEYWORDS.contains(&t.text.as_str()) {
+                    break;
+                }
+                base = Some(t.text.clone());
+            }
+            Kind::Num => {} // tuple index like `x.0`
+            _ => break,
+        }
+    }
+    base
+}
+
+/// ordered-reduction: scan every `for_chunks`/`for_chunks2` call site.
+fn ordered_reduction(rel: &str, toks: &[Tok], mate: &[Option<usize>], out: &mut Vec<Finding>) {
+    let n = toks.len();
+    for i in 0..n {
+        if toks[i].kind != Kind::Ident
+            || (toks[i].text != "for_chunks" && toks[i].text != "for_chunks2")
+        {
+            continue;
+        }
+        if i + 1 >= n || toks[i + 1].text != "(" {
+            continue;
+        }
+        let open = i + 1;
+        let Some(close) = mate[open] else { continue };
+        // first `|` (or `||`) at direct argument depth opens the closure
+        let mut j = open + 1;
+        let mut params_end = None;
+        let mut locals: BTreeSet<String> = BTreeSet::new();
+        while j < close {
+            let t = &toks[j];
+            if t.kind == Kind::Punct && matches!(t.text.as_str(), "(" | "[" | "{") {
+                j = mate[j].unwrap_or(close);
+            } else if t.kind == Kind::Punct && t.text == "||" {
+                params_end = Some(j);
+                break;
+            } else if t.kind == Kind::Punct && t.text == "|" {
+                // params run to the matching `|`
+                let mut k = j + 1;
+                while k < close && toks[k].text != "|" {
+                    if toks[k].kind == Kind::Ident {
+                        locals.insert(toks[k].text.clone());
+                    }
+                    k += 1;
+                }
+                params_end = Some(k);
+                break;
+            }
+            j += 1;
+        }
+        let Some(body_start) = params_end else { continue };
+        let body = (body_start + 1)..close;
+
+        // collect closure-local names: `let` bindings, `for` loop vars,
+        // nested-closure params (over-approximate: every ident between a
+        // `|..|` pair). Over-approximating locals can only silence, never
+        // invent, a finding.
+        let mut k = body.start;
+        while k < body.end {
+            let t = &toks[k];
+            if t.kind == Kind::Ident && t.text == "let" {
+                let mut m = k + 1;
+                while m < body.end && toks[m].text != "=" && toks[m].text != ";" {
+                    if toks[m].kind == Kind::Ident && toks[m].text != "mut" {
+                        locals.insert(toks[m].text.clone());
+                    }
+                    m += 1;
+                }
+                k = m;
+            } else if t.kind == Kind::Ident && t.text == "for" {
+                let mut m = k + 1;
+                while m < body.end && !(toks[m].kind == Kind::Ident && toks[m].text == "in") {
+                    if toks[m].kind == Kind::Ident {
+                        locals.insert(toks[m].text.clone());
+                    }
+                    m += 1;
+                }
+                k = m;
+            } else if t.kind == Kind::Punct && t.text == "|" {
+                let mut m = k + 1;
+                while m < body.end && toks[m].text != "|" {
+                    if toks[m].kind == Kind::Ident {
+                        locals.insert(toks[m].text.clone());
+                    }
+                    m += 1;
+                }
+                k = m;
+            }
+            k += 1;
+        }
+
+        for k in body.clone() {
+            let t = &toks[k];
+            if t.kind == Kind::Punct && (t.text == "+=" || t.text == "-=") {
+                let base = lhs_base_ident(toks, mate, k, body.start.saturating_sub(1));
+                if let Some(b) = base {
+                    if !locals.contains(&b) {
+                        out.push(Finding::new(
+                            RULE_ORDERED_REDUCTION,
+                            rel,
+                            t.line,
+                            format!(
+                                "`{} {}` accumulates into captured `{b}` inside a \
+                                 {} closure; parallel chunk order must not feed a shared \
+                                 float chain — accumulate into the chunk itself",
+                                b, t.text, toks[i].text
+                            ),
+                        ));
+                    }
+                }
+            }
+            if t.kind == Kind::Ident
+                && (t.text == "sum" || t.text == "product")
+                && k > 0
+                && toks[k - 1].text == "."
+                && k + 1 < body.end
+                && (toks[k + 1].text == "(" || toks[k + 1].text == "::")
+            {
+                // find the statement's assignment target, if any
+                let mut s = k;
+                while s > body.start && !matches!(toks[s - 1].text.as_str(), ";" | "{" | "}") {
+                    s -= 1;
+                }
+                let mut eq = None;
+                let mut m = s;
+                while m < k {
+                    if toks[m].kind == Kind::Punct
+                        && (toks[m].text == "=" || toks[m].text == "+=")
+                    {
+                        eq = Some(m);
+                        break;
+                    }
+                    if matches!(toks[m].text.as_str(), "(" | "[" | "{") {
+                        m = mate[m].unwrap_or(k);
+                    }
+                    m += 1;
+                }
+                if let Some(e) = eq {
+                    if let Some(b) = lhs_base_ident(toks, mate, e, s.saturating_sub(1)) {
+                        if !locals.contains(&b) {
+                            out.push(Finding::new(
+                                RULE_ORDERED_REDUCTION,
+                                rel,
+                                t.line,
+                                format!(
+                                    "`.{}()` result assigned to captured `{b}` inside a \
+                                     {} closure — reduce into the chunk instead",
+                                    t.text, toks[i].text
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// nondet-iteration: HashMap/HashSet mentions in covered modules.
+fn nondet_iteration(
+    rel: &str,
+    toks: &[Tok],
+    tests: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+            continue;
+        }
+        if in_ranges(tests, i) {
+            continue;
+        }
+        // skip `use` statements: the ban is on usage sites
+        let mut s = i;
+        while s > 0 && !matches!(toks[s - 1].text.as_str(), ";" | "{" | "}") {
+            s -= 1;
+        }
+        if toks[s].kind == Kind::Ident && toks[s].text == "use" {
+            continue;
+        }
+        out.push(Finding::new(
+            RULE_NONDET_ITERATION,
+            rel,
+            t.line,
+            format!(
+                "`{}` in a deterministic-order module; use BTreeMap/BTreeSet or sort \
+                 at the emission point",
+                t.text
+            ),
+        ));
+    }
+}
+
+/// hot-path-panic: panic family (and optionally indexing) in hot fns.
+fn hot_path_panic(
+    spec: &HotPathSpec,
+    toks: &[Tok],
+    mate: &[Option<usize>],
+    tests: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    let n = toks.len();
+    let mut i = 0usize;
+    while i + 1 < n {
+        let is_fn = toks[i].kind == Kind::Ident
+            && toks[i].text == "fn"
+            && toks[i + 1].kind == Kind::Ident
+            && spec.fns.iter().any(|f| *f == toks[i + 1].text)
+            && !in_ranges(tests, i);
+        if !is_fn {
+            i += 1;
+            continue;
+        }
+        let name = toks[i + 1].text.clone();
+        // body = first top-level `{` of the item (a `;` first means a
+        // trait method declaration — skip)
+        let mut j = i + 2;
+        let mut body = None;
+        while j < n {
+            if toks[j].text == ";" {
+                break;
+            }
+            if toks[j].text == "{" {
+                body = mate[j].map(|c| (j + 1, c));
+                break;
+            }
+            if matches!(toks[j].text.as_str(), "(" | "[") {
+                j = mate[j].unwrap_or(j);
+            }
+            j += 1;
+        }
+        let Some((b0, b1)) = body else {
+            i += 1;
+            continue;
+        };
+        for k in b0..b1 {
+            let t = &toks[k];
+            if t.kind == Kind::Ident
+                && (t.text == "unwrap" || t.text == "expect")
+                && k > 0
+                && toks[k - 1].text == "."
+                && k + 1 < n
+                && toks[k + 1].text == "("
+            {
+                out.push(Finding::new(
+                    RULE_HOT_PATH_PANIC,
+                    &spec.file,
+                    t.line,
+                    format!(
+                        "`.{}()` in hot-path fn `{name}` — a panic here kills the whole \
+                         scheduler; degrade through Result",
+                        t.text
+                    ),
+                ));
+            }
+            if t.kind == Kind::Ident
+                && matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+                && k + 1 < n
+                && toks[k + 1].text == "!"
+            {
+                out.push(Finding::new(
+                    RULE_HOT_PATH_PANIC,
+                    &spec.file,
+                    t.line,
+                    format!("`{}!` in hot-path fn `{name}`", t.text),
+                ));
+            }
+            if spec.index_check && t.kind == Kind::Punct && t.text == "[" && k > b0 {
+                let prev = &toks[k - 1];
+                let indexable = prev.kind == Kind::Ident
+                    && !matches!(prev.text.as_str(), "mut" | "ref" | "return" | "in" | "as")
+                    || (prev.kind == Kind::Punct && (prev.text == "]" || prev.text == ")"));
+                if indexable {
+                    out.push(Finding::new(
+                        RULE_HOT_PATH_PANIC,
+                        &spec.file,
+                        t.line,
+                        format!(
+                            "slice/array index in hot-path fn `{name}` — use \
+                             get/get_mut or iterators (an out-of-range panic kills the \
+                             scheduler)"
+                        ),
+                    ));
+                }
+            }
+        }
+        i = b1 + 1;
+    }
+}
+
+/// wall-clock: Instant::now / SystemTime::now in numeric kernels.
+fn wall_clock(rel: &str, toks: &[Tok], tests: &[(usize, usize)], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind == Kind::Ident
+            && (t.text == "Instant" || t.text == "SystemTime")
+            && i + 2 < toks.len()
+            && toks[i + 1].text == "::"
+            && toks[i + 2].text == "now"
+            && !in_ranges(tests, i)
+        {
+            out.push(Finding::new(
+                RULE_WALL_CLOCK,
+                rel,
+                t.line,
+                format!("`{}::now` in a numeric module — timing belongs to callers", t.text),
+            ));
+        }
+    }
+}
+
+/// Run every structural rule over one file. Annotations are applied later
+/// by [`finalize`], after cross-file rules (artifact-keys) have appended
+/// their findings.
+pub fn analyze_source(rel: &str, src: &str, cfg: &Config) -> FileAnalysis {
+    let lexed = lex(src);
+    let mate = bracket_mates(&lexed.toks);
+    let tests = test_ranges(&lexed.toks, &mate);
+    let mut findings = Vec::new();
+
+    ordered_reduction(rel, &lexed.toks, &mate, &mut findings);
+    if cfg.nondet_paths.iter().any(|p| rel.starts_with(p.as_str())) {
+        nondet_iteration(rel, &lexed.toks, &tests, &mut findings);
+    }
+    if cfg.wallclock_paths.iter().any(|p| rel.starts_with(p.as_str())) {
+        wall_clock(rel, &lexed.toks, &tests, &mut findings);
+    }
+    for spec in &cfg.hot_paths {
+        if spec.file == rel {
+            hot_path_panic(spec, &lexed.toks, &mate, &tests, &mut findings);
+        }
+    }
+    FileAnalysis { rel: rel.to_string(), lexed, findings }
+}
+
+/// Apply allow-annotations: mark covered findings `allowed`, then turn
+/// annotation problems (malformed / missing reason / unknown rule /
+/// unused) into findings of the `annotation` meta-rule.
+pub fn finalize(fa: &mut FileAnalysis) {
+    let mut ann_findings = Vec::new();
+    let mut valid: Vec<(u32, Vec<String>, usize)> = Vec::new(); // (target_line, rules, ann idx)
+    let mut used = vec![false; fa.lexed.annotations.len()];
+
+    for (ai, ann) in fa.lexed.annotations.iter().enumerate() {
+        if let Some(msg) = &ann.malformed {
+            ann_findings.push(Finding::new(
+                RULE_ANNOTATION,
+                &fa.rel,
+                ann.line,
+                format!("malformed qadx-lint annotation: {msg}"),
+            ));
+            continue;
+        }
+        let mut ok = true;
+        for r in &ann.rules {
+            if !KNOWN_RULES.contains(&r.as_str()) {
+                ann_findings.push(Finding::new(
+                    RULE_ANNOTATION,
+                    &fa.rel,
+                    ann.line,
+                    format!("unknown rule `{r}` in allow annotation"),
+                ));
+                ok = false;
+            }
+        }
+        if !ann.has_reason {
+            ann_findings.push(Finding::new(
+                RULE_ANNOTATION,
+                &fa.rel,
+                ann.line,
+                "allow annotation requires a reason: `allow(..) -- <why>`".to_string(),
+            ));
+            ok = false;
+        }
+        if !ok {
+            continue;
+        }
+        // trailing comment covers its own line; a standalone comment
+        // covers the next code line
+        let target = if fa.lexed.code_lines.contains(&ann.line) {
+            ann.line
+        } else {
+            match fa.lexed.code_lines.range(ann.line + 1..).next() {
+                Some(&l) => l,
+                None => continue,
+            }
+        };
+        valid.push((target, ann.rules.clone(), ai));
+    }
+
+    for f in fa.findings.iter_mut() {
+        for (target, rules, ai) in &valid {
+            if f.line == *target && rules.iter().any(|r| *r == f.rule) {
+                f.allowed = true;
+                used[*ai] = true;
+            }
+        }
+    }
+    for (target, _, ai) in &valid {
+        if !used[*ai] {
+            ann_findings.push(Finding::new(
+                RULE_ANNOTATION,
+                &fa.rel,
+                fa.lexed.annotations[*ai].line,
+                format!("unused allow annotation (no matching finding on line {target})"),
+            ));
+        }
+    }
+    fa.findings.extend(ann_findings);
+    fa.findings.sort_by(|a, b| (a.line, a.rule.clone()).cmp(&(b.line, b.rule.clone())));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(rel: &str, src: &str, cfg: &Config) -> Vec<Finding> {
+        let mut fa = analyze_source(rel, src, cfg);
+        finalize(&mut fa);
+        fa.findings
+    }
+
+    fn cfg_all(rel: &str) -> Config {
+        Config {
+            nondet_paths: vec![rel.to_string()],
+            wallclock_paths: vec![rel.to_string()],
+            hot_paths: vec![HotPathSpec {
+                file: rel.to_string(),
+                fns: vec!["hot".to_string()],
+                index_check: true,
+            }],
+        }
+    }
+
+    #[test]
+    fn captured_accumulation_fires_and_chunk_local_does_not() {
+        let bad = "fn f(xs: &mut [f32]) { let mut total = 0f32; \
+                   pool::for_chunks(n, xs, c, |i, chunk| { for v in chunk.iter() { total += v; } }); }";
+        let f = run("m.rs", bad, &cfg_all("m.rs"));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, RULE_ORDERED_REDUCTION);
+        let ok = "fn f(xs: &mut [f32]) { \
+                  pool::for_chunks(n, xs, c, |i, chunk| { let mut acc = 0f32; \
+                  for v in 0..chunk.len() { acc += 1.0; chunk[v] += acc; } }); }";
+        assert!(run("m.rs", ok, &cfg_all("m.rs")).is_empty());
+    }
+
+    #[test]
+    fn assigned_sum_into_captured_state_fires() {
+        let bad = "fn f() { pool::for_chunks2(w, a, 1, b, 1, |i, ca, cb| { \
+                   self.total = ca.iter().sum::<f32>(); }); }";
+        let f = run("m.rs", bad, &cfg_all("m.rs"));
+        assert_eq!(f.len(), 1, "{f:?}");
+        let ok = "fn f() { pool::for_chunks2(w, a, 1, b, 1, |i, ca, cb| { \
+                  let s: f32 = ca.iter().sum(); cb[0] = s; }); }";
+        assert!(run("m.rs", ok, &cfg_all("m.rs")).is_empty());
+    }
+
+    #[test]
+    fn hashmap_fires_only_in_covered_modules_and_not_on_use_lines() {
+        let src = "use std::collections::HashMap;\nstruct S { m: HashMap<u32, u32> }\n";
+        let f = run("rust/src/api/serve.rs", src, &Config::repo());
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+        assert!(run("rust/src/data/loader.rs", src, &Config::repo()).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt_from_module_rules() {
+        let src = "#[cfg(test)]\nmod tests {\n  use std::collections::HashMap;\n  fn t() { let m: HashMap<u32,u32> = HashMap::new(); let _ = Instant::now(); }\n}\n";
+        assert!(run("m.rs", src, &cfg_all("m.rs")).is_empty());
+    }
+
+    #[test]
+    fn hot_path_panics_and_indexing_fire_by_function() {
+        let src = "impl S {\n fn hot(&mut self) { let x = self.q.pop().unwrap(); self.rows[x] = 1; }\n fn cold(&mut self) { self.q.pop().unwrap(); }\n}";
+        let f = run("m.rs", src, &cfg_all("m.rs"));
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == RULE_HOT_PATH_PANIC));
+        assert!(f.iter().any(|x| x.msg.contains("unwrap")));
+        assert!(f.iter().any(|x| x.msg.contains("index")));
+    }
+
+    #[test]
+    fn wall_clock_fires_in_numeric_modules() {
+        let src = "fn f() { let t = Instant::now(); }";
+        let f = run("m.rs", src, &cfg_all("m.rs"));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, RULE_WALL_CLOCK);
+    }
+
+    #[test]
+    fn allow_annotation_suppresses_and_unused_or_reasonless_is_flagged() {
+        let ok = "struct S {\n  // qadx-lint: allow(nondet-iteration) -- never iterated\n  m: HashMap<u32, u32>,\n}";
+        let f = run("m.rs", ok, &cfg_all("m.rs"));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].allowed, "{f:?}");
+        let no_reason = "struct S {\n  // qadx-lint: allow(nondet-iteration)\n  m: HashMap<u32, u32>,\n}";
+        let f = run("m.rs", no_reason, &cfg_all("m.rs"));
+        assert!(f.iter().any(|x| x.rule == RULE_ANNOTATION && !x.allowed));
+        assert!(f.iter().any(|x| x.rule == RULE_NONDET_ITERATION && !x.allowed));
+        let unused = "// qadx-lint: allow(wall-clock) -- nothing here\nfn f() {}\n";
+        let f = run("m.rs", unused, &cfg_all("m.rs"));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].msg.contains("unused"), "{f:?}");
+    }
+
+    #[test]
+    fn trailing_annotation_covers_its_own_line() {
+        let src =
+            "struct S { m: HashMap<u32, u32> } // qadx-lint: allow(nondet-iteration) -- ok here";
+        let f = run("m.rs", src, &cfg_all("m.rs"));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].allowed);
+    }
+
+    #[test]
+    fn unknown_rule_in_annotation_is_a_finding() {
+        let src = "// qadx-lint: allow(made-up-rule) -- why\nfn f() {}\n";
+        let f = run("m.rs", src, &cfg_all("m.rs"));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].msg.contains("unknown rule"));
+    }
+}

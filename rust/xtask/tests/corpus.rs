@@ -1,0 +1,174 @@
+//! Corpus tests: every violating snippet under `corpus/` must fire its
+//! rule, every clean twin must stay silent, and the real repo tree must
+//! lint clean (zero unallowed findings) — the same invariant CI gates on.
+
+use std::path::Path;
+
+use xtask::keys;
+use xtask::rules::{
+    Config, Finding, RULE_ANNOTATION, RULE_ARTIFACT_KEYS, RULE_HOT_PATH_PANIC,
+    RULE_NONDET_ITERATION, RULE_ORDERED_REDUCTION, RULE_WALL_CLOCK,
+};
+use xtask::{lint_snippet, run_lint};
+
+fn unallowed<'a>(fs: &'a [Finding]) -> Vec<&'a Finding> {
+    fs.iter().filter(|f| !f.allowed).collect()
+}
+
+fn rules_of(fs: &[&Finding]) -> Vec<String> {
+    fs.iter().map(|f| f.rule.clone()).collect()
+}
+
+#[test]
+fn ordered_reduction_bad_fires() {
+    let src = include_str!("../corpus/ordered_reduction_bad.rs");
+    // ordered-reduction applies everywhere, module path irrelevant
+    let fs = lint_snippet("rust/src/anywhere.rs", src, &Config::repo());
+    let un = unallowed(&fs);
+    assert_eq!(un.len(), 2, "{un:?}");
+    assert!(un.iter().all(|f| f.rule == RULE_ORDERED_REDUCTION), "{un:?}");
+    // one per accumulation site: `acc +=` and the assigned `.sum()`
+    let lines: Vec<u32> = un.iter().map(|f| f.line).collect();
+    assert!(lines[0] < lines[1], "sorted by line: {lines:?}");
+}
+
+#[test]
+fn ordered_reduction_ok_is_clean() {
+    let src = include_str!("../corpus/ordered_reduction_ok.rs");
+    let fs = lint_snippet("rust/src/anywhere.rs", src, &Config::repo());
+    assert!(unallowed(&fs).is_empty(), "{fs:?}");
+}
+
+#[test]
+fn nondet_iteration_bad_fires_in_covered_module() {
+    let src = include_str!("../corpus/nondet_iteration_bad.rs");
+    let fs = lint_snippet("rust/src/quant/fake.rs", src, &Config::repo());
+    let un = unallowed(&fs);
+    assert_eq!(un.len(), 3, "struct field, fn signature, constructor: {un:?}");
+    assert!(un.iter().all(|f| f.rule == RULE_NONDET_ITERATION), "{un:?}");
+    // the `use` line alone is never a finding
+    assert!(un.iter().all(|f| f.line > 4), "{un:?}");
+}
+
+#[test]
+fn nondet_iteration_bad_is_out_of_scope_elsewhere() {
+    let src = include_str!("../corpus/nondet_iteration_bad.rs");
+    let fs = lint_snippet("rust/src/util/pool.rs", src, &Config::repo());
+    assert!(unallowed(&fs).is_empty(), "pool.rs is not a nondet module: {fs:?}");
+}
+
+#[test]
+fn nondet_iteration_ok_is_clean() {
+    let src = include_str!("../corpus/nondet_iteration_ok.rs");
+    let fs = lint_snippet("rust/src/quant/fake.rs", src, &Config::repo());
+    assert!(unallowed(&fs).is_empty(), "BTreeMap + test-only HashMap: {fs:?}");
+}
+
+#[test]
+fn hot_path_panic_bad_fires_per_function() {
+    let src = include_str!("../corpus/hot_path_panic_bad.rs");
+    // serve.rs config lists `admit` with index_check=true
+    let fs = lint_snippet("rust/src/api/serve.rs", src, &Config::repo());
+    let un = unallowed(&fs);
+    assert_eq!(un.len(), 4, "expect, index, unwrap, panic!: {un:?}");
+    assert!(un.iter().all(|f| f.rule == RULE_HOT_PATH_PANIC), "{un:?}");
+    // cold_helper's unwrap (line 17) is outside the hot-fn list
+    assert!(un.iter().all(|f| f.line < 15), "{un:?}");
+}
+
+#[test]
+fn hot_path_panic_ok_is_clean() {
+    let src = include_str!("../corpus/hot_path_panic_ok.rs");
+    let fs = lint_snippet("rust/src/api/serve.rs", src, &Config::repo());
+    assert!(unallowed(&fs).is_empty(), "Result shape + test scaffolding: {fs:?}");
+}
+
+#[test]
+fn wall_clock_bad_fires_in_numeric_module() {
+    let src = include_str!("../corpus/wall_clock_bad.rs");
+    let fs = lint_snippet("rust/src/util/gemm.rs", src, &Config::repo());
+    let un = unallowed(&fs);
+    assert_eq!(un.len(), 1, "{un:?}");
+    assert_eq!(un[0].rule, RULE_WALL_CLOCK);
+    // the same file is clean where kernels are allowed to time themselves
+    let fs2 = lint_snippet("rust/src/api/cli.rs", src, &Config::repo());
+    assert!(unallowed(&fs2).is_empty(), "{fs2:?}");
+}
+
+#[test]
+fn allow_annotation_keeps_gate_green_but_reports() {
+    let src = include_str!("../corpus/allow_ok.rs");
+    let fs = lint_snippet("rust/src/quant/fake.rs", src, &Config::repo());
+    assert!(unallowed(&fs).is_empty(), "{fs:?}");
+    let allowed: Vec<&Finding> = fs.iter().filter(|f| f.allowed).collect();
+    assert_eq!(allowed.len(), 3, "standalone + two trailing annotations: {allowed:?}");
+    assert!(allowed.iter().all(|f| f.rule == RULE_NONDET_ITERATION), "{allowed:?}");
+}
+
+#[test]
+fn allow_without_reason_is_a_finding_and_suppresses_nothing() {
+    let src = include_str!("../corpus/allow_missing_reason.rs");
+    let fs = lint_snippet("rust/src/quant/fake.rs", src, &Config::repo());
+    let un = unallowed(&fs);
+    let rules = rules_of(&un);
+    assert!(rules.contains(&RULE_ANNOTATION.to_string()), "{un:?}");
+    assert!(rules.contains(&RULE_NONDET_ITERATION.to_string()), "{un:?}");
+}
+
+#[test]
+fn allow_with_unknown_rule_is_a_finding() {
+    let src = include_str!("../corpus/allow_unknown_rule.rs");
+    let fs = lint_snippet("rust/src/quant/fake.rs", src, &Config::repo());
+    let un = unallowed(&fs);
+    assert!(!un.is_empty() && un.iter().any(|f| f.rule == RULE_ANNOTATION), "{un:?}");
+}
+
+#[test]
+fn stale_allow_is_a_finding() {
+    let src = include_str!("../corpus/stale_allow.rs");
+    let fs = lint_snippet("rust/src/quant/fake.rs", src, &Config::repo());
+    let un = unallowed(&fs);
+    assert_eq!(un.len(), 1, "{un:?}");
+    assert_eq!(un[0].rule, RULE_ANNOTATION);
+    assert!(un[0].msg.contains("unused"), "{un:?}");
+}
+
+#[test]
+fn keys_corpus_cross_check_fires_both_ways_and_honors_allow() {
+    let rs_src = include_str!("../corpus/keys/runtime.rs");
+    let py_src = include_str!("../corpus/keys/aot.py");
+    let rust = keys::rust_keys("rust/src/runtime/fake.rs", &xtask::lexer::lex(rs_src));
+    let python = keys::python_keys("python/compile/aot.py", py_src);
+    let srcs = vec![("python/compile/aot.py".to_string(), py_src.to_string())];
+    let (r, p) = keys::cross_check(&rust, &python, &srcs);
+    // Rust-only key
+    assert_eq!(r.len(), 1, "{r:?}");
+    assert_eq!(r[0].rule, RULE_ARTIFACT_KEYS);
+    assert!(r[0].msg.contains("qad_rust_only"), "{r:?}");
+    // Python side: one excused by annotation, one genuinely one-sided
+    assert_eq!(p.len(), 2, "{p:?}");
+    let excused: Vec<_> = p.iter().filter(|f| f.allowed).collect();
+    let live: Vec<_> = p.iter().filter(|f| !f.allowed).collect();
+    assert_eq!(excused.len(), 1, "{p:?}");
+    assert!(excused[0].msg.contains("nqt_external_probe"), "{p:?}");
+    assert_eq!(live.len(), 1, "{p:?}");
+    assert!(live[0].msg.contains("mse_python_only"), "{p:?}");
+    // the shared keys (fwd_bf16, scalars, fwd_last_*) never surface
+    assert!(!p.iter().chain(r.iter()).any(|f| f.msg.contains("fwd_")), "{p:?} {r:?}");
+}
+
+#[test]
+fn real_tree_lints_clean() {
+    // the invariant CI gates on: zero unallowed findings over the repo
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("..");
+    let fs = run_lint(&root, &Config::repo()).expect("repo tree is readable");
+    let un = unallowed(&fs);
+    assert!(
+        un.is_empty(),
+        "unallowed findings in the tree:\n{}",
+        un.iter()
+            .map(|f| format!("  {}:{}: [{}] {}", f.file, f.line, f.rule, f.msg))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
