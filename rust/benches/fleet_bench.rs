@@ -1,0 +1,129 @@
+//! Fleet-serving benchmarks: closed-loop throughput of the multi-worker
+//! router at 1/2/4 workers, the cost of a mid-run worker kill (retried
+//! work rides on the survivors), and admission-control behavior under a
+//! saturating burst. Entirely hermetic — a synthetic manifest on the
+//! reference backend, no artifacts, no XLA; the per-token compute is the
+//! same stateful prefill/step path BENCH_refgemm's ref_decode_step rows
+//! measure, so fleet rows read as "that, times worker parallelism, plus
+//! router overhead".
+//!
+//! `cargo bench --bench fleet_bench` → BENCH_fleet.json at the repo
+//! root; `QADX_BENCH_SMOKE=1` clamps to one iteration for CI bit-rot
+//! checks. A CLI twin of the closed/open-loop scenarios:
+//! `qadx serve-bench --fleet --workers N --arrival-rate L`.
+
+use qadx::api::{FaultPlan, FleetCfg, Saturated, Session};
+use qadx::eval::SampleCfg;
+use qadx::runtime::{synthetic_manifest_json, BackendKind, SynthSpec};
+use qadx::util::bench::BenchSuite;
+
+/// The bench model: refgemm-bench's shape (every GEMM crosses the
+/// parallel threshold; small enough to iterate).
+fn bench_spec() -> SynthSpec {
+    let mut spec = SynthSpec::small("fleet-bench");
+    spec.d_model = 128;
+    spec.n_heads = 4;
+    spec.d_ff = 256;
+    spec.vocab = 512;
+    spec.seq_len = 32;
+    spec.batch = 4;
+    spec
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("fleet");
+    let dir = std::env::temp_dir().join(format!("qadx_fleet_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    std::fs::write(dir.join("manifest.json"), synthetic_manifest_json(&[bench_spec()]))
+        .expect("write manifest");
+    let session = Session::builder()
+        .artifacts_dir(&dir)
+        .runs_dir(dir.join("runs"))
+        .backend(BackendKind::Reference)
+        .build()
+        .expect("reference session");
+    let ms = session.model("fleet-bench").expect("bench model");
+
+    let sample = SampleCfg { temperature: 0.6, top_p: 0.95, max_new: 12, seed: 7 };
+    let reqs = 32usize;
+    let prompts: Vec<Vec<i32>> =
+        (0..reqs).map(|i| vec![2 + (i % 8) as i32, 3, 4, 5]).collect();
+    // nominal decode work per iteration (rows may stop early at EOS)
+    let units = (reqs * sample.max_new) as f64;
+
+    // ---- closed-loop throughput vs worker count ----------------------
+    for workers in [1usize, 2, 4] {
+        let mut cfg = FleetCfg::default();
+        cfg.workers = workers;
+        cfg.sample = sample;
+        let mut fleet = ms.fleet("fwd_nvfp4", &cfg).expect("fleet");
+        suite.run_units(&format!("fleet_w{workers}_closed_req32_toks"), 1, 5, units, || {
+            for p in &prompts {
+                fleet.submit(p.clone()).expect("closed-loop submit");
+            }
+            let responses = fleet.drain().expect("drain");
+            assert_eq!(responses.len(), reqs);
+            std::hint::black_box(responses);
+        });
+        println!("  {}", fleet.stats().summary());
+        fleet.shutdown();
+    }
+
+    // ---- chaos overhead: worker 1 killed mid-run ---------------------
+    // A killed worker stays dead for the fleet's lifetime, so each
+    // iteration builds a fresh fleet; the delta vs fleet_w2_closed is
+    // the price of one death (requeue + re-prefill on the survivor)
+    // plus per-iteration fleet construction.
+    suite.run_units("fleet_w2_chaos_kill_req32_toks", 0, 3, units, || {
+        let mut cfg = FleetCfg::default();
+        cfg.workers = 2;
+        cfg.sample = sample;
+        cfg.fault = FaultPlan { kills: vec![(1, 2)], ..FaultPlan::default() };
+        let mut fleet = ms.fleet("fwd_nvfp4", &cfg).expect("chaos fleet");
+        for p in &prompts {
+            fleet.submit(p.clone()).expect("chaos submit");
+        }
+        let responses = fleet.drain().expect("chaos drain");
+        assert_eq!(responses.len(), reqs);
+        assert!(responses.iter().all(|r| r.error.is_none()), "no request may degrade");
+        fleet.shutdown();
+        std::hint::black_box(responses);
+    });
+
+    // ---- saturating burst against a bounded queue --------------------
+    // 64 requests offered at once to 2 workers behind queue_cap 8:
+    // admission sheds the overflow with Saturated{retry_after_ms}; the
+    // row's time covers the admitted requests only (units = offered, so
+    // units_per_sec reads as offered-load capacity under shedding).
+    let burst = 64usize;
+    let burst_prompts: Vec<Vec<i32>> =
+        (0..burst).map(|i| vec![2 + (i % 8) as i32, 3, 4, 5]).collect();
+    suite.run_units("fleet_w2_qcap8_burst64_offered", 0, 3, burst as f64, || {
+        let mut cfg = FleetCfg::default();
+        cfg.workers = 2;
+        cfg.sample = sample;
+        cfg.queue_cap = 8;
+        let mut fleet = ms.fleet("fwd_nvfp4", &cfg).expect("burst fleet");
+        let mut shed = 0usize;
+        for p in &burst_prompts {
+            match fleet.submit(p.clone()) {
+                Ok(_) => {}
+                Err(e) if e.downcast_ref::<Saturated>().is_some() => shed += 1,
+                Err(e) => panic!("unexpected submit error: {e:#}"),
+            }
+        }
+        let responses = fleet.drain().expect("burst drain");
+        assert_eq!(responses.len() + shed, burst);
+        println!(
+            "  burst: {} completed, {} shed ({})",
+            responses.len(),
+            shed,
+            fleet.stats().summary()
+        );
+        fleet.shutdown();
+        std::hint::black_box(responses);
+    });
+
+    std::fs::remove_dir_all(&dir).ok();
+    suite.finish();
+}

@@ -123,6 +123,16 @@ pub const COMMANDS: &[CommandDef] = &[
             flag("max-delay-ms", "F", "25", "coalescing partial-batch flush deadline"),
             flag("max-new", "N", "12", "tokens generated per request"),
             flag("telemetry", "FILE", "(off)", "JSONL event log (or QADX_TELEMETRY_JSONL)"),
+            flag("fleet", "", "false", "multi-worker fleet mode (router + N worker engines)"),
+            flag("workers", "N", "2", "fleet worker engines (threads)"),
+            flag(
+                "arrival-rate",
+                "F",
+                "0",
+                "open-loop arrivals, req/s (0 = closed loop: submit all up front)",
+            ),
+            flag("queue-cap", "N", "0", "fleet router queue bound (0 = unbounded)"),
+            flag("deadline-ms", "F", "(off)", "fleet per-request deadline (admission + expiry)"),
         ],
     },
     CommandDef {
@@ -416,6 +426,14 @@ pub struct ServeBenchArgs {
     pub max_delay_ms: f64,
     pub max_new: usize,
     pub telemetry: Option<PathBuf>,
+    /// `--fleet`: route requests through a multi-worker fleet instead of
+    /// one `ServeHandle`.
+    pub fleet: bool,
+    pub workers: usize,
+    /// Open-loop arrival rate in req/s (0 = closed loop).
+    pub arrival_rate: f64,
+    pub queue_cap: usize,
+    pub deadline_ms: Option<f64>,
 }
 
 impl ServeBenchArgs {
@@ -426,6 +444,10 @@ impl ServeBenchArgs {
             "nvfp4" => vec!["fwd_nvfp4".to_string()],
             other => bail!("--fwd must be both|bf16|nvfp4, got {other:?}"),
         };
+        let workers = parse_flag(args, "workers", 2usize)?;
+        if workers == 0 {
+            bail!("--workers must be >= 1");
+        }
         Ok(ServeBenchArgs {
             session: SessionArgs::parse(args)?,
             model: args.get_or("model", "ace-sim"),
@@ -436,6 +458,17 @@ impl ServeBenchArgs {
             max_delay_ms: parse_flag(args, "max-delay-ms", 25.0)?,
             max_new: parse_flag(args, "max-new", 12)?,
             telemetry: args.get("telemetry").map(PathBuf::from),
+            fleet: args.bool("fleet"),
+            workers,
+            arrival_rate: parse_flag(args, "arrival-rate", 0.0)?,
+            queue_cap: parse_flag(args, "queue-cap", 0usize)?,
+            deadline_ms: match args.get("deadline-ms") {
+                Some(v) => Some(
+                    v.parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("invalid value {v:?} for --deadline-ms"))?,
+                ),
+                None => None,
+            },
         })
     }
 }
@@ -558,5 +591,31 @@ mod tests {
         let cmd = find_command("serve-bench").unwrap();
         assert!(check_flags(cmd, &parse("serve-bench --decode step --slots 2")).is_ok());
         assert!(render_usage(cmd).contains("--decode"), "usage must list --decode");
+    }
+
+    #[test]
+    fn serve_bench_fleet_flags() {
+        let s = ServeBenchArgs::parse(&parse("serve-bench")).unwrap();
+        assert!(!s.fleet);
+        assert_eq!(s.workers, 2);
+        assert_eq!(s.arrival_rate, 0.0);
+        assert_eq!(s.queue_cap, 0);
+        assert_eq!(s.deadline_ms, None);
+        let s = ServeBenchArgs::parse(&parse(
+            "serve-bench --fleet --workers 3 --arrival-rate 50 --queue-cap 8 --deadline-ms 250",
+        ))
+        .unwrap();
+        assert!(s.fleet);
+        assert_eq!(s.workers, 3);
+        assert_eq!(s.arrival_rate, 50.0);
+        assert_eq!(s.queue_cap, 8);
+        assert_eq!(s.deadline_ms, Some(250.0));
+        // zero workers and typo'd values are errors, not silent defaults
+        assert!(ServeBenchArgs::parse(&parse("serve-bench --workers 0")).is_err());
+        assert!(ServeBenchArgs::parse(&parse("serve-bench --arrival-rate fast")).is_err());
+        assert!(ServeBenchArgs::parse(&parse("serve-bench --deadline-ms soon")).is_err());
+        let cmd = find_command("serve-bench").unwrap();
+        assert!(check_flags(cmd, &parse("serve-bench --fleet --workers 4")).is_ok());
+        assert!(render_usage(cmd).contains("--fleet"), "usage must list --fleet");
     }
 }

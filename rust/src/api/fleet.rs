@@ -1,0 +1,1342 @@
+//! `api::fleet` — fault-tolerant multi-worker serving.
+//!
+//! N worker engines (one OS thread each, own backend instance + own
+//! continuous-batching slot scheduler over the stateful prefill/step
+//! decode path) behind a front [`FleetHandle`] router:
+//!
+//! ```text
+//!   submit ──> Router ──[admission: queue cap / deadline estimate]──┐
+//!                │                                                  │
+//!                │  bounded queue        Saturated{retry_after_ms} <┘
+//!                ▼
+//!        dispatch (least-loaded live worker)
+//!        ┌──────────┬──────────┬──────────┐
+//!        ▼          ▼          ▼          ▼
+//!     worker 0   worker 1   ...       worker N-1     (thread each)
+//!     [slots]    [slots]              [slots]
+//!        └──────────┴──── events ─────┴───> Done / Failed / Died
+//!                                             │
+//!                      retry (budgeted, decorrelated jitter) / requeue
+//! ```
+//!
+//! **Failure semantics.** A failed prefill/step (real or injected) fails
+//! only that request's current attempt: the router requeues it under a
+//! budgeted [`RetryPolicy`] and a healthy worker re-prefills it from
+//! scratch. A dead worker ([`FaultPlan`] kill, or a closed channel) has
+//! every request assigned to it requeued the same way. Because each
+//! request samples from its **own** RNG stream — seeded from
+//! `(sample.seed, request id)` only, never from slot index, worker
+//! index, or attempt number — and decode rows are independent by the
+//! decode-session contract, a retried response is **bit-identical** to
+//! the same request in a no-fault run. That is the chaos-test oracle.
+//!
+//! **Determinism.** Every fault decision is a pure function of the plan
+//! seed and stream-local counters (request id, attempt, step index,
+//! worker round) — no wall clock, no ambient RNG — so a chaos run
+//! replays exactly. Wall time is only *measured* (latency/TTFT stats)
+//! and only consulted for deadline expiry, which is itself exercised
+//! deterministically in tests via a zero deadline.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::tokenizer as tok;
+use crate::eval::{sample_token_with, SampleCfg, SampleScratch};
+use crate::runtime::{BackendKind, DecodeSession, Engine, ModelRuntime};
+use crate::util::json::Json;
+use crate::util::retry::{RetryPolicy, RetryState};
+use crate::util::rng::Rng;
+use crate::util::StatsWindow;
+
+use super::serve::{Saturated, ServeWeights};
+use super::telemetry::JsonlAppender;
+
+/// SplitMix64 golden-ratio constant, used to decorrelate derived seeds.
+const SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+/// Domain tags for derived RNG streams (request sampling / fault kinds).
+const TAG_REQUEST: u64 = 0x517c_c1b7_2722_0a95;
+const TAG_PREFILL: u64 = 0x9216_d5d9_8979_fb1b;
+const TAG_STEP: u64 = 0xd131_0ba6_98df_b5ac;
+
+/// The per-request sampling stream: a function of the fleet sample seed
+/// and the request id **only**. Slot index, worker index, and retry
+/// attempt deliberately do not enter — this is what makes a retried
+/// generation bit-identical to the no-fault run.
+fn request_rng(sample_seed: u64, id: u64) -> Rng {
+    Rng::new(sample_seed ^ id.wrapping_mul(SEED_MIX) ^ TAG_REQUEST)
+}
+
+/// Deterministic fault-injection plan. All decisions replay exactly:
+/// seeded hashes of stream-local counters, never wall-clock or shared
+/// RNG state (which would make them scheduling-order dependent).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Seed for every probabilistic decision below.
+    pub seed: u64,
+    /// `(worker, round)`: worker dies before executing its local decode
+    /// round `round` (rounds count executed step-rounds, starting at 0).
+    pub kills: Vec<(usize, usize)>,
+    /// Probability an attempt's prefill fails (keyed on id + attempt, so
+    /// a retry is a fresh draw, not a doomed replay).
+    pub prefill_fail_p: f64,
+    /// Probability any single decode step fails (keyed on id + attempt +
+    /// step index).
+    pub step_fail_p: f64,
+    /// Injected latency per executed decode round, in ms. Pure timing —
+    /// never consulted by any decision — so it perturbs interleavings
+    /// without perturbing results.
+    pub step_delay_ms: f64,
+}
+
+impl FaultPlan {
+    /// Does `worker` die before executing its decode round `round`?
+    pub fn kills_at(&self, worker: usize, round: usize) -> bool {
+        self.kills.iter().any(|&(w, r)| w == worker && r == round)
+    }
+
+    /// Seeded coin for one (kind, id, attempt, step) event.
+    fn coin(&self, kind: u64, id: u64, attempt: u32, step: u64, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let mut rng = Rng::new(
+            self.seed
+                ^ kind
+                ^ id.wrapping_mul(SEED_MIX)
+                ^ (attempt as u64).wrapping_mul(0xff51_afd7_ed55_8ccd)
+                ^ step.wrapping_mul(0xc4ce_b9fe_1a85_ec53),
+        );
+        rng.f64() < p
+    }
+
+    pub fn fail_prefill(&self, id: u64, attempt: u32) -> bool {
+        self.coin(TAG_PREFILL, id, attempt, 0, self.prefill_fail_p)
+    }
+
+    pub fn fail_step(&self, id: u64, attempt: u32, step: usize) -> bool {
+        self.coin(TAG_STEP, id, attempt, step as u64, self.step_fail_p)
+    }
+
+    /// Whether this plan injects anything at all.
+    pub fn is_noop(&self) -> bool {
+        self.kills.is_empty()
+            && self.prefill_fail_p <= 0.0
+            && self.step_fail_p <= 0.0
+            && self.step_delay_ms <= 0.0
+    }
+}
+
+/// Fleet configuration (see [`FleetHandle`]).
+#[derive(Clone, Debug)]
+pub struct FleetCfg {
+    /// Worker engines (threads). Must be >= 1.
+    pub workers: usize,
+    pub sample: SampleCfg,
+    pub weights: ServeWeights,
+    /// Per-worker in-flight slot width (0 = the model's batch size).
+    pub max_slots: usize,
+    /// Router queue bound: `submit` past this many *router-queued*
+    /// requests returns [`Saturated`]. 0 = unbounded.
+    pub queue_cap: usize,
+    /// Per-request deadline. Admission rejects a request whose estimated
+    /// queue wait already blows this; a request still *router-queued*
+    /// past it degrades (error set) instead of waiting forever. Requests
+    /// already dispatched to a worker are never expired — their worker
+    /// either finishes them or dies and they retry.
+    pub deadline_ms: Option<f64>,
+    /// Initial per-request service-time estimate feeding the admission
+    /// estimator (EWMA-updated from observed completions).
+    pub est_service_ms: f64,
+    /// Retry budget + backoff shape for requeued work.
+    pub retry: RetryPolicy,
+    /// Seed for the backoff jitter stream.
+    pub retry_seed: u64,
+    /// Deterministic fault injection (chaos tests; `default()` = none).
+    pub fault: FaultPlan,
+    /// JSONL event log path; falls back to `QADX_TELEMETRY_JSONL`.
+    pub telemetry: Option<PathBuf>,
+}
+
+impl Default for FleetCfg {
+    fn default() -> FleetCfg {
+        FleetCfg {
+            workers: 2,
+            sample: SampleCfg::default(),
+            weights: ServeWeights::Random { seed: 3 },
+            max_slots: 0,
+            queue_cap: 0,
+            deadline_ms: None,
+            est_service_ms: 0.0,
+            retry: RetryPolicy::default(),
+            retry_seed: 0x4f1e_7e7a,
+            fault: FaultPlan::default(),
+            telemetry: None,
+        }
+    }
+}
+
+/// What the fleet serves — enough to rebuild an engine inside each
+/// worker thread (engines hold `Rc` internals and cannot cross threads,
+/// so workers construct their own from the artifacts root).
+#[derive(Clone, Debug)]
+pub struct FleetTarget {
+    pub artifacts_root: PathBuf,
+    pub backend: BackendKind,
+    pub model: String,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub fwd_key: String,
+}
+
+/// One completed (or degraded) fleet request.
+#[derive(Clone, Debug)]
+pub struct FleetResponse {
+    pub id: u64,
+    /// Full token row (prompt + completion, PAD-tailed); prompt-only when
+    /// the request degraded before generating.
+    pub row: Vec<i32>,
+    pub gen_tokens: usize,
+    pub latency_ms: f64,
+    pub ttft_ms: f64,
+    /// Which worker completed it (None when it degraded in the router).
+    pub worker: Option<usize>,
+    /// Attempt that produced this response (0 = first try).
+    pub attempt: u32,
+    /// Set when the request degraded: retry budget exhausted, deadline
+    /// expired while queued, or no live worker remained.
+    pub error: Option<String>,
+}
+
+/// Per-worker slice of [`FleetStats`].
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub requests: usize,
+    pub gen_tokens: usize,
+    /// Failed attempts reported by this worker (each either retried or
+    /// degraded by the router).
+    pub failures: usize,
+    pub dead: bool,
+    /// Decode rounds executed (reported at clean shutdown; 0 for a
+    /// worker that died).
+    pub rounds: usize,
+    /// Mean per-round slot occupancy (reported at clean shutdown).
+    pub occupancy: f64,
+}
+
+/// Aggregate fleet counters: global windows + per-worker slices.
+#[derive(Clone, Debug, Default)]
+pub struct FleetStats {
+    pub fwd_key: String,
+    pub workers: usize,
+    pub submitted: usize,
+    pub completed: usize,
+    /// Requests that finished with `error` set.
+    pub degraded: usize,
+    /// Submissions rejected with [`Saturated`].
+    pub shed: usize,
+    /// Attempts requeued under the retry budget.
+    pub retries: usize,
+    pub worker_deaths: usize,
+    /// Requests expired by the deadline while still router-queued.
+    pub expired: usize,
+    pub latencies_ms: StatsWindow,
+    pub ttft_ms: StatsWindow,
+    /// Router-queue wait per request (submit -> dispatch).
+    pub queue_wait_ms: StatsWindow,
+    pub per_worker: Vec<WorkerStats>,
+}
+
+impl FleetStats {
+    pub fn latency_p(&self, p: f64) -> f64 {
+        self.latencies_ms.percentile(p)
+    }
+
+    /// Fraction of submissions shed by admission control.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.submitted + self.shed;
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / offered as f64
+        }
+    }
+
+    /// Rounds-weighted mean slot occupancy across workers that reported.
+    pub fn occupancy(&self) -> f64 {
+        let rounds: usize = self.per_worker.iter().map(|w| w.rounds).sum();
+        if rounds == 0 {
+            return 0.0;
+        }
+        self.per_worker.iter().map(|w| w.occupancy * w.rounds as f64).sum::<f64>()
+            / rounds as f64
+    }
+
+    /// One-line report (CLI / bench output).
+    pub fn summary(&self) -> String {
+        format!(
+            "fleet {:<10} {}w | {}/{} ok ({} degraded, {} shed, {} expired) | \
+             {} retries {} deaths | lat p50 {:.0}ms p95 {:.0}ms p99 {:.0}ms | \
+             ttft p50 {:.0}ms | occ {:.2} | shed rate {:.2}",
+            self.fwd_key,
+            self.workers,
+            self.completed - self.degraded,
+            self.submitted,
+            self.degraded,
+            self.shed,
+            self.expired,
+            self.retries,
+            self.worker_deaths,
+            self.latency_p(50.0),
+            self.latency_p(95.0),
+            self.latency_p(99.0),
+            self.ttft_ms.percentile(50.0),
+            self.occupancy(),
+            self.shed_rate(),
+        )
+    }
+}
+
+/// Router -> worker messages.
+enum ToWorker {
+    Job(Job),
+    Stop,
+}
+
+struct Job {
+    id: u64,
+    prompt: Vec<i32>,
+    attempt: u32,
+    submitted: Instant,
+}
+
+/// Worker -> router events.
+enum WorkerEvent {
+    Ready {
+        worker: usize,
+    },
+    InitFailed {
+        worker: usize,
+        error: String,
+    },
+    Done {
+        worker: usize,
+        id: u64,
+        attempt: u32,
+        row: Vec<i32>,
+        gen_tokens: usize,
+        ttft_ms: f64,
+        execute_ms: f64,
+    },
+    /// One attempt failed (real or injected prefill/step fault); the
+    /// router decides whether to retry or degrade.
+    Failed {
+        worker: usize,
+        id: u64,
+        error: String,
+    },
+    /// The worker is gone (fault-plan kill). Everything assigned to it
+    /// must be requeued by the router.
+    Died {
+        worker: usize,
+    },
+    /// Clean shutdown report (occupancy/rounds for `FleetStats`).
+    Stopped {
+        worker: usize,
+        rounds: usize,
+        occupancy: f64,
+    },
+}
+
+/// Router-side request record — the single source of truth for requeue
+/// (workers never need to echo prompts back).
+struct ReqState {
+    prompt: Vec<i32>,
+    submitted: Instant,
+    attempt: u32,
+    retry: RetryState,
+    /// Which worker currently holds this request (None = router-queued).
+    assigned: Option<usize>,
+}
+
+/// The fleet front end: admission control, dispatch, retry/requeue, and
+/// aggregation. Single-threaded itself (like [`super::ServeHandle`], the
+/// router advances when the caller calls `submit` / `poll` / `drain`);
+/// the workers run free on their own threads.
+pub struct FleetHandle {
+    seq_len: usize,
+    queue_cap: usize,
+    deadline_ms: Option<f64>,
+    est_service_ms: f64,
+    slots_per_worker: usize,
+    retry_policy: RetryPolicy,
+    retry_rng: Rng,
+    senders: Vec<Option<Sender<ToWorker>>>,
+    events: Receiver<WorkerEvent>,
+    joins: Vec<Option<JoinHandle<()>>>,
+    outstanding: Vec<usize>,
+    /// Ids waiting in the router for a worker slot (dispatch order).
+    queue: VecDeque<u64>,
+    /// All unresolved requests (router-queued and worker-assigned).
+    /// BTreeMap: requeue-on-death iterates it, and iteration order must
+    /// be deterministic.
+    requests: BTreeMap<u64, ReqState>,
+    next_id: u64,
+    completed: Vec<FleetResponse>,
+    stats: FleetStats,
+    telemetry: Option<JsonlAppender>,
+}
+
+impl FleetHandle {
+    /// Spawn the worker fleet and wait for every worker to come up (or
+    /// fail construction synchronously). Requires a stateful-decode
+    /// backend: the fleet reuses the continuous-batching path per
+    /// worker, and retry bit-identity is defined in terms of it.
+    pub fn new(target: FleetTarget, weights: Vec<f32>, cfg: &FleetCfg) -> Result<FleetHandle> {
+        if cfg.workers == 0 {
+            bail!("fleet needs at least one worker");
+        }
+        let slots = (if cfg.max_slots == 0 { target.batch } else { cfg.max_slots }).max(1);
+        let weights = Arc::new(weights);
+        let (event_tx, event_rx) = channel::<WorkerEvent>();
+        let mut senders = Vec::with_capacity(cfg.workers);
+        let mut joins = Vec::with_capacity(cfg.workers);
+        for worker in 0..cfg.workers {
+            let (tx, rx) = channel::<ToWorker>();
+            let wcfg = WorkerCfg {
+                worker,
+                target: target.clone(),
+                weights: weights.clone(),
+                sample: cfg.sample,
+                slots,
+                fault: cfg.fault.clone(),
+            };
+            let ev = event_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("qadx-fleet-{worker}"))
+                .spawn(move || worker_main(wcfg, rx, ev))
+                .context("spawning fleet worker thread")?;
+            senders.push(Some(tx));
+            joins.push(Some(join));
+        }
+        drop(event_tx);
+
+        // Synchronous startup barrier: every worker reports Ready or
+        // InitFailed before the constructor returns, so a missing
+        // stateful-decode capability (e.g. PJRT) fails loudly here.
+        let mut ready = 0usize;
+        let mut init_err: Option<String> = None;
+        while ready < cfg.workers && init_err.is_none() {
+            match event_rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(WorkerEvent::Ready { .. }) => ready += 1,
+                Ok(WorkerEvent::InitFailed { worker, error }) => {
+                    init_err = Some(format!("fleet worker {worker} failed to start: {error}"));
+                }
+                Ok(_) => {}
+                Err(_) => {
+                    init_err = Some("fleet worker failed to start (timeout)".to_string());
+                }
+            }
+        }
+        if let Some(err) = init_err {
+            for tx in senders.iter().flatten() {
+                let _ = tx.send(ToWorker::Stop);
+            }
+            for join in joins.iter_mut().filter_map(|j| j.take()) {
+                let _ = join.join();
+            }
+            bail!("{err}");
+        }
+
+        let mut telemetry = match cfg.telemetry.as_ref() {
+            Some(p) => Some(JsonlAppender::open(p)?),
+            None => JsonlAppender::from_env("QADX_TELEMETRY_JSONL"),
+        };
+        if let Some(tel) = telemetry.as_mut() {
+            let _ = tel.append(&Json::obj(vec![
+                ("event", Json::Str("fleet".into())),
+                ("model", Json::Str(target.model.clone())),
+                ("fwd", Json::Str(target.fwd_key.clone())),
+                ("workers", Json::Num(cfg.workers as f64)),
+                ("slots", Json::Num(slots as f64)),
+                ("chaos", Json::Bool(!cfg.fault.is_noop())),
+            ]));
+        }
+
+        Ok(FleetHandle {
+            seq_len: target.seq_len,
+            queue_cap: cfg.queue_cap,
+            deadline_ms: cfg.deadline_ms,
+            est_service_ms: cfg.est_service_ms.max(0.0),
+            slots_per_worker: slots,
+            retry_policy: cfg.retry,
+            retry_rng: Rng::new(cfg.retry_seed),
+            senders,
+            events: event_rx,
+            joins,
+            outstanding: vec![0; cfg.workers],
+            queue: VecDeque::new(),
+            requests: BTreeMap::new(),
+            next_id: 0,
+            completed: Vec::new(),
+            stats: FleetStats {
+                fwd_key: target.fwd_key.clone(),
+                workers: cfg.workers,
+                per_worker: vec![WorkerStats::default(); cfg.workers],
+                ..Default::default()
+            },
+            telemetry,
+        })
+    }
+
+    /// Workers still accepting work.
+    pub fn live_workers(&self) -> usize {
+        self.senders.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Requests waiting in the router (excludes worker-assigned ones).
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Unresolved requests (router-queued + worker-assigned).
+    pub fn pending(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn stats(&self) -> &FleetStats {
+        &self.stats
+    }
+
+    /// Estimated wait for a newly queued request: backlog x per-request
+    /// service estimate over live capacity.
+    fn est_wait_ms(&self, depth: usize) -> f64 {
+        let capacity = (self.live_workers() * self.slots_per_worker).max(1);
+        depth as f64 * self.est_service_ms / capacity as f64
+    }
+
+    /// Submit one request. Admission control applies *before* enqueue:
+    /// a full router queue, or an estimated wait that already blows the
+    /// deadline, returns the typed [`Saturated`] error. Returns the
+    /// request id (matched by [`FleetResponse::id`]).
+    pub fn submit(&mut self, prompt: Vec<i32>) -> Result<u64> {
+        let seq_len = self.seq_len;
+        if prompt.is_empty() || prompt.len() >= seq_len {
+            bail!(
+                "prompt length {} out of range (need 1..{seq_len} to leave room to generate)",
+                prompt.len()
+            );
+        }
+        if self.live_workers() == 0 {
+            bail!("fleet has no live workers");
+        }
+        let depth = self.queue.len();
+        let over_cap = self.queue_cap > 0 && depth >= self.queue_cap;
+        let est_wait = self.est_wait_ms(depth + 1);
+        let over_deadline = match self.deadline_ms {
+            Some(d) => est_wait > d,
+            None => false,
+        };
+        if over_cap || over_deadline {
+            self.stats.shed += 1;
+            let hint = est_wait.max(self.est_service_ms).max(1.0);
+            if let Some(tel) = self.telemetry.as_mut() {
+                let _ = tel.append(&Json::obj(vec![
+                    ("event", Json::Str("reject".into())),
+                    ("queued", Json::Num(depth as f64)),
+                    (
+                        "reason",
+                        Json::Str((if over_cap { "queue-cap" } else { "deadline" }).into()),
+                    ),
+                    ("retry_after_ms", Json::Num(hint)),
+                ]));
+            }
+            return Err(Saturated { retry_after_ms: hint }.into());
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stats.submitted += 1;
+        self.requests.insert(
+            id,
+            ReqState {
+                prompt,
+                submitted: Instant::now(),
+                attempt: 0,
+                retry: RetryState::default(),
+                assigned: None,
+            },
+        );
+        self.queue.push_back(id);
+        self.dispatch();
+        self.pump(false)?;
+        Ok(id)
+    }
+
+    /// Advance the router: absorb worker events, expire router-queued
+    /// requests past their deadline, refill workers. Returns requests
+    /// newly resolved by this call.
+    pub fn poll(&mut self) -> Result<usize> {
+        let before = self.completed.len();
+        self.pump(false)?;
+        self.expire();
+        self.dispatch();
+        Ok(self.completed.len() - before)
+    }
+
+    /// Run every submitted request to resolution and take the responses.
+    /// Never hangs: if every worker dies, the remaining requests degrade
+    /// with an error instead of waiting forever.
+    pub fn drain(&mut self) -> Result<Vec<FleetResponse>> {
+        while !self.requests.is_empty() {
+            self.expire();
+            self.dispatch();
+            if self.requests.is_empty() {
+                break;
+            }
+            if self.live_workers() == 0 {
+                self.degrade_all("no live workers remain");
+                break;
+            }
+            self.pump(true)?;
+        }
+        Ok(std::mem::take(&mut self.completed))
+    }
+
+    /// Stop every worker, join the threads, and absorb their shutdown
+    /// reports into `stats`. Unresolved requests (drain not called, or
+    /// not called to completion) degrade with an error.
+    pub fn shutdown(&mut self) {
+        for tx in self.senders.iter_mut() {
+            if let Some(t) = tx.take() {
+                let _ = t.send(ToWorker::Stop);
+            }
+        }
+        for join in self.joins.iter_mut() {
+            if let Some(j) = join.take() {
+                let _ = j.join();
+            }
+        }
+        // Workers are gone; everything left in the event channel is
+        // final (Done/Stopped/Died stragglers).
+        loop {
+            match self.events.try_recv() {
+                Ok(ev) => self.on_event(ev),
+                Err(_) => break,
+            }
+        }
+        self.degrade_all("fleet shut down");
+    }
+
+    /// Degrade every unresolved request with `reason` (no-live-worker /
+    /// shutdown paths — never hang a caller).
+    fn degrade_all(&mut self, reason: &str) {
+        let ids: Vec<u64> = self.requests.keys().copied().collect();
+        for id in ids {
+            self.resolve_degraded(id, format!("request abandoned: {reason}"));
+        }
+        self.queue.clear();
+    }
+
+    /// Dispatch router-queued requests to the least-loaded live worker
+    /// (ties to the lowest index) while free slots exist.
+    fn dispatch(&mut self) {
+        loop {
+            if self.queue.is_empty() {
+                return;
+            }
+            let mut best: Option<(usize, usize)> = None;
+            for (w, tx) in self.senders.iter().enumerate() {
+                if tx.is_none() {
+                    continue;
+                }
+                let load = self.outstanding.get(w).copied().unwrap_or(usize::MAX);
+                if load >= self.slots_per_worker {
+                    continue;
+                }
+                if best.map(|(_, b)| load < b).unwrap_or(true) {
+                    best = Some((w, load));
+                }
+            }
+            let Some((w, _)) = best else { return };
+            let Some(id) = self.queue.pop_front() else { return };
+            let Some(req) = self.requests.get_mut(&id) else { continue };
+            let job = Job {
+                id,
+                prompt: req.prompt.clone(),
+                attempt: req.attempt,
+                submitted: req.submitted,
+            };
+            let sent = match self.senders.get(w).and_then(|s| s.as_ref()) {
+                Some(tx) => tx.send(ToWorker::Job(job)).is_ok(),
+                None => false,
+            };
+            if sent {
+                req.assigned = Some(w);
+                if let Some(o) = self.outstanding.get_mut(w) {
+                    *o += 1;
+                }
+            } else {
+                // channel closed under us: the worker is dead even if its
+                // Died event has not been absorbed yet
+                self.queue.push_front(id);
+                if let Some(tx) = self.senders.get_mut(w) {
+                    *tx = None;
+                }
+            }
+        }
+    }
+
+    /// Absorb worker events. `block` waits (bounded) for at least one
+    /// event when none is immediately available.
+    fn pump(&mut self, block: bool) -> Result<()> {
+        let mut got = false;
+        loop {
+            match self.events.try_recv() {
+                Ok(ev) => {
+                    got = true;
+                    self.on_event(ev);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    // every worker thread is gone (the event channel has
+                    // no senders left) — even ones that never managed to
+                    // report; drain() must degrade, not spin
+                    for tx in self.senders.iter_mut() {
+                        *tx = None;
+                    }
+                    return Ok(());
+                }
+            }
+        }
+        if block && !got && !self.requests.is_empty() {
+            // Bounded wait: deadline expiry and dead-worker detection
+            // must run even if no event ever arrives.
+            match self.events.recv_timeout(Duration::from_millis(20)) {
+                Ok(ev) => self.on_event(ev),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    for tx in self.senders.iter_mut() {
+                        *tx = None;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn on_event(&mut self, ev: WorkerEvent) {
+        match ev {
+            WorkerEvent::Ready { .. } | WorkerEvent::InitFailed { .. } => {}
+            WorkerEvent::Done { worker, id, attempt, row, gen_tokens, ttft_ms, execute_ms } => {
+                if let Some(o) = self.outstanding.get_mut(worker) {
+                    *o = o.saturating_sub(1);
+                }
+                let Some(req) = self.requests.remove(&id) else { return };
+                let now = Instant::now();
+                let latency_ms = now.duration_since(req.submitted).as_secs_f64() * 1000.0;
+                let wait_ms = (latency_ms - execute_ms).max(0.0);
+                self.stats.completed += 1;
+                self.stats.latencies_ms.push(latency_ms);
+                self.stats.ttft_ms.push(ttft_ms);
+                self.stats.queue_wait_ms.push(wait_ms);
+                // EWMA service estimate feeds admission control
+                self.est_service_ms = if self.est_service_ms <= 0.0 {
+                    execute_ms
+                } else {
+                    0.9 * self.est_service_ms + 0.1 * execute_ms
+                };
+                if let Some(ws) = self.stats.per_worker.get_mut(worker) {
+                    ws.requests += 1;
+                    ws.gen_tokens += gen_tokens;
+                }
+                if let Some(tel) = self.telemetry.as_mut() {
+                    let _ = tel.append(&Json::obj(vec![
+                        ("event", Json::Str("request".into())),
+                        ("id", Json::Num(id as f64)),
+                        ("worker", Json::Num(worker as f64)),
+                        ("attempt", Json::Num(attempt as f64)),
+                        ("ttft_ms", Json::Num(ttft_ms)),
+                        ("latency_ms", Json::Num(latency_ms)),
+                        ("gen_tokens", Json::Num(gen_tokens as f64)),
+                    ]));
+                }
+                self.completed.push(FleetResponse {
+                    id,
+                    row,
+                    gen_tokens,
+                    latency_ms,
+                    ttft_ms,
+                    worker: Some(worker),
+                    attempt,
+                    error: None,
+                });
+            }
+            WorkerEvent::Failed { worker, id, error } => {
+                if let Some(o) = self.outstanding.get_mut(worker) {
+                    *o = o.saturating_sub(1);
+                }
+                if let Some(ws) = self.stats.per_worker.get_mut(worker) {
+                    ws.failures += 1;
+                }
+                self.requeue(id, Some(worker), &error);
+            }
+            WorkerEvent::Died { worker } => {
+                let was_live = match self.senders.get_mut(worker) {
+                    Some(tx) => tx.take().is_some(),
+                    None => false,
+                };
+                if was_live || !self.stats.per_worker.get(worker).map(|w| w.dead).unwrap_or(true)
+                {
+                    self.stats.worker_deaths += 1;
+                }
+                if let Some(ws) = self.stats.per_worker.get_mut(worker) {
+                    ws.dead = true;
+                }
+                if let Some(o) = self.outstanding.get_mut(worker) {
+                    *o = 0;
+                }
+                // Requeue everything the dead worker held (in flight or
+                // still in its channel) — ascending id order.
+                let orphans: Vec<u64> = self
+                    .requests
+                    .iter()
+                    .filter(|(_, r)| r.assigned == Some(worker))
+                    .map(|(&id, _)| id)
+                    .collect();
+                if let Some(tel) = self.telemetry.as_mut() {
+                    let _ = tel.append(&Json::obj(vec![
+                        ("event", Json::Str("worker-death".into())),
+                        ("worker", Json::Num(worker as f64)),
+                        ("requeued", Json::Num(orphans.len() as f64)),
+                    ]));
+                }
+                for id in orphans {
+                    self.requeue(id, None, "worker died");
+                }
+            }
+            WorkerEvent::Stopped { worker, rounds, occupancy } => {
+                if let Some(ws) = self.stats.per_worker.get_mut(worker) {
+                    ws.rounds = rounds;
+                    ws.occupancy = occupancy;
+                }
+            }
+        }
+    }
+
+    /// One attempt failed: charge the retry budget and put the request
+    /// back at the *front* of the router queue (it has already waited),
+    /// or degrade it when the budget is spent.
+    fn requeue(&mut self, id: u64, worker: Option<usize>, error: &str) {
+        let Some(req) = self.requests.get_mut(&id) else { return };
+        let delay =
+            self.retry_policy.next_delay(&mut req.retry, &mut self.retry_rng);
+        match delay {
+            Some(backoff_ms) => {
+                req.attempt += 1;
+                req.assigned = None;
+                let attempt = req.attempt;
+                self.stats.retries += 1;
+                self.queue.push_front(id);
+                if let Some(tel) = self.telemetry.as_mut() {
+                    let mut fields = vec![
+                        ("event", Json::Str("retry".into())),
+                        ("id", Json::Num(id as f64)),
+                        ("attempt", Json::Num(attempt as f64)),
+                        ("backoff_ms", Json::Num(backoff_ms)),
+                        ("error", Json::Str(error.to_string())),
+                    ];
+                    if let Some(w) = worker {
+                        fields.push(("worker", Json::Num(w as f64)));
+                    }
+                    let _ = tel.append(&Json::obj(fields));
+                }
+            }
+            None => {
+                let msg = format!(
+                    "retry budget exhausted after {} attempts: {error}",
+                    req.retry.attempts
+                );
+                self.resolve_degraded(id, msg);
+            }
+        }
+    }
+
+    /// Expire router-queued requests past the deadline (dispatched ones
+    /// are the workers' to finish).
+    fn expire(&mut self) {
+        let Some(deadline) = self.deadline_ms else { return };
+        let now = Instant::now();
+        let expired: Vec<u64> = self
+            .queue
+            .iter()
+            .copied()
+            .filter(|id| match self.requests.get(id) {
+                Some(r) => {
+                    r.assigned.is_none()
+                        && now.duration_since(r.submitted).as_secs_f64() * 1000.0 >= deadline
+                }
+                None => false,
+            })
+            .collect();
+        for id in expired {
+            self.stats.expired += 1;
+            self.queue.retain(|&q| q != id);
+            let waited = match self.requests.get(&id) {
+                Some(r) => now.duration_since(r.submitted).as_secs_f64() * 1000.0,
+                None => 0.0,
+            };
+            if let Some(tel) = self.telemetry.as_mut() {
+                let _ = tel.append(&Json::obj(vec![
+                    ("event", Json::Str("expired".into())),
+                    ("id", Json::Num(id as f64)),
+                    ("waited_ms", Json::Num(waited)),
+                ]));
+            }
+            self.resolve_degraded(id, format!("deadline exceeded ({deadline} ms) while queued"));
+        }
+    }
+
+    /// Resolve `id` as degraded: prompt-only row, error set.
+    fn resolve_degraded(&mut self, id: u64, error: String) {
+        let Some(req) = self.requests.remove(&id) else { return };
+        self.queue.retain(|&q| q != id);
+        let now = Instant::now();
+        let latency_ms = now.duration_since(req.submitted).as_secs_f64() * 1000.0;
+        let mut row = vec![tok::PAD; self.seq_len];
+        for (dst, src) in row.iter_mut().zip(req.prompt.iter()) {
+            *dst = *src;
+        }
+        self.stats.completed += 1;
+        self.stats.degraded += 1;
+        self.stats.latencies_ms.push(latency_ms);
+        self.completed.push(FleetResponse {
+            id,
+            row,
+            gen_tokens: 0,
+            latency_ms,
+            ttft_ms: latency_ms,
+            worker: None,
+            attempt: req.attempt,
+            error: Some(error),
+        });
+    }
+}
+
+impl Drop for FleetHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Everything a worker thread needs to build its own engine (all Send).
+struct WorkerCfg {
+    worker: usize,
+    target: FleetTarget,
+    weights: Arc<Vec<f32>>,
+    sample: SampleCfg,
+    slots: usize,
+    fault: FaultPlan,
+}
+
+/// One in-flight row on a worker.
+struct WSlot {
+    id: u64,
+    attempt: u32,
+    row: Vec<i32>,
+    frontier: usize,
+    /// Per-request sampling stream (see [`request_rng`]) — carried in
+    /// the slot so a generation's draws are a pure function of the
+    /// request, not of its slot-mates.
+    rng: Rng,
+    gen: usize,
+    admitted: Instant,
+    ttft_ms: f64,
+}
+
+/// Worker-local scheduler state (one per thread; never crosses threads).
+struct WorkerInner {
+    worker: usize,
+    seq_len: usize,
+    sample: SampleCfg,
+    fault: FaultPlan,
+    session: Box<dyn DecodeSession>,
+    slots: Vec<Option<WSlot>>,
+    scratch: SampleScratch,
+    logits: Vec<f32>,
+    /// Executed decode rounds (the fault plan's kill coordinate).
+    rounds: usize,
+    occ_sum: f64,
+}
+
+impl WorkerInner {
+    fn init(cfg: &WorkerCfg) -> Result<WorkerInner> {
+        let engine = Engine::with_backend(&cfg.target.artifacts_root, cfg.target.backend)?;
+        let rt = ModelRuntime::new(&engine, &cfg.target.model)?;
+        let weights_buf = engine.upload_f32(&cfg.weights, &[cfg.weights.len()])?;
+        let opened = engine.open_decode(&rt.model, &cfg.target.fwd_key, &weights_buf, cfg.slots)?;
+        let Some(session) = opened else {
+            bail!(
+                "fleet serving requires a stateful-decode backend \
+                 (backend {} has none for {:?})",
+                engine.backend_kind(),
+                cfg.target.fwd_key
+            );
+        };
+        Ok(WorkerInner {
+            worker: cfg.worker,
+            seq_len: cfg.target.seq_len,
+            sample: cfg.sample,
+            fault: cfg.fault.clone(),
+            session,
+            slots: (0..cfg.slots).map(|_| None).collect(),
+            scratch: SampleScratch::default(),
+            logits: Vec::new(),
+            rounds: 0,
+            occ_sum: 0.0,
+        })
+    }
+
+    fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+
+    /// Prefill `job` into a free slot and sample its first token; short
+    /// generations (EOS / length caps) finish on the spot. A failed or
+    /// fault-injected prefill reports `Failed` — the router retries.
+    fn admit_job(&mut self, job: Job, tx: &Sender<WorkerEvent>) {
+        let Some(slot_idx) = self.free_slot() else { return };
+        if self.fault.fail_prefill(job.id, job.attempt) {
+            let _ = tx.send(WorkerEvent::Failed {
+                worker: self.worker,
+                id: job.id,
+                error: "injected prefill fault".to_string(),
+            });
+            return;
+        }
+        let t0 = Instant::now();
+        let np = job.prompt.len().min(self.seq_len.saturating_sub(1)).max(1);
+        let prompt = job.prompt.get(..np).unwrap_or(&job.prompt);
+        if let Err(e) = self.session.prefill(slot_idx, prompt, &mut self.logits) {
+            let _ = tx.send(WorkerEvent::Failed {
+                worker: self.worker,
+                id: job.id,
+                error: format!("prefill failed: {e:#}"),
+            });
+            return;
+        }
+        let mut rng = request_rng(self.sample.seed, job.id);
+        let next = sample_token_with(&self.sample, &mut rng, &self.logits, &mut self.scratch);
+        let now = Instant::now();
+        let ttft_ms = now.duration_since(job.submitted).as_secs_f64() * 1000.0;
+        let mut row = vec![tok::PAD; self.seq_len];
+        for (dst, src) in row.iter_mut().zip(prompt.iter()) {
+            *dst = *src;
+        }
+        if self.sample.max_new == 0 {
+            let _ = tx.send(WorkerEvent::Done {
+                worker: self.worker,
+                id: job.id,
+                attempt: job.attempt,
+                row,
+                gen_tokens: 0,
+                ttft_ms,
+                execute_ms: now.duration_since(t0).as_secs_f64() * 1000.0,
+            });
+            return;
+        }
+        if let Some(cell) = row.get_mut(np) {
+            *cell = next;
+        }
+        if next == tok::EOS || np + 1 >= self.seq_len || self.sample.max_new == 1 {
+            let _ = tx.send(WorkerEvent::Done {
+                worker: self.worker,
+                id: job.id,
+                attempt: job.attempt,
+                row,
+                gen_tokens: 1,
+                ttft_ms,
+                execute_ms: now.duration_since(t0).as_secs_f64() * 1000.0,
+            });
+        } else if let Some(slot) = self.slots.get_mut(slot_idx) {
+            *slot = Some(WSlot {
+                id: job.id,
+                attempt: job.attempt,
+                row,
+                frontier: np + 1,
+                rng,
+                gen: 1,
+                admitted: t0,
+                ttft_ms,
+            });
+        }
+    }
+
+    /// One decode round over every live slot (ascending order). Injected
+    /// and real step failures fail only that slot's attempt (`Failed`);
+    /// the other slots keep generating.
+    fn step_round(&mut self, tx: &Sender<WorkerEvent>) {
+        let width = self.slots.len();
+        let active = self.active();
+        if active == 0 {
+            return;
+        }
+        if self.fault.step_delay_ms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(self.fault.step_delay_ms / 1000.0));
+        }
+        for idx in 0..width {
+            let (id, attempt, last_tok, pos, gen) =
+                match self.slots.get(idx).and_then(|s| s.as_ref()) {
+                    Some(s) => {
+                        let t = s
+                            .frontier
+                            .checked_sub(1)
+                            .and_then(|i| s.row.get(i))
+                            .copied()
+                            .unwrap_or(tok::PAD);
+                        (s.id, s.attempt, t, s.frontier, s.gen)
+                    }
+                    None => continue,
+                };
+            if self.fault.fail_step(id, attempt, gen) {
+                if let Some(s) = self.slots.get_mut(idx) {
+                    *s = None;
+                }
+                let _ = tx.send(WorkerEvent::Failed {
+                    worker: self.worker,
+                    id,
+                    error: "injected step fault".to_string(),
+                });
+                continue;
+            }
+            let stepped = self.session.step(idx, last_tok, &mut self.logits);
+            if let Err(e) = stepped {
+                if let Some(s) = self.slots.get_mut(idx) {
+                    *s = None;
+                }
+                let _ = tx.send(WorkerEvent::Failed {
+                    worker: self.worker,
+                    id,
+                    error: format!("decode step failed: {e:#}"),
+                });
+                continue;
+            }
+            let Some(slot) = self.slots.get_mut(idx).and_then(|s| s.as_mut()) else { continue };
+            let next =
+                sample_token_with(&self.sample, &mut slot.rng, &self.logits, &mut self.scratch);
+            if let Some(cell) = slot.row.get_mut(pos) {
+                *cell = next;
+            }
+            slot.frontier += 1;
+            slot.gen += 1;
+            if next == tok::EOS || slot.frontier >= self.seq_len || slot.gen >= self.sample.max_new
+            {
+                if let Some(done) = self.slots.get_mut(idx).and_then(|s| s.take()) {
+                    let now = Instant::now();
+                    let _ = tx.send(WorkerEvent::Done {
+                        worker: self.worker,
+                        id: done.id,
+                        attempt: done.attempt,
+                        row: done.row,
+                        gen_tokens: done.gen,
+                        ttft_ms: done.ttft_ms,
+                        execute_ms: now.duration_since(done.admitted).as_secs_f64() * 1000.0,
+                    });
+                }
+            }
+        }
+        self.rounds += 1;
+        self.occ_sum += active as f64 / width as f64;
+    }
+
+    fn occupancy(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.occ_sum / self.rounds as f64
+        }
+    }
+}
+
+/// Worker thread body: build the engine, then loop
+/// `drain channel -> planned-kill check -> admit -> one decode round`.
+/// Blocks on the channel only when fully idle.
+fn worker_main(cfg: WorkerCfg, rx: Receiver<ToWorker>, tx: Sender<WorkerEvent>) {
+    let worker = cfg.worker;
+    let mut inner = match WorkerInner::init(&cfg) {
+        Ok(i) => i,
+        Err(e) => {
+            let _ = tx.send(WorkerEvent::InitFailed { worker, error: format!("{e:#}") });
+            return;
+        }
+    };
+    let _ = tx.send(WorkerEvent::Ready { worker });
+    let mut local: VecDeque<Job> = VecDeque::new();
+    loop {
+        if inner.active() == 0 && local.is_empty() {
+            match rx.recv() {
+                Ok(ToWorker::Job(j)) => local.push_back(j),
+                Ok(ToWorker::Stop) | Err(_) => {
+                    let _ = tx.send(WorkerEvent::Stopped {
+                        worker,
+                        rounds: inner.rounds,
+                        occupancy: inner.occupancy(),
+                    });
+                    return;
+                }
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(ToWorker::Job(j)) => local.push_back(j),
+                Ok(ToWorker::Stop) => {
+                    let _ = tx.send(WorkerEvent::Stopped {
+                        worker,
+                        rounds: inner.rounds,
+                        occupancy: inner.occupancy(),
+                    });
+                    return;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if inner.active() == 0 && local.is_empty() {
+                        return;
+                    }
+                    break;
+                }
+            }
+        }
+        // Planned kill: die before executing local round `r`. The router
+        // requeues everything this worker held (in flight AND queued in
+        // its channel) from its own request table.
+        if cfg.fault.kills_at(worker, inner.rounds) {
+            let _ = tx.send(WorkerEvent::Died { worker });
+            return;
+        }
+        while inner.free_slot().is_some() {
+            let Some(job) = local.pop_front() else { break };
+            inner.admit_job(job, &tx);
+        }
+        inner.step_round(&tx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_decisions_are_pure_functions_of_their_coordinates() {
+        let plan = FaultPlan {
+            seed: 9,
+            kills: vec![(1, 4)],
+            prefill_fail_p: 0.3,
+            step_fail_p: 0.2,
+            step_delay_ms: 0.0,
+        };
+        // replay-exact: the same coordinates always give the same answer
+        for id in 0..64u64 {
+            for attempt in 0..4u32 {
+                assert_eq!(plan.fail_prefill(id, attempt), plan.fail_prefill(id, attempt));
+                for step in 0..8usize {
+                    assert_eq!(
+                        plan.fail_step(id, attempt, step),
+                        plan.fail_step(id, attempt, step)
+                    );
+                }
+            }
+        }
+        assert!(plan.kills_at(1, 4));
+        assert!(!plan.kills_at(1, 3));
+        assert!(!plan.kills_at(0, 4));
+        // attempts decorrelate: a doomed attempt does not doom its retry
+        let doomed: Vec<u64> = (0..512).filter(|&id| plan.fail_prefill(id, 0)).collect();
+        assert!(!doomed.is_empty(), "p=0.3 over 512 ids must hit some");
+        let still_doomed =
+            doomed.iter().filter(|&&id| plan.fail_prefill(id, 1)).count();
+        assert!(
+            still_doomed < doomed.len(),
+            "retries must be fresh draws, not replays of the failed attempt"
+        );
+    }
+
+    #[test]
+    fn zero_probability_plan_is_noop() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_noop());
+        for id in 0..32u64 {
+            assert!(!plan.fail_prefill(id, 0));
+            assert!(!plan.fail_step(id, 0, 5));
+        }
+        assert!(!plan.kills_at(0, 0));
+    }
+
+    #[test]
+    fn request_rng_depends_on_id_and_seed_only() {
+        // identical streams for the same (seed, id) — the retry oracle
+        let mut a = request_rng(7, 3);
+        let mut b = request_rng(7, 3);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // different ids diverge
+        let mut c = request_rng(7, 4);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| c.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fleet_stats_summary_and_rates() {
+        let mut s = FleetStats {
+            fwd_key: "fwd_nvfp4".into(),
+            workers: 3,
+            submitted: 90,
+            completed: 90,
+            degraded: 2,
+            shed: 10,
+            retries: 4,
+            worker_deaths: 1,
+            per_worker: vec![WorkerStats::default(); 3],
+            ..Default::default()
+        };
+        for l in [10.0, 20.0, 30.0] {
+            s.latencies_ms.push(l);
+            s.ttft_ms.push(l / 2.0);
+        }
+        if let Some(w) = s.per_worker.get_mut(0) {
+            w.rounds = 10;
+            w.occupancy = 1.0;
+        }
+        if let Some(w) = s.per_worker.get_mut(1) {
+            w.rounds = 30;
+            w.occupancy = 0.5;
+        }
+        assert!((s.shed_rate() - 0.1).abs() < 1e-12);
+        // rounds-weighted: (10*1.0 + 30*0.5) / 40
+        assert!((s.occupancy() - 0.625).abs() < 1e-12);
+        let line = s.summary();
+        assert!(line.contains("3w"), "{line}");
+        assert!(line.contains("88/90 ok"), "{line}");
+        assert!(line.contains("1 deaths"), "{line}");
+        assert!(line.contains("shed rate 0.10"), "{line}");
+    }
+
+    #[test]
+    fn empty_fleet_stats_are_safe() {
+        let s = FleetStats::default();
+        assert_eq!(s.shed_rate(), 0.0);
+        assert_eq!(s.occupancy(), 0.0);
+        assert_eq!(s.latency_p(99.0), 0.0);
+        assert!(s.summary().contains("0/0 ok"));
+    }
+}

@@ -12,6 +12,10 @@
 //!   scheduler over stateful prefill/step decode (with a run-to-completion
 //!   batch-coalescing fallback for stateless backends) and optional JSONL
 //!   telemetry.
+//! * [`FleetHandle`] scales that to N worker engines behind a router with
+//!   admission control ([`Saturated`] backpressure), budgeted
+//!   retry/requeue of work from dead or failing workers, and a
+//!   deterministic fault-injection layer ([`FaultPlan`]) for chaos tests.
 //! * [`cli`] holds the typed command definitions the `qadx` binary parses
 //!   flags through, with usage text generated from the definitions.
 //!
@@ -32,14 +36,20 @@
 //! ```
 
 pub mod cli;
+pub mod fleet;
 pub mod method;
 pub mod serve;
 pub mod session;
 pub mod telemetry;
 
 pub use crate::eval::DecodeMode;
+pub use fleet::{
+    FaultPlan, FleetCfg, FleetHandle, FleetResponse, FleetStats, FleetTarget, WorkerStats,
+};
 pub use method::{MethodRef, MethodRegistry, RecoveryMethod};
-pub use serve::{Coalescer, ServeCfg, ServeHandle, ServeResponse, ServeStats, ServeWeights};
+pub use serve::{
+    Coalescer, Saturated, ServeCfg, ServeHandle, ServeResponse, ServeStats, ServeWeights,
+};
 pub use session::{
     default_recovery_cfg, default_recovery_data, default_recovery_lr, default_sample_cfg,
     recovered_path, ModelSession, Session, SessionBuilder,

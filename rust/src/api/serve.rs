@@ -35,6 +35,25 @@ use crate::util::StatsWindow;
 
 use super::telemetry::JsonlAppender;
 
+/// Typed admission-control rejection: the submission queue is at capacity
+/// (or the request's deadline cannot be met given the present backlog).
+/// Carried through `anyhow::Error`; recover it with
+/// `err.downcast_ref::<Saturated>()` and resubmit after the hint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Saturated {
+    /// Backpressure hint: estimated milliseconds until a slot frees up
+    /// (queue depth x estimated per-request service time).
+    pub retry_after_ms: f64,
+}
+
+impl std::fmt::Display for Saturated {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "saturated: retry after {:.1} ms", self.retry_after_ms)
+    }
+}
+
+impl std::error::Error for Saturated {}
+
 /// Where a server's weights come from (resolved by `ModelSession::server`).
 #[derive(Clone, Debug)]
 pub enum ServeWeights {
@@ -65,6 +84,11 @@ pub struct ServeCfg {
     /// Run one warm-up generation so compile/first-execute cost does not
     /// land on the first real request.
     pub warmup: bool,
+    /// Admission control: `submit` past this many queued (not yet
+    /// admitted/dispatched) requests returns the typed [`Saturated`]
+    /// error instead of growing the queue without bound. 0 = unbounded
+    /// (the pre-existing behavior).
+    pub max_queue: usize,
     /// JSONL event log path; falls back to `QADX_TELEMETRY_JSONL`.
     pub telemetry: Option<std::path::PathBuf>,
 }
@@ -78,6 +102,7 @@ impl Default for ServeCfg {
             decode: DecodeMode::Auto,
             max_slots: 0,
             warmup: true,
+            max_queue: 0,
             telemetry: None,
         }
     }
@@ -183,6 +208,9 @@ pub struct ServeStats {
     /// Requests that ended with `ServeResponse::error` set (a failed
     /// prefill/step degraded the one request, not the scheduler).
     pub degraded: usize,
+    /// Submissions rejected with [`Saturated`] by the queue bound —
+    /// backpressure doing its job, not an error path.
+    pub shed: usize,
     /// Decode rounds executed by the continuous scheduler.
     pub decode_rounds: usize,
     /// Time spent inside prefill/step/generation calls.
@@ -318,6 +346,10 @@ pub struct ServeHandle<'e> {
     weights: Buffer,
     sched: Sched,
     next_id: u64,
+    max_queue: usize,
+    /// Coalescing deadline, reused as the retry-after floor when the
+    /// execute window is still empty.
+    max_batch_delay_ms: f64,
     completed: Vec<ServeResponse>,
     stats: ServeStats,
     telemetry: Option<JsonlAppender>,
@@ -466,6 +498,8 @@ impl<'e> ServeHandle<'e> {
             weights: weights_buf,
             sched,
             next_id: 0,
+            max_queue: cfg.max_queue,
+            max_batch_delay_ms: cfg.max_batch_delay_ms.max(0.0),
             completed: Vec::new(),
             stats: ServeStats { fwd_key: fwd_key.to_string(), compile_ms, ..Default::default() },
             telemetry,
@@ -485,10 +519,22 @@ impl<'e> ServeHandle<'e> {
         }
     }
 
+    /// Backpressure hint for a [`Saturated`] rejection: outstanding work
+    /// times the observed per-request service time (execute-window mean),
+    /// floored by the coalescing delay so a cold window still suggests a
+    /// real wait.
+    fn retry_after_hint(&self) -> f64 {
+        let per_req = self.stats.execute_ms.mean();
+        let outstanding = (self.queued() + self.in_flight()) as f64;
+        (outstanding * per_req).max(self.max_batch_delay_ms).max(1.0)
+    }
+
     /// Enqueue one request. Continuous mode admits it into a free slot
     /// immediately (prefill + first token); the coalescing fallback
     /// flushes inline whenever a full batch forms. Returns the request id
-    /// (matched by `ServeResponse::id`).
+    /// (matched by `ServeResponse::id`). When `cfg.max_queue` is set and
+    /// that many requests are already queued, returns the typed
+    /// [`Saturated`] error instead of enqueueing.
     pub fn submit(&mut self, prompt: Vec<i32>) -> Result<u64> {
         let seq_len = self.seq_len;
         if prompt.is_empty() || prompt.len() >= seq_len {
@@ -496,6 +542,18 @@ impl<'e> ServeHandle<'e> {
                 "prompt length {} out of range (need 1..{seq_len} to leave room to generate)",
                 prompt.len()
             );
+        }
+        if self.max_queue > 0 && self.queued() >= self.max_queue {
+            self.stats.shed += 1;
+            let hint = self.retry_after_hint();
+            if let Some(tel) = self.telemetry.as_mut() {
+                let _ = tel.append(&Json::obj(vec![
+                    ("event", Json::Str("reject".into())),
+                    ("queued", Json::Num(self.max_queue as f64)),
+                    ("retry_after_ms", Json::Num(hint)),
+                ]));
+            }
+            return Err(Saturated { retry_after_ms: hint }.into());
         }
         let id = self.next_id;
         self.next_id += 1;
@@ -944,6 +1002,17 @@ mod tests {
         assert_eq!(c.take_ready(now, false), Some(vec![3, 4, 5]));
         assert_eq!(c.take_ready(now, false), Some(vec![6]));
         assert_eq!(c.take_ready(now, false), None);
+    }
+
+    #[test]
+    fn saturated_error_downcasts_through_anyhow() {
+        let err: anyhow::Error = Saturated { retry_after_ms: 12.5 }.into();
+        let sat = err.downcast_ref::<Saturated>().expect("typed saturation error");
+        assert_eq!(sat.retry_after_ms, 12.5);
+        assert!(err.to_string().contains("retry after"), "{err}");
+        // a generic error must NOT downcast — callers can rely on the type
+        let other = anyhow::anyhow!("boom");
+        assert!(other.downcast_ref::<Saturated>().is_none());
     }
 
     #[test]

@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::distill::RecoveryOutcome;
 use crate::coordinator::{checkpoint, pipeline, PipelineScale, RecoveryCfg, TeacherReport};
@@ -21,6 +21,7 @@ use crate::quant::PtqReport;
 use crate::runtime::{BackendKind, Buffer, DecodeSession, Engine, Manifest, ModelRuntime};
 use crate::util::json::Json;
 
+use super::fleet::{FleetCfg, FleetHandle, FleetTarget};
 use super::method::{MethodRef, MethodRegistry, RecoveryMethod};
 use super::serve::{ServeCfg, ServeHandle, ServeWeights};
 
@@ -343,6 +344,38 @@ impl<'s> ModelSession<'s> {
             ServeWeights::Params(p) => p.clone(),
         };
         ServeHandle::new(&self.rt, fwd_key, &weights, cfg)
+    }
+
+    /// Start a fault-tolerant multi-worker fleet over one fwd artifact:
+    /// N worker engines (one thread each, each running the continuous
+    /// scheduler) behind a router with admission control and budgeted
+    /// retry. Weights resolve through this session exactly like
+    /// [`ModelSession::server`]; each worker rebuilds its own engine
+    /// from the manifest root (engines cannot cross threads). Requires
+    /// a stateful-decode backend.
+    pub fn fleet(&self, fwd_key: &str, cfg: &FleetCfg) -> Result<FleetHandle> {
+        if self.rt.model.vision {
+            bail!("fleet serving supports text models (got VLM {:?})", self.rt.model.name);
+        }
+        let weights = match &cfg.weights {
+            ServeWeights::Random { seed } => crate::coordinator::init_params(&self.rt.model, *seed),
+            ServeWeights::Teacher => self.teacher()?.as_ref().clone(),
+            ServeWeights::Method(name) => {
+                let method = self.session.method(name)?;
+                self.method_params(&*method)?
+            }
+            ServeWeights::Params(p) => p.clone(),
+        };
+        let engine = self.engine();
+        let target = FleetTarget {
+            artifacts_root: engine.manifest.root.clone(),
+            backend: engine.backend_kind(),
+            model: self.rt.model.name.clone(),
+            seq_len: self.rt.model.seq_len,
+            batch: self.rt.model.batch,
+            fwd_key: fwd_key.to_string(),
+        };
+        FleetHandle::new(target, weights, cfg)
     }
 
     /// The suites the model's post-training covered (its natural

@@ -12,7 +12,7 @@ use std::time::Instant;
 use qadx::api::cli::{
     self, EvalArgs, PilotArgs, RecoverArgs, ServeBenchArgs, SessionArgs,
 };
-use qadx::api::ServeCfg;
+use qadx::api::{FleetCfg, Saturated, ServeCfg};
 use qadx::coordinator::RecoveryCfg;
 use qadx::data::{tasks, SourceSpec, Suite};
 use qadx::eval::EvalCfg;
@@ -222,6 +222,10 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
         })
         .collect();
 
+    if sb.fleet {
+        return fleet_bench_loop(&sb, &ms, &prompts, session.seed());
+    }
+
     for fwd_key in &sb.fwd_keys {
         let mut cfg = ServeCfg::default();
         cfg.max_batch_delay_ms = sb.max_delay_ms;
@@ -243,6 +247,59 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
             sb.requests
         );
         println!("{} | wall {elapsed:.2}s", server.stats().summary());
+    }
+    Ok(())
+}
+
+/// Fleet-mode serve-bench: a router over `--workers` worker engines.
+/// With `--arrival-rate 0` every request is submitted up front (closed
+/// loop); with a positive rate, arrivals follow a seeded exponential
+/// inter-arrival process (open loop) so admission control actually sees
+/// bursts. `Saturated` rejections are shed (counted in the stats), not
+/// errors.
+fn fleet_bench_loop(
+    sb: &ServeBenchArgs,
+    ms: &qadx::api::ModelSession,
+    prompts: &[Vec<i32>],
+    seed: u64,
+) -> anyhow::Result<()> {
+    for fwd_key in &sb.fwd_keys {
+        let mut cfg = FleetCfg::default();
+        cfg.workers = sb.workers;
+        cfg.sample.max_new = sb.max_new;
+        cfg.max_slots = sb.slots;
+        cfg.queue_cap = sb.queue_cap;
+        cfg.deadline_ms = sb.deadline_ms;
+        cfg.telemetry = sb.telemetry.clone();
+        let mut fleet = ms.fleet(fwd_key, &cfg)?;
+        let mut arrivals = Rng::new(seed ^ 0x0f1e_e7a9);
+        let t0 = Instant::now();
+        for p in prompts {
+            if sb.arrival_rate > 0.0 {
+                // Exponential inter-arrival: -ln(1-u)/lambda, in seconds.
+                let u = arrivals.f64();
+                let dt = -(1.0 - u).max(1e-12).ln() / sb.arrival_rate;
+                std::thread::sleep(std::time::Duration::from_secs_f64(dt.min(1.0)));
+                fleet.poll()?;
+            }
+            match fleet.submit(p.clone()) {
+                Ok(_) => {}
+                Err(e) if e.downcast_ref::<Saturated>().is_some() => {}
+                Err(e) => return Err(e),
+            }
+        }
+        let responses = fleet.drain()?;
+        let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+        let stats = fleet.stats();
+        anyhow::ensure!(
+            responses.len() + stats.shed == sb.requests,
+            "fleet resolved {} + shed {} of {} requests",
+            responses.len(),
+            stats.shed,
+            sb.requests
+        );
+        println!("{} | wall {elapsed:.2}s", stats.summary());
+        fleet.shutdown();
     }
     Ok(())
 }

@@ -6,6 +6,7 @@ pub mod bench;
 pub mod gemm;
 pub mod json;
 pub mod pool;
+pub mod retry;
 pub mod rng;
 
 use std::io::Write;

@@ -1,0 +1,136 @@
+//! Budgeted retry with decorrelated-jitter backoff.
+//!
+//! The fleet router requeues work from dead or failing workers; a retry
+//! policy bounds how many times one request may bounce and spaces the
+//! attempts out. The jitter follows the "decorrelated jitter" rule
+//! (`delay = min(cap, uniform(base, prev * 3))`), which spreads retry
+//! storms without the synchronized waves plain exponential backoff
+//! produces. The RNG is injected, never ambient: given the same seed the
+//! whole delay schedule replays exactly, which is what lets chaos tests
+//! assert on retry behavior byte-for-byte.
+//!
+//! Nothing here sleeps or reads a clock — the policy only *computes*
+//! delays; the caller decides whether to wait them out (a live server)
+//! or merely record them (the deterministic test harness).
+
+use crate::util::rng::Rng;
+
+/// Retry budget + backoff shape. All decisions are pure functions of the
+/// policy, the attempt counter, and the injected RNG.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Floor of every backoff delay (and the first delay's scale).
+    pub base_ms: f64,
+    /// Ceiling on any single delay.
+    pub cap_ms: f64,
+    /// Maximum retry attempts per request (0 = never retry).
+    pub max_attempts: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { base_ms: 5.0, cap_ms: 500.0, max_attempts: 3 }
+    }
+}
+
+/// Per-request retry progress: how many attempts have been spent and the
+/// previous delay (the decorrelation state).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RetryState {
+    pub attempts: u32,
+    pub last_delay_ms: f64,
+}
+
+impl RetryPolicy {
+    /// Charge one attempt: `Some(delay_ms)` to retry after that backoff,
+    /// `None` when the budget is exhausted. Decorrelated jitter:
+    /// `delay = min(cap, uniform(base, last * 3))`, seeded from `rng`.
+    pub fn next_delay(&self, state: &mut RetryState, rng: &mut Rng) -> Option<f64> {
+        if state.attempts >= self.max_attempts {
+            return None;
+        }
+        state.attempts += 1;
+        let base = self.base_ms.max(0.0);
+        let prev = state.last_delay_ms.max(base);
+        let hi = (prev * 3.0).max(base);
+        let delay = (base + rng.f64() * (hi - base)).min(self.cap_ms.max(base));
+        state.last_delay_ms = delay;
+        Some(delay)
+    }
+
+    /// Attempts left for `state` under this policy.
+    pub fn remaining(&self, state: &RetryState) -> u32 {
+        self.max_attempts.saturating_sub(state.attempts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_replays_the_exact_delay_schedule() {
+        let policy = RetryPolicy { base_ms: 2.0, cap_ms: 100.0, max_attempts: 8 };
+        let run = |seed: u64| -> Vec<f64> {
+            let mut rng = Rng::new(seed);
+            let mut st = RetryState::default();
+            let mut out = Vec::new();
+            while let Some(d) = policy.next_delay(&mut st, &mut rng) {
+                out.push(d);
+            }
+            out
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a.len(), 8);
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        let c = run(43);
+        assert_ne!(a, c, "different seed should jitter differently");
+    }
+
+    #[test]
+    fn delays_respect_base_floor_and_cap_ceiling() {
+        let policy = RetryPolicy { base_ms: 4.0, cap_ms: 20.0, max_attempts: 64 };
+        let mut rng = Rng::new(7);
+        let mut st = RetryState::default();
+        while let Some(d) = policy.next_delay(&mut st, &mut rng) {
+            assert!(d >= policy.base_ms - 1e-12, "delay {d} below base");
+            assert!(d <= policy.cap_ms + 1e-12, "delay {d} above cap");
+        }
+        // with a tight cap the schedule saturates at the cap rather than
+        // growing without bound
+        assert!(st.last_delay_ms <= policy.cap_ms + 1e-12);
+    }
+
+    #[test]
+    fn attempt_cap_is_exact_and_zero_means_never() {
+        let policy = RetryPolicy { base_ms: 1.0, cap_ms: 10.0, max_attempts: 3 };
+        let mut rng = Rng::new(1);
+        let mut st = RetryState::default();
+        assert_eq!(policy.remaining(&st), 3);
+        for _ in 0..3 {
+            assert!(policy.next_delay(&mut st, &mut rng).is_some());
+        }
+        assert_eq!(policy.remaining(&st), 0);
+        assert!(policy.next_delay(&mut st, &mut rng).is_none(), "budget exhausted");
+        assert!(policy.next_delay(&mut st, &mut rng).is_none(), "stays exhausted");
+
+        let never = RetryPolicy { max_attempts: 0, ..policy };
+        let mut st = RetryState::default();
+        assert!(never.next_delay(&mut st, &mut rng).is_none());
+        assert_eq!(st.attempts, 0, "a refused retry must not charge the budget");
+    }
+
+    #[test]
+    fn delays_grow_from_base_not_from_zero() {
+        // first delay is uniform(base, base*3) — never below base even
+        // though last_delay starts at 0
+        let policy = RetryPolicy { base_ms: 10.0, cap_ms: 1000.0, max_attempts: 1 };
+        for seed in 0..32 {
+            let mut rng = Rng::new(seed);
+            let mut st = RetryState::default();
+            let d = policy.next_delay(&mut st, &mut rng).unwrap();
+            assert!((10.0..=30.0).contains(&d), "first delay {d} outside [base, 3*base]");
+        }
+    }
+}

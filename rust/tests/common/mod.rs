@@ -70,6 +70,45 @@ pub fn small_spec(name: &str) -> SynthSpec {
     SynthSpec::small(name)
 }
 
+/// Build the deterministic "clock" model (no blocks, one-hot positional
+/// rows, identity head): under greedy decode, position p always emits a
+/// filler token below position 6 and EOS at/after it, so a row with
+/// prompt length L generates exactly 7 - L tokens. Finish times are a
+/// pure function of prompt length — ideal for scheduler and chaos-test
+/// assertions (serve + fleet suites).
+pub fn clock_spec_and_params(name: &str) -> (SynthSpec, Vec<f32>) {
+    use qadx::data::tokenizer as tok;
+    let mut spec = small_spec(name);
+    spec.blocks = vec![];
+    spec.n_experts = 0;
+    spec.d_model = 16;
+    spec.vocab = 16;
+    spec.seq_len = 12;
+    spec.batch = 4;
+    let entry = spec.entry();
+    let (d, v, s) = (entry.d_model, entry.vocab, entry.seq_len);
+    let mut params = vec![0f32; entry.param_count];
+    for def in &entry.params {
+        let slice = &mut params[def.offset..def.offset + def.size];
+        match def.name.as_str() {
+            "pos_emb" => {
+                for t in 0..s {
+                    let g = if t >= 5 { tok::EOS as usize } else { 5 };
+                    slice[t * d + g] = 1.0;
+                }
+            }
+            "ln_f" => slice.fill(1.0),
+            "head" => {
+                for j in 0..d {
+                    slice[j * v + j] = 1.0;
+                }
+            }
+            _ => {}
+        }
+    }
+    (spec, params)
+}
+
 /// Where real AOT artifacts live, if any: `QADX_ARTIFACTS_DIR`, else the
 /// `make artifacts` location. None disables the artifact-backed tier.
 pub fn real_artifacts_dir() -> Option<PathBuf> {

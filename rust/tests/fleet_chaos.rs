@@ -1,0 +1,350 @@
+//! Chaos tests for `api::fleet` — the deterministic fault-injection
+//! oracle. Every test runs hermetically on the reference backend over
+//! the "clock" model (`common::clock_spec_and_params`): prompt length L
+//! generates exactly 7 - L tokens under greedy decode, so the *exact*
+//! token rows are known in advance and bit-identity across fault
+//! scenarios is a hard equality, not a statistical claim.
+//!
+//! The oracle: a fleet run with injected faults (worker kills, seeded
+//! prefill/step failures) must resolve every request to the **same
+//! row** a no-fault run produces — retries re-prefill on a healthy
+//! worker with a per-request RNG stream that depends only on
+//! (sample seed, request id). Wall-clock perturbations (injected step
+//! latency) and pool thread counts (1 vs 4) must not change a byte.
+
+mod common;
+
+use qadx::api::{
+    FaultPlan, FleetCfg, FleetResponse, Saturated, ServeCfg, ServeWeights, Session,
+};
+use qadx::data::tokenizer as tok;
+use qadx::runtime::BackendKind;
+use qadx::util::pool;
+use qadx::util::retry::RetryPolicy;
+
+/// Session over the clock model on the reference backend.
+fn clock_session(tag: &str, name: &str) -> (Session, Vec<f32>) {
+    let (spec, params) = common::clock_spec_and_params(name);
+    let artifacts = common::write_artifacts(tag, &[spec]);
+    let session = Session::builder()
+        .artifacts_dir(&artifacts)
+        .runs_dir(common::tmp_runs(tag))
+        .backend(BackendKind::Reference)
+        .build()
+        .expect("reference session");
+    (session, params)
+}
+
+/// The row the clock model must produce for `prompt`: fillers (token 5)
+/// up to position 6, EOS at 6, PAD tail.
+fn expected_row(prompt: &[i32], seq_len: usize) -> Vec<i32> {
+    let mut row = vec![tok::PAD; seq_len];
+    row[..prompt.len()].copy_from_slice(prompt);
+    for p in row.iter_mut().take(6).skip(prompt.len()) {
+        *p = 5;
+    }
+    row[6] = tok::EOS;
+    row
+}
+
+fn base_cfg(params: &[f32]) -> FleetCfg {
+    let mut cfg = FleetCfg::default();
+    cfg.sample = qadx::eval::SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 8, seed: 0 };
+    cfg.weights = ServeWeights::Params(params.to_vec());
+    cfg
+}
+
+/// Run one fleet over the clock model: submit `prompts`, drain, shut
+/// down. Returns responses sorted by id plus a stats snapshot.
+fn run_fleet(
+    tag: &str,
+    name: &str,
+    cfg_fn: impl FnOnce(&mut FleetCfg),
+    prompts: &[Vec<i32>],
+) -> (Vec<FleetResponse>, qadx::api::FleetStats) {
+    let (session, params) = clock_session(tag, name);
+    let ms = session.model(name).unwrap();
+    let mut cfg = base_cfg(&params);
+    cfg_fn(&mut cfg);
+    let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
+    for p in prompts {
+        fleet.submit(p.clone()).unwrap();
+    }
+    let mut responses = fleet.drain().unwrap();
+    responses.sort_by_key(|r| r.id);
+    fleet.shutdown();
+    let stats = fleet.stats().clone();
+    drop(fleet);
+    common::cleanup(tag);
+    (responses, stats)
+}
+
+#[test]
+fn worker_killed_mid_generation_is_bit_identical_to_no_fault_run() {
+    // Worker 1 dies before its local round 1 — after admitting work and
+    // executing one decode round, i.e. mid-generation (every prompt here
+    // needs >= 3 rounds). The injected 2 ms round latency keeps both
+    // workers busy long enough that the submit burst spreads across
+    // them deterministically in practice; correctness does not depend
+    // on it. All six requests must resolve to the exact clock rows at
+    // both pool thread counts.
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![1, 4], vec![1, 4, 4], vec![1, 4], vec![1, 4, 4], vec![1, 4], vec![1, 4, 4, 4]];
+    let want: Vec<Vec<i32>> = prompts.iter().map(|p| expected_row(p, 12)).collect();
+
+    let (baseline, base_stats) =
+        run_fleet("fchaos_base", "clock-fleet", |_| {}, &prompts);
+    assert_eq!(baseline.len(), prompts.len());
+    assert_eq!(base_stats.worker_deaths, 0);
+    for (r, w) in baseline.iter().zip(want.iter()) {
+        assert!(r.error.is_none(), "baseline degraded: {:?}", r.error);
+        assert_eq!(&r.row, w, "baseline row mismatch for id {}", r.id);
+    }
+
+    for threads in [1usize, 4] {
+        pool::set_threads(threads);
+        let tag = format!("fchaos_kill_t{threads}");
+        let (chaos, stats) = run_fleet(
+            &tag,
+            "clock-fleet",
+            |cfg| {
+                cfg.fault = FaultPlan {
+                    seed: 1,
+                    kills: vec![(1, 1)],
+                    step_delay_ms: 2.0,
+                    ..FaultPlan::default()
+                };
+            },
+            &prompts,
+        );
+        pool::set_threads(0);
+        assert_eq!(chaos.len(), prompts.len(), "threads={threads}");
+        for (r, w) in chaos.iter().zip(want.iter()) {
+            assert!(
+                r.error.is_none(),
+                "threads={threads} id {} degraded: {:?}",
+                r.id,
+                r.error
+            );
+            assert_eq!(
+                &r.row, w,
+                "threads={threads}: chaos row differs from no-fault run for id {}",
+                r.id
+            );
+        }
+        assert_eq!(stats.worker_deaths, 1, "threads={threads}: {}", stats.summary());
+        assert!(
+            stats.per_worker[1].dead,
+            "threads={threads}: worker 1 must be marked dead"
+        );
+        assert!(
+            stats.retries >= 1,
+            "threads={threads}: the dead worker's requests must requeue: {}",
+            stats.summary()
+        );
+        // every retried request finished on the surviving worker
+        for r in chaos.iter().filter(|r| r.attempt > 0) {
+            assert_eq!(r.worker, Some(0), "threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn seeded_prefill_faults_retry_to_bit_identical_rows() {
+    // FaultPlan's coins are pure functions of (seed, id, attempt), so
+    // the test can precompute exactly which attempts fail and assert
+    // the retry counter matches — and the retried generations must
+    // still be the exact clock rows (per-request RNG excludes the
+    // attempt number).
+    let plan = FaultPlan { seed: 2, prefill_fail_p: 0.35, ..FaultPlan::default() };
+    let n = 8u64;
+    let mut expected_retries = 0usize;
+    let mut ids_retried = 0usize;
+    for id in 0..n {
+        let first_pass =
+            (0..4).find(|&a| !plan.fail_prefill(id, a)).expect("seed 2 passes within budget");
+        expected_retries += first_pass as usize;
+        ids_retried += usize::from(first_pass > 0);
+    }
+    assert!(ids_retried >= 3, "seed 2 must actually inject failures");
+    assert!(expected_retries >= ids_retried);
+
+    let prompts: Vec<Vec<i32>> = (0..n).map(|_| vec![1, 4, 4]).collect();
+    let want = expected_row(&[1, 4, 4], 12);
+    let (responses, stats) = run_fleet(
+        "fchaos_prefill",
+        "clock-fleet",
+        |cfg| cfg.fault = plan.clone(),
+        &prompts,
+    );
+    assert_eq!(responses.len(), prompts.len());
+    for r in &responses {
+        assert!(r.error.is_none(), "id {} degraded: {:?}", r.id, r.error);
+        assert_eq!(r.row, want, "retried row differs for id {}", r.id);
+        let first_pass = (0..4).find(|&a| !plan.fail_prefill(r.id, a)).unwrap();
+        assert_eq!(r.attempt, first_pass, "id {} resolved on the wrong attempt", r.id);
+    }
+    assert_eq!(stats.retries, expected_retries, "{}", stats.summary());
+    assert_eq!(stats.worker_deaths, 0);
+    assert_eq!(stats.degraded, 0);
+}
+
+#[test]
+fn step_fault_budget_exhaustion_degrades_deterministically() {
+    // step_fail_p = 1.0 fails every decode step, so every attempt dies
+    // mid-generation and the retry budget (2) is spent exactly:
+    // attempts 0, 1, 2 all fail -> degraded response, prompt-only row,
+    // never a hang. Telemetry must carry the retry trail.
+    let tel = std::env::temp_dir()
+        .join(format!("qadx_fchaos_budget_tel_{}.jsonl", std::process::id()));
+    std::fs::remove_file(&tel).ok(); // the appender appends; start clean
+    let prompts: Vec<Vec<i32>> = (0..4).map(|_| vec![1, 4]).collect();
+    let (responses, stats) = run_fleet(
+        "fchaos_budget",
+        "clock-fleet",
+        |cfg| {
+            cfg.fault = FaultPlan { step_fail_p: 1.0, ..FaultPlan::default() };
+            cfg.retry = RetryPolicy { base_ms: 0.5, cap_ms: 2.0, max_attempts: 2 };
+            cfg.telemetry = Some(tel.clone());
+        },
+        &prompts,
+    );
+    assert_eq!(responses.len(), 4);
+    for r in &responses {
+        let err = r.error.as_deref().unwrap_or("");
+        assert!(
+            err.contains("retry budget exhausted after 2 attempts"),
+            "id {}: {err:?}",
+            r.id
+        );
+        assert_eq!(r.attempt, 2, "id {}", r.id);
+        assert_eq!(r.gen_tokens, 0);
+        let mut want = vec![tok::PAD; 12];
+        want[..2].copy_from_slice(&[1, 4]);
+        assert_eq!(r.row, want, "degraded row must be the prompt, PAD-tailed");
+    }
+    assert_eq!(stats.degraded, 4, "{}", stats.summary());
+    assert_eq!(stats.retries, 8, "2 retries per request: {}", stats.summary());
+    assert_eq!(stats.completed, 4);
+    let failures: usize = stats.per_worker.iter().map(|w| w.failures).sum();
+    assert_eq!(failures, 12, "3 failed attempts per request");
+    let log = std::fs::read_to_string(&tel).expect("telemetry JSONL written");
+    let retries = log.lines().filter(|l| l.contains("\"event\":\"retry\"")).count();
+    assert_eq!(retries, 8, "{log}");
+    assert!(log.contains("\"backoff_ms\""), "{log}");
+    assert!(log.contains("\"event\":\"fleet\""), "{log}");
+    std::fs::remove_file(&tel).ok();
+}
+
+#[test]
+fn saturated_router_sheds_with_retry_after_and_recovers() {
+    // One worker, one slot, queue cap 2, slow rounds (5 ms): the fourth
+    // submit must shed with the typed Saturated error while the first
+    // three resolve; after the drain the router accepts work again.
+    let (session, params) = clock_session("fchaos_sat", "clock-fleet");
+    let ms = session.model("clock-fleet").unwrap();
+    let mut cfg = base_cfg(&params);
+    cfg.workers = 1;
+    cfg.max_slots = 1;
+    cfg.queue_cap = 2;
+    cfg.fault = FaultPlan { step_delay_ms: 5.0, ..FaultPlan::default() };
+    let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
+
+    for _ in 0..3 {
+        fleet.submit(vec![1, 4]).unwrap();
+    }
+    assert_eq!(fleet.queued(), 2, "slot holds one, two wait in the router");
+    let err = fleet.submit(vec![1, 4]).expect_err("queue is at cap");
+    let sat = err.downcast_ref::<Saturated>().expect("typed Saturated through anyhow");
+    assert!(sat.retry_after_ms >= 1.0, "hint: {}", sat.retry_after_ms);
+    assert_eq!(fleet.stats().shed, 1);
+
+    let responses = fleet.drain().unwrap();
+    assert_eq!(responses.len(), 3);
+    let want = expected_row(&[1, 4], 12);
+    for r in &responses {
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.row, want);
+    }
+    // recovery: the queue drained, so admission accepts again
+    fleet.submit(vec![1, 4]).expect("router must recover after drain");
+    let responses = fleet.drain().unwrap();
+    assert_eq!(responses.len(), 1);
+    assert!(responses[0].error.is_none());
+    assert_eq!(fleet.stats().shed, 1, "no further sheds");
+    assert!((fleet.stats().shed_rate() - 0.2).abs() < 1e-12, "1 shed of 5 offered");
+    fleet.shutdown();
+    drop(fleet);
+    common::cleanup("fchaos_sat");
+}
+
+#[test]
+fn zero_deadline_expires_queued_requests_without_hanging() {
+    // deadline 0: anything still router-queued when the router next
+    // advances degrades with a deadline error — a degraded response,
+    // not a hang. The dispatched request is the worker's to finish and
+    // completes normally.
+    let (session, params) = clock_session("fchaos_ddl", "clock-fleet");
+    let ms = session.model("clock-fleet").unwrap();
+    let mut cfg = base_cfg(&params);
+    cfg.workers = 1;
+    cfg.max_slots = 1;
+    cfg.deadline_ms = Some(0.0);
+    cfg.est_service_ms = 0.0; // admission estimate 0 -> everything admits
+    cfg.fault = FaultPlan { step_delay_ms: 5.0, ..FaultPlan::default() };
+    let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
+    let first = fleet.submit(vec![1, 4]).unwrap(); // dispatched immediately
+    let q1 = fleet.submit(vec![1, 4]).unwrap(); //    router-queued
+    let q2 = fleet.submit(vec![1, 4]).unwrap(); //    router-queued
+    let mut responses = fleet.drain().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 3, "drain resolves everything — no hang");
+    let by_id = |id: u64| responses.iter().find(|r| r.id == id).unwrap();
+    assert!(by_id(first).error.is_none(), "dispatched request finishes");
+    assert_eq!(by_id(first).row, expected_row(&[1, 4], 12));
+    for id in [q1, q2] {
+        let err = by_id(id).error.as_deref().unwrap_or("");
+        assert!(err.contains("deadline exceeded"), "id {id}: {err:?}");
+        assert_eq!(by_id(id).gen_tokens, 0);
+    }
+    assert_eq!(fleet.stats().expired, 2, "{}", fleet.stats().summary());
+    fleet.shutdown();
+    drop(fleet);
+    common::cleanup("fchaos_ddl");
+}
+
+#[test]
+fn single_engine_serve_queue_bound_sheds_and_recovers() {
+    // Satellite: the same Saturated contract on the single-engine
+    // ServeHandle — max_queue bounds the *waiting* queue (in-flight
+    // slots excluded), the error downcasts, and the handle keeps
+    // serving afterwards. Fully single-threaded, so exact.
+    let (spec, params) = common::clock_spec_and_params("clock-serveq");
+    let artifacts = common::write_artifacts("fchaos_sq", &[spec]);
+    let session = Session::builder()
+        .artifacts_dir(&artifacts)
+        .runs_dir(common::tmp_runs("fchaos_sq"))
+        .backend(BackendKind::Reference)
+        .build()
+        .unwrap();
+    let ms = session.model("clock-serveq").unwrap();
+    let mut cfg = ServeCfg::default();
+    cfg.sample = qadx::eval::SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 8, seed: 0 };
+    cfg.weights = ServeWeights::Params(params);
+    cfg.max_slots = 1;
+    cfg.max_queue = 1;
+    let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+    server.submit(vec![1, 4]).unwrap(); //        admitted into the slot
+    server.submit(vec![1, 4, 4]).unwrap(); //     queued (1 = cap)
+    let err = server.submit(vec![1, 4]).expect_err("queue bound");
+    let sat = err.downcast_ref::<Saturated>().expect("typed Saturated through anyhow");
+    assert!(sat.retry_after_ms >= 1.0);
+    assert_eq!(server.stats().shed, 1);
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), 2, "shed request never entered the queue");
+    // recovers: drained queue admits again
+    server.submit(vec![1, 4]).unwrap();
+    assert_eq!(server.drain().unwrap().len(), 1);
+    assert_eq!(server.stats().shed, 1);
+    common::cleanup("fchaos_sq");
+}

@@ -102,6 +102,7 @@ impl Config {
                 "rust/src/runtime/engine.rs",
                 "rust/src/runtime/manifest.rs",
                 "rust/src/api/serve.rs",
+                "rust/src/api/fleet.rs",
                 "rust/src/api/session.rs",
                 "rust/src/api/telemetry.rs",
                 "rust/src/exper/",
@@ -123,6 +124,21 @@ impl Config {
                 hot(
                     "rust/src/api/serve.rs",
                     &["submit", "poll", "drain", "admit", "step_round", "dispatch", "run_batch"],
+                    true,
+                ),
+                hot(
+                    "rust/src/api/fleet.rs",
+                    &[
+                        "submit",
+                        "poll",
+                        "drain",
+                        "dispatch",
+                        "on_event",
+                        "requeue",
+                        "expire",
+                        "admit_job",
+                        "step_round",
+                    ],
                     true,
                 ),
                 hot("rust/src/eval/sampler.rs", &["generate", "generate_stepped"], false),
