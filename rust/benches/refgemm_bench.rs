@@ -14,7 +14,9 @@
 //! for an on-machine scaling reference.
 
 use qadx::runtime::refmodel::{self, LossKind, RefCfg};
-use qadx::runtime::{synthetic_manifest_json, BackendKind, Engine, ModelRuntime, SynthSpec};
+use qadx::runtime::{
+    synthetic_manifest_json, BackendKind, DecodeOpts, Engine, ModelRuntime, SynthSpec,
+};
 use qadx::util::bench::BenchSuite;
 use qadx::util::rng::Rng;
 use qadx::util::{gemm, pool};
@@ -193,6 +195,75 @@ fn main() {
                 });
             }
         }
+    }
+
+    // ---- paged decode state & prefix reuse ---------------------------
+    // TTFT over a 192-token shared prefix on the s256 model: the cold row
+    // pays the full O(prompt) prefill every call; the hit row forks
+    // refcounted pages out of the prefix cache and returns the stored
+    // logits without replaying anything. The budget row pins `max_pages`
+    // to the live-token demand (224 pages vs the 256 page-equivalents a
+    // dense rows x seq_len layout reserves up front) and runs a full
+    // prefill + 12-step decode for every row inside that bound.
+    {
+        let rt = ModelRuntime::new(&engine, "refgemm-bench-s256").expect("paged runtime");
+        let cfg_p = RefCfg::for_key_format(&rt.model, "nvfp4").expect("paged cfg");
+        let pp = init_params(&cfg_p, 11);
+        let wbuf = engine.upload_f32(&pp, &[pp.len()]).expect("paged weights");
+        let rows = rt.model.batch;
+        let prefix: Vec<i32> = (0..192).map(|j| 2 + (j % 300) as i32).collect();
+        let mut logits: Vec<f32> = Vec::new();
+
+        let cold = DecodeOpts { page_size: 16, prefix_cache: 0, max_pages: 0 };
+        let mut sess = engine
+            .open_decode_opts(&rt.model, "fwd_nvfp4", &wbuf, rows, &cold)
+            .expect("open paged session")
+            .expect("reference backend has stateful decode");
+        suite.run("ref_prefill_cold_paged16_nvfp4_s256_p192", 1, 6, || {
+            sess.prefill(0, &prefix, &mut logits).expect("cold prefill");
+            std::hint::black_box(&logits);
+            sess.close(0).expect("close cold row");
+        });
+
+        let hit = DecodeOpts { page_size: 16, prefix_cache: 4, max_pages: 0 };
+        let mut sess = engine
+            .open_decode_opts(&rt.model, "fwd_nvfp4", &wbuf, rows, &hit)
+            .expect("open cached session")
+            .expect("reference backend has stateful decode");
+        sess.prefill(0, &prefix, &mut logits).expect("warm prefill");
+        sess.close(0).expect("close warm row");
+        suite.run("ref_prefill_hit_paged16_nvfp4_s256_p192", 1, 30, || {
+            sess.prefill(0, &prefix, &mut logits).expect("hit prefill");
+            std::hint::black_box(&logits);
+            sess.close(0).expect("close hit row");
+        });
+        let ps = sess.paged_stats().expect("paged stats");
+        println!("prefix cache: {} hits / {} misses", ps.prefix_hits, ps.prefix_misses);
+
+        let budget = DecodeOpts { page_size: 16, prefix_cache: 0, max_pages: 224 };
+        let mut sess = engine
+            .open_decode_opts(&rt.model, "fwd_nvfp4", &wbuf, rows, &budget)
+            .expect("open budgeted session")
+            .expect("reference backend has stateful decode");
+        let row_prompts: Vec<Vec<i32>> = (0..rows)
+            .map(|r| (0..192).map(|j| 2 + ((r * 7 + j) % 300) as i32).collect())
+            .collect();
+        let new_toks = 12usize;
+        let units = (rows * new_toks) as f64;
+        suite.run_units("ref_decode_paged16_budget224_nvfp4_s256_toks", 1, 3, units, || {
+            for (r, p) in row_prompts.iter().enumerate() {
+                sess.prefill(r, p, &mut logits).expect("budget prefill");
+            }
+            for _ in 0..new_toks {
+                for r in 0..rows {
+                    sess.step(r, 9, &mut logits).expect("budget step");
+                }
+            }
+            for r in 0..rows {
+                sess.close(r).expect("close budget row");
+            }
+            std::hint::black_box(&logits);
+        });
     }
     std::fs::remove_dir_all(&dir).ok();
 

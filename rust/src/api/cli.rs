@@ -133,6 +133,8 @@ pub const COMMANDS: &[CommandDef] = &[
             ),
             flag("queue-cap", "N", "0", "fleet router queue bound (0 = unbounded)"),
             flag("deadline-ms", "F", "(off)", "fleet per-request deadline (admission + expiry)"),
+            flag("page-size", "N", "32", "decode-state page size in positions (0 = dense rows)"),
+            flag("prefix-cache", "N", "0", "shared-prefix cache entries (0 = off; needs pages)"),
         ],
     },
     CommandDef {
@@ -434,6 +436,10 @@ pub struct ServeBenchArgs {
     pub arrival_rate: f64,
     pub queue_cap: usize,
     pub deadline_ms: Option<f64>,
+    /// Decode-state page size in positions (`--page-size`, 0 = dense).
+    pub page_size: usize,
+    /// Shared-prefix cache entries (`--prefix-cache`, 0 = off).
+    pub prefix_cache: usize,
 }
 
 impl ServeBenchArgs {
@@ -469,6 +475,8 @@ impl ServeBenchArgs {
                 ),
                 None => None,
             },
+            page_size: parse_flag(args, "page-size", 32usize)?,
+            prefix_cache: parse_flag(args, "prefix-cache", 0usize)?,
         })
     }
 }
@@ -617,5 +625,27 @@ mod tests {
         let cmd = find_command("serve-bench").unwrap();
         assert!(check_flags(cmd, &parse("serve-bench --fleet --workers 4")).is_ok());
         assert!(render_usage(cmd).contains("--fleet"), "usage must list --fleet");
+    }
+
+    #[test]
+    fn serve_bench_paged_decode_flags() {
+        let s = ServeBenchArgs::parse(&parse("serve-bench")).unwrap();
+        assert_eq!(s.page_size, 32, "paged decode state is the default");
+        assert_eq!(s.prefix_cache, 0, "prefix cache is opt-in");
+        let s = ServeBenchArgs::parse(&parse(
+            "serve-bench --page-size 16 --prefix-cache 8",
+        ))
+        .unwrap();
+        assert_eq!(s.page_size, 16);
+        assert_eq!(s.prefix_cache, 8);
+        let s = ServeBenchArgs::parse(&parse("serve-bench --page-size 0")).unwrap();
+        assert_eq!(s.page_size, 0, "0 selects dense per-slot rows");
+        // typo'd values are errors, not silent defaults
+        assert!(ServeBenchArgs::parse(&parse("serve-bench --page-size big")).is_err());
+        assert!(ServeBenchArgs::parse(&parse("serve-bench --prefix-cache lots")).is_err());
+        let cmd = find_command("serve-bench").unwrap();
+        assert!(check_flags(cmd, &parse("serve-bench --page-size 16 --prefix-cache 4")).is_ok());
+        assert!(render_usage(cmd).contains("--page-size"), "usage must list --page-size");
+        assert!(render_usage(cmd).contains("--prefix-cache"), "usage must list --prefix-cache");
     }
 }

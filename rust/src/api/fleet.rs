@@ -48,13 +48,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::data::tokenizer as tok;
 use crate::eval::{sample_token_with, SampleCfg, SampleScratch};
-use crate::runtime::{BackendKind, DecodeSession, Engine, ModelRuntime};
+use crate::runtime::{BackendKind, DecodeOpts, DecodeSession, Engine, ModelRuntime};
 use crate::util::json::Json;
 use crate::util::retry::{RetryPolicy, RetryState};
 use crate::util::rng::Rng;
 use crate::util::StatsWindow;
 
-use super::serve::{Saturated, ServeWeights};
+use super::serve::{Saturated, ServeWeights, TokenEvent, TokenSink};
 use super::telemetry::JsonlAppender;
 
 /// SplitMix64 golden-ratio constant, used to decorrelate derived seeds.
@@ -161,6 +161,19 @@ pub struct FleetCfg {
     pub fault: FaultPlan,
     /// JSONL event log path; falls back to `QADX_TELEMETRY_JSONL`.
     pub telemetry: Option<PathBuf>,
+    /// Per-worker decode-state page size in positions (0 = dense rows).
+    /// See [`super::ServeCfg::page_size`]; paged is the default.
+    pub page_size: usize,
+    /// Per-worker shared-prefix cache capacity in entries (0 = off;
+    /// requires `page_size > 0`). Each worker keeps its own cache.
+    pub prefix_cache: usize,
+    /// Per-worker page budget (0 = unbounded).
+    pub max_pages: usize,
+    /// Relay per-token `token` events into the router's telemetry JSONL.
+    pub stream: bool,
+    /// Router-side per-token callback (tokens relayed from workers; a
+    /// retried attempt restarts its index at 0 with a higher `attempt`).
+    pub on_token: Option<TokenSink>,
 }
 
 impl Default for FleetCfg {
@@ -177,6 +190,11 @@ impl Default for FleetCfg {
             retry_seed: 0x4f1e_7e7a,
             fault: FaultPlan::default(),
             telemetry: None,
+            page_size: 32,
+            prefix_cache: 0,
+            max_pages: 0,
+            stream: false,
+            on_token: None,
         }
     }
 }
@@ -333,6 +351,15 @@ enum WorkerEvent {
         ttft_ms: f64,
         execute_ms: f64,
     },
+    /// One generated token, streamed as it lands (only sent when the
+    /// fleet was configured with `stream` or an `on_token` sink).
+    Token {
+        worker: usize,
+        id: u64,
+        attempt: u32,
+        token: i32,
+        index: usize,
+    },
     /// One attempt failed (real or injected prefill/step fault); the
     /// router decides whether to retry or degrade.
     Failed {
@@ -390,6 +417,9 @@ pub struct FleetHandle {
     completed: Vec<FleetResponse>,
     stats: FleetStats,
     telemetry: Option<JsonlAppender>,
+    /// Append relayed `token` events to the telemetry JSONL.
+    stream: bool,
+    on_token: Option<TokenSink>,
 }
 
 impl FleetHandle {
@@ -401,8 +431,21 @@ impl FleetHandle {
         if cfg.workers == 0 {
             bail!("fleet needs at least one worker");
         }
+        if cfg.page_size == 0 && (cfg.prefix_cache > 0 || cfg.max_pages > 0) {
+            bail!(
+                "prefix_cache ({}) and max_pages ({}) require paged decode state (page_size > 0)",
+                cfg.prefix_cache,
+                cfg.max_pages
+            );
+        }
         let slots = (if cfg.max_slots == 0 { target.batch } else { cfg.max_slots }).max(1);
         let weights = Arc::new(weights);
+        let decode_opts = DecodeOpts {
+            page_size: cfg.page_size,
+            prefix_cache: cfg.prefix_cache,
+            max_pages: cfg.max_pages,
+        };
+        let stream_tokens = cfg.stream || cfg.on_token.is_some();
         let (event_tx, event_rx) = channel::<WorkerEvent>();
         let mut senders = Vec::with_capacity(cfg.workers);
         let mut joins = Vec::with_capacity(cfg.workers);
@@ -415,6 +458,8 @@ impl FleetHandle {
                 sample: cfg.sample,
                 slots,
                 fault: cfg.fault.clone(),
+                opts: decode_opts,
+                stream: stream_tokens,
             };
             let ev = event_tx.clone();
             let join = std::thread::Builder::new()
@@ -491,6 +536,8 @@ impl FleetHandle {
                 ..Default::default()
             },
             telemetry,
+            stream: cfg.stream,
+            on_token: cfg.on_token.clone(),
         })
     }
 
@@ -526,19 +573,47 @@ impl FleetHandle {
     /// request id (matched by [`FleetResponse::id`]).
     pub fn submit(&mut self, prompt: Vec<i32>) -> Result<u64> {
         let seq_len = self.seq_len;
-        if prompt.is_empty() || prompt.len() >= seq_len {
-            bail!(
-                "prompt length {} out of range (need 1..{seq_len} to leave room to generate)",
-                prompt.len()
-            );
+        if prompt.is_empty() {
+            bail!("prompt is empty (need at least one token)");
         }
         if self.live_workers() == 0 {
             bail!("fleet has no live workers");
+        }
+        if prompt.len() >= seq_len {
+            // a seq_len row cannot hold prompt + 1 generated token:
+            // resolve as degraded (error set) instead of truncating the
+            // prompt or bouncing the caller
+            let id = self.next_id;
+            self.next_id += 1;
+            self.stats.submitted += 1;
+            let plen = prompt.len();
+            self.requests.insert(
+                id,
+                ReqState {
+                    prompt,
+                    submitted: Instant::now(),
+                    attempt: 0,
+                    retry: RetryState::default(),
+                    assigned: None,
+                },
+            );
+            self.resolve_degraded(
+                id,
+                format!("prompt length {plen} leaves no room to generate (seq_len {seq_len})"),
+            );
+            return Ok(id);
         }
         let depth = self.queue.len();
         let over_cap = self.queue_cap > 0 && depth >= self.queue_cap;
         let est_wait = self.est_wait_ms(depth + 1);
         let over_deadline = match self.deadline_ms {
+            // Unseeded estimator (no completion observed yet): est_wait is
+            // 0 for ANY backlog, so a wait test would admit everything.
+            // Until the EWMA seeds, bound admission by live slot capacity
+            // — a request beyond what can run concurrently is shed.
+            Some(_) if self.est_service_ms <= 0.0 => {
+                depth + 1 > (self.live_workers() * self.slots_per_worker).max(1)
+            }
             Some(d) => est_wait > d,
             None => false,
         };
@@ -776,6 +851,23 @@ impl FleetHandle {
                     error: None,
                 });
             }
+            WorkerEvent::Token { worker, id, attempt, token, index } => {
+                if let Some(sink) = &self.on_token {
+                    (sink.0)(&TokenEvent { id, token, index, worker, attempt });
+                }
+                if self.stream {
+                    if let Some(tel) = self.telemetry.as_mut() {
+                        let _ = tel.append(&Json::obj(vec![
+                            ("event", Json::Str("token".into())),
+                            ("id", Json::Num(id as f64)),
+                            ("token", Json::Num(token as f64)),
+                            ("index", Json::Num(index as f64)),
+                            ("worker", Json::Num(worker as f64)),
+                            ("attempt", Json::Num(attempt as f64)),
+                        ]));
+                    }
+                }
+            }
             WorkerEvent::Failed { worker, id, error } => {
                 if let Some(o) = self.outstanding.get_mut(worker) {
                     *o = o.saturating_sub(1);
@@ -941,6 +1033,11 @@ struct WorkerCfg {
     sample: SampleCfg,
     slots: usize,
     fault: FaultPlan,
+    /// Decode-state layout (paged/prefix-cache) — per worker, so each
+    /// worker keeps its own prefix cache over the prompts it served.
+    opts: DecodeOpts,
+    /// Send [`WorkerEvent::Token`] per generated token.
+    stream: bool,
 }
 
 /// One in-flight row on a worker.
@@ -971,6 +1068,8 @@ struct WorkerInner {
     /// Executed decode rounds (the fault plan's kill coordinate).
     rounds: usize,
     occ_sum: f64,
+    /// Send [`WorkerEvent::Token`] per generated token.
+    stream: bool,
 }
 
 impl WorkerInner {
@@ -978,7 +1077,13 @@ impl WorkerInner {
         let engine = Engine::with_backend(&cfg.target.artifacts_root, cfg.target.backend)?;
         let rt = ModelRuntime::new(&engine, &cfg.target.model)?;
         let weights_buf = engine.upload_f32(&cfg.weights, &[cfg.weights.len()])?;
-        let opened = engine.open_decode(&rt.model, &cfg.target.fwd_key, &weights_buf, cfg.slots)?;
+        let opened = engine.open_decode_opts(
+            &rt.model,
+            &cfg.target.fwd_key,
+            &weights_buf,
+            cfg.slots,
+            &cfg.opts,
+        )?;
         let Some(session) = opened else {
             bail!(
                 "fleet serving requires a stateful-decode backend \
@@ -998,6 +1103,7 @@ impl WorkerInner {
             logits: Vec::new(),
             rounds: 0,
             occ_sum: 0.0,
+            stream: cfg.stream,
         })
     }
 
@@ -1023,9 +1129,24 @@ impl WorkerInner {
             return;
         }
         let t0 = Instant::now();
-        let np = job.prompt.len().min(self.seq_len.saturating_sub(1)).max(1);
-        let prompt = job.prompt.get(..np).unwrap_or(&job.prompt);
+        // the router's submit already rejects these lengths; a job that
+        // still arrives out of range fails its attempt loudly instead of
+        // silently truncating the prompt
+        let np = job.prompt.len();
+        if np == 0 || np >= self.seq_len {
+            let _ = tx.send(WorkerEvent::Failed {
+                worker: self.worker,
+                id: job.id,
+                error: format!(
+                    "prompt length {np} out of range on worker (need 1..{})",
+                    self.seq_len
+                ),
+            });
+            return;
+        }
+        let prompt = job.prompt.as_slice();
         if let Err(e) = self.session.prefill(slot_idx, prompt, &mut self.logits) {
+            let _ = self.session.close(slot_idx);
             let _ = tx.send(WorkerEvent::Failed {
                 worker: self.worker,
                 id: job.id,
@@ -1042,6 +1163,7 @@ impl WorkerInner {
             *dst = *src;
         }
         if self.sample.max_new == 0 {
+            let _ = self.session.close(slot_idx);
             let _ = tx.send(WorkerEvent::Done {
                 worker: self.worker,
                 id: job.id,
@@ -1056,7 +1178,17 @@ impl WorkerInner {
         if let Some(cell) = row.get_mut(np) {
             *cell = next;
         }
+        if self.stream {
+            let _ = tx.send(WorkerEvent::Token {
+                worker: self.worker,
+                id: job.id,
+                attempt: job.attempt,
+                token: next,
+                index: 0,
+            });
+        }
         if next == tok::EOS || np + 1 >= self.seq_len || self.sample.max_new == 1 {
+            let _ = self.session.close(slot_idx);
             let _ = tx.send(WorkerEvent::Done {
                 worker: self.worker,
                 id: job.id,
@@ -1110,6 +1242,7 @@ impl WorkerInner {
                 if let Some(s) = self.slots.get_mut(idx) {
                     *s = None;
                 }
+                let _ = self.session.close(idx);
                 let _ = tx.send(WorkerEvent::Failed {
                     worker: self.worker,
                     id,
@@ -1122,6 +1255,7 @@ impl WorkerInner {
                 if let Some(s) = self.slots.get_mut(idx) {
                     *s = None;
                 }
+                let _ = self.session.close(idx);
                 let _ = tx.send(WorkerEvent::Failed {
                     worker: self.worker,
                     id,
@@ -1137,10 +1271,20 @@ impl WorkerInner {
             }
             slot.frontier += 1;
             slot.gen += 1;
+            if self.stream {
+                let _ = tx.send(WorkerEvent::Token {
+                    worker: self.worker,
+                    id,
+                    attempt,
+                    token: next,
+                    index: slot.gen - 1,
+                });
+            }
             if next == tok::EOS || slot.frontier >= self.seq_len || slot.gen >= self.sample.max_new
             {
                 if let Some(done) = self.slots.get_mut(idx).and_then(|s| s.take()) {
                     let now = Instant::now();
+                    let _ = self.session.close(idx);
                     let _ = tx.send(WorkerEvent::Done {
                         worker: self.worker,
                         id: done.id,

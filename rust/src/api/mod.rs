@@ -49,6 +49,7 @@ pub use fleet::{
 pub use method::{MethodRef, MethodRegistry, RecoveryMethod};
 pub use serve::{
     Coalescer, Saturated, ServeCfg, ServeHandle, ServeResponse, ServeStats, ServeWeights,
+    TokenEvent, TokenSink,
 };
 pub use session::{
     default_recovery_cfg, default_recovery_data, default_recovery_lr, default_sample_cfg,

@@ -22,13 +22,14 @@
 //! everything out.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::rc::Rc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::data::tokenizer as tok;
 use crate::eval::{sample_token_with, DecodeMode, SampleCfg, SampleScratch, Sampler};
-use crate::runtime::{Buffer, DecodeSession, Engine, ModelRuntime};
+use crate::runtime::{Buffer, DecodeOpts, DecodeSession, Engine, ModelRuntime};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::StatsWindow;
@@ -53,6 +54,43 @@ impl std::fmt::Display for Saturated {
 }
 
 impl std::error::Error for Saturated {}
+
+/// One generated token surfaced as it lands (continuous mode only — the
+/// coalescing fallback has no per-token visibility).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TokenEvent {
+    /// Request id (matches `ServeResponse::id` / `FleetResponse::id`).
+    pub id: u64,
+    pub token: i32,
+    /// Generated-token index within the request, counting from 0 (the
+    /// TTFT token).
+    pub index: usize,
+    /// Worker index the token was generated on (fleet; 0 for a single
+    /// `ServeHandle`).
+    pub worker: usize,
+    /// Delivery attempt the token belongs to (fleet retries re-run a
+    /// request from scratch; 0 for `ServeHandle`).
+    pub attempt: u32,
+}
+
+/// Shared per-token callback. Wrapped in `Rc` so `ServeCfg`/`FleetCfg`
+/// stay `Clone`; the sink runs inside the decode loop and must not call
+/// back into the handle that invoked it.
+#[derive(Clone)]
+pub struct TokenSink(pub Rc<dyn Fn(&TokenEvent)>);
+
+impl TokenSink {
+    /// Wrap a plain closure.
+    pub fn new(f: impl Fn(&TokenEvent) + 'static) -> TokenSink {
+        TokenSink(Rc::new(f))
+    }
+}
+
+impl std::fmt::Debug for TokenSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("TokenSink(..)")
+    }
+}
 
 /// Where a server's weights come from (resolved by `ModelSession::server`).
 #[derive(Clone, Debug)]
@@ -91,6 +129,24 @@ pub struct ServeCfg {
     pub max_queue: usize,
     /// JSONL event log path; falls back to `QADX_TELEMETRY_JSONL`.
     pub telemetry: Option<std::path::PathBuf>,
+    /// Continuous mode: decode-state page size in positions (0 = dense
+    /// per-slot rows). Paged state bounds K/V memory by live tokens
+    /// instead of `slots x seq_len` and is bit-identical to dense, so it
+    /// is on by default.
+    pub page_size: usize,
+    /// Continuous mode: shared-prefix cache capacity in entries (0 = off;
+    /// requires `page_size > 0`). Prompts sharing a cached prefix reuse
+    /// its prefilled pages copy-on-write and skip the redundant prefill.
+    pub prefix_cache: usize,
+    /// Continuous mode: page budget across live slots + cached prefixes
+    /// (0 = unbounded). Admission evicts cached prefixes before failing.
+    pub max_pages: usize,
+    /// Append per-token `token` events to the telemetry JSONL as tokens
+    /// are generated (continuous mode).
+    pub stream: bool,
+    /// Per-token callback invoked as each token lands (the TTFT token is
+    /// index 0).
+    pub on_token: Option<TokenSink>,
 }
 
 impl Default for ServeCfg {
@@ -104,6 +160,11 @@ impl Default for ServeCfg {
             warmup: true,
             max_queue: 0,
             telemetry: None,
+            page_size: 32,
+            prefix_cache: 0,
+            max_pages: 0,
+            stream: false,
+            on_token: None,
         }
     }
 }
@@ -215,6 +276,18 @@ pub struct ServeStats {
     pub decode_rounds: usize,
     /// Time spent inside prefill/step/generation calls.
     pub busy_secs: f64,
+    /// Paged decode state (continuous mode with `page_size > 0`): the
+    /// session's page size in positions; 0 when rows are dense.
+    pub page_size: usize,
+    /// Pages currently referenced by live slots or cached prefixes.
+    pub live_pages: usize,
+    /// Prompts admitted via a shared-prefix cache hit (cumulative).
+    pub prefix_hits: u64,
+    /// Prompts prefilled cold with the prefix cache enabled (cumulative).
+    pub prefix_misses: u64,
+    /// Copy-on-write page copies taken when a forked sequence diverged
+    /// inside a shared page (cumulative).
+    pub cow_copies: u64,
 }
 
 impl ServeStats {
@@ -265,10 +338,22 @@ impl ServeStats {
         } else {
             format!("fill {:.2}", self.mean_fill_ratio())
         };
+        let paged = if self.page_size > 0 {
+            format!(
+                " | pages {} live (x{} pos) prefix {}/{} cow {}",
+                self.live_pages,
+                self.page_size,
+                self.prefix_hits,
+                self.prefix_hits + self.prefix_misses,
+                self.cow_copies
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{:<10} {} | busy {:.1} req/s {:.0} gen-tok/s | \
              lat p50 {:.0}ms p95 {:.0}ms p99 {:.0}ms (wait p50 {:.0}ms exec p50 {:.0}ms) | \
-             ttft p50 {:.0}ms | {} | compile {:.0}ms",
+             ttft p50 {:.0}ms | {} | compile {:.0}ms{paged}",
             self.fwd_key,
             shape,
             self.req_per_sec(),
@@ -353,6 +438,35 @@ pub struct ServeHandle<'e> {
     completed: Vec<ServeResponse>,
     stats: ServeStats,
     telemetry: Option<JsonlAppender>,
+    /// Stream per-token `token` events into the telemetry JSONL.
+    stream: bool,
+    on_token: Option<TokenSink>,
+}
+
+/// Surface one generated token as it lands: invoke the configured sink,
+/// then (when streaming is on) append a JSONL `token` event. Free
+/// function so scheduler methods can call it while `sched` is borrowed.
+fn emit_token(
+    telemetry: &mut Option<JsonlAppender>,
+    on_token: &Option<TokenSink>,
+    stream: bool,
+    id: u64,
+    token: i32,
+    index: usize,
+) {
+    if let Some(sink) = on_token {
+        (sink.0)(&TokenEvent { id, token, index, worker: 0, attempt: 0 });
+    }
+    if stream {
+        if let Some(tel) = telemetry.as_mut() {
+            let _ = tel.append(&Json::obj(vec![
+                ("event", Json::Str("token".into())),
+                ("id", Json::Num(id as f64)),
+                ("token", Json::Num(token as f64)),
+                ("index", Json::Num(index as f64)),
+            ]));
+        }
+    }
 }
 
 /// Record one completed request into stats/completed/telemetry (free
@@ -411,14 +525,27 @@ impl<'e> ServeHandle<'e> {
         if rt.model.vision {
             bail!("serving façade supports text models (got VLM {:?})", rt.model.name);
         }
+        if cfg.page_size == 0 && (cfg.prefix_cache > 0 || cfg.max_pages > 0) {
+            bail!(
+                "prefix_cache ({}) and max_pages ({}) require paged decode state (page_size > 0)",
+                cfg.prefix_cache,
+                cfg.max_pages
+            );
+        }
         let engine = rt.engine;
         let t0 = Instant::now();
         let weights_buf = engine.upload_f32(weights, &[weights.len()])?;
         let width = (if cfg.max_slots == 0 { rt.model.batch } else { cfg.max_slots }).max(1);
+        let decode_opts = DecodeOpts {
+            page_size: cfg.page_size,
+            prefix_cache: cfg.prefix_cache,
+            max_pages: cfg.max_pages,
+        };
 
         let mut sched = None;
         if cfg.decode != DecodeMode::Full {
-            let opened = engine.open_decode(&rt.model, fwd_key, &weights_buf, width)?;
+            let opened =
+                engine.open_decode_opts(&rt.model, fwd_key, &weights_buf, width, &decode_opts)?;
             if let Some(mut session) = opened {
                 let mut rng = Rng::new(cfg.sample.seed ^ 0x5a5a_1234);
                 if cfg.warmup {
@@ -428,6 +555,9 @@ impl<'e> ServeHandle<'e> {
                     let mut scratch = SampleScratch::default();
                     let _ = sample_token_with(&cfg.sample, &mut rng, &logits, &mut scratch);
                     rng = Rng::new(cfg.sample.seed ^ 0x5a5a_1234);
+                    // return the warm-up row's pages to the free list so
+                    // the first real admission starts from a clean pool
+                    session.close(0)?;
                 }
                 sched = Some(Sched::Continuous {
                     session,
@@ -503,6 +633,8 @@ impl<'e> ServeHandle<'e> {
             completed: Vec::new(),
             stats: ServeStats { fwd_key: fwd_key.to_string(), compile_ms, ..Default::default() },
             telemetry,
+            stream: cfg.stream,
+            on_token: cfg.on_token.clone(),
         })
     }
 
@@ -537,11 +669,35 @@ impl<'e> ServeHandle<'e> {
     /// [`Saturated`] error instead of enqueueing.
     pub fn submit(&mut self, prompt: Vec<i32>) -> Result<u64> {
         let seq_len = self.seq_len;
-        if prompt.is_empty() || prompt.len() >= seq_len {
-            bail!(
-                "prompt length {} out of range (need 1..{seq_len} to leave room to generate)",
-                prompt.len()
+        if prompt.is_empty() {
+            bail!("prompt is empty (need at least one token)");
+        }
+        if prompt.len() >= seq_len {
+            // a row of seq_len positions cannot hold prompt + 1 generated
+            // token: resolve immediately as a degraded response (error
+            // set, no tokens) instead of truncating or bouncing the caller
+            let id = self.next_id;
+            self.next_id += 1;
+            let now = Instant::now();
+            let plen = prompt.len();
+            let mut row = prompt;
+            row.truncate(seq_len);
+            finish_request(
+                &mut self.stats,
+                &mut self.completed,
+                &mut self.telemetry,
+                id,
+                row,
+                0,
+                now,
+                now,
+                0.0,
+                Some(format!(
+                    "prompt length {plen} leaves no room to generate (seq_len {seq_len})"
+                )),
+                now,
             );
+            return Ok(id);
         }
         if self.max_queue > 0 && self.queued() >= self.max_queue {
             self.stats.shed += 1;
@@ -572,6 +728,7 @@ impl<'e> ServeHandle<'e> {
         } else {
             self.dispatch(false)?;
         }
+        self.sync_paged();
         Ok(id)
     }
 
@@ -580,15 +737,17 @@ impl<'e> ServeHandle<'e> {
     /// deadline has passed. Returns requests completed (continuous) /
     /// dispatched (coalescing) by this call.
     pub fn poll(&mut self) -> Result<usize> {
-        if self.continuous() {
+        let n = if self.continuous() {
             let before = self.completed.len();
             self.admit()?;
             self.step_round()?;
             self.admit()?;
-            Ok(self.completed.len() - before)
+            self.completed.len() - before
         } else {
-            self.dispatch(false)
-        }
+            self.dispatch(false)?
+        };
+        self.sync_paged();
+        Ok(n)
     }
 
     /// Run every queued and in-flight request to completion and take all
@@ -605,7 +764,22 @@ impl<'e> ServeHandle<'e> {
         } else {
             self.dispatch(true)?;
         }
+        self.sync_paged();
         Ok(std::mem::take(&mut self.completed))
+    }
+
+    /// Copy the decode session's paged-state counters into `stats`
+    /// (no-op for dense sessions and the coalescing path).
+    fn sync_paged(&mut self) {
+        if let Sched::Continuous { session, .. } = &self.sched {
+            if let Some(ps) = session.paged_stats() {
+                self.stats.page_size = ps.page_size;
+                self.stats.live_pages = ps.live_pages;
+                self.stats.prefix_hits = ps.prefix_hits;
+                self.stats.prefix_misses = ps.prefix_misses;
+                self.stats.cow_copies = ps.cow_copies;
+            }
+        }
     }
 
     pub fn queued(&self) -> usize {
@@ -671,6 +845,8 @@ impl<'e> ServeHandle<'e> {
             }
             if let Err(e) = prefill {
                 // degrade the one request: prompt-only row, zero tokens
+                // (close returns any partially-filled pages to the pool)
+                let _ = session.close(slot_idx);
                 finish_request(
                     &mut self.stats,
                     &mut self.completed,
@@ -689,6 +865,7 @@ impl<'e> ServeHandle<'e> {
             if self.sample.max_new == 0 {
                 // degenerate cap: nothing may be emitted (matches the
                 // stateless path, whose decode loop never runs)
+                let _ = session.close(slot_idx);
                 finish_request(
                     &mut self.stats,
                     &mut self.completed,
@@ -707,7 +884,9 @@ impl<'e> ServeHandle<'e> {
             if let Some(cell) = row.get_mut(np) {
                 *cell = next;
             }
+            emit_token(&mut self.telemetry, &self.on_token, self.stream, q.id, next, 0);
             if next == tok::EOS || np + 1 >= self.seq_len || self.sample.max_new == 1 {
+                let _ = session.close(slot_idx);
                 finish_request(
                     &mut self.stats,
                     &mut self.completed,
@@ -782,6 +961,8 @@ impl<'e> ServeHandle<'e> {
                 }
                 slot.frontier += 1;
                 slot.gen += 1;
+                let (id, idx0) = (slot.id, slot.gen - 1);
+                emit_token(&mut self.telemetry, &self.on_token, self.stream, id, next, idx0);
             }
             // same per-request cap as the stateless path: at most max_new
             // generated tokens (EOS / sequence end finish earlier); an
@@ -792,6 +973,7 @@ impl<'e> ServeHandle<'e> {
                 || slot.gen >= self.sample.max_new
             {
                 if let Some(sl) = slots.get_mut(idx).and_then(|s| s.take()) {
+                    let _ = session.close(idx);
                     finish_request(
                         &mut self.stats,
                         &mut self.completed,

@@ -18,7 +18,9 @@ use crate::data::tasks::Suite;
 use crate::data::{SourceKind, SourceSpec};
 use crate::eval::{run_suites, EvalCfg, SampleCfg};
 use crate::quant::PtqReport;
-use crate::runtime::{BackendKind, Buffer, DecodeSession, Engine, Manifest, ModelRuntime};
+use crate::runtime::{
+    BackendKind, Buffer, DecodeOpts, DecodeSession, Engine, Manifest, ModelRuntime,
+};
 use crate::util::json::Json;
 
 use super::fleet::{FleetCfg, FleetHandle, FleetTarget};
@@ -327,6 +329,18 @@ impl<'s> ModelSession<'s> {
         rows: usize,
     ) -> Result<Option<Box<dyn DecodeSession>>> {
         self.session.engine.open_decode(&self.rt.model, fwd_key, weights, rows)
+    }
+
+    /// [`ModelSession::decode_session`] with an explicit state layout:
+    /// paged K/V, shared-prefix cache, page budget (see [`DecodeOpts`]).
+    pub fn decode_session_opts(
+        &self,
+        fwd_key: &str,
+        weights: &Buffer,
+        rows: usize,
+        opts: &DecodeOpts,
+    ) -> Result<Option<Box<dyn DecodeSession>>> {
+        self.session.engine.open_decode_opts(&self.rt.model, fwd_key, weights, rows, opts)
     }
 
     /// Start a server over one fwd artifact — continuous batching when

@@ -136,7 +136,13 @@ pub struct Sampler {
     idx_host: Vec<i32>,
     force_full: bool,
     decode_mode: DecodeMode,
+    on_token: Option<TokenObserver>,
 }
+
+/// Per-token observer for the stateful decode loop: `(row, index, token)`
+/// with `index` counting generated tokens per row from 0. Lets callers
+/// stream tokens as they are sampled instead of waiting for full rows.
+pub type TokenObserver = Box<dyn FnMut(usize, usize, i32)>;
 
 /// The frontier-artifact load failure is a degraded-path notice, not a
 /// per-call event: samplers are constructed inside generate-heavy loops
@@ -181,7 +187,15 @@ impl Sampler {
             idx_host: Vec::new(),
             force_full: false,
             decode_mode: DecodeMode::from_env()?.unwrap_or(DecodeMode::Auto),
+            on_token: None,
         })
+    }
+
+    /// Install (or clear) the per-token streaming observer. Only the
+    /// stateful prefill+step path emits tokens incrementally; the
+    /// stateless fallback still answers at completion.
+    pub fn set_token_observer(&mut self, obs: Option<TokenObserver>) {
+        self.on_token = obs;
     }
 
     pub fn reseed(&mut self, seed: u64) {
@@ -381,6 +395,9 @@ impl Sampler {
                 );
                 tokens[i * s + pos] = next;
                 frontier[i] += 1;
+                if let Some(obs) = self.on_token.as_mut() {
+                    obs(i, round, next);
+                }
                 if next == tok::EOS || frontier[i] >= s {
                     done[i] = true;
                 }

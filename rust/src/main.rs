@@ -233,6 +233,8 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
         cfg.decode = sb.decode;
         cfg.max_slots = sb.slots;
         cfg.telemetry = sb.telemetry.clone();
+        cfg.page_size = sb.page_size;
+        cfg.prefix_cache = sb.prefix_cache;
         let mut server = ms.server(fwd_key, &cfg)?;
         let t0 = Instant::now();
         for p in &prompts {
@@ -271,6 +273,8 @@ fn fleet_bench_loop(
         cfg.queue_cap = sb.queue_cap;
         cfg.deadline_ms = sb.deadline_ms;
         cfg.telemetry = sb.telemetry.clone();
+        cfg.page_size = sb.page_size;
+        cfg.prefix_cache = sb.prefix_cache;
         let mut fleet = ms.fleet(fwd_key, &cfg)?;
         let mut arrivals = Rng::new(seed ^ 0x0f1e_e7a9);
         let t0 = Instant::now();

@@ -19,6 +19,7 @@ use std::rc::Rc;
 use anyhow::{bail, Result};
 
 use super::manifest::{Manifest, ModelEntry};
+use super::paged::{DecodeOpts, PagedStats};
 
 /// Element type of a device buffer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -123,6 +124,21 @@ pub trait DecodeSession {
     /// Append `token` at `row`'s frontier and write the logits row
     /// predicting the following position. Errors once the row is full.
     fn step(&mut self, row: usize, token: i32, logits: &mut Vec<f32>) -> Result<()>;
+
+    /// Release `row`'s decode state and reset it to empty. Paged sessions
+    /// return its pages to the free list so the next admit can reuse them
+    /// immediately; dense sessions just truncate. Default: no-op (a
+    /// backend whose `prefill` fully resets a row needs nothing more).
+    fn close(&mut self, row: usize) -> Result<()> {
+        let _ = row;
+        Ok(())
+    }
+
+    /// Allocator/prefix-cache gauges when this session stores state in
+    /// pages (`DecodeOpts::page_size > 0`); `None` for dense sessions.
+    fn paged_stats(&self) -> Option<PagedStats> {
+        None
+    }
 }
 
 /// One execution backend: compiles manifest artifacts and moves tensors.
@@ -154,11 +170,13 @@ pub trait ExecBackend {
     /// Probe/open the optional stateful-decode capability for one plain
     /// `fwd_*` artifact, binding `weights` (params vector, or the packed
     /// train state for `fwd_*_state` keys) and `rows` independent slots.
+    /// `opts` selects the state layout (dense vs paged, prefix cache,
+    /// page budget); `DecodeOpts::default()` is the dense PR 5 layout.
     ///
     /// `Ok(None)` means the capability is absent (this default): callers
     /// fall back to the stateless frontier/full-logits decode path. A
     /// malformed request (non-fwd key, missing artifact, bad weights
-    /// length) is an error, not `None`.
+    /// length, inconsistent opts) is an error, not `None`.
     fn open_decode(
         &self,
         manifest: &Manifest,
@@ -166,8 +184,9 @@ pub trait ExecBackend {
         fwd_key: &str,
         weights: &Buffer,
         rows: usize,
+        opts: &DecodeOpts,
     ) -> Result<Option<Box<dyn DecodeSession>>> {
-        let _ = (manifest, model, fwd_key, weights, rows);
+        let _ = (manifest, model, fwd_key, weights, rows, opts);
         Ok(None)
     }
 }

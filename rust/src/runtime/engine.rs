@@ -23,6 +23,7 @@ use anyhow::{bail, Context, Result};
 
 use super::backend::{make_backend, BackendKind, Buffer, DecodeSession, ExecBackend, Executable};
 use super::manifest::{Manifest, ModelEntry};
+use super::paged::DecodeOpts;
 
 pub struct Engine {
     backend: Rc<dyn ExecBackend>,
@@ -108,9 +109,9 @@ impl Engine {
     }
 
     /// Probe/open the backend's stateful-decode capability for one plain
-    /// `fwd_*` artifact (see [`DecodeSession`]). `Ok(None)` means the
-    /// backend only supports stateless decode — callers fall back to the
-    /// frontier/full-logits path.
+    /// `fwd_*` artifact (see [`DecodeSession`]) with the default dense
+    /// state layout. `Ok(None)` means the backend only supports stateless
+    /// decode — callers fall back to the frontier/full-logits path.
     pub fn open_decode(
         &self,
         model: &ModelEntry,
@@ -118,7 +119,21 @@ impl Engine {
         weights: &Buffer,
         rows: usize,
     ) -> Result<Option<Box<dyn DecodeSession>>> {
-        self.backend.open_decode(&self.manifest, model, fwd_key, weights, rows)
+        self.open_decode_opts(model, fwd_key, weights, rows, &DecodeOpts::default())
+    }
+
+    /// [`Engine::open_decode`] with an explicit state layout: paged K/V
+    /// pages, a shared-prefix cache, and/or a page budget (see
+    /// [`DecodeOpts`]).
+    pub fn open_decode_opts(
+        &self,
+        model: &ModelEntry,
+        fwd_key: &str,
+        weights: &Buffer,
+        rows: usize,
+        opts: &DecodeOpts,
+    ) -> Result<Option<Box<dyn DecodeSession>>> {
+        self.backend.open_decode(&self.manifest, model, fwd_key, weights, rows, opts)
     }
 }
 

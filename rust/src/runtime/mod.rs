@@ -18,6 +18,7 @@
 pub mod backend;
 pub mod engine;
 pub mod manifest;
+pub mod paged;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod reference;
@@ -26,6 +27,7 @@ pub mod refmodel;
 pub use backend::{
     make_backend, BackendKind, Buffer, DecodeSession, Dtype, ExecBackend, Executable,
 };
+pub use paged::{DecodeOpts, PagedStats};
 pub use engine::{scalar, Batch, DeviceState, Engine, ModelRuntime};
 pub use manifest::{
     frontier_key, synthetic_manifest_json, ArtifactDef, Manifest, ModelEntry, ParamDef, SynthSpec,

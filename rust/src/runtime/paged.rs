@@ -1,0 +1,451 @@
+//! Paged decode-state storage: a refcounted free-list page allocator plus
+//! copy-on-write position sequences.
+//!
+//! Dense decode rows (PR 5) reserve `seq_len × d_model` floats per K/V
+//! sequence up front, so slot count is bounded by worst-case memory and
+//! two requests sharing a prompt prefix each hold a private copy of it.
+//! This module stores a sequence as a list of fixed-size pages
+//! ([`PagedKv`]) drawn from a shared pool ([`PagePool`]):
+//!
+//! * memory is bounded by **live tokens** — `ceil(t / page_size)` pages
+//!   per sequence — not `max_slots × seq_len`;
+//! * pages are refcounted, so a prefix cache can hand the same prefilled
+//!   pages to many rows; a row appending into a shared page first copies
+//!   the valid prefix into a fresh page (copy-on-write), leaving the
+//!   donor untouched;
+//! * freed pages return to a LIFO free list and are reused without
+//!   reallocating, so steady-state serving does not grow the pool.
+//!
+//! Bit-exactness: paging only changes *where* a position's `d` floats
+//! live, never their values or the order downstream loops reduce them in.
+//! [`PagedKv::row`] returns exactly the `d`-float slice the dense layout
+//! holds for that position, so attention chains stay bit-identical to the
+//! dense path (pinned by rust/tests/decode_equivalence.rs).
+
+use anyhow::{bail, Result};
+
+/// Knobs for opening a stateful decode session (see
+/// [`crate::runtime::backend::ExecBackend::open_decode`]). The default is
+/// the PR 5 behavior: dense rows, no prefix cache, unbounded state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeOpts {
+    /// Positions per K/V page. `0` keeps the dense per-slot layout
+    /// (one `seq_len × d` buffer per sequence).
+    pub page_size: usize,
+    /// Prefix-cache capacity in entries (`0` = off). Requires a paged
+    /// layout (`page_size > 0`): cached prefixes donate pages by
+    /// refcount, which dense rows cannot share.
+    pub prefix_cache: usize,
+    /// Page budget across all rows plus cached prefixes (`0` =
+    /// unbounded). When tight, LRU prefix entries are evicted before a
+    /// prefill/step fails cleanly.
+    pub max_pages: usize,
+}
+
+impl Default for DecodeOpts {
+    fn default() -> DecodeOpts {
+        DecodeOpts { page_size: 0, prefix_cache: 0, max_pages: 0 }
+    }
+}
+
+/// Allocator gauges reported by a paged decode session
+/// (`DecodeSession::paged_stats`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PagedStats {
+    pub page_size: usize,
+    /// Pages currently referenced by at least one row or cached prefix.
+    pub live_pages: usize,
+    /// Pages sitting on the free list, ready for reuse.
+    pub free_pages: usize,
+    pub prefix_entries: usize,
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    /// Copy-on-write page copies (divergence after a shared prefix).
+    pub cow_copies: u64,
+}
+
+/// A slab of fixed-size pages with per-page refcounts and a LIFO free
+/// list. Page ids are dense indices into the slab; the slab only grows
+/// (up to `max_pages`), freed pages are recycled in LIFO order so reuse
+/// is deterministic.
+pub struct PagePool {
+    /// Positions per page.
+    page_size: usize,
+    /// Floats per position (`d_model` for K/V rows).
+    width: usize,
+    /// Slab growth bound in pages; `0` = unbounded.
+    max_pages: usize,
+    data: Vec<f32>,
+    refs: Vec<u32>,
+    free: Vec<u32>,
+    live: usize,
+    cow_copies: u64,
+}
+
+impl PagePool {
+    pub fn new(page_size: usize, width: usize, max_pages: usize) -> PagePool {
+        PagePool {
+            page_size: page_size.max(1),
+            width: width.max(1),
+            max_pages,
+            data: Vec::new(),
+            refs: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            cow_copies: 0,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn max_pages(&self) -> usize {
+        self.max_pages
+    }
+
+    fn floats_per_page(&self) -> usize {
+        self.page_size * self.width
+    }
+
+    /// Pages that can still be handed out without violating `max_pages`:
+    /// the free list plus remaining slab headroom (`usize::MAX` when
+    /// unbounded).
+    pub fn available(&self) -> usize {
+        if self.max_pages == 0 {
+            usize::MAX
+        } else {
+            self.free.len() + self.max_pages.saturating_sub(self.refs.len())
+        }
+    }
+
+    pub fn live_pages(&self) -> usize {
+        self.live
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+
+    pub fn ref_count(&self, id: u32) -> u32 {
+        self.refs.get(id as usize).copied().unwrap_or(0)
+    }
+
+    /// Hand out a page with refcount 1: most recently freed page first,
+    /// else grow the slab (stale floats in a recycled page are never read
+    /// — sequences only read positions they wrote).
+    pub fn alloc(&mut self) -> Result<u32> {
+        if let Some(id) = self.free.pop() {
+            if let Some(r) = self.refs.get_mut(id as usize) {
+                *r = 1;
+            }
+            self.live += 1;
+            return Ok(id);
+        }
+        if self.max_pages > 0 && self.refs.len() >= self.max_pages {
+            bail!(
+                "page budget exhausted ({} pages of {} positions, max_pages {})",
+                self.refs.len(),
+                self.page_size,
+                self.max_pages
+            );
+        }
+        let id = self.refs.len() as u32;
+        self.refs.push(1);
+        let fp = self.floats_per_page();
+        self.data.resize(self.data.len() + fp, 0.0);
+        self.live += 1;
+        Ok(id)
+    }
+
+    /// Add one reference to a live page (prefix-cache sharing).
+    pub fn retain(&mut self, id: u32) {
+        if let Some(r) = self.refs.get_mut(id as usize) {
+            if *r > 0 {
+                *r += 1;
+            }
+        }
+    }
+
+    /// Drop one reference; the page joins the free list when the count
+    /// hits zero. Releasing an already-free page is a no-op.
+    pub fn release(&mut self, id: u32) {
+        let Some(r) = self.refs.get_mut(id as usize) else { return };
+        if *r == 0 {
+            return;
+        }
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(id);
+            self.live -= 1;
+        }
+    }
+
+    pub fn page(&self, id: u32) -> &[f32] {
+        let fp = self.floats_per_page();
+        let start = id as usize * fp;
+        &self.data[start..start + fp]
+    }
+
+    pub fn page_mut(&mut self, id: u32) -> &mut [f32] {
+        let fp = self.floats_per_page();
+        let start = id as usize * fp;
+        &mut self.data[start..start + fp]
+    }
+
+    /// Copy the first `floats` of `src` into `dst` (the COW body).
+    fn copy_prefix(&mut self, src: u32, dst: u32, floats: usize) {
+        let fp = self.floats_per_page();
+        let s = src as usize * fp;
+        let d = dst as usize * fp;
+        self.data.copy_within(s..s + floats, d);
+    }
+}
+
+/// One position sequence stored as pool pages: `len` valid positions of
+/// `width` floats each, `page_size` positions per page. No `Clone` —
+/// sharing pages must go through [`PagedKv::fork`] so refcounts stay
+/// honest.
+#[derive(Debug, Default)]
+pub struct PagedKv {
+    pages: Vec<u32>,
+    len: usize,
+}
+
+impl PagedKv {
+    /// Valid positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn page_count(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Append one `width`-float position row. At most one page allocation
+    /// per call: a fresh page at a page boundary, or a copy-on-write
+    /// replacement when the tail page is shared with a cached prefix (or
+    /// a sibling fork) — the donor's floats are never touched.
+    pub fn push(&mut self, pool: &mut PagePool, row: &[f32]) -> Result<()> {
+        let (psz, w) = (pool.page_size(), pool.width());
+        if row.len() != w {
+            bail!("paged push of {} floats into width-{w} pool", row.len());
+        }
+        let within = self.len % psz;
+        if within == 0 {
+            let id = pool.alloc()?;
+            self.pages.push(id);
+        } else if let Some(&last) = self.pages.last() {
+            if pool.ref_count(last) > 1 {
+                let fresh = pool.alloc()?;
+                pool.copy_prefix(last, fresh, within * w);
+                pool.release(last);
+                pool.cow_copies += 1;
+                if let Some(slot) = self.pages.last_mut() {
+                    *slot = fresh;
+                }
+            }
+        }
+        let Some(&page) = self.pages.last() else {
+            bail!("paged sequence lost its tail page");
+        };
+        let off = within * w;
+        pool.page_mut(page)[off..off + w].copy_from_slice(row);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// The `width` floats of position `j` — the same slice a dense
+    /// `Vec<f32>` layout holds at `j * width`.
+    pub fn row<'p>(&self, pool: &'p PagePool, j: usize) -> &'p [f32] {
+        let (psz, w) = (pool.page_size(), pool.width());
+        debug_assert!(j < self.len, "position {j} past len {}", self.len);
+        let page = self.pages[j / psz];
+        let off = (j % psz) * w;
+        &pool.page(page)[off..off + w]
+    }
+
+    /// Share the first `upto` positions: the covering pages gain a
+    /// reference each and the fork starts at `len == upto`. Appends into
+    /// a partially-covered tail page copy-on-write instead of clobbering
+    /// the donor.
+    pub fn fork(&self, pool: &mut PagePool, upto: usize) -> PagedKv {
+        let psz = pool.page_size();
+        let upto = upto.min(self.len);
+        let n_pages = upto.div_ceil(psz);
+        let mut pages = Vec::with_capacity(n_pages);
+        for &id in self.pages.iter().take(n_pages) {
+            pool.retain(id);
+            pages.push(id);
+        }
+        PagedKv { pages, len: upto }
+    }
+
+    /// Drop every page reference and reset to empty.
+    pub fn clear(&mut self, pool: &mut PagePool) {
+        for &id in &self.pages {
+            pool.release(id);
+        }
+        self.pages.clear();
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rowv(w: usize, v: f32) -> Vec<f32> {
+        vec![v; w]
+    }
+
+    #[test]
+    fn alloc_release_recycles_lifo() {
+        let mut p = PagePool::new(4, 2, 0);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(p.live_pages(), 2);
+        p.release(a);
+        p.release(b);
+        assert_eq!(p.live_pages(), 0);
+        assert_eq!(p.free_pages(), 2);
+        // LIFO: most recently freed first, slab does not grow
+        assert_eq!(p.alloc().unwrap(), b);
+        assert_eq!(p.alloc().unwrap(), a);
+        assert_eq!(p.free_pages(), 0);
+    }
+
+    #[test]
+    fn release_is_refcounted_and_idempotent_at_zero() {
+        let mut p = PagePool::new(2, 1, 0);
+        let a = p.alloc().unwrap();
+        p.retain(a);
+        assert_eq!(p.ref_count(a), 2);
+        p.release(a);
+        assert_eq!(p.live_pages(), 1);
+        p.release(a);
+        assert_eq!(p.live_pages(), 0);
+        p.release(a); // double-release must not underflow or re-free
+        assert_eq!(p.free_pages(), 1);
+        assert_eq!(p.ref_count(a), 0);
+    }
+
+    #[test]
+    fn budget_exhaustion_errors_cleanly() {
+        let mut p = PagePool::new(2, 1, 2);
+        assert_eq!(p.available(), 2);
+        let a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        assert_eq!(p.available(), 0);
+        let err = p.alloc().unwrap_err().to_string();
+        assert!(err.contains("page budget exhausted"), "{err}");
+        p.release(a);
+        assert_eq!(p.available(), 1);
+        assert!(p.alloc().is_ok());
+    }
+
+    #[test]
+    fn push_and_row_roundtrip_across_page_boundaries() {
+        for psz in [1usize, 3, 4, 16] {
+            let mut p = PagePool::new(psz, 3, 0);
+            let mut s = PagedKv::default();
+            for i in 0..10 {
+                s.push(&mut p, &rowv(3, i as f32)).unwrap();
+            }
+            assert_eq!(s.len(), 10);
+            assert_eq!(s.page_count(), 10usize.div_ceil(psz));
+            for i in 0..10 {
+                assert_eq!(s.row(&p, i), &rowv(3, i as f32)[..], "psz {psz} pos {i}");
+            }
+            s.clear(&mut p);
+            assert_eq!(p.live_pages(), 0);
+        }
+    }
+
+    #[test]
+    fn fork_shares_pages_then_cow_on_divergence() {
+        let mut p = PagePool::new(4, 2, 0);
+        let mut donor = PagedKv::default();
+        for i in 0..6 {
+            donor.push(&mut p, &rowv(2, i as f32)).unwrap();
+        }
+        // 6 positions over 4-position pages = 2 pages, tail half-full
+        assert_eq!(p.live_pages(), 2);
+        let mut fork = donor.fork(&mut p, 6);
+        assert_eq!(p.live_pages(), 2); // shared, no copy yet
+        assert_eq!(fork.len(), 6);
+        // divergence: fork appends -> COW copies the shared tail page
+        fork.push(&mut p, &rowv(2, 100.0)).unwrap();
+        assert_eq!(p.cow_copies(), 1);
+        assert_eq!(p.live_pages(), 3);
+        assert_eq!(fork.row(&p, 6), &rowv(2, 100.0)[..]);
+        // donor is untouched, including the position the fork diverged at
+        assert_eq!(donor.len(), 6);
+        for i in 0..6 {
+            assert_eq!(donor.row(&p, i), &rowv(2, i as f32)[..]);
+            assert_eq!(fork.row(&p, i), &rowv(2, i as f32)[..]);
+        }
+        fork.clear(&mut p);
+        donor.clear(&mut p);
+        assert_eq!(p.live_pages(), 0);
+    }
+
+    #[test]
+    fn fork_at_page_boundary_needs_no_cow() {
+        let mut p = PagePool::new(4, 1, 0);
+        let mut donor = PagedKv::default();
+        for i in 0..4 {
+            donor.push(&mut p, &[i as f32]).unwrap();
+        }
+        let mut fork = donor.fork(&mut p, 4);
+        fork.push(&mut p, &[9.0]).unwrap(); // fresh page, donor's is full
+        assert_eq!(p.cow_copies(), 0);
+        assert_eq!(p.live_pages(), 2);
+        fork.clear(&mut p);
+        // donor's page survives its own reference
+        assert_eq!(p.live_pages(), 1);
+        donor.clear(&mut p);
+        assert_eq!(p.live_pages(), 0);
+    }
+
+    #[test]
+    fn two_forks_diverge_independently() {
+        let mut p = PagePool::new(4, 1, 0);
+        let mut donor = PagedKv::default();
+        for i in 0..2 {
+            donor.push(&mut p, &[i as f32]).unwrap();
+        }
+        let mut fa = donor.fork(&mut p, 2);
+        let mut fb = donor.fork(&mut p, 2);
+        fa.push(&mut p, &[10.0]).unwrap();
+        fb.push(&mut p, &[20.0]).unwrap();
+        assert_eq!(p.cow_copies(), 2);
+        assert_eq!(fa.row(&p, 2), &[10.0][..]);
+        assert_eq!(fb.row(&p, 2), &[20.0][..]);
+        assert_eq!(donor.len(), 2);
+        for s in [&mut fa, &mut fb, &mut donor] {
+            s.clear(&mut p);
+        }
+        assert_eq!(p.live_pages(), 0);
+        assert_eq!(p.free_pages(), 3);
+    }
+
+    #[test]
+    fn decode_opts_default_is_dense() {
+        let o = DecodeOpts::default();
+        assert_eq!(o, DecodeOpts { page_size: 0, prefix_cache: 0, max_pages: 0 });
+    }
+}

@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use super::backend::{Buffer, DecodeSession, Dtype, ExecBackend, Executable};
 use super::manifest::{ArgDef, Manifest, ModelEntry};
+use super::paged::{DecodeOpts, PagedStats};
 use super::refmodel::{self, DecodeCtx, DecodeRow, LossKind, RefCfg};
 
 /// Host-side tensor payload of a reference-backend buffer.
@@ -245,6 +246,20 @@ impl DecodeSession for RefDecodeSession {
             .with_context(|| format!("decode row {row} out of range ({n} slots)"))?;
         self.ctx.step(r, token, logits)
     }
+
+    fn close(&mut self, row: usize) -> Result<()> {
+        let n = self.rows.len();
+        let r = self
+            .rows
+            .get_mut(row)
+            .with_context(|| format!("decode row {row} out of range ({n} slots)"))?;
+        self.ctx.release_row(r);
+        Ok(())
+    }
+
+    fn paged_stats(&self) -> Option<PagedStats> {
+        self.ctx.paged_stats()
+    }
 }
 
 impl ExecBackend for ReferenceBackend {
@@ -406,6 +421,7 @@ impl ExecBackend for ReferenceBackend {
         fwd_key: &str,
         weights: &Buffer,
         rows: usize,
+        opts: &DecodeOpts,
     ) -> Result<Option<Box<dyn DecodeSession>>> {
         let Some(rest) = fwd_key.strip_prefix("fwd_") else {
             bail!("stateful decode needs a plain fwd_* artifact key, got {fwd_key:?}");
@@ -435,7 +451,7 @@ impl ExecBackend for ReferenceBackend {
         } else if data.len() != model.param_count {
             bail!("params len {} != param_count {}", data.len(), model.param_count);
         }
-        let ctx = DecodeCtx::new(cfg, data[..model.param_count].to_vec())?;
+        let ctx = DecodeCtx::with_opts(cfg, data[..model.param_count].to_vec(), *opts)?;
         let rows = (0..rows.max(1)).map(|_| ctx.new_row()).collect();
         Ok(Some(Box::new(RefDecodeSession { ctx, rows })))
     }
@@ -528,18 +544,20 @@ mod tests {
         let params = vec![0.01f32; model.param_count];
         let w = be.upload_f32(&params, &[model.param_count]).unwrap();
         // plain fwd keys open a session
-        let s = be.open_decode(&manifest, &model, "fwd_bf16", &w, 3).unwrap().unwrap();
+        let dflt = DecodeOpts::default();
+        let s = be.open_decode(&manifest, &model, "fwd_bf16", &w, 3, &dflt).unwrap().unwrap();
         assert_eq!(s.rows(), 3);
         assert_eq!(s.capacity(), model.seq_len);
         assert_eq!(s.len(0), 0);
         // the frontier twin is stateless -> capability absent, not an error
-        assert!(be.open_decode(&manifest, &model, "fwd_last_bf16", &w, 1).unwrap().is_none());
+        let last = be.open_decode(&manifest, &model, "fwd_last_bf16", &w, 1, &dflt).unwrap();
+        assert!(last.is_none());
         // non-fwd keys and undeclared artifacts are errors
-        assert!(be.open_decode(&manifest, &model, "sft_bf16", &w, 1).is_err());
-        assert!(be.open_decode(&manifest, &model, "fwd_int4", &w, 1).is_err());
+        assert!(be.open_decode(&manifest, &model, "sft_bf16", &w, 1, &dflt).is_err());
+        assert!(be.open_decode(&manifest, &model, "fwd_int4", &w, 1, &dflt).is_err());
         // wrong weights length is an error
         let short = be.upload_f32(&[0.0; 4], &[4]).unwrap();
-        assert!(be.open_decode(&manifest, &model, "fwd_bf16", &short, 1).is_err());
+        assert!(be.open_decode(&manifest, &model, "fwd_bf16", &short, 1, &dflt).is_err());
     }
 
     #[test]
@@ -556,8 +574,11 @@ mod tests {
         let params = state[..model.param_count].to_vec();
         let sbuf = be.upload_f32(&state, &[model.state_len]).unwrap();
         let pbuf = be.upload_f32(&params, &[model.param_count]).unwrap();
-        let mut a = be.open_decode(&manifest, &model, "fwd_bf16_state", &sbuf, 1).unwrap().unwrap();
-        let mut b = be.open_decode(&manifest, &model, "fwd_bf16", &pbuf, 1).unwrap().unwrap();
+        let dflt = DecodeOpts::default();
+        let mut a =
+            be.open_decode(&manifest, &model, "fwd_bf16_state", &sbuf, 1, &dflt).unwrap().unwrap();
+        let mut b =
+            be.open_decode(&manifest, &model, "fwd_bf16", &pbuf, 1, &dflt).unwrap().unwrap();
         let (mut la, mut lb) = (Vec::new(), Vec::new());
         a.prefill(0, &[1, 5, 9], &mut la).unwrap();
         b.prefill(0, &[1, 5, 9], &mut lb).unwrap();

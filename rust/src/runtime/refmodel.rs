@@ -29,6 +29,7 @@ use anyhow::{bail, Context, Result};
 
 use super::engine::scalar;
 use super::manifest::{ModelEntry, ParamDef};
+use super::paged::{DecodeOpts, PagePool, PagedKv, PagedStats};
 use crate::quant::{baselines, nvfp4};
 use crate::util::gemm::{matmul, matmul_into, matmul_nt, matmul_tn};
 use crate::util::pool;
@@ -1706,10 +1707,66 @@ pub fn fwd_last(
 // Rows never interact, so a scheduler can admit a new row mid-generation
 // without disturbing in-flight ones.
 
+/// One cached K or V position sequence: the dense `seq_len`-capacity
+/// buffer (PR 5 layout) or fixed-size pages from the context's shared
+/// [`PagePool`]. Both expose identical `d`-float position rows, so every
+/// downstream f32 chain is layout-independent (bit-identical logits).
+enum KvSeq {
+    Dense(Vec<f32>),
+    Paged(PagedKv),
+}
+
+/// Append one `d`-float position row at the sequence frontier.
+fn kv_push(seq: &mut KvSeq, pool: &mut PagePool, rowd: &[f32]) -> Result<()> {
+    match seq {
+        KvSeq::Dense(buf) => {
+            buf.extend_from_slice(rowd);
+            Ok(())
+        }
+        KvSeq::Paged(p) => p.push(pool, rowd),
+    }
+}
+
+/// The `d` floats of position `j` — exactly the slice the dense layout
+/// holds at `j * d`, whichever layout backs the sequence.
+fn kv_row<'a>(seq: &'a KvSeq, pool: &'a PagePool, j: usize, d: usize) -> &'a [f32] {
+    match seq {
+        KvSeq::Dense(buf) => &buf[j * d..(j + 1) * d],
+        KvSeq::Paged(p) => p.row(pool, j),
+    }
+}
+
+/// Reset a sequence to empty, returning any pages to the pool.
+fn kv_clear(seq: &mut KvSeq, pool: &mut PagePool) {
+    match seq {
+        KvSeq::Dense(buf) => buf.clear(),
+        KvSeq::Paged(p) => p.clear(pool),
+    }
+}
+
+/// Replace a sequence's contents with `src` (`len * d` floats, position
+/// rows in ascending order) — the prefill harvest.
+fn kv_fill(seq: &mut KvSeq, pool: &mut PagePool, src: &[f32], d: usize) -> Result<()> {
+    match seq {
+        KvSeq::Dense(buf) => {
+            buf.clear();
+            buf.extend_from_slice(src);
+            Ok(())
+        }
+        KvSeq::Paged(p) => {
+            p.clear(pool);
+            for chunk in src.chunks_exact(d) {
+                p.push(pool, chunk)?;
+            }
+            Ok(())
+        }
+    }
+}
+
 /// Per-layer decode state of one row.
 enum RowBlockState {
     /// Cached post-GEMM K/V rows, `t * d` valid floats each.
-    Attn { k: Vec<f32>, v: Vec<f32> },
+    Attn { k: KvSeq, v: KvSeq },
     /// The scan carry h_{t-1}, `d` floats.
     Ssm { h: Vec<f32> },
     /// MoE blocks are position-local: nothing to carry.
@@ -1799,6 +1856,179 @@ enum BlockWeights {
     },
 }
 
+/// One cached block state snapshotted at a prompt boundary: attention
+/// K/V as refcounted page forks, the SSM carry by value.
+enum CachedBlock {
+    Attn { k: PagedKv, v: PagedKv },
+    Ssm { h: Vec<f32> },
+    Moe,
+}
+
+/// One prefix-cache entry: the full per-layer decode state after
+/// prefilling `tokens`, plus the logits row that prefill produced (so an
+/// exact hit answers without touching the model at all).
+struct PrefixEntry {
+    tokens: Vec<i32>,
+    blocks: Vec<CachedBlock>,
+    logits: Vec<f32>,
+    /// Logical LRU clock (no wall time — eviction stays deterministic).
+    tick: u64,
+}
+
+/// Shared-prompt-prefix cache over paged decode state. Lookup scans for
+/// the longest entry whose tokens are an elementwise prefix of the
+/// prompt; a hit donates its pages by refcount (copy-on-write protects
+/// the entry when the borrowing row diverges). Eviction is
+/// least-recently-used on a logical tick, oldest entry first.
+struct PrefixCache {
+    cap: usize,
+    entries: Vec<PrefixEntry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl PrefixCache {
+    fn new(cap: usize) -> PrefixCache {
+        PrefixCache { cap: cap.max(1), entries: Vec::new(), tick: 0, hits: 0, misses: 0 }
+    }
+
+    /// Longest cached prefix of `prompt`: `(entry index, matched len)`.
+    /// Counts a hit/miss and touches the winner's LRU tick.
+    fn lookup(&mut self, prompt: &[i32]) -> Option<(usize, usize)> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            let n = e.tokens.len();
+            if n > prompt.len() || !prompt.starts_with(&e.tokens) {
+                continue;
+            }
+            let better = match best {
+                Some((_, bl)) => n > bl,
+                None => true,
+            };
+            if better {
+                best = Some((i, n));
+            }
+        }
+        match best {
+            Some((i, n)) => {
+                self.tick += 1;
+                if let Some(e) = self.entries.get_mut(i) {
+                    e.tick = self.tick;
+                }
+                self.hits += 1;
+                Some((i, n))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Copy entry `idx`'s state into `row` (pages by refcounted fork, the
+    /// SSM carry by value) and its stored logits into `logits`.
+    fn fork_into(
+        &self,
+        idx: usize,
+        pool: &mut PagePool,
+        row: &mut DecodeRow,
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
+        let Some(e) = self.entries.get(idx) else {
+            bail!("prefix entry {idx} out of range ({} entries)", self.entries.len());
+        };
+        if e.blocks.len() != row.blocks.len() {
+            bail!("prefix entry block count {} != row {}", e.blocks.len(), row.blocks.len());
+        }
+        for (bs, cb) in row.blocks.iter_mut().zip(&e.blocks) {
+            match (bs, cb) {
+                (RowBlockState::Attn { k, v }, CachedBlock::Attn { k: ck, v: cv }) => {
+                    *k = KvSeq::Paged(ck.fork(pool, ck.len()));
+                    *v = KvSeq::Paged(cv.fork(pool, cv.len()));
+                }
+                (RowBlockState::Ssm { h }, CachedBlock::Ssm { h: ch }) => {
+                    h.copy_from_slice(ch);
+                }
+                (RowBlockState::Moe, CachedBlock::Moe) => {}
+                _ => bail!("prefix entry block kinds diverged from the row"),
+            }
+        }
+        row.t = e.tokens.len();
+        logits.clear();
+        logits.extend_from_slice(&e.logits);
+        Ok(())
+    }
+
+    /// Snapshot `row` (which must hold exactly the state after prefilling
+    /// `tokens`) as a new entry, then trim to capacity. A duplicate-token
+    /// entry is touched instead of re-inserted.
+    fn insert(&mut self, pool: &mut PagePool, row: &DecodeRow, tokens: &[i32], logits: &[f32]) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.tokens == tokens) {
+            e.tick = tick;
+            return;
+        }
+        let mut blocks = Vec::with_capacity(row.blocks.len());
+        for bs in &row.blocks {
+            let cb = match bs {
+                RowBlockState::Attn { k: KvSeq::Paged(pk), v: KvSeq::Paged(pv) } => {
+                    CachedBlock::Attn {
+                        k: pk.fork(pool, pk.len()),
+                        v: pv.fork(pool, pv.len()),
+                    }
+                }
+                // dense rows cannot donate pages; skip caching entirely
+                RowBlockState::Attn { .. } => return,
+                RowBlockState::Ssm { h } => CachedBlock::Ssm { h: h.clone() },
+                RowBlockState::Moe => CachedBlock::Moe,
+            };
+            blocks.push(cb);
+        }
+        self.entries.push(PrefixEntry {
+            tokens: tokens.to_vec(),
+            blocks,
+            logits: logits.to_vec(),
+            tick,
+        });
+        while self.entries.len() > self.cap {
+            if !self.evict_lru(pool) {
+                break;
+            }
+        }
+    }
+
+    /// Evict the least-recently-used entry, releasing its page
+    /// references. Returns false when the cache is already empty.
+    fn evict_lru(&mut self, pool: &mut PagePool) -> bool {
+        let mut victim: Option<(usize, u64)> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            let older = match victim {
+                Some((_, vt)) => e.tick < vt,
+                None => true,
+            };
+            if older {
+                victim = Some((i, e.tick));
+            }
+        }
+        let Some((i, _)) = victim else { return false };
+        let mut e = self.entries.remove(i);
+        for cb in e.blocks.iter_mut() {
+            if let CachedBlock::Attn { k, v } = cb {
+                k.clear(pool);
+                v.clear(pool);
+            }
+        }
+        true
+    }
+
+    /// Drop every entry (drain/shutdown): all page references released.
+    fn clear(&mut self, pool: &mut PagePool) {
+        while self.evict_lru(pool) {}
+    }
+}
+
 /// Weights bound for incremental decode: the raw parameter snapshot plus
 /// per-block pre-resolved weight slices, with every quantized-GEMM
 /// weight fake-quantized once up front (the full forward re-quantizes
@@ -1813,16 +2043,38 @@ pub struct DecodeCtx {
     head: StepWeight,
     /// (block quantized?, resolved weights), one per model block.
     blocks: Vec<(bool, BlockWeights)>,
+    /// Attention blocks in `blocks` (page-headroom accounting).
+    attn_blocks: usize,
     scratch: StepScratch,
+    opts: DecodeOpts,
+    /// Shared page slab for paged rows + cached prefixes (idle in dense
+    /// mode).
+    page_pool: PagePool,
+    prefix: Option<PrefixCache>,
 }
 
 impl DecodeCtx {
+    /// Bind `params` for decode under `cfg` with the default dense state
+    /// layout (see [`DecodeCtx::with_opts`]).
+    pub fn new(cfg: RefCfg, params: Vec<f32>) -> Result<DecodeCtx> {
+        DecodeCtx::with_opts(cfg, params, DecodeOpts::default())
+    }
+
     /// Bind `params` for decode under `cfg`. Rejects vision models (the
     /// stateless path handles pixels) and pre-quantizes every GEMM weight
     /// of the quantized blocks along its contraction axis — identical to
-    /// what `Gemm::forward` computes per call.
-    pub fn new(cfg: RefCfg, params: Vec<f32>) -> Result<DecodeCtx> {
+    /// what `Gemm::forward` computes per call. `opts` selects dense rows
+    /// (`page_size == 0`) or paged state with an optional prefix cache
+    /// and page budget.
+    pub fn with_opts(cfg: RefCfg, params: Vec<f32>, opts: DecodeOpts) -> Result<DecodeCtx> {
         let m = &cfg.model;
+        if opts.page_size == 0 && (opts.prefix_cache > 0 || opts.max_pages > 0) {
+            bail!(
+                "prefix_cache ({}) and max_pages ({}) require paged decode state (page_size > 0)",
+                opts.prefix_cache,
+                opts.max_pages
+            );
+        }
         if m.vision {
             bail!("incremental decode does not cover vision models");
         }
@@ -1931,6 +2183,11 @@ impl DecodeCtx {
         let pos_emb = prange("pos_emb")?;
         let ln_f = prange("ln_f")?;
         let head = wres("head", d, m.vocab, cfg.head_quantized())?;
+        let attn_blocks =
+            blocks.iter().filter(|(_, bw)| matches!(bw, BlockWeights::Attn { .. })).count();
+        let page_pool = PagePool::new(opts.page_size.max(1), d, opts.max_pages);
+        let prefix =
+            if opts.prefix_cache > 0 { Some(PrefixCache::new(opts.prefix_cache)) } else { None };
         Ok(DecodeCtx {
             cfg,
             params,
@@ -1939,7 +2196,11 @@ impl DecodeCtx {
             ln_f,
             head,
             blocks,
+            attn_blocks,
             scratch: StepScratch::default(),
+            opts,
+            page_pool,
+            prefix,
         })
     }
 
@@ -1947,19 +2208,26 @@ impl DecodeCtx {
         &self.cfg.model
     }
 
-    /// A fresh (empty) row for this model's block stack.
+    /// A fresh (empty) row for this model's block stack. Dense rows
+    /// reserve `seq_len × d` per K/V sequence up front; paged rows own
+    /// nothing until tokens arrive (memory follows live tokens).
     pub fn new_row(&self) -> DecodeRow {
         let m = &self.cfg.model;
         let d = m.d_model;
         let cap = m.seq_len * d;
+        let paged = self.opts.page_size > 0;
+        let kv = |paged: bool| {
+            if paged {
+                KvSeq::Paged(PagedKv::default())
+            } else {
+                KvSeq::Dense(Vec::with_capacity(cap))
+            }
+        };
         let blocks = self
             .blocks
             .iter()
             .map(|(_, bw)| match bw {
-                BlockWeights::Attn { .. } => RowBlockState::Attn {
-                    k: Vec::with_capacity(cap),
-                    v: Vec::with_capacity(cap),
-                },
+                BlockWeights::Attn { .. } => RowBlockState::Attn { k: kv(paged), v: kv(paged) },
                 BlockWeights::Ssm { .. } => RowBlockState::Ssm { h: vec![0f32; d] },
                 BlockWeights::Moe { .. } => RowBlockState::Moe,
             })
@@ -1967,12 +2235,80 @@ impl DecodeCtx {
         DecodeRow { blocks, t: 0 }
     }
 
+    /// Return `row`'s pages to the pool and reset it to empty (dense rows
+    /// truncate in place; the SSM carry is re-zeroed either way).
+    pub fn release_row(&mut self, row: &mut DecodeRow) {
+        for bs in row.blocks.iter_mut() {
+            match bs {
+                RowBlockState::Attn { k, v } => {
+                    kv_clear(k, &mut self.page_pool);
+                    kv_clear(v, &mut self.page_pool);
+                }
+                RowBlockState::Ssm { h } => {
+                    for x in h.iter_mut() {
+                        *x = 0.0;
+                    }
+                }
+                RowBlockState::Moe => {}
+            }
+        }
+        row.t = 0;
+    }
+
+    /// Allocator/prefix-cache gauges (`None` in dense mode).
+    pub fn paged_stats(&self) -> Option<PagedStats> {
+        if self.opts.page_size == 0 {
+            return None;
+        }
+        let mut st = PagedStats {
+            page_size: self.opts.page_size,
+            live_pages: self.page_pool.live_pages(),
+            free_pages: self.page_pool.free_pages(),
+            cow_copies: self.page_pool.cow_copies(),
+            ..PagedStats::default()
+        };
+        if let Some(pc) = self.prefix.as_ref() {
+            st.prefix_entries = pc.entries.len();
+            st.prefix_hits = pc.hits;
+            st.prefix_misses = pc.misses;
+        }
+        Some(st)
+    }
+
+    /// Make at least `need` pages allocatable, evicting LRU prefix
+    /// entries when the budget is tight. Errors cleanly (one request
+    /// degrades; the session stays usable) only when even an empty cache
+    /// cannot satisfy the request.
+    fn ensure_pages(&mut self, need: usize) -> Result<()> {
+        let DecodeCtx { page_pool, prefix, .. } = self;
+        loop {
+            if page_pool.available() >= need {
+                return Ok(());
+            }
+            let evicted = match prefix.as_mut() {
+                Some(pc) => pc.evict_lru(page_pool),
+                None => false,
+            };
+            if !evicted {
+                bail!(
+                    "decode page budget exhausted (need {need} pages, {} available of max {})",
+                    page_pool.available(),
+                    page_pool.max_pages()
+                );
+            }
+        }
+    }
+
     /// Reset `row` to `prompt` and write the logits row predicting the
-    /// next token. Runs one normal `forward` over the prompt and harvests
-    /// its caches into the row state (K/V rows come straight from the
-    /// forward's per-position GEMM outputs; the scan carry is the last
-    /// scan state), so prefill logits are the full forward's by
-    /// construction.
+    /// next token. Cold path: one normal `forward` over the prompt,
+    /// harvesting its caches into the row state (K/V rows come straight
+    /// from the forward's per-position GEMM outputs; the scan carry is
+    /// the last scan state), so prefill logits are the full forward's by
+    /// construction. With a prefix cache, a prompt sharing a cached
+    /// prefix instead forks the prefilled pages (refcounted,
+    /// copy-on-write on divergence) and replays only the suffix through
+    /// the step path — bit-identical to cold by the step==full contract;
+    /// an exact hit returns the stored logits without touching the model.
     pub fn prefill(
         &mut self,
         row: &mut DecodeRow,
@@ -1984,18 +2320,50 @@ impl DecodeCtx {
         if prompt.is_empty() || prompt.len() > s {
             bail!("prefill needs 1..={s} prompt tokens, got {}", prompt.len());
         }
+        if row.blocks.len() != self.blocks.len() {
+            bail!("decode row block count {} != model {}", row.blocks.len(), self.blocks.len());
+        }
         let l = prompt.len();
+        self.release_row(row);
+        if self.opts.page_size > 0 {
+            // Worst case: K and V per attention block need ceil(l/psz)
+            // fresh pages each, plus one COW apiece after a partial hit.
+            let per_seq = l.div_ceil(self.opts.page_size) + 1;
+            self.ensure_pages(2 * self.attn_blocks * per_seq)?;
+        }
+        let hit = match self.prefix.as_mut() {
+            Some(pc) => pc.lookup(prompt),
+            None => None,
+        };
+        if let Some((idx, plen)) = hit {
+            {
+                let DecodeCtx { page_pool, prefix, .. } = &mut *self;
+                let Some(pc) = prefix.as_ref() else {
+                    bail!("prefix cache disappeared mid-prefill");
+                };
+                pc.fork_into(idx, page_pool, row, logits)?;
+            }
+            if plen < l {
+                // Partial hit: replay the unmatched suffix one position
+                // at a time. The final replayed step writes exactly the
+                // cold-prefill logits (step == full forward).
+                for &tk in &prompt[plen..] {
+                    self.step_unchecked(row, tk, logits)?;
+                }
+                self.prefix_insert(row, prompt, logits);
+            }
+            return Ok(());
+        }
         let fwd = forward(&self.cfg, &self.params, prompt, 1, l, None)?;
         if row.blocks.len() != fwd.caches.len() {
             bail!("decode row block count {} != model {}", row.blocks.len(), fwd.caches.len());
         }
+        let pool = &mut self.page_pool;
         for (bs, cache) in row.blocks.iter_mut().zip(&fwd.caches) {
             match (bs, cache) {
                 (RowBlockState::Attn { k, v }, BlockCache::Attn { gk, gv, .. }) => {
-                    k.clear();
-                    k.extend_from_slice(&gk.out);
-                    v.clear();
-                    v.extend_from_slice(&gv.out);
+                    kv_fill(k, pool, &gk.out, d)?;
+                    kv_fill(v, pool, &gv.out, d)?;
                 }
                 (RowBlockState::Ssm { h }, BlockCache::Ssm { h: hs, .. }) => {
                     h.copy_from_slice(&hs[(l - 1) * d..l * d]);
@@ -2007,12 +2375,39 @@ impl DecodeCtx {
         row.t = l;
         logits.clear();
         logits.extend_from_slice(&fwd.logits[(l - 1) * v..l * v]);
+        self.prefix_insert(row, prompt, logits);
         Ok(())
+    }
+
+    /// Cache `row`'s post-prefill state for `prompt` (no-op without a
+    /// prefix cache). Forking only retains pages, so this never
+    /// allocates and cannot fail.
+    fn prefix_insert(&mut self, row: &DecodeRow, prompt: &[i32], logits: &[f32]) {
+        let DecodeCtx { page_pool, prefix, .. } = self;
+        if let Some(pc) = prefix.as_mut() {
+            pc.insert(page_pool, row, prompt, logits);
+        }
     }
 
     /// Append `token` at the row frontier and write the next logits row.
     pub fn step(&mut self, row: &mut DecodeRow, token: i32, logits: &mut Vec<f32>) -> Result<()> {
-        let DecodeCtx { cfg, params, embed, pos_emb, ln_f, head, blocks, scratch } = self;
+        if self.opts.page_size > 0 {
+            // One alloc (fresh page or COW) max per K/V push.
+            self.ensure_pages(2 * self.attn_blocks)?;
+        }
+        self.step_unchecked(row, token, logits)
+    }
+
+    /// [`DecodeCtx::step`] without the page-headroom check (replay loops
+    /// reserve their pages once up front).
+    fn step_unchecked(
+        &mut self,
+        row: &mut DecodeRow,
+        token: i32,
+        logits: &mut Vec<f32>,
+    ) -> Result<()> {
+        let DecodeCtx { cfg, params, embed, pos_emb, ln_f, head, blocks, scratch, page_pool, .. } =
+            self;
         step_position(
             cfg,
             params,
@@ -2022,6 +2417,7 @@ impl DecodeCtx {
             head,
             blocks,
             scratch,
+            page_pool,
             row,
             token,
             logits,
@@ -2093,6 +2489,7 @@ fn step_position(
     head: &StepWeight,
     blocks: &[(bool, BlockWeights)],
     sc: &mut StepScratch,
+    page_pool: &mut PagePool,
     row: &mut DecodeRow,
     token: i32,
     logits: &mut Vec<f32>,
@@ -2134,11 +2531,13 @@ fn step_position(
                 step_gemm(&sc.y, wq.slice(params), d, d, quant, acts, &mut sc.xq, &mut sc.q)?;
                 step_gemm(&sc.y, wk.slice(params), d, d, quant, acts, &mut sc.xq, &mut sc.k)?;
                 step_gemm(&sc.y, wv.slice(params), d, d, quant, acts, &mut sc.xq, &mut sc.v)?;
-                kc.extend_from_slice(&sc.k);
-                vc.extend_from_slice(&sc.v);
+                kv_push(kc, page_pool, &sc.k)?;
+                kv_push(vc, page_pool, &sc.v)?;
                 // Scores over the cached prefix + softmax + AV, one head
                 // at a time — each chain is the full pass's row chain
                 // (ascending j; masked columns there are exact 0.0).
+                // `kv_row` hands back the same d-float position slice in
+                // either layout, so paging cannot perturb a single bit.
                 let inv_sqrt = 1.0 / (hd as f32).sqrt();
                 sc.o.clear();
                 sc.o.resize(d, 0.0);
@@ -2146,7 +2545,7 @@ fn step_position(
                 for head in 0..h {
                     let qh = &sc.q[head * hd..(head + 1) * hd];
                     for j in 0..=t {
-                        let kh = &kc[j * d + head * hd..j * d + (head + 1) * hd];
+                        let kh = &kv_row(kc, page_pool, j, d)[head * hd..(head + 1) * hd];
                         let mut sdot = 0f32;
                         for c in 0..hd {
                             sdot += qh[c] * kh[c];
@@ -2167,7 +2566,7 @@ fn step_position(
                     let orow = &mut sc.o[head * hd..(head + 1) * hd];
                     for j in 0..=t {
                         let pj = sc.att[j];
-                        let vv = &vc[j * d + head * hd..j * d + (head + 1) * hd];
+                        let vv = &kv_row(vc, page_pool, j, d)[head * hd..(head + 1) * hd];
                         for c in 0..hd {
                             orow[c] += pj * vv[c];
                         }

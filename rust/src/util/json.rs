@@ -155,7 +155,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; `{n}` would emit
+                    // one and corrupt the whole line for strict parsers
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -440,5 +444,18 @@ mod tests {
     fn unicode_and_escapes() {
         let v = Json::parse(r#""café ☕""#).unwrap();
         assert_eq!(v.as_str(), Some("café ☕"));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // JSON has no NaN/Infinity literal — a bare `NaN` token would
+        // make the line unparseable for every strict consumer
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "null");
+        let obj = Json::obj(vec![("p50", Json::Num(f64::NAN)), ("n", Json::Num(2.0))]);
+        let reparsed = Json::parse(&obj.to_string()).expect("line must stay valid JSON");
+        assert_eq!(reparsed.get("p50"), Some(&Json::Null));
+        assert_eq!(reparsed.get("n"), Some(&Json::Num(2.0)));
     }
 }

@@ -43,7 +43,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total order: a stray NaN sorts to the end instead of panicking the
+    // comparator mid-sort
+    v.sort_by(|a, b| a.total_cmp(b));
     let idx = ((v.len() - 1) as f64 * p / 100.0).round() as usize;
     v[idx]
 }
@@ -80,7 +82,13 @@ impl StatsWindow {
         }
     }
 
+    /// Record one sample. Non-finite values are dropped: one NaN would
+    /// otherwise poison the lifetime sum/mean forever and leak a bare
+    /// `NaN` token into every summary and telemetry line derived from it.
     pub fn push(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
         if self.buf.len() == self.cap {
             self.buf.pop_front();
         }
@@ -247,6 +255,29 @@ mod tests {
         assert_eq!(w.mean(), 0.0);
         assert_eq!(w.percentile(50.0), 0.0);
         assert_eq!(w.last(), None);
+    }
+
+    #[test]
+    fn stats_window_drops_non_finite_samples() {
+        let mut w = StatsWindow::with_capacity(8);
+        w.push(1.0);
+        w.push(f64::NAN);
+        w.push(f64::INFINITY);
+        w.push(f64::NEG_INFINITY);
+        w.push(3.0);
+        assert_eq!(w.len(), 2, "non-finite samples must not be retained");
+        assert_eq!(w.count(), 2);
+        assert_eq!(w.mean(), 2.0, "sum/mean stay finite");
+        assert!(w.percentile(50.0).is_finite());
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_without_panicking() {
+        // a NaN that reaches the sort must not panic the comparator and
+        // must not be returned for mid percentiles (it sorts last)
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
     }
 
     #[test]

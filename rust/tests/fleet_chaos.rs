@@ -15,7 +15,8 @@
 mod common;
 
 use qadx::api::{
-    FaultPlan, FleetCfg, FleetResponse, Saturated, ServeCfg, ServeWeights, Session,
+    FaultPlan, FleetCfg, FleetResponse, Saturated, ServeCfg, ServeWeights, Session, TokenEvent,
+    TokenSink,
 };
 use qadx::data::tokenizer as tok;
 use qadx::runtime::BackendKind;
@@ -241,12 +242,16 @@ fn saturated_router_sheds_with_retry_after_and_recovers() {
     // One worker, one slot, queue cap 2, slow rounds (5 ms): the fourth
     // submit must shed with the typed Saturated error while the first
     // three resolve; after the drain the router accepts work again.
+    let tel =
+        std::env::temp_dir().join(format!("qadx_fchaos_sat_tel_{}.jsonl", std::process::id()));
+    std::fs::remove_file(&tel).ok(); // the appender appends; start clean
     let (session, params) = clock_session("fchaos_sat", "clock-fleet");
     let ms = session.model("clock-fleet").unwrap();
     let mut cfg = base_cfg(&params);
     cfg.workers = 1;
     cfg.max_slots = 1;
     cfg.queue_cap = 2;
+    cfg.telemetry = Some(tel.clone());
     cfg.fault = FaultPlan { step_delay_ms: 5.0, ..FaultPlan::default() };
     let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
 
@@ -275,42 +280,162 @@ fn saturated_router_sheds_with_retry_after_and_recovers() {
     assert!((fleet.stats().shed_rate() - 0.2).abs() < 1e-12, "1 shed of 5 offered");
     fleet.shutdown();
     drop(fleet);
+    // A saturated run must never leak a bare NaN/inf token into the
+    // JSONL stream (empty stats windows serialize as null): every line
+    // — reject events included — stays parseable JSON.
+    let log = std::fs::read_to_string(&tel).expect("telemetry JSONL written");
+    assert!(log.contains("\"event\":\"reject\""), "{log}");
+    assert!(log.contains("\"event\":\"fleet\""), "{log}");
+    for l in log.lines() {
+        assert!(!l.contains("NaN"), "bare NaN leaked into telemetry: {l}");
+        assert!(
+            qadx::util::json::Json::parse(l).is_ok(),
+            "unparseable telemetry line: {l}"
+        );
+    }
+    std::fs::remove_file(&tel).ok();
     common::cleanup("fchaos_sat");
 }
 
 #[test]
 fn zero_deadline_expires_queued_requests_without_hanging() {
-    // deadline 0: anything still router-queued when the router next
-    // advances degrades with a deadline error — a degraded response,
-    // not a hang. The dispatched request is the worker's to finish and
-    // completes normally.
+    // deadline 0 with an unseeded service estimator: admission bounds
+    // the router queue by live slot capacity (1 here), so the dispatched
+    // request plus one queued request admit and anything beyond sheds.
+    // The queued request then expires at its 0 ms deadline — a degraded
+    // response, not a hang; the dispatched one is the worker's to finish
+    // and completes normally.
     let (session, params) = clock_session("fchaos_ddl", "clock-fleet");
     let ms = session.model("clock-fleet").unwrap();
     let mut cfg = base_cfg(&params);
     cfg.workers = 1;
     cfg.max_slots = 1;
     cfg.deadline_ms = Some(0.0);
-    cfg.est_service_ms = 0.0; // admission estimate 0 -> everything admits
     cfg.fault = FaultPlan { step_delay_ms: 5.0, ..FaultPlan::default() };
     let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
     let first = fleet.submit(vec![1, 4]).unwrap(); // dispatched immediately
-    let q1 = fleet.submit(vec![1, 4]).unwrap(); //    router-queued
-    let q2 = fleet.submit(vec![1, 4]).unwrap(); //    router-queued
+    let queued = fleet.submit(vec![1, 4]).unwrap(); // router-queued (1 = live capacity)
+    let err = fleet.submit(vec![1, 4]).expect_err("beyond capacity while unseeded");
+    assert!(err.downcast_ref::<Saturated>().is_some(), "{err:#}");
     let mut responses = fleet.drain().unwrap();
     responses.sort_by_key(|r| r.id);
-    assert_eq!(responses.len(), 3, "drain resolves everything — no hang");
+    assert_eq!(responses.len(), 2, "drain resolves everything admitted — no hang");
     let by_id = |id: u64| responses.iter().find(|r| r.id == id).unwrap();
     assert!(by_id(first).error.is_none(), "dispatched request finishes");
     assert_eq!(by_id(first).row, expected_row(&[1, 4], 12));
-    for id in [q1, q2] {
-        let err = by_id(id).error.as_deref().unwrap_or("");
-        assert!(err.contains("deadline exceeded"), "id {id}: {err:?}");
-        assert_eq!(by_id(id).gen_tokens, 0);
-    }
-    assert_eq!(fleet.stats().expired, 2, "{}", fleet.stats().summary());
+    let e = by_id(queued).error.as_deref().unwrap_or("");
+    assert!(e.contains("deadline exceeded"), "{e:?}");
+    assert_eq!(by_id(queued).gen_tokens, 0);
+    assert_eq!(fleet.stats().expired, 1, "{}", fleet.stats().summary());
+    assert_eq!(fleet.stats().shed, 1, "{}", fleet.stats().summary());
     fleet.shutdown();
     drop(fleet);
     common::cleanup("fchaos_ddl");
+}
+
+#[test]
+fn unseeded_deadline_admission_bounds_by_live_capacity() {
+    // Regression: `est_service_ms` defaults to 0.0 and the EWMA only
+    // seeds after the first completion, so the wait-estimate admission
+    // test (0 > deadline) used to admit an unbounded backlog during
+    // warm-up. Until the estimator seeds, admission is bounded by live
+    // slot capacity: with 1 worker x 2 slots, two requests dispatch, two
+    // queue, the rest shed with the typed Saturated error — and
+    // everything admitted still resolves to exact clock rows.
+    let (session, params) = clock_session("fchaos_seed", "clock-fleet");
+    let ms = session.model("clock-fleet").unwrap();
+    let mut cfg = base_cfg(&params);
+    cfg.workers = 1;
+    cfg.max_slots = 2;
+    cfg.deadline_ms = Some(1e9); // generous: only the unseeded bound can shed
+    cfg.fault = FaultPlan { step_delay_ms: 5.0, ..FaultPlan::default() };
+    let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
+    let mut admitted = 0usize;
+    let mut shed = 0usize;
+    for _ in 0..6 {
+        match fleet.submit(vec![1, 4]) {
+            Ok(_) => admitted += 1,
+            Err(e) => {
+                let sat = e.downcast_ref::<Saturated>().expect("typed Saturated");
+                assert!(sat.retry_after_ms >= 1.0, "hint: {}", sat.retry_after_ms);
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(admitted, 4, "2 dispatched + 2 queued (live slot capacity)");
+    assert_eq!(shed, 2);
+    assert_eq!(fleet.stats().shed, 2);
+    let responses = fleet.drain().unwrap();
+    assert_eq!(responses.len(), 4);
+    let want = expected_row(&[1, 4], 12);
+    for r in &responses {
+        assert!(r.error.is_none(), "id {}: {:?}", r.id, r.error);
+        assert_eq!(r.row, want);
+    }
+    assert_eq!(fleet.stats().expired, 0, "nothing expires under a generous deadline");
+    // Seeded now: the wait-estimate path takes over and admits again.
+    fleet.submit(vec![1, 4]).expect("seeded estimator admits under a generous deadline");
+    let responses = fleet.drain().unwrap();
+    assert_eq!(responses.len(), 1);
+    assert!(responses[0].error.is_none());
+    fleet.shutdown();
+    drop(fleet);
+    common::cleanup("fchaos_seed");
+}
+
+#[test]
+fn fleet_relays_token_events_through_router_and_telemetry() {
+    // Token streaming across the worker boundary: workers emit Token
+    // events, the router relays them to the `on_token` sink and (with
+    // `stream`) to JSONL. The clock model fixes every sequence: prompt
+    // length L yields 7 - L tokens, fillers then EOS, indices from 0.
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let tel =
+        std::env::temp_dir().join(format!("qadx_fchaos_stream_tel_{}.jsonl", std::process::id()));
+    std::fs::remove_file(&tel).ok(); // the appender appends; start clean
+    let (session, params) = clock_session("fchaos_stream", "clock-fleet");
+    let ms = session.model("clock-fleet").unwrap();
+    let events: Rc<RefCell<Vec<TokenEvent>>> = Rc::new(RefCell::new(Vec::new()));
+    let sink_events = events.clone();
+    let mut cfg = base_cfg(&params);
+    cfg.workers = 1;
+    cfg.max_slots = 2;
+    cfg.stream = true;
+    cfg.telemetry = Some(tel.clone());
+    cfg.on_token = Some(TokenSink::new(move |ev| sink_events.borrow_mut().push(*ev)));
+    let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
+    let a = fleet.submit(vec![1, 4, 4, 4]).unwrap(); // 3 tokens: 5, 5, EOS
+    let b = fleet.submit(vec![1, 4]).unwrap(); //        5 tokens
+    let mut responses = fleet.drain().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 2);
+    fleet.shutdown();
+    drop(fleet);
+
+    let events = events.borrow();
+    for r in &responses {
+        let seq: Vec<&TokenEvent> = events.iter().filter(|e| e.id == r.id).collect();
+        assert_eq!(seq.len(), r.gen_tokens, "one event per generated token (id {})", r.id);
+        for (i, ev) in seq.iter().enumerate() {
+            assert_eq!(ev.index, i, "contiguous indices per request (id {})", r.id);
+            assert_eq!(ev.attempt, 0, "no retries in this run");
+            assert_eq!(Some(ev.worker), r.worker, "events name the generating worker");
+        }
+    }
+    let toks_a: Vec<i32> = events.iter().filter(|e| e.id == a).map(|e| e.token).collect();
+    assert_eq!(toks_a, vec![5, 5, tok::EOS]);
+    let toks_b: Vec<i32> = events.iter().filter(|e| e.id == b).map(|e| e.token).collect();
+    assert_eq!(toks_b, vec![5, 5, 5, 5, tok::EOS]);
+
+    let log = std::fs::read_to_string(&tel).expect("telemetry JSONL written");
+    let token_lines: Vec<&str> =
+        log.lines().filter(|l| l.contains("\"event\":\"token\"")).collect();
+    assert_eq!(token_lines.len(), events.len(), "{log}");
+    assert!(token_lines.iter().all(|l| l.contains("\"worker\"")), "{log}");
+    std::fs::remove_file(&tel).ok();
+    common::cleanup("fchaos_stream");
 }
 
 #[test]

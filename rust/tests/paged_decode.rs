@@ -1,0 +1,574 @@
+//! Paged decode-state bit-identity and accounting.
+//!
+//! The paged layout (fixed-size K/V pages from a refcounted pool,
+//! optional shared-prefix cache with copy-on-write) must be a pure
+//! storage change: every prefill/step logits row is bit-identical to the
+//! dense per-slot layout across block stacks, precisions, page sizes,
+//! prompt lengths straddling page boundaries, and pool thread counts —
+//! and the allocator must account every page (close releases, eviction
+//! frees, budgets bound memory by live tokens, a budget miss degrades
+//! one request without wedging the session).
+//!
+//! Entirely hermetic: reference backend over synthetic manifests.
+
+mod common;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use qadx::api::{ServeCfg, ServeWeights, TokenEvent, TokenSink};
+use qadx::coordinator::init_params;
+use qadx::data::tokenizer as tok;
+use qadx::runtime::{Buffer, DecodeOpts, DecodeSession, Engine, ModelRuntime, SynthSpec};
+use qadx::util::pool;
+
+fn spec_with_blocks(name: &str, blocks: &[&str]) -> SynthSpec {
+    let mut spec = common::small_spec(name);
+    spec.blocks = blocks.iter().map(|s| s.to_string()).collect();
+    spec.n_experts = if blocks.contains(&"moe") { 3 } else { 0 };
+    spec
+}
+
+fn open_session(
+    engine: &Engine,
+    rt: &ModelRuntime,
+    p_buf: &Buffer,
+    fwd_key: &str,
+    rows: usize,
+    opts: &DecodeOpts,
+) -> Box<dyn DecodeSession> {
+    engine
+        .open_decode_opts(&rt.model, fwd_key, p_buf, rows, opts)
+        .unwrap()
+        .expect("reference backend has stateful decode")
+}
+
+/// Deterministic non-EOS token feed (independent of logits, so the two
+/// sessions always see identical inputs).
+fn feed_token(row: usize, i: usize) -> i32 {
+    3 + ((row * 7 + i * 5) % 11) as i32
+}
+
+/// Drive one paged and one dense session through identical prefill+step
+/// sequences and assert every logits row is bit-identical; then close
+/// all rows and assert the pool drops to zero live pages.
+fn assert_paged_matches_dense(
+    tag: &str,
+    blocks: &[&str],
+    fwd_key: &str,
+    page_size: usize,
+    prompts: &[Vec<i32>],
+    steps: usize,
+) {
+    let engine = common::reference_engine(tag, &[spec_with_blocks("paged-sim", blocks)]);
+    let rt = ModelRuntime::new(&engine, "paged-sim").unwrap();
+    let params = init_params(&rt.model, 53);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let rows = prompts.len();
+    let mut dense =
+        open_session(&engine, &rt, &p_buf, fwd_key, rows, &DecodeOpts::default());
+    let opts = DecodeOpts { page_size, prefix_cache: 0, max_pages: 0 };
+    let mut paged = open_session(&engine, &rt, &p_buf, fwd_key, rows, &opts);
+    assert!(dense.paged_stats().is_none(), "dense sessions report no paged stats");
+
+    let (mut ld, mut lp) = (Vec::new(), Vec::new());
+    for (r, prompt) in prompts.iter().enumerate() {
+        dense.prefill(r, prompt, &mut ld).unwrap();
+        paged.prefill(r, prompt, &mut lp).unwrap();
+        assert_eq!(
+            ld, lp,
+            "prefill diverged (row {r}, psz {page_size}, {fwd_key}, {blocks:?})"
+        );
+        for i in 0..steps.min(rt.model.seq_len - prompt.len()) {
+            let t = feed_token(r, i);
+            dense.step(r, t, &mut ld).unwrap();
+            paged.step(r, t, &mut lp).unwrap();
+            assert_eq!(
+                ld, lp,
+                "step {i} diverged (row {r}, psz {page_size}, {fwd_key}, {blocks:?})"
+            );
+        }
+    }
+    for r in 0..rows {
+        paged.close(r).unwrap();
+        dense.close(r).unwrap();
+    }
+    let st = paged.paged_stats().expect("paged session reports stats");
+    assert_eq!(st.page_size, page_size);
+    assert_eq!(st.live_pages, 0, "closed rows must release every page");
+    common::cleanup(tag);
+}
+
+/// Prompt lengths straddling the 16-position page boundary (and, for
+/// page size 1, every boundary): 1, psz-1, psz, psz+1.
+fn straddling_prompts() -> Vec<Vec<i32>> {
+    [1usize, 15, 16, 17]
+        .iter()
+        .map(|&n| (0..n).map(|j| 2 + (j % 9) as i32).collect())
+        .collect()
+}
+
+#[test]
+fn paged_matches_dense_attn_only() {
+    let prompts = straddling_prompts();
+    for fwd_key in ["fwd_bf16", "fwd_nvfp4"] {
+        for psz in [1usize, 16, 64] {
+            assert_paged_matches_dense("pgd_attn", &["attn", "attn"], fwd_key, psz, &prompts, 8);
+        }
+    }
+}
+
+#[test]
+fn paged_matches_dense_ssm_only() {
+    // SSM carries never touch the page pool, but the paged session must
+    // still be bit-identical (and report zero live pages throughout).
+    let prompts = straddling_prompts();
+    for fwd_key in ["fwd_bf16", "fwd_nvfp4"] {
+        for psz in [1usize, 16, 64] {
+            assert_paged_matches_dense("pgd_ssm", &["ssm", "ssm"], fwd_key, psz, &prompts, 6);
+        }
+    }
+}
+
+#[test]
+fn paged_matches_dense_hybrid() {
+    let prompts = straddling_prompts();
+    for fwd_key in ["fwd_bf16", "fwd_nvfp4"] {
+        for psz in [1usize, 16, 64] {
+            assert_paged_matches_dense(
+                "pgd_hyb",
+                &["attn", "ssm", "moe"],
+                fwd_key,
+                psz,
+                &prompts,
+                6,
+            );
+        }
+    }
+}
+
+#[test]
+fn paged_matches_dense_across_thread_counts() {
+    // The step path is single-row, but prefill runs the full parallel
+    // forward: the paged harvest must be thread-count invariant too.
+    let prompts = straddling_prompts();
+    for threads in [1usize, 4] {
+        pool::with_threads(threads, || {
+            let tag = format!("pgd_thr{threads}");
+            assert_paged_matches_dense(
+                &tag,
+                &["attn", "ssm", "moe"],
+                "fwd_nvfp4",
+                16,
+                &prompts,
+                6,
+            );
+        });
+    }
+}
+
+#[test]
+fn prefix_cache_hit_prefill_is_bit_identical_to_cold() {
+    let engine = common::reference_engine(
+        "pgd_prefix",
+        &[spec_with_blocks("paged-sim", &["attn", "ssm", "moe"])],
+    );
+    let rt = ModelRuntime::new(&engine, "paged-sim").unwrap();
+    let params = init_params(&rt.model, 59);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let mut dense =
+        open_session(&engine, &rt, &p_buf, "fwd_nvfp4", 3, &DecodeOpts::default());
+    let opts = DecodeOpts { page_size: 16, prefix_cache: 4, max_pages: 0 };
+    let mut cached = open_session(&engine, &rt, &p_buf, "fwd_nvfp4", 3, &opts);
+
+    // 20 tokens: the shared prefix itself straddles the page boundary.
+    let prompt_a: Vec<i32> = (0..20).map(|j| 2 + (j % 9) as i32).collect();
+    let mut ext = prompt_a.clone();
+    ext.extend_from_slice(&[7, 9]);
+
+    let (mut ld, mut lc) = (Vec::new(), Vec::new());
+    dense.prefill(0, &prompt_a, &mut ld).unwrap();
+    cached.prefill(0, &prompt_a, &mut lc).unwrap();
+    assert_eq!(ld, lc, "cold prefill must match dense");
+    let st = cached.paged_stats().unwrap();
+    assert_eq!((st.prefix_hits, st.prefix_misses), (0, 1));
+    assert_eq!(st.prefix_entries, 1);
+
+    // Exact hit: answered from the stored logits, still bit-identical.
+    dense.prefill(1, &prompt_a, &mut ld).unwrap();
+    cached.prefill(1, &prompt_a, &mut lc).unwrap();
+    assert_eq!(ld, lc, "exact prefix hit must match cold prefill");
+    let st = cached.paged_stats().unwrap();
+    assert_eq!((st.prefix_hits, st.prefix_misses), (1, 1));
+
+    // Partial hit: fork the cached pages, replay only the 2-token suffix.
+    dense.prefill(2, &ext, &mut ld).unwrap();
+    cached.prefill(2, &ext, &mut lc).unwrap();
+    assert_eq!(ld, lc, "partial prefix hit must match cold prefill");
+    let st = cached.paged_stats().unwrap();
+    assert_eq!((st.prefix_hits, st.prefix_misses), (2, 1));
+    assert_eq!(st.prefix_entries, 2, "the extended prompt is cached too");
+
+    // Decode continues bit-identically on every row (COW protects the
+    // cache entries when the shared partial page is appended to).
+    for r in 0..3 {
+        for i in 0..4 {
+            let t = feed_token(r, i);
+            dense.step(r, t, &mut ld).unwrap();
+            cached.step(r, t, &mut lc).unwrap();
+            assert_eq!(ld, lc, "post-hit step {i} diverged on row {r}");
+        }
+    }
+    assert!(
+        cached.paged_stats().unwrap().cow_copies >= 1,
+        "appending into a cache-shared page must copy-on-write"
+    );
+    common::cleanup("pgd_prefix");
+}
+
+#[test]
+fn cow_divergence_one_token_after_shared_prefix() {
+    let engine =
+        common::reference_engine("pgd_cow", &[spec_with_blocks("paged-sim", &["attn", "attn"])]);
+    let rt = ModelRuntime::new(&engine, "paged-sim").unwrap();
+    let params = init_params(&rt.model, 61);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let mut dense =
+        open_session(&engine, &rt, &p_buf, "fwd_bf16", 3, &DecodeOpts::default());
+    let opts = DecodeOpts { page_size: 8, prefix_cache: 2, max_pages: 0 };
+    let mut cached = open_session(&engine, &rt, &p_buf, "fwd_bf16", 3, &opts);
+
+    // 12 tokens -> pages [0..8) and [8..12): the second page is partial,
+    // so the first post-fork append lands in shared storage.
+    let prompt: Vec<i32> = (0..12).map(|j| 1 + (j % 7) as i32).collect();
+    let (mut ld, mut lc) = (Vec::new(), Vec::new());
+    dense.prefill(0, &prompt, &mut ld).unwrap();
+    cached.prefill(0, &prompt, &mut lc).unwrap();
+    assert_eq!(ld, lc);
+    dense.prefill(1, &prompt, &mut ld).unwrap();
+    cached.prefill(1, &prompt, &mut lc).unwrap();
+    assert_eq!(ld, lc);
+
+    // Diverge exactly one token after the shared prefix: row 0 takes 4,
+    // row 1 takes 9, then both continue with identical suffixes.
+    for (row, first) in [(0usize, 4i32), (1, 9)] {
+        dense.step(row, first, &mut ld).unwrap();
+        cached.step(row, first, &mut lc).unwrap();
+        assert_eq!(ld, lc, "divergence token diverged on row {row}");
+        for t in [5i32, 6, 7] {
+            dense.step(row, t, &mut ld).unwrap();
+            cached.step(row, t, &mut lc).unwrap();
+            assert_eq!(ld, lc, "post-divergence step diverged on row {row}");
+        }
+    }
+    let st = cached.paged_stats().unwrap();
+    assert!(st.cow_copies >= 2, "both rows shared the partial page: {st:?}");
+
+    // The donor cache entry must be untouched by either row's writes: a
+    // third request replaying the prompt still matches a cold prefill.
+    dense.prefill(2, &prompt, &mut ld).unwrap();
+    cached.prefill(2, &prompt, &mut lc).unwrap();
+    assert_eq!(ld, lc, "COW must leave the cached prefix pages intact");
+    common::cleanup("pgd_cow");
+}
+
+#[test]
+fn prefix_eviction_returns_pages_and_reuses_freed_slabs() {
+    // 2 attention blocks x (K, V) = 4 sequences per row; 6-token prompts
+    // at page size 4 take 2 pages per sequence -> 8 pages per prefill.
+    let engine =
+        common::reference_engine("pgd_evict", &[spec_with_blocks("paged-sim", &["attn", "attn"])]);
+    let rt = ModelRuntime::new(&engine, "paged-sim").unwrap();
+    let params = init_params(&rt.model, 67);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let opts = DecodeOpts { page_size: 4, prefix_cache: 2, max_pages: 0 };
+    let mut session = open_session(&engine, &rt, &p_buf, "fwd_bf16", 1, &opts);
+
+    let mut logits = Vec::new();
+    for k in 0..3i32 {
+        let prompt: Vec<i32> = (0..6).map(|j| 1 + k + (j % 3)).collect();
+        session.prefill(0, &prompt, &mut logits).unwrap();
+        session.close(0).unwrap();
+    }
+    // Three distinct prompts through a 2-entry cache: the oldest entry
+    // was evicted, its 8 pages refcounted down to zero and freed.
+    let st = session.paged_stats().unwrap();
+    assert_eq!(st.prefix_entries, 2, "cache capacity holds: {st:?}");
+    assert_eq!(st.live_pages, 16, "2 cached prefixes x 8 pages: {st:?}");
+    assert_eq!(st.free_pages, 8, "the evicted entry's pages are free: {st:?}");
+    let slab = st.live_pages + st.free_pages;
+
+    // A fourth prefill must reuse the freed pages instead of growing the
+    // slab (and its insert evicts the next LRU entry).
+    let prompt: Vec<i32> = (0..6).map(|j| 9 + (j % 3)).collect();
+    session.prefill(0, &prompt, &mut logits).unwrap();
+    session.close(0).unwrap();
+    let st = session.paged_stats().unwrap();
+    assert_eq!(st.prefix_entries, 2);
+    assert_eq!(
+        st.live_pages + st.free_pages,
+        slab,
+        "freed pages must be recycled, not leaked alongside fresh allocations: {st:?}"
+    );
+    common::cleanup("pgd_evict");
+}
+
+#[test]
+fn page_budget_bounds_state_by_live_tokens_and_degrades_cleanly() {
+    // Dense state for 8 rows would pin 8 rows x 4 sequences x 8 pages =
+    // 256 page-equivalents up front. A 40-page budget still serves all 8
+    // short requests because paged memory tracks live tokens, and a
+    // request that would blow the budget fails cleanly without wedging
+    // the session.
+    let engine =
+        common::reference_engine("pgd_budget", &[spec_with_blocks("paged-sim", &["attn", "attn"])]);
+    let rt = ModelRuntime::new(&engine, "paged-sim").unwrap();
+    let params = init_params(&rt.model, 71);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let rows = 8usize;
+    let mut dense =
+        open_session(&engine, &rt, &p_buf, "fwd_bf16", rows, &DecodeOpts::default());
+    let opts = DecodeOpts { page_size: 4, prefix_cache: 0, max_pages: 40 };
+    let mut paged = open_session(&engine, &rt, &p_buf, "fwd_bf16", rows, &opts);
+
+    let (mut ld, mut lp) = (Vec::new(), Vec::new());
+    for r in 0..rows {
+        let prompt = vec![1i32, 2 + r as i32];
+        dense.prefill(r, &prompt, &mut ld).unwrap();
+        paged.prefill(r, &prompt, &mut lp).unwrap();
+        assert_eq!(ld, lp, "budget-bound prefill diverged on row {r}");
+        for i in 0..2 {
+            let t = feed_token(r, i);
+            dense.step(r, t, &mut ld).unwrap();
+            paged.step(r, t, &mut lp).unwrap();
+            assert_eq!(ld, lp, "budget-bound step diverged on row {r}");
+        }
+    }
+    let st = paged.paged_stats().unwrap();
+    assert_eq!(st.live_pages, 32, "4 live tokens/row -> 1 page/sequence: {st:?}");
+
+    // A full-length prompt needs 36 fresh pages; only 12 are left.
+    let long: Vec<i32> = (0..rt.model.seq_len).map(|j| 1 + (j % 5) as i32).collect();
+    let err = paged.prefill(0, &long, &mut lp).unwrap_err();
+    assert!(
+        err.to_string().contains("page budget exhausted"),
+        "budget miss must be a clean typed failure: {err:#}"
+    );
+
+    // The session stays usable: the failed row re-prefills a short
+    // prompt, still bit-identical to dense.
+    dense.prefill(0, &[9, 9], &mut ld).unwrap();
+    paged.prefill(0, &[9, 9], &mut lp).unwrap();
+    assert_eq!(ld, lp, "session must survive a budget miss");
+    common::cleanup("pgd_budget");
+}
+
+/// Build a continuous server over the given spec/params with `cfg_fn`
+/// applied, run `prompts` through it, and return (sorted rows, handle).
+fn serve_rows(
+    tag: &str,
+    name: &str,
+    params: &[f32],
+    cfg_fn: impl FnOnce(&mut ServeCfg),
+    prompts: &[Vec<i32>],
+) -> (Vec<(u64, Vec<i32>)>, qadx::api::ServeStats) {
+    let session = qadx::api::Session::builder()
+        .artifacts_dir(&common::write_artifacts(tag, &[spec_with_blocks(name, &["attn", "attn"])]))
+        .runs_dir(common::tmp_runs(tag))
+        .backend(qadx::runtime::BackendKind::Reference)
+        .build()
+        .unwrap();
+    let ms = session.model(name).unwrap();
+    let mut cfg = ServeCfg::default();
+    cfg.sample = qadx::eval::SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 6, seed: 0 };
+    cfg.weights = ServeWeights::Params(params.to_vec());
+    cfg_fn(&mut cfg);
+    let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+    assert!(server.continuous());
+    for p in prompts {
+        server.submit(p.clone()).unwrap();
+    }
+    let mut responses = server.drain().unwrap();
+    responses.sort_by_key(|r| r.id);
+    for r in &responses {
+        assert!(r.error.is_none(), "id {}: {:?}", r.id, r.error);
+    }
+    let rows = responses.into_iter().map(|r| (r.id, r.row)).collect();
+    let stats = server.stats().clone();
+    drop(server);
+    common::cleanup(tag);
+    (rows, stats)
+}
+
+#[test]
+fn serve_paged_prefix_rows_are_bit_identical_to_dense_serving() {
+    // End-to-end: the same greedy request mix (with repeated and
+    // prefix-extended prompts) through a dense server and a paged +
+    // prefix-cached server must produce byte-identical rows.
+    let spec = spec_with_blocks("paged-srv", &["attn", "attn"]);
+    let params = init_params(&spec.entry(), 73);
+    let base: Vec<i32> = vec![1, 4, 4, 5, 5, 4];
+    let mut ext = base.clone();
+    ext.extend_from_slice(&[6, 7]);
+    let prompts =
+        vec![base.clone(), base.clone(), ext, vec![2, 9, 9], base.clone()];
+
+    let (dense_rows, dense_stats) =
+        serve_rows("pgd_srv_dense", "paged-srv", &params, |_| {}, &prompts);
+    assert_eq!(dense_stats.page_size, 0, "dense serving reports no paged gauges");
+
+    let (paged_rows, paged_stats) = serve_rows(
+        "pgd_srv_paged",
+        "paged-srv",
+        &params,
+        |cfg| {
+            cfg.page_size = 8;
+            cfg.prefix_cache = 4;
+        },
+        &prompts,
+    );
+    assert_eq!(dense_rows, paged_rows, "paged+prefix serving changed a row");
+    assert_eq!(paged_stats.page_size, 8);
+    assert!(
+        paged_stats.prefix_hits >= 2,
+        "repeated/extended prompts must hit the cache: hits {} misses {}",
+        paged_stats.prefix_hits,
+        paged_stats.prefix_misses
+    );
+    let s = paged_stats.summary();
+    assert!(s.contains("pages"), "summary must surface paged gauges: {s}");
+    assert!(s.contains("prefix"), "{s}");
+}
+
+#[test]
+fn serve_drain_releases_every_page_without_a_prefix_cache() {
+    // Finished slots close their rows: with no cache holding prefixes,
+    // a drained server must be back to zero live pages (no leak).
+    let spec = spec_with_blocks("paged-srv", &["attn", "attn"]);
+    let params = init_params(&spec.entry(), 79);
+    let prompts = vec![vec![1, 4, 4, 5], vec![2, 9, 9], vec![1, 4]];
+    let (_rows, stats) = serve_rows(
+        "pgd_srv_drain",
+        "paged-srv",
+        &params,
+        |cfg| cfg.page_size = 8,
+        &prompts,
+    );
+    assert_eq!(stats.page_size, 8);
+    assert_eq!(
+        stats.live_pages, 0,
+        "drained server must hold no pages: {}",
+        stats.summary()
+    );
+}
+
+#[test]
+fn serve_streams_tokens_in_order_with_contiguous_indices() {
+    // Clock model: prompt length L generates exactly 7 - L tokens, so
+    // the streamed (id, index, token) sequences are known in advance and
+    // must reconstruct each response row's generated suffix.
+    let (spec, params) = common::clock_spec_and_params("clock-stream");
+    let session = qadx::api::Session::builder()
+        .artifacts_dir(&common::write_artifacts("pgd_stream", &[spec]))
+        .runs_dir(common::tmp_runs("pgd_stream"))
+        .backend(qadx::runtime::BackendKind::Reference)
+        .build()
+        .unwrap();
+    let ms = session.model("clock-stream").unwrap();
+    let events: Rc<RefCell<Vec<TokenEvent>>> = Rc::new(RefCell::new(Vec::new()));
+    let sink_events = events.clone();
+    let tel = common::tmp_runs("pgd_stream").join("stream.jsonl");
+    let mut cfg = ServeCfg::default();
+    cfg.sample = qadx::eval::SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 8, seed: 0 };
+    cfg.weights = ServeWeights::Params(params);
+    cfg.stream = true;
+    cfg.telemetry = Some(tel.clone());
+    cfg.on_token = Some(TokenSink::new(move |ev| sink_events.borrow_mut().push(*ev)));
+    let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+
+    let a = server.submit(vec![1, 4, 4, 4]).unwrap(); // 3 tokens: 5, 5, EOS
+    let b = server.submit(vec![1, 4]).unwrap(); //        5 tokens
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), 2);
+    drop(server);
+
+    let events = events.borrow();
+    for r in &responses {
+        let seq: Vec<&TokenEvent> = events.iter().filter(|e| e.id == r.id).collect();
+        assert_eq!(seq.len(), r.gen_tokens, "one event per generated token (id {})", r.id);
+        let plen = r.row.iter().take_while(|&&t| t != tok::PAD).count() - r.gen_tokens;
+        for (i, ev) in seq.iter().enumerate() {
+            assert_eq!(ev.index, i, "indices count from 0 in emission order");
+            assert_eq!(ev.token, r.row[plen + i], "streamed token != row token (id {})", r.id);
+            assert_eq!((ev.worker, ev.attempt), (0, 0));
+        }
+    }
+    let by_a: Vec<i32> = events.iter().filter(|e| e.id == a).map(|e| e.token).collect();
+    assert_eq!(by_a, vec![5, 5, tok::EOS]);
+    let by_b: Vec<i32> = events.iter().filter(|e| e.id == b).map(|e| e.token).collect();
+    assert_eq!(by_b, vec![5, 5, 5, 5, tok::EOS]);
+
+    // cfg.stream also lands one JSONL "token" event per generated token.
+    let log = std::fs::read_to_string(&tel).unwrap();
+    let token_lines = log.lines().filter(|l| l.contains("\"event\":\"token\"")).count();
+    assert_eq!(token_lines, events.len(), "{log}");
+    common::cleanup("pgd_stream");
+}
+
+#[test]
+fn serve_seq_len_boundary_prompts_resolve_without_panicking() {
+    // Clock model seq_len = 12. Length 11 (seq_len - 1) is the last
+    // admissible prompt: exactly one generated token (EOS — position 11
+    // is past the clock's EOS point). Lengths 12 and 13 leave no room to
+    // generate and must resolve as degraded responses, never panic or
+    // silently truncate-and-generate.
+    let (spec, params) = common::clock_spec_and_params("clock-edge");
+    let session = qadx::api::Session::builder()
+        .artifacts_dir(&common::write_artifacts("pgd_edge", &[spec]))
+        .runs_dir(common::tmp_runs("pgd_edge"))
+        .backend(qadx::runtime::BackendKind::Reference)
+        .build()
+        .unwrap();
+    let ms = session.model("clock-edge").unwrap();
+    let mut cfg = ServeCfg::default();
+    cfg.sample = qadx::eval::SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 8, seed: 0 };
+    cfg.weights = ServeWeights::Params(params);
+    let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+
+    assert!(server.submit(vec![]).is_err(), "empty prompts are a caller error");
+
+    let fit = server.submit(vec![1; 11]).unwrap();
+    let exact = server.submit(vec![2; 12]).unwrap();
+    let over = server.submit(vec![3; 13]).unwrap();
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), 3, "every submission resolves");
+    let by_id = |id: u64| responses.iter().find(|r| r.id == id).unwrap();
+
+    let r = by_id(fit);
+    assert!(r.error.is_none(), "{:?}", r.error);
+    assert_eq!(r.gen_tokens, 1, "one position left -> exactly one token");
+    assert_eq!(r.row[11], tok::EOS);
+
+    for (id, plen) in [(exact, 12usize), (over, 13)] {
+        let r = by_id(id);
+        let err = r.error.as_deref().unwrap_or("");
+        assert!(err.contains("leaves no room to generate"), "id {id}: {err:?}");
+        assert!(err.contains(&plen.to_string()), "error names the length: {err:?}");
+        assert_eq!(r.gen_tokens, 0, "degraded requests generate nothing");
+        assert_eq!(r.row.len(), 12, "row stays seq_len-shaped");
+    }
+    common::cleanup("pgd_edge");
+}
+
+#[test]
+fn decode_opts_reject_prefix_cache_without_pages() {
+    let engine =
+        common::reference_engine("pgd_opts", &[spec_with_blocks("paged-sim", &["attn"])]);
+    let rt = ModelRuntime::new(&engine, "paged-sim").unwrap();
+    let params = init_params(&rt.model, 83);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let opts = DecodeOpts { page_size: 0, prefix_cache: 2, max_pages: 0 };
+    let err = engine.open_decode_opts(&rt.model, "fwd_bf16", &p_buf, 1, &opts).unwrap_err();
+    assert!(err.to_string().contains("require paged decode state"), "{err:#}");
+    common::cleanup("pgd_opts");
+}

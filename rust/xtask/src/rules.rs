@@ -99,6 +99,7 @@ impl Config {
                 "rust/src/eval/",
                 "rust/src/runtime/refmodel.rs",
                 "rust/src/runtime/reference.rs",
+                "rust/src/runtime/paged.rs",
                 "rust/src/runtime/engine.rs",
                 "rust/src/runtime/manifest.rs",
                 "rust/src/api/serve.rs",
@@ -116,6 +117,7 @@ impl Config {
                 "rust/src/util/gemm.rs",
                 "rust/src/util/pool.rs",
                 "rust/src/runtime/refmodel.rs",
+                "rust/src/runtime/paged.rs",
             ]
             .iter()
             .map(|s| s.to_string())
@@ -148,6 +150,13 @@ impl Config {
                     false,
                 ),
                 hot("rust/src/runtime/reference.rs", &["prefill", "step"], false),
+                // paged decode-state allocator: per-token hot path; slice
+                // indexing is bounds-proven by construction (no index_check)
+                hot(
+                    "rust/src/runtime/paged.rs",
+                    &["alloc", "retain", "release", "push", "row", "fork", "clear"],
+                    false,
+                ),
             ],
         }
     }
