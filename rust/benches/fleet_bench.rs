@@ -1,6 +1,8 @@
 //! Fleet-serving benchmarks: closed-loop throughput of the multi-worker
 //! router at 1/2/4 workers, the cost of a mid-run worker kill (retried
-//! work rides on the survivors), and admission-control behavior under a
+//! work rides on the survivors), mixed-class overload with the priority
+//! lanes off vs on, token streaming through bounded channels under a
+//! lossy slow-consumer policy, and admission-control behavior under a
 //! saturating burst. Entirely hermetic — a synthetic manifest on the
 //! reference backend, no artifacts, no XLA; the per-token compute is the
 //! same stateful prefill/step path BENCH_refgemm's ref_decode_step rows
@@ -12,7 +14,7 @@
 //! checks. A CLI twin of the closed/open-loop scenarios:
 //! `qadx serve-bench --fleet --workers N --arrival-rate L`.
 
-use qadx::api::{FaultPlan, FleetCfg, Saturated, Session};
+use qadx::api::{FaultPlan, FleetCfg, RequestClass, Saturated, Session, SlowConsumer, TokenSink};
 use qadx::eval::SampleCfg;
 use qadx::runtime::{synthetic_manifest_json, BackendKind, SynthSpec};
 use qadx::util::bench::BenchSuite;
@@ -89,6 +91,68 @@ fn main() {
         fleet.shutdown();
         std::hint::black_box(responses);
     });
+
+    // ---- overload: priority lanes off vs on --------------------------
+    // The whole 32-request mixed burst (alternating interactive/batch)
+    // overcommits a single worker many times over; total wall time is the
+    // same either way (lanes reorder, they don't add work), so the row
+    // delta is pure lane-arbiter overhead. The printed per-class TTFT
+    // p99 is the point: the bound-4 lanes keep the interactive tail
+    // bounded while batch absorbs the queueing delay.
+    for (label, bound) in [("lanes_off", 0usize), ("lanes_on", 4usize)] {
+        let mut cfg = FleetCfg::default();
+        cfg.workers = 1;
+        cfg.sample = sample;
+        cfg.starvation_bound = bound;
+        let mut fleet = ms.fleet("fwd_nvfp4", &cfg).expect("overload fleet");
+        suite.run_units(&format!("fleet_w1_overload_{label}_req32_toks"), 0, 3, units, || {
+            for (i, p) in prompts.iter().enumerate() {
+                let class = if i % 2 == 0 {
+                    RequestClass::Interactive
+                } else {
+                    RequestClass::Batch
+                };
+                fleet.submit_class(p.clone(), class).expect("overload submit");
+            }
+            let responses = fleet.drain().expect("overload drain");
+            assert_eq!(responses.len(), reqs);
+            std::hint::black_box(responses);
+        });
+        let st = fleet.stats();
+        println!(
+            "  {label}: int ttft p99 {:.1}ms | bat ttft p99 {:.1}ms | bypass {}",
+            st.per_class.interactive.ttft_ms.percentile(99.0),
+            st.per_class.batch.ttft_ms.percentile(99.0),
+            st.lane_bypasses
+        );
+        fleet.shutdown();
+    }
+
+    // ---- streaming through bounded channels under a lossy policy -----
+    // Every token rides a capacity-8 DropOldest channel into a sink; the
+    // delta vs fleet_w1_closed is the relay cost, and a consumer that
+    // cannot keep up costs counted drops, never worker throughput.
+    {
+        let mut cfg = FleetCfg::default();
+        cfg.workers = 1;
+        cfg.sample = sample;
+        cfg.stream_buf = 8;
+        cfg.slow_consumer = SlowConsumer::DropOldest;
+        cfg.on_token = Some(TokenSink::new(|ev| {
+            std::hint::black_box(ev.token);
+        }));
+        let mut fleet = ms.fleet("fwd_nvfp4", &cfg).expect("stream fleet");
+        suite.run_units("fleet_w1_stream_drop_req32_toks", 0, 3, units, || {
+            for p in &prompts {
+                fleet.submit(p.clone()).expect("stream submit");
+            }
+            let responses = fleet.drain().expect("stream drain");
+            assert_eq!(responses.len(), reqs);
+            std::hint::black_box(responses);
+        });
+        println!("  {}", fleet.stats().summary());
+        fleet.shutdown();
+    }
 
     // ---- saturating burst against a bounded queue --------------------
     // 64 requests offered at once to 2 workers behind queue_cap 8:

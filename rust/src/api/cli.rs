@@ -135,6 +135,19 @@ pub const COMMANDS: &[CommandDef] = &[
             flag("deadline-ms", "F", "(off)", "fleet per-request deadline (admission + expiry)"),
             flag("page-size", "N", "32", "decode-state page size in positions (0 = dense rows)"),
             flag("prefix-cache", "N", "0", "shared-prefix cache entries (0 = off; needs pages)"),
+            flag("class-mix", "F", "1.0", "fraction of interactive requests (rest batch)"),
+            flag(
+                "consumer-delay-ms",
+                "F",
+                "0",
+                "simulated per-token consumer stall (exercises slow-consumer policy)",
+            ),
+            flag(
+                "slow-consumer",
+                "P",
+                "block",
+                "stalled-stream policy: block|drop-oldest|disconnect",
+            ),
         ],
     },
     CommandDef {
@@ -440,6 +453,15 @@ pub struct ServeBenchArgs {
     pub page_size: usize,
     /// Shared-prefix cache entries (`--prefix-cache`, 0 = off).
     pub prefix_cache: usize,
+    /// Fraction of requests submitted as interactive (`--class-mix`,
+    /// 1.0 = all interactive, the legacy single-class behavior).
+    pub class_mix: f64,
+    /// Simulated per-token consumer stall in ms (`--consumer-delay-ms`,
+    /// 0 = consume instantly). Exercises the slow-consumer policy.
+    pub consumer_delay_ms: f64,
+    /// Policy when a stream consumer falls behind
+    /// (`--slow-consumer block|drop-oldest|disconnect`).
+    pub slow_consumer: crate::util::stream::SlowConsumer,
 }
 
 impl ServeBenchArgs {
@@ -454,6 +476,20 @@ impl ServeBenchArgs {
         if workers == 0 {
             bail!("--workers must be >= 1");
         }
+        let class_mix = parse_flag(args, "class-mix", 1.0f64)?;
+        if !(0.0..=1.0).contains(&class_mix) {
+            bail!("--class-mix must be in [0, 1], got {class_mix}");
+        }
+        let consumer_delay_ms = parse_flag(args, "consumer-delay-ms", 0.0f64)?;
+        if !consumer_delay_ms.is_finite() || consumer_delay_ms < 0.0 {
+            bail!("--consumer-delay-ms must be >= 0, got {consumer_delay_ms}");
+        }
+        let slow_consumer = match args.get_or("slow-consumer", "block").as_str() {
+            "block" => crate::util::stream::SlowConsumer::default(),
+            "drop-oldest" => crate::util::stream::SlowConsumer::DropOldest,
+            "disconnect" => crate::util::stream::SlowConsumer::Disconnect,
+            other => bail!("--slow-consumer must be block|drop-oldest|disconnect, got {other:?}"),
+        };
         Ok(ServeBenchArgs {
             session: SessionArgs::parse(args)?,
             model: args.get_or("model", "ace-sim"),
@@ -477,6 +513,9 @@ impl ServeBenchArgs {
             },
             page_size: parse_flag(args, "page-size", 32usize)?,
             prefix_cache: parse_flag(args, "prefix-cache", 0usize)?,
+            class_mix,
+            consumer_delay_ms,
+            slow_consumer,
         })
     }
 }
@@ -625,6 +664,34 @@ mod tests {
         let cmd = find_command("serve-bench").unwrap();
         assert!(check_flags(cmd, &parse("serve-bench --fleet --workers 4")).is_ok());
         assert!(render_usage(cmd).contains("--fleet"), "usage must list --fleet");
+    }
+
+    #[test]
+    fn serve_bench_overload_flags() {
+        use crate::util::stream::SlowConsumer;
+        let s = ServeBenchArgs::parse(&parse("serve-bench")).unwrap();
+        assert_eq!(s.class_mix, 1.0, "all-interactive is the legacy default");
+        assert_eq!(s.consumer_delay_ms, 0.0);
+        assert!(matches!(s.slow_consumer, SlowConsumer::Block { .. }));
+        let s = ServeBenchArgs::parse(&parse(
+            "serve-bench --class-mix 0.25 --consumer-delay-ms 5 --slow-consumer drop-oldest",
+        ))
+        .unwrap();
+        assert_eq!(s.class_mix, 0.25);
+        assert_eq!(s.consumer_delay_ms, 5.0);
+        assert!(matches!(s.slow_consumer, SlowConsumer::DropOldest));
+        let s = ServeBenchArgs::parse(&parse("serve-bench --slow-consumer disconnect")).unwrap();
+        assert!(matches!(s.slow_consumer, SlowConsumer::Disconnect));
+        // out-of-range and typo'd values are errors, not silent defaults
+        assert!(ServeBenchArgs::parse(&parse("serve-bench --class-mix 1.5")).is_err());
+        assert!(ServeBenchArgs::parse(&parse("serve-bench --class-mix half")).is_err());
+        assert!(ServeBenchArgs::parse(&parse("serve-bench --consumer-delay-ms -3")).is_err());
+        assert!(ServeBenchArgs::parse(&parse("serve-bench --slow-consumer fastest")).is_err());
+        let cmd = find_command("serve-bench").unwrap();
+        assert!(check_flags(cmd, &parse("serve-bench --class-mix 0.5 --slow-consumer block"))
+            .is_ok());
+        assert!(render_usage(cmd).contains("--class-mix"), "usage must list --class-mix");
+        assert!(render_usage(cmd).contains("--slow-consumer"), "usage must list --slow-consumer");
     }
 
     #[test]

@@ -36,6 +36,21 @@
 //! replays exactly. Wall time is only *measured* (latency/TTFT stats)
 //! and only consulted for deadline expiry, which is itself exercised
 //! deterministically in tests via a zero deadline.
+//!
+//! **Overload behavior.** Requests carry a
+//! [`RequestClass`](super::serve::RequestClass); the router keeps one
+//! queue lane per class and dispatches interactive first, bounded by the
+//! `starvation_bound` bypass (shared policy with `api::serve` —
+//! [`take_batch_lane`](super::serve::take_batch_lane)). Admission is
+//! per-class: queue-cap pressure lets an interactive arrival evict the
+//! youngest queued batch request (degraded, not lost) before shedding,
+//! and [`Saturated::retry_after_ms`] derives from the rejected class's
+//! own service EWMA and backlog, so interactive and batch callers get
+//! honest, distinct hints. With `stream_buf > 0` workers push tokens
+//! into bounded per-request channels (`util::stream`) instead of
+//! unbounded router events: a slow or stalled consumer costs drops /
+//! stalls / a severed stream per the [`SlowConsumer`] policy, never a
+//! stalled worker step round.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
@@ -52,24 +67,35 @@ use crate::runtime::{BackendKind, DecodeOpts, DecodeSession, Engine, ModelRuntim
 use crate::util::json::Json;
 use crate::util::retry::{RetryPolicy, RetryState};
 use crate::util::rng::Rng;
+use crate::util::stream::{bounded, BoundedRx, BoundedTx, SlowConsumer};
 use crate::util::StatsWindow;
 
-use super::serve::{Saturated, ServeWeights, TokenEvent, TokenSink};
+use super::serve::{
+    request_rng, take_batch_lane, ClassPair, RequestClass, Saturated, ServeWeights, TokenEvent,
+    TokenSink, SEED_MIX,
+};
 use super::telemetry::JsonlAppender;
 
-/// SplitMix64 golden-ratio constant, used to decorrelate derived seeds.
-const SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
-/// Domain tags for derived RNG streams (request sampling / fault kinds).
-const TAG_REQUEST: u64 = 0x517c_c1b7_2722_0a95;
+/// Domain tags for derived fault-decision RNG streams (the request
+/// sampling stream itself lives in `serve::request_rng`).
 const TAG_PREFILL: u64 = 0x9216_d5d9_8979_fb1b;
 const TAG_STEP: u64 = 0xd131_0ba6_98df_b5ac;
 
-/// The per-request sampling stream: a function of the fleet sample seed
-/// and the request id **only**. Slot index, worker index, and retry
-/// attempt deliberately do not enter — this is what makes a retried
-/// generation bit-identical to the no-fault run.
-fn request_rng(sample_seed: u64, id: u64) -> Rng {
-    Rng::new(sample_seed ^ id.wrapping_mul(SEED_MIX) ^ TAG_REQUEST)
+/// Per-class [`Saturated::retry_after_ms`] hint: estimated wait for
+/// `depth_ahead` queued requests at the class's own service EWMA
+/// (falling back to the global estimate while the class is cold) over
+/// `capacity` concurrent slots — floored at one service time and at
+/// 1 ms so a rejected caller always backs off. Pure so both classes can
+/// be unit-tested against the same queue state.
+pub fn fleet_retry_hint(
+    depth_ahead: usize,
+    class_est_ms: f64,
+    fallback_est_ms: f64,
+    capacity: usize,
+) -> f64 {
+    let per_req = if class_est_ms > 0.0 { class_est_ms } else { fallback_est_ms };
+    let wait = depth_ahead as f64 * per_req / capacity.max(1) as f64;
+    wait.max(per_req).max(1.0)
 }
 
 /// Deterministic fault-injection plan. All decisions replay exactly:
@@ -174,6 +200,16 @@ pub struct FleetCfg {
     /// Router-side per-token callback (tokens relayed from workers; a
     /// retried attempt restarts its index at 0 with a higher `attempt`).
     pub on_token: Option<TokenSink>,
+    /// Starvation bound for the batch lane: a queued batch request
+    /// bypasses after this many consecutive interactive dispatches.
+    /// 0 disables lanes entirely (strict submission order, no eviction).
+    pub starvation_bound: usize,
+    /// Per-request bounded token-channel capacity for streaming
+    /// (`stream` / `on_token`). 0 falls back to the legacy unbounded
+    /// worker-event relay.
+    pub stream_buf: usize,
+    /// What a worker does when a request's token channel is full.
+    pub slow_consumer: SlowConsumer,
 }
 
 impl Default for FleetCfg {
@@ -195,6 +231,9 @@ impl Default for FleetCfg {
             max_pages: 0,
             stream: false,
             on_token: None,
+            starvation_bound: 4,
+            stream_buf: 64,
+            slow_consumer: SlowConsumer::default(),
         }
     }
 }
@@ -245,6 +284,9 @@ pub struct WorkerStats {
     pub rounds: usize,
     /// Mean per-round slot occupancy (reported at clean shutdown).
     pub occupancy: f64,
+    /// Decode-state pages still live at clean shutdown (paged backends;
+    /// nonzero after a full drain means a leak).
+    pub live_pages: usize,
 }
 
 /// Aggregate fleet counters: global windows + per-worker slices.
@@ -263,11 +305,26 @@ pub struct FleetStats {
     pub worker_deaths: usize,
     /// Requests expired by the deadline while still router-queued.
     pub expired: usize,
+    /// Queued batch requests evicted (degraded) to admit interactive
+    /// traffic under queue-cap pressure.
+    pub evicted: usize,
+    /// Batch dispatches that used the starvation-bound bypass while
+    /// interactive work was still queued.
+    pub lane_bypasses: usize,
+    /// Tokens dropped by `SlowConsumer::DropOldest` channels.
+    pub tokens_dropped: u64,
+    /// Worker pushes that found a request's token channel full.
+    pub consumer_stalls: u64,
+    /// Streams severed (`Disconnect` policy or a blocked push past its
+    /// deadline).
+    pub streams_disconnected: u64,
     pub latencies_ms: StatsWindow,
     pub ttft_ms: StatsWindow,
     /// Router-queue wait per request (submit -> dispatch).
     pub queue_wait_ms: StatsWindow,
     pub per_worker: Vec<WorkerStats>,
+    /// Per-class SLO slices (see [`ClassStats`](super::serve::ClassStats)).
+    pub per_class: ClassPair,
 }
 
 impl FleetStats {
@@ -297,10 +354,25 @@ impl FleetStats {
 
     /// One-line report (CLI / bench output).
     pub fn summary(&self) -> String {
+        let mut lanes = self.per_class.brief();
+        if self.lane_bypasses > 0 {
+            lanes.push_str(&format!(" | bypass {}", self.lane_bypasses));
+        }
+        let stream_clause = if self.tokens_dropped > 0
+            || self.consumer_stalls > 0
+            || self.streams_disconnected > 0
+        {
+            format!(
+                " | stream drop {} stall {} disc {}",
+                self.tokens_dropped, self.consumer_stalls, self.streams_disconnected
+            )
+        } else {
+            String::new()
+        };
         format!(
             "fleet {:<10} {}w | {}/{} ok ({} degraded, {} shed, {} expired) | \
              {} retries {} deaths | lat p50 {:.0}ms p95 {:.0}ms p99 {:.0}ms | \
-             ttft p50 {:.0}ms | occ {:.2} | shed rate {:.2}",
+             ttft p50 {:.0}ms | occ {:.2} | shed rate {:.2}{lanes}{stream_clause}",
             self.fwd_key,
             self.workers,
             self.completed - self.degraded,
@@ -331,6 +403,11 @@ struct Job {
     prompt: Vec<i32>,
     attempt: u32,
     submitted: Instant,
+    /// Bounded per-request token channel (producer half). `None` when the
+    /// fleet is not streaming or runs the legacy event relay
+    /// (`stream_buf == 0`). Cloned from the router's map on every
+    /// attempt, so a retry streams into the same channel.
+    stream: Option<BoundedTx<TokenEvent>>,
 }
 
 /// Worker -> router events.
@@ -351,8 +428,9 @@ enum WorkerEvent {
         ttft_ms: f64,
         execute_ms: f64,
     },
-    /// One generated token, streamed as it lands (only sent when the
-    /// fleet was configured with `stream` or an `on_token` sink).
+    /// One generated token, streamed as it lands (legacy relay — only
+    /// sent when streaming is on and `stream_buf == 0`; with bounded
+    /// channels tokens bypass the event channel entirely).
     Token {
         worker: usize,
         id: u64,
@@ -372,11 +450,13 @@ enum WorkerEvent {
     Died {
         worker: usize,
     },
-    /// Clean shutdown report (occupancy/rounds for `FleetStats`).
+    /// Clean shutdown report (occupancy/rounds/live-pages for
+    /// `FleetStats`).
     Stopped {
         worker: usize,
         rounds: usize,
         occupancy: f64,
+        live_pages: usize,
     },
 }
 
@@ -384,6 +464,7 @@ enum WorkerEvent {
 /// (workers never need to echo prompts back).
 struct ReqState {
     prompt: Vec<i32>,
+    class: RequestClass,
     submitted: Instant,
     attempt: u32,
     retry: RetryState,
@@ -407,8 +488,15 @@ pub struct FleetHandle {
     events: Receiver<WorkerEvent>,
     joins: Vec<Option<JoinHandle<()>>>,
     outstanding: Vec<usize>,
-    /// Ids waiting in the router for a worker slot (dispatch order).
-    queue: VecDeque<u64>,
+    /// Ids waiting in the router for a worker slot, one lane per
+    /// [`RequestClass`] (dispatch order within a lane; `take_batch_lane`
+    /// arbitrates between them).
+    lane_int: VecDeque<u64>,
+    lane_bat: VecDeque<u64>,
+    /// Interactive dispatches since the batch lane last got a turn.
+    since_bypass: usize,
+    /// Batch-lane starvation bound (0 = lanes off, strict id order).
+    starvation_bound: usize,
     /// All unresolved requests (router-queued and worker-assigned).
     /// BTreeMap: requeue-on-death iterates it, and iteration order must
     /// be deterministic.
@@ -420,6 +508,14 @@ pub struct FleetHandle {
     /// Append relayed `token` events to the telemetry JSONL.
     stream: bool,
     on_token: Option<TokenSink>,
+    /// Bounded per-request token channels (both halves: the Tx is
+    /// re-cloned into every attempt's Job, the Rx is relayed here).
+    /// BTreeMap for deterministic relay order. Empty when not streaming
+    /// or when `stream_buf == 0` (legacy event relay).
+    streams: BTreeMap<u64, (BoundedTx<TokenEvent>, BoundedRx<TokenEvent>)>,
+    /// Channel capacity; 0 disables the bounded-channel path.
+    stream_buf: usize,
+    slow_consumer: SlowConsumer,
 }
 
 impl FleetHandle {
@@ -446,6 +542,10 @@ impl FleetHandle {
             max_pages: cfg.max_pages,
         };
         let stream_tokens = cfg.stream || cfg.on_token.is_some();
+        // With bounded channels (stream_buf > 0) tokens travel through
+        // per-request channels; the legacy unbounded Token event relay
+        // stays only as the stream_buf == 0 fallback.
+        let legacy_tokens = stream_tokens && cfg.stream_buf == 0;
         let (event_tx, event_rx) = channel::<WorkerEvent>();
         let mut senders = Vec::with_capacity(cfg.workers);
         let mut joins = Vec::with_capacity(cfg.workers);
@@ -459,7 +559,7 @@ impl FleetHandle {
                 slots,
                 fault: cfg.fault.clone(),
                 opts: decode_opts,
-                stream: stream_tokens,
+                stream: legacy_tokens,
             };
             let ev = event_tx.clone();
             let join = std::thread::Builder::new()
@@ -525,7 +625,10 @@ impl FleetHandle {
             events: event_rx,
             joins,
             outstanding: vec![0; cfg.workers],
-            queue: VecDeque::new(),
+            lane_int: VecDeque::new(),
+            lane_bat: VecDeque::new(),
+            since_bypass: 0,
+            starvation_bound: cfg.starvation_bound,
             requests: BTreeMap::new(),
             next_id: 0,
             completed: Vec::new(),
@@ -538,6 +641,9 @@ impl FleetHandle {
             telemetry,
             stream: cfg.stream,
             on_token: cfg.on_token.clone(),
+            streams: BTreeMap::new(),
+            stream_buf: if stream_tokens { cfg.stream_buf } else { 0 },
+            slow_consumer: cfg.slow_consumer,
         })
     }
 
@@ -548,7 +654,12 @@ impl FleetHandle {
 
     /// Requests waiting in the router (excludes worker-assigned ones).
     pub fn queued(&self) -> usize {
-        self.queue.len()
+        self.lane_int.len() + self.lane_bat.len()
+    }
+
+    /// Router-queue depth per lane: `(interactive, batch)`.
+    pub fn lane_depths(&self) -> (usize, usize) {
+        (self.lane_int.len(), self.lane_bat.len())
     }
 
     /// Unresolved requests (router-queued + worker-assigned).
@@ -560,18 +671,48 @@ impl FleetHandle {
         &self.stats
     }
 
-    /// Estimated wait for a newly queued request: backlog x per-request
-    /// service estimate over live capacity.
-    fn est_wait_ms(&self, depth: usize) -> f64 {
-        let capacity = (self.live_workers() * self.slots_per_worker).max(1);
-        depth as f64 * self.est_service_ms / capacity as f64
+    /// Backlog ahead of a new request of `class`: interactive waits only
+    /// on the interactive lane (batch yields, bypasses aside); batch
+    /// waits on everything queued.
+    fn class_depth(&self, class: RequestClass) -> usize {
+        match class {
+            RequestClass::Interactive => self.lane_int.len(),
+            RequestClass::Batch => self.lane_int.len() + self.lane_bat.len(),
+        }
     }
 
-    /// Submit one request. Admission control applies *before* enqueue:
-    /// a full router queue, or an estimated wait that already blows the
-    /// deadline, returns the typed [`Saturated`] error. Returns the
-    /// request id (matched by [`FleetResponse::id`]).
+    /// Per-class service estimate: the class's own EWMA once it has
+    /// observed completions, else the global estimate.
+    fn class_est_ms(&self, class: RequestClass) -> f64 {
+        let e = self.stats.per_class.get(class).exec_ewma_ms;
+        if e > 0.0 {
+            e
+        } else {
+            self.est_service_ms
+        }
+    }
+
+    /// Estimated wait for a newly queued request of `class`: class
+    /// backlog x per-class service estimate over live capacity.
+    fn est_wait_ms(&self, class: RequestClass, depth: usize) -> f64 {
+        let capacity = (self.live_workers() * self.slots_per_worker).max(1);
+        depth as f64 * self.class_est_ms(class) / capacity as f64
+    }
+
+    /// Submit one [`RequestClass::Interactive`] request (see
+    /// [`FleetHandle::submit_class`]).
     pub fn submit(&mut self, prompt: Vec<i32>) -> Result<u64> {
+        self.submit_class(prompt, RequestClass::Interactive)
+    }
+
+    /// Submit one request under `class`. Admission control applies
+    /// *before* enqueue: a full router queue, or an estimated wait that
+    /// already blows the deadline, returns the typed [`Saturated`] error
+    /// — except that an interactive arrival facing a full queue first
+    /// evicts the youngest queued batch request (which degrades, not
+    /// disappears). Returns the request id (matched by
+    /// [`FleetResponse::id`]).
+    pub fn submit_class(&mut self, prompt: Vec<i32>, class: RequestClass) -> Result<u64> {
         let seq_len = self.seq_len;
         if prompt.is_empty() {
             bail!("prompt is empty (need at least one token)");
@@ -591,6 +732,7 @@ impl FleetHandle {
                 id,
                 ReqState {
                     prompt,
+                    class,
                     submitted: Instant::now(),
                     attempt: 0,
                     retry: RetryState::default(),
@@ -603,27 +745,45 @@ impl FleetHandle {
             );
             return Ok(id);
         }
-        let depth = self.queue.len();
-        let over_cap = self.queue_cap > 0 && depth >= self.queue_cap;
-        let est_wait = self.est_wait_ms(depth + 1);
+        let mut over_cap = self.queue_cap > 0 && self.queued() >= self.queue_cap;
+        if over_cap
+            && class == RequestClass::Interactive
+            && self.starvation_bound > 0
+            && self.evict_youngest_batch()
+        {
+            // the evict-batch rung of the degradation ladder freed a slot
+            over_cap = self.queued() >= self.queue_cap;
+        }
+        let cdepth = self.class_depth(class);
+        let class_est = self.class_est_ms(class);
+        let est_wait = self.est_wait_ms(class, cdepth + 1);
         let over_deadline = match self.deadline_ms {
             // Unseeded estimator (no completion observed yet): est_wait is
             // 0 for ANY backlog, so a wait test would admit everything.
             // Until the EWMA seeds, bound admission by live slot capacity
             // — a request beyond what can run concurrently is shed.
-            Some(_) if self.est_service_ms <= 0.0 => {
-                depth + 1 > (self.live_workers() * self.slots_per_worker).max(1)
+            Some(_) if class_est <= 0.0 => {
+                cdepth + 1 > (self.live_workers() * self.slots_per_worker).max(1)
             }
             Some(d) => est_wait > d,
             None => false,
         };
         if over_cap || over_deadline {
             self.stats.shed += 1;
-            let hint = est_wait.max(self.est_service_ms).max(1.0);
+            self.stats.per_class.get_mut(class).shed += 1;
+            let capacity = (self.live_workers() * self.slots_per_worker).max(1);
+            let hint = fleet_retry_hint(
+                cdepth + 1,
+                self.stats.per_class.get(class).exec_ewma_ms,
+                self.est_service_ms,
+                capacity,
+            );
+            let qdepth = self.queued();
             if let Some(tel) = self.telemetry.as_mut() {
                 let _ = tel.append(&Json::obj(vec![
                     ("event", Json::Str("reject".into())),
-                    ("queued", Json::Num(depth as f64)),
+                    ("class", Json::Str(class.label().into())),
+                    ("queued", Json::Num(qdepth as f64)),
                     (
                         "reason",
                         Json::Str((if over_cap { "queue-cap" } else { "deadline" }).into()),
@@ -640,16 +800,42 @@ impl FleetHandle {
             id,
             ReqState {
                 prompt,
+                class,
                 submitted: Instant::now(),
                 attempt: 0,
                 retry: RetryState::default(),
                 assigned: None,
             },
         );
-        self.queue.push_back(id);
+        match class {
+            RequestClass::Interactive => self.lane_int.push_back(id),
+            RequestClass::Batch => self.lane_bat.push_back(id),
+        }
         self.dispatch();
         self.pump(false)?;
+        self.relay_streams();
         Ok(id)
+    }
+
+    /// Pop the youngest queued batch request and resolve it degraded so
+    /// an interactive arrival can take its queue slot. Returns whether a
+    /// slot was freed (false when no batch request is queued).
+    fn evict_youngest_batch(&mut self) -> bool {
+        let Some(id) = self.lane_bat.pop_back() else { return false };
+        self.stats.evicted += 1;
+        self.stats.per_class.batch.evicted += 1;
+        if let Some(tel) = self.telemetry.as_mut() {
+            let _ = tel.append(&Json::obj(vec![
+                ("event", Json::Str("evict".into())),
+                ("id", Json::Num(id as f64)),
+                ("class", Json::Str(RequestClass::Batch.label().into())),
+            ]));
+        }
+        self.resolve_degraded(
+            id,
+            "evicted by interactive admission under saturation".to_string(),
+        );
+        true
     }
 
     /// Advance the router: absorb worker events, expire router-queued
@@ -658,6 +844,7 @@ impl FleetHandle {
     pub fn poll(&mut self) -> Result<usize> {
         let before = self.completed.len();
         self.pump(false)?;
+        self.relay_streams();
         self.expire();
         self.dispatch();
         Ok(self.completed.len() - before)
@@ -678,6 +865,7 @@ impl FleetHandle {
                 break;
             }
             self.pump(true)?;
+            self.relay_streams();
         }
         Ok(std::mem::take(&mut self.completed))
     }
@@ -714,14 +902,17 @@ impl FleetHandle {
         for id in ids {
             self.resolve_degraded(id, format!("request abandoned: {reason}"));
         }
-        self.queue.clear();
+        self.lane_int.clear();
+        self.lane_bat.clear();
     }
 
     /// Dispatch router-queued requests to the least-loaded live worker
-    /// (ties to the lowest index) while free slots exist.
+    /// (ties to the lowest index) while free slots exist. The lane
+    /// arbiter ([`take_batch_lane`]) serves interactive first, bounded
+    /// by `starvation_bound` batch bypasses.
     fn dispatch(&mut self) {
         loop {
-            if self.queue.is_empty() {
+            if self.lane_int.is_empty() && self.lane_bat.is_empty() {
                 return;
             }
             let mut best: Option<(usize, usize)> = None;
@@ -738,13 +929,43 @@ impl FleetHandle {
                 }
             }
             let Some((w, _)) = best else { return };
-            let Some(id) = self.queue.pop_front() else { return };
+            let take_bat = take_batch_lane(
+                self.lane_int.front().copied(),
+                self.lane_bat.front().copied(),
+                self.starvation_bound,
+                self.since_bypass,
+            );
+            let popped = if take_bat {
+                if self.starvation_bound > 0 && !self.lane_int.is_empty() {
+                    self.stats.lane_bypasses += 1;
+                }
+                self.since_bypass = 0;
+                self.lane_bat.pop_front()
+            } else {
+                if self.lane_bat.is_empty() {
+                    self.since_bypass = 0;
+                } else {
+                    self.since_bypass += 1;
+                }
+                self.lane_int.pop_front()
+            };
+            let Some(id) = popped else { return };
+            let stream = if self.stream_buf > 0 {
+                let cap = self.stream_buf;
+                let policy = self.slow_consumer;
+                let chan = self.streams.entry(id).or_insert_with(|| bounded(cap, policy));
+                Some(chan.0.clone())
+            } else {
+                None
+            };
             let Some(req) = self.requests.get_mut(&id) else { continue };
+            let class = req.class;
             let job = Job {
                 id,
                 prompt: req.prompt.clone(),
                 attempt: req.attempt,
                 submitted: req.submitted,
+                stream,
             };
             let sent = match self.senders.get(w).and_then(|s| s.as_ref()) {
                 Some(tx) => tx.send(ToWorker::Job(job)).is_ok(),
@@ -758,11 +979,71 @@ impl FleetHandle {
             } else {
                 // channel closed under us: the worker is dead even if its
                 // Died event has not been absorbed yet
-                self.queue.push_front(id);
+                match class {
+                    RequestClass::Interactive => self.lane_int.push_front(id),
+                    RequestClass::Batch => self.lane_bat.push_front(id),
+                }
                 if let Some(tx) = self.senders.get_mut(w) {
                     *tx = None;
                 }
             }
+        }
+    }
+
+    /// Drain every request's bounded token channel into the router-side
+    /// sink / telemetry. BTreeMap order keeps the relay deterministic;
+    /// within one request the channel is FIFO, so per-id token order is
+    /// preserved exactly.
+    fn relay_streams(&mut self) {
+        for (_tx, rx) in self.streams.values() {
+            while let Some(ev) = rx.try_recv() {
+                if let Some(sink) = &self.on_token {
+                    (sink.0)(&ev);
+                }
+                if self.stream {
+                    if let Some(tel) = self.telemetry.as_mut() {
+                        let _ = tel.append(&Json::obj(vec![
+                            ("event", Json::Str("token".into())),
+                            ("id", Json::Num(ev.id as f64)),
+                            ("token", Json::Num(ev.token as f64)),
+                            ("index", Json::Num(ev.index as f64)),
+                            ("worker", Json::Num(ev.worker as f64)),
+                            ("attempt", Json::Num(ev.attempt as f64)),
+                        ]));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Tear down `id`'s token channel at resolution: deliver whatever is
+    /// still buffered, then fold the channel's drop/stall/disconnect
+    /// counters into the fleet gauges.
+    fn close_stream(&mut self, id: u64) {
+        let Some((tx, rx)) = self.streams.remove(&id) else { return };
+        tx.close();
+        while let Some(ev) = rx.try_recv() {
+            if let Some(sink) = &self.on_token {
+                (sink.0)(&ev);
+            }
+            if self.stream {
+                if let Some(tel) = self.telemetry.as_mut() {
+                    let _ = tel.append(&Json::obj(vec![
+                        ("event", Json::Str("token".into())),
+                        ("id", Json::Num(ev.id as f64)),
+                        ("token", Json::Num(ev.token as f64)),
+                        ("index", Json::Num(ev.index as f64)),
+                        ("worker", Json::Num(ev.worker as f64)),
+                        ("attempt", Json::Num(ev.attempt as f64)),
+                    ]));
+                }
+            }
+        }
+        let st = rx.stats();
+        self.stats.tokens_dropped += st.dropped;
+        self.stats.consumer_stalls += st.stalls;
+        if st.disconnected {
+            self.stats.streams_disconnected += 1;
         }
     }
 
@@ -811,6 +1092,9 @@ impl FleetHandle {
                 if let Some(o) = self.outstanding.get_mut(worker) {
                     *o = o.saturating_sub(1);
                 }
+                // flush + retire the token channel before the terminal
+                // event, so a consumer never sees tokens after "request"
+                self.close_stream(id);
                 let Some(req) = self.requests.remove(&id) else { return };
                 let now = Instant::now();
                 let latency_ms = now.duration_since(req.submitted).as_secs_f64() * 1000.0;
@@ -819,12 +1103,27 @@ impl FleetHandle {
                 self.stats.latencies_ms.push(latency_ms);
                 self.stats.ttft_ms.push(ttft_ms);
                 self.stats.queue_wait_ms.push(wait_ms);
-                // EWMA service estimate feeds admission control
+                // EWMA service estimates feed admission control (global
+                // fallback + the rejected class's own hint)
                 self.est_service_ms = if self.est_service_ms <= 0.0 {
                     execute_ms
                 } else {
                     0.9 * self.est_service_ms + 0.1 * execute_ms
                 };
+                let deadline = self.deadline_ms;
+                let cls = self.stats.per_class.get_mut(req.class);
+                cls.requests += 1;
+                cls.gen_tokens += gen_tokens;
+                cls.ttft_ms.push(ttft_ms);
+                cls.latencies_ms.push(latency_ms);
+                cls.observe_exec(execute_ms);
+                if let Some(d) = deadline {
+                    if latency_ms <= d {
+                        cls.deadline_hits += 1;
+                    } else {
+                        cls.deadline_misses += 1;
+                    }
+                }
                 if let Some(ws) = self.stats.per_worker.get_mut(worker) {
                     ws.requests += 1;
                     ws.gen_tokens += gen_tokens;
@@ -833,6 +1132,7 @@ impl FleetHandle {
                     let _ = tel.append(&Json::obj(vec![
                         ("event", Json::Str("request".into())),
                         ("id", Json::Num(id as f64)),
+                        ("class", Json::Str(req.class.label().into())),
                         ("worker", Json::Num(worker as f64)),
                         ("attempt", Json::Num(attempt as f64)),
                         ("ttft_ms", Json::Num(ttft_ms)),
@@ -911,10 +1211,11 @@ impl FleetHandle {
                     self.requeue(id, None, "worker died");
                 }
             }
-            WorkerEvent::Stopped { worker, rounds, occupancy } => {
+            WorkerEvent::Stopped { worker, rounds, occupancy, live_pages } => {
                 if let Some(ws) = self.stats.per_worker.get_mut(worker) {
                     ws.rounds = rounds;
                     ws.occupancy = occupancy;
+                    ws.live_pages = live_pages;
                 }
             }
         }
@@ -932,8 +1233,12 @@ impl FleetHandle {
                 req.attempt += 1;
                 req.assigned = None;
                 let attempt = req.attempt;
+                let class = req.class;
                 self.stats.retries += 1;
-                self.queue.push_front(id);
+                match class {
+                    RequestClass::Interactive => self.lane_int.push_front(id),
+                    RequestClass::Batch => self.lane_bat.push_front(id),
+                }
                 if let Some(tel) = self.telemetry.as_mut() {
                     let mut fields = vec![
                         ("event", Json::Str("retry".into())),
@@ -959,13 +1264,16 @@ impl FleetHandle {
     }
 
     /// Expire router-queued requests past the deadline (dispatched ones
-    /// are the workers' to finish).
+    /// are the workers' to finish). Both lanes are scanned; each expiry
+    /// leaves an "expired" event *and* a terminal "request" event (via
+    /// [`FleetHandle::resolve_degraded`]) in the JSONL trail.
     fn expire(&mut self) {
         let Some(deadline) = self.deadline_ms else { return };
         let now = Instant::now();
         let expired: Vec<u64> = self
-            .queue
+            .lane_int
             .iter()
+            .chain(self.lane_bat.iter())
             .copied()
             .filter(|id| match self.requests.get(id) {
                 Some(r) => {
@@ -977,15 +1285,19 @@ impl FleetHandle {
             .collect();
         for id in expired {
             self.stats.expired += 1;
-            self.queue.retain(|&q| q != id);
-            let waited = match self.requests.get(&id) {
-                Some(r) => now.duration_since(r.submitted).as_secs_f64() * 1000.0,
-                None => 0.0,
+            let (waited, class) = match self.requests.get(&id) {
+                Some(r) => (
+                    now.duration_since(r.submitted).as_secs_f64() * 1000.0,
+                    r.class,
+                ),
+                None => (0.0, RequestClass::Interactive),
             };
+            self.stats.per_class.get_mut(class).expired += 1;
             if let Some(tel) = self.telemetry.as_mut() {
                 let _ = tel.append(&Json::obj(vec![
                     ("event", Json::Str("expired".into())),
                     ("id", Json::Num(id as f64)),
+                    ("class", Json::Str(class.label().into())),
                     ("waited_ms", Json::Num(waited)),
                 ]));
             }
@@ -993,10 +1305,15 @@ impl FleetHandle {
         }
     }
 
-    /// Resolve `id` as degraded: prompt-only row, error set.
+    /// Resolve `id` as degraded: prompt-only row, error set. Emits the
+    /// request's terminal "request" JSONL event (class + reason), so
+    /// every submission — completed, expired, evicted, or abandoned —
+    /// leaves exactly one terminal record (stream/response parity).
     fn resolve_degraded(&mut self, id: u64, error: String) {
+        self.close_stream(id);
         let Some(req) = self.requests.remove(&id) else { return };
-        self.queue.retain(|&q| q != id);
+        self.lane_int.retain(|&q| q != id);
+        self.lane_bat.retain(|&q| q != id);
         let now = Instant::now();
         let latency_ms = now.duration_since(req.submitted).as_secs_f64() * 1000.0;
         let mut row = vec![tok::PAD; self.seq_len];
@@ -1006,6 +1323,25 @@ impl FleetHandle {
         self.stats.completed += 1;
         self.stats.degraded += 1;
         self.stats.latencies_ms.push(latency_ms);
+        let deadline = self.deadline_ms;
+        let cls = self.stats.per_class.get_mut(req.class);
+        cls.requests += 1;
+        cls.latencies_ms.push(latency_ms);
+        if deadline.is_some() {
+            cls.deadline_misses += 1;
+        }
+        if let Some(tel) = self.telemetry.as_mut() {
+            let _ = tel.append(&Json::obj(vec![
+                ("event", Json::Str("request".into())),
+                ("id", Json::Num(id as f64)),
+                ("class", Json::Str(req.class.label().into())),
+                ("attempt", Json::Num(req.attempt as f64)),
+                ("ttft_ms", Json::Num(latency_ms)),
+                ("latency_ms", Json::Num(latency_ms)),
+                ("gen_tokens", Json::Num(0.0)),
+                ("error", Json::Str(error.clone())),
+            ]));
+        }
         self.completed.push(FleetResponse {
             id,
             row,
@@ -1053,6 +1389,11 @@ struct WSlot {
     gen: usize,
     admitted: Instant,
     ttft_ms: f64,
+    /// Bounded token channel for this request (None = not streaming or
+    /// legacy event relay). A full channel costs *this* request a drop /
+    /// stall / severed stream per policy — never a blocked step round
+    /// for its slot-mates.
+    stream: Option<BoundedTx<TokenEvent>>,
 }
 
 /// Worker-local scheduler state (one per thread; never crosses threads).
@@ -1178,7 +1519,15 @@ impl WorkerInner {
         if let Some(cell) = row.get_mut(np) {
             *cell = next;
         }
-        if self.stream {
+        if let Some(chan) = job.stream.as_ref() {
+            let _ = chan.push(TokenEvent {
+                id: job.id,
+                token: next,
+                index: 0,
+                worker: self.worker,
+                attempt: job.attempt,
+            });
+        } else if self.stream {
             let _ = tx.send(WorkerEvent::Token {
                 worker: self.worker,
                 id: job.id,
@@ -1208,6 +1557,7 @@ impl WorkerInner {
                 gen: 1,
                 admitted: t0,
                 ttft_ms,
+                stream: job.stream,
             });
         }
     }
@@ -1271,7 +1621,15 @@ impl WorkerInner {
             }
             slot.frontier += 1;
             slot.gen += 1;
-            if self.stream {
+            if let Some(chan) = slot.stream.as_ref() {
+                let _ = chan.push(TokenEvent {
+                    id,
+                    token: next,
+                    index: slot.gen - 1,
+                    worker: self.worker,
+                    attempt,
+                });
+            } else if self.stream {
                 let _ = tx.send(WorkerEvent::Token {
                     worker: self.worker,
                     id,
@@ -1308,6 +1666,12 @@ impl WorkerInner {
             self.occ_sum / self.rounds as f64
         }
     }
+
+    /// Decode-state pages currently live (0 for dense backends) — the
+    /// shutdown leak report behind [`WorkerStats::live_pages`].
+    fn live_pages(&self) -> usize {
+        self.session.paged_stats().map(|p| p.live_pages).unwrap_or(0)
+    }
 }
 
 /// Worker thread body: build the engine, then loop
@@ -1333,6 +1697,7 @@ fn worker_main(cfg: WorkerCfg, rx: Receiver<ToWorker>, tx: Sender<WorkerEvent>) 
                         worker,
                         rounds: inner.rounds,
                         occupancy: inner.occupancy(),
+                        live_pages: inner.live_pages(),
                     });
                     return;
                 }
@@ -1346,6 +1711,7 @@ fn worker_main(cfg: WorkerCfg, rx: Receiver<ToWorker>, tx: Sender<WorkerEvent>) 
                         worker,
                         rounds: inner.rounds,
                         occupancy: inner.occupancy(),
+                        live_pages: inner.live_pages(),
                     });
                     return;
                 }
@@ -1482,5 +1848,53 @@ mod tests {
         assert_eq!(s.occupancy(), 0.0);
         assert_eq!(s.latency_p(99.0), 0.0);
         assert!(s.summary().contains("0/0 ok"));
+        // idle fleets report no lane or stream clause
+        assert!(!s.summary().contains("bypass"), "{}", s.summary());
+        assert!(!s.summary().contains("stream drop"), "{}", s.summary());
+    }
+
+    #[test]
+    fn retry_hints_differ_per_class_under_the_same_queue_state() {
+        // Same queue snapshot: 2 interactive + 6 batch queued, 4 slots.
+        // Interactive waits only on its own lane at its own (fast) EWMA;
+        // batch waits on everything at its own (slow) EWMA.
+        let int = fleet_retry_hint(3, 20.0, 50.0, 4);
+        let bat = fleet_retry_hint(9, 200.0, 50.0, 4);
+        assert!((int - 20.0).abs() < 1e-12, "3*20/4 = 15, floored at one service time: {int}");
+        assert!((bat - 450.0).abs() < 1e-12, "9*200/4: {bat}");
+        assert!(bat > int, "batch callers must get the longer, honest hint");
+        // cold class falls back to the global estimate
+        let cold = fleet_retry_hint(3, 0.0, 50.0, 4);
+        assert!((cold - 50.0).abs() < 1e-12, "3*50/4 = 37.5, floored at fallback: {cold}");
+        // never below 1 ms, even with no estimate at all
+        assert_eq!(fleet_retry_hint(0, 0.0, 0.0, 4), 1.0);
+        // zero capacity never divides by zero
+        assert!(fleet_retry_hint(5, 10.0, 0.0, 0).is_finite());
+    }
+
+    #[test]
+    fn summary_reports_lane_and_stream_clauses() {
+        let mut s = FleetStats {
+            fwd_key: "fwd_nvfp4".into(),
+            workers: 2,
+            submitted: 12,
+            completed: 12,
+            lane_bypasses: 3,
+            tokens_dropped: 7,
+            consumer_stalls: 2,
+            streams_disconnected: 1,
+            per_worker: vec![WorkerStats::default(); 2],
+            ..Default::default()
+        };
+        s.per_class.interactive.requests = 8;
+        s.per_class.interactive.ttft_ms.push(4.0);
+        s.per_class.batch.requests = 4;
+        s.per_class.batch.shed = 2;
+        let line = s.summary();
+        assert!(line.contains("int 8"), "{line}");
+        assert!(line.contains("bat 4"), "{line}");
+        assert!(line.contains("shed 2"), "{line}");
+        assert!(line.contains("bypass 3"), "{line}");
+        assert!(line.contains("stream drop 7 stall 2 disc 1"), "{line}");
     }
 }

@@ -16,6 +16,11 @@
 //!   admission control ([`Saturated`] backpressure), budgeted
 //!   retry/requeue of work from dead or failing workers, and a
 //!   deterministic fault-injection layer ([`FaultPlan`]) for chaos tests.
+//! * Overload robustness is shared between both: [`RequestClass`]
+//!   priority lanes with a starvation bound and per-class SLO stats
+//!   ([`ClassPair`]), plus bounded per-request token channels with a
+//!   [`SlowConsumer`] policy so a stalled stream consumer never stalls a
+//!   step round.
 //! * [`cli`] holds the typed command definitions the `qadx` binary parses
 //!   flags through, with usage text generated from the definitions.
 //!
@@ -43,12 +48,15 @@ pub mod session;
 pub mod telemetry;
 
 pub use crate::eval::DecodeMode;
+pub use crate::util::stream::{ChanStats, PushOutcome, SlowConsumer};
 pub use fleet::{
-    FaultPlan, FleetCfg, FleetHandle, FleetResponse, FleetStats, FleetTarget, WorkerStats,
+    fleet_retry_hint, FaultPlan, FleetCfg, FleetHandle, FleetResponse, FleetStats, FleetTarget,
+    WorkerStats,
 };
 pub use method::{MethodRef, MethodRegistry, RecoveryMethod};
 pub use serve::{
-    Coalescer, Saturated, ServeCfg, ServeHandle, ServeResponse, ServeStats, ServeWeights,
+    class_retry_hint, request_rng, take_batch_lane, ClassPair, ClassStats, Coalescer,
+    RequestClass, Saturated, ServeCfg, ServeHandle, ServeResponse, ServeStats, ServeWeights,
     TokenEvent, TokenSink,
 };
 pub use session::{

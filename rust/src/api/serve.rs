@@ -20,6 +20,29 @@
 //! the queue is synchronous: `submit` admits/flushes inline, `poll` runs
 //! one decode round (or applies the coalescing deadline), `drain` runs
 //! everything out.
+//!
+//! **SLO classes + priority lanes.** Every request carries a
+//! [`RequestClass`] (`submit` defaults to `Interactive`;
+//! [`ServeHandle::submit_class`] is explicit). The continuous scheduler
+//! keeps one queue lane per class: interactive work dispatches first,
+//! bounded by a hard starvation bound — after `starvation_bound`
+//! consecutive interactive admissions while batch work waits, the oldest
+//! batch request bypasses. Under a saturated queue an interactive
+//! submission evicts the youngest queued batch request (degraded, not
+//! silently lost) instead of being shed alongside it. Per-class SLO
+//! accounting (TTFT/latency windows, shed/evicted/expired counts, a
+//! deadline-hit rate) lands in [`ClassStats`].
+//!
+//! **Backpressure-aware streaming.** With `stream_buf > 0` (the default)
+//! generated tokens flow through a bounded per-request channel
+//! (`util::stream`) and the sink/JSONL consumer is fed *outside* the
+//! decode loop; the [`SlowConsumer`] policy decides what happens when a
+//! consumer cannot keep up (block with deadline / drop oldest /
+//! disconnect), so one stalled consumer can never stall a step round or
+//! its slot-mates. Determinism is preserved throughout: each request
+//! samples from its own RNG stream keyed on `(sample.seed, id)` only
+//! ([`request_rng`]), so rows are bit-identical regardless of lane
+//! order, eviction, requeue, or consumer speed.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::rc::Rc;
@@ -32,9 +55,109 @@ use crate::eval::{sample_token_with, DecodeMode, SampleCfg, SampleScratch, Sampl
 use crate::runtime::{Buffer, DecodeOpts, DecodeSession, Engine, ModelRuntime};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::util::stream::{bounded, BoundedRx, BoundedTx, SlowConsumer};
 use crate::util::StatsWindow;
 
 use super::telemetry::JsonlAppender;
+
+/// SplitMix64 golden-ratio constant, used to decorrelate derived seeds.
+pub(crate) const SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+/// Domain tag for the per-request sampling stream.
+const TAG_REQUEST: u64 = 0x517c_c1b7_2722_0a95;
+
+/// The per-request sampling stream: a function of the sample seed and
+/// the request id **only**. Lane, slot index, worker index, eviction,
+/// requeue, and retry attempt deliberately do not enter — this is the
+/// determinism oracle that keeps a retried/reordered generation
+/// bit-identical to the same request in an undisturbed run.
+pub fn request_rng(sample_seed: u64, id: u64) -> Rng {
+    Rng::new(sample_seed ^ id.wrapping_mul(SEED_MIX) ^ TAG_REQUEST)
+}
+
+/// SLO class carried on submit: which lane a request queues in and which
+/// admission rules apply to it under pressure. The set is small by
+/// design — policies key off the lane, so adding a class means adding a
+/// lane, not rewriting the scheduler.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RequestClass {
+    /// Latency-sensitive traffic: dispatches ahead of `Batch` (bounded by
+    /// the starvation bound) and may evict queued batch work instead of
+    /// being shed when the queue saturates.
+    #[default]
+    Interactive,
+    /// Throughput traffic: absorbs shed/eviction first under overload.
+    Batch,
+}
+
+impl RequestClass {
+    pub const ALL: [RequestClass; 2] = [RequestClass::Interactive, RequestClass::Batch];
+
+    /// Telemetry/JSONL label.
+    pub fn label(self) -> &'static str {
+        match self {
+            RequestClass::Interactive => "interactive",
+            RequestClass::Batch => "batch",
+        }
+    }
+
+    /// Compact label for summary lines.
+    pub fn short(self) -> &'static str {
+        match self {
+            RequestClass::Interactive => "int",
+            RequestClass::Batch => "bat",
+        }
+    }
+}
+
+/// Pure lane-selection policy shared by the serve scheduler and the
+/// fleet router: should the next dispatch take from the **batch** lane?
+///
+/// * `bound == 0` disables the lanes: strict submission order (request
+///   ids are monotonic, so the smaller front id is the older request).
+/// * Otherwise interactive goes first, except that once
+///   `since_bypass >= bound` consecutive interactive dispatches have run
+///   while batch work waited, the oldest batch request bypasses — the
+///   hard starvation bound.
+pub fn take_batch_lane(
+    int_front: Option<u64>,
+    bat_front: Option<u64>,
+    bound: usize,
+    since_bypass: usize,
+) -> bool {
+    match (int_front, bat_front) {
+        (_, None) => false,
+        (None, Some(_)) => true,
+        (Some(i), Some(b)) => {
+            if bound == 0 {
+                b < i
+            } else {
+                since_bypass >= bound
+            }
+        }
+    }
+}
+
+/// Per-class retry-after estimate for a [`Saturated`] rejection (pure so
+/// both serve and fleet unit-test it): the backlog a new request of this
+/// class must wait out, times that class's per-request service estimate.
+/// Interactive work waits only on the interactive lane (batch gets ahead
+/// of it only via the bounded bypass); batch work waits on both lanes.
+pub fn class_retry_hint(
+    class: RequestClass,
+    int_depth: usize,
+    bat_depth: usize,
+    in_flight: usize,
+    class_est_ms: f64,
+    fallback_est_ms: f64,
+    floor_ms: f64,
+) -> f64 {
+    let ahead = match class {
+        RequestClass::Interactive => int_depth + in_flight,
+        RequestClass::Batch => int_depth + bat_depth + in_flight,
+    };
+    let per_req = if class_est_ms > 0.0 { class_est_ms } else { fallback_est_ms };
+    (ahead as f64 * per_req).max(floor_ms).max(1.0)
+}
 
 /// Typed admission-control rejection: the submission queue is at capacity
 /// (or the request's deadline cannot be met given the present backlog).
@@ -147,6 +270,17 @@ pub struct ServeCfg {
     /// Per-token callback invoked as each token lands (the TTFT token is
     /// index 0).
     pub on_token: Option<TokenSink>,
+    /// Priority lanes: hard starvation bound — after this many
+    /// consecutive interactive admissions while batch work waits, the
+    /// oldest batch request bypasses. 0 disables the lanes entirely
+    /// (strict submission-order dispatch, no batch eviction).
+    pub starvation_bound: usize,
+    /// Streaming: bounded per-request token-channel capacity. 0 restores
+    /// the legacy synchronous sink/JSONL call inside the decode loop.
+    pub stream_buf: usize,
+    /// Streaming: what happens when a consumer cannot keep up with the
+    /// bounded channel (ignored when `stream_buf == 0`).
+    pub slow_consumer: SlowConsumer,
 }
 
 impl Default for ServeCfg {
@@ -165,6 +299,9 @@ impl Default for ServeCfg {
             max_pages: 0,
             stream: false,
             on_token: None,
+            starvation_bound: 4,
+            stream_buf: 64,
+            slow_consumer: SlowConsumer::default(),
         }
     }
 }
@@ -185,6 +322,7 @@ impl Coalescer {
     }
 
     pub fn push(&mut self, id: u64, now: Instant) {
+        // qadx-lint: allow(unbounded-growth) -- callers gate on ServeHandle::submit_class's max_queue admission check
         self.queue.push_back((id, now));
     }
 
@@ -227,6 +365,100 @@ pub struct ServeResponse {
     /// prefill/step ends the one request (row = prompt so far, no further
     /// tokens) without taking down the scheduler or its slot-mates.
     pub error: Option<String>,
+}
+
+/// Per-class SLO slice: whether a lane is meeting its objective
+/// (TTFT/latency windows, deadline-hit rate) and what overload cost it
+/// absorbed (shed / evicted / expired).
+#[derive(Clone, Debug, Default)]
+pub struct ClassStats {
+    /// Requests resolved under this class (completed or degraded).
+    pub requests: usize,
+    pub gen_tokens: usize,
+    /// Submissions rejected with [`Saturated`].
+    pub shed: usize,
+    /// Queued requests evicted (degraded) by higher-priority admission.
+    pub evicted: usize,
+    /// Requests that ran out their deadline while still queued (fleet).
+    pub expired: usize,
+    /// Resolutions inside / outside the configured deadline. Tracked only
+    /// when a deadline exists; queue expiries count as misses.
+    pub deadline_hits: usize,
+    pub deadline_misses: usize,
+    /// EWMA of observed per-request execute time — the per-class service
+    /// estimate behind [`Saturated::retry_after_ms`].
+    pub exec_ewma_ms: f64,
+    pub ttft_ms: StatsWindow,
+    pub latencies_ms: StatsWindow,
+}
+
+impl ClassStats {
+    /// Fraction of deadline-tracked resolutions that met the deadline;
+    /// 1.0 when nothing was tracked (no deadline configured).
+    pub fn deadline_hit_rate(&self) -> f64 {
+        let total = self.deadline_hits + self.deadline_misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.deadline_hits as f64 / total as f64
+        }
+    }
+
+    /// Fold one observed execute time into the per-class service EWMA.
+    pub(crate) fn observe_exec(&mut self, ms: f64) {
+        if !ms.is_finite() || ms < 0.0 {
+            return;
+        }
+        self.exec_ewma_ms =
+            if self.exec_ewma_ms <= 0.0 { ms } else { 0.9 * self.exec_ewma_ms + 0.1 * ms };
+    }
+
+    /// Compact summary clause; empty when the class saw no traffic.
+    pub(crate) fn brief(&self, label: &str) -> String {
+        if self.requests + self.shed + self.evicted + self.expired == 0 {
+            return String::new();
+        }
+        format!(
+            " | {label} {} ttft p99 {:.0}ms shed {} evict {} expire {} hit {:.2}",
+            self.requests,
+            self.ttft_ms.percentile(99.0),
+            self.shed,
+            self.evicted,
+            self.expired,
+            self.deadline_hit_rate()
+        )
+    }
+}
+
+/// The per-class stat slices, one per [`RequestClass`] lane. Named fields
+/// instead of an array so hot paths never index.
+#[derive(Clone, Debug, Default)]
+pub struct ClassPair {
+    pub interactive: ClassStats,
+    pub batch: ClassStats,
+}
+
+impl ClassPair {
+    pub fn get(&self, class: RequestClass) -> &ClassStats {
+        match class {
+            RequestClass::Interactive => &self.interactive,
+            RequestClass::Batch => &self.batch,
+        }
+    }
+
+    pub fn get_mut(&mut self, class: RequestClass) -> &mut ClassStats {
+        match class {
+            RequestClass::Interactive => &mut self.interactive,
+            RequestClass::Batch => &mut self.batch,
+        }
+    }
+
+    /// Summary clauses for both classes (empty for idle classes).
+    pub(crate) fn brief(&self) -> String {
+        let mut s = self.interactive.brief(RequestClass::Interactive.short());
+        s.push_str(&self.batch.brief(RequestClass::Batch.short()));
+        s
+    }
 }
 
 /// Aggregate serving counters for one handle.
@@ -288,6 +520,24 @@ pub struct ServeStats {
     /// Copy-on-write page copies taken when a forked sequence diverged
     /// inside a shared page (cumulative).
     pub cow_copies: u64,
+    /// Per-class SLO accounting (lanes).
+    pub per_class: ClassPair,
+    /// Queued batch requests evicted (degraded) by interactive admissions
+    /// under a saturated queue — the middle rung of the degradation
+    /// ladder (shed → evict-batch → degrade).
+    pub evicted: usize,
+    /// Batch requests dispatched via the starvation-bound bypass while
+    /// interactive work was waiting.
+    pub lane_bypasses: usize,
+    /// Streaming: tokens discarded by the `DropOldest` policy or a
+    /// disconnected stream.
+    pub tokens_dropped: u64,
+    /// Streaming: producer-side stalls on a full bounded channel under
+    /// the `Block` policy.
+    pub consumer_stalls: u64,
+    /// Streaming: channels severed by policy (`Disconnect` overflow or a
+    /// `Block` deadline timeout).
+    pub streams_disconnected: u64,
 }
 
 impl ServeStats {
@@ -350,10 +600,25 @@ impl ServeStats {
         } else {
             String::new()
         };
+        let mut lanes = self.per_class.brief();
+        if self.lane_bypasses > 0 {
+            lanes.push_str(&format!(" | bypass {}", self.lane_bypasses));
+        }
+        let streamc = if self.tokens_dropped > 0
+            || self.consumer_stalls > 0
+            || self.streams_disconnected > 0
+        {
+            format!(
+                " | stream drop {} stall {} disc {}",
+                self.tokens_dropped, self.consumer_stalls, self.streams_disconnected
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{:<10} {} | busy {:.1} req/s {:.0} gen-tok/s | \
              lat p50 {:.0}ms p95 {:.0}ms p99 {:.0}ms (wait p50 {:.0}ms exec p50 {:.0}ms) | \
-             ttft p50 {:.0}ms | {} | compile {:.0}ms{paged}",
+             ttft p50 {:.0}ms | {} | compile {:.0}ms{paged}{lanes}{streamc}",
             self.fwd_key,
             shape,
             self.req_per_sec(),
@@ -372,6 +637,7 @@ impl ServeStats {
 
 struct Pending {
     prompt: Vec<i32>,
+    class: RequestClass,
     submitted: Instant,
 }
 
@@ -379,12 +645,14 @@ struct Pending {
 struct Queued {
     id: u64,
     prompt: Vec<i32>,
+    class: RequestClass,
     submitted: Instant,
 }
 
 /// One in-flight continuous-scheduler row.
 struct Slot {
     id: u64,
+    class: RequestClass,
     /// Full seq_len row (prompt + generated so far, PAD tail).
     row: Vec<i32>,
     frontier: usize,
@@ -393,6 +661,9 @@ struct Slot {
     ttft_ms: f64,
     last_token: Instant,
     gen: usize,
+    /// Per-request sampling stream ([`request_rng`]): owned by the slot
+    /// so admission order cannot leak into another request's tokens.
+    rng: Rng,
 }
 
 enum Sched {
@@ -400,8 +671,13 @@ enum Sched {
     Continuous {
         session: Box<dyn DecodeSession>,
         slots: Vec<Option<Slot>>,
-        queue: VecDeque<Queued>,
-        rng: Rng,
+        /// Priority lanes ([`take_batch_lane`] picks between them):
+        /// interactive ahead of batch, bounded by the starvation bound.
+        lane_int: VecDeque<Queued>,
+        lane_bat: VecDeque<Queued>,
+        /// Consecutive interactive admissions taken while batch work was
+        /// waiting (resets on a batch dispatch or an empty batch lane).
+        since_bypass: usize,
         scratch: SampleScratch,
         logits: Vec<f32>,
         /// Decode rounds since the scheduler was last fully idle — an
@@ -422,6 +698,23 @@ enum Sched {
     },
 }
 
+/// Bounded per-request token channels for the continuous scheduler. The
+/// serving runtime is single-threaded, so the handle is both producer
+/// (decode loop) and relay (drains channels to the sink/JSONL *between*
+/// decode rounds). The bound + policy still matter: a stalled sink
+/// consumes its delay in the relay, never inside a round, and under
+/// `DropOldest`/`Disconnect` the backlog is clipped instead of growing.
+/// The fleet reuses the same channels across the worker boundary, where
+/// they decouple producer and consumer threads outright.
+struct StreamSet {
+    cap: usize,
+    policy: SlowConsumer,
+    /// Live channels by request id (created on first token, removed at
+    /// finish) — bounded by the slot width, and a BTreeMap so the relay
+    /// order is deterministic.
+    chans: BTreeMap<u64, (BoundedTx<TokenEvent>, BoundedRx<TokenEvent>)>,
+}
+
 /// A live server over one (model, fwd artifact, weights) binding.
 pub struct ServeHandle<'e> {
     engine: &'e Engine,
@@ -435,18 +728,51 @@ pub struct ServeHandle<'e> {
     /// Coalescing deadline, reused as the retry-after floor when the
     /// execute window is still empty.
     max_batch_delay_ms: f64,
+    starvation_bound: usize,
     completed: Vec<ServeResponse>,
     stats: ServeStats,
     telemetry: Option<JsonlAppender>,
     /// Stream per-token `token` events into the telemetry JSONL.
     stream: bool,
     on_token: Option<TokenSink>,
+    /// `Some` when buffered streaming is on (`stream_buf > 0` and there
+    /// is a sink or JSONL stream to feed); `None` falls back to the
+    /// legacy synchronous delivery inside the decode loop.
+    streams: Option<StreamSet>,
 }
 
-/// Surface one generated token as it lands: invoke the configured sink,
-/// then (when streaming is on) append a JSONL `token` event. Free
-/// function so scheduler methods can call it while `sched` is borrowed.
+/// Deliver one token event to the configured sink and (when streaming is
+/// on) the telemetry JSONL — the consumer side of the bounded channels.
+fn deliver_token(
+    telemetry: &mut Option<JsonlAppender>,
+    on_token: &Option<TokenSink>,
+    stream: bool,
+    ev: &TokenEvent,
+) {
+    if let Some(sink) = on_token {
+        (sink.0)(ev);
+    }
+    if stream {
+        if let Some(tel) = telemetry.as_mut() {
+            let _ = tel.append(&Json::obj(vec![
+                ("event", Json::Str("token".into())),
+                ("id", Json::Num(ev.id as f64)),
+                ("token", Json::Num(ev.token as f64)),
+                ("index", Json::Num(ev.index as f64)),
+            ]));
+        }
+    }
+}
+
+/// Surface one generated token: queue it on the request's bounded channel
+/// (created on first use), or fall back to synchronous delivery when
+/// buffered streaming is off. Under `Block` with a full buffer the
+/// channel is relayed inline and the push retried — the blocking
+/// semantics land on the producer, as configured, instead of deadlocking
+/// a single-threaded scheduler against itself. Free function so
+/// scheduler methods can call it while `sched` is borrowed.
 fn emit_token(
+    streams: &mut Option<StreamSet>,
     telemetry: &mut Option<JsonlAppender>,
     on_token: &Option<TokenSink>,
     stream: bool,
@@ -454,18 +780,50 @@ fn emit_token(
     token: i32,
     index: usize,
 ) {
-    if let Some(sink) = on_token {
-        (sink.0)(&TokenEvent { id, token, index, worker: 0, attempt: 0 });
+    if !stream && on_token.is_none() {
+        return;
     }
-    if stream {
-        if let Some(tel) = telemetry.as_mut() {
-            let _ = tel.append(&Json::obj(vec![
-                ("event", Json::Str("token".into())),
-                ("id", Json::Num(id as f64)),
-                ("token", Json::Num(token as f64)),
-                ("index", Json::Num(index as f64)),
-            ]));
+    let ev = TokenEvent { id, token, index, worker: 0, attempt: 0 };
+    let Some(set) = streams.as_mut() else {
+        deliver_token(telemetry, on_token, stream, &ev);
+        return;
+    };
+    let (tx, rx) = set.chans.entry(id).or_insert_with(|| bounded(set.cap, set.policy));
+    match tx.try_push(ev) {
+        Ok(_) => {}
+        Err(ev) => {
+            // full under Block: drain this channel to the sink to make
+            // room, then store (never fails twice — the buffer has space)
+            while let Some(queued) = rx.try_recv() {
+                deliver_token(telemetry, on_token, stream, &queued);
+            }
+            let _ = tx.try_push(ev);
         }
+    }
+}
+
+/// Drain one request's channel to the sink/JSONL, fold its slow-consumer
+/// counters into `stats`, and drop it. Called when the request resolves,
+/// before its terminal `request` event is appended.
+fn close_stream(
+    streams: &mut Option<StreamSet>,
+    telemetry: &mut Option<JsonlAppender>,
+    on_token: &Option<TokenSink>,
+    stream: bool,
+    stats: &mut ServeStats,
+    id: u64,
+) {
+    let Some(set) = streams.as_mut() else { return };
+    let Some((tx, rx)) = set.chans.remove(&id) else { return };
+    tx.close();
+    while let Some(ev) = rx.try_recv() {
+        deliver_token(telemetry, on_token, stream, &ev);
+    }
+    let st = rx.stats();
+    stats.tokens_dropped += st.dropped;
+    stats.consumer_stalls += st.stalls;
+    if st.disconnected {
+        stats.streams_disconnected += 1;
     }
 }
 
@@ -477,6 +835,7 @@ fn finish_request(
     completed: &mut Vec<ServeResponse>,
     telemetry: &mut Option<JsonlAppender>,
     id: u64,
+    class: RequestClass,
     row: Vec<i32>,
     gen_tokens: usize,
     submitted: Instant,
@@ -491,6 +850,12 @@ fn finish_request(
     stats.gen_tokens += gen_tokens;
     stats.latencies_ms.push(latency_ms);
     stats.execute_ms.push(execute_ms);
+    let cs = stats.per_class.get_mut(class);
+    cs.requests += 1;
+    cs.gen_tokens += gen_tokens;
+    cs.ttft_ms.push(ttft_ms);
+    cs.latencies_ms.push(latency_ms);
+    cs.observe_exec(execute_ms);
     if error.is_some() {
         stats.degraded += 1;
     }
@@ -498,6 +863,7 @@ fn finish_request(
         let mut fields = vec![
             ("event", Json::Str("request".into())),
             ("id", Json::Num(id as f64)),
+            ("class", Json::Str(class.label().into())),
             ("ttft_ms", Json::Num(ttft_ms)),
             ("latency_ms", Json::Num(latency_ms)),
             ("gen_tokens", Json::Num(gen_tokens as f64)),
@@ -547,14 +913,15 @@ impl<'e> ServeHandle<'e> {
             let opened =
                 engine.open_decode_opts(&rt.model, fwd_key, &weights_buf, width, &decode_opts)?;
             if let Some(mut session) = opened {
-                let mut rng = Rng::new(cfg.sample.seed ^ 0x5a5a_1234);
                 if cfg.warmup {
                     // exercise weight pre-quantization + one prefill/sample
+                    // (the warm-up RNG is local — real requests each get
+                    // their own request_rng stream)
+                    let mut rng = Rng::new(cfg.sample.seed ^ 0x5a5a_1234);
                     let mut logits = Vec::new();
                     session.prefill(0, &[tok::BOS], &mut logits)?;
                     let mut scratch = SampleScratch::default();
                     let _ = sample_token_with(&cfg.sample, &mut rng, &logits, &mut scratch);
-                    rng = Rng::new(cfg.sample.seed ^ 0x5a5a_1234);
                     // return the warm-up row's pages to the free list so
                     // the first real admission starts from a clean pool
                     session.close(0)?;
@@ -562,8 +929,9 @@ impl<'e> ServeHandle<'e> {
                 sched = Some(Sched::Continuous {
                     session,
                     slots: (0..width).map(|_| None).collect(),
-                    queue: VecDeque::new(),
-                    rng,
+                    lane_int: VecDeque::new(),
+                    lane_bat: VecDeque::new(),
+                    since_bypass: 0,
                     scratch: SampleScratch::default(),
                     logits: Vec::new(),
                     rounds_in_flight: 0,
@@ -620,6 +988,16 @@ impl<'e> ServeHandle<'e> {
             ]));
         }
 
+        let wants_stream = cfg.stream || cfg.on_token.is_some();
+        let streams = if continuous && cfg.stream_buf > 0 && wants_stream {
+            Some(StreamSet {
+                cap: cfg.stream_buf,
+                policy: cfg.slow_consumer,
+                chans: BTreeMap::new(),
+            })
+        } else {
+            None
+        };
         Ok(ServeHandle {
             engine,
             seq_len: rt.model.seq_len,
@@ -630,11 +1008,13 @@ impl<'e> ServeHandle<'e> {
             next_id: 0,
             max_queue: cfg.max_queue,
             max_batch_delay_ms: cfg.max_batch_delay_ms.max(0.0),
+            starvation_bound: cfg.starvation_bound,
             completed: Vec::new(),
             stats: ServeStats { fwd_key: fwd_key.to_string(), compile_ms, ..Default::default() },
             telemetry,
             stream: cfg.stream,
             on_token: cfg.on_token.clone(),
+            streams,
         })
     }
 
@@ -651,23 +1031,91 @@ impl<'e> ServeHandle<'e> {
         }
     }
 
-    /// Backpressure hint for a [`Saturated`] rejection: outstanding work
-    /// times the observed per-request service time (execute-window mean),
-    /// floored by the coalescing delay so a cold window still suggests a
-    /// real wait.
-    fn retry_after_hint(&self) -> f64 {
-        let per_req = self.stats.execute_ms.mean();
-        let outstanding = (self.queued() + self.in_flight()) as f64;
-        (outstanding * per_req).max(self.max_batch_delay_ms).max(1.0)
+    /// Queue depths per lane (coalescing mode has a single FIFO lane,
+    /// reported as interactive).
+    fn lane_depths(&self) -> (usize, usize) {
+        match &self.sched {
+            Sched::Continuous { lane_int, lane_bat, .. } => (lane_int.len(), lane_bat.len()),
+            Sched::Coalescing { coalescer, .. } => (coalescer.len(), 0),
+        }
     }
 
-    /// Enqueue one request. Continuous mode admits it into a free slot
-    /// immediately (prefill + first token); the coalescing fallback
-    /// flushes inline whenever a full batch forms. Returns the request id
-    /// (matched by `ServeResponse::id`). When `cfg.max_queue` is set and
-    /// that many requests are already queued, returns the typed
-    /// [`Saturated`] error instead of enqueueing.
+    /// Backpressure hint for a [`Saturated`] rejection: the backlog this
+    /// class must wait out times its observed per-request service time —
+    /// the per-class execute EWMA, falling back to the global execute
+    /// mean while the class is cold, floored by the coalescing delay so
+    /// an empty window still suggests a real wait.
+    fn retry_after_hint(&self, class: RequestClass) -> f64 {
+        let (int_depth, bat_depth) = self.lane_depths();
+        class_retry_hint(
+            class,
+            int_depth,
+            bat_depth,
+            self.in_flight(),
+            self.stats.per_class.get(class).exec_ewma_ms,
+            self.stats.execute_ms.mean(),
+            self.max_batch_delay_ms,
+        )
+    }
+
+    /// Degradation-ladder step: resolve the youngest queued batch request
+    /// as evicted (degraded, zero tokens) to make room for an interactive
+    /// arrival under a saturated queue. Returns false when no batch work
+    /// is queued (the coalescing fallback has no lanes to evict from).
+    fn evict_youngest_batch(&mut self) -> bool {
+        let q = match &mut self.sched {
+            Sched::Continuous { lane_bat, .. } => lane_bat.pop_back(),
+            Sched::Coalescing { .. } => None,
+        };
+        let Some(q) = q else { return false };
+        let now = Instant::now();
+        self.stats.evicted += 1;
+        self.stats.per_class.batch.evicted += 1;
+        if let Some(tel) = self.telemetry.as_mut() {
+            let _ = tel.append(&Json::obj(vec![
+                ("event", Json::Str("evict".into())),
+                ("id", Json::Num(q.id as f64)),
+                ("class", Json::Str(RequestClass::Batch.label().into())),
+            ]));
+        }
+        let mut row = vec![tok::PAD; self.seq_len];
+        for (dst, src) in row.iter_mut().zip(q.prompt.iter()) {
+            *dst = *src;
+        }
+        let waited_ms = now.duration_since(q.submitted).as_secs_f64() * 1000.0;
+        finish_request(
+            &mut self.stats,
+            &mut self.completed,
+            &mut self.telemetry,
+            q.id,
+            RequestClass::Batch,
+            row,
+            0,
+            q.submitted,
+            now,
+            waited_ms,
+            Some("evicted by interactive admission under saturation".into()),
+            now,
+        );
+        true
+    }
+
+    /// Enqueue one request as [`RequestClass::Interactive`] (see
+    /// [`submit_class`](Self::submit_class)).
     pub fn submit(&mut self, prompt: Vec<i32>) -> Result<u64> {
+        self.submit_class(prompt, RequestClass::Interactive)
+    }
+
+    /// Enqueue one request under an explicit SLO class. Continuous mode
+    /// admits it into a free slot immediately (prefill + first token);
+    /// the coalescing fallback flushes inline whenever a full batch
+    /// forms. Returns the request id (matched by `ServeResponse::id`).
+    /// When `cfg.max_queue` is set and that many requests are already
+    /// queued, applies the degradation ladder: an interactive arrival
+    /// first evicts the youngest queued batch request (when lanes are
+    /// enabled); otherwise the submission is shed with the typed
+    /// [`Saturated`] error carrying a per-class retry hint.
+    pub fn submit_class(&mut self, prompt: Vec<i32>, class: RequestClass) -> Result<u64> {
         let seq_len = self.seq_len;
         if prompt.is_empty() {
             bail!("prompt is empty (need at least one token)");
@@ -687,6 +1135,7 @@ impl<'e> ServeHandle<'e> {
                 &mut self.completed,
                 &mut self.telemetry,
                 id,
+                class,
                 row,
                 0,
                 now,
@@ -700,26 +1149,37 @@ impl<'e> ServeHandle<'e> {
             return Ok(id);
         }
         if self.max_queue > 0 && self.queued() >= self.max_queue {
-            self.stats.shed += 1;
-            let hint = self.retry_after_hint();
-            if let Some(tel) = self.telemetry.as_mut() {
-                let _ = tel.append(&Json::obj(vec![
-                    ("event", Json::Str("reject".into())),
-                    ("queued", Json::Num(self.max_queue as f64)),
-                    ("retry_after_ms", Json::Num(hint)),
-                ]));
+            let evicted = class == RequestClass::Interactive
+                && self.starvation_bound > 0
+                && self.evict_youngest_batch();
+            if !evicted {
+                self.stats.shed += 1;
+                self.stats.per_class.get_mut(class).shed += 1;
+                let hint = self.retry_after_hint(class);
+                if let Some(tel) = self.telemetry.as_mut() {
+                    let _ = tel.append(&Json::obj(vec![
+                        ("event", Json::Str("reject".into())),
+                        ("class", Json::Str(class.label().into())),
+                        ("queued", Json::Num(self.max_queue as f64)),
+                        ("retry_after_ms", Json::Num(hint)),
+                    ]));
+                }
+                return Err(Saturated { retry_after_ms: hint }.into());
             }
-            return Err(Saturated { retry_after_ms: hint }.into());
         }
         let id = self.next_id;
         self.next_id += 1;
         let now = Instant::now();
         match &mut self.sched {
-            Sched::Continuous { queue, .. } => {
-                queue.push_back(Queued { id, prompt, submitted: now });
+            Sched::Continuous { lane_int, lane_bat, .. } => {
+                let q = Queued { id, prompt, class, submitted: now };
+                match class {
+                    RequestClass::Interactive => lane_int.push_back(q),
+                    RequestClass::Batch => lane_bat.push_back(q),
+                }
             }
             Sched::Coalescing { coalescer, pending, .. } => {
-                pending.insert(id, Pending { prompt, submitted: now });
+                pending.insert(id, Pending { prompt, class, submitted: now });
                 coalescer.push(id, now);
             }
         }
@@ -728,6 +1188,7 @@ impl<'e> ServeHandle<'e> {
         } else {
             self.dispatch(false)?;
         }
+        self.relay_streams();
         self.sync_paged();
         Ok(id)
     }
@@ -741,11 +1202,13 @@ impl<'e> ServeHandle<'e> {
             let before = self.completed.len();
             self.admit()?;
             self.step_round()?;
+            self.relay_streams();
             self.admit()?;
             self.completed.len() - before
         } else {
             self.dispatch(false)?
         };
+        self.relay_streams();
         self.sync_paged();
         Ok(n)
     }
@@ -760,12 +1223,26 @@ impl<'e> ServeHandle<'e> {
                     break;
                 }
                 self.step_round()?;
+                self.relay_streams();
             }
         } else {
             self.dispatch(true)?;
         }
+        self.relay_streams();
         self.sync_paged();
         Ok(std::mem::take(&mut self.completed))
+    }
+
+    /// Drain every live token channel to the sink/JSONL. Runs *between*
+    /// decode rounds — a stalled sink spends its delay here, never inside
+    /// a round where it would hold up slot-mates.
+    fn relay_streams(&mut self) {
+        let Some(set) = self.streams.as_mut() else { return };
+        for (_tx, rx) in set.chans.values() {
+            while let Some(ev) = rx.try_recv() {
+                deliver_token(&mut self.telemetry, &self.on_token, self.stream, &ev);
+            }
+        }
     }
 
     /// Copy the decode session's paged-state counters into `stats`
@@ -783,29 +1260,31 @@ impl<'e> ServeHandle<'e> {
     }
 
     pub fn queued(&self) -> usize {
-        match &self.sched {
-            Sched::Continuous { queue, .. } => queue.len(),
-            Sched::Coalescing { coalescer, .. } => coalescer.len(),
-        }
+        let (int_depth, bat_depth) = self.lane_depths();
+        int_depth + bat_depth
     }
 
     pub fn stats(&self) -> &ServeStats {
         &self.stats
     }
 
-    /// Admit queued requests into free slots: prefill the prompt, sample
-    /// the first token (TTFT), and either park the row in the slot or —
-    /// for EOS/length-1 completions — finish it on the spot. A failed
-    /// prefill finishes that one request with `error` set; the scheduler
-    /// and every other slot keep running.
+    /// Admit queued requests into free slots: pick a lane (interactive
+    /// first, bounded by the starvation bypass), prefill the prompt,
+    /// sample the first token (TTFT) from the request's own RNG stream,
+    /// and either park the row in the slot or — for EOS/length-1
+    /// completions — finish it on the spot. A failed prefill finishes
+    /// that one request with `error` set; the scheduler and every other
+    /// slot keep running.
     fn admit(&mut self) -> Result<usize> {
         let mut admitted = 0usize;
         loop {
+            let bound = self.starvation_bound;
             let Sched::Continuous {
                 session,
                 slots,
-                queue,
-                rng,
+                lane_int,
+                lane_bat,
+                since_bypass,
                 scratch,
                 logits,
                 rounds_in_flight,
@@ -817,16 +1296,39 @@ impl<'e> ServeHandle<'e> {
                 return Ok(admitted);
             };
             let any_active = slots.iter().any(|s| s.is_some());
-            let Some(q) = queue.pop_front() else {
+            let take_bat = take_batch_lane(
+                lane_int.front().map(|q| q.id),
+                lane_bat.front().map(|q| q.id),
+                bound,
+                *since_bypass,
+            );
+            let q = if take_bat {
+                if bound > 0 && !lane_int.is_empty() {
+                    // a waiting interactive request was passed over: this
+                    // is the starvation bound doing its job
+                    self.stats.lane_bypasses += 1;
+                }
+                *since_bypass = 0;
+                lane_bat.pop_front()
+            } else {
+                if lane_bat.is_empty() {
+                    *since_bypass = 0;
+                } else {
+                    *since_bypass += 1;
+                }
+                lane_int.pop_front()
+            };
+            let Some(q) = q else {
                 return Ok(admitted);
             };
             let t0 = Instant::now();
             let np = q.prompt.len().min(self.seq_len - 1);
             // np <= prompt.len() by construction, so get() always hits
             let prompt = q.prompt.get(..np).unwrap_or(&q.prompt);
+            let mut rng = request_rng(self.sample.seed, q.id);
             let prefill = session.prefill(slot_idx, prompt, logits);
             let next = match &prefill {
-                Ok(()) => sample_token_with(&self.sample, rng, logits, scratch),
+                Ok(()) => sample_token_with(&self.sample, &mut rng, logits, scratch),
                 Err(_) => tok::EOS,
             };
             let now = Instant::now();
@@ -852,6 +1354,7 @@ impl<'e> ServeHandle<'e> {
                     &mut self.completed,
                     &mut self.telemetry,
                     q.id,
+                    q.class,
                     row,
                     0,
                     q.submitted,
@@ -871,6 +1374,7 @@ impl<'e> ServeHandle<'e> {
                     &mut self.completed,
                     &mut self.telemetry,
                     q.id,
+                    q.class,
                     row,
                     0,
                     q.submitted,
@@ -884,14 +1388,31 @@ impl<'e> ServeHandle<'e> {
             if let Some(cell) = row.get_mut(np) {
                 *cell = next;
             }
-            emit_token(&mut self.telemetry, &self.on_token, self.stream, q.id, next, 0);
+            emit_token(
+                &mut self.streams,
+                &mut self.telemetry,
+                &self.on_token,
+                self.stream,
+                q.id,
+                next,
+                0,
+            );
             if next == tok::EOS || np + 1 >= self.seq_len || self.sample.max_new == 1 {
                 let _ = session.close(slot_idx);
+                close_stream(
+                    &mut self.streams,
+                    &mut self.telemetry,
+                    &self.on_token,
+                    self.stream,
+                    &mut self.stats,
+                    q.id,
+                );
                 finish_request(
                     &mut self.stats,
                     &mut self.completed,
                     &mut self.telemetry,
                     q.id,
+                    q.class,
                     row,
                     1,
                     q.submitted,
@@ -903,6 +1424,7 @@ impl<'e> ServeHandle<'e> {
             } else if let Some(slot) = slots.get_mut(slot_idx) {
                 *slot = Some(Slot {
                     id: q.id,
+                    class: q.class,
                     row,
                     frontier: np + 1,
                     submitted: q.submitted,
@@ -910,6 +1432,7 @@ impl<'e> ServeHandle<'e> {
                     ttft_ms,
                     last_token: now,
                     gen: 1,
+                    rng,
                 });
             }
         }
@@ -920,7 +1443,7 @@ impl<'e> ServeHandle<'e> {
     /// failed step finishes that one slot's request with `error` set and
     /// leaves every other slot running.
     fn step_round(&mut self) -> Result<usize> {
-        let Sched::Continuous { session, slots, rng, scratch, logits, rounds_in_flight, .. } =
+        let Sched::Continuous { session, slots, scratch, logits, rounds_in_flight, .. } =
             &mut self.sched
         else {
             return Ok(0);
@@ -941,16 +1464,18 @@ impl<'e> ServeHandle<'e> {
                 None => continue,
             };
             let stepped = session.step(idx, last_tok, logits);
+            let Some(slot) = slots.get_mut(idx).and_then(|s| s.as_mut()) else { continue };
             let mut error: Option<String> = None;
+            // sample from the slot's own request_rng stream, so slot-mates
+            // and scheduling order cannot perturb this request's tokens
             let next = match &stepped {
-                Ok(()) => sample_token_with(&self.sample, rng, logits, scratch),
+                Ok(()) => sample_token_with(&self.sample, &mut slot.rng, logits, scratch),
                 Err(e) => {
                     error = Some(format!("decode step failed: {e:#}"));
                     tok::EOS
                 }
             };
             let now = Instant::now();
-            let Some(slot) = slots.get_mut(idx).and_then(|s| s.as_mut()) else { continue };
             self.stats
                 .inter_token_ms
                 .push(now.duration_since(slot.last_token).as_secs_f64() * 1000.0);
@@ -962,7 +1487,15 @@ impl<'e> ServeHandle<'e> {
                 slot.frontier += 1;
                 slot.gen += 1;
                 let (id, idx0) = (slot.id, slot.gen - 1);
-                emit_token(&mut self.telemetry, &self.on_token, self.stream, id, next, idx0);
+                emit_token(
+                    &mut self.streams,
+                    &mut self.telemetry,
+                    &self.on_token,
+                    self.stream,
+                    id,
+                    next,
+                    idx0,
+                );
             }
             // same per-request cap as the stateless path: at most max_new
             // generated tokens (EOS / sequence end finish earlier); an
@@ -974,11 +1507,20 @@ impl<'e> ServeHandle<'e> {
             {
                 if let Some(sl) = slots.get_mut(idx).and_then(|s| s.take()) {
                     let _ = session.close(idx);
+                    close_stream(
+                        &mut self.streams,
+                        &mut self.telemetry,
+                        &self.on_token,
+                        self.stream,
+                        &mut self.stats,
+                        sl.id,
+                    );
                     finish_request(
                         &mut self.stats,
                         &mut self.completed,
                         &mut self.telemetry,
                         sl.id,
+                        sl.class,
                         sl.row,
                         sl.gen,
                         sl.submitted,
@@ -1031,11 +1573,13 @@ impl<'e> ServeHandle<'e> {
         let mut kept = Vec::with_capacity(ids.len());
         let mut prompts = Vec::with_capacity(ids.len());
         let mut submitted = Vec::with_capacity(ids.len());
+        let mut classes = Vec::with_capacity(ids.len());
         for id in ids {
             let Some(p) = pending.remove(id) else { continue };
             kept.push(*id);
             prompts.push(p.prompt);
             submitted.push(p.submitted);
+            classes.push(p.class);
         }
         if kept.is_empty() {
             return Ok(());
@@ -1047,8 +1591,8 @@ impl<'e> ServeHandle<'e> {
 
         let mut batch_tokens = 0usize;
         let mut max_wait_ms = 0f64;
-        for (((row, id), prompt), sub) in
-            rows.into_iter().zip(&kept).zip(&prompts).zip(&submitted)
+        for ((((row, id), prompt), sub), class) in
+            rows.into_iter().zip(&kept).zip(&prompts).zip(&submitted).zip(&classes)
         {
             let gen_tokens = row.iter().skip(prompt.len()).filter(|&&t| t != tok::PAD).count();
             batch_tokens += gen_tokens;
@@ -1062,6 +1606,12 @@ impl<'e> ServeHandle<'e> {
             self.stats.execute_ms.push(batch_ms);
             // first token surfaces only at batch completion here
             self.stats.ttft_ms.push(latency_ms);
+            let cs = self.stats.per_class.get_mut(*class);
+            cs.requests += 1;
+            cs.gen_tokens += gen_tokens;
+            cs.ttft_ms.push(latency_ms);
+            cs.latencies_ms.push(latency_ms);
+            cs.observe_exec(batch_ms);
             self.completed.push(ServeResponse {
                 id: *id,
                 row,
@@ -1275,5 +1825,139 @@ mod tests {
         assert!(s.contains("3 reqs / 5 rounds (+1 mid-gen)"), "{s}");
         assert!(s.contains("occ 0.75"), "{s}");
         assert!(s.contains("ttft p50 3ms"), "{s}");
+    }
+
+    #[test]
+    fn request_class_defaults_to_interactive() {
+        assert_eq!(RequestClass::default(), RequestClass::Interactive);
+        assert_eq!(RequestClass::Interactive.label(), "interactive");
+        assert_eq!(RequestClass::Batch.label(), "batch");
+        assert_eq!(RequestClass::ALL.len(), 2);
+    }
+
+    #[test]
+    fn request_rng_streams_are_keyed_on_seed_and_id_only() {
+        // same (seed, id) -> identical stream; either input changing
+        // decorrelates it
+        let mut ra = request_rng(7, 3);
+        let mut rb = request_rng(7, 3);
+        let a: Vec<u64> = (0..4).map(|_| ra.next_u64()).collect();
+        let b: Vec<u64> = (0..4).map(|_| rb.next_u64()).collect();
+        assert_eq!(a, b);
+        assert_ne!(request_rng(7, 3).next_u64(), request_rng(7, 4).next_u64());
+        assert_ne!(request_rng(7, 3).next_u64(), request_rng(8, 3).next_u64());
+    }
+
+    #[test]
+    fn lanes_disabled_is_strict_submission_order() {
+        // bound 0: the older front id wins regardless of class
+        assert!(!take_batch_lane(Some(3), Some(5), 0, 99));
+        assert!(take_batch_lane(Some(6), Some(5), 0, 0));
+        // single-lane cases are class-blind
+        assert!(!take_batch_lane(Some(1), None, 0, 0));
+        assert!(take_batch_lane(None, Some(1), 0, 0));
+    }
+
+    #[test]
+    fn starvation_bound_bypasses_batch_every_k_interactive_dispatches() {
+        // replicate the admit-loop counter discipline over synthetic
+        // lanes: bound 2 -> two interactive dispatches, then one batch
+        // bypass, repeating; the tail drains whichever lane remains
+        let bound = 2;
+        let mut lane_int: VecDeque<u64> = (0..6).collect();
+        let mut lane_bat: VecDeque<u64> = (100..103).collect();
+        let mut since = 0usize;
+        let mut order = Vec::new();
+        let mut bypasses = 0usize;
+        while !(lane_int.is_empty() && lane_bat.is_empty()) {
+            let take_bat = take_batch_lane(
+                lane_int.front().copied(),
+                lane_bat.front().copied(),
+                bound,
+                since,
+            );
+            if take_bat {
+                if bound > 0 && !lane_int.is_empty() {
+                    bypasses += 1;
+                }
+                since = 0;
+                order.push(lane_bat.pop_front().unwrap());
+            } else {
+                if lane_bat.is_empty() {
+                    since = 0;
+                } else {
+                    since += 1;
+                }
+                order.push(lane_int.pop_front().unwrap());
+            }
+        }
+        assert_eq!(order, vec![0, 1, 100, 2, 3, 101, 4, 5, 102]);
+        // only bypasses taken while interactive work waited are counted:
+        // 102 drains from an empty interactive lane, so exactly two
+        assert_eq!(bypasses, 2);
+    }
+
+    #[test]
+    fn class_retry_hints_differ_under_the_same_queue_state() {
+        // satellite: both classes, same queue (2 interactive + 3 batch
+        // queued, 1 in flight), distinct per-class service estimates
+        let int =
+            class_retry_hint(RequestClass::Interactive, 2, 3, 1, 10.0, 40.0, 0.0);
+        let bat = class_retry_hint(RequestClass::Batch, 2, 3, 1, 80.0, 40.0, 0.0);
+        // interactive waits on its own lane + in-flight only: 3 * 10ms
+        assert_eq!(int, 30.0);
+        // batch waits on both lanes + in-flight at its own rate: 6 * 80ms
+        assert_eq!(bat, 480.0);
+        // a cold class EWMA falls back to the global estimate
+        assert_eq!(
+            class_retry_hint(RequestClass::Interactive, 2, 3, 1, 0.0, 40.0, 0.0),
+            120.0
+        );
+        // floor applies when the queue is empty
+        assert_eq!(class_retry_hint(RequestClass::Batch, 0, 0, 0, 10.0, 0.0, 25.0), 25.0);
+        assert_eq!(class_retry_hint(RequestClass::Batch, 0, 0, 0, 0.0, 0.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn class_stats_deadline_hit_rate_and_exec_ewma() {
+        let mut cs = ClassStats::default();
+        assert_eq!(cs.deadline_hit_rate(), 1.0, "no deadline tracked -> vacuous hit");
+        cs.deadline_hits = 3;
+        cs.deadline_misses = 1;
+        assert!((cs.deadline_hit_rate() - 0.75).abs() < 1e-12);
+        // first observation seeds the EWMA; later ones decay 0.9/0.1
+        cs.observe_exec(100.0);
+        assert_eq!(cs.exec_ewma_ms, 100.0);
+        cs.observe_exec(200.0);
+        assert!((cs.exec_ewma_ms - 110.0).abs() < 1e-9);
+        // non-finite and negative samples are dropped
+        cs.observe_exec(f64::NAN);
+        cs.observe_exec(-5.0);
+        assert!((cs.exec_ewma_ms - 110.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_reports_lane_and_stream_clauses() {
+        let mut stats = ServeStats::default();
+        stats.requests = 5;
+        stats.decode_rounds = 9;
+        stats.per_class.interactive.requests = 3;
+        stats.per_class.interactive.ttft_ms.push(4.0);
+        stats.per_class.batch.requests = 2;
+        stats.per_class.batch.shed = 1;
+        stats.per_class.batch.evicted = 2;
+        stats.lane_bypasses = 3;
+        stats.tokens_dropped = 7;
+        stats.consumer_stalls = 1;
+        let s = stats.summary();
+        assert!(s.contains("int 3 ttft p99 4ms"), "{s}");
+        assert!(s.contains("bat 2"), "{s}");
+        assert!(s.contains("shed 1 evict 2"), "{s}");
+        assert!(s.contains("bypass 3"), "{s}");
+        assert!(s.contains("stream drop 7 stall 1 disc 0"), "{s}");
+        // idle classes and a clean stream add no clauses
+        let idle = ServeStats::default().summary();
+        assert!(!idle.contains("int "), "{idle}");
+        assert!(!idle.contains("stream drop"), "{idle}");
     }
 }

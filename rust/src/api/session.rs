@@ -347,6 +347,9 @@ impl<'s> ModelSession<'s> {
     /// the backend supports stateful decode (see `ServeCfg::decode`),
     /// batch coalescing otherwise — resolving the weight source through
     /// this session (teacher cache, recovered checkpoints, random init).
+    /// Overload behavior (priority lanes, per-class admission, bounded
+    /// token streaming) is configured on [`ServeCfg`]: `starvation_bound`,
+    /// `stream_buf`, `slow_consumer`.
     pub fn server(&self, fwd_key: &str, cfg: &ServeCfg) -> Result<ServeHandle<'s>> {
         let weights = match &cfg.weights {
             ServeWeights::Random { seed } => crate::coordinator::init_params(&self.rt.model, *seed),
@@ -366,7 +369,10 @@ impl<'s> ModelSession<'s> {
     /// retry. Weights resolve through this session exactly like
     /// [`ModelSession::server`]; each worker rebuilds its own engine
     /// from the manifest root (engines cannot cross threads). Requires
-    /// a stateful-decode backend.
+    /// a stateful-decode backend. The router shares the serve layer's
+    /// overload machinery: per-class lanes with a starvation bound,
+    /// batch eviction under queue-cap pressure, and bounded per-request
+    /// token channels (see [`FleetCfg`]).
     pub fn fleet(&self, fwd_key: &str, cfg: &FleetCfg) -> Result<FleetHandle> {
         if self.rt.model.vision {
             bail!("fleet serving supports text models (got VLM {:?})", self.rt.model.name);

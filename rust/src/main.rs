@@ -12,7 +12,7 @@ use std::time::Instant;
 use qadx::api::cli::{
     self, EvalArgs, PilotArgs, RecoverArgs, ServeBenchArgs, SessionArgs,
 };
-use qadx::api::{FleetCfg, Saturated, ServeCfg};
+use qadx::api::{FleetCfg, RequestClass, Saturated, ServeCfg, TokenSink};
 use qadx::coordinator::RecoveryCfg;
 use qadx::data::{tasks, SourceSpec, Suite};
 use qadx::eval::EvalCfg;
@@ -222,8 +222,12 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
         })
         .collect();
 
+    // Per-request class assignment is seeded so the same seed + mix
+    // always submits the identical interactive/batch sequence.
+    let classes = class_mix_assignments(sb.requests, sb.class_mix, session.seed());
+
     if sb.fleet {
-        return fleet_bench_loop(&sb, &ms, &prompts, session.seed());
+        return fleet_bench_loop(&sb, &ms, &prompts, &classes, session.seed());
     }
 
     for fwd_key in &sb.fwd_keys {
@@ -235,10 +239,12 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
         cfg.telemetry = sb.telemetry.clone();
         cfg.page_size = sb.page_size;
         cfg.prefix_cache = sb.prefix_cache;
+        cfg.slow_consumer = sb.slow_consumer;
+        cfg.on_token = stall_sink(sb.consumer_delay_ms);
         let mut server = ms.server(fwd_key, &cfg)?;
         let t0 = Instant::now();
-        for p in &prompts {
-            server.submit(p.clone())?;
+        for (p, class) in prompts.iter().zip(&classes) {
+            server.submit_class(p.clone(), *class)?;
         }
         let responses = server.drain()?;
         let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
@@ -253,6 +259,32 @@ fn serve_bench(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Seeded interactive/batch assignment for `--class-mix`: the fraction is
+/// a per-request coin, not a prefix split, so classes interleave the way
+/// mixed traffic actually arrives.
+fn class_mix_assignments(n: usize, frac_interactive: f64, seed: u64) -> Vec<RequestClass> {
+    let mut rng = Rng::new(seed ^ 0xc1a5_5e50_a11e_5ed5);
+    (0..n)
+        .map(|_| {
+            if rng.f64() < frac_interactive {
+                RequestClass::Interactive
+            } else {
+                RequestClass::Batch
+            }
+        })
+        .collect()
+}
+
+/// `--consumer-delay-ms`: a sink that sleeps per token, simulating a slow
+/// stream consumer so the bounded-channel policy has something to absorb.
+fn stall_sink(delay_ms: f64) -> Option<TokenSink> {
+    if delay_ms <= 0.0 {
+        return None;
+    }
+    let delay = std::time::Duration::from_secs_f64(delay_ms / 1000.0);
+    Some(TokenSink::new(move |_ev| std::thread::sleep(delay)))
+}
+
 /// Fleet-mode serve-bench: a router over `--workers` worker engines.
 /// With `--arrival-rate 0` every request is submitted up front (closed
 /// loop); with a positive rate, arrivals follow a seeded exponential
@@ -263,6 +295,7 @@ fn fleet_bench_loop(
     sb: &ServeBenchArgs,
     ms: &qadx::api::ModelSession,
     prompts: &[Vec<i32>],
+    classes: &[RequestClass],
     seed: u64,
 ) -> anyhow::Result<()> {
     for fwd_key in &sb.fwd_keys {
@@ -275,10 +308,12 @@ fn fleet_bench_loop(
         cfg.telemetry = sb.telemetry.clone();
         cfg.page_size = sb.page_size;
         cfg.prefix_cache = sb.prefix_cache;
+        cfg.slow_consumer = sb.slow_consumer;
+        cfg.on_token = stall_sink(sb.consumer_delay_ms);
         let mut fleet = ms.fleet(fwd_key, &cfg)?;
         let mut arrivals = Rng::new(seed ^ 0x0f1e_e7a9);
         let t0 = Instant::now();
-        for p in prompts {
+        for (p, class) in prompts.iter().zip(classes) {
             if sb.arrival_rate > 0.0 {
                 // Exponential inter-arrival: -ln(1-u)/lambda, in seconds.
                 let u = arrivals.f64();
@@ -286,7 +321,7 @@ fn fleet_bench_loop(
                 std::thread::sleep(std::time::Duration::from_secs_f64(dt.min(1.0)));
                 fleet.poll()?;
             }
-            match fleet.submit(p.clone()) {
+            match fleet.submit_class(p.clone(), *class) {
                 Ok(_) => {}
                 Err(e) if e.downcast_ref::<Saturated>().is_some() => {}
                 Err(e) => return Err(e),

@@ -8,6 +8,7 @@ pub mod json;
 pub mod pool;
 pub mod retry;
 pub mod rng;
+pub mod stream;
 
 use std::io::Write;
 use std::path::Path;

@@ -1,0 +1,361 @@
+//! Bounded producer/consumer channel with an explicit slow-consumer
+//! policy — the backpressure primitive behind token streaming in
+//! `api::serve` / `api::fleet`.
+//!
+//! Unlike `std::sync::mpsc::sync_channel`, overflow behavior is a
+//! caller-chosen [`SlowConsumer`] policy: block with a hard deadline
+//! (lossless, bounded producer stall), drop the oldest buffered item
+//! (lossy, keeps the freshest tail), or disconnect the stream entirely
+//! (fail-fast degrade — the producer keeps working, the stream stops).
+//! Every policy decision is counted in [`ChanStats`], so servers surface
+//! tokens-dropped / consumer-stall gauges instead of silently losing
+//! data. The channel itself never panics and never blocks past the
+//! configured deadline — one stalled consumer cannot wedge a producer.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// What to do when a bounded stream buffer is full (the consumer is not
+/// keeping up with the producer).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SlowConsumer {
+    /// Lossless with a hard bound: the producer waits for buffer space up
+    /// to `deadline_ms`; if the consumer still has not drained anything,
+    /// the stream degrades to disconnected (the request keeps generating,
+    /// the stream stops). Each wait counts as a consumer stall.
+    Block { deadline_ms: f64 },
+    /// Lossy: discard the oldest buffered item to make room — the
+    /// consumer sees the freshest tail and the producer never waits.
+    DropOldest,
+    /// Fail-fast: sever the stream on first overflow. Already-buffered
+    /// items stay readable; everything after is discarded.
+    Disconnect,
+}
+
+impl Default for SlowConsumer {
+    fn default() -> SlowConsumer {
+        SlowConsumer::Block { deadline_ms: 250.0 }
+    }
+}
+
+/// Counters accumulated by one channel over its lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChanStats {
+    /// Items discarded: `DropOldest` victims plus anything pushed after
+    /// the stream disconnected.
+    pub dropped: u64,
+    /// Producer stalls: blocking waits entered under `Block`, plus
+    /// non-blocking pushes refused back to the caller (`try_push`).
+    pub stalls: u64,
+    /// The stream was severed by policy (`Disconnect` overflow, a `Block`
+    /// deadline timeout, or the receiver going away).
+    pub disconnected: bool,
+}
+
+/// What one push did after the policy was applied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    Stored,
+    /// Stored after a blocking wait (`Block`; counted as one stall).
+    StoredAfterWait,
+    /// Stored by discarding the oldest buffered item (`DropOldest`).
+    DroppedOldest,
+    /// The stream is disconnected; the item was discarded.
+    Disconnected,
+}
+
+struct Inner<T> {
+    cap: usize,
+    policy: SlowConsumer,
+    buf: VecDeque<T>,
+    stats: ChanStats,
+    /// Producer is done; the consumer may still drain the buffer.
+    closed: bool,
+}
+
+struct Shared<T> {
+    inner: Mutex<Inner<T>>,
+    /// Signalled by the consumer whenever space frees up (and on
+    /// receiver drop, so a blocked producer always wakes).
+    space: Condvar,
+}
+
+fn lock<T>(shared: &Shared<T>) -> MutexGuard<'_, Inner<T>> {
+    match shared.inner.lock() {
+        Ok(g) => g,
+        // A poisoned lock means a panic elsewhere; the queue state itself
+        // is still coherent (every mutation is a single push/pop).
+        Err(p) => p.into_inner(),
+    }
+}
+
+/// Producer half. Clonable so a retried request can stream into the same
+/// channel from a new worker; `Send` so it crosses into worker threads.
+pub struct BoundedTx<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Clone for BoundedTx<T> {
+    fn clone(&self) -> BoundedTx<T> {
+        BoundedTx { shared: self.shared.clone() }
+    }
+}
+
+/// Consumer half (single consumer; polling interface).
+pub struct BoundedRx<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Create a bounded channel of `capacity` items governed by `policy`.
+/// Capacity is clamped to at least 1.
+pub fn bounded<T>(capacity: usize, policy: SlowConsumer) -> (BoundedTx<T>, BoundedRx<T>) {
+    let shared = Arc::new(Shared {
+        inner: Mutex::new(Inner {
+            cap: capacity.max(1),
+            policy,
+            buf: VecDeque::new(),
+            stats: ChanStats::default(),
+            closed: false,
+        }),
+        space: Condvar::new(),
+    });
+    (BoundedTx { shared: shared.clone() }, BoundedRx { shared })
+}
+
+impl<T> BoundedTx<T> {
+    /// Deliver `v`, applying the slow-consumer policy on overflow. Only
+    /// the `Block` policy can wait, and never past its deadline; a timed
+    /// out wait severs the stream so later pushes return immediately.
+    pub fn push(&self, v: T) -> PushOutcome {
+        let mut inner = lock(&self.shared);
+        if inner.stats.disconnected {
+            inner.stats.dropped += 1;
+            return PushOutcome::Disconnected;
+        }
+        if inner.buf.len() < inner.cap {
+            inner.buf.push_back(v);
+            return PushOutcome::Stored;
+        }
+        match inner.policy {
+            SlowConsumer::DropOldest => {
+                inner.buf.pop_front();
+                inner.stats.dropped += 1;
+                inner.buf.push_back(v);
+                PushOutcome::DroppedOldest
+            }
+            SlowConsumer::Disconnect => {
+                inner.stats.disconnected = true;
+                inner.stats.dropped += 1;
+                PushOutcome::Disconnected
+            }
+            SlowConsumer::Block { deadline_ms } => {
+                inner.stats.stalls += 1;
+                let deadline = Duration::from_secs_f64(deadline_ms.max(0.0) / 1000.0);
+                let waited = self.shared.space.wait_timeout_while(inner, deadline, |i| {
+                    i.buf.len() >= i.cap && !i.stats.disconnected
+                });
+                let mut inner = match waited {
+                    Ok((g, _)) => g,
+                    Err(p) => p.into_inner().0,
+                };
+                if inner.stats.disconnected {
+                    inner.stats.dropped += 1;
+                    PushOutcome::Disconnected
+                } else if inner.buf.len() < inner.cap {
+                    inner.buf.push_back(v);
+                    PushOutcome::StoredAfterWait
+                } else {
+                    // deadline elapsed with no space: the consumer is
+                    // gone for practical purposes — degrade the stream
+                    inner.stats.disconnected = true;
+                    inner.stats.dropped += 1;
+                    PushOutcome::Disconnected
+                }
+            }
+        }
+    }
+
+    /// Non-blocking variant: a full `Block`-policy buffer is returned to
+    /// the caller (counted as a stall) instead of waiting. A single-
+    /// threaded scheduler that is also the consumer's driver uses this to
+    /// relay inline rather than deadlock against itself. The lossy
+    /// policies behave exactly as in [`push`](Self::push).
+    pub fn try_push(&self, v: T) -> Result<PushOutcome, T> {
+        let mut inner = lock(&self.shared);
+        if inner.stats.disconnected {
+            inner.stats.dropped += 1;
+            return Ok(PushOutcome::Disconnected);
+        }
+        if inner.buf.len() < inner.cap {
+            inner.buf.push_back(v);
+            return Ok(PushOutcome::Stored);
+        }
+        match inner.policy {
+            SlowConsumer::DropOldest => {
+                inner.buf.pop_front();
+                inner.stats.dropped += 1;
+                inner.buf.push_back(v);
+                Ok(PushOutcome::DroppedOldest)
+            }
+            SlowConsumer::Disconnect => {
+                inner.stats.disconnected = true;
+                inner.stats.dropped += 1;
+                Ok(PushOutcome::Disconnected)
+            }
+            SlowConsumer::Block { .. } => {
+                inner.stats.stalls += 1;
+                Err(v)
+            }
+        }
+    }
+
+    /// Producer is done; the consumer can still drain what is buffered.
+    pub fn close(&self) {
+        lock(&self.shared).closed = true;
+    }
+
+    pub fn is_disconnected(&self) -> bool {
+        lock(&self.shared).stats.disconnected
+    }
+
+    pub fn stats(&self) -> ChanStats {
+        lock(&self.shared).stats
+    }
+}
+
+impl<T> BoundedRx<T> {
+    /// Take the oldest buffered item, freeing space for the producer.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut inner = lock(&self.shared);
+        let v = inner.buf.pop_front();
+        if v.is_some() {
+            self.shared.space.notify_all();
+        }
+        v
+    }
+
+    /// Items currently buffered.
+    pub fn len(&self) -> usize {
+        lock(&self.shared).buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        lock(&self.shared).buf.is_empty()
+    }
+
+    /// Producer closed and the buffer is fully drained.
+    pub fn finished(&self) -> bool {
+        let inner = lock(&self.shared);
+        inner.closed && inner.buf.is_empty()
+    }
+
+    pub fn stats(&self) -> ChanStats {
+        lock(&self.shared).stats
+    }
+}
+
+impl<T> Drop for BoundedRx<T> {
+    fn drop(&mut self) {
+        // the consumer is gone: sever the stream and wake any producer
+        // blocked on space so it degrades instead of sleeping out its
+        // deadline for nothing
+        lock(&self.shared).stats.disconnected = true;
+        self.shared.space.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stores_until_capacity_then_applies_drop_oldest() {
+        let (tx, rx) = bounded::<u32>(2, SlowConsumer::DropOldest);
+        assert_eq!(tx.push(1), PushOutcome::Stored);
+        assert_eq!(tx.push(2), PushOutcome::Stored);
+        assert_eq!(tx.push(3), PushOutcome::DroppedOldest);
+        assert_eq!(tx.push(4), PushOutcome::DroppedOldest);
+        // the freshest tail survives, oldest items were discarded
+        assert_eq!(rx.try_recv(), Some(3));
+        assert_eq!(rx.try_recv(), Some(4));
+        assert_eq!(rx.try_recv(), None);
+        let st = rx.stats();
+        assert_eq!(st.dropped, 2);
+        assert!(!st.disconnected);
+    }
+
+    #[test]
+    fn disconnect_policy_severs_on_first_overflow() {
+        let (tx, rx) = bounded::<u32>(1, SlowConsumer::Disconnect);
+        assert_eq!(tx.push(1), PushOutcome::Stored);
+        assert_eq!(tx.push(2), PushOutcome::Disconnected);
+        assert!(tx.is_disconnected());
+        // buffered items stay readable; post-disconnect pushes are counted
+        assert_eq!(tx.push(3), PushOutcome::Disconnected);
+        assert_eq!(rx.try_recv(), Some(1));
+        assert_eq!(rx.try_recv(), None);
+        assert_eq!(rx.stats().dropped, 2);
+        assert!(rx.stats().disconnected);
+    }
+
+    #[test]
+    fn try_push_refuses_block_overflow_without_waiting() {
+        let (tx, rx) = bounded::<u32>(1, SlowConsumer::Block { deadline_ms: 10_000.0 });
+        assert_eq!(tx.try_push(7), Ok(PushOutcome::Stored));
+        // full + Block: returned to the caller immediately, stall counted
+        assert_eq!(tx.try_push(8), Err(8));
+        assert_eq!(tx.stats().stalls, 1);
+        assert_eq!(rx.try_recv(), Some(7));
+        assert_eq!(tx.try_push(8), Ok(PushOutcome::Stored));
+    }
+
+    #[test]
+    fn block_policy_waits_for_a_live_consumer() {
+        let (tx, rx) = bounded::<u32>(1, SlowConsumer::Block { deadline_ms: 5_000.0 });
+        assert_eq!(tx.push(1), PushOutcome::Stored);
+        let consumer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            rx.try_recv()
+        });
+        // blocks until the consumer frees space, well inside the deadline
+        assert_eq!(tx.push(2), PushOutcome::StoredAfterWait);
+        assert_eq!(consumer.join().ok().flatten(), Some(1));
+        let st = tx.stats();
+        assert_eq!(st.stalls, 1);
+        assert!(!st.disconnected);
+    }
+
+    #[test]
+    fn block_deadline_timeout_degrades_to_disconnect() {
+        let (tx, _rx) = bounded::<u32>(1, SlowConsumer::Block { deadline_ms: 5.0 });
+        assert_eq!(tx.push(1), PushOutcome::Stored);
+        // nobody drains: the wait times out and the stream severs instead
+        // of blocking the producer forever
+        assert_eq!(tx.push(2), PushOutcome::Disconnected);
+        assert!(tx.is_disconnected());
+        assert_eq!(tx.push(3), PushOutcome::Disconnected);
+        let st = tx.stats();
+        assert_eq!(st.stalls, 1);
+        assert_eq!(st.dropped, 2);
+    }
+
+    #[test]
+    fn dropping_the_receiver_disconnects_the_producer() {
+        let (tx, rx) = bounded::<u32>(1, SlowConsumer::Block { deadline_ms: 60_000.0 });
+        drop(rx);
+        // no consumer: the push must return immediately, not wait 60s
+        assert_eq!(tx.push(1), PushOutcome::Disconnected);
+        assert!(tx.is_disconnected());
+    }
+
+    #[test]
+    fn close_marks_finished_once_drained() {
+        let (tx, rx) = bounded::<u32>(4, SlowConsumer::default());
+        tx.push(1);
+        tx.close();
+        assert!(!rx.finished(), "buffered item still pending");
+        assert_eq!(rx.try_recv(), Some(1));
+        assert!(rx.finished());
+    }
+}

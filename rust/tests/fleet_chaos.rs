@@ -15,8 +15,8 @@
 mod common;
 
 use qadx::api::{
-    FaultPlan, FleetCfg, FleetResponse, Saturated, ServeCfg, ServeWeights, Session, TokenEvent,
-    TokenSink,
+    FaultPlan, FleetCfg, FleetResponse, RequestClass, Saturated, ServeCfg, ServeWeights, Session,
+    SlowConsumer, TokenEvent, TokenSink,
 };
 use qadx::data::tokenizer as tok;
 use qadx::runtime::BackendKind;
@@ -472,4 +472,448 @@ fn single_engine_serve_queue_bound_sheds_and_recovers() {
     assert_eq!(server.drain().unwrap().len(), 1);
     assert_eq!(server.stats().shed, 1);
     common::cleanup("fchaos_sq");
+}
+
+#[test]
+fn combined_chaos_kill_step_faults_and_stalled_consumer_stay_bit_identical() {
+    // The full fault stack at once: worker 1 dies before its round 1,
+    // every decode step flips a seeded fault coin, the streaming
+    // consumer deliberately stalls on request 0's tokens (1 ms each
+    // against capacity-1 DropOldest channels), and traffic is mixed
+    // interactive/batch. None of it may move a byte: every resolved row
+    // equals the no-fault clock oracle at both pool thread counts, every
+    // streamed token — from any attempt, around any drop — matches the
+    // oracle at its index, and the paged decode state drains to zero.
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let prompts: Vec<Vec<i32>> =
+        vec![vec![1, 4], vec![1, 4, 4], vec![1, 4], vec![1, 4, 4], vec![1, 4], vec![1, 4, 4, 4]];
+    let classes = [
+        RequestClass::Interactive,
+        RequestClass::Batch,
+        RequestClass::Interactive,
+        RequestClass::Batch,
+        RequestClass::Interactive,
+        RequestClass::Batch,
+    ];
+    let want: Vec<Vec<i32>> = prompts.iter().map(|p| expected_row(p, 12)).collect();
+
+    for threads in [1usize, 4] {
+        pool::set_threads(threads);
+        let tag = format!("fchaos_combo_t{threads}");
+        let (session, params) = clock_session(&tag, "clock-fleet");
+        let ms = session.model("clock-fleet").unwrap();
+        let events: Rc<RefCell<Vec<TokenEvent>>> = Rc::new(RefCell::new(Vec::new()));
+        let sink_events = events.clone();
+        let mut cfg = base_cfg(&params);
+        cfg.workers = 2;
+        cfg.fault = FaultPlan {
+            seed: 11,
+            kills: vec![(1, 1)],
+            step_fail_p: 0.1,
+            step_delay_ms: 2.0,
+            ..FaultPlan::default()
+        };
+        // generous budget: the seeded step faults plus the death requeue
+        // must never exhaust it — bit-identity is the oracle here, so a
+        // degraded response is a test failure, not an acceptable outcome
+        cfg.retry = RetryPolicy { base_ms: 0.1, cap_ms: 1.0, max_attempts: 12 };
+        cfg.stream_buf = 1;
+        cfg.slow_consumer = SlowConsumer::DropOldest;
+        cfg.on_token = Some(TokenSink::new(move |ev| {
+            if ev.id == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            sink_events.borrow_mut().push(*ev);
+        }));
+        let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
+        for (p, class) in prompts.iter().zip(classes.iter()) {
+            fleet.submit_class(p.clone(), *class).unwrap();
+        }
+        let mut responses = fleet.drain().unwrap();
+        responses.sort_by_key(|r| r.id);
+        fleet.shutdown();
+        let stats = fleet.stats().clone();
+        drop(fleet);
+        common::cleanup(&tag);
+        pool::set_threads(0);
+
+        assert_eq!(responses.len(), prompts.len(), "threads={threads}");
+        for (r, w) in responses.iter().zip(want.iter()) {
+            assert!(
+                r.error.is_none(),
+                "threads={threads} id {} degraded: {:?}",
+                r.id,
+                r.error
+            );
+            assert_eq!(
+                &r.row, w,
+                "threads={threads}: chaos row differs from no-fault oracle for id {}",
+                r.id
+            );
+        }
+        assert_eq!(stats.worker_deaths, 1, "threads={threads}: {}", stats.summary());
+        assert!(
+            stats.retries >= 1,
+            "threads={threads}: the dead worker's requests must requeue: {}",
+            stats.summary()
+        );
+        // Every streamed token agrees with the oracle at its index —
+        // retried attempts replay the same per-request stream, so even a
+        // token pushed by a later-faulted attempt matches the prefix.
+        let events = events.borrow();
+        for ev in events.iter() {
+            let plen = prompts[ev.id as usize].len();
+            assert_eq!(
+                ev.token,
+                want[ev.id as usize][plen + ev.index],
+                "threads={threads}: streamed token diverges (id {} index {})",
+                ev.id,
+                ev.index
+            );
+        }
+        // Conservation: every pushed token was either delivered to the
+        // sink or counted dropped by its channel (retried attempts can
+        // only push extra tokens, never lose one uncounted).
+        let gen_total: usize = responses.iter().map(|r| r.gen_tokens).sum();
+        assert!(
+            events.len() as u64 + stats.tokens_dropped >= gen_total as u64,
+            "threads={threads}: delivered {} + dropped {} < generated {gen_total}",
+            events.len(),
+            stats.tokens_dropped
+        );
+        // zero leaked pages after a full drain (the killed worker never
+        // reports a shutdown snapshot; its default slice stays 0)
+        for (w, ws) in stats.per_worker.iter().enumerate() {
+            assert_eq!(ws.live_pages, 0, "threads={threads}: worker {w} leaked pages");
+        }
+    }
+}
+
+#[test]
+fn starvation_bound_bypass_count_is_exact_under_a_seeded_schedule() {
+    // One worker x one slot and a 20 ms round delay: all six submits land
+    // while the slot is busy with id 0, so the lane state is frozen and
+    // the dispatch order is pure policy. With bound 2 the schedule is
+    // forced: I0 (slot at submit), I1, I3, then B2 via the bypass — the
+    // only time batch jumps while interactive waits — then I4, then B5
+    // from an empty interactive lane (which charges no bypass).
+    let (session, params) = clock_session("fchaos_bypass", "clock-fleet");
+    let ms = session.model("clock-fleet").unwrap();
+    let mut cfg = base_cfg(&params);
+    cfg.workers = 1;
+    cfg.max_slots = 1;
+    cfg.starvation_bound = 2;
+    cfg.fault = FaultPlan { step_delay_ms: 20.0, ..FaultPlan::default() };
+    let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
+    let classes = [
+        RequestClass::Interactive, // 0: straight into the slot
+        RequestClass::Interactive, // 1
+        RequestClass::Batch,       // 2
+        RequestClass::Interactive, // 3
+        RequestClass::Interactive, // 4
+        RequestClass::Batch,       // 5
+    ];
+    for class in classes {
+        fleet.submit_class(vec![1, 4], class).unwrap();
+    }
+    assert_eq!(fleet.lane_depths(), (3, 2), "id 0 holds the slot, five queue behind it");
+    // drain resolves in dispatch order (single slot, sequential service)
+    let responses = fleet.drain().unwrap();
+    let order: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    assert_eq!(order, vec![0, 1, 3, 2, 4, 5], "dispatch order must be pure lane policy");
+    let want = expected_row(&[1, 4], 12);
+    for r in &responses {
+        assert!(r.error.is_none(), "id {}: {:?}", r.id, r.error);
+        assert_eq!(r.row, want, "id {}", r.id);
+    }
+    let stats = fleet.stats();
+    assert_eq!(stats.lane_bypasses, 1, "exactly one bounded bypass: {}", stats.summary());
+    assert_eq!(stats.per_class.interactive.requests, 4);
+    assert_eq!(stats.per_class.batch.requests, 2);
+    assert_eq!(stats.per_class.interactive.gen_tokens, 20, "4 requests x 5 tokens");
+    assert_eq!(stats.per_class.batch.gen_tokens, 10);
+    fleet.shutdown();
+    drop(fleet);
+    common::cleanup("fchaos_bypass");
+}
+
+#[test]
+fn interactive_admission_evicts_youngest_batch_before_shedding() {
+    // The middle rung of the degradation ladder: at queue cap, a batch
+    // arrival sheds outright, but an interactive arrival first evicts
+    // the youngest *queued* batch request — which degrades with an
+    // explicit error instead of silently disappearing.
+    let (session, params) = clock_session("fchaos_evict", "clock-fleet");
+    let ms = session.model("clock-fleet").unwrap();
+    let mut cfg = base_cfg(&params);
+    cfg.workers = 1;
+    cfg.max_slots = 1;
+    cfg.queue_cap = 1;
+    cfg.fault = FaultPlan { step_delay_ms: 20.0, ..FaultPlan::default() };
+    let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
+    let b0 = fleet.submit_class(vec![1, 4], RequestClass::Batch).unwrap(); // slot
+    let b1 = fleet.submit_class(vec![1, 4], RequestClass::Batch).unwrap(); // queued (cap 1)
+    let err = fleet
+        .submit_class(vec![1, 4], RequestClass::Batch)
+        .expect_err("batch at cap sheds, never evicts");
+    assert!(err.downcast_ref::<Saturated>().is_some(), "{err:#}");
+    assert_eq!(fleet.stats().shed, 1);
+    assert_eq!(fleet.stats().evicted, 0);
+    let i2 = fleet
+        .submit_class(vec![1, 4], RequestClass::Interactive)
+        .expect("interactive takes the evicted batch request's queue slot");
+    assert_eq!(fleet.stats().evicted, 1);
+    assert_eq!(fleet.stats().shed, 1, "the eviction replaced a shed");
+    let mut responses = fleet.drain().unwrap();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 3);
+    let by_id = |id: u64| responses.iter().find(|r| r.id == id).unwrap();
+    let want = expected_row(&[1, 4], 12);
+    for id in [b0, i2] {
+        assert!(by_id(id).error.is_none(), "id {id}: {:?}", by_id(id).error);
+        assert_eq!(by_id(id).row, want, "id {id}");
+    }
+    let e = by_id(b1).error.as_deref().unwrap_or("");
+    assert!(e.contains("evicted by interactive admission"), "{e:?}");
+    assert_eq!(by_id(b1).gen_tokens, 0);
+    assert_eq!(fleet.stats().per_class.batch.evicted, 1);
+    assert_eq!(fleet.stats().degraded, 1, "{}", fleet.stats().summary());
+    fleet.shutdown();
+    drop(fleet);
+    common::cleanup("fchaos_evict");
+}
+
+#[test]
+fn expired_requests_leave_exactly_one_terminal_record_per_id() {
+    // Stream/response parity: every admitted request — completed or
+    // expired while queued — leaves exactly one terminal "request" JSONL
+    // event whose id matches exactly one response; expiries additionally
+    // leave a class-labeled "expired" event, and the shed submission
+    // (which never got an id) leaves a "reject" event instead.
+    let tel = std::env::temp_dir()
+        .join(format!("qadx_fchaos_parity_tel_{}.jsonl", std::process::id()));
+    std::fs::remove_file(&tel).ok(); // the appender appends; start clean
+    let (session, params) = clock_session("fchaos_parity", "clock-fleet");
+    let ms = session.model("clock-fleet").unwrap();
+    let mut cfg = base_cfg(&params);
+    cfg.workers = 1;
+    cfg.max_slots = 1;
+    cfg.deadline_ms = Some(0.0);
+    cfg.telemetry = Some(tel.clone());
+    cfg.fault = FaultPlan { step_delay_ms: 5.0, ..FaultPlan::default() };
+    let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
+    let done = fleet.submit_class(vec![1, 4], RequestClass::Interactive).unwrap(); // slot
+    let qb = fleet.submit_class(vec![1, 4], RequestClass::Batch).unwrap(); // queued
+    let qi = fleet.submit_class(vec![1, 4], RequestClass::Interactive).unwrap(); // queued
+    let err = fleet
+        .submit_class(vec![1, 4], RequestClass::Interactive)
+        .expect_err("beyond live capacity while the estimator is unseeded");
+    assert!(err.downcast_ref::<Saturated>().is_some(), "{err:#}");
+    let mut responses = fleet.drain().unwrap();
+    responses.sort_by_key(|r| r.id);
+    fleet.shutdown();
+    let stats = fleet.stats().clone();
+    drop(fleet);
+
+    assert_eq!(responses.len(), 3, "everything admitted resolves");
+    let by_id = |id: u64| responses.iter().find(|r| r.id == id).unwrap();
+    assert!(by_id(done).error.is_none(), "{:?}", by_id(done).error);
+    assert_eq!(by_id(done).row, expected_row(&[1, 4], 12));
+    for id in [qb, qi] {
+        let e = by_id(id).error.as_deref().unwrap_or("");
+        assert!(e.contains("deadline exceeded"), "id {id}: {e:?}");
+        assert_eq!(by_id(id).gen_tokens, 0, "id {id}");
+    }
+    assert_eq!(stats.expired, 2, "{}", stats.summary());
+    assert_eq!(stats.per_class.interactive.expired, 1);
+    assert_eq!(stats.per_class.batch.expired, 1);
+    assert_eq!(stats.shed, 1);
+    assert_eq!(stats.per_class.interactive.shed, 1);
+
+    let log = std::fs::read_to_string(&tel).expect("telemetry JSONL written");
+    let mut terminal: std::collections::BTreeMap<u64, usize> = std::collections::BTreeMap::new();
+    let mut expired_classes: Vec<String> = Vec::new();
+    let mut rejects = 0usize;
+    for line in log.lines() {
+        let j = qadx::util::json::Json::parse(line)
+            .unwrap_or_else(|e| panic!("unparseable telemetry line {line:?}: {e:?}"));
+        match j.get("event").and_then(|e| e.as_str()) {
+            Some("request") => {
+                let id = j.get("id").and_then(|v| v.as_f64()).expect("request has id") as u64;
+                *terminal.entry(id).or_insert(0) += 1;
+                assert!(
+                    j.get("class").and_then(|c| c.as_str()).is_some(),
+                    "terminal event carries its class: {line}"
+                );
+            }
+            Some("expired") => {
+                let class = j.get("class").and_then(|c| c.as_str()).expect("expired has class");
+                expired_classes.push(class.to_string());
+            }
+            Some("reject") => rejects += 1,
+            _ => {}
+        }
+    }
+    // parity: terminal records and responses are the same id multiset
+    assert_eq!(terminal.len(), responses.len(), "{log}");
+    for r in &responses {
+        assert_eq!(terminal.get(&r.id), Some(&1), "id {} terminal records: {log}", r.id);
+    }
+    // the interactive lane is scanned before the batch lane
+    assert_eq!(expired_classes, vec!["interactive", "batch"], "{log}");
+    assert_eq!(rejects, 1, "{log}");
+    std::fs::remove_file(&tel).ok();
+    common::cleanup("fchaos_parity");
+}
+
+#[test]
+fn drop_oldest_keeps_workers_unblocked_and_conserves_tokens() {
+    // Capacity-1 DropOldest channels and a router that never polls while
+    // both slots generate: the worker must never block (zero stalls),
+    // every token is either delivered or counted dropped — exact
+    // conservation, no faults or retries here — and the freshest tail
+    // (the EOS) always survives the drops.
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let (session, params) = clock_session("fchaos_drop", "clock-fleet");
+    let ms = session.model("clock-fleet").unwrap();
+    let events: Rc<RefCell<Vec<TokenEvent>>> = Rc::new(RefCell::new(Vec::new()));
+    let sink_events = events.clone();
+    let mut cfg = base_cfg(&params);
+    cfg.workers = 1;
+    cfg.max_slots = 2;
+    cfg.stream_buf = 1;
+    cfg.slow_consumer = SlowConsumer::DropOldest;
+    cfg.fault = FaultPlan { step_delay_ms: 5.0, ..FaultPlan::default() };
+    cfg.on_token = Some(TokenSink::new(move |ev| sink_events.borrow_mut().push(*ev)));
+    let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
+    let slow = fleet.submit(vec![1, 4]).unwrap(); //       5 tokens
+    let brisk = fleet.submit(vec![1, 4, 4, 4]).unwrap(); // 3 tokens
+    let mut responses = fleet.drain().unwrap();
+    responses.sort_by_key(|r| r.id);
+    fleet.shutdown();
+    let stats = fleet.stats().clone();
+    drop(fleet);
+    common::cleanup("fchaos_drop");
+
+    assert_eq!(responses.len(), 2);
+    let by_id = |id: u64| responses.iter().find(|r| r.id == id).unwrap();
+    assert_eq!(by_id(slow).row, expected_row(&[1, 4], 12));
+    assert_eq!(by_id(brisk).row, expected_row(&[1, 4, 4, 4], 12));
+    assert!(responses.iter().all(|r| r.error.is_none()));
+
+    let events = events.borrow();
+    let gen_total: usize = responses.iter().map(|r| r.gen_tokens).sum();
+    assert_eq!(
+        events.len() as u64 + stats.tokens_dropped,
+        gen_total as u64,
+        "conservation: delivered {} + dropped {} != generated {gen_total}",
+        events.len(),
+        stats.tokens_dropped
+    );
+    assert!(stats.tokens_dropped >= 2, "{}", stats.summary());
+    assert_eq!(stats.consumer_stalls, 0, "DropOldest never blocks a worker");
+    assert_eq!(stats.streams_disconnected, 0);
+    for id in [slow, brisk] {
+        let last = events.iter().filter(|e| e.id == id).next_back().expect("some delivery");
+        assert_eq!(last.token, tok::EOS, "the freshest tail survives (id {id})");
+    }
+}
+
+#[test]
+fn disconnect_policy_severs_the_stream_but_finishes_the_request() {
+    // Fail-fast rung: the first overflow severs request 0's stream — the
+    // counters record exactly one disconnection, conservation still
+    // holds (post-sever pushes count as drops) — while the generation
+    // itself completes bit-identically, untouched by its dead stream.
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    let (session, params) = clock_session("fchaos_disc", "clock-fleet");
+    let ms = session.model("clock-fleet").unwrap();
+    let events: Rc<RefCell<Vec<TokenEvent>>> = Rc::new(RefCell::new(Vec::new()));
+    let sink_events = events.clone();
+    let mut cfg = base_cfg(&params);
+    cfg.workers = 1;
+    cfg.max_slots = 1;
+    cfg.stream_buf = 1;
+    cfg.slow_consumer = SlowConsumer::Disconnect;
+    cfg.fault = FaultPlan { step_delay_ms: 5.0, ..FaultPlan::default() };
+    cfg.on_token = Some(TokenSink::new(move |ev| sink_events.borrow_mut().push(*ev)));
+    let mut fleet = ms.fleet("fwd_bf16", &cfg).unwrap();
+    let id = fleet.submit(vec![1, 4]).unwrap();
+    let responses = fleet.drain().unwrap();
+    fleet.shutdown();
+    let stats = fleet.stats().clone();
+    drop(fleet);
+    common::cleanup("fchaos_disc");
+
+    assert_eq!(responses.len(), 1);
+    assert!(responses[0].error.is_none(), "{:?}", responses[0].error);
+    assert_eq!(responses[0].id, id);
+    assert_eq!(responses[0].row, expected_row(&[1, 4], 12));
+    assert_eq!(responses[0].gen_tokens, 5);
+
+    let events = events.borrow();
+    assert_eq!(stats.streams_disconnected, 1, "{}", stats.summary());
+    assert_eq!(
+        events.len() as u64 + stats.tokens_dropped,
+        5,
+        "conservation across the sever: delivered {} + dropped {}",
+        events.len(),
+        stats.tokens_dropped
+    );
+    assert!(events.len() <= 2, "nothing delivered after the sever: {events:?}");
+}
+
+#[test]
+fn single_engine_lanes_dispatch_interactive_first_with_exact_bypass() {
+    // The same lane policy on the single-engine scheduler, fully
+    // single-threaded and therefore exact: with one slot and bound 1 the
+    // admission order is forced — I0 (slot at submit), I2, then B1 via
+    // the bypass, I4, then B3 from an empty interactive lane (no bypass
+    // charged) — and per-class stats split accordingly.
+    let (spec, params) = common::clock_spec_and_params("clock-lanes");
+    let artifacts = common::write_artifacts("fchaos_lanes", &[spec]);
+    let session = Session::builder()
+        .artifacts_dir(&artifacts)
+        .runs_dir(common::tmp_runs("fchaos_lanes"))
+        .backend(BackendKind::Reference)
+        .build()
+        .unwrap();
+    let ms = session.model("clock-lanes").unwrap();
+    let mut cfg = ServeCfg::default();
+    cfg.sample = qadx::eval::SampleCfg { temperature: 0.0, top_p: 1.0, max_new: 8, seed: 0 };
+    cfg.weights = ServeWeights::Params(params);
+    cfg.max_slots = 1;
+    cfg.starvation_bound = 1;
+    let mut server = ms.server("fwd_bf16", &cfg).unwrap();
+    let classes = [
+        RequestClass::Interactive, // 0: straight into the slot
+        RequestClass::Batch,       // 1
+        RequestClass::Interactive, // 2
+        RequestClass::Batch,       // 3
+        RequestClass::Interactive, // 4
+    ];
+    for class in classes {
+        server.submit_class(vec![1, 4], class).unwrap();
+    }
+    let responses = server.drain().unwrap();
+    assert_eq!(responses.len(), 5);
+    let want = expected_row(&[1, 4], 12);
+    for r in &responses {
+        assert!(r.error.is_none(), "id {}: {:?}", r.id, r.error);
+        assert_eq!(r.row, want, "id {}", r.id);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.lane_bypasses, 1, "exactly one bounded bypass");
+    assert_eq!(stats.per_class.interactive.requests, 3);
+    assert_eq!(stats.per_class.batch.requests, 2);
+    assert_eq!(stats.per_class.interactive.gen_tokens, 15, "3 requests x 5 tokens");
+    assert_eq!(stats.per_class.batch.gen_tokens, 10);
+    assert_eq!(stats.shed, 0, "no admission pressure in this run");
+    common::cleanup("fchaos_lanes");
 }

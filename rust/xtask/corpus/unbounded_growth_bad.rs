@@ -1,0 +1,22 @@
+//! unbounded-growth corpus: lane growth outside the admission-checked paths.
+
+struct Router {
+    lane_int: std::collections::VecDeque<u64>,
+    lane_bat: std::collections::VecDeque<u64>,
+}
+
+impl Router {
+    fn submit_class(&mut self, id: u64) {
+        // admission-checked entry point: growth here is sanctioned
+        self.lane_int.push_back(id);
+    }
+
+    fn sneak_in(&mut self, id: u64) {
+        // grows a bounded lane with no admission check in sight
+        self.lane_bat.push_back(id);
+    }
+
+    fn backfill(&mut self, id: u64) {
+        self.lane_int.push_front(id);
+    }
+}

@@ -1,0 +1,30 @@
+//! Clean twin: every grow call sits in an admission path, drains are free,
+//! and the one deliberate helper carries a reasoned allow-annotation.
+
+struct Router {
+    lane_int: std::collections::VecDeque<u64>,
+    lane_bat: std::collections::VecDeque<u64>,
+}
+
+impl Router {
+    fn submit_class(&mut self, id: u64, cap: usize) {
+        if self.lane_int.len() + self.lane_bat.len() >= cap {
+            return;
+        }
+        self.lane_int.push_back(id);
+    }
+
+    fn requeue(&mut self, id: u64) {
+        // put-back of already-admitted work is itself an admission path
+        self.lane_bat.push_front(id);
+    }
+
+    fn next(&mut self) -> Option<u64> {
+        self.lane_int.pop_front().or_else(|| self.lane_bat.pop_front())
+    }
+
+    fn sanctioned_helper(&mut self, id: u64) {
+        // qadx-lint: allow(unbounded-growth) -- every caller sits behind submit_class's cap check
+        self.lane_int.push_back(id);
+    }
+}

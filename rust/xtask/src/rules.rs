@@ -18,6 +18,11 @@
 //! * `hot-path-panic` — no `unwrap`/`expect`/`panic!`-family (and, where
 //!   configured, slice indexing) inside the serve scheduler / sampler /
 //!   decode-session hot functions; degrade through `Result` instead.
+//! * `unbounded-growth` — no push/insert into a scheduler/router queue
+//!   field outside the functions that run its admission check; a queue
+//!   that grows on a path admission never saw is the memory-leak shape
+//!   of an overload bug. Deliberate exceptions (a helper whose callers
+//!   all sit behind admission) carry an allow-annotation.
 //! * `wall-clock` — no `Instant::now`/`SystemTime::now` inside numeric
 //!   kernels (timing belongs to callers; kernels stay replayable).
 //! * `artifact-keys` — cross-language key check, see [`crate::keys`].
@@ -31,6 +36,7 @@ use crate::lexer::{lex, Kind, Lexed, Tok};
 pub const RULE_ORDERED_REDUCTION: &str = "ordered-reduction";
 pub const RULE_NONDET_ITERATION: &str = "nondet-iteration";
 pub const RULE_HOT_PATH_PANIC: &str = "hot-path-panic";
+pub const RULE_UNBOUNDED_GROWTH: &str = "unbounded-growth";
 pub const RULE_WALL_CLOCK: &str = "wall-clock";
 pub const RULE_ARTIFACT_KEYS: &str = "artifact-keys";
 pub const RULE_ANNOTATION: &str = "annotation";
@@ -39,6 +45,7 @@ pub const KNOWN_RULES: &[&str] = &[
     RULE_ORDERED_REDUCTION,
     RULE_NONDET_ITERATION,
     RULE_HOT_PATH_PANIC,
+    RULE_UNBOUNDED_GROWTH,
     RULE_WALL_CLOCK,
     RULE_ARTIFACT_KEYS,
     RULE_ANNOTATION,
@@ -72,6 +79,21 @@ pub struct HotPathSpec {
     pub index_check: bool,
 }
 
+/// unbounded-growth rule scope: the queue-like fields of one file and the
+/// functions allowed to grow them (the ones that run the admission check).
+#[derive(Debug, Clone)]
+pub struct GrowthSpec {
+    pub file: String,
+    /// Field/binding names that hold admission-bounded queues (`queue`,
+    /// `lane_int`, ...). Matched on the identifier a grow call is made
+    /// on, so destructured bindings of the field are covered too.
+    pub fields: Vec<String>,
+    /// Functions that may grow those fields: the admission-checked entry
+    /// points plus internal movers that only recycle already-admitted
+    /// work (requeue, dispatch put-back).
+    pub admission_fns: Vec<String>,
+}
+
 /// What the linter enforces where. Paths are repo-relative with `/`
 /// separators; a file is covered when its path starts with an entry.
 #[derive(Debug, Clone, Default)]
@@ -79,6 +101,7 @@ pub struct Config {
     pub nondet_paths: Vec<String>,
     pub wallclock_paths: Vec<String>,
     pub hot_paths: Vec<HotPathSpec>,
+    pub growth: Vec<GrowthSpec>,
 }
 
 impl Config {
@@ -90,12 +113,18 @@ impl Config {
             fns: fns.iter().map(|s| s.to_string()).collect(),
             index_check,
         };
+        let grow = |file: &str, fields: &[&str], fns: &[&str]| GrowthSpec {
+            file: file.to_string(),
+            fields: fields.iter().map(|s| s.to_string()).collect(),
+            admission_fns: fns.iter().map(|s| s.to_string()).collect(),
+        };
         Config {
             // numeric modules + everything whose output is serialized
             // (telemetry JSONL, manifest, exper reports, checkpoints)
             nondet_paths: [
                 "rust/src/quant/",
                 "rust/src/util/gemm.rs",
+                "rust/src/util/stream.rs",
                 "rust/src/eval/",
                 "rust/src/runtime/refmodel.rs",
                 "rust/src/runtime/reference.rs",
@@ -125,13 +154,27 @@ impl Config {
             hot_paths: vec![
                 hot(
                     "rust/src/api/serve.rs",
-                    &["submit", "poll", "drain", "admit", "step_round", "dispatch", "run_batch"],
+                    &[
+                        "submit",
+                        "submit_class",
+                        "poll",
+                        "drain",
+                        "admit",
+                        "step_round",
+                        "dispatch",
+                        "run_batch",
+                        "evict_youngest_batch",
+                        "emit_token",
+                        "relay_streams",
+                        "close_stream",
+                    ],
                     true,
                 ),
                 hot(
                     "rust/src/api/fleet.rs",
                     &[
                         "submit",
+                        "submit_class",
                         "poll",
                         "drain",
                         "dispatch",
@@ -140,6 +183,9 @@ impl Config {
                         "expire",
                         "admit_job",
                         "step_round",
+                        "evict_youngest_batch",
+                        "relay_streams",
+                        "close_stream",
                     ],
                     true,
                 ),
@@ -156,6 +202,18 @@ impl Config {
                     "rust/src/runtime/paged.rs",
                     &["alloc", "retain", "release", "push", "row", "fork", "clear"],
                     false,
+                ),
+            ],
+            growth: vec![
+                grow(
+                    "rust/src/api/serve.rs",
+                    &["queue", "lane_int", "lane_bat", "pending"],
+                    &["submit", "submit_class"],
+                ),
+                grow(
+                    "rust/src/api/fleet.rs",
+                    &["lane_int", "lane_bat", "streams"],
+                    &["submit", "submit_class", "requeue", "dispatch"],
                 ),
             ],
         }
@@ -566,6 +624,98 @@ fn hot_path_panic(
     }
 }
 
+/// Every `fn` item's (name, body token range), innermost-capable: nested
+/// fns get their own entry, and a token index resolves to the tightest
+/// enclosing body.
+fn fn_spans(toks: &[Tok], mate: &[Option<usize>]) -> Vec<(String, usize, usize)> {
+    let n = toks.len();
+    let mut spans = Vec::new();
+    for i in 0..n.saturating_sub(1) {
+        if !(toks[i].kind == Kind::Ident
+            && toks[i].text == "fn"
+            && toks[i + 1].kind == Kind::Ident)
+        {
+            continue;
+        }
+        // body = first top-level `{` of the item (a `;` first means a
+        // trait method declaration — skip)
+        let mut j = i + 2;
+        while j < n {
+            if toks[j].text == ";" {
+                break;
+            }
+            if toks[j].text == "{" {
+                if let Some(c) = mate[j] {
+                    spans.push((toks[i + 1].text.clone(), j + 1, c));
+                }
+                break;
+            }
+            if matches!(toks[j].text.as_str(), "(" | "[") {
+                j = mate[j].unwrap_or(j);
+            }
+            j += 1;
+        }
+    }
+    spans
+}
+
+/// The name of the tightest fn body containing `idx`, if any.
+fn enclosing_fn<'a>(spans: &'a [(String, usize, usize)], idx: usize) -> Option<&'a str> {
+    spans
+        .iter()
+        .filter(|(_, b0, b1)| idx >= *b0 && idx <= *b1)
+        .min_by_key(|(_, b0, b1)| b1 - b0)
+        .map(|(name, _, _)| name.as_str())
+}
+
+/// unbounded-growth: grow calls (`push`/`push_back`/`push_front`/
+/// `insert`/`entry`) on admission-bounded queue fields outside the
+/// functions that run the admission check.
+fn unbounded_growth(
+    spec: &GrowthSpec,
+    toks: &[Tok],
+    mate: &[Option<usize>],
+    tests: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    const GROW_METHODS: &[&str] = &["push", "push_back", "push_front", "insert", "entry"];
+    let spans = fn_spans(toks, mate);
+    let n = toks.len();
+    for i in 0..n.saturating_sub(3) {
+        let t = &toks[i];
+        if t.kind != Kind::Ident || !spec.fields.iter().any(|f| *f == t.text) {
+            continue;
+        }
+        if !(toks[i + 1].text == "."
+            && toks[i + 2].kind == Kind::Ident
+            && GROW_METHODS.contains(&toks[i + 2].text.as_str())
+            && toks[i + 3].text == "(")
+        {
+            continue;
+        }
+        if in_ranges(tests, i) {
+            continue;
+        }
+        match enclosing_fn(&spans, i) {
+            Some(f) if spec.admission_fns.iter().any(|a| *a == f) => continue,
+            _ => {}
+        }
+        out.push(Finding::new(
+            RULE_UNBOUNDED_GROWTH,
+            &spec.file,
+            toks[i + 2].line,
+            format!(
+                "`{}.{}(..)` grows an admission-bounded queue outside the \
+                 admission-checked paths ({}); enqueue through them or annotate \
+                 why this site cannot overrun",
+                t.text,
+                toks[i + 2].text,
+                spec.admission_fns.join("/")
+            ),
+        ));
+    }
+}
+
 /// wall-clock: Instant::now / SystemTime::now in numeric kernels.
 fn wall_clock(rel: &str, toks: &[Tok], tests: &[(usize, usize)], out: &mut Vec<Finding>) {
     for i in 0..toks.len() {
@@ -606,6 +756,11 @@ pub fn analyze_source(rel: &str, src: &str, cfg: &Config) -> FileAnalysis {
     for spec in &cfg.hot_paths {
         if spec.file == rel {
             hot_path_panic(spec, &lexed.toks, &mate, &tests, &mut findings);
+        }
+    }
+    for spec in &cfg.growth {
+        if spec.file == rel {
+            unbounded_growth(spec, &lexed.toks, &mate, &tests, &mut findings);
         }
     }
     FileAnalysis { rel: rel.to_string(), lexed, findings }
@@ -707,6 +862,11 @@ mod tests {
                 fns: vec!["hot".to_string()],
                 index_check: true,
             }],
+            growth: vec![GrowthSpec {
+                file: rel.to_string(),
+                fields: vec!["queue".to_string(), "lane_int".to_string()],
+                admission_fns: vec!["submit".to_string()],
+            }],
         }
     }
 
@@ -757,6 +917,46 @@ mod tests {
         assert!(f.iter().all(|x| x.rule == RULE_HOT_PATH_PANIC));
         assert!(f.iter().any(|x| x.msg.contains("unwrap")));
         assert!(f.iter().any(|x| x.msg.contains("index")));
+    }
+
+    #[test]
+    fn unbounded_growth_fires_outside_admission_fns_only() {
+        let bad = "impl S {\n fn submit(&mut self) { self.queue.push_back(1); }\n \
+                   fn refill(&mut self) { self.queue.push_back(2); lane_int.push_front(3); }\n}";
+        let f = run("m.rs", bad, &cfg_all("m.rs"));
+        let un: Vec<_> = f.iter().filter(|x| !x.allowed).collect();
+        assert_eq!(un.len(), 2, "{un:?}");
+        assert!(un.iter().all(|x| x.rule == RULE_UNBOUNDED_GROWTH), "{un:?}");
+        assert!(un.iter().all(|x| x.line == 3), "both sites are in refill: {un:?}");
+        assert!(un[0].msg.contains("submit"), "names the admission fns: {un:?}");
+    }
+
+    #[test]
+    fn unbounded_growth_spares_other_fields_tests_and_allows() {
+        // non-queue fields and non-grow methods never fire
+        let ok = "impl S {\n fn refill(&mut self) { self.out.push(1); self.queue.pop_front(); } }";
+        assert!(run("m.rs", ok, &cfg_all("m.rs")).is_empty());
+        // test scaffolding is exempt
+        let test = "#[test]\nfn t() { queue.push_back(1); }";
+        assert!(run("m.rs", test, &cfg_all("m.rs")).is_empty());
+        // a reasoned allow-annotation keeps the gate green but reports
+        let allowed = "impl S {\n fn helper(&mut self) {\n  \
+                       // qadx-lint: allow(unbounded-growth) -- callers gate on submit\n  \
+                       self.queue.push_back(1);\n }\n}";
+        let f = run("m.rs", allowed, &cfg_all("m.rs"));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].allowed, "{f:?}");
+    }
+
+    #[test]
+    fn unbounded_growth_resolves_nested_fns_to_the_innermost_body() {
+        // a nested helper inside an admission fn is NOT itself admission
+        let src = "impl S {\n fn submit(&mut self) {\n  fn inner(q: &mut Q) { \
+                   q.lane_int.push_back(1); }\n  self.queue.push_back(2);\n }\n}";
+        let f = run("m.rs", src, &cfg_all("m.rs"));
+        let un: Vec<_> = f.iter().filter(|x| !x.allowed).collect();
+        assert_eq!(un.len(), 1, "{un:?}");
+        assert!(un[0].msg.contains("lane_int"), "{un:?}");
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::path::Path;
 use xtask::keys;
 use xtask::rules::{
     Config, Finding, RULE_ANNOTATION, RULE_ARTIFACT_KEYS, RULE_HOT_PATH_PANIC,
-    RULE_NONDET_ITERATION, RULE_ORDERED_REDUCTION, RULE_WALL_CLOCK,
+    RULE_NONDET_ITERATION, RULE_ORDERED_REDUCTION, RULE_UNBOUNDED_GROWTH, RULE_WALL_CLOCK,
 };
 use xtask::{lint_snippet, run_lint};
 
@@ -81,6 +81,31 @@ fn hot_path_panic_ok_is_clean() {
     let src = include_str!("../corpus/hot_path_panic_ok.rs");
     let fs = lint_snippet("rust/src/api/serve.rs", src, &Config::repo());
     assert!(unallowed(&fs).is_empty(), "Result shape + test scaffolding: {fs:?}");
+}
+
+#[test]
+fn unbounded_growth_bad_fires_outside_admission_fns() {
+    let src = include_str!("../corpus/unbounded_growth_bad.rs");
+    // fleet.rs config lists lane_int/lane_bat with submit_class admission
+    let fs = lint_snippet("rust/src/api/fleet.rs", src, &Config::repo());
+    let un = unallowed(&fs);
+    assert_eq!(un.len(), 2, "sneak_in + backfill: {un:?}");
+    assert!(un.iter().all(|f| f.rule == RULE_UNBOUNDED_GROWTH), "{un:?}");
+    let lines: Vec<u32> = un.iter().map(|f| f.line).collect();
+    assert_eq!(lines, vec![16, 20], "submit_class's growth never surfaces: {un:?}");
+    // the rule is per-file scoped: the same code elsewhere is out of scope
+    let fs2 = lint_snippet("rust/src/api/session.rs", src, &Config::repo());
+    assert!(unallowed(&fs2).is_empty(), "{fs2:?}");
+}
+
+#[test]
+fn unbounded_growth_ok_is_clean_and_allow_reports() {
+    let src = include_str!("../corpus/unbounded_growth_ok.rs");
+    let fs = lint_snippet("rust/src/api/fleet.rs", src, &Config::repo());
+    assert!(unallowed(&fs).is_empty(), "{fs:?}");
+    let allowed: Vec<&Finding> = fs.iter().filter(|f| f.allowed).collect();
+    assert_eq!(allowed.len(), 1, "only the annotated helper: {allowed:?}");
+    assert_eq!(allowed[0].rule, RULE_UNBOUNDED_GROWTH);
 }
 
 #[test]
