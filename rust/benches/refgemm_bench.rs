@@ -13,6 +13,7 @@
 //! `QADX_THREADS` / `--threads` size the pool; `_t1` rows pin one thread
 //! for an on-machine scaling reference.
 
+use qadx::quant::packed::{self, KernelTier, PackedFormat, PackedWeight};
 use qadx::runtime::refmodel::{self, LossKind, RefCfg};
 use qadx::runtime::{
     synthetic_manifest_json, BackendKind, DecodeOpts, Engine, ModelRuntime, SynthSpec,
@@ -86,6 +87,26 @@ fn main() {
         std::hint::black_box(gemm::matmul_nt(&a, &b, n, n, n));
     });
 
+    // ---- packed quantized-domain micro-kernels -----------------------
+    // One decode-shaped matvec per packed format: LUT dot products over
+    // nibble planes + block scales, against the 256x256 f32 GEMM family
+    // above for the traffic/compute comparison.
+    let wq = randn(n * n, 5, 0.05);
+    let xq = randn(n, 6, 1.0);
+    for (fmt, label) in [
+        (PackedFormat::Nvfp4, "nvfp4"),
+        (PackedFormat::Mxfp4, "mxfp4"),
+        (PackedFormat::Int4, "int4"),
+    ] {
+        let pw = PackedWeight::pack(&wq, n, n, fmt).expect("pack");
+        let mut out = vec![0f32; n];
+        let name = format!("packed_matvec_{label}_256x256");
+        suite.run(&name, 3, 200, || {
+            pw.matvec_into(&xq, &mut out).expect("packed matvec");
+            std::hint::black_box(&out);
+        });
+    }
+
     // ---- hermetic full forward / train step --------------------------
     let spec = bench_spec();
     let entry = spec.entry();
@@ -158,6 +179,20 @@ fn main() {
             );
         });
 
+        // the same decode schedule on the packed quantized-domain kernel
+        // tier: GEMMs run on 4-bit codes + block scales instead of
+        // re-materialized fake-quant f32 weights (process-global toggle —
+        // the sampler opens its decode session under it)
+        packed::set_kernel(KernelTier::Packed);
+        let mut sampler =
+            qadx::eval::Sampler::new(&rt, "fwd_nvfp4", sample).expect("packed sampler");
+        suite.run_units("ref_decode_packed_nvfp4_b4_new12_toks", 1, 10, units, || {
+            std::hint::black_box(
+                sampler.generate(&engine, &wbuf, &prompts, None).expect("generate"),
+            );
+        });
+        packed::clear_kernel();
+
         // long-context sweep with a fixed short prompt: the full path
         // re-forwards the whole (B, S) artifact per token, so its
         // per-token time grows with seq_len; the step path works at the
@@ -214,7 +249,7 @@ fn main() {
         let prefix: Vec<i32> = (0..192).map(|j| 2 + (j % 300) as i32).collect();
         let mut logits: Vec<f32> = Vec::new();
 
-        let cold = DecodeOpts { page_size: 16, prefix_cache: 0, max_pages: 0 };
+        let cold = DecodeOpts { page_size: 16, prefix_cache: 0, max_pages: 0, kernel: None };
         let mut sess = engine
             .open_decode_opts(&rt.model, "fwd_nvfp4", &wbuf, rows, &cold)
             .expect("open paged session")
@@ -225,7 +260,7 @@ fn main() {
             sess.close(0).expect("close cold row");
         });
 
-        let hit = DecodeOpts { page_size: 16, prefix_cache: 4, max_pages: 0 };
+        let hit = DecodeOpts { page_size: 16, prefix_cache: 4, max_pages: 0, kernel: None };
         let mut sess = engine
             .open_decode_opts(&rt.model, "fwd_nvfp4", &wbuf, rows, &hit)
             .expect("open cached session")
@@ -240,7 +275,7 @@ fn main() {
         let ps = sess.paged_stats().expect("paged stats");
         println!("prefix cache: {} hits / {} misses", ps.prefix_hits, ps.prefix_misses);
 
-        let budget = DecodeOpts { page_size: 16, prefix_cache: 0, max_pages: 224 };
+        let budget = DecodeOpts { page_size: 16, prefix_cache: 0, max_pages: 224, kernel: None };
         let mut sess = engine
             .open_decode_opts(&rt.model, "fwd_nvfp4", &wbuf, rows, &budget)
             .expect("open budgeted session")

@@ -10,6 +10,7 @@ use anyhow::{bail, Result};
 
 use crate::data::tasks::Suite;
 use crate::eval::{DecodeMode, EvalCfg};
+use crate::quant::KernelTier;
 use crate::util::args::Args;
 
 use super::method::MethodRef;
@@ -52,6 +53,12 @@ pub const SESSION_FLAGS: &[FlagDef] = &[
         "N",
         "(QADX_THREADS or all cores)",
         "reference-backend worker threads (results identical at any count)",
+    ),
+    flag(
+        "kernel",
+        "T",
+        "(QADX_KERNEL or exact)",
+        "quantized GEMM kernel tier: exact|packed (packed computes on 4-bit codes)",
     ),
 ];
 
@@ -304,6 +311,9 @@ pub struct SessionArgs {
     /// Worker threads for the parallel compute core (`--threads N`);
     /// None defers to `QADX_THREADS` / available parallelism.
     pub threads: Option<usize>,
+    /// Quantized GEMM kernel tier (`--kernel exact|packed`); None defers
+    /// to `QADX_KERNEL` / the exact default.
+    pub kernel: Option<KernelTier>,
 }
 
 impl SessionArgs {
@@ -313,6 +323,10 @@ impl SessionArgs {
                 Ok(n) if n >= 1 => Some(n),
                 _ => bail!("invalid value {v:?} for --threads (need a positive integer)"),
             },
+            None => None,
+        };
+        let kernel = match args.get("kernel") {
+            Some(v) => Some(KernelTier::parse(v)?),
             None => None,
         };
         Ok(SessionArgs {
@@ -325,6 +339,7 @@ impl SessionArgs {
                 None => None,
             },
             threads,
+            kernel,
         })
     }
 
@@ -339,6 +354,9 @@ impl SessionArgs {
         }
         if let Some(n) = self.threads {
             b = b.threads(n);
+        }
+        if let Some(t) = self.kernel {
+            b = b.kernel(t);
         }
         b
     }
@@ -583,6 +601,17 @@ mod tests {
         assert_eq!(s.threads, Some(4));
         assert!(SessionArgs::parse(&parse("info --threads 0")).is_err());
         assert!(SessionArgs::parse(&parse("info --threads many")).is_err());
+    }
+
+    #[test]
+    fn kernel_flag_parses_tiers_and_rejects_garbage() {
+        let s = SessionArgs::parse(&parse("info")).unwrap();
+        assert_eq!(s.kernel, None);
+        let s = SessionArgs::parse(&parse("info --kernel packed")).unwrap();
+        assert_eq!(s.kernel, Some(KernelTier::Packed));
+        let s = SessionArgs::parse(&parse("info --kernel exact")).unwrap();
+        assert_eq!(s.kernel, Some(KernelTier::Exact));
+        assert!(SessionArgs::parse(&parse("info --kernel turbo")).is_err());
     }
 
     #[test]

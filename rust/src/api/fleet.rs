@@ -540,6 +540,7 @@ impl FleetHandle {
             page_size: cfg.page_size,
             prefix_cache: cfg.prefix_cache,
             max_pages: cfg.max_pages,
+            kernel: None,
         };
         let stream_tokens = cfg.stream || cfg.on_token.is_some();
         // With bounded channels (stream_buf > 0) tokens travel through

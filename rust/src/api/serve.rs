@@ -52,6 +52,7 @@ use anyhow::{bail, Result};
 
 use crate::data::tokenizer as tok;
 use crate::eval::{sample_token_with, DecodeMode, SampleCfg, SampleScratch, Sampler};
+use crate::quant::KernelTier;
 use crate::runtime::{Buffer, DecodeOpts, DecodeSession, Engine, ModelRuntime};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -281,6 +282,11 @@ pub struct ServeCfg {
     /// Streaming: what happens when a consumer cannot keep up with the
     /// bounded channel (ignored when `stream_buf == 0`).
     pub slow_consumer: SlowConsumer,
+    /// Quantized GEMM kernel tier for the decode session (None defers to
+    /// the process-global `set_kernel` / `QADX_KERNEL` / exact chain).
+    /// `Packed` computes decode GEMMs on the packed 4-bit codes instead
+    /// of re-materialized fake-quantized f32 weights.
+    pub kernel: Option<KernelTier>,
 }
 
 impl Default for ServeCfg {
@@ -302,6 +308,7 @@ impl Default for ServeCfg {
             starvation_bound: 4,
             stream_buf: 64,
             slow_consumer: SlowConsumer::default(),
+            kernel: None,
         }
     }
 }
@@ -538,6 +545,11 @@ pub struct ServeStats {
     /// Streaming: channels severed by policy (`Disconnect` overflow or a
     /// `Block` deadline timeout).
     pub streams_disconnected: u64,
+    /// Bytes of bound weight storage the decode session reads per token
+    /// (continuous mode): f32 copies on the exact kernel tier, packed
+    /// 4-bit codes + block scales on the packed tier — the gauge that
+    /// shows the packed tier's ~8x decode weight-traffic cut.
+    pub decode_weight_bytes: usize,
 }
 
 impl ServeStats {
@@ -604,6 +616,11 @@ impl ServeStats {
         if self.lane_bypasses > 0 {
             lanes.push_str(&format!(" | bypass {}", self.lane_bypasses));
         }
+        let wbytes = if self.decode_weight_bytes > 0 {
+            format!(" | w-bytes {}", self.decode_weight_bytes)
+        } else {
+            String::new()
+        };
         let streamc = if self.tokens_dropped > 0
             || self.consumer_stalls > 0
             || self.streams_disconnected > 0
@@ -618,7 +635,7 @@ impl ServeStats {
         format!(
             "{:<10} {} | busy {:.1} req/s {:.0} gen-tok/s | \
              lat p50 {:.0}ms p95 {:.0}ms p99 {:.0}ms (wait p50 {:.0}ms exec p50 {:.0}ms) | \
-             ttft p50 {:.0}ms | {} | compile {:.0}ms{paged}{lanes}{streamc}",
+             ttft p50 {:.0}ms | {} | compile {:.0}ms{paged}{wbytes}{lanes}{streamc}",
             self.fwd_key,
             shape,
             self.req_per_sec(),
@@ -906,13 +923,16 @@ impl<'e> ServeHandle<'e> {
             page_size: cfg.page_size,
             prefix_cache: cfg.prefix_cache,
             max_pages: cfg.max_pages,
+            kernel: cfg.kernel,
         };
 
         let mut sched = None;
+        let mut decode_weight_bytes = 0usize;
         if cfg.decode != DecodeMode::Full {
             let opened =
                 engine.open_decode_opts(&rt.model, fwd_key, &weights_buf, width, &decode_opts)?;
             if let Some(mut session) = opened {
+                decode_weight_bytes = session.decode_weight_bytes();
                 if cfg.warmup {
                     // exercise weight pre-quantization + one prefill/sample
                     // (the warm-up RNG is local — real requests each get
@@ -985,6 +1005,7 @@ impl<'e> ServeHandle<'e> {
                 ),
                 ("slots", Json::Num(width as f64)),
                 ("compile_ms", Json::Num(compile_ms)),
+                ("decode_weight_bytes", Json::Num(decode_weight_bytes as f64)),
             ]));
         }
 
@@ -1010,7 +1031,12 @@ impl<'e> ServeHandle<'e> {
             max_batch_delay_ms: cfg.max_batch_delay_ms.max(0.0),
             starvation_bound: cfg.starvation_bound,
             completed: Vec::new(),
-            stats: ServeStats { fwd_key: fwd_key.to_string(), compile_ms, ..Default::default() },
+            stats: ServeStats {
+                fwd_key: fwd_key.to_string(),
+                compile_ms,
+                decode_weight_bytes,
+                ..Default::default()
+            },
             telemetry,
             stream: cfg.stream,
             on_token: cfg.on_token.clone(),
@@ -1249,6 +1275,7 @@ impl<'e> ServeHandle<'e> {
     /// (no-op for dense sessions and the coalescing path).
     fn sync_paged(&mut self) {
         if let Sched::Continuous { session, .. } = &self.sched {
+            self.stats.decode_weight_bytes = session.decode_weight_bytes();
             if let Some(ps) = session.paged_stats() {
                 self.stats.page_size = ps.page_size;
                 self.stats.live_pages = ps.live_pages;

@@ -17,7 +17,7 @@ use crate::coordinator::{checkpoint, pipeline, PipelineScale, RecoveryCfg, Teach
 use crate::data::tasks::Suite;
 use crate::data::{SourceKind, SourceSpec};
 use crate::eval::{run_suites, EvalCfg, SampleCfg};
-use crate::quant::PtqReport;
+use crate::quant::{KernelTier, PtqReport};
 use crate::runtime::{
     BackendKind, Buffer, DecodeOpts, DecodeSession, Engine, Manifest, ModelRuntime,
 };
@@ -41,6 +41,7 @@ pub struct SessionBuilder {
     methods: MethodRegistry,
     backend: Option<BackendKind>,
     threads: Option<usize>,
+    kernel: Option<KernelTier>,
 }
 
 impl SessionBuilder {
@@ -53,6 +54,7 @@ impl SessionBuilder {
             methods: MethodRegistry::builtin(),
             backend: None,
             threads: None,
+            kernel: None,
         }
     }
 
@@ -104,13 +106,29 @@ impl SessionBuilder {
         self
     }
 
+    /// GEMM kernel tier for quantized formats on the reference backend
+    /// (`--kernel` on the CLI): `Exact` recomputes fake-quantized f32
+    /// weights (the bit-exact oracle), `Packed` computes directly on the
+    /// packed 4-bit representation. Like `.threads(..)` this sets a
+    /// *process-global* knob at `build()`; per-call overrides go through
+    /// `DecodeOpts::kernel`. Packed logits stay within the published
+    /// accuracy budget of exact and greedy decode picks the same tokens.
+    pub fn kernel(mut self, tier: KernelTier) -> Self {
+        self.kernel = Some(tier);
+        self
+    }
+
     pub fn build(self) -> Result<Session> {
         let kind = BackendKind::resolve(self.backend)?;
         let engine = Engine::with_backend(&self.artifacts_dir, kind)?;
-        // Only touch the process-global knob once construction can no
-        // longer fail — a failed build must not change pool sizing.
+        // Only touch the process-global knobs once construction can no
+        // longer fail — a failed build must not change pool sizing or
+        // kernel-tier selection.
         if let Some(n) = self.threads {
             crate::util::pool::set_threads(n);
+        }
+        if let Some(t) = self.kernel {
+            crate::quant::packed::set_kernel(t);
         }
         Ok(Session {
             engine,

@@ -11,9 +11,11 @@ pub mod baselines;
 pub mod calib;
 pub mod fp;
 pub mod nvfp4;
+pub mod packed;
 
 pub use calib::CalibMethod;
 pub use nvfp4::{fake_quant, rel_error, Nvfp4Tensor};
+pub use packed::{KernelTier, PackedFormat, PackedWeight};
 
 /// Quantize a whole model parameter vector layer-by-layer (PTQ weight
 /// export): 2-D weight tensors go through the NVFP4 codec along their

@@ -47,8 +47,9 @@ const fn build_nibble_pair_lut() -> [[f32; 2]; 256] {
 }
 
 /// Both nibbles of every packed code byte decoded at once:
-/// `[low nibble (element 2i), high nibble (element 2i+1)]`.
-static NIBBLE_PAIR_LUT: [[f32; 2]; 256] = build_nibble_pair_lut();
+/// `[low nibble (element 2i), high nibble (element 2i+1)]`. Shared with
+/// the quantized-domain GEMM kernels (`quant::packed`).
+pub(crate) static NIBBLE_PAIR_LUT: [[f32; 2]; 256] = build_nibble_pair_lut();
 
 /// A quantized tensor: packed payload + two-level scales.
 #[derive(Clone, Debug)]
@@ -76,9 +77,10 @@ pub fn tensor_scale(x: &[f32]) -> f32 {
 
 /// One scale block: E4M3 scale code + the 8 packed payload bytes.
 /// The op sequence per element is exactly the seed's (scale → exact
-/// divide → branchless encode → nibble pack).
+/// divide → branchless encode → nibble pack). Shared with the packed
+/// weight layout (`quant::packed`) so both sides stay bit-identical.
 #[inline]
-fn quantize_block(blk: &[f32], ts: f32, bytes: &mut [u8]) -> u8 {
+pub(crate) fn quantize_block(blk: &[f32], ts: f32, bytes: &mut [u8]) -> u8 {
     let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
     let raw = (amax / E2M1_MAX / ts).clamp(-E4M3_MAX, E4M3_MAX);
     let sb = e4m3_encode(raw);

@@ -1,0 +1,708 @@
+//! Quantized-domain GEMM kernel tier: compute directly on the packed
+//! 4-bit representation instead of fake-quantizing weights back to f32.
+//!
+//! [`PackedWeight`] holds a (k, n) weight quantized along its contraction
+//! axis exactly like `refmodel`'s `quant_weight_into` (transpose →
+//! quantize rows of the (n, k) view), but keeps the *packed* form: nibble
+//! codes (two elements per byte) plus per-block scales — E4M3 codes + one
+//! f32 tensor scale for NVFP4, power-of-two f32 scales for MXFP4, one
+//! per-row f32 scale for INT4 (sign-magnitude nibbles so `-0.0` survives
+//! the round trip). `dequantize_into` reproduces the fake-quant f32
+//! weights **bit for bit** — the packed layout is a lossless re-encoding
+//! of the exact tier's quantized values, property-tested below.
+//!
+//! The dot-product micro-kernels ([`PackedWeight::matvec_into`] /
+//! [`PackedWeight::gemm_into`]) walk the packed bytes through the shared
+//! 256-entry nibble-pair LUT with the block-scale product hoisted out of
+//! the element loop: `acc += scale_b * Σ (lut[byte]·x_pair)`. Weight
+//! traffic drops ~8× vs the f32 copies the exact tier binds (u8 nibbles
+//! vs f32), which is the bandwidth win the 4-bit formats exist for. The
+//! per-output-element f32 chain is fixed — parallelism tiles the *output*
+//! (`util::pool`), so results are bit-identical at every thread count.
+//!
+//! Accuracy budget: the packed kernels hoist block scales and accumulate
+//! per block, so logits are *not* bit-identical to the exact tier's f32
+//! GEMM — they agree within [`PACKED_LOGIT_ATOL`]/[`PACKED_LOGIT_RTOL`]
+//! and must produce identical greedy tokens on the test models
+//! (tests/packed_kernels.rs). The exact tier remains the bit-exact
+//! oracle.
+//!
+//! Tier selection: [`KernelTier`] resolves explicit choice (per-session
+//! `DecodeOpts::kernel` / `Session::builder().kernel(..)`) over the
+//! process-global knob (`--kernel`) over the `QADX_KERNEL` env var,
+//! defaulting to `Exact`.
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use super::baselines::MXFP4_BLOCK;
+use super::fp::{e2m1_encode, e4m3_decode};
+use super::nvfp4::{self, NIBBLE_PAIR_LUT, BLOCK as NV_BLOCK};
+use crate::util::pool;
+
+// ------------------------------------------------------------- kernel tier
+
+/// Which GEMM datapath quantized decode/forward uses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Fake-quant weights back to f32 and run the blocked f32 GEMM — the
+    /// bit-exact oracle path.
+    #[default]
+    Exact,
+    /// Compute directly on packed nibbles via the LUT micro-kernels;
+    /// logits within tolerance of `Exact`, identical greedy tokens.
+    Packed,
+}
+
+impl KernelTier {
+    pub fn parse(s: &str) -> Result<KernelTier> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "exact" | "f32" => Ok(KernelTier::Exact),
+            "packed" | "lut" => Ok(KernelTier::Packed),
+            other => bail!("unknown kernel tier {other:?} (expected exact|packed)"),
+        }
+    }
+
+    /// Resolve the effective tier: explicit choice > process-global knob
+    /// (`set_kernel`, i.e. `--kernel` / `Session::builder().kernel(..)`) >
+    /// `QADX_KERNEL` env var > `Exact`.
+    pub fn resolve(explicit: Option<KernelTier>) -> Result<KernelTier> {
+        let env = std::env::var("QADX_KERNEL").ok();
+        resolve_from(explicit, GLOBAL_KERNEL.load(Ordering::Relaxed), env.as_deref())
+    }
+}
+
+fn resolve_from(explicit: Option<KernelTier>, global: u8, env: Option<&str>) -> Result<KernelTier> {
+    if let Some(t) = explicit {
+        return Ok(t);
+    }
+    match global {
+        1 => return Ok(KernelTier::Exact),
+        2 => return Ok(KernelTier::Packed),
+        _ => {}
+    }
+    match env {
+        Some(s) if !s.trim().is_empty() => {
+            KernelTier::parse(s).context("invalid QADX_KERNEL (expected exact|packed)")
+        }
+        _ => Ok(KernelTier::Exact),
+    }
+}
+
+impl fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KernelTier::Exact => write!(f, "exact"),
+            KernelTier::Packed => write!(f, "packed"),
+        }
+    }
+}
+
+impl FromStr for KernelTier {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<KernelTier> {
+        KernelTier::parse(s)
+    }
+}
+
+/// Process-global tier knob: 0 = unset, 1 = exact, 2 = packed.
+static GLOBAL_KERNEL: AtomicU8 = AtomicU8::new(0);
+
+/// Set the process-global kernel tier (CLI `--kernel`,
+/// `Session::builder().kernel(..)`). Per-session `DecodeOpts::kernel`
+/// still wins where given.
+pub fn set_kernel(t: KernelTier) {
+    let v = match t {
+        KernelTier::Exact => 1,
+        KernelTier::Packed => 2,
+    };
+    GLOBAL_KERNEL.store(v, Ordering::Relaxed);
+}
+
+/// Clear the process-global tier knob back to "unset" (env/default rule).
+pub fn clear_kernel() {
+    GLOBAL_KERNEL.store(0, Ordering::Relaxed);
+}
+
+// --------------------------------------------------------- accuracy budget
+
+/// Absolute logit tolerance of the packed tier vs the exact oracle.
+pub const PACKED_LOGIT_ATOL: f32 = 5e-3;
+/// Relative logit tolerance of the packed tier vs the exact oracle.
+pub const PACKED_LOGIT_RTOL: f32 = 5e-3;
+
+/// The accuracy-budget predicate: `|got - want| <= atol + rtol * |want|`.
+pub fn within_budget(got: f32, want: f32) -> bool {
+    (got - want).abs() <= PACKED_LOGIT_ATOL + PACKED_LOGIT_RTOL * want.abs()
+}
+
+// --------------------------------------------------------- packed weights
+
+/// Quantization format of a [`PackedWeight`] (the quantizable subset of
+/// `refmodel::Format`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackedFormat {
+    Nvfp4,
+    Mxfp4,
+    Int4,
+}
+
+impl fmt::Display for PackedFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PackedFormat::Nvfp4 => write!(f, "nvfp4"),
+            PackedFormat::Mxfp4 => write!(f, "mxfp4"),
+            PackedFormat::Int4 => write!(f, "int4"),
+        }
+    }
+}
+
+/// Output elements per parallel chunk of the packed GEMM kernels. Each
+/// element is an independent k-length dot product, so any tile size is
+/// bit-invariant; 64 keeps chunks ~micro-task sized.
+const OUT_TILE: usize = 64;
+
+/// A (k, n) weight quantized along K and kept in packed form: the decode
+/// datapath reads u8 nibbles + per-block scales instead of a full f32
+/// copy. Layout is the (n, k)-transposed view — one output row's K-dim
+/// codes are contiguous, so the matvec kernel streams them linearly.
+#[derive(Clone, Debug)]
+pub struct PackedWeight {
+    fmt: PackedFormat,
+    k: usize,
+    n: usize,
+    /// Nibble codes, (n, k/2) bytes: element 2j of transposed row r in the
+    /// low nibble of `codes[r*k/2 + j]`, element 2j+1 in the high nibble.
+    codes: Vec<u8>,
+    /// NVFP4: one E4M3 scale code per 16-element block, (n, k/16).
+    sblock: Vec<u8>,
+    /// MXFP4: one f32 scale per 32-element block, (n, k/32).
+    /// INT4: one f32 scale per output row, (n).
+    sfloat: Vec<f32>,
+    /// NVFP4 second-level per-tensor scale.
+    tensor_scale: f32,
+}
+
+impl PackedWeight {
+    /// Pack a row-major (k, n) weight along its contraction axis, with
+    /// the exact quantization `refmodel::quant_weight_into` applies:
+    /// `dequantize_into` reproduces the fake-quant f32 weights bitwise.
+    pub fn pack(w: &[f32], k: usize, n: usize, fmt: PackedFormat) -> Result<PackedWeight> {
+        if w.len() != k * n {
+            bail!("packed weight shape mismatch: len {} != {k}x{n}", w.len());
+        }
+        match fmt {
+            PackedFormat::Nvfp4 if k % NV_BLOCK != 0 => {
+                bail!("nvfp4 packed weights need k % {NV_BLOCK} == 0, got {k}")
+            }
+            PackedFormat::Mxfp4 if k % MXFP4_BLOCK != 0 => {
+                bail!("mxfp4 packed weights need k % {MXFP4_BLOCK} == 0, got {k}")
+            }
+            PackedFormat::Int4 if k % 2 != 0 => {
+                bail!("int4 packed weights need k % 2 == 0, got {k}")
+            }
+            _ => {}
+        }
+        // Transposed (n, k) staging view — the same intermediate the exact
+        // tier quantizes, so block boundaries and fold orders line up.
+        let mut t = vec![0f32; k * n];
+        for r in 0..k {
+            for c in 0..n {
+                t[c * k + r] = w[r * n + c];
+            }
+        }
+        let mut pw = PackedWeight {
+            fmt,
+            k,
+            n,
+            codes: vec![0u8; k * n / 2],
+            sblock: Vec::new(),
+            sfloat: Vec::new(),
+            tensor_scale: 1.0,
+        };
+        match fmt {
+            PackedFormat::Nvfp4 => {
+                pw.tensor_scale = nvfp4::tensor_scale(&t);
+                pw.sblock = vec![0u8; k * n / NV_BLOCK];
+                for (b, sb) in pw.sblock.iter_mut().enumerate() {
+                    let blk = &t[b * NV_BLOCK..(b + 1) * NV_BLOCK];
+                    let bytes = &mut pw.codes[b * NV_BLOCK / 2..(b + 1) * NV_BLOCK / 2];
+                    *sb = nvfp4::quantize_block(blk, pw.tensor_scale, bytes);
+                }
+            }
+            PackedFormat::Mxfp4 => {
+                pw.sfloat = vec![0f32; k * n / MXFP4_BLOCK];
+                for (b, sf) in pw.sfloat.iter_mut().enumerate() {
+                    let blk = &t[b * MXFP4_BLOCK..(b + 1) * MXFP4_BLOCK];
+                    let bytes = &mut pw.codes[b * MXFP4_BLOCK / 2..(b + 1) * MXFP4_BLOCK / 2];
+                    let amax = blk.iter().fold(0f32, |m, v| m.max(v.abs()));
+                    if amax == 0.0 {
+                        // scale 0 + zero codes decode to +0.0, matching the
+                        // baseline's untouched-output branch
+                        continue;
+                    }
+                    let e = amax.log2().floor() - 2.0;
+                    let scale = e.exp2();
+                    *sf = scale;
+                    // identical reciprocal-vs-divide selection to the
+                    // baseline codec so the codes (and -0.0 signs) match
+                    let inv = 1.0 / scale;
+                    if inv.is_normal() {
+                        for (byte, pair) in bytes.iter_mut().zip(blk.chunks_exact(2)) {
+                            *byte = e2m1_encode(pair[0] * inv) | (e2m1_encode(pair[1] * inv) << 4);
+                        }
+                    } else {
+                        for (byte, pair) in bytes.iter_mut().zip(blk.chunks_exact(2)) {
+                            *byte =
+                                e2m1_encode(pair[0] / scale) | (e2m1_encode(pair[1] / scale) << 4);
+                        }
+                    }
+                }
+            }
+            PackedFormat::Int4 => {
+                pw.sfloat = vec![0f32; n];
+                for (r, sf) in pw.sfloat.iter_mut().enumerate() {
+                    let row = &t[r * k..(r + 1) * k];
+                    let bytes = &mut pw.codes[r * k / 2..(r + 1) * k / 2];
+                    let amax = row.iter().fold(0f32, |m, v| m.max(v.abs()));
+                    let s = if amax > 0.0 { amax / 7.0 } else { 1.0 };
+                    *sf = s;
+                    for (byte, pair) in bytes.iter_mut().zip(row.chunks_exact(2)) {
+                        *byte = int4_encode(pair[0] / s) | (int4_encode(pair[1] / s) << 4);
+                    }
+                }
+            }
+        }
+        Ok(pw)
+    }
+
+    pub fn format(&self) -> PackedFormat {
+        self.fmt
+    }
+
+    /// (k, n) logical dims of the packed weight.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+
+    /// Bytes the packed representation actually holds (nibble planes +
+    /// block scales + the tensor scale) — the decode weight footprint.
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.len() + self.sblock.len() + self.sfloat.len() * 4 + 4
+    }
+
+    /// Dequantize back to the row-major (k, n) f32 weights — bit-identical
+    /// to what the exact tier's `quant_weight_into` materializes. Oracle
+    /// path for tests; the kernels below never call it.
+    pub fn dequantize_into(&self, out: &mut Vec<f32>) {
+        let (k, n) = (self.k, self.n);
+        out.clear();
+        out.resize(k * n, 0.0);
+        for r in 0..n {
+            for j in 0..k {
+                out[j * n + r] = self.element(r, j);
+            }
+        }
+    }
+
+    /// One dequantized element of transposed row `r`, K-index `j`.
+    fn element(&self, r: usize, j: usize) -> f32 {
+        let byte = self.codes[(r * self.k + j) / 2];
+        let nib = if j % 2 == 0 { byte & 0x0f } else { byte >> 4 };
+        match self.fmt {
+            PackedFormat::Nvfp4 => {
+                let sb = self.sblock[(r * self.k + j) / NV_BLOCK];
+                let denom = e4m3_decode(sb) * self.tensor_scale;
+                nvfp4_nibble(nib) * denom
+            }
+            PackedFormat::Mxfp4 => {
+                let scale = self.sfloat[(r * self.k + j) / MXFP4_BLOCK];
+                nvfp4_nibble(nib) * scale
+            }
+            PackedFormat::Int4 => int4_decode(nib) * self.sfloat[r],
+        }
+    }
+
+    /// y[r] = Σ_j w[j][r] · x[j] over the packed codes: nibble-pair LUT
+    /// loads with the block-scale product hoisted per block. One fixed f32
+    /// chain per output element — bit-identical at every thread count.
+    pub fn matvec_into(&self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        self.gemm_into(x, 1, out)
+    }
+
+    /// Row-major (m, k) × packed (k, n) → (m, n). Small-M decode GEMM:
+    /// parallel over output tiles, each element an independent dot.
+    pub fn gemm_into(&self, x: &[f32], m: usize, out: &mut [f32]) -> Result<()> {
+        let (k, n) = (self.k, self.n);
+        if x.len() != m * k || out.len() != m * n {
+            bail!(
+                "packed gemm shape mismatch: x {} != {m}x{k} or out {} != {m}x{n}",
+                x.len(),
+                out.len()
+            );
+        }
+        pool::for_chunks(m * n * k, out, OUT_TILE, |ci, oc| {
+            let base = ci * OUT_TILE;
+            for (j, o) in oc.iter_mut().enumerate() {
+                let flat = base + j;
+                let (i, r) = (flat / n, flat % n);
+                *o = self.dot_row(r, &x[i * k..(i + 1) * k]);
+            }
+        });
+        Ok(())
+    }
+
+    /// The packed dot micro-kernel: one transposed weight row against one
+    /// activation row. `acc += scale_b * Σ_pairs (lut[byte]·x_pair)`.
+    #[inline]
+    fn dot_row(&self, r: usize, x: &[f32]) -> f32 {
+        let k = self.k;
+        let bytes = &self.codes[r * k / 2..(r + 1) * k / 2];
+        match self.fmt {
+            PackedFormat::Nvfp4 => {
+                let scales = &self.sblock[r * k / NV_BLOCK..(r + 1) * k / NV_BLOCK];
+                let mut acc = 0f32;
+                for (bi, (&sb, bb)) in
+                    scales.iter().zip(bytes.chunks_exact(NV_BLOCK / 2)).enumerate()
+                {
+                    let denom = e4m3_decode(sb) * self.tensor_scale;
+                    let xb = &x[bi * NV_BLOCK..(bi + 1) * NV_BLOCK];
+                    let mut ba = 0f32;
+                    for (pair, &byte) in xb.chunks_exact(2).zip(bb) {
+                        let d = &NIBBLE_PAIR_LUT[byte as usize];
+                        ba += d[0] * pair[0];
+                        ba += d[1] * pair[1];
+                    }
+                    acc += denom * ba;
+                }
+                acc
+            }
+            PackedFormat::Mxfp4 => {
+                let scales = &self.sfloat[r * k / MXFP4_BLOCK..(r + 1) * k / MXFP4_BLOCK];
+                let mut acc = 0f32;
+                for (bi, (&scale, bb)) in
+                    scales.iter().zip(bytes.chunks_exact(MXFP4_BLOCK / 2)).enumerate()
+                {
+                    let xb = &x[bi * MXFP4_BLOCK..(bi + 1) * MXFP4_BLOCK];
+                    let mut ba = 0f32;
+                    for (pair, &byte) in xb.chunks_exact(2).zip(bb) {
+                        let d = &NIBBLE_PAIR_LUT[byte as usize];
+                        ba += d[0] * pair[0];
+                        ba += d[1] * pair[1];
+                    }
+                    acc += scale * ba;
+                }
+                acc
+            }
+            PackedFormat::Int4 => {
+                let s = self.sfloat[r];
+                let mut ba = 0f32;
+                for (pair, &byte) in x.chunks_exact(2).zip(bytes) {
+                    let d = &INT4_PAIR_LUT[byte as usize];
+                    ba += d[0] * pair[0];
+                    ba += d[1] * pair[1];
+                }
+                s * ba
+            }
+        }
+    }
+
+    /// Test-only raw constructor (exhaustive nibble/scale-class sweeps).
+    #[cfg(test)]
+    pub(crate) fn from_raw_nvfp4(
+        codes: Vec<u8>,
+        sblock: Vec<u8>,
+        tensor_scale: f32,
+        k: usize,
+        n: usize,
+    ) -> PackedWeight {
+        PackedWeight {
+            fmt: PackedFormat::Nvfp4,
+            k,
+            n,
+            codes,
+            sblock,
+            sfloat: Vec::new(),
+            tensor_scale,
+        }
+    }
+}
+
+/// Decode an E2M1 nibble (shared grid with the NVFP4/MXFP4 codecs).
+#[inline]
+fn nvfp4_nibble(nib: u8) -> f32 {
+    NIBBLE_PAIR_LUT[nib as usize][0]
+}
+
+/// Encode an already-scaled INT4 value as a sign-magnitude nibble
+/// (bit 3 = sign, bits 0..2 = |q|). Sign-magnitude rather than two's
+/// complement so `-0.0` quantized values survive bitwise — the exact
+/// tier's `q * s` keeps the sign of a negative-rounded zero.
+#[inline]
+fn int4_encode(v: f32) -> u8 {
+    let q = v.round().clamp(-7.0, 7.0);
+    let sign = if q.is_sign_negative() { 0x8u8 } else { 0 };
+    sign | (q.abs() as u8)
+}
+
+/// Decode a sign-magnitude INT4 nibble to f32 (−0.0 for 0x8).
+#[inline]
+fn int4_decode(nib: u8) -> f32 {
+    INT4_PAIR_LUT[nib as usize][0]
+}
+
+const fn int4_decode_const(nib: u8) -> f32 {
+    let mag = (nib & 0x7) as f32;
+    if nib & 0x8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+const fn build_int4_pair_lut() -> [[f32; 2]; 256] {
+    let mut t = [[0f32; 2]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b] = [int4_decode_const((b & 0x0f) as u8), int4_decode_const((b >> 4) as u8)];
+        b += 1;
+    }
+    t
+}
+
+/// Both sign-magnitude INT4 nibbles of a packed byte decoded at once.
+static INT4_PAIR_LUT: [[f32; 2]; 256] = build_int4_pair_lut();
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::baselines;
+    use crate::util::rng::Rng;
+
+    fn randn(len: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..len).map(|_| r.normal() as f32).collect()
+    }
+
+    /// The exact tier's weight quantization (transpose → fake-quant rows
+    /// of the (n, k) view → transpose back), via the public codecs.
+    fn fake_quant_weight(w: &[f32], k: usize, n: usize, fmt: PackedFormat) -> Vec<f32> {
+        let mut t = vec![0f32; k * n];
+        for r in 0..k {
+            for c in 0..n {
+                t[c * k + r] = w[r * n + c];
+            }
+        }
+        let tq = match fmt {
+            PackedFormat::Nvfp4 => nvfp4::fake_quant(&t, n, k),
+            PackedFormat::Mxfp4 => baselines::mxfp4_fake_quant(&t, n, k),
+            PackedFormat::Int4 => baselines::int4_fake_quant(&t, n, k),
+        };
+        let mut out = vec![0f32; k * n];
+        for r in 0..k {
+            for c in 0..n {
+                out[r * n + c] = tq[c * k + r];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn kernel_tier_parse_display_roundtrip_and_rejects_garbage() {
+        for t in [KernelTier::Exact, KernelTier::Packed] {
+            assert_eq!(KernelTier::parse(&t.to_string()).unwrap(), t);
+        }
+        assert_eq!(KernelTier::parse("f32").unwrap(), KernelTier::Exact);
+        assert_eq!(KernelTier::parse("LUT").unwrap(), KernelTier::Packed);
+        assert_eq!(" Packed ".parse::<KernelTier>().unwrap(), KernelTier::Packed);
+        assert!(KernelTier::parse("fast").is_err());
+        assert_eq!(KernelTier::default(), KernelTier::Exact);
+    }
+
+    #[test]
+    fn resolve_prefers_explicit_then_global_then_env_then_exact() {
+        // pure-precedence helper: no process globals touched, so this
+        // can't race concurrently-running decode tests.
+        let r = |e, g, v| resolve_from(e, g, v).unwrap();
+        assert_eq!(r(Some(KernelTier::Packed), 1, Some("exact")), KernelTier::Packed);
+        assert_eq!(r(None, 2, Some("exact")), KernelTier::Packed);
+        assert_eq!(r(None, 1, Some("packed")), KernelTier::Exact);
+        assert_eq!(r(None, 0, Some("packed")), KernelTier::Packed);
+        assert_eq!(r(None, 0, Some("  ")), KernelTier::Exact);
+        assert_eq!(r(None, 0, None), KernelTier::Exact);
+        assert!(resolve_from(None, 0, Some("warp")).is_err());
+    }
+
+    #[test]
+    fn packed_dequantize_matches_fake_quant_oracle_bitwise_all_formats() {
+        let (k, n) = (64usize, 24usize);
+        for (fmt, seed) in [
+            (PackedFormat::Nvfp4, 11u64),
+            (PackedFormat::Mxfp4, 12),
+            (PackedFormat::Int4, 13),
+        ] {
+            let mut w = randn(k * n, seed);
+            // edge content: an all-zero contraction block, an outlier, and
+            // values that round to -0.0 in the int4 grid
+            for r in 0..NV_BLOCK {
+                w[r * n + 3] = 0.0;
+            }
+            w[5 * n + 7] = 57.0;
+            w[6 * n + 7] = -1e-6;
+            let pw = PackedWeight::pack(&w, k, n, fmt).unwrap();
+            let oracle = fake_quant_weight(&w, k, n, fmt);
+            let mut got = Vec::new();
+            pw.dequantize_into(&mut got);
+            assert_eq!(got.len(), oracle.len());
+            for (i, (a, b)) in got.iter().zip(&oracle).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{fmt} elem {i}: packed {a} vs fake-quant oracle {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_dot_all_256_nibble_pairs_across_scale_classes() {
+        // One 16-element NVFP4 block, every code byte in slot 0, across
+        // subnormal / normal / max-edge E4M3 block scales and three
+        // tensor scales. The kernel must equal the hand-hoisted chain
+        // bitwise and the dequantized-f32 dot within the accuracy budget.
+        let x = randn(NV_BLOCK, 21);
+        for sb in [0x00u8, 0x01, 0x07, 0x35, 0x7e] {
+            for ts in [1.0f32, 0.0078125, 0.37] {
+                for byte in 0u8..=255 {
+                    let mut codes = vec![0u8; NV_BLOCK / 2];
+                    codes[0] = byte;
+                    let pw = PackedWeight::from_raw_nvfp4(codes, vec![sb], ts, NV_BLOCK, 1);
+                    let mut out = [0f32; 1];
+                    pw.matvec_into(&x, &mut out).unwrap();
+                    // hand-hoisted expected chain (the kernel's op order):
+                    // the zero code bytes still contribute their ±0.0
+                    // products, exactly as the kernel accumulates them
+                    let denom = e4m3_decode(sb) * ts;
+                    let d = &NIBBLE_PAIR_LUT[byte as usize];
+                    let z = &NIBBLE_PAIR_LUT[0];
+                    let mut ba = 0f32;
+                    ba += d[0] * x[0];
+                    ba += d[1] * x[1];
+                    for pair in x[2..].chunks_exact(2) {
+                        ba += z[0] * pair[0];
+                        ba += z[1] * pair[1];
+                    }
+                    let expect = denom * ba;
+                    assert_eq!(
+                        out[0].to_bits(),
+                        expect.to_bits(),
+                        "sb {sb:#x} ts {ts} byte {byte:#x}: kernel {} vs chain {expect}",
+                        out[0]
+                    );
+                    // and the plain f32 dot over dequantized weights stays
+                    // inside the accuracy budget
+                    let mut wd = Vec::new();
+                    pw.dequantize_into(&mut wd);
+                    let plain: f32 = wd.iter().zip(&x).map(|(w, xv)| w * xv).sum();
+                    assert!(
+                        within_budget(out[0], plain),
+                        "sb {sb:#x} ts {ts} byte {byte:#x}: kernel {} vs f32 dot {plain}",
+                        out[0]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_thread_invariant_and_matches_matvec_bitwise() {
+        // 8x64x256 = 131k MACs: past PAR_MIN_WORK, so 4 threads really
+        // partitions the output tiles.
+        let (m, k, n) = (8usize, 64usize, 256usize);
+        let w = randn(k * n, 31);
+        let x = randn(m * k, 32);
+        for fmt in [PackedFormat::Nvfp4, PackedFormat::Mxfp4, PackedFormat::Int4] {
+            let pw = PackedWeight::pack(&w, k, n, fmt).unwrap();
+            let run = |t: usize| {
+                pool::with_threads(t, || {
+                    let mut out = vec![0f32; m * n];
+                    pw.gemm_into(&x, m, &mut out).unwrap();
+                    out
+                })
+            };
+            let o1 = run(1);
+            let o4 = run(4);
+            for (i, (a, b)) in o1.iter().zip(&o4).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{fmt} out {i}: 1-thread {a} vs 4-thread {b}");
+            }
+            let mut row = vec![0f32; n];
+            for i in 0..m {
+                pw.matvec_into(&x[i * k..(i + 1) * k], &mut row).unwrap();
+                for (a, b) in row.iter().zip(&o1[i * n..(i + 1) * n]) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{fmt} row {i}: matvec vs gemm");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_storage_is_many_times_smaller_than_f32() {
+        let (k, n) = (256usize, 64usize);
+        let w = randn(k * n, 41);
+        let f32_bytes = k * n * 4;
+        for (fmt, floor) in [
+            (PackedFormat::Nvfp4, 7usize),
+            (PackedFormat::Mxfp4, 6),
+            (PackedFormat::Int4, 7),
+        ] {
+            let pw = PackedWeight::pack(&w, k, n, fmt).unwrap();
+            let bytes = pw.storage_bytes();
+            assert!(
+                bytes * floor < f32_bytes,
+                "{fmt}: {bytes} packed bytes vs {f32_bytes} f32 (floor {floor}x)"
+            );
+            assert!(bytes > k * n / 2, "{fmt}: {bytes} suspiciously small");
+        }
+    }
+
+    #[test]
+    fn packed_shape_errors() {
+        let w = vec![0f32; 8 * 4];
+        assert!(PackedWeight::pack(&w, 8, 4, PackedFormat::Nvfp4).is_err());
+        assert!(PackedWeight::pack(&w, 8, 4, PackedFormat::Mxfp4).is_err());
+        assert!(PackedWeight::pack(&w[..9], 3, 3, PackedFormat::Int4).is_err());
+        assert!(PackedWeight::pack(&w, 7, 4, PackedFormat::Int4).is_err());
+        let pw = PackedWeight::pack(&[0.5f32; 16 * 2], 16, 2, PackedFormat::Nvfp4).unwrap();
+        assert_eq!(pw.dims(), (16, 2));
+        let mut out = vec![0f32; 2];
+        assert!(pw.matvec_into(&[0.0; 8], &mut out).is_err());
+        assert!(pw.gemm_into(&[0.0; 16], 1, &mut [0f32; 5]).is_err());
+    }
+
+    #[test]
+    fn int4_negative_zero_survives_packing() {
+        // a tiny negative value rounds to -0.0 in the int4 grid; the
+        // exact tier's q*s keeps that sign, so the packed layout must too
+        let (k, n) = (4usize, 1usize);
+        let w = vec![1.0f32, -1e-8, 0.5, -0.25];
+        let pw = PackedWeight::pack(&w, k, n, PackedFormat::Int4).unwrap();
+        let oracle = fake_quant_weight(&w, k, n, PackedFormat::Int4);
+        assert!(oracle[1].to_bits() == (-0.0f32).to_bits(), "fixture lost its -0.0");
+        let mut got = Vec::new();
+        pw.dequantize_into(&mut got);
+        for (a, b) in got.iter().zip(&oracle) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn within_budget_combines_absolute_and_relative_terms() {
+        assert!(within_budget(0.0, 0.004));
+        assert!(!within_budget(0.0, 0.02));
+        assert!(within_budget(100.0, 100.4));
+        assert!(!within_budget(100.0, 101.0));
+    }
+}

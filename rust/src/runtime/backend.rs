@@ -139,6 +139,14 @@ pub trait DecodeSession {
     fn paged_stats(&self) -> Option<PagedStats> {
         None
     }
+
+    /// Bytes of weight storage this session's decode path reads per token
+    /// (f32 copies on the exact tier, packed nibbles + scales on the
+    /// packed tier). `0` when the backend doesn't bind weights per
+    /// session.
+    fn decode_weight_bytes(&self) -> usize {
+        0
+    }
 }
 
 /// One execution backend: compiles manifest artifacts and moves tensors.

@@ -24,6 +24,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::quant::packed::KernelTier;
+
 /// Knobs for opening a stateful decode session (see
 /// [`crate::runtime::backend::ExecBackend::open_decode`]). The default is
 /// the PR 5 behavior: dense rows, no prefix cache, unbounded state.
@@ -40,11 +42,14 @@ pub struct DecodeOpts {
     /// unbounded). When tight, LRU prefix entries are evicted before a
     /// prefill/step fails cleanly.
     pub max_pages: usize,
+    /// GEMM kernel tier for this session; `None` follows the process
+    /// default (`--kernel` / `QADX_KERNEL`, else the exact f32 tier).
+    pub kernel: Option<KernelTier>,
 }
 
 impl Default for DecodeOpts {
     fn default() -> DecodeOpts {
-        DecodeOpts { page_size: 0, prefix_cache: 0, max_pages: 0 }
+        DecodeOpts { page_size: 0, prefix_cache: 0, max_pages: 0, kernel: None }
     }
 }
 
@@ -62,6 +67,9 @@ pub struct PagedStats {
     pub prefix_misses: u64,
     /// Copy-on-write page copies (divergence after a shared prefix).
     pub cow_copies: u64,
+    /// Bytes of bound decode weights (f32 copies on the exact tier,
+    /// packed nibbles + scales on the packed tier).
+    pub decode_weight_bytes: usize,
 }
 
 /// A slab of fixed-size pages with per-page refcounts and a LIFO free
@@ -446,6 +454,6 @@ mod tests {
     #[test]
     fn decode_opts_default_is_dense() {
         let o = DecodeOpts::default();
-        assert_eq!(o, DecodeOpts { page_size: 0, prefix_cache: 0, max_pages: 0 });
+        assert_eq!(o, DecodeOpts { page_size: 0, prefix_cache: 0, max_pages: 0, kernel: None });
     }
 }

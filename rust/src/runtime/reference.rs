@@ -16,12 +16,17 @@
 //! while staying bit-identical at every thread count (the determinism
 //! contract asserted by rust/tests/threading.rs).
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 use anyhow::{bail, Context, Result};
+
+use crate::quant::packed::KernelTier;
 
 use super::backend::{Buffer, DecodeSession, Dtype, ExecBackend, Executable};
 use super::manifest::{ArgDef, Manifest, ModelEntry};
 use super::paged::{DecodeOpts, PagedStats};
-use super::refmodel::{self, DecodeCtx, DecodeRow, LossKind, RefCfg};
+use super::refmodel::{self, BoundWeights, DecodeCtx, DecodeRow, LossKind, RefCfg};
 
 /// Host-side tensor payload of a reference-backend buffer.
 pub(crate) enum HostData {
@@ -55,12 +60,74 @@ struct RefProgram {
     kind: ProgKind,
 }
 
+/// Most-recently-used entries a backend keeps in its bound-weight cache.
+/// Serving alternates between at most a handful of (model, format, tier)
+/// bindings; four covers an A/B pair on two tiers without unbounded growth.
+const BOUND_CACHE_CAP: usize = 4;
+
+/// Identity of one decode weight binding. Two `open_decode` calls reuse a
+/// binding only when the model, precision format, kernel tier, and the
+/// exact parameter bits all match — the fingerprint is FNV-1a over the f32
+/// bit patterns, so a single changed weight forces a rebind.
+#[derive(Clone, PartialEq, Eq)]
+struct BoundKey {
+    model: String,
+    fmt: String,
+    tier: KernelTier,
+    len: usize,
+    fingerprint: u64,
+}
+
+fn fnv1a_f32(data: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in data {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
 #[derive(Default)]
-pub struct ReferenceBackend;
+pub struct ReferenceBackend {
+    /// MRU cache of decode weight bindings, shared across `open_decode`
+    /// calls on this backend instance. Binding quantizes (exact tier) or
+    /// packs (packed tier) every GEMM weight; before this cache each
+    /// `generate` call on a serve scheduler re-did that work per request.
+    bound: RefCell<Vec<(BoundKey, Rc<BoundWeights>)>>,
+}
 
 impl ReferenceBackend {
     pub fn new() -> ReferenceBackend {
-        ReferenceBackend
+        ReferenceBackend::default()
+    }
+
+    /// Fetch-or-bind the weights for `key`, refreshing its MRU position.
+    fn cached_bound(
+        &self,
+        key: BoundKey,
+        cfg: &RefCfg,
+        params: &[f32],
+    ) -> Result<Rc<BoundWeights>> {
+        let mut cache = self.bound.borrow_mut();
+        if let Some(pos) = cache.iter().position(|(k, _)| *k == key) {
+            let hit = cache.remove(pos);
+            let bw = Rc::clone(&hit.1);
+            cache.push(hit);
+            return Ok(bw);
+        }
+        let bw = Rc::new(BoundWeights::bind(cfg, params.to_vec())?);
+        if cache.len() >= BOUND_CACHE_CAP {
+            cache.remove(0);
+        }
+        cache.push((key, Rc::clone(&bw)));
+        Ok(bw)
+    }
+
+    #[cfg(test)]
+    fn bound_cache_len(&self) -> usize {
+        self.bound.borrow().len()
     }
 }
 
@@ -77,7 +144,12 @@ fn parse_key(manifest: &Manifest, model: &ModelEntry, key: &str) -> Result<ProgK
             Some(f) => (f, true),
             None => (rest, false),
         };
-        return Ok(ProgKind::Fwd { cfg: RefCfg::for_key_format(model, fmt)?, last, from_state });
+        let mut cfg = RefCfg::for_key_format(model, fmt)?;
+        // Stateless forwards honor the session/env kernel tier too: a
+        // packed session's cold prefill and its stateless cross-checks
+        // must agree on which GEMM kernel produced the logits.
+        cfg.kernel = KernelTier::resolve(None)?;
+        return Ok(ProgKind::Fwd { cfg, last, from_state });
     }
     let (stem, fmt) = key
         .split_once('_')
@@ -260,6 +332,10 @@ impl DecodeSession for RefDecodeSession {
     fn paged_stats(&self) -> Option<PagedStats> {
         self.ctx.paged_stats()
     }
+
+    fn decode_weight_bytes(&self) -> usize {
+        self.ctx.decode_weight_bytes()
+    }
 }
 
 impl ExecBackend for ReferenceBackend {
@@ -438,7 +514,8 @@ impl ExecBackend for ReferenceBackend {
             Some(f) => (f, true),
             None => (rest, false),
         };
-        let cfg = RefCfg::for_key_format(model, fmt)?;
+        let mut cfg = RefCfg::for_key_format(model, fmt)?;
+        cfg.kernel = KernelTier::resolve(opts.kernel)?;
         let data = f32_data(weights, "decode weights")?;
         if from_state {
             if data.len() < model.param_count {
@@ -451,7 +528,16 @@ impl ExecBackend for ReferenceBackend {
         } else if data.len() != model.param_count {
             bail!("params len {} != param_count {}", data.len(), model.param_count);
         }
-        let ctx = DecodeCtx::with_opts(cfg, data[..model.param_count].to_vec(), *opts)?;
+        let params = &data[..model.param_count];
+        let key = BoundKey {
+            model: model.name.clone(),
+            fmt: fmt.to_string(),
+            tier: cfg.kernel,
+            len: params.len(),
+            fingerprint: fnv1a_f32(params),
+        };
+        let bound = self.cached_bound(key, &cfg, params)?;
+        let ctx = DecodeCtx::with_bound(cfg, bound, *opts)?;
         let rows = (0..rows.max(1)).map(|_| ctx.new_row()).collect();
         Ok(Some(Box::new(RefDecodeSession { ctx, rows })))
     }
@@ -594,6 +680,52 @@ mod tests {
         assert_eq!(a.len(0), 4);
         // out-of-range rows error cleanly
         assert!(a.prefill(5, &[1], &mut la).is_err());
+    }
+
+    #[test]
+    fn open_decode_reuses_bound_weights_across_calls() {
+        let manifest = synth_manifest("bound_cache");
+        let model = manifest.model("ref-b").unwrap().clone();
+        let be = ReferenceBackend::new();
+        let mut params = vec![0f32; model.param_count];
+        for (i, v) in params.iter_mut().enumerate() {
+            *v = ((i * 29 % 97) as f32 - 48.0) * 1e-2;
+        }
+        let w = be.upload_f32(&params, &[model.param_count]).unwrap();
+        let dflt = DecodeOpts::default();
+        let mut a = be.open_decode(&manifest, &model, "fwd_bf16", &w, 1, &dflt).unwrap().unwrap();
+        assert_eq!(be.bound_cache_len(), 1);
+        let mut b = be.open_decode(&manifest, &model, "fwd_bf16", &w, 1, &dflt).unwrap().unwrap();
+        assert_eq!(be.bound_cache_len(), 1, "identical weights must reuse the cached binding");
+        // the shared binding serves both sessions bit-identically
+        let (mut la, mut lb) = (Vec::new(), Vec::new());
+        a.prefill(0, &[1, 4, 2], &mut la).unwrap();
+        b.prefill(0, &[1, 4, 2], &mut lb).unwrap();
+        for (x, y) in la.iter().zip(&lb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // one changed weight forces a fresh binding (fingerprint mismatch)
+        params[3] += 1e-3;
+        let w2 = be.upload_f32(&params, &[model.param_count]).unwrap();
+        be.open_decode(&manifest, &model, "fwd_bf16", &w2, 1, &dflt).unwrap().unwrap();
+        assert_eq!(be.bound_cache_len(), 2);
+    }
+
+    #[test]
+    fn bound_cache_evicts_beyond_capacity() {
+        let manifest = synth_manifest("bound_evict");
+        let model = manifest.model("ref-b").unwrap().clone();
+        let be = ReferenceBackend::new();
+        let dflt = DecodeOpts::default();
+        let mut params = vec![0f32; model.param_count];
+        for fill in 0..BOUND_CACHE_CAP + 1 {
+            for v in params.iter_mut() {
+                *v = (fill as f32 + 1.0) * 1e-2;
+            }
+            let w = be.upload_f32(&params, &[model.param_count]).unwrap();
+            be.open_decode(&manifest, &model, "fwd_bf16", &w, 1, &dflt).unwrap().unwrap();
+        }
+        assert_eq!(be.bound_cache_len(), BOUND_CACHE_CAP);
     }
 
     #[test]

@@ -1,0 +1,211 @@
+//! Quantized-domain (packed) GEMM kernel tier, end to end.
+//!
+//! The packed tier computes decode GEMMs directly on the 4-bit packed
+//! representation (nibble planes + block scales) instead of the exact
+//! tier's re-materialized fake-quantized f32 weights. It is gated by an
+//! accuracy budget, not bit-exactness: for every format and block stack,
+//! greedy decode must pick the *identical* token sequence and every
+//! logit must stay within `PACKED_LOGIT_ATOL/RTOL` of the exact oracle
+//! (MXFP4's power-of-two block scales factor out of the dot exactly, so
+//! that format is asserted bitwise). The packed binding must also store
+//! several times fewer weight bytes — the gauge the serve façade exports
+//! as `decode_weight_bytes`.
+//!
+//! Prompts here are a single token: the exact tier's cold prefill runs
+//! the stateless forward, whose joint prompt-activation scale degenerates
+//! to the per-row step scale at length 1 — so any divergence beyond the
+//! budget is the kernel's fault, never the known prefill scale split.
+//!
+//! Entirely hermetic: reference backend over synthetic manifests.
+
+mod common;
+
+use qadx::api::{DecodeMode, ServeCfg, ServeWeights};
+use qadx::coordinator::init_params;
+use qadx::eval::SampleCfg;
+use qadx::quant::packed::within_budget;
+use qadx::quant::KernelTier;
+use qadx::runtime::{DecodeOpts, ModelRuntime, SynthSpec};
+use qadx::util::pool;
+use qadx::util::rng::Rng;
+
+/// The hybrid stack the packed tier must track: attention + SSM + MoE,
+/// d_model 32 so every format's block width divides the contraction dim
+/// (MXFP4 needs k % 32 == 0). Declares all three quantized fwd keys.
+fn hybrid_spec(name: &str) -> SynthSpec {
+    let mut spec = common::small_spec(name);
+    spec.d_model = 32;
+    spec.n_heads = 2;
+    spec.d_ff = 32;
+    spec.vocab = 32;
+    spec.seq_len = 8;
+    spec.blocks = vec!["attn".into(), "ssm".into(), "moe".into()];
+    spec.n_experts = 3;
+    spec.artifact_keys = vec!["fwd_nvfp4".into(), "fwd_mxfp4".into(), "fwd_int4".into()];
+    spec
+}
+
+fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn kernel_opts(tier: KernelTier) -> DecodeOpts {
+    DecodeOpts { kernel: Some(tier), ..DecodeOpts::default() }
+}
+
+/// Open one exact and one packed session over identical weights, prefill
+/// one token, then greedy-decode to capacity in lockstep: same argmax at
+/// every position, every packed logit within the accuracy budget, and
+/// the packed binding at least 4x smaller than the exact f32 copies.
+/// Returns the packed logit rows for cross-run comparisons.
+fn assert_packed_matches_exact_greedy(tag: &str, fwd_key: &str) -> Vec<Vec<f32>> {
+    let engine = common::reference_engine(tag, &[hybrid_spec("packed-sim")]);
+    let rt = ModelRuntime::new(&engine, "packed-sim").unwrap();
+    let params = init_params(&rt.model, 31);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let mut exact = engine
+        .open_decode_opts(&rt.model, fwd_key, &p_buf, 1, &kernel_opts(KernelTier::Exact))
+        .unwrap()
+        .expect("reference backend has stateful decode");
+    let mut packed = engine
+        .open_decode_opts(&rt.model, fwd_key, &p_buf, 1, &kernel_opts(KernelTier::Packed))
+        .unwrap()
+        .expect("reference backend has stateful decode");
+    let (eb, pb) = (exact.decode_weight_bytes(), packed.decode_weight_bytes());
+    assert!(pb > 0, "packed binding must report its storage ({fwd_key})");
+    assert!(pb * 4 < eb, "packed {pb}B must be >4x below exact {eb}B ({fwd_key})");
+
+    let mut rb = Rng::new(31 ^ 0x77);
+    let mut tok = rb.range(1, rt.model.vocab as i64) as i32;
+    let (mut le, mut lp) = (Vec::new(), Vec::new());
+    exact.prefill(0, &[tok], &mut le).unwrap();
+    packed.prefill(0, &[tok], &mut lp).unwrap();
+    let mut rows = Vec::new();
+    for pos in 1..rt.model.seq_len {
+        let ea = argmax(&le);
+        assert_eq!(
+            argmax(&lp),
+            ea,
+            "greedy token diverged at position {pos} ({fwd_key}, {tag})"
+        );
+        for (j, (&got, &want)) in lp.iter().zip(&le).enumerate() {
+            assert!(
+                within_budget(got, want),
+                "logit {j} off budget at position {pos} ({fwd_key}): {got} vs {want}"
+            );
+        }
+        rows.push(lp.clone());
+        tok = ea as i32;
+        exact.step(0, tok, &mut le).unwrap();
+        packed.step(0, tok, &mut lp).unwrap();
+    }
+    assert_eq!(argmax(&lp), argmax(&le), "final greedy token diverged ({fwd_key})");
+    rows.push(lp.clone());
+    common::cleanup(tag);
+    rows
+}
+
+#[test]
+fn packed_matches_exact_greedy_nvfp4() {
+    assert_packed_matches_exact_greedy("packed_e2e_nvfp4", "fwd_nvfp4");
+}
+
+#[test]
+fn packed_matches_exact_greedy_mxfp4() {
+    // power-of-two block scales factor out of the dot exactly, so the
+    // packed MXFP4 kernel is bitwise-identical, not merely within budget
+    let engine = common::reference_engine("packed_e2e_mxfp4", &[hybrid_spec("packed-sim")]);
+    let rt = ModelRuntime::new(&engine, "packed-sim").unwrap();
+    let params = init_params(&rt.model, 31);
+    let p_buf = rt.upload_params(&params).unwrap();
+    let mut exact = engine
+        .open_decode_opts(&rt.model, "fwd_mxfp4", &p_buf, 1, &kernel_opts(KernelTier::Exact))
+        .unwrap()
+        .unwrap();
+    let mut packed = engine
+        .open_decode_opts(&rt.model, "fwd_mxfp4", &p_buf, 1, &kernel_opts(KernelTier::Packed))
+        .unwrap()
+        .unwrap();
+    let mut rb = Rng::new(31 ^ 0x77);
+    let mut tok = rb.range(1, rt.model.vocab as i64) as i32;
+    let (mut le, mut lp) = (Vec::new(), Vec::new());
+    exact.prefill(0, &[tok], &mut le).unwrap();
+    packed.prefill(0, &[tok], &mut lp).unwrap();
+    for pos in 1..rt.model.seq_len {
+        for (j, (&got, &want)) in lp.iter().zip(&le).enumerate() {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "mxfp4 logit {j} not bitwise at position {pos}: {got} vs {want}"
+            );
+        }
+        tok = argmax(&le) as i32;
+        exact.step(0, tok, &mut le).unwrap();
+        packed.step(0, tok, &mut lp).unwrap();
+    }
+    common::cleanup("packed_e2e_mxfp4");
+}
+
+#[test]
+fn packed_matches_exact_greedy_int4() {
+    assert_packed_matches_exact_greedy("packed_e2e_int4", "fwd_int4");
+}
+
+#[test]
+fn packed_logits_are_thread_count_invariant_e2e() {
+    let one = pool::with_threads(1, || {
+        assert_packed_matches_exact_greedy("packed_e2e_t1", "fwd_nvfp4")
+    });
+    let four = pool::with_threads(4, || {
+        assert_packed_matches_exact_greedy("packed_e2e_t4", "fwd_nvfp4")
+    });
+    assert_eq!(one.len(), four.len());
+    for (pos, (a, b)) in one.iter().zip(&four).enumerate() {
+        for (j, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "packed logit {j} at position {pos} changed with thread count"
+            );
+        }
+    }
+}
+
+#[test]
+fn serve_reports_decode_weight_bytes_and_packed_shrinks_it() {
+    let tag = "packed_serve_gauge";
+    let session = common::reference_session(tag, &[hybrid_spec("packed-sim")]);
+    let ms = session.model("packed-sim").unwrap();
+    let cfg_for = |kernel| ServeCfg {
+        sample: SampleCfg { temperature: 0.7, top_p: 0.9, max_new: 4, seed: 9 },
+        weights: ServeWeights::Random { seed: 21 },
+        decode: DecodeMode::Step,
+        max_slots: 2,
+        kernel,
+        ..ServeCfg::default()
+    };
+    let mut exact = ms.server("fwd_nvfp4", &cfg_for(Some(KernelTier::Exact))).unwrap();
+    let mut packed = ms.server("fwd_nvfp4", &cfg_for(Some(KernelTier::Packed))).unwrap();
+    let (eb, pb) = (exact.stats().decode_weight_bytes, packed.stats().decode_weight_bytes);
+    assert!(eb > 0, "exact tier must report its bound f32 weight bytes");
+    assert!(pb > 0 && pb * 4 < eb, "packed {pb}B must be >4x below exact {eb}B");
+    assert!(
+        packed.stats().summary().contains("w-bytes"),
+        "summary must print the gauge: {}",
+        packed.stats().summary()
+    );
+    // the gauge survives a served request (sync_paged refreshes it)
+    for server in [&mut exact, &mut packed] {
+        server.submit(vec![1, 5, 3]).unwrap();
+        server.drain().unwrap();
+    }
+    assert_eq!(packed.stats().decode_weight_bytes, pb);
+    assert_eq!(exact.stats().decode_weight_bytes, eb);
+    common::cleanup(tag);
+}

@@ -67,7 +67,7 @@ fn assert_paged_matches_dense(
     let rows = prompts.len();
     let mut dense =
         open_session(&engine, &rt, &p_buf, fwd_key, rows, &DecodeOpts::default());
-    let opts = DecodeOpts { page_size, prefix_cache: 0, max_pages: 0 };
+    let opts = DecodeOpts { page_size, prefix_cache: 0, max_pages: 0, kernel: None };
     let mut paged = open_session(&engine, &rt, &p_buf, fwd_key, rows, &opts);
     assert!(dense.paged_stats().is_none(), "dense sessions report no paged stats");
 
@@ -178,7 +178,7 @@ fn prefix_cache_hit_prefill_is_bit_identical_to_cold() {
     let p_buf = rt.upload_params(&params).unwrap();
     let mut dense =
         open_session(&engine, &rt, &p_buf, "fwd_nvfp4", 3, &DecodeOpts::default());
-    let opts = DecodeOpts { page_size: 16, prefix_cache: 4, max_pages: 0 };
+    let opts = DecodeOpts { page_size: 16, prefix_cache: 4, max_pages: 0, kernel: None };
     let mut cached = open_session(&engine, &rt, &p_buf, "fwd_nvfp4", 3, &opts);
 
     // 20 tokens: the shared prefix itself straddles the page boundary.
@@ -235,7 +235,7 @@ fn cow_divergence_one_token_after_shared_prefix() {
     let p_buf = rt.upload_params(&params).unwrap();
     let mut dense =
         open_session(&engine, &rt, &p_buf, "fwd_bf16", 3, &DecodeOpts::default());
-    let opts = DecodeOpts { page_size: 8, prefix_cache: 2, max_pages: 0 };
+    let opts = DecodeOpts { page_size: 8, prefix_cache: 2, max_pages: 0, kernel: None };
     let mut cached = open_session(&engine, &rt, &p_buf, "fwd_bf16", 3, &opts);
 
     // 12 tokens -> pages [0..8) and [8..12): the second page is partial,
@@ -281,7 +281,7 @@ fn prefix_eviction_returns_pages_and_reuses_freed_slabs() {
     let rt = ModelRuntime::new(&engine, "paged-sim").unwrap();
     let params = init_params(&rt.model, 67);
     let p_buf = rt.upload_params(&params).unwrap();
-    let opts = DecodeOpts { page_size: 4, prefix_cache: 2, max_pages: 0 };
+    let opts = DecodeOpts { page_size: 4, prefix_cache: 2, max_pages: 0, kernel: None };
     let mut session = open_session(&engine, &rt, &p_buf, "fwd_bf16", 1, &opts);
 
     let mut logits = Vec::new();
@@ -328,7 +328,7 @@ fn page_budget_bounds_state_by_live_tokens_and_degrades_cleanly() {
     let rows = 8usize;
     let mut dense =
         open_session(&engine, &rt, &p_buf, "fwd_bf16", rows, &DecodeOpts::default());
-    let opts = DecodeOpts { page_size: 4, prefix_cache: 0, max_pages: 40 };
+    let opts = DecodeOpts { page_size: 4, prefix_cache: 0, max_pages: 40, kernel: None };
     let mut paged = open_session(&engine, &rt, &p_buf, "fwd_bf16", rows, &opts);
 
     let (mut ld, mut lp) = (Vec::new(), Vec::new());
@@ -567,7 +567,7 @@ fn decode_opts_reject_prefix_cache_without_pages() {
     let rt = ModelRuntime::new(&engine, "paged-sim").unwrap();
     let params = init_params(&rt.model, 83);
     let p_buf = rt.upload_params(&params).unwrap();
-    let opts = DecodeOpts { page_size: 0, prefix_cache: 2, max_pages: 0 };
+    let opts = DecodeOpts { page_size: 0, prefix_cache: 2, max_pages: 0, kernel: None };
     let err = engine.open_decode_opts(&rt.model, "fwd_bf16", &p_buf, 1, &opts).unwrap_err();
     assert!(err.to_string().contains("require paged decode state"), "{err:#}");
     common::cleanup("pgd_opts");

@@ -192,10 +192,25 @@ impl Config {
                 hot("rust/src/eval/sampler.rs", &["generate", "generate_stepped"], false),
                 hot(
                     "rust/src/runtime/refmodel.rs",
-                    &["prefill", "step", "step_position", "step_gemm", "step_rmsnorm", "step_gelu"],
+                    &[
+                        "prefill",
+                        "step",
+                        "step_position",
+                        "step_gemm",
+                        "step_gemm_w",
+                        "step_rmsnorm",
+                        "step_gelu",
+                    ],
                     false,
                 ),
                 hot("rust/src/runtime/reference.rs", &["prefill", "step"], false),
+                // packed-domain GEMM tier: the per-token dot micro-kernels;
+                // slice indexing is the kernel idiom here (no index_check)
+                hot(
+                    "rust/src/quant/packed.rs",
+                    &["matvec_into", "gemm_into", "dot_row"],
+                    false,
+                ),
                 // paged decode-state allocator: per-token hot path; slice
                 // indexing is bounds-proven by construction (no index_check)
                 hot(
